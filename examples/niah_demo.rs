@@ -1,0 +1,55 @@
+//! Needle-in-a-Haystack demo (Table 4 / Fig. 8 workload): runs the NIAH
+//! grid for a chosen policy and prints the depth × length score matrix.
+//!
+//! Run:  cargo run --release --example niah_demo -- [--policy fastkv]
+//!       [--lens 128,256,512] [--depths 5] [--samples 3]
+
+use anyhow::Result;
+use fastkv::coordinator::policies::PolicyCfg;
+use fastkv::eval::runner::{run_niah, EvalConfig};
+use fastkv::runtime::Runtime;
+use fastkv::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let rt = Runtime::new(&fastkv::Manifest::default_dir())?;
+    let man = rt.manifest.clone();
+    let policy = args.str_or("policy", "fastkv").to_string();
+    let lens = args.usize_list("lens", &[128, 256, 512]);
+    let depths = args.usize("depths", 5);
+    let mut cfg = PolicyCfg::default_for(&man);
+    cfg.kv_rate = args.f64("kv-rate", 0.1);
+    let ec = EvalConfig {
+        policy_cfg: cfg,
+        samples_per_task: args.usize("samples", 3),
+        max_new: 12,
+        seed: args.usize("seed", 0) as u64,
+    };
+
+    println!("NIAH grid — policy {policy}, kv_rate {}", ec.policy_cfg.kv_rate);
+    let (total, grid) = run_niah(&rt, &man, &policy, &ec, &lens, depths)?;
+
+    // depth rows × length columns
+    print!("{:>8}", "depth\\len");
+    for l in &lens {
+        print!("{l:>8}");
+    }
+    println!();
+    let mut depths_seen: Vec<f64> = grid.iter().map(|g| g.1).collect();
+    depths_seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    depths_seen.dedup();
+    for d in depths_seen {
+        print!("{d:>8.2}");
+        for l in &lens {
+            let s = grid
+                .iter()
+                .find(|(gl, gd, _)| gl == l && (gd - d).abs() < 1e-9)
+                .map(|g| g.2)
+                .unwrap_or(f64::NAN);
+            print!("{s:>8.1}");
+        }
+        println!();
+    }
+    println!("\noverall score: {:.1}", total.score());
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Side-by-side policy comparison on one workload: accuracy, prefill
+//! compute rate, KV cache size, and latency — a one-screen version of the
+//! paper's headline claim (Table 1 + Table 2 rows).
+//!
+//! Run:  cargo run --release --example policy_compare -- [--len 512]
+//!       [--samples 5] [--kv-rate 0.1]
+
+use anyhow::Result;
+use fastkv::coordinator::policies::{PolicyCfg, ALL_POLICIES};
+use fastkv::eval::report::{method_label, table};
+use fastkv::eval::runner::{run_sample, EvalConfig};
+use fastkv::runtime::Runtime;
+use fastkv::util::cli::Args;
+use fastkv::util::rng::Rng;
+use fastkv::workload;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let rt = Runtime::new(&fastkv::Manifest::default_dir())?;
+    let man = rt.manifest.clone();
+    let len = args.usize("len", 512);
+    let samples = args.usize("samples", 5);
+    let mut cfg = PolicyCfg::default_for(&man);
+    cfg.kv_rate = args.f64("kv-rate", 0.1);
+    cfg.tsp_rate = args.f64("tsp-rate", 0.2);
+    let ec = EvalConfig {
+        policy_cfg: cfg,
+        samples_per_task: samples,
+        max_new: 12,
+        seed: args.usize("seed", 0) as u64,
+    };
+
+    println!(
+        "policy comparison — len {len}, kv_rate {}, tsp_rate {}, {} samples\n",
+        ec.policy_cfg.kv_rate, ec.policy_cfg.tsp_rate, samples
+    );
+    let mut rows = Vec::new();
+    for m in ALL_POLICIES {
+        let mut score = 0.0;
+        let mut pf = 0.0;
+        let mut dc = 0.0;
+        let mut compute = 0usize;
+        let mut cache = 0usize;
+        let mut full_compute = 0usize;
+        let mut full_cache = 0usize;
+        let mut err = None;
+        for i in 0..samples {
+            let mut rng = Rng::new(1000 + i as u64);
+            let s = workload::kv_recall(&mut rng, len, None, 2);
+            match run_sample(&rt, &man, m, &ec.policy_cfg, &s, ec.max_new) {
+                Ok((sc, st)) => {
+                    score += sc;
+                    pf += st.prefill_secs;
+                    dc += st.decode_secs;
+                    compute += st.compute_tokens;
+                    cache += st.cache_elems;
+                    full_compute += man.model.n_layers * st.prompt_tokens;
+                    full_cache += 2
+                        * man.model.n_layers
+                        * st.prompt_tokens
+                        * man.model.n_kv_heads
+                        * man.model.head_dim;
+                }
+                Err(e) => {
+                    err = Some(format!("{e}"));
+                    break;
+                }
+            }
+        }
+        if let Some(e) = err {
+            rows.push(vec![method_label(m).to_string(), e, String::new(),
+                           String::new(), String::new(), String::new()]);
+            continue;
+        }
+        let n = samples as f64;
+        rows.push(vec![
+            method_label(m).to_string(),
+            format!("{:.0}", 100.0 * score / n),
+            format!("{:.0}%", 100.0 * compute as f64 / full_compute as f64),
+            format!(
+                "{:.0}%",
+                100.0 * (cache * man.model.n_kv_heads * man.model.head_dim)
+                    as f64
+                    / (full_cache * man.model.n_kv_heads * man.model.head_dim)
+                        as f64
+            ),
+            format!("{:.1}", pf * 1e3 / n),
+            format!("{:.1}", dc * 1e3 / n),
+        ]);
+        eprintln!("  {m} done");
+    }
+    println!(
+        "{}",
+        table(
+            &["Method", "Acc", "Prefill", "KV", "prefill ms", "decode ms"],
+            &rows
+        )
+    );
+    Ok(())
+}

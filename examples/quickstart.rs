@@ -1,0 +1,70 @@
+//! Quickstart: load artifacts, run a FastKV prefill+decode on a needle
+//! prompt, and verify the L1 Pallas-kernel artifact agrees with the jnp
+//! path end-to-end through PJRT.
+//!
+//! Run:  cargo run --release --example quickstart
+
+use anyhow::Result;
+use fastkv::coordinator::policies::{make_policy, Exec, PolicyCfg};
+use fastkv::generate;
+use fastkv::runtime::outputs::PrefillFullOut;
+use fastkv::runtime::{In, Runtime};
+use fastkv::tensor::HostTensorI32;
+use fastkv::tokenizer::Tokenizer;
+use fastkv::util::rng::Rng;
+use fastkv::workload;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(&fastkv::Manifest::default_dir())?;
+    let man = rt.manifest.clone();
+    let tok = Tokenizer;
+    println!("fastkv quickstart — model: {} layers, d={}, TSP layer {}",
+             man.model.n_layers, man.model.d_model, man.model.tsp_layer);
+
+    // 1. Generate with the FastKV policy on a synthetic needle prompt.
+    let mut rng = Rng::new(42);
+    let sample = workload::kv_recall(&mut rng, 256, None, 1);
+    let ids = tok.encode(&sample.prompt);
+    let cfg = PolicyCfg::default_for(&man);
+    let policy = make_policy("fastkv")?;
+    let out = generate(&rt, &man, policy.as_ref(), &cfg, &ids, 16)?;
+    let pred = tok.decode_answer(&out.tokens);
+    println!("\nneedle answer : {}", tok.render(&sample.answer));
+    println!("generated     : {}", tok.render(&pred));
+    println!(
+        "prefill {:.1} ms | decode {:.1} ms ({} steps) | cache {} f32",
+        out.stats.prefill_secs * 1e3,
+        out.stats.decode_secs * 1e3,
+        out.stats.decode_steps,
+        out.stats.cache_elems
+    );
+
+    // 2. Prove the Pallas-kernel artifact (L1 on the hot path) matches the
+    //    jnp-path artifact through the whole AOT+PJRT pipeline.
+    let n = man.buckets.pallas_n;
+    let mut rng = Rng::new(7);
+    let s2 = workload::kv_recall(&mut rng, n, None, 0);
+    let ids2: Vec<i32> = tok.encode(&s2.prompt);
+    let toks = HostTensorI32::new(vec![n], ids2.clone());
+    let jnp = PrefillFullOut::from_vec(Exec::run(
+        &rt,
+        &format!("prefill_full_{n}"),
+        vec![toks.clone().into(), In::scalar_i32(n as i32)],
+    )?);
+    let pallas = PrefillFullOut::from_vec(Exec::run(
+        &rt,
+        &format!("prefill_pallas_{n}"),
+        vec![toks.into(), In::scalar_i32(n as i32)],
+    )?);
+    let max_diff = jnp
+        .logits
+        .data
+        .iter()
+        .zip(&pallas.logits.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("\npallas vs jnp artifact: max logit diff = {max_diff:.2e}");
+    assert!(max_diff < 1e-3, "Pallas artifact disagrees with jnp path");
+    println!("quickstart OK");
+    Ok(())
+}

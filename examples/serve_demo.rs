@@ -1,0 +1,75 @@
+//! Serving demo: spin up the continuous-batching server with the FastKV
+//! policy, fire concurrent client requests at it, and report
+//! throughput / TTFT / e2e latency percentiles.
+//!
+//! Run:  cargo run --release --example serve_demo -- [--clients 8]
+//!       [--len 256] [--policy fastkv] [--batch 4]
+
+use anyhow::Result;
+use fastkv::coordinator::policies::PolicyCfg;
+use fastkv::coordinator::scheduler::AdmitOrder;
+use fastkv::coordinator::server::{Server, ServerConfig};
+use fastkv::tokenizer::Tokenizer;
+use fastkv::util::cli::Args;
+use fastkv::util::rng::Rng;
+use fastkv::workload;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let dir = fastkv::Manifest::default_dir();
+    let man = fastkv::Manifest::load(&dir)?;
+    let policy = args.str_or("policy", "fastkv").to_string();
+    let n_clients = args.usize("clients", 8);
+    let len = args.usize("len", 256);
+    let max_new = args.usize("gen", 16);
+
+    let mut policy_cfg = PolicyCfg::default_for(&man);
+    policy_cfg.kv_rate = args.f64("kv-rate", 0.1);
+    let cfg = ServerConfig {
+        artifact_dir: dir,
+        policy: policy.clone(),
+        policy_cfg,
+        decode_batch: args.usize("batch", 4),
+        max_new,
+        max_prompt: len,
+        order: AdmitOrder::Fcfs,
+    };
+    println!("starting server: policy={policy} batch={} len={len}", cfg.decode_batch);
+    let server = Server::spawn(cfg)?;
+    let handle = server.handle();
+    let tok = Tokenizer;
+
+    let t0 = std::time::Instant::now();
+    // Submit all requests up front (closed-loop offered load), then join.
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..n_clients {
+        let mut rng = Rng::new(7000 + i as u64);
+        let s = workload::kv_recall(&mut rng, len, None, 1);
+        let ids = tok.encode(&s.prompt);
+        let (id, rx) = handle.submit(ids, max_new)?;
+        expected.push((id, s.answer));
+        rxs.push(rx);
+    }
+    let mut correct = 0;
+    let mut total_tokens = 0usize;
+    for (rx, (_, answer)) in rxs.into_iter().zip(&expected) {
+        let resp = rx.recv()?;
+        if let Some(e) = resp.error {
+            println!("request {} error: {e}", resp.id);
+            continue;
+        }
+        let pred = tok.decode_answer(&resp.tokens);
+        total_tokens += resp.tokens.len();
+        if &pred == answer {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n{n_clients} requests in {wall:.2}s  \
+              ({:.1} tok/s out, {correct}/{n_clients} answers correct)",
+             total_tokens as f64 / wall);
+    println!("\nserver metrics:\n{}", handle.metrics.report());
+    Ok(())
+}

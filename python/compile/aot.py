@@ -1,0 +1,235 @@
+"""AOT lowering: every model entry point -> HLO text artifact + manifest.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (in --out, default ../artifacts):
+  *.hlo.txt        one per artifact (DESIGN.md artifact table)
+  weights.bin      flat f32 params (written by train.py; a random-init
+                   fallback is generated with --allow-random-weights)
+  manifest.json    model config + parameter table + artifact registry with
+                   full input/output shape signatures for the rust runtime
+
+Run:  cd python && python -m compile.aot [--out DIR] [--fast]
+``--fast`` skips the large (N=2048) buckets — used by pytest/CI.
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import TINY, BUCKETS, ModelConfig, BucketConfig
+from . import model as M
+from .params import n_params, param_specs, init_params, flatten
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text()
+    # xla_extension 0.5.1's HLO text parser predates the `largest`
+    # attribute on topk (always-largest semantics back then, which is what
+    # jax.lax.top_k means) — strip it for compatibility.
+    return text.replace(", largest=true", "")
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shapes(entries):
+    return [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in entries]
+
+
+class Emitter:
+    def __init__(self, cfg: ModelConfig, out_dir: str):
+        self.cfg = cfg
+        self.out = out_dir
+        self.registry = []
+        self.p = n_params(cfg)
+
+    def emit(self, name: str, fn, in_specs, meta: dict):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, fname), "w") as f:
+            f.write(text)
+        out_shapes = [
+            {"shape": list(o.shape), "dtype": str(o.dtype)}
+            for o in lowered.out_info
+        ]
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": _shapes(in_specs),
+            "outputs": out_shapes,
+            **meta,
+        }
+        self.registry.append(entry)
+        print(f"  {name:28s} {len(text)//1024:6d} KiB "
+              f"({time.time() - t0:.1f}s)", flush=True)
+        return entry
+
+
+def build(cfg: ModelConfig = TINY, buckets: BucketConfig = BUCKETS,
+          out_dir: str = "../artifacts", fast: bool = False,
+          kernel: str = "jnp"):
+    os.makedirs(out_dir, exist_ok=True)
+    em = Emitter(cfg, out_dir)
+    P = em.p
+    L_, H, KV, hd, D, V = (cfg.n_layers, cfg.n_heads, cfg.n_kv_heads,
+                           cfg.head_dim, cfg.d_model, cfg.vocab_size)
+    T = cfg.tsp_layer
+    max_n = 1024 if fast else max(buckets.prefill_ns)
+
+    flat_s = _spec((P,))
+
+    # --- prefill_full ------------------------------------------------------
+    for n in buckets.prefill_ns:
+        if n > max_n:
+            continue
+        fn = functools.partial(M.prefill_full, cfg=cfg, kernel=kernel)
+        em.emit(
+            f"prefill_full_{n}", fn,
+            (flat_s, _spec((n,), I32), _spec((), I32)),
+            {"kind": "prefill_full", "n": n, "layers": L_},
+        )
+
+    # --- prefill_stage1 / stage2 (FastKV) ----------------------------------
+    for n in buckets.stage1_ns:
+        if n > max_n:
+            continue
+        fn = functools.partial(M.prefill_stage1, cfg=cfg, kernel=kernel)
+        em.emit(
+            f"prefill_stage1_{n}", fn,
+            (flat_s, _spec((n,), I32), _spec((), I32)),
+            {"kind": "prefill_stage1", "n": n, "layers": T},
+        )
+    for nt in buckets.stage2_ns:
+        if nt > max_n:
+            continue
+        fn = functools.partial(M.prefill_stage2, cfg=cfg, kernel=kernel)
+        em.emit(
+            f"prefill_stage2_{nt}", fn,
+            (flat_s, _spec((nt, D)), _spec((nt,), I32), _spec((), I32)),
+            {"kind": "prefill_stage2", "n": nt, "layers": L_ - T},
+        )
+
+    # --- prefill_pyramid (PyramidInfer baseline) ---------------------------
+    for n in buckets.pyramid_ns:
+        if n > max_n:
+            continue
+        fn = functools.partial(M.prefill_pyramid, cfg=cfg, kernel=kernel)
+        em.emit(
+            f"prefill_pyramid_{n}", fn,
+            (flat_s, _spec((n,), I32), _spec((), I32)),
+            {"kind": "prefill_pyramid", "n": n, "layers": L_,
+             "schedule": M.pyramid_schedule(cfg, n)},
+        )
+
+    # --- decode_step --------------------------------------------------------
+    for b in buckets.decode_batches:
+        for c in buckets.decode_caps:
+            if c > max_n + buckets.max_gen:
+                continue
+            fn = functools.partial(M.decode_step, cfg=cfg)
+            em.emit(
+                f"decode_{b}x{c}", fn,
+                (flat_s, _spec((b,), I32), _spec((b,), I32),
+                 _spec((L_, b, c, KV, hd)), _spec((L_, b, c, KV, hd)),
+                 _spec((L_, b), I32)),
+                {"kind": "decode", "batch": b, "cap": c},
+            )
+
+    # --- sweep_tsp (Fig. 3 / Fig. 5b / Table 10) ----------------------------
+    n, nt = buckets.sweep_n, buckets.sweep_nt
+    for t in range(1, cfg.n_layers):
+        fn = functools.partial(M.sweep_tsp, cfg=cfg, t=t, nt=nt,
+                               kernel=kernel)
+        em.emit(
+            f"sweep_tsp_l{t}_{n}", fn,
+            (flat_s, _spec((n,), I32), _spec((), I32)),
+            {"kind": "sweep_tsp", "n": n, "nt": nt, "tsp_layer": t},
+        )
+
+    # --- Pallas-kernel artifact (L1 on the hot path, quickstart + tests) ----
+    n = buckets.pallas_n
+    fn = functools.partial(M.prefill_full, cfg=cfg, kernel="pallas")
+    em.emit(
+        f"prefill_pallas_{n}", fn,
+        (flat_s, _spec((n,), I32), _spec((), I32)),
+        {"kind": "prefill_pallas", "n": n, "layers": L_},
+    )
+
+    manifest = {
+        "model": cfg.to_dict(),
+        "n_params": P,
+        "kernel": kernel,
+        "buckets": {
+            "prefill_ns": [x for x in buckets.prefill_ns if x <= max_n],
+            "stage1_ns": [x for x in buckets.stage1_ns if x <= max_n],
+            "stage2_ns": [x for x in buckets.stage2_ns if x <= max_n],
+            "pyramid_ns": [x for x in buckets.pyramid_ns if x <= max_n],
+            "decode_batches": list(buckets.decode_batches),
+            "decode_caps": [
+                c for c in buckets.decode_caps
+                if c <= max_n + buckets.max_gen
+            ],
+            "sweep_n": buckets.sweep_n,
+            "sweep_nt": buckets.sweep_nt,
+            "pallas_n": buckets.pallas_n,
+            "max_gen": buckets.max_gen,
+        },
+        "params": [
+            {"name": name, "shape": list(shape)}
+            for name, shape in param_specs(cfg)
+        ],
+        "artifacts": em.registry,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(em.registry)} artifacts")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip N>1024 buckets (CI)")
+    ap.add_argument("--kernel", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--allow-random-weights", action="store_true",
+                    help="write random-init weights.bin if none exists")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    wpath = os.path.join(args.out, "weights.bin")
+    if not os.path.exists(wpath):
+        if args.allow_random_weights:
+            print("weights.bin missing -> writing random init "
+                  "(train with compile.train for real results)")
+            flatten(init_params(TINY, 0), TINY).tofile(wpath)
+        else:
+            raise SystemExit(
+                f"{wpath} missing: run `python -m compile.train` first "
+                "or pass --allow-random-weights"
+            )
+    build(TINY, BUCKETS, args.out, fast=args.fast, kernel=args.kernel)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Model and artifact-bucket configurations for the FastKV reproduction.
+
+The paper evaluates LLaMA-3.1-8B / Ministral-8B / Mistral-NeMo-12B. Those are
+substituted (see DESIGN.md) by `fastkv-tiny`, a GQA decoder trained at build
+time on a synthetic long-context retrieval corpus so that the accuracy /
+compression trade-off curves are meaningful.
+
+All artifact shapes are static (AOT, PJRT).  The rust coordinator pads
+requests into the buckets declared here and masks the padding.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of the decoder-only GQA transformer."""
+
+    vocab_size: int = 256          # byte-level tokenizer
+    d_model: int = 96
+    n_layers: int = 8
+    n_heads: int = 4
+    n_kv_heads: int = 2            # GQA: 2 query heads per KV head
+    d_ffn: int = 192               # SwiGLU hidden size
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    # FastKV defaults (paper: layer 15 of 32 -> here 4 of 8, i.e. the first
+    # `tsp_layer` layers run full-context, the rest on the TSP token set).
+    tsp_layer: int = 4
+    # Observation window (paper: 8) and pooling kernel (paper: 7).
+    window: int = 8
+    pool_kernel: int = 7
+    max_train_len: int = 512
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def gqa_groups(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["gqa_groups"] = self.gqa_groups
+        return d
+
+
+@dataclass(frozen=True)
+class BucketConfig:
+    """Static shape buckets compiled into artifacts."""
+
+    # Full-context prefill buckets (also used by GemFilter's re-prefill, so
+    # the small ones must cover TSP/KV budget token counts).
+    prefill_ns: tuple = (64, 128, 256, 512, 1024, 2048)
+    # FastKV stage-1 buckets (full-context up to the TSP layer).
+    stage1_ns: tuple = (256, 512, 1024, 2048)
+    # FastKV stage-2 buckets (TSP-selected token count).
+    stage2_ns: tuple = (64, 128, 256, 512)
+    # PyramidInfer buckets (per-layer cosine token schedule baked in).
+    pyramid_ns: tuple = (256, 512, 1024)
+    # Decode artifacts: (batch, kv cache capacity) pairs.
+    decode_batches: tuple = (1, 4)
+    decode_caps: tuple = (128, 320, 576, 1088, 2112)
+    # Fig-3 / Fig-5(b) sweep: one full-model artifact per candidate TSP layer
+    # at this context bucket / TSP token count.
+    sweep_n: int = 256
+    sweep_nt: int = 64
+    # Quickstart artifact built with the Pallas kernel on the hot path.
+    pallas_n: int = 128
+    max_gen: int = 64
+
+
+TINY = ModelConfig()
+
+# A smaller config used by pytest so kernel/model unit tests stay fast.
+TEST = ModelConfig(
+    d_model=32,
+    n_layers=4,
+    n_heads=2,
+    n_kv_heads=1,
+    d_ffn=64,
+    tsp_layer=2,
+    max_train_len=128,
+)
+
+BUCKETS = BucketConfig()

@@ -1,0 +1,209 @@
+"""Synthetic long-context task corpus (byte-level).
+
+This substitutes the paper's pretrained-LLM capabilities (see DESIGN.md):
+the tiny model is *trained* on retrieval-style tasks so that KV compression
+policies have real accuracy consequences (drop the needle's KV entries and
+the model demonstrably fails).
+
+Byte-format spec — the Rust workload generators (rust/src/workload/) emit
+the SAME wire format; keep the two in sync:
+
+  0x01 KEY_START   begins a key span
+  0x02 KV_SEP      separates key from value
+  0x03 END         terminates a value / answer
+  0x04 QUERY       begins the final query
+  0x05 MARK        marks a topic word (aggregation tasks)
+  0x06 DOC_SEP     document boundary
+  filler           lowercase letters + space
+  keys/values      3-6 lowercase letters
+
+Tasks (LongBench/RULER analog mapping in DESIGN.md):
+  kv_recall    single needle:  ... \x01 k \x02 v \x03 ...  \x04\x01 k \x02 -> v\x03
+  kv_multi     m needles, query one (multi-key NIAH)
+  hop2         k1 -> k2, k2 -> v; query k1 -> v (multi-hop / VT)
+  marked_copy  emit the marked words in order (CWE / summarization analog)
+  echo_upper   few-shot: word -> UPPERCASE word, demonstrated then queried
+  count_marks  emit the count (single digit) of \x05 marks
+"""
+
+import numpy as np
+
+KEY_START, KV_SEP, END, QUERY, MARK, DOC_SEP = 1, 2, 3, 4, 5, 6
+LOWER = np.arange(ord("a"), ord("z") + 1)
+SPACE = ord(" ")
+
+TASKS = ("kv_recall", "kv_multi", "hop2", "marked_copy", "echo_upper",
+         "count_marks")
+
+# Default training mixture (weights sum to 1).
+TRAIN_MIX = {
+    "kv_recall": 0.32,
+    "kv_multi": 0.22,
+    "hop2": 0.14,
+    "marked_copy": 0.12,
+    "echo_upper": 0.12,
+    "count_marks": 0.08,
+}
+
+
+def _word(rng, lo=3, hi=6):
+    n = int(rng.integers(lo, hi + 1))
+    return rng.choice(LOWER, n).astype(np.uint8)
+
+
+def _filler(rng, n):
+    """Lowercase words separated by spaces."""
+    out = np.empty(n, np.uint8)
+    i = 0
+    while i < n:
+        w = _word(rng, 2, 7)
+        take = min(len(w), n - i)
+        out[i : i + take] = w[:take]
+        i += take
+        if i < n:
+            out[i] = SPACE
+            i += 1
+    return out
+
+
+def _pair(k, v):
+    return np.concatenate(
+        [[KEY_START], k, [KV_SEP], v, [END]]
+    ).astype(np.uint8)
+
+
+def _place(rng, body, inserts):
+    """Scatter ``inserts`` (list of byte arrays) into ``body`` at random,
+    non-overlapping, order-preserving offsets."""
+    if not inserts:
+        return body
+    free = len(body)
+    cuts = np.sort(rng.integers(0, free + 1, size=len(inserts)))
+    parts, prev = [], 0
+    for c, ins in zip(cuts, inserts):
+        parts.append(body[prev:c])
+        parts.append(ins)
+        prev = c
+    parts.append(body[prev:])
+    return np.concatenate(parts)
+
+
+def _finish(rng, ctx, query, answer, seq_len):
+    """Assemble  [context][query] -> answer\x03  padded/truncated to
+    seq_len; returns (tokens [seq_len], loss_mask [seq_len]) where the mask
+    covers the answer bytes (next-token targets)."""
+    answer = np.concatenate([answer, [END]]).astype(np.uint8)
+    tail = np.concatenate([query, answer])
+    room = seq_len - len(tail)
+    assert room > 8, "seq_len too small for task"
+    ctx = ctx[:room] if len(ctx) >= room else np.concatenate(
+        [ctx, _filler(rng, room - len(ctx))]
+    )
+    seq = np.concatenate([ctx, tail])
+    mask = np.zeros(seq_len, np.float32)
+    ans_start = len(ctx) + len(query)
+    # predict answer[j] from position ans_start+j-1
+    mask[ans_start - 1 : ans_start - 1 + len(answer)] = 1.0
+    return seq, mask
+
+
+def gen_kv_recall(rng, seq_len, n_pairs=1, query_idx=None):
+    keys = [_word(rng) for _ in range(n_pairs)]
+    vals = [_word(rng) for _ in range(n_pairs)]
+    qi = int(rng.integers(n_pairs)) if query_idx is None else query_idx
+    tail_len = 2 + len(keys[qi]) + 1 + 7 + 2
+    body = _filler(rng, seq_len - tail_len - sum(
+        len(k) + len(v) + 3 for k, v in zip(keys, vals)
+    ) - 4)
+    ctx = _place(rng, body, [_pair(k, v) for k, v in zip(keys, vals)])
+    query = np.concatenate([[QUERY, KEY_START], keys[qi], [KV_SEP]]).astype(
+        np.uint8
+    )
+    return _finish(rng, ctx, query, vals[qi], seq_len)
+
+
+def gen_kv_multi(rng, seq_len):
+    return gen_kv_recall(rng, seq_len, n_pairs=int(rng.integers(2, 5)))
+
+
+def gen_hop2(rng, seq_len):
+    k1, k2, v = _word(rng), _word(rng), _word(rng)
+    pairs = [_pair(k1, k2), _pair(k2, v)]
+    if rng.random() < 0.5:
+        pairs = pairs[::-1]
+    body = _filler(rng, seq_len - 64)
+    ctx = _place(rng, body, pairs)
+    # two-hop query: \x04\x04 k1 \x02 -> v   (double QUERY marks the hop)
+    query = np.concatenate([[QUERY, QUERY, KEY_START], k1, [KV_SEP]]).astype(
+        np.uint8
+    )
+    return _finish(rng, ctx, query, v, seq_len)
+
+
+def gen_marked_copy(rng, seq_len, n_marks=3):
+    words = [_word(rng) for _ in range(n_marks)]
+    inserts = [
+        np.concatenate([[MARK], w, [END]]).astype(np.uint8) for w in words
+    ]
+    body = _filler(rng, seq_len - 64)
+    ctx = _place(rng, body, inserts)
+    query = np.array([QUERY, MARK], np.uint8)
+    answer = np.concatenate(
+        [b for w in words for b in (w, [SPACE])][:-1]
+    ).astype(np.uint8)
+    return _finish(rng, ctx, query, answer, seq_len)
+
+
+def gen_echo_upper(rng, seq_len, shots=3):
+    demo_words = [_word(rng) for _ in range(shots)]
+    qword = _word(rng)
+    demos = [
+        np.concatenate([[KEY_START], w, [KV_SEP], w - 32, [END]]).astype(
+            np.uint8
+        )
+        for w in demo_words
+    ]
+    body = _filler(rng, seq_len - 96)
+    ctx = _place(rng, body, demos)
+    query = np.concatenate([[QUERY, KEY_START], qword, [KV_SEP]]).astype(
+        np.uint8
+    )
+    return _finish(rng, ctx, query, qword - 32, seq_len)
+
+
+def gen_count_marks(rng, seq_len):
+    n = int(rng.integers(1, 10))
+    inserts = [
+        np.concatenate([[MARK], _word(rng), [END]]).astype(np.uint8)
+        for _ in range(n)
+    ]
+    body = _filler(rng, seq_len - 72)
+    ctx = _place(rng, body, inserts)
+    query = np.array([QUERY, QUERY, MARK], np.uint8)
+    answer = np.array([ord("0") + n], np.uint8)
+    return _finish(rng, ctx, query, answer, seq_len)
+
+
+GENERATORS = {
+    "kv_recall": gen_kv_recall,
+    "kv_multi": gen_kv_multi,
+    "hop2": gen_hop2,
+    "marked_copy": gen_marked_copy,
+    "echo_upper": gen_echo_upper,
+    "count_marks": gen_count_marks,
+}
+
+
+def batch(rng, batch_size, seq_len, mix=TRAIN_MIX):
+    """Returns (tokens [B, seq_len] i32, loss_mask [B, seq_len] f32)."""
+    names = list(mix.keys())
+    probs = np.array([mix[n] for n in names])
+    probs = probs / probs.sum()
+    toks = np.empty((batch_size, seq_len), np.int32)
+    masks = np.empty((batch_size, seq_len), np.float32)
+    for b in range(batch_size):
+        name = names[int(rng.choice(len(names), p=probs))]
+        t, m = GENERATORS[name](rng, seq_len)
+        toks[b] = t.astype(np.int32)
+        masks[b] = m
+    return toks, masks

@@ -1,0 +1,139 @@
+"""L1 Pallas kernel: fused causal GQA attention + saliency summaries.
+
+The paper's hot spot is FlashAttention-2 on A100 plus a token-importance
+estimation pass (observation-window attention scores, Eq. 1).  FastKV's
+Table 8 shows that estimation must be ~free (<2% of prefill).  The TPU
+re-think (DESIGN.md §Hardware-Adaptation): the win/acc score summaries are
+row-reductions over exactly the probability tiles the attention kernel
+already holds in VMEM, so we fuse them into the attention kernel — zero
+extra HBM traffic.
+
+Blocking scheme: the grid walks (query head, query block).  For each query
+head, the full K/V rows of its GQA key head stay resident in VMEM
+(N*hd*4 bytes, ≤192 KiB at our largest bucket — far below the ~16 MiB VMEM
+budget) while Q streams through in ``block_q`` row tiles.  The win/acc
+output rows are revisited by every query block of a head and accumulated
+in place (grid iteration is sequential over the minor axis).  On a real
+TPU the same schedule maps to a Mosaic kernel with the MXU doing the
+[block_q, hd] x [hd, N] and [block_q, N] x [N, hd] matmuls in bf16; here
+``interpret=True`` is mandatory because the CPU PJRT plugin cannot execute
+Mosaic custom-calls.
+
+Correctness oracle: ``ref.attention_ref`` (pure jnp); pytest + hypothesis
+sweep shapes/valid-lengths/dtypes against it.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(nv_ref, q_ref, k_ref, v_ref, o_ref, win_ref, acc_ref, *,
+                 block_q: int, window: int, n: int):
+    qi = pl.program_id(1)
+    n_valid = nv_ref[0]
+
+    q = q_ref[0]                       # [block_q, hd]
+    k = k_ref[0]                       # [n, hd]
+    v = v_ref[0]                       # [n, hd]
+    hd = q.shape[-1]
+
+    row = qi * block_q + jax.lax.iota(jnp.int32, block_q)     # global q idx
+    col = jax.lax.iota(jnp.int32, n)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, dtype=jnp.float32))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    causal = col[None, :] <= row[:, None]
+    kvalid = col[None, :] < n_valid
+    s = jnp.where(causal & kvalid, s, -1e30)
+
+    # Row softmax (full key row is resident, so no online rescaling needed;
+    # the streaming-K variant is analyzed in EXPERIMENTS.md §Perf).
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    qvalid = (row < n_valid).astype(jnp.float32)              # [block_q]
+    p = p * qvalid[:, None]
+
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+    # Fused saliency summaries: column reductions of the same p tile.
+    in_win = ((row >= n_valid - window) & (row < n_valid)).astype(
+        jnp.float32
+    )
+    win_part = jnp.einsum("qk,q->k", p, in_win)
+    acc_part = jnp.sum(p, axis=0)
+
+    @pl.when(qi == 0)
+    def _init():
+        win_ref[0] = jnp.zeros_like(win_ref[0])
+        acc_ref[0] = jnp.zeros_like(acc_ref[0])
+
+    win_ref[0] += win_part
+    acc_ref[0] += acc_part
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_q", "interpret")
+)
+def attention_pallas(q, k, v, n_valid, *, window: int, block_q: int = 64,
+                     interpret: bool = True):
+    """Fused attention + saliency summaries.  Same contract as
+    ``ref.attention_ref`` — q [H,N,hd], k/v [KV,N,hd], n_valid scalar i32;
+    returns (o [H,N,hd], win [H,N], acc [H,N])."""
+    h, n, hd = q.shape
+    kv = k.shape[0]
+    groups = h // kv
+    assert h == kv * groups
+    block_q = min(block_q, n)
+    assert n % block_q == 0, (n, block_q)
+    grid = (h, n // block_q)
+
+    nv = jnp.reshape(n_valid.astype(jnp.int32), (1,))
+
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, window=window, n=n
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda hi, qi: (0,)),                  # n_valid
+            pl.BlockSpec((1, block_q, hd), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((1, n, hd), lambda hi, qi: (hi // groups, 0, 0)),
+            pl.BlockSpec((1, n, hd), lambda hi, qi: (hi // groups, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((1, n), lambda hi, qi: (hi, 0)),
+            pl.BlockSpec((1, n), lambda hi, qi: (hi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, n, hd), jnp.float32),
+            jax.ShapeDtypeStruct((h, n), jnp.float32),
+            jax.ShapeDtypeStruct((h, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nv, q, k, v)
+
+
+def vmem_bytes(n: int, hd: int, block_q: int) -> int:
+    """Static VMEM footprint estimate for one kernel instance (f32).
+
+    Used by the §Perf analysis: resident K/V rows + Q/O tiles + the
+    probability tile + score rows.
+    """
+    kv_resident = 2 * n * hd * 4
+    q_o_tiles = 2 * block_q * hd * 4
+    p_tile = block_q * n * 4
+    score_rows = 2 * n * 4
+    return kv_resident + q_o_tiles + p_tile + score_rows
+
+
+def mxu_flops(n: int, hd: int) -> int:
+    """MACs issued to the MXU for one head's prefill attention."""
+    return 2 * n * n * hd * 2  # QK^T and PV

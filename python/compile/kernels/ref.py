@@ -1,0 +1,102 @@
+"""Pure-jnp oracle for the fused attention + saliency-summary kernel.
+
+This is the correctness ground truth for the Pallas kernel in
+``attention.py`` and also the implementation used on the default (fast) HLO
+artifact path — both lower to identical math, and pytest asserts the Pallas
+kernel matches this reference to float tolerance.
+
+Semantics (causal GQA prefill attention over one sequence):
+
+  inputs   q         [H,  N, hd]   query heads
+           k, v      [KV, N, hd]   key/value heads (GQA: H = KV * groups)
+           n_valid   scalar int32  number of non-padding tokens (<= N)
+           window    static int    observation window W (paper: 8)
+  outputs  o         [H,  N, hd]   attention output
+           win       [H,  N]      attention mass each position receives from
+                                   the last W *valid* query positions (Eq. 1
+                                   of the paper, pre-pooling)
+           acc       [H,  N]      total attention mass received from all
+                                   valid queries (H2O-style accumulated score,
+                                   also feeds the Fig. 1 analyses)
+
+Padding behaviour: rows (queries) with index >= n_valid produce zeros and
+contribute nothing to win/acc; columns (keys) with index >= n_valid receive
+zero attention.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, n_valid, *, window: int):
+    h, n, hd = q.shape
+    kv = k.shape[0]
+    groups = h // kv
+    assert h == kv * groups
+
+    # Broadcast KV heads across their query-head groups: [H, N, hd].
+    k_full = jnp.repeat(k, groups, axis=0)
+    v_full = jnp.repeat(v, groups, axis=0)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, dtype=jnp.float32))
+    scores = jnp.einsum("hqd,hkd->hqk", q, k_full) * scale  # [H, N, N]
+
+    idx = jnp.arange(n)
+    causal = idx[None, :] <= idx[:, None]                  # [q, k]
+    key_valid = idx[None, :] < n_valid                     # [1, k]
+    mask = causal & key_valid                              # [q, k]
+    scores = jnp.where(mask[None], scores, -1e30)
+
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+
+    # Zero out padded query rows entirely.
+    q_valid = (idx < n_valid).astype(jnp.float32)          # [q]
+    p = p * q_valid[None, :, None]
+
+    o = jnp.einsum("hqk,hkd->hqd", p, v_full)
+
+    acc = jnp.sum(p, axis=1)                               # [H, N]
+    # Observation window: queries in [n_valid - W, n_valid).
+    in_window = ((idx >= n_valid - window) & (idx < n_valid)).astype(
+        jnp.float32
+    )                                                      # [q]
+    win = jnp.einsum("hqk,q->hk", p, in_window)            # [H, N]
+    return o, win, acc
+
+
+def maxpool1d_ref(x, kernel: int):
+    """Max-pool along the last axis with 'same' padding (paper kernel 7).
+
+    Matches the torch ``MaxPool1d(kernel, stride=1, padding=kernel//2)`` the
+    SnapKV/FastKV reference implementations use.
+    """
+    assert kernel % 2 == 1
+    pad = kernel // 2
+    n = x.shape[-1]
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(pad, pad)],
+                 constant_values=-jnp.inf)
+    cols = [xp[..., i : i + n] for i in range(kernel)]
+    return jnp.max(jnp.stack(cols, axis=0), axis=0)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lens):
+    """Single-token decode attention over a (compressed) KV cache.
+
+    q        [H, hd]        query for the new token (one sequence)
+    k_cache  [KV, C, hd]    cache capacity C, entries [0, len) are valid
+    v_cache  [KV, C, hd]
+    lens     scalar int32   number of valid cache entries
+    returns  o [H, hd]
+    """
+    h, hd = q.shape
+    kv, c, _ = k_cache.shape
+    groups = h // kv
+    k_full = jnp.repeat(k_cache, groups, axis=0)
+    v_full = jnp.repeat(v_cache, groups, axis=0)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, dtype=jnp.float32))
+    scores = jnp.einsum("hd,hkd->hk", q, k_full) * scale   # [H, C]
+    valid = jnp.arange(c)[None, :] < lens
+    scores = jnp.where(valid, scores, -1e30)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hk,hkd->hd", p, v_full)

@@ -1,0 +1,122 @@
+"""L2 building blocks: RMSNorm, RoPE, GQA attention block, SwiGLU MLP.
+
+Every block takes the per-layer parameter dict produced by
+``params.unflatten`` and is pure jnp, so the whole decoder lowers to a
+single HLO module.  The attention score path can run through either the
+pure-jnp reference (default artifact path) or the L1 Pallas kernel
+(``kernel="pallas"``) — both proven equivalent by the kernel test suite.
+"""
+
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.ref import attention_ref, decode_attention_ref
+from .kernels.attention import attention_pallas
+
+
+def rmsnorm(x, w, eps: float):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jnp.reciprocal(jnp.sqrt(ms + eps)) * w
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding.  x: [..., N, n_heads, hd]; positions: [N] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )                                                     # [half]
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    cos = jnp.cos(angles)[:, None, :]                     # [N, 1, half]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def qkv_project(x, lp, cfg: ModelConfig, positions):
+    """x: [N, D] -> q [H,N,hd], k/v [KV,N,hd] with RoPE applied to q and k.
+
+    Keys are stored *post-RoPE*, so a compressed cache keeps absolute
+    positional information no matter which tokens survive selection.
+    """
+    n = x.shape[0]
+    q = (x @ lp["wq"]).reshape(n, cfg.n_heads, cfg.head_dim)
+    k = (x @ lp["wk"]).reshape(n, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ lp["wv"]).reshape(n, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return (
+        jnp.transpose(q, (1, 0, 2)),
+        jnp.transpose(k, (1, 0, 2)),
+        jnp.transpose(v, (1, 0, 2)),
+    )
+
+
+def attention_block(x, lp, cfg: ModelConfig, positions, n_valid,
+                    kernel: str = "jnp"):
+    """Prefill self-attention.  Returns (out [N,D], k/v token-major
+    [N,KV,hd], win/acc [H,N])."""
+    h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = qkv_project(h, lp, cfg, positions)
+    if kernel == "pallas":
+        o, win, acc = attention_pallas(
+            q, k, v, n_valid, window=cfg.window, interpret=True
+        )
+    else:
+        o, win, acc = attention_ref(q, k, v, n_valid, window=cfg.window)
+    n = x.shape[0]
+    o = jnp.transpose(o, (1, 0, 2)).reshape(n, cfg.n_heads * cfg.head_dim)
+    out = x + o @ lp["wo"]
+    k_tm = jnp.transpose(k, (1, 0, 2))                    # [N, KV, hd]
+    v_tm = jnp.transpose(v, (1, 0, 2))
+    return out, k_tm, v_tm, win, acc
+
+
+def mlp_block(x, lp, cfg: ModelConfig):
+    h = rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    gate = h @ lp["w_gate"]
+    up = h @ lp["w_up"]
+    act = gate * jnp.reciprocal(1.0 + jnp.exp(-gate))     # SiLU
+    return x + (act * up) @ lp["w_down"]
+
+
+def layer_params(params: dict, i: int) -> dict:
+    prefix = f"l{i}."
+    return {k[len(prefix):]: v for k, v in params.items()
+            if k.startswith(prefix)}
+
+
+def decoder_layer(x, lp, cfg: ModelConfig, positions, n_valid,
+                  kernel: str = "jnp"):
+    x, k, v, win, acc = attention_block(x, lp, cfg, positions, n_valid,
+                                        kernel)
+    x = mlp_block(x, lp, cfg)
+    return x, k, v, win, acc
+
+
+def decode_layer_cached(x, lp, cfg: ModelConfig, position, k_cache, v_cache,
+                        length):
+    """Like ``decode_layer`` but the new token's K/V is also attended
+    (the cache holds only *past* tokens; self-attention must include the
+    current token).  Returns (x', k_new, v_new) with k_new/v_new [KV,hd]."""
+    h = rmsnorm(x[None, :], lp["attn_norm"], cfg.norm_eps)
+    pos = jnp.reshape(position, (1,)).astype(jnp.int32)
+    q, k_new, v_new = qkv_project(h, lp, cfg, pos)
+    k_new_t = k_new[:, 0, :]                               # [KV, hd]
+    v_new_t = v_new[:, 0, :]
+    kc = jnp.transpose(k_cache, (1, 0, 2))                 # [KV, C, hd]
+    vc = jnp.transpose(v_cache, (1, 0, 2))
+    c = kc.shape[1]
+    # Append the current token at slot `length` (capacity reserves room:
+    # the rust cache arena always keeps >= 1 free slot when invoking).
+    kc = jnp.where(
+        (jnp.arange(c)[None, :, None] == length), k_new_t[:, None, :], kc
+    )
+    vc = jnp.where(
+        (jnp.arange(c)[None, :, None] == length), v_new_t[:, None, :], vc
+    )
+    o = decode_attention_ref(q[:, 0, :], kc, vc, length + 1)
+    o = o.reshape(cfg.n_heads * cfg.head_dim)
+    x = x + o @ lp["wo"]
+    x = mlp_block(x[None, :], lp, cfg)[0]
+    return x, k_new_t, v_new_t

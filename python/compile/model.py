@@ -1,0 +1,271 @@
+"""L2 model: every AOT entry point the Rust coordinator executes.
+
+All entry points take the flat f32 parameter vector as their first input
+(see ``params.py``) and static-shaped tensors otherwise; rust pads into the
+shape buckets of ``configs.BucketConfig`` and passes ``n_valid`` masks.
+
+Entry points (see DESIGN.md artifact table):
+  prefill_full    — full-context prefill, all layers.  Baselines + analyses.
+  prefill_stage1  — FastKV stage 1: layers [0, T) full-context.
+  prefill_stage2  — FastKV stage 2: layers [T, L) over TSP-selected hiddens.
+  prefill_pyramid — PyramidInfer: per-layer cosine token-count schedule.
+  decode_step     — batched single-token decode over compressed caches.
+  sweep_tsp       — full model with TSP applied *inside* HLO at layer t
+                    (Fig. 3 / Fig. 5(b) / Table 10 sweeps).
+
+KV outputs are token-major [layers, N, KV, hd] so that selecting a token's
+KV entry is one contiguous row copy on the rust side.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from . import layers as L
+from .params import unflatten
+from .kernels.ref import maxpool1d_ref
+
+
+def _embed(params, tokens):
+    return params["embed"][tokens]
+
+
+def _final_logits_at(params, cfg, x, idx):
+    """Logits of position ``idx`` (dynamic) of hidden states x [N, D]."""
+    h = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    last = jax.lax.dynamic_index_in_dim(h, idx, axis=0, keepdims=False)
+    return last @ params["lm_head"], last
+
+
+def _run_layers(params, cfg, x, positions, n_valid, lo, hi, kernel):
+    """Run layers [lo, hi); stack KV and score outputs over that range."""
+    ks, vs, wins, accs = [], [], [], []
+    for i in range(lo, hi):
+        lp = L.layer_params(params, i)
+        x, k, v, win, acc = L.decoder_layer(
+            x, lp, cfg, positions, n_valid, kernel
+        )
+        ks.append(k)
+        vs.append(v)
+        wins.append(win)
+        accs.append(acc)
+    return (
+        x,
+        jnp.stack(ks),       # [hi-lo, N, KV, hd]
+        jnp.stack(vs),
+        jnp.stack(wins),     # [hi-lo, H, N]
+        jnp.stack(accs),
+    )
+
+
+def prefill_full(flat, tokens, n_valid, *, cfg: ModelConfig,
+                 kernel: str = "jnp"):
+    """tokens [N] i32, n_valid scalar i32 ->
+    (logits [V], k [L,N,KV,hd], v, win [L,H,N], acc [L,H,N], final_h [D])"""
+    params = unflatten(flat, cfg)
+    n = tokens.shape[0]
+    positions = jnp.arange(n, dtype=jnp.int32)
+    x = _embed(params, tokens)
+    x, k, v, win, acc = _run_layers(
+        params, cfg, x, positions, n_valid, 0, cfg.n_layers, kernel
+    )
+    logits, final_h = _final_logits_at(params, cfg, x, n_valid - 1)
+    return logits, k, v, win, acc, final_h
+
+
+def prefill_stage1(flat, tokens, n_valid, *, cfg: ModelConfig,
+                   kernel: str = "jnp"):
+    """FastKV stage 1 — layers [0, T) on the full context.
+
+    tokens [N], n_valid ->
+    (hidden [N,D], k [T,N,KV,hd], v, win [T,H,N], acc [T,H,N])
+
+    ``hidden`` is the input to layer T; the rust coordinator performs the
+    TSP selection (Eq. 1-2: head-average + max-pool + top-k + window merge)
+    on ``win[T-1]`` and gathers the selected rows for stage 2.
+    """
+    params = unflatten(flat, cfg)
+    n = tokens.shape[0]
+    positions = jnp.arange(n, dtype=jnp.int32)
+    x = _embed(params, tokens)
+    x, k, v, win, acc = _run_layers(
+        params, cfg, x, positions, n_valid, 0, cfg.tsp_layer, kernel
+    )
+    return x, k, v, win, acc
+
+
+def prefill_stage2(flat, hidden, positions, nt_valid, *, cfg: ModelConfig,
+                   kernel: str = "jnp"):
+    """FastKV stage 2 — layers [T, L) over the TSP-selected hidden states.
+
+    hidden [Nt,D], positions [Nt] i32 (original token positions, ascending),
+    nt_valid scalar ->
+    (logits [V], k [L-T,Nt,KV,hd], v, win [L-T,H,Nt], acc, final_h [D])
+    """
+    params = unflatten(flat, cfg)
+    x, k, v, win, acc = _run_layers(
+        params, cfg, hidden, positions, nt_valid, cfg.tsp_layer,
+        cfg.n_layers, kernel
+    )
+    logits, final_h = _final_logits_at(params, cfg, x, nt_valid - 1)
+    return logits, k, v, win, acc, final_h
+
+
+def pyramid_schedule(cfg: ModelConfig, n: int, min_rate: float = 0.6):
+    """PyramidInfer's cosine decay of per-layer token counts.
+
+    Layer 0 keeps everything; the count decays on a cosine down to
+    ``min_rate * n`` at the last layer (the paper's 60% prefill-compute
+    operating point).  Static — baked into the artifact.
+    """
+    import math
+
+    counts = []
+    for i in range(cfg.n_layers):
+        t = i / max(cfg.n_layers - 1, 1)
+        rate = min_rate + (1.0 - min_rate) * 0.5 * (1 + math.cos(math.pi * t))
+        counts.append(max(cfg.window + 1, int(round(n * rate))))
+    counts[0] = n
+    return counts
+
+
+def _select_topk_sorted(scores, k_keep):
+    """Top-k indices sorted ascending (preserve causal token order).
+
+    Implemented via argsort rather than ``jax.lax.top_k``: the latter
+    lowers to the HLO ``topk`` op, whose text form the xla_extension
+    0.5.1 parser cannot read; ``sort`` round-trips fine.
+    """
+    idx = jnp.argsort(-scores)[:k_keep]
+    return jnp.sort(idx)
+
+
+def _tsp_select(win, n_valid, nt, cfg: ModelConfig):
+    """Eq. 1-2 selection inside HLO: head-mean, max-pool, always keep the
+    observation window, take top-nt, sorted ascending."""
+    s = jnp.mean(win, axis=0)                              # [N]
+    s = maxpool1d_ref(s, cfg.pool_kernel)
+    n = s.shape[0]
+    idxs = jnp.arange(n)
+    in_win = (idxs >= n_valid - cfg.window) & (idxs < n_valid)
+    s = jnp.where(in_win, jnp.inf, s)
+    s = jnp.where(idxs < n_valid, s, -jnp.inf)
+    return _select_topk_sorted(s, nt)
+
+
+def prefill_pyramid(flat, tokens, n_valid, *, cfg: ModelConfig,
+                    min_rate: float = 0.6, kernel: str = "jnp"):
+    """PyramidInfer-style prefill: each layer keeps only the top
+    ``schedule[l]`` tokens (by its own window scores) for the next layer,
+    *and its KV cache is whatever tokens it processed* (retention coupled
+    to compute — the coupling FastKV removes).
+
+    Returns (logits [V], k [L,N,KV,hd] zero-padded, v, lens [L] i32).
+    """
+    params = unflatten(flat, cfg)
+    n = tokens.shape[0]
+    schedule = pyramid_schedule(cfg, n, min_rate)
+    positions = jnp.arange(n, dtype=jnp.int32)
+    x = _embed(params, tokens)
+    cur_n = n
+    cur_valid = n_valid
+    ks, vs, lens = [], [], []
+    for i in range(cfg.n_layers):
+        lp = L.layer_params(params, i)
+        x, k, v, win, acc = L.decoder_layer(
+            x, lp, cfg, positions, cur_valid, kernel
+        )
+        pad = n - cur_n
+        ks.append(jnp.pad(k, ((0, pad), (0, 0), (0, 0))))
+        vs.append(jnp.pad(v, ((0, pad), (0, 0), (0, 0))))
+        lens.append(cur_valid)
+        if i + 1 < cfg.n_layers and schedule[i + 1] < cur_n:
+            nt = schedule[i + 1]
+            sel = _tsp_select(win, cur_valid, nt, cfg)
+            x = x[sel]
+            positions = positions[sel]
+            cur_valid = jnp.minimum(cur_valid, nt)
+            cur_n = nt
+    logits, _ = _final_logits_at(params, cfg, x, cur_valid - 1)
+    return logits, jnp.stack(ks), jnp.stack(vs), jnp.stack(lens)
+
+
+def decode_step(flat, tokens, positions, k_cache, v_cache, lens, *,
+                cfg: ModelConfig):
+    """Batched single-token decode.
+
+    tokens [B] i32, positions [B] i32 (absolute), k/v_cache
+    [L,B,C,KV,hd] (token-major, post-RoPE keys, slot ``lens[l,b]`` must be
+    free — the new token is written there in-HLO for attention and also
+    returned so rust can persist it), lens [L,B] i32 ->
+    (logits [B,V], k_new [L,B,KV,hd], v_new [L,B,KV,hd])
+    """
+    params = unflatten(flat, cfg)
+    b = tokens.shape[0]
+
+    def one_seq(tok, pos, kc, vc, ln):
+        # kc/vc: [L, C, KV, hd]; ln: [L]
+        x = params["embed"][tok]
+        k_news, v_news = [], []
+        for i in range(cfg.n_layers):
+            lp = L.layer_params(params, i)
+            x, k_new, v_new = L.decode_layer_cached(
+                x, lp, cfg, pos, kc[i], vc[i], ln[i]
+            )
+            k_news.append(k_new)
+            v_news.append(v_new)
+        h = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = h @ params["lm_head"]
+        return logits, jnp.stack(k_news), jnp.stack(v_news)
+
+    logits, k_new, v_new = jax.vmap(
+        one_seq, in_axes=(0, 0, 1, 1, 1), out_axes=(0, 1, 1)
+    )(tokens, positions, k_cache, v_cache, lens)
+    return logits, k_new, v_new
+
+
+def sweep_tsp(flat, tokens, n_valid, *, cfg: ModelConfig, t: int, nt: int,
+              kernel: str = "jnp"):
+    """Full model with TSP applied at layer ``t`` (selection inside HLO).
+
+    Used for the Fig. 3 logit-distance curve and the Fig. 5(b)/Table 10
+    TSP-layer ablations: one artifact per candidate layer.
+
+    Returns (logits [V], final_h [D]).
+    """
+    params = unflatten(flat, cfg)
+    n = tokens.shape[0]
+    positions = jnp.arange(n, dtype=jnp.int32)
+    x = _embed(params, tokens)
+    cur_valid = n_valid
+    for i in range(cfg.n_layers):
+        lp = L.layer_params(params, i)
+        x, k, v, win, acc = L.decoder_layer(
+            x, lp, cfg, positions, cur_valid, kernel
+        )
+        if i == t - 1 and nt < x.shape[0]:
+            sel = _tsp_select(win, cur_valid, nt, cfg)
+            x = x[sel]
+            positions = positions[sel]
+            cur_valid = jnp.minimum(cur_valid, nt)
+    logits, final_h = _final_logits_at(params, cfg, x, cur_valid - 1)
+    return logits, final_h
+
+
+def forward_train(flat, tokens, *, cfg: ModelConfig):
+    """Training forward pass: batched full-context, returns logits for every
+    position.  tokens [B, N] -> logits [B, N, V]."""
+    params = unflatten(flat, cfg)
+
+    def one(seq):
+        n = seq.shape[0]
+        positions = jnp.arange(n, dtype=jnp.int32)
+        x = _embed(params, seq)
+        nv = jnp.int32(n)
+        for i in range(cfg.n_layers):
+            lp = L.layer_params(params, i)
+            x, *_ = L.decoder_layer(x, lp, cfg, positions, nv, "jnp")
+        h = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return h @ params["lm_head"]
+
+    return jax.vmap(one)(tokens)

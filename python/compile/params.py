@@ -1,0 +1,86 @@
+"""Parameter table: deterministic flattening between the JAX pytree, the
+single flat f32 vector every artifact takes as input 0, and the
+``artifacts/weights.bin`` file the Rust runtime memory-loads.
+
+The flat layout (not a pytree) is deliberate: the PJRT executable then has
+exactly one weight input, the Rust side never needs to know shapes, and the
+manifest records the table for debugging / checksums.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered list of (name, shape) for every parameter."""
+    d, f, v = cfg.d_model, cfg.d_ffn, cfg.vocab_size
+    qd = cfg.n_heads * cfg.head_dim
+    kd = cfg.n_kv_heads * cfg.head_dim
+    specs = [("embed", (v, d))]
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"l{i}.attn_norm", (d,)),
+            (f"l{i}.wq", (d, qd)),
+            (f"l{i}.wk", (d, kd)),
+            (f"l{i}.wv", (d, kd)),
+            (f"l{i}.wo", (qd, d)),
+            (f"l{i}.mlp_norm", (d,)),
+            (f"l{i}.w_gate", (d, f)),
+            (f"l{i}.w_up", (d, f)),
+            (f"l{i}.w_down", (f, d)),
+        ]
+    specs += [("final_norm", (d,)), ("lm_head", (d, v))]
+    return specs
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Scaled-normal init (norms at 1)."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in param_specs(cfg):
+        if name.endswith("norm"):
+            params[name] = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            std = 0.5 / np.sqrt(fan_in) if len(shape) > 1 else 0.02
+            if name == "embed":
+                std = 0.02
+            params[name] = rng.normal(0.0, std, shape).astype(np.float32)
+    return params
+
+
+def flatten(params: dict, cfg: ModelConfig) -> np.ndarray:
+    parts = []
+    for name, shape in param_specs(cfg):
+        arr = np.asarray(params[name], np.float32)
+        assert arr.shape == tuple(shape), (name, arr.shape, shape)
+        parts.append(arr.ravel())
+    return np.concatenate(parts)
+
+
+def unflatten(flat, cfg: ModelConfig) -> dict:
+    """Works on both np arrays and jnp tracers (static offsets)."""
+    params = {}
+    off = 0
+    for name, shape in param_specs(cfg):
+        size = int(np.prod(shape))
+        params[name] = jnp.reshape(flat[off : off + size], shape)
+        off += size
+    return params
+
+
+def save_weights(path: str, params: dict, cfg: ModelConfig) -> None:
+    flatten(params, cfg).tofile(path)
+
+
+def load_weights(path: str, cfg: ModelConfig) -> np.ndarray:
+    flat = np.fromfile(path, dtype=np.float32)
+    expected = n_params(cfg)
+    assert flat.size == expected, (flat.size, expected)
+    return flat

@@ -1,0 +1,150 @@
+"""Build-time training of the fastkv-tiny substrate model.
+
+Trains the GQA decoder on the synthetic long-context retrieval corpus
+(data.py) with a hand-rolled Adam (optax is not available in this
+environment).  Loss is masked cross-entropy over answer bytes only, which
+makes retrieval behaviour emerge quickly at tiny scale.
+
+Outputs:
+  artifacts/weights.bin    flat f32 parameter vector (params.py order)
+  artifacts/train_log.json loss curve + teacher-forced answer accuracy
+                           (recorded in EXPERIMENTS.md)
+
+Run:  cd python && python -m compile.train [--steps N] [--out DIR]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import TINY, ModelConfig
+from . import data
+from .model import forward_train
+from .params import init_params, flatten, n_params
+
+
+def masked_ce(flat, tokens, mask, cfg: ModelConfig):
+    logits = forward_train(flat, tokens, cfg=cfg)       # [B, N, V]
+    targets = tokens[:, 1:]                             # next byte
+    logits = logits[:, :-1]
+    mask = mask[:, :-1]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt_logit = jnp.take_along_axis(
+        logits, targets[..., None], axis=-1
+    )[..., 0]
+    nll = lse - tgt_logit
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def answer_accuracy(flat, tokens, mask, cfg: ModelConfig):
+    """Teacher-forced accuracy on answer bytes (cheap eval proxy)."""
+    logits = forward_train(flat, tokens, cfg=cfg)
+    pred = jnp.argmax(logits[:, :-1], axis=-1)
+    hit = (pred == tokens[:, 1:]).astype(jnp.float32) * mask[:, :-1]
+    return jnp.sum(hit) / jnp.maximum(jnp.sum(mask[:, :-1]), 1.0)
+
+
+def make_step(cfg: ModelConfig, lr_base: float, total_steps: int,
+              warmup: int):
+    loss_grad = jax.value_and_grad(masked_ce)
+
+    @jax.jit
+    def step(flat, m, v, t, tokens, mask):
+        loss, g = loss_grad(flat, tokens, mask, cfg)
+        lr = lr_base * jnp.minimum(1.0, t / warmup) * (
+            0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(t / total_steps, 1.0)))
+            * 0.9 + 0.1
+        )
+        b1, b2, eps = 0.9, 0.95, 1e-8
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        flat = flat - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return flat, m, v, loss
+
+    return step
+
+
+def train(cfg: ModelConfig = TINY, steps: int = 1200, batch_size: int = 8,
+          seq_len: int = 256, long_steps: int = 150, long_len: int = 512,
+          lr: float = 1.5e-3, seed: int = 0, out_dir: str = "../artifacts",
+          log_every: int = 25, init_from: str = None):
+    rng = np.random.default_rng(seed)
+    if init_from:
+        from .params import load_weights
+        flat = jnp.asarray(load_weights(init_from, cfg))
+        print(f"resumed from {init_from}")
+    else:
+        flat = jnp.asarray(flatten(init_params(cfg, seed), cfg))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    total = steps + long_steps
+    step_fn = make_step(cfg, lr, total, warmup=max(total // 20, 20))
+    acc_fn = jax.jit(lambda f, t, msk: answer_accuracy(f, t, msk, cfg))
+
+    log = {"config": cfg.to_dict(), "n_params": n_params(cfg),
+           "steps": [], "loss": [], "acc": [], "phase": []}
+    t0 = time.time()
+    for t in range(1, total + 1):
+        phase_long = t > steps
+        sl = long_len if phase_long else seq_len
+        bs = max(batch_size // (long_len // seq_len), 2) if phase_long \
+            else batch_size
+        tokens, mask = data.batch(rng, bs, sl)
+        flat, m, v, loss = step_fn(
+            flat, m, v, jnp.float32(t), jnp.asarray(tokens),
+            jnp.asarray(mask)
+        )
+        if t % log_every == 0 or t == total:
+            tokens_e, mask_e = data.batch(rng, 8, sl)
+            acc = float(acc_fn(flat, jnp.asarray(tokens_e),
+                               jnp.asarray(mask_e)))
+            log["steps"].append(t)
+            log["loss"].append(float(loss))
+            log["acc"].append(acc)
+            log["phase"].append("long" if phase_long else "base")
+            el = time.time() - t0
+            print(f"step {t:5d}/{total}  len={sl:4d}  loss={float(loss):.4f}"
+                  f"  ans_acc={acc:.3f}  ({el:.0f}s)", flush=True)
+        if t % 200 == 0:
+            # periodic checkpoint so interrupted runs keep progress
+            os.makedirs(out_dir, exist_ok=True)
+            np.asarray(flat, np.float32).tofile(
+                os.path.join(out_dir, "weights.bin")
+            )
+
+    os.makedirs(out_dir, exist_ok=True)
+    wpath = os.path.join(out_dir, "weights.bin")
+    np.asarray(flat, np.float32).tofile(wpath)
+    log["wall_seconds"] = time.time() - t0
+    with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+        json.dump(log, f, indent=1)
+    print(f"saved {wpath} ({flat.size} params)")
+    return np.asarray(flat)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=1200)
+    ap.add_argument("--long-steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--lr", type=float, default=1.5e-3)
+    ap.add_argument("--init-from", default=None,
+                    help="resume from an existing weights.bin")
+    args = ap.parse_args()
+    train(TINY, steps=args.steps, batch_size=args.batch, seq_len=args.seq,
+          long_steps=args.long_steps, seed=args.seed, out_dir=args.out,
+          lr=args.lr, init_from=args.init_from)
+
+
+if __name__ == "__main__":
+    main()

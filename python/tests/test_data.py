@@ -1,0 +1,75 @@
+"""Synthetic corpus generators: wire-format invariants that the Rust
+workload generators (rust/src/workload/) rely on."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+
+
+ALL_GENS = list(data.GENERATORS.items())
+
+
+@pytest.mark.parametrize("name,gen", ALL_GENS)
+def test_shapes_and_mask(name, gen):
+    rng = np.random.default_rng(0)
+    for seed in range(5):
+        t, m = gen(np.random.default_rng(seed), 256)
+        assert t.shape == (256,)
+        assert m.shape == (256,)
+        assert m.sum() >= 1, name
+        assert t.dtype == np.uint8 or t.max() < 256
+
+
+@pytest.mark.parametrize("name,gen", ALL_GENS)
+def test_answer_recoverable(name, gen):
+    """The loss mask must point exactly at the answer bytes: the target of
+    each masked position is the next byte, and the span ends with END."""
+    for seed in range(10):
+        t, m = gen(np.random.default_rng(seed), 256)
+        idx = np.where(m > 0)[0]
+        assert np.all(np.diff(idx) == 1), f"{name}: mask not contiguous"
+        answer = t[idx + 1]
+        assert answer[-1] == data.END, f"{name}: answer not END-terminated"
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       seq_len=st.sampled_from([128, 256, 384]))
+def test_kv_recall_needle_present(seed, seq_len):
+    """The queried key must appear exactly twice (needle + query) and the
+    value must follow the needle occurrence."""
+    rng = np.random.default_rng(seed)
+    t, m = data.gen_kv_recall(rng, seq_len)
+    idx = np.where(m > 0)[0]
+    value = bytes(t[idx + 1][:-1].astype(np.uint8))
+    s = bytes(t.astype(np.uint8))
+    q = s.rindex(bytes([data.QUERY, data.KEY_START]))
+    key = s[q + 2 : s.index(bytes([data.KV_SEP]), q)]
+    needle = bytes([data.KEY_START]) + key + bytes([data.KV_SEP]) + value
+    assert needle in s[:q], "needle (key SEP value) must be in the context"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_count_marks_answer_matches(seed):
+    rng = np.random.default_rng(seed)
+    t, m = data.gen_count_marks(rng, 256)
+    idx = np.where(m > 0)[0]
+    digit = int(t[idx + 1][0]) - ord("0")
+    n_marks = int(np.sum(t[: idx[0]] == data.MARK))
+    assert digit == n_marks
+
+
+def test_batch_shapes():
+    rng = np.random.default_rng(0)
+    toks, masks = data.batch(rng, 6, 256)
+    assert toks.shape == (6, 256) and masks.shape == (6, 256)
+    assert toks.dtype == np.int32
+    assert np.all(toks >= 0) and np.all(toks < 256)
+
+
+def test_mixture_covers_all_tasks():
+    assert set(data.TRAIN_MIX) == set(data.GENERATORS)
+    assert abs(sum(data.TRAIN_MIX.values()) - 1.0) < 1e-6

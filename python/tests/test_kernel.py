@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas fused attention kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the kernel layer — the oracle in
+kernels/ref.py defines the contract and hypothesis sweeps shapes, GQA
+group counts, valid lengths and block sizes against it.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import attention_ref, maxpool1d_ref
+from compile.kernels.attention import attention_pallas, vmem_bytes
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def _check(h, kv, n, hd, n_valid, window, block_q, seed=0):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (h, n, hd))
+    k = _rand(rng, (kv, n, hd))
+    v = _rand(rng, (kv, n, hd))
+    nv = jnp.int32(n_valid)
+    o1, w1, a1 = attention_ref(q, k, v, nv, window=window)
+    o2, w2, a2 = attention_pallas(q, k, v, nv, window=window,
+                                  block_q=block_q)
+    for x, y, name in [(o1, o2, "o"), (w1, w2, "win"), (a1, a2, "acc")]:
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=RTOL, atol=ATOL,
+            err_msg=f"{name} h={h} kv={kv} n={n} nv={n_valid} bq={block_q}",
+        )
+
+
+class TestKernelBasic:
+    def test_full_length(self):
+        _check(4, 2, 128, 24, 128, 8, 64)
+
+    def test_padded(self):
+        _check(4, 2, 128, 24, 100, 8, 64)
+
+    def test_tiny_valid(self):
+        _check(4, 2, 128, 24, 5, 8, 64)
+
+    def test_valid_smaller_than_window(self):
+        _check(4, 2, 64, 16, 3, 8, 32)
+
+    def test_mha_no_gqa(self):
+        _check(2, 2, 64, 16, 64, 8, 32)
+
+    def test_mqa(self):
+        _check(4, 1, 64, 16, 48, 8, 16)
+
+    def test_block_equals_n(self):
+        _check(2, 1, 64, 16, 64, 8, 64)
+
+    def test_single_row_blocks(self):
+        _check(2, 1, 32, 8, 20, 4, 1)
+
+
+class TestKernelProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        kv=st.integers(1, 3),
+        groups=st.integers(1, 3),
+        n_pow=st.integers(4, 7),
+        hd=st.sampled_from([8, 16, 24]),
+        frac=st.floats(0.05, 1.0),
+        window=st.sampled_from([4, 8]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, kv, groups, n_pow, hd, frac, window, seed):
+        n = 2 ** n_pow
+        n_valid = max(1, int(n * frac))
+        h = kv * groups
+        block_q = min(32, n)
+        _check(h, kv, n, hd, n_valid, window, block_q, seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**16), frac=st.floats(0.1, 1.0))
+    def test_probability_mass_conserved(self, seed, frac):
+        """Each valid query row distributes exactly 1.0 of attention mass,
+        so sum(acc) == number of valid queries per head."""
+        rng = np.random.default_rng(seed)
+        h, kv, n, hd = 4, 2, 64, 16
+        n_valid = max(1, int(n * frac))
+        q = _rand(rng, (h, n, hd))
+        k = _rand(rng, (kv, n, hd))
+        v = _rand(rng, (kv, n, hd))
+        _, win, acc = attention_pallas(q, k, v, jnp.int32(n_valid),
+                                       window=8, block_q=32)
+        np.testing.assert_allclose(
+            np.asarray(acc).sum(axis=-1), np.full(h, n_valid),
+            rtol=1e-4,
+        )
+        np.testing.assert_allclose(
+            np.asarray(win).sum(axis=-1), np.full(h, min(8, n_valid)),
+            rtol=1e-4,
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_win_le_acc(self, seed):
+        """Window mass is a subset of total mass."""
+        rng = np.random.default_rng(seed)
+        q = _rand(rng, (2, 32, 8))
+        k = _rand(rng, (1, 32, 8))
+        v = _rand(rng, (1, 32, 8))
+        _, win, acc = attention_pallas(q, k, v, jnp.int32(32), window=8,
+                                       block_q=16)
+        assert np.all(np.asarray(win) <= np.asarray(acc) + 1e-6)
+
+
+class TestMaxpool:
+    def test_basic(self):
+        x = jnp.asarray([0.0, 5.0, 0.0, 0.0, 0.0, 0.0, 1.0])
+        out = np.asarray(maxpool1d_ref(x, 3))
+        np.testing.assert_allclose(out, [5, 5, 5, 0, 0, 1, 1])
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(8, 64), kernel=st.sampled_from([3, 5, 7]),
+           seed=st.integers(0, 1000))
+    def test_against_naive(self, n, kernel, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=n).astype(np.float32)
+        out = np.asarray(maxpool1d_ref(jnp.asarray(x), kernel))
+        pad = kernel // 2
+        for i in range(n):
+            lo, hi = max(0, i - pad), min(n, i + pad + 1)
+            assert out[i] == pytest.approx(x[lo:hi].max())
+
+
+def test_vmem_estimate_within_budget():
+    """§Perf guard: the largest bucket's kernel instance must fit VMEM."""
+    assert vmem_bytes(n=2048, hd=24, block_q=64) < 16 * 1024 * 1024

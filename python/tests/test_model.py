@@ -1,0 +1,284 @@
+"""L2 correctness: model entry points, stage equivalences, decode
+consistency, pyramid schedule, TSP selection."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import TEST, ModelConfig
+from compile import model as M
+from compile import layers as L
+from compile.params import (
+    init_params, flatten, unflatten, n_params, param_specs,
+)
+
+CFG = TEST
+
+
+@pytest.fixture(scope="module")
+def flat():
+    return jnp.asarray(flatten(init_params(CFG, 1), CFG))
+
+
+def _toks(rng, n):
+    return jnp.asarray(rng.integers(7, 120, n), jnp.int32)
+
+
+class TestParams:
+    def test_roundtrip(self):
+        p = init_params(CFG, 3)
+        f = flatten(p, CFG)
+        p2 = unflatten(jnp.asarray(f), CFG)
+        for name, shape in param_specs(CFG):
+            np.testing.assert_array_equal(
+                p[name], np.asarray(p2[name]), err_msg=name
+            )
+
+    def test_count_matches_specs(self):
+        assert n_params(CFG) == sum(
+            int(np.prod(s)) for _, s in param_specs(CFG)
+        )
+
+
+class TestRope:
+    def test_preserves_norm(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(16, 2, 8)).astype(np.float32))
+        pos = jnp.arange(16, dtype=jnp.int32)
+        y = L.rope(x, pos, 10_000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_relative_property(self):
+        """<rope(q,i), rope(k,j)> depends only on i-j."""
+        rng = np.random.default_rng(1)
+        q = jnp.asarray(rng.normal(size=(1, 1, 8)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(1, 1, 8)).astype(np.float32))
+
+        def dot(i, j):
+            qr = L.rope(q, jnp.asarray([i], jnp.int32), 10_000.0)
+            kr = L.rope(k, jnp.asarray([j], jnp.int32), 10_000.0)
+            return float(jnp.sum(qr * kr))
+
+        assert dot(5, 3) == pytest.approx(dot(12, 10), rel=1e-4)
+        assert dot(9, 0) == pytest.approx(dot(20, 11), rel=1e-4)
+
+
+class TestStageEquivalence:
+    def test_stage12_equals_full(self, flat):
+        """With the full token set propagated, the two-stage prefill is
+        bit-for-bit the same computation as prefill_full."""
+        rng = np.random.default_rng(2)
+        n = 64
+        toks = _toks(rng, n)
+        nv = jnp.int32(n)
+        lg, k, v, win, acc, fh = M.prefill_full(flat, toks, nv, cfg=CFG)
+        hid, k1, v1, w1, a1 = M.prefill_stage1(flat, toks, nv, cfg=CFG)
+        pos = jnp.arange(n, dtype=jnp.int32)
+        lg2, k2, v2, w2, a2, fh2 = M.prefill_stage2(
+            flat, hid, pos, nv, cfg=CFG
+        )
+        t = CFG.tsp_layer
+        np.testing.assert_allclose(lg, lg2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(fh, fh2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(k[:t], k1, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(k[t:], k2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(win[:t], w1, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(acc[t:], a2, rtol=1e-4, atol=1e-4)
+
+    def test_padding_invariance(self, flat):
+        """A prompt padded into a larger bucket produces the same logits."""
+        rng = np.random.default_rng(3)
+        toks = _toks(rng, 48)
+        lg1, *_ = M.prefill_full(
+            flat, jnp.pad(toks, (0, 16)), jnp.int32(48), cfg=CFG
+        )
+        lg2, *_ = M.prefill_full(
+            flat, jnp.pad(toks, (0, 80)), jnp.int32(48), cfg=CFG
+        )
+        np.testing.assert_allclose(lg1, lg2, rtol=1e-4, atol=1e-4)
+
+    def test_sweep_tsp_full_rate_matches_full(self, flat):
+        """TSP that keeps every token must not change the output."""
+        rng = np.random.default_rng(4)
+        n = 64
+        toks = _toks(rng, n)
+        lg, *_ , fh = M.prefill_full(flat, toks, jnp.int32(n), cfg=CFG)
+        lg2, fh2 = M.sweep_tsp(flat, toks, jnp.int32(n), cfg=CFG, t=2, nt=n)
+        np.testing.assert_allclose(lg, lg2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(fh, fh2, rtol=1e-4, atol=1e-4)
+
+    def test_sweep_later_layer_closer_to_full(self, flat):
+        """Fig. 3 property: the hidden-state L2 distance to the full
+        baseline shrinks (weakly) as the TSP layer moves later."""
+        rng = np.random.default_rng(5)
+        n = 64
+        toks = _toks(rng, n)
+        _, fh = M.prefill_full(flat, toks, jnp.int32(n), cfg=CFG)[0], \
+            M.prefill_full(flat, toks, jnp.int32(n), cfg=CFG)[5]
+        dists = []
+        for t in range(1, CFG.n_layers):
+            _, fht = M.sweep_tsp(flat, toks, jnp.int32(n), cfg=CFG, t=t,
+                                 nt=16)
+            dists.append(float(jnp.linalg.norm(fht - fh)))
+        assert dists[-1] <= dists[0]
+
+
+class TestDecode:
+    def test_decode_matches_extended_prefill(self, flat):
+        """Greedy-decoding one token over the full uncompressed cache must
+        equal re-running prefill over the extended sequence."""
+        rng = np.random.default_rng(6)
+        n, c = 48, 96
+        toks = _toks(rng, n)
+        lg, k, v, *_ = M.prefill_full(
+            flat, jnp.pad(toks, (0, 16)), jnp.int32(n), cfg=CFG
+        )
+        lcfg = CFG
+        kc = np.zeros((lcfg.n_layers, 1, c, lcfg.n_kv_heads,
+                       lcfg.head_dim), np.float32)
+        vc = np.zeros_like(kc)
+        kc[:, 0, :64] = np.asarray(k)
+        vc[:, 0, :64] = np.asarray(v)
+        # zero out padded rows (they were masked in attention anyway)
+        kc[:, 0, n:64] = 0
+        vc[:, 0, n:64] = 0
+        nxt = jnp.argmax(lg).astype(jnp.int32)
+        lgd, kn, vn = M.decode_step(
+            flat, nxt[None], jnp.asarray([n], jnp.int32),
+            jnp.asarray(kc), jnp.asarray(vc),
+            jnp.full((lcfg.n_layers, 1), n, jnp.int32), cfg=CFG,
+        )
+        ext = jnp.concatenate([toks, nxt[None]])
+        lgf, *_ = M.prefill_full(
+            flat, jnp.pad(ext, (0, 15)), jnp.int32(n + 1), cfg=CFG
+        )
+        np.testing.assert_allclose(
+            np.asarray(lgd[0]), np.asarray(lgf), rtol=1e-3, atol=1e-3
+        )
+
+    def test_decode_batch_consistency(self, flat):
+        """A batch-4 decode must equal four independent batch-1 decodes."""
+        rng = np.random.default_rng(7)
+        lcfg = CFG
+        c = 96
+        kc = rng.normal(size=(lcfg.n_layers, 4, c, lcfg.n_kv_heads,
+                              lcfg.head_dim)).astype(np.float32) * 0.3
+        vc = rng.normal(size=kc.shape).astype(np.float32) * 0.3
+        lens = np.asarray([[10, 20, 30, 40]] * lcfg.n_layers, np.int32)
+        toks = jnp.asarray([5, 9, 70, 100], jnp.int32)
+        poss = jnp.asarray([10, 20, 30, 40], jnp.int32)
+        lg_b, kn_b, vn_b = M.decode_step(
+            flat, toks, poss, jnp.asarray(kc), jnp.asarray(vc),
+            jnp.asarray(lens), cfg=CFG,
+        )
+        for i in range(4):
+            lg_1, kn_1, vn_1 = M.decode_step(
+                flat, toks[i : i + 1], poss[i : i + 1],
+                jnp.asarray(kc[:, i : i + 1]), jnp.asarray(vc[:, i : i + 1]),
+                jnp.asarray(lens[:, i : i + 1]), cfg=CFG,
+            )
+            np.testing.assert_allclose(
+                np.asarray(lg_b[i]), np.asarray(lg_1[0]), rtol=1e-4,
+                atol=1e-4,
+            )
+
+    def test_compressed_cache_changes_little_when_keeping_salient(
+        self, flat
+    ):
+        """Dropping the *lowest*-scoring half of the cache perturbs decode
+        logits less than dropping the highest-scoring half."""
+        rng = np.random.default_rng(8)
+        n = 64
+        toks = _toks(rng, n)
+        lg, k, v, win, acc, _ = M.prefill_full(
+            flat, toks, jnp.int32(n), cfg=CFG
+        )
+        score = np.asarray(win).mean(axis=1)          # [L, N]
+        lcfg = CFG
+        c = 96
+        keep = n // 2
+
+        def decode_with(sel_per_layer):
+            kc = np.zeros((lcfg.n_layers, 1, c, lcfg.n_kv_heads,
+                           lcfg.head_dim), np.float32)
+            vc = np.zeros_like(kc)
+            lens = np.zeros((lcfg.n_layers, 1), np.int32)
+            for l in range(lcfg.n_layers):
+                sel = np.sort(sel_per_layer[l])
+                kc[l, 0, : len(sel)] = np.asarray(k)[l, sel]
+                vc[l, 0, : len(sel)] = np.asarray(v)[l, sel]
+                lens[l, 0] = len(sel)
+            nxt = jnp.argmax(lg).astype(jnp.int32)
+            lgd, *_ = M.decode_step(
+                flat, nxt[None], jnp.asarray([n], jnp.int32),
+                jnp.asarray(kc), jnp.asarray(vc), jnp.asarray(lens),
+                cfg=CFG,
+            )
+            return np.asarray(lgd[0])
+
+        top = [np.argsort(-score[l])[:keep] for l in range(lcfg.n_layers)]
+        bot = [np.argsort(score[l])[:keep] for l in range(lcfg.n_layers)]
+        full_sel = [np.arange(n)] * lcfg.n_layers
+        ref_lg = decode_with(full_sel)
+        d_top = np.linalg.norm(decode_with(top) - ref_lg)
+        d_bot = np.linalg.norm(decode_with(bot) - ref_lg)
+        assert d_top < d_bot
+
+
+class TestPyramid:
+    def test_schedule_monotone(self):
+        sched = M.pyramid_schedule(CFG, 256)
+        assert sched[0] == 256
+        assert all(a >= b for a, b in zip(sched, sched[1:]))
+        assert sched[-1] >= int(256 * 0.6)
+
+    def test_pyramid_lens_match_schedule(self, flat):
+        rng = np.random.default_rng(9)
+        n = 64
+        toks = _toks(rng, n)
+        _, kp, vp, lens = M.prefill_pyramid(flat, toks, jnp.int32(n),
+                                            cfg=CFG)
+        sched = M.pyramid_schedule(CFG, n)
+        np.testing.assert_array_equal(np.asarray(lens), sched)
+
+    def test_pyramid_layer0_matches_full(self, flat):
+        """Layer 0 processes the full context, so its KV equals full's."""
+        rng = np.random.default_rng(10)
+        n = 64
+        toks = _toks(rng, n)
+        _, k, *_ = M.prefill_full(flat, toks, jnp.int32(n), cfg=CFG)
+        _, kp, _, lens = M.prefill_pyramid(flat, toks, jnp.int32(n),
+                                           cfg=CFG)
+        np.testing.assert_allclose(
+            np.asarray(k)[0], np.asarray(kp)[0], rtol=1e-4, atol=1e-4
+        )
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        from compile.train import make_step
+        from compile import data
+
+        rng = np.random.default_rng(0)
+        small = ModelConfig(
+            d_model=32, n_layers=2, n_heads=2, n_kv_heads=1, d_ffn=64,
+            tsp_layer=1,
+        )
+        flat = jnp.asarray(flatten(init_params(small, 0), small))
+        m = jnp.zeros_like(flat)
+        v = jnp.zeros_like(flat)
+        step = make_step(small, 2e-3, 30, 5)
+        losses = []
+        for t in range(1, 31):
+            toks, mask = data.batch(rng, 4, 128)
+            flat, m, v, loss = step(
+                flat, m, v, jnp.float32(t), jnp.asarray(toks),
+                jnp.asarray(mask),
+            )
+            losses.append(float(loss))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5])

@@ -1,0 +1,48 @@
+//! Shared mini bench harness (criterion is not vendored): warmup + timed
+//! reps with mean/std/min, honoring --quick via env FASTKV_BENCH_QUICK.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+    pub reps: usize,
+}
+
+pub fn quick() -> bool {
+    std::env::var("FASTKV_BENCH_QUICK").is_ok()
+}
+
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> BenchResult {
+    let reps = if quick() { reps.min(3).max(1) } else { reps };
+    for _ in 0..warmup.min(if quick() { 1 } else { warmup }) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_ms: mean,
+        std_ms: var.sqrt(),
+        min_ms: min,
+        reps,
+    };
+    println!(
+        "{:44} {:10.2} ms ±{:7.2}  (min {:.2}, n={})",
+        r.name, r.mean_ms, r.std_ms, r.min_ms, r.reps
+    );
+    r
+}
+
+#[allow(dead_code)]
+fn main() {}

@@ -1,0 +1,77 @@
+//! Fig. 4 / Fig. 9 bench: end-to-end latency breakdown (prefill vs decode)
+//! per method per context length.
+//!
+//! Run: cargo bench --bench e2e_latency
+//!      (env FASTKV_BENCH_QUICK=1 for a fast smoke pass,
+//!       FASTKV_BENCH_LENS=256,512 to override lengths)
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::bench;
+use fastkv::coordinator::policies::{make_policy, PolicyCfg};
+use fastkv::generate;
+use fastkv::runtime::Runtime;
+use fastkv::tokenizer::Tokenizer;
+use fastkv::util::rng::Rng;
+use fastkv::workload;
+
+fn main() {
+    let rt = match Runtime::new(&fastkv::Manifest::default_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let man = rt.manifest.clone();
+    let cfg = PolicyCfg::default_for(&man);
+    let tok = Tokenizer;
+    let lens: Vec<usize> = std::env::var("FASTKV_BENCH_LENS")
+        .map(|v| v.split(',').map(|s| s.parse().unwrap()).collect())
+        .unwrap_or_else(|_| {
+            // default: cap at 1024 to bound `cargo bench` wall time; the
+            // 2048 point is produced by `fastkv bench --lens ...,2048`.
+            man.buckets
+                .stage1_ns
+                .iter()
+                .copied()
+                .filter(|&n| n <= 1024)
+                .collect()
+        });
+    let gen = if bench_util::quick() { 8 } else { 32 };
+
+    println!("\n=== e2e_latency (Fig 4/9): gen {gen} tokens ===");
+    for &len in &lens {
+        for m in ["full", "streaming_llm", "snapkv", "gemfilter", "pyramid_infer", "fastkv"] {
+            let policy = make_policy(m).unwrap();
+            let mut rng = Rng::new(3);
+            let s = workload::kv_recall(&mut rng, len, None, 1);
+            let ids = tok.encode(&s.prompt);
+            // one untimed call to compile artifacts
+            if let Err(e) = generate(&rt, &man, policy.as_ref(), &cfg, &ids, 2)
+            {
+                println!("{m:>14}@{len}: unsupported ({e})");
+                continue;
+            }
+            let mut prefill_acc = 0.0;
+            let mut decode_acc = 0.0;
+            let mut count = 0usize;
+            bench(&format!("{m}@{len}"), 1, 3, || {
+                let out = generate(
+                    &rt, &man, policy.as_ref(), &cfg, &ids, gen,
+                )
+                .unwrap();
+                prefill_acc += out.stats.prefill_secs;
+                decode_acc += out.stats.decode_secs;
+                count += 1;
+            });
+            println!(
+                "{:>46} prefill {:8.2} ms | decode {:8.2} ms",
+                "",
+                prefill_acc * 1e3 / count as f64,
+                decode_acc * 1e3 / count as f64
+            );
+        }
+    }
+}

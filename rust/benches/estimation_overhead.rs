@@ -1,0 +1,76 @@
+//! Table 8 bench: token-importance estimation overhead — coordinator-side
+//! selection cost (head-mean + max-pool + group-wise top-k over all
+//! layers) vs the artifact prefill itself.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::bench;
+use fastkv::coordinator::policies::Exec;
+use fastkv::coordinator::selection;
+use fastkv::runtime::outputs::PrefillFullOut;
+use fastkv::runtime::{In, Runtime};
+use fastkv::tensor::HostTensorI32;
+use fastkv::tokenizer::Tokenizer;
+use fastkv::util::rng::Rng;
+use fastkv::workload;
+
+fn main() {
+    let rt = match Runtime::new(&fastkv::Manifest::default_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let man = rt.manifest.clone();
+    let tok = Tokenizer;
+    println!("\n=== estimation_overhead (Table 8) ===");
+    for &len in &man.buckets.prefill_ns.clone() {
+        if len < 256 {
+            continue;
+        }
+        let mut rng = Rng::new(1);
+        let s = workload::kv_recall(&mut rng, len, None, 1);
+        let mut ids = tok.encode(&s.prompt);
+        ids.resize(len, 0);
+        let run_prefill = || {
+            PrefillFullOut::from_vec(
+                Exec::run(
+                    &rt,
+                    &format!("prefill_full_{len}"),
+                    vec![
+                        HostTensorI32::new(vec![len], ids.clone()).into(),
+                        In::scalar_i32(len as i32),
+                    ],
+                )
+                .unwrap(),
+            )
+        };
+        let out = run_prefill();
+        let pre =
+            bench(&format!("prefill_full_{len}"), 1, 3, || {
+                let _ = run_prefill();
+            });
+        let budget = (0.1 * len as f64).ceil() as usize;
+        let est = bench(&format!("estimation (all layers) @{len}"), 1, 10, || {
+            for l in 0..man.model.n_layers {
+                let _ = selection::select_kv_groupwise(
+                    out.win.row(l),
+                    man.model.n_heads,
+                    out.win.shape[2],
+                    len,
+                    man.model.n_kv_heads,
+                    budget,
+                    man.model.window,
+                    man.model.pool_kernel,
+                );
+            }
+        });
+        println!(
+            "{:>46} overhead = {:.2}% of prefill",
+            "",
+            100.0 * est.mean_ms / (pre.mean_ms + est.mean_ms)
+        );
+    }
+}

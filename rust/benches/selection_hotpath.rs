@@ -1,0 +1,83 @@
+//! L3 hot-path micro-benchmarks: selection primitives and KV-cache arena
+//! operations, independent of PJRT (used by the §Perf iteration loop).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::bench;
+use fastkv::coordinator::kvcache::{BatchArena, RequestCache};
+use fastkv::coordinator::selection;
+use fastkv::manifest::ModelMeta;
+use fastkv::tensor::HostTensor;
+use fastkv::util::rng::Rng;
+
+fn meta() -> ModelMeta {
+    ModelMeta {
+        vocab_size: 256,
+        d_model: 96,
+        n_layers: 8,
+        n_heads: 4,
+        n_kv_heads: 2,
+        head_dim: 24,
+        tsp_layer: 4,
+        window: 8,
+        pool_kernel: 7,
+        max_train_len: 512,
+    }
+}
+
+fn main() {
+    let m = meta();
+    let mut rng = Rng::new(0);
+    println!("\n=== selection_hotpath (L3 §Perf) ===");
+    for n in [512usize, 2048, 8192] {
+        let win: Vec<f32> =
+            (0..m.n_heads * n).map(|_| rng.f64() as f32).collect();
+        bench(&format!("select_kv_groupwise n={n}"), 3, 50, || {
+            let _ = selection::select_kv_groupwise(
+                &win,
+                m.n_heads,
+                n,
+                n,
+                m.n_kv_heads,
+                n / 10,
+                m.window,
+                m.pool_kernel,
+            );
+        });
+        bench(&format!("maxpool1d n={n}"), 3, 50, || {
+            let s = selection::head_mean(&win, m.n_heads, n);
+            let _ = selection::maxpool1d(&s, m.pool_kernel);
+        });
+    }
+
+    // KV gather + arena load/append path
+    let n = 2048;
+    let k_src = HostTensor::zeros(vec![m.n_layers, n, m.n_kv_heads, m.head_dim]);
+    let v_src = k_src.clone();
+    let sel: Vec<usize> = (0..n / 10).map(|i| i * 10).collect();
+    bench("RequestCache fill (8 layers, 2048->205)", 3, 50, || {
+        let mut rc = RequestCache::new(&m);
+        for l in 0..m.n_layers {
+            rc.fill_layer(l, &k_src, &v_src, l, &sel);
+        }
+    });
+
+    let mut rc = RequestCache::new(&m);
+    for l in 0..m.n_layers {
+        rc.fill_layer(l, &k_src, &v_src, l, &sel);
+    }
+    let mut arena = BatchArena::new(&m, 4, 320);
+    let slot = arena.alloc_slot().unwrap();
+    bench("BatchArena load (cap 320)", 3, 100, || {
+        arena.load(slot, &rc);
+    });
+    let k_new = HostTensor::zeros(vec![m.n_layers, 4, m.n_kv_heads, m.head_dim]);
+    bench("BatchArena append", 3, 100, || {
+        if !arena.append(slot, &k_new, &k_new) {
+            arena.free_slot(slot);
+            arena.alloc_slot();
+            arena.load(slot, &rc);
+        }
+    });
+}

@@ -1,0 +1,176 @@
+//! Motivation & mechanism analyses (Fig. 1a, Fig. 1b, Fig. 3).
+//!
+//! All operate on score summaries / hidden states fetched from the
+//! prefill artifacts; the math here is what the paper Section 3 plots.
+
+use crate::tensor::normalized_l2;
+
+/// Fig. 1(a): overlap ratio of the top-k critical tokens between layer
+/// pairs at a given layer distance, split by the anchor layer.
+///
+/// `acc`: [L, H, N] accumulated attention mass; criticality of token i at
+/// layer l = mean over heads of acc[l, :, i] (the paper's "highest average
+/// attention mass across heads").
+pub fn critical_sets(
+    acc: &crate::tensor::HostTensor,
+    n_valid: usize,
+    top_k: usize,
+) -> Vec<Vec<usize>> {
+    let l = acc.shape[0];
+    let h = acc.shape[1];
+    let n = acc.shape[2];
+    (0..l)
+        .map(|li| {
+            let mean = crate::coordinator::selection::head_mean(
+                acc.row(li),
+                h,
+                n,
+            );
+            crate::coordinator::selection::top_k_with_forced(
+                &mean,
+                n_valid,
+                top_k.min(n_valid),
+                &[],
+            )
+        })
+        .collect()
+}
+
+/// Overlap |A ∩ B| / |A| of two sorted index sets.
+pub fn overlap(a: &[usize], b: &[usize]) -> f64 {
+    if a.is_empty() {
+        return 0.0;
+    }
+    let bset: std::collections::BTreeSet<usize> = b.iter().copied().collect();
+    let inter = a.iter().filter(|x| bset.contains(x)).count();
+    inter as f64 / a.len() as f64
+}
+
+/// Mean overlap at each layer distance, separately for anchors below and
+/// at/above the split layer. Returns (distance, early_mean, late_mean).
+pub fn overlap_by_distance(
+    sets: &[Vec<usize>],
+    split: usize,
+) -> Vec<(usize, f64, f64)> {
+    let l = sets.len();
+    let mut out = Vec::new();
+    for d in 1..l {
+        let mut early = Vec::new();
+        let mut late = Vec::new();
+        for a in 0..l - d {
+            let o = overlap(&sets[a], &sets[a + d]);
+            if a < split {
+                early.push(o);
+            } else {
+                late.push(o);
+            }
+        }
+        let em = if early.is_empty() {
+            f64::NAN
+        } else {
+            crate::util::mean_std(&early).0
+        };
+        let lm = if late.is_empty() {
+            f64::NAN
+        } else {
+            crate::util::mean_std(&late).0
+        };
+        out.push((d, em, lm));
+    }
+    out
+}
+
+/// Fig. 1(b): top-K attention recall — the fraction of total attention
+/// mass captured by the K most-attended tokens, per layer.
+pub fn topk_recall(
+    acc: &crate::tensor::HostTensor,
+    n_valid: usize,
+    k: usize,
+) -> Vec<f64> {
+    let l = acc.shape[0];
+    let h = acc.shape[1];
+    let n = acc.shape[2];
+    (0..l)
+        .map(|li| {
+            let mean = crate::coordinator::selection::head_mean(
+                acc.row(li),
+                h,
+                n,
+            );
+            let valid = &mean[..n_valid.min(n)];
+            let total: f64 = valid.iter().map(|&x| x as f64).sum();
+            if total <= 0.0 {
+                return 0.0;
+            }
+            let mut sorted: Vec<f32> = valid.to_vec();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let top: f64 = sorted
+                .iter()
+                .take(k)
+                .map(|&x| x as f64)
+                .sum();
+            top / total
+        })
+        .collect()
+}
+
+/// Fig. 3 metric: normalized L2 distance between final hidden states.
+pub fn hidden_distance(full: &[f32], variant: &[f32]) -> f64 {
+    normalized_l2(full, variant)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::HostTensor;
+
+    #[test]
+    fn overlap_basics() {
+        assert_eq!(overlap(&[1, 2, 3], &[2, 3, 4]), 2.0 / 3.0);
+        assert_eq!(overlap(&[], &[1]), 0.0);
+        assert_eq!(overlap(&[5], &[5]), 1.0);
+    }
+
+    #[test]
+    fn overlap_by_distance_shape() {
+        let sets = vec![
+            vec![0, 1],
+            vec![0, 1],
+            vec![2, 3],
+            vec![2, 3],
+        ];
+        let rows = overlap_by_distance(&sets, 2);
+        assert_eq!(rows.len(), 3);
+        // distance 1: anchors 0,1,2 -> early = anchors 0,1 (1.0, 0.0)
+        let (d, em, lm) = rows[0];
+        assert_eq!(d, 1);
+        assert!((em - 0.5).abs() < 1e-9);
+        assert!((lm - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recall_concentrated_vs_uniform() {
+        // layer 0: all mass on token 0; layer 1: uniform
+        let n = 10;
+        let mut data = vec![0.0f32; 2 * n];
+        data[0] = 1.0;
+        for i in 0..n {
+            data[n + i] = 0.1;
+        }
+        let acc = HostTensor::new(vec![2, 1, n], data);
+        let r = topk_recall(&acc, n, 1);
+        assert!(r[0] > 0.99);
+        assert!((r[1] - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn critical_sets_pick_heavy_tokens() {
+        let n = 6;
+        let mut data = vec![0.0f32; n];
+        data[2] = 5.0;
+        data[4] = 3.0;
+        let acc = HostTensor::new(vec![1, 1, n], data);
+        let sets = critical_sets(&acc, n, 2);
+        assert_eq!(sets[0], vec![2, 4]);
+    }
+}

@@ -1,0 +1,166 @@
+//! Request engine: prefill plan → KV compression → decode loop.
+//!
+//! `generate` is the single-request path used by the evaluation harness and
+//! benchmarks; the serving stack (`server.rs`) drives the same decode
+//! machinery through the continuous batcher.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::kvcache::BatchArena;
+use crate::coordinator::policies::{Exec, Policy, PolicyCfg};
+use crate::manifest::Manifest;
+use crate::runtime::outputs::DecodeOut;
+use crate::tensor::HostTensorI32;
+use crate::tokenizer::END;
+use crate::util::bucket_for;
+
+/// Timing + cache accounting for one generated request.
+#[derive(Debug, Clone, Default)]
+pub struct GenStats {
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    pub decode_steps: usize,
+    pub prompt_tokens: usize,
+    /// Σ_layers tokens processed during prefill (compute-rate numerator).
+    pub compute_tokens: usize,
+    /// f32 elements held in the compressed KV cache.
+    pub cache_elems: usize,
+    /// Decode cache capacity bucket used.
+    pub decode_cap: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    /// Generated token ids (first token included), END excluded.
+    pub tokens: Vec<i32>,
+    pub stats: GenStats,
+    pub final_h: Vec<f32>,
+}
+
+/// Pick the decode-capacity bucket for a cache of `max_len` entries plus
+/// `max_gen` appended tokens (+1 staging slot).
+pub fn decode_cap_for(
+    man: &Manifest,
+    max_len: usize,
+    max_gen: usize,
+) -> Result<usize> {
+    bucket_for(max_len + max_gen + 1, &man.buckets.decode_caps).with_context(
+        || {
+            format!(
+                "no decode cap bucket fits {} cached + {} generated",
+                max_len, max_gen
+            )
+        },
+    )
+}
+
+/// Generate up to `max_new` tokens for one prompt under `policy`.
+pub fn generate(
+    ex: &dyn Exec,
+    man: &Manifest,
+    policy: &dyn Policy,
+    cfg: &PolicyCfg,
+    prompt: &[i32],
+    max_new: usize,
+) -> Result<GenResult> {
+    let t0 = Instant::now();
+    let pre = policy.prefill(ex, man, prompt, cfg)?;
+    let prefill_secs = t0.elapsed().as_secs_f64();
+
+    let max_new = max_new.min(man.buckets.max_gen);
+    let cap = decode_cap_for(man, pre.cache.max_len(), max_new)?;
+    let mut arena = BatchArena::new(&man.model, 1, cap);
+    let slot = arena.alloc_slot().unwrap();
+    arena.load(slot, &pre.cache);
+
+    let mut stats = GenStats {
+        prefill_secs,
+        prompt_tokens: prompt.len(),
+        compute_tokens: pre.compute_tokens,
+        cache_elems: pre.cache.total_elems(),
+        decode_cap: cap,
+        ..Default::default()
+    };
+
+    let artifact = format!("decode_1x{cap}");
+    let mut tokens = vec![pre.first_token];
+    let mut cur = pre.first_token;
+    let mut pos = pre.next_pos;
+    let t1 = Instant::now();
+    while tokens.len() < max_new && cur != END as i32 {
+        let out = DecodeOut::from_vec(ex.run(
+            &artifact,
+            vec![
+                HostTensorI32::new(vec![1], vec![cur]).into(),
+                HostTensorI32::new(vec![1], vec![pos as i32]).into(),
+                arena.k.clone().into(),
+                arena.v.clone().into(),
+                arena.lens_tensor().into(),
+            ],
+        )?)
+        ;
+        if !arena.append(slot, &out.k_new, &out.v_new) {
+            break; // capacity exhausted
+        }
+        stats.decode_steps += 1;
+        pos += 1;
+        cur = out.logits.argmax() as i32;
+        if cur == END as i32 {
+            break;
+        }
+        tokens.push(cur);
+    }
+    stats.decode_secs = t1.elapsed().as_secs_f64();
+
+    Ok(GenResult { tokens, stats, final_h: pre.final_h })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{Buckets, Manifest, ModelMeta};
+    use std::collections::BTreeMap;
+
+    fn fake_manifest() -> Manifest {
+        Manifest {
+            dir: std::path::PathBuf::from("/tmp"),
+            model: ModelMeta {
+                vocab_size: 256,
+                d_model: 96,
+                n_layers: 8,
+                n_heads: 4,
+                n_kv_heads: 2,
+                head_dim: 24,
+                tsp_layer: 4,
+                window: 8,
+                pool_kernel: 7,
+                max_train_len: 512,
+            },
+            n_params: 1,
+            kernel: "jnp".into(),
+            buckets: Buckets {
+                prefill_ns: vec![64, 128],
+                stage1_ns: vec![256],
+                stage2_ns: vec![64],
+                pyramid_ns: vec![256],
+                decode_batches: vec![1, 4],
+                decode_caps: vec![128, 320, 576],
+                sweep_n: 256,
+                sweep_nt: 64,
+                pallas_n: 128,
+                max_gen: 64,
+            },
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn cap_bucketing() {
+        let man = fake_manifest();
+        assert_eq!(decode_cap_for(&man, 50, 64).unwrap(), 128);
+        assert_eq!(decode_cap_for(&man, 100, 64).unwrap(), 320);
+        assert!(decode_cap_for(&man, 600, 64).is_err());
+    }
+}

@@ -1,0 +1,362 @@
+//! Compressed KV-cache storage.
+//!
+//! `LayerCache` holds one request's selected KV rows for one layer;
+//! `RequestCache` stacks all layers; `BatchArena` is the decode-artifact
+//! staging area in exactly the artifact's [L, B, C, KV, hd] layout so a
+//! decode step is one contiguous host→device copy, and appends during
+//! decoding write in place (no per-step reassembly).
+
+use crate::manifest::ModelMeta;
+use crate::tensor::HostTensor;
+
+/// One request's per-layer compressed cache (token-major rows).
+#[derive(Debug, Clone)]
+pub struct RequestCache {
+    /// [L][len * KV * hd] selected K rows per layer (may differ per layer).
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    /// Valid entries per layer.
+    pub lens: Vec<usize>,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl RequestCache {
+    pub fn new(meta: &ModelMeta) -> Self {
+        RequestCache {
+            k: vec![Vec::new(); meta.n_layers],
+            v: vec![Vec::new(); meta.n_layers],
+            lens: vec![0; meta.n_layers],
+            kv_heads: meta.n_kv_heads,
+            head_dim: meta.head_dim,
+        }
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+
+    /// Fill layer `l` by gathering `selected` token rows from a prefill
+    /// KV tensor shaped [layers, N, KV, hd] at layer-offset `src_layer`.
+    ///
+    /// `per_group`: one index set per KV head (group-wise compression); all
+    /// sets must be equal length. With a single shared set pass it
+    /// duplicated.
+    pub fn fill_layer_grouped(
+        &mut self,
+        l: usize,
+        k_src: &HostTensor,
+        v_src: &HostTensor,
+        src_layer: usize,
+        per_group: &[Vec<usize>],
+    ) {
+        assert_eq!(per_group.len(), self.kv_heads);
+        let len = per_group[0].len();
+        assert!(per_group.iter().all(|s| s.len() == len));
+        let hd = self.head_dim;
+        let re = self.row_elems();
+        let kk = &mut self.k[l];
+        let vv = &mut self.v[l];
+        kk.clear();
+        vv.clear();
+        kk.resize(len * re, 0.0);
+        vv.resize(len * re, 0.0);
+        for (slot, _) in per_group[0].iter().enumerate() {
+            for g in 0..self.kv_heads {
+                let tok = per_group[g][slot];
+                let ks = k_src.row2(src_layer, tok);
+                let vs = v_src.row2(src_layer, tok);
+                let dst = slot * re + g * hd;
+                kk[dst..dst + hd].copy_from_slice(&ks[g * hd..(g + 1) * hd]);
+                vv[dst..dst + hd].copy_from_slice(&vs[g * hd..(g + 1) * hd]);
+            }
+        }
+        self.lens[l] = len;
+    }
+
+    /// Shared-index fill (same token set for every group).
+    pub fn fill_layer(
+        &mut self,
+        l: usize,
+        k_src: &HostTensor,
+        v_src: &HostTensor,
+        src_layer: usize,
+        selected: &[usize],
+    ) {
+        let sets: Vec<Vec<usize>> =
+            (0..self.kv_heads).map(|_| selected.to_vec()).collect();
+        self.fill_layer_grouped(l, k_src, v_src, src_layer, &sets);
+    }
+
+    pub fn max_len(&self) -> usize {
+        self.lens.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Total cached f32 elements (the "KV cache size" metric).
+    pub fn total_elems(&self) -> usize {
+        self.k.iter().map(|k| k.len()).sum::<usize>() * 2
+    }
+}
+
+/// Decode staging arena in artifact layout [L, B, C, KV, hd].
+#[derive(Debug)]
+pub struct BatchArena {
+    pub l: usize,
+    pub b: usize,
+    pub c: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub k: HostTensor,
+    pub v: HostTensor,
+    /// lens[l * b + slot] — valid rows per layer per slot.
+    pub lens: Vec<i32>,
+    /// Slot occupancy.
+    pub used: Vec<bool>,
+}
+
+impl BatchArena {
+    pub fn new(meta: &ModelMeta, b: usize, c: usize) -> Self {
+        let l = meta.n_layers;
+        let shape = vec![l, b, c, meta.n_kv_heads, meta.head_dim];
+        BatchArena {
+            l,
+            b,
+            c,
+            kv_heads: meta.n_kv_heads,
+            head_dim: meta.head_dim,
+            k: HostTensor::zeros(shape.clone()),
+            v: HostTensor::zeros(shape),
+            lens: vec![0; l * b],
+            used: vec![false; b],
+        }
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+
+    fn base(&self, l: usize, slot: usize, row: usize) -> usize {
+        ((l * self.b + slot) * self.c + row) * self.row_elems()
+    }
+
+    pub fn alloc_slot(&mut self) -> Option<usize> {
+        let slot = self.used.iter().position(|u| !u)?;
+        self.used[slot] = true;
+        for l in 0..self.l {
+            self.lens[l * self.b + slot] = 0;
+        }
+        Some(slot)
+    }
+
+    pub fn free_slot(&mut self, slot: usize) {
+        self.used[slot] = false;
+        // Zero the slot's rows so stale data can never leak into another
+        // request even if lens bookkeeping were wrong.
+        for l in 0..self.l {
+            let re = self.row_elems();
+            let base = self.base(l, slot, 0);
+            self.k.data[base..base + self.c * re].fill(0.0);
+            self.v.data[base..base + self.c * re].fill(0.0);
+            self.lens[l * self.b + slot] = 0;
+        }
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.used.iter().filter(|u| !**u).count()
+    }
+
+    /// Load a request's compressed cache into `slot`.
+    pub fn load(&mut self, slot: usize, cache: &RequestCache) {
+        assert!(self.used[slot], "load into unallocated slot");
+        assert_eq!(cache.k.len(), self.l);
+        let re = self.row_elems();
+        for l in 0..self.l {
+            let len = cache.lens[l];
+            assert!(
+                len <= self.c,
+                "cache len {len} exceeds arena capacity {}",
+                self.c
+            );
+            let base = self.base(l, slot, 0);
+            self.k.data[base..base + len * re]
+                .copy_from_slice(&cache.k[l][..len * re]);
+            self.v.data[base..base + len * re]
+                .copy_from_slice(&cache.v[l][..len * re]);
+            // Clear any leftover rows above len.
+            self.k.data[base + len * re..base + self.c * re].fill(0.0);
+            self.v.data[base + len * re..base + self.c * re].fill(0.0);
+            self.lens[l * self.b + slot] = len as i32;
+        }
+    }
+
+    /// Append the decode step's new KV (k_new/v_new: [L, B, KV, hd]) for
+    /// `slot` and bump its lens. Returns false (no-op) if any layer is at
+    /// capacity.
+    pub fn append(
+        &mut self,
+        slot: usize,
+        k_new: &HostTensor,
+        v_new: &HostTensor,
+    ) -> bool {
+        let re = self.row_elems();
+        for l in 0..self.l {
+            if self.lens[l * self.b + slot] as usize >= self.c {
+                return false;
+            }
+        }
+        for l in 0..self.l {
+            let len = self.lens[l * self.b + slot] as usize;
+            let base = self.base(l, slot, len);
+            let src = &k_new.row2(l, slot)[..re];
+            self.k.data[base..base + re].copy_from_slice(src);
+            let src = &v_new.row2(l, slot)[..re];
+            self.v.data[base..base + re].copy_from_slice(src);
+            self.lens[l * self.b + slot] += 1;
+        }
+        true
+    }
+
+    pub fn lens_tensor(&self) -> crate::tensor::HostTensorI32 {
+        crate::tensor::HostTensorI32::new(
+            vec![self.l, self.b],
+            self.lens.clone(),
+        )
+    }
+
+    pub fn slot_len(&self, slot: usize) -> usize {
+        self.lens[slot] as usize // layer 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            vocab_size: 256,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 2,
+            head_dim: 2,
+            tsp_layer: 1,
+            window: 2,
+            pool_kernel: 3,
+            max_train_len: 64,
+        }
+    }
+
+    fn kv_src(l: usize, n: usize, kv: usize, hd: usize) -> HostTensor {
+        // element value encodes (layer, token, group, dim) uniquely
+        let mut data = Vec::with_capacity(l * n * kv * hd);
+        for li in 0..l {
+            for t in 0..n {
+                for g in 0..kv {
+                    for d in 0..hd {
+                        data.push(
+                            (li * 1000 + t * 10 + g * 2 + d) as f32,
+                        );
+                    }
+                }
+            }
+        }
+        HostTensor::new(vec![l, n, kv, hd], data)
+    }
+
+    #[test]
+    fn fill_layer_gathers_rows() {
+        let m = meta();
+        let k = kv_src(2, 4, 2, 2);
+        let v = kv_src(2, 4, 2, 2);
+        let mut rc = RequestCache::new(&m);
+        rc.fill_layer(0, &k, &v, 0, &[1, 3]);
+        assert_eq!(rc.lens[0], 2);
+        // token 1, group 0 => values 10,11 ; group 1 => 12,13
+        assert_eq!(&rc.k[0][..4], &[10.0, 11.0, 12.0, 13.0]);
+        // token 3 row
+        assert_eq!(&rc.k[0][4..8], &[30.0, 31.0, 32.0, 33.0]);
+    }
+
+    #[test]
+    fn groupwise_fill_uses_per_group_tokens() {
+        let m = meta();
+        let k = kv_src(2, 4, 2, 2);
+        let v = kv_src(2, 4, 2, 2);
+        let mut rc = RequestCache::new(&m);
+        rc.fill_layer_grouped(1, &k, &v, 1, &[vec![0, 2], vec![1, 3]]);
+        // slot 0: group0 from token0 (layer1 => 1000+0+0,1) group1 from
+        // token1 (1000+10+2,3)
+        assert_eq!(&rc.k[1][..4], &[1000.0, 1001.0, 1012.0, 1013.0]);
+    }
+
+    #[test]
+    fn arena_slot_lifecycle() {
+        let m = meta();
+        let mut arena = BatchArena::new(&m, 2, 4);
+        let s0 = arena.alloc_slot().unwrap();
+        let s1 = arena.alloc_slot().unwrap();
+        assert_eq!((s0, s1), (0, 1));
+        assert!(arena.alloc_slot().is_none());
+        arena.free_slot(s0);
+        assert_eq!(arena.alloc_slot(), Some(0));
+    }
+
+    #[test]
+    fn arena_load_and_append() {
+        let m = meta();
+        let k = kv_src(2, 4, 2, 2);
+        let v = kv_src(2, 4, 2, 2);
+        let mut rc = RequestCache::new(&m);
+        rc.fill_layer(0, &k, &v, 0, &[0, 2]);
+        rc.fill_layer(1, &k, &v, 1, &[1]);
+        let mut arena = BatchArena::new(&m, 2, 4);
+        let slot = arena.alloc_slot().unwrap();
+        arena.load(slot, &rc);
+        assert_eq!(arena.lens[slot], 2); // layer 0
+        assert_eq!(arena.lens[1 * 2 + slot], 1); // layer 1
+
+        // append new rows for both layers
+        let k_new = HostTensor::new(
+            vec![2, 2, 2, 2],
+            (0..16).map(|x| x as f32).collect(),
+        );
+        let v_new = k_new.clone();
+        assert!(arena.append(slot, &k_new, &v_new));
+        assert_eq!(arena.lens[slot], 3);
+        assert_eq!(arena.lens[2 + slot], 2);
+        // layer 0 slot row 2 should hold k_new[0, slot]
+        let re = arena.row_elems();
+        let base = ((0 * 2 + slot) * 4 + 2) * re;
+        assert_eq!(
+            &arena.k.data[base..base + 4],
+            k_new.row2(0, slot)
+        );
+    }
+
+    #[test]
+    fn append_stops_at_capacity() {
+        let m = meta();
+        let mut arena = BatchArena::new(&m, 1, 2);
+        let slot = arena.alloc_slot().unwrap();
+        let k_new = HostTensor::zeros(vec![2, 1, 2, 2]);
+        assert!(arena.append(slot, &k_new, &k_new));
+        assert!(arena.append(slot, &k_new, &k_new));
+        assert!(!arena.append(slot, &k_new, &k_new));
+    }
+
+    #[test]
+    fn free_slot_zeroes_data() {
+        let m = meta();
+        let mut arena = BatchArena::new(&m, 1, 2);
+        let slot = arena.alloc_slot().unwrap();
+        let k_new = HostTensor::new(
+            vec![2, 1, 2, 2],
+            (1..=8).map(|x| x as f32).collect(),
+        );
+        arena.append(slot, &k_new, &k_new);
+        arena.free_slot(slot);
+        assert!(arena.k.data.iter().all(|&x| x == 0.0));
+        assert_eq!(arena.lens, vec![0, 0]);
+    }
+}

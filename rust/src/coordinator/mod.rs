@@ -1,0 +1,15 @@
+//! L3 coordinator: the paper's system contribution.
+//!
+//! * `policies`  — FastKV + the five baselines (prefill plans + KV
+//!   selection); all Eq. 1-2 selection math lives in `selection`.
+//! * `kvcache`   — compressed per-request caches and the decode batch
+//!   arena (artifact-layout staging).
+//! * `engine`    — single-request generate loop (evals/benches).
+//! * `scheduler` + `server` — the continuous-batching serving stack.
+
+pub mod engine;
+pub mod kvcache;
+pub mod policies;
+pub mod scheduler;
+pub mod selection;
+pub mod server;

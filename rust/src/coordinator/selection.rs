@@ -1,0 +1,276 @@
+//! Token-saliency selection: the paper's Eq. 1–2 machinery.
+//!
+//! All selection runs host-side in the coordinator (L3): the artifacts
+//! export raw per-head score summaries (`win`, `acc`) and the policies
+//! reduce them — head/group averaging, max-pooling (kernel 7), top-k with
+//! forced inclusion of the observation window — exactly as
+//! `KVCompress`/`HiddenCompress` in the paper's Algorithm 1.
+
+/// Mean over heads: scores [H, N] (row-major) -> [N].  (Eq. 2)
+pub fn head_mean(scores: &[f32], h: usize, n: usize) -> Vec<f32> {
+    assert_eq!(scores.len(), h * n);
+    let mut out = vec![0.0f32; n];
+    for hi in 0..h {
+        let row = &scores[hi * n..(hi + 1) * n];
+        for (o, s) in out.iter_mut().zip(row) {
+            *o += s;
+        }
+    }
+    let inv = 1.0 / h as f32;
+    out.iter_mut().for_each(|x| *x *= inv);
+    out
+}
+
+/// Mean over the query heads of one GQA group: scores [H, N], group `g`
+/// covers heads [g*groups, (g+1)*groups).  (paper: "averaging head-wise
+/// saliency values within each key-value group")
+pub fn group_mean(
+    scores: &[f32],
+    h: usize,
+    n: usize,
+    kv_heads: usize,
+    g: usize,
+) -> Vec<f32> {
+    assert_eq!(scores.len(), h * n);
+    let groups = h / kv_heads;
+    let mut out = vec![0.0f32; n];
+    for hi in g * groups..(g + 1) * groups {
+        let row = &scores[hi * n..(hi + 1) * n];
+        for (o, s) in out.iter_mut().zip(row) {
+            *o += s;
+        }
+    }
+    let inv = 1.0 / groups as f32;
+    out.iter_mut().for_each(|x| *x *= inv);
+    out
+}
+
+/// 1-d max-pool, stride 1, 'same' padding (paper kernel size 7).  Matches
+/// `kernels/ref.maxpool1d_ref` and torch `MaxPool1d(k, 1, k//2)`.
+pub fn maxpool1d(x: &[f32], kernel: usize) -> Vec<f32> {
+    assert!(kernel % 2 == 1, "kernel must be odd");
+    let pad = kernel / 2;
+    let n = x.len();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let lo = i.saturating_sub(pad);
+        let hi = (i + pad + 1).min(n);
+        let m = x[lo..hi].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        out.push(m);
+    }
+    out
+}
+
+/// Top-`k` indices of `scores[..n_valid]`, with `forced` indices always
+/// included (the observation window), result sorted ascending (causal
+/// order). `k` counts the total selected including forced entries.
+pub fn top_k_with_forced(
+    scores: &[f32],
+    n_valid: usize,
+    k: usize,
+    forced: &[usize],
+) -> Vec<usize> {
+    let n_valid = n_valid.min(scores.len());
+    let k = k.min(n_valid);
+    let mut is_forced = vec![false; n_valid];
+    let mut n_forced = 0;
+    for &f in forced {
+        if f < n_valid && !is_forced[f] {
+            is_forced[f] = true;
+            n_forced += 1;
+        }
+    }
+    let mut sel: Vec<usize> = (0..n_valid).filter(|&i| is_forced[i]).collect();
+    if k > n_forced {
+        let mut rest: Vec<usize> =
+            (0..n_valid).filter(|&i| !is_forced[i]).collect();
+        let take = (k - n_forced).min(rest.len());
+        // Partial selection: O(n) select_nth + sort of the winning prefix.
+        if take > 0 && take < rest.len() {
+            rest.select_nth_unstable_by(take - 1, |&a, &b| {
+                scores[b]
+                    .partial_cmp(&scores[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            rest.truncate(take);
+        }
+        sel.extend(rest.into_iter().take(take));
+    } else {
+        sel.truncate(k);
+    }
+    sel.sort_unstable();
+    sel
+}
+
+/// The observation-window indices: the last `window` valid positions.
+pub fn window_indices(n_valid: usize, window: usize) -> Vec<usize> {
+    (n_valid.saturating_sub(window)..n_valid).collect()
+}
+
+/// Full Eq. 1-2 TSP / SnapKV-style selection from raw win scores [H, N]:
+/// head-mean -> max-pool -> top-k ∪ window, ascending.
+pub fn select_salient(
+    win: &[f32],
+    h: usize,
+    n: usize,
+    n_valid: usize,
+    k: usize,
+    window: usize,
+    pool_kernel: usize,
+) -> Vec<usize> {
+    let s = head_mean(win, h, n);
+    let s = maxpool1d(&s, pool_kernel);
+    top_k_with_forced(&s, n_valid, k, &window_indices(n_valid, window))
+}
+
+/// Group-wise KV selection (`KVCompress`): one index set per KV head.
+pub fn select_kv_groupwise(
+    win: &[f32],
+    h: usize,
+    n: usize,
+    n_valid: usize,
+    kv_heads: usize,
+    k: usize,
+    window: usize,
+    pool_kernel: usize,
+) -> Vec<Vec<usize>> {
+    let forced = window_indices(n_valid, window);
+    (0..kv_heads)
+        .map(|g| {
+            let s = group_mean(win, h, n, kv_heads, g);
+            let s = maxpool1d(&s, pool_kernel);
+            top_k_with_forced(&s, n_valid, k, &forced)
+        })
+        .collect()
+}
+
+/// StreamingLLM selection: attention sinks (first `sinks`) + most recent.
+pub fn select_streaming(
+    n_valid: usize,
+    k: usize,
+    sinks: usize,
+) -> Vec<usize> {
+    let k = k.min(n_valid);
+    let sinks = sinks.min(k);
+    let recent = k - sinks;
+    let mut sel: Vec<usize> = (0..sinks.min(n_valid)).collect();
+    sel.extend(n_valid.saturating_sub(recent)..n_valid);
+    sel.dedup();
+    // sinks may overlap recent for tiny prompts
+    sel.sort_unstable();
+    sel.dedup();
+    sel.truncate(k);
+    sel
+}
+
+/// H2O selection: accumulated attention scores (no pooling) + recent
+/// window, per the heavy-hitter oracle.
+pub fn select_h2o(
+    acc: &[f32],
+    h: usize,
+    n: usize,
+    n_valid: usize,
+    k: usize,
+    window: usize,
+) -> Vec<usize> {
+    let s = head_mean(acc, h, n);
+    top_k_with_forced(&s, n_valid, k, &window_indices(n_valid, window))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_mean_basic() {
+        // H=2, N=3
+        let s = [1.0, 2.0, 3.0, 3.0, 4.0, 5.0];
+        assert_eq!(head_mean(&s, 2, 3), vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn group_mean_splits_heads() {
+        // H=4, KV=2, N=2: group 0 = heads 0,1; group 1 = heads 2,3
+        let s = [1.0, 1.0, 3.0, 3.0, 10.0, 10.0, 20.0, 20.0];
+        assert_eq!(group_mean(&s, 4, 2, 2, 0), vec![2.0, 2.0]);
+        assert_eq!(group_mean(&s, 4, 2, 2, 1), vec![15.0, 15.0]);
+    }
+
+    #[test]
+    fn maxpool_same_padding() {
+        let x = [0.0, 5.0, 0.0, 0.0, 0.0, 0.0, 1.0];
+        assert_eq!(maxpool1d(&x, 3), vec![5., 5., 5., 0., 0., 1., 1.]);
+    }
+
+    #[test]
+    fn topk_respects_forced_and_order() {
+        let scores = [0.9, 0.1, 0.8, 0.2, 0.7];
+        // k=3 with forced {3}: top scores 0.9@0, 0.8@2 + forced 3
+        assert_eq!(top_k_with_forced(&scores, 5, 3, &[3]), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn topk_ignores_padding() {
+        let scores = [0.1, 0.2, 0.9, 100.0];
+        // n_valid=3 masks index 3 despite its huge score
+        assert_eq!(top_k_with_forced(&scores, 3, 2, &[]), vec![1, 2]);
+    }
+
+    #[test]
+    fn topk_k_exceeds_valid() {
+        assert_eq!(top_k_with_forced(&[1.0, 2.0], 2, 10, &[]), vec![0, 1]);
+    }
+
+    #[test]
+    fn topk_all_forced() {
+        // window bigger than k: truncates to k forced entries
+        let sel = top_k_with_forced(&[0.0; 8], 8, 2, &[4, 5, 6, 7]);
+        assert_eq!(sel.len(), 2);
+        assert!(sel.iter().all(|&i| (4..8).contains(&i)));
+    }
+
+    #[test]
+    fn select_salient_prefers_pooled_neighborhood() {
+        // One spike at index 5; pooling (k=3) spreads it to 4..=6, so with
+        // k=4 and window size 1 (forcing index 7) we expect {4,5,6,7}.
+        let n = 8;
+        let mut win = vec![0.0f32; 2 * n];
+        win[5] = 1.0; // head 0
+        win[n + 5] = 1.0; // head 1
+        let sel = select_salient(&win, 2, n, n, 4, 1, 3);
+        assert_eq!(sel, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn groupwise_selection_differs_per_group() {
+        // H=2, KV=2 (1 head per group), N=4; head 0 loves idx 0,
+        // head 1 loves idx 2. window=1 forces idx 3.
+        let win = [1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0];
+        let sel = select_kv_groupwise(&win, 2, 4, 4, 2, 2, 1, 1);
+        assert_eq!(sel[0], vec![0, 3]);
+        assert_eq!(sel[1], vec![2, 3]);
+    }
+
+    #[test]
+    fn streaming_sinks_plus_recent() {
+        assert_eq!(select_streaming(100, 6, 2), vec![0, 1, 96, 97, 98, 99]);
+        // degenerate small prompt
+        assert_eq!(select_streaming(3, 6, 2), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn h2o_keeps_heavy_hitters_and_recent() {
+        let n = 6;
+        let mut acc = vec![0.0f32; n];
+        acc[1] = 9.0;
+        let sel = select_h2o(&acc, 1, n, n, 3, 2);
+        assert_eq!(sel, vec![1, 4, 5]);
+    }
+
+    #[test]
+    fn window_indices_clamps() {
+        assert_eq!(window_indices(3, 8), vec![0, 1, 2]);
+        assert_eq!(window_indices(10, 2), vec![8, 9]);
+    }
+}

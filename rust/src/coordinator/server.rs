@@ -1,0 +1,395 @@
+//! The serving coordinator: a continuous-batching inference server.
+//!
+//! One serving thread owns the (non-Send) PJRT runtime and drives the
+//! loop: admit → prefill (policy compresses KV) → batched decode steps →
+//! retire. Clients submit prompts from any thread through `ServerHandle`
+//! and receive a `Response` on a per-request channel.
+//!
+//! This is the deployment shape the paper targets ("readily compatible
+//! with modern serving frameworks ... orthogonal to batching and paged
+//! attention"): FastKV (or any baseline policy) plugs in as the prefill /
+//! KV-compression stage, and the decode batcher sees only compressed
+//! caches.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::engine::decode_cap_for;
+use crate::coordinator::kvcache::BatchArena;
+use crate::coordinator::policies::{make_policy, Exec, PolicyCfg};
+use crate::coordinator::scheduler::{Action, AdmitOrder, Scheduler};
+use crate::manifest::Manifest;
+use crate::metrics::Metrics;
+use crate::runtime::outputs::DecodeOut;
+use crate::runtime::Runtime;
+use crate::tensor::HostTensorI32;
+use crate::tokenizer::END;
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifact_dir: std::path::PathBuf,
+    pub policy: String,
+    pub policy_cfg: PolicyCfg,
+    /// Decode batch size (must be one of the compiled decode buckets).
+    pub decode_batch: usize,
+    /// Max tokens generated per request.
+    pub max_new: usize,
+    /// Largest prompt admitted (bucket-limited).
+    pub max_prompt: usize,
+    pub order: AdmitOrder,
+}
+
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    submitted: Instant,
+    reply: mpsc::Sender<Response>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub ttft_secs: f64,
+    pub e2e_secs: f64,
+    pub prefill_secs: f64,
+    pub decode_steps: usize,
+    pub error: Option<String>,
+}
+
+enum Msg {
+    Submit(Request),
+    Shutdown,
+}
+
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Msg>,
+    next_id: Arc<std::sync::atomic::AtomicU64>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl ServerHandle {
+    /// Submit a prompt; returns a receiver for the final response.
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+    ) -> Result<(u64, mpsc::Receiver<Response>)> {
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit(Request {
+                id,
+                prompt,
+                max_new,
+                submitted: Instant::now(),
+                reply,
+            }))
+            .map_err(|_| anyhow::anyhow!("server thread gone"))?;
+        Ok((id, rx))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+pub struct Server {
+    handle: ServerHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+struct Active {
+    req: Request,
+    slot: usize,
+    tokens: Vec<i32>,
+    cur: i32,
+    pos: usize,
+    prefill_secs: f64,
+    ttft_secs: f64,
+    done: bool,
+}
+
+impl Server {
+    pub fn spawn(cfg: ServerConfig) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("fastkv-server".into())
+            .spawn(move || serve_loop(cfg, rx, m2, ready_tx))?;
+        ready_rx.recv()??;
+        Ok(Server {
+            handle: ServerHandle {
+                tx,
+                next_id: Arc::new(std::sync::atomic::AtomicU64::new(1)),
+                metrics,
+            },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.handle.shutdown();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn serve_loop(
+    cfg: ServerConfig,
+    rx: mpsc::Receiver<Msg>,
+    metrics: Arc<Metrics>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let rt = match Runtime::new(&cfg.artifact_dir) {
+        Ok(rt) => {
+            let _ = ready.send(Ok(()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    if let Err(e) = serve_inner(&cfg, &rt, rx, &metrics) {
+        eprintln!("[server] fatal: {e:#}");
+    }
+}
+
+fn serve_inner(
+    cfg: &ServerConfig,
+    rt: &Runtime,
+    rx: mpsc::Receiver<Msg>,
+    metrics: &Metrics,
+) -> Result<()> {
+    let man = rt.manifest.clone();
+    let policy = make_policy(&cfg.policy)?;
+    // Worst-case cache: full-context policy keeps max_prompt entries.
+    let worst = match cfg.policy.as_str() {
+        "full" => cfg.max_prompt,
+        "pyramid_infer" => cfg.max_prompt,
+        _ => cfg
+            .policy_cfg
+            .kv_budget(cfg.max_prompt, man.model.window)
+            .max(cfg.policy_cfg.tsp_count(cfg.max_prompt, man.model.window)),
+    };
+    let cap = decode_cap_for(&man, worst, cfg.max_new)?;
+    let b = cfg.decode_batch;
+    anyhow::ensure!(
+        man.buckets.decode_batches.contains(&b),
+        "decode batch {b} not compiled (buckets: {:?})",
+        man.buckets.decode_batches
+    );
+    let artifact = format!("decode_{b}x{cap}");
+    let mut arena = BatchArena::new(&man.model, b, cap);
+    let mut sched: Scheduler<Request> = Scheduler::new(b, cfg.order);
+    let mut active: Vec<Active> = Vec::new();
+    let mut shutdown = false;
+
+    while !(shutdown && sched.queue_len() == 0 && active.is_empty()) {
+        // Drain incoming messages (non-blocking if we have work).
+        loop {
+            let msg = if active.is_empty() && sched.queue_len() == 0 {
+                if shutdown {
+                    break;
+                }
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            };
+            match msg {
+                Msg::Submit(r) => {
+                    metrics.inc("submitted", 1);
+                    sched.enqueue(r);
+                }
+                Msg::Shutdown => shutdown = true,
+            }
+        }
+        if shutdown && sched.queue_len() == 0 && active.is_empty() {
+            break;
+        }
+
+        match sched.next_action(active.len()) {
+            Action::Prefill => {
+                let req = sched.pop_next(|r| r.prompt.len()).unwrap();
+                match admit(rt, &man, policy.as_ref(), cfg, req, &mut arena) {
+                    Ok(a) => {
+                        metrics.observe("prefill_secs", a.prefill_secs);
+                        active.push(a);
+                    }
+                    Err((req, e)) => {
+                        metrics.inc("rejected", 1);
+                        let _ = req.reply.send(Response {
+                            id: req.id,
+                            tokens: vec![],
+                            ttft_secs: 0.0,
+                            e2e_secs: req.submitted.elapsed().as_secs_f64(),
+                            prefill_secs: 0.0,
+                            decode_steps: 0,
+                            error: Some(format!("{e:#}")),
+                        });
+                    }
+                }
+            }
+            Action::DecodeStep => {
+                decode_step(rt, &artifact, &mut arena, &mut active, metrics)?;
+                // Retire finished requests.
+                let mut i = 0;
+                while i < active.len() {
+                    if active[i].done
+                        || active[i].tokens.len() >= active[i].max_new()
+                    {
+                        let a = active.swap_remove(i);
+                        arena.free_slot(a.slot);
+                        metrics.inc("completed", 1);
+                        metrics.observe(
+                            "e2e_secs",
+                            a.req.submitted.elapsed().as_secs_f64(),
+                        );
+                        metrics.observe("ttft_secs", a.ttft_secs);
+                        metrics
+                            .inc("tokens_out", a.tokens.len() as u64);
+                        let _ = a.req.reply.send(Response {
+                            id: a.req.id,
+                            tokens: a.tokens,
+                            ttft_secs: a.ttft_secs,
+                            e2e_secs: a.req.submitted.elapsed().as_secs_f64(),
+                            prefill_secs: a.prefill_secs,
+                            decode_steps: a.pos,
+                            error: None,
+                        });
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            Action::Idle => {}
+        }
+    }
+    Ok(())
+}
+
+impl Active {
+    fn max_new(&self) -> usize {
+        self.req.max_new
+    }
+}
+
+fn admit(
+    rt: &Runtime,
+    man: &Manifest,
+    policy: &dyn crate::coordinator::policies::Policy,
+    cfg: &ServerConfig,
+    req: Request,
+    arena: &mut BatchArena,
+) -> std::result::Result<Active, (Request, anyhow::Error)> {
+    if req.prompt.len() > cfg.max_prompt {
+        return Err((
+            req,
+            anyhow::anyhow!("prompt exceeds max_prompt {}", cfg.max_prompt),
+        ));
+    }
+    let t0 = Instant::now();
+    let pre =
+        match policy.prefill(rt, man, &req.prompt, &cfg.policy_cfg) {
+            Ok(p) => p,
+            Err(e) => return Err((req, e)),
+        };
+    let prefill_secs = t0.elapsed().as_secs_f64();
+    let slot = match arena.alloc_slot() {
+        Some(s) => s,
+        None => return Err((req, anyhow::anyhow!("no free decode slot"))),
+    };
+    arena.load(slot, &pre.cache);
+    let ttft = req.submitted.elapsed().as_secs_f64();
+    Ok(Active {
+        pos: pre.next_pos,
+        cur: pre.first_token,
+        tokens: vec![pre.first_token],
+        slot,
+        req,
+        prefill_secs,
+        ttft_secs: ttft,
+        done: pre.first_token == END as i32,
+    })
+}
+
+fn decode_step(
+    rt: &Runtime,
+    artifact: &str,
+    arena: &mut BatchArena,
+    active: &mut [Active],
+    metrics: &Metrics,
+) -> Result<()> {
+    let b = arena.b;
+    let mut toks = vec![0i32; b];
+    let mut poss = vec![0i32; b];
+    for a in active.iter() {
+        toks[a.slot] = a.cur;
+        poss[a.slot] = a.pos as i32;
+    }
+    let t0 = Instant::now();
+    let out = DecodeOut::from_vec(
+        Exec::run(
+            rt,
+            artifact,
+            vec![
+                HostTensorI32::new(vec![b], toks).into(),
+                HostTensorI32::new(vec![b], poss).into(),
+                arena.k.clone().into(),
+                arena.v.clone().into(),
+                arena.lens_tensor().into(),
+            ],
+        )
+        .context("decode step")?,
+    );
+    metrics.observe("decode_step_secs", t0.elapsed().as_secs_f64());
+
+    for a in active.iter_mut() {
+        if !arena.append(a.slot, &out.k_new, &out.v_new) {
+            a.done = true;
+            continue;
+        }
+        a.pos += 1;
+        let logits = out.logits.row(a.slot);
+        let next = logits
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0);
+        if next == END as i32 {
+            a.done = true;
+        } else {
+            a.cur = next;
+            a.tokens.push(next);
+        }
+    }
+    Ok(())
+}

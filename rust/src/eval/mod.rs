@@ -1,0 +1,118 @@
+//! Evaluation: answer scoring, suite runners, and paper-style reports.
+
+pub mod runner;
+pub mod report;
+
+/// Character-level F1 between generated and reference answer bytes —
+/// the analog of LongBench's token-F1 for our byte-level tasks.
+pub fn char_f1(pred: &[u8], truth: &[u8]) -> f64 {
+    if pred.is_empty() || truth.is_empty() {
+        return if pred == truth { 1.0 } else { 0.0 };
+    }
+    let mut truth_counts = [0i32; 256];
+    for &b in truth {
+        truth_counts[b as usize] += 1;
+    }
+    let mut overlap = 0i32;
+    let mut pred_counts = [0i32; 256];
+    for &b in pred {
+        pred_counts[b as usize] += 1;
+    }
+    for i in 0..256 {
+        overlap += pred_counts[i].min(truth_counts[i]);
+    }
+    if overlap == 0 {
+        return 0.0;
+    }
+    let p = overlap as f64 / pred.len() as f64;
+    let r = overlap as f64 / truth.len() as f64;
+    2.0 * p * r / (p + r)
+}
+
+/// Exact match (RULER/NIAH-style accuracy).
+pub fn exact(pred: &[u8], truth: &[u8]) -> f64 {
+    if pred == truth {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Normalized edit similarity (code tasks' Edit-Sim analog).
+pub fn edit_sim(pred: &[u8], truth: &[u8]) -> f64 {
+    let d = levenshtein(pred, truth);
+    let m = pred.len().max(truth.len());
+    if m == 0 {
+        1.0
+    } else {
+        1.0 - d as f64 / m as f64
+    }
+}
+
+pub fn levenshtein(a: &[u8], b: &[u8]) -> usize {
+    let n = b.len();
+    let mut prev: Vec<usize> = (0..=n).collect();
+    let mut cur = vec![0usize; n + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let cost = if ca == cb { 0 } else { 1 };
+            cur[j + 1] =
+                (prev[j] + cost).min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[n]
+}
+
+/// The scoring metric each subtask uses (mirrors the paper's Table 5;
+/// retrieval tasks score char-F1 — partial credit — because the tiny
+/// build-time-trained substrate rarely emits byte-exact answers, and the
+/// paper's claim structure is the *ranking* of methods, which F1 exposes
+/// at much lower sample counts than exact match).
+pub fn metric_for(task: &str) -> fn(&[u8], &[u8]) -> f64 {
+    match task {
+        "fn_return" => edit_sim,
+        "passage_count" | "fwe" => exact,
+        _ => char_f1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f1_basics() {
+        assert_eq!(char_f1(b"abc", b"abc"), 1.0);
+        assert_eq!(char_f1(b"", b""), 1.0);
+        assert_eq!(char_f1(b"xyz", b"abc"), 0.0);
+        let f = char_f1(b"ab", b"abcd");
+        assert!((f - 2.0 * (1.0 * 0.5) / 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein(b"kitten", b"sitting"), 3);
+        assert_eq!(levenshtein(b"", b"abc"), 3);
+        assert_eq!(levenshtein(b"abc", b"abc"), 0);
+    }
+
+    #[test]
+    fn edit_sim_bounds() {
+        assert_eq!(edit_sim(b"abc", b"abc"), 1.0);
+        assert_eq!(edit_sim(b"", b""), 1.0);
+        assert!(edit_sim(b"abcd", b"wxyz") <= 0.0 + 1e-9);
+    }
+
+    #[test]
+    fn metric_dispatch() {
+        // counting tasks are exact-match; retrieval tasks give partial
+        // credit (char F1); code tasks use edit similarity
+        assert_eq!(metric_for("passage_count")(b"3", b"3"), 1.0);
+        assert_eq!(metric_for("passage_count")(b"34", b"3"), 0.0);
+        assert!(metric_for("niah")(b"ab", b"a") > 0.0);
+        assert!(metric_for("narrative_kv")(b"ab", b"abcd") > 0.0);
+        assert!(metric_for("fn_return")(b"abc", b"abd") > 0.5);
+    }
+}

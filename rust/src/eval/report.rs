@@ -1,0 +1,93 @@
+//! Paper-style table renderers (markdown) for the eval/bench CLIs.
+
+use std::fmt::Write as _;
+
+/// Render a markdown table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> =
+        headers.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        let _ = write!(out, "|");
+        for (i, c) in cells.iter().enumerate() {
+            let w = widths.get(i).copied().unwrap_or(c.len());
+            let _ = write!(out, " {c:w$} |");
+        }
+        let _ = writeln!(out);
+    };
+    line(
+        &mut out,
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+    );
+    let sep: Vec<String> =
+        widths.iter().map(|w| "-".repeat(*w)).collect();
+    line(&mut out, &sep);
+    for r in rows {
+        line(&mut out, r);
+    }
+    out
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.0}%", 100.0 * x)
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn ms(secs: f64) -> String {
+    format!("{:.1}", secs * 1e3)
+}
+
+/// Pretty method names matching the paper's tables.
+pub fn method_label(name: &str) -> &'static str {
+    match name {
+        "full" => "Full-context",
+        "streaming_llm" => "StreamingLLM",
+        "h2o" => "H2O",
+        "snapkv" => "SnapKV",
+        "gemfilter" => "GemFilter",
+        "pyramid_infer" => "PyramidInfer",
+        "fastkv" => "FastKV",
+        _ => "?",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let t = table(
+            &["Method", "Score"],
+            &[
+                vec!["FastKV".into(), "48.4".into()],
+                vec!["Full-context".into(), "50.1".into()],
+            ],
+        );
+        assert!(t.contains("| FastKV"));
+        assert!(t.contains("| Method"));
+        assert_eq!(t.lines().count(), 4);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(pct(0.6), "60%");
+        assert_eq!(f2(1.234), "1.23");
+        assert_eq!(ms(0.0123), "12.3");
+        assert_eq!(method_label("fastkv"), "FastKV");
+    }
+}

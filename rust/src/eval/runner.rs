@@ -1,0 +1,211 @@
+//! Suite runners: drive (policy × workload) through the engine and
+//! aggregate scores + latency, producing the rows of the paper's tables.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::engine::{generate, GenStats};
+use crate::coordinator::policies::{make_policy, Exec, PolicyCfg};
+use crate::manifest::Manifest;
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+use crate::workload::{longbench, niah, ruler, Sample};
+
+/// Aggregated outcome for one (policy, task, length) cell.
+#[derive(Debug, Clone, Default)]
+pub struct Cell {
+    pub score_sum: f64,
+    pub n: usize,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    pub decode_steps: usize,
+    pub compute_tokens: usize,
+    pub full_compute_tokens: usize,
+    pub cache_elems: usize,
+    pub full_cache_elems: usize,
+}
+
+impl Cell {
+    pub fn score(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            100.0 * self.score_sum / self.n as f64
+        }
+    }
+
+    pub fn prefill_rate(&self) -> f64 {
+        if self.full_compute_tokens == 0 {
+            1.0
+        } else {
+            self.compute_tokens as f64 / self.full_compute_tokens as f64
+        }
+    }
+
+    pub fn kv_rate(&self) -> f64 {
+        if self.full_cache_elems == 0 {
+            1.0
+        } else {
+            self.cache_elems as f64 / self.full_cache_elems as f64
+        }
+    }
+
+    fn absorb(&mut self, score: f64, stats: &GenStats, layers: usize) {
+        self.score_sum += score;
+        self.n += 1;
+        self.prefill_secs += stats.prefill_secs;
+        self.decode_secs += stats.decode_secs;
+        self.decode_steps += stats.decode_steps;
+        self.compute_tokens += stats.compute_tokens;
+        self.full_compute_tokens += layers * stats.prompt_tokens;
+        self.cache_elems += stats.cache_elems;
+        // full cache: prompt_tokens rows per layer
+        self.full_cache_elems += 2 * layers * stats.prompt_tokens;
+    }
+}
+
+pub struct EvalConfig {
+    pub policy_cfg: PolicyCfg,
+    pub samples_per_task: usize,
+    pub max_new: usize,
+    pub seed: u64,
+}
+
+/// Run one sample through a policy; returns (score, stats).
+pub fn run_sample(
+    ex: &dyn Exec,
+    man: &Manifest,
+    policy_name: &str,
+    cfg: &PolicyCfg,
+    sample: &Sample,
+    max_new: usize,
+) -> Result<(f64, GenStats)> {
+    let tok = Tokenizer;
+    let policy = make_policy(policy_name)?;
+    let ids = tok.encode(&sample.prompt);
+    let out = generate(ex, man, policy.as_ref(), cfg, &ids, max_new)?;
+    let pred = tok.decode_answer(&out.tokens);
+    let score = (crate::eval::metric_for(sample.task))(&pred, &sample.answer);
+    Ok((score, out.stats))
+}
+
+/// LongBench-analog: per-category cells for one policy.
+pub fn run_longbench(
+    ex: &dyn Exec,
+    man: &Manifest,
+    policy: &str,
+    ec: &EvalConfig,
+    len: usize,
+) -> Result<BTreeMap<String, Cell>> {
+    let mut cells: BTreeMap<String, Cell> = BTreeMap::new();
+    for (cat, subs) in longbench::CATEGORIES {
+        for sub in *subs {
+            let mut rng = Rng::new(ec.seed ^ hash_name(sub));
+            for _ in 0..ec.samples_per_task {
+                let s = longbench::sample(&mut rng, sub, len);
+                let (score, stats) = run_sample(
+                    ex, man, policy, &ec.policy_cfg, &s, ec.max_new,
+                )?;
+                cells
+                    .entry(cat.to_string())
+                    .or_default()
+                    .absorb(score, &stats, man.model.n_layers);
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// RULER-analog: per-length average for one policy.
+pub fn run_ruler(
+    ex: &dyn Exec,
+    man: &Manifest,
+    policy: &str,
+    ec: &EvalConfig,
+    lengths: &[usize],
+) -> Result<BTreeMap<usize, Cell>> {
+    let mut cells: BTreeMap<usize, Cell> = BTreeMap::new();
+    for &len in lengths {
+        for task in ruler::TASKS {
+            let mut rng = Rng::new(ec.seed ^ hash_name(task) ^ len as u64);
+            for _ in 0..ec.samples_per_task {
+                let s = ruler::sample(&mut rng, task, len);
+                let (score, stats) = run_sample(
+                    ex, man, policy, &ec.policy_cfg, &s, ec.max_new,
+                )?;
+                cells
+                    .entry(len)
+                    .or_default()
+                    .absorb(score, &stats, man.model.n_layers);
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// NIAH grid: overall score + per-(len,depth) matrix for one policy.
+pub fn run_niah(
+    ex: &dyn Exec,
+    man: &Manifest,
+    policy: &str,
+    ec: &EvalConfig,
+    lengths: &[usize],
+    depths: usize,
+) -> Result<(Cell, Vec<(usize, f64, f64)>)> {
+    let mut total = Cell::default();
+    let mut grid_scores = Vec::new();
+    for (len, depth) in niah::grid(lengths, depths) {
+        let mut rng =
+            Rng::new(ec.seed ^ (len as u64) ^ (depth * 1000.0) as u64);
+        let mut cell = Cell::default();
+        for _ in 0..ec.samples_per_task {
+            let s = niah::sample(&mut rng, len, depth);
+            let (score, stats) =
+                run_sample(ex, man, policy, &ec.policy_cfg, &s, ec.max_new)?;
+            cell.absorb(score, &stats, man.model.n_layers);
+            total.absorb(score, &stats, man.model.n_layers);
+        }
+        grid_scores.push((len, depth, cell.score()));
+    }
+    Ok((total, grid_scores))
+}
+
+fn hash_name(s: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_aggregation() {
+        let mut c = Cell::default();
+        let stats = GenStats {
+            prefill_secs: 0.5,
+            decode_secs: 1.0,
+            decode_steps: 10,
+            prompt_tokens: 100,
+            compute_tokens: 480,
+            cache_elems: 200,
+            decode_cap: 128,
+        };
+        c.absorb(1.0, &stats, 8);
+        c.absorb(0.0, &stats, 8);
+        assert_eq!(c.score(), 50.0);
+        assert!((c.prefill_rate() - 480.0 / 800.0).abs() < 1e-9);
+        assert!((c.kv_rate() - 200.0 / 1600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn name_hash_distinct() {
+        assert_ne!(hash_name("a"), hash_name("b"));
+    }
+}

@@ -1,0 +1,32 @@
+//! FastKV — reproduction of "FastKV: Decoupling of Context Reduction and
+//! KV Cache Compression for Prefill-Decoding Acceleration" as a
+//! three-layer Rust + JAX + Pallas serving stack.
+//!
+//! Layers:
+//!  * L1 (Pallas, build-time python): fused attention + saliency kernel —
+//!    `python/compile/kernels/`.
+//!  * L2 (JAX, build-time python): GQA decoder AOT-lowered to HLO text —
+//!    `python/compile/model.py` + `aot.py`.
+//!  * L3 (this crate): PJRT runtime, compression policies (FastKV + 5
+//!    baselines), KV-cache manager, continuous-batching server, eval &
+//!    bench harnesses.
+//!
+//! Quick start (after `make artifacts`): see `examples/quickstart.rs`.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod eval;
+pub mod manifest;
+pub mod metrics;
+pub mod runtime;
+pub mod tensor;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+pub use coordinator::engine::{generate, GenResult, GenStats};
+pub use coordinator::policies::{
+    make_policy, Policy, PolicyCfg, ALL_POLICIES,
+};
+pub use manifest::Manifest;
+pub use runtime::Runtime;

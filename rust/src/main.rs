@@ -1,0 +1,833 @@
+//! `fastkv` CLI — leader entrypoint.
+//!
+//! Subcommands (each regenerates a paper exhibit; see DESIGN.md index):
+//!   run      — generate from a prompt with a chosen policy
+//!   eval     — longbench | ruler | niah accuracy suites (Tables 2/3/4)
+//!   analyze  — fig1a | fig1b | fig3 mechanism analyses
+//!   ablate   — tsp-rate | tsp-layer | grid | layer-grid (Fig 5, Tab 9/10)
+//!   bench    — latency breakdown across context lengths (Fig 4/9)
+//!   overhead — token-importance estimation overhead (Table 8)
+//!   info     — manifest / artifact inventory
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use fastkv::analysis;
+use fastkv::coordinator::engine::generate;
+use fastkv::coordinator::policies::{
+    make_policy, Exec, PolicyCfg, ALL_POLICIES,
+};
+use fastkv::eval::report::{self, method_label, table};
+use fastkv::eval::runner::{self, EvalConfig};
+use fastkv::manifest::Manifest;
+use fastkv::runtime::outputs::{PrefillFullOut, SweepOut};
+use fastkv::runtime::{In, Runtime};
+use fastkv::tensor::HostTensorI32;
+use fastkv::tokenizer::Tokenizer;
+use fastkv::util::cli::Args;
+use fastkv::util::rng::Rng;
+use fastkv::workload;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let res = match cmd {
+        "run" => cmd_run(&args),
+        "eval" => cmd_eval(&args),
+        "analyze" => cmd_analyze(&args),
+        "ablate" => cmd_ablate(&args),
+        "bench" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
+        "overhead" => cmd_overhead(&args),
+        "info" => cmd_info(&args),
+        "help" | _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = res {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "fastkv — FastKV reproduction CLI\n\
+         \n\
+         USAGE: fastkv <cmd> [--flags]\n\
+         \n\
+         cmds:\n\
+         \x20 run      --policy fastkv --len 256 [--kv-rate 0.1] [--tsp-rate 0.2]\n\
+         \x20 eval     longbench|ruler|niah [--methods a,b] [--samples N] [--len N]\n\
+         \x20 analyze  fig1a|fig1b|fig3 [--len N] [--topk K]\n\
+         \x20 ablate   tsp-rate|tsp-layer|grid|layer-grid [--samples N]\n\
+         \x20 bench    [--lens 256,512,1024] [--methods ...] [--gen 64]\n\
+         \x20 serve    [--policy fastkv] [--requests 16] [--rate 4] [--trace poisson|bursty]\n\
+         \x20 overhead [--lens 256,512,1024]\n\
+         \x20 info\n\
+         \n\
+         common flags: --artifacts DIR (default ./artifacts), --seed N"
+    );
+}
+
+fn open_runtime(args: &Args) -> Result<Runtime> {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    Runtime::new(&dir)
+}
+
+fn policy_cfg(args: &Args, man: &Manifest) -> PolicyCfg {
+    let mut cfg = PolicyCfg::default_for(man);
+    cfg.kv_rate = args.f64("kv-rate", cfg.kv_rate);
+    cfg.tsp_rate = args.f64("tsp-rate", cfg.tsp_rate);
+    cfg.sinks = args.usize("sinks", cfg.sinks);
+    cfg.filter_layer = args.usize("filter-layer", cfg.filter_layer);
+    cfg.use_pallas = args.has("pallas");
+    cfg
+}
+
+// ---------------------------------------------------------------- run
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let man = rt.manifest.clone();
+    let cfg = policy_cfg(args, &man);
+    let policy = make_policy(args.str_or("policy", "fastkv"))?;
+    let len = args.usize("len", 256);
+    let max_new = args.usize("gen", 24);
+    let tok = Tokenizer;
+
+    let mut rng = Rng::new(args.usize("seed", 0) as u64);
+    let sample = workload::kv_recall(&mut rng, len, None, 1);
+    let ids = tok.encode(&sample.prompt);
+    let out = generate(&rt, &man, policy.as_ref(), &cfg, &ids, max_new)?;
+    let pred = tok.decode_answer(&out.tokens);
+
+    println!("policy        : {}", policy.name());
+    println!("prompt tokens : {}", len);
+    println!("expected      : {}", tok.render(&sample.answer));
+    println!("generated     : {}", tok.render(&pred));
+    println!(
+        "prefill       : {:.1} ms  (compute rate {})",
+        out.stats.prefill_secs * 1e3,
+        report::pct(
+            out.stats.compute_tokens as f64
+                / (man.model.n_layers * len) as f64
+        )
+    );
+    println!(
+        "decode        : {:.1} ms over {} steps ({:.1} ms/tok)",
+        out.stats.decode_secs * 1e3,
+        out.stats.decode_steps,
+        out.stats.decode_secs * 1e3 / out.stats.decode_steps.max(1) as f64
+    );
+    println!(
+        "kv cache      : {} f32 elems (cap bucket {})",
+        out.stats.cache_elems, out.stats.decode_cap
+    );
+    if args.has("stats") {
+        let s = rt.stats();
+        println!(
+            "\nruntime: {} compiles ({:.2}s), {} execs ({:.2}s)",
+            s.compiles, s.compile_secs, s.executions, s.execute_secs
+        );
+        for (name, (n, secs)) in &s.per_artifact {
+            println!(
+                "  {name:24} n={n:4}  total {:8.1} ms  mean {:7.2} ms",
+                secs * 1e3,
+                secs * 1e3 / *n as f64
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- eval
+
+fn methods_from(args: &Args) -> Vec<String> {
+    args.str_list("methods", ALL_POLICIES)
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("longbench");
+    let rt = open_runtime(args)?;
+    let man = rt.manifest.clone();
+    let ec = EvalConfig {
+        policy_cfg: policy_cfg(args, &man),
+        samples_per_task: args.usize("samples", 10),
+        max_new: args.usize("gen", 16),
+        seed: args.usize("seed", 0) as u64,
+    };
+    let methods = methods_from(args);
+    match which {
+        "longbench" => {
+            let len = args.usize("len", 512);
+            let mut rows = Vec::new();
+            for m in &methods {
+                let cells = runner::run_longbench(&rt, &man, m, &ec, len)?;
+                let mut row = vec![method_label(m).to_string()];
+                let pr = cells
+                    .values()
+                    .map(|c| c.prefill_rate())
+                    .sum::<f64>()
+                    / cells.len() as f64;
+                let kv = cells.values().map(|c| c.kv_rate()).sum::<f64>()
+                    / cells.len() as f64;
+                row.push(report::pct(pr));
+                row.push(report::pct(kv));
+                let mut avg = 0.0;
+                for (cat, _) in workload::longbench::CATEGORIES {
+                    let c = &cells[*cat];
+                    row.push(report::f1(c.score()));
+                    avg += c.score();
+                }
+                row.push(report::f1(
+                    avg / workload::longbench::CATEGORIES.len() as f64,
+                ));
+                rows.push(row);
+                eprintln!("  {m} done");
+            }
+            let mut headers =
+                vec!["Method", "Prefill", "KV"];
+            for (cat, _) in workload::longbench::CATEGORIES {
+                headers.push(cat);
+            }
+            headers.push("Avg");
+            println!("\n# LongBench-analog (len {len}, {} samples/task, kv_rate {})\n",
+                     ec.samples_per_task, ec.policy_cfg.kv_rate);
+            println!("{}", table(&headers, &rows));
+        }
+        "ruler" => {
+            let lens = args.usize_list("lens", &[128, 256, 512]);
+            let mut rows = Vec::new();
+            for m in &methods {
+                let cells = runner::run_ruler(&rt, &man, m, &ec, &lens)?;
+                let mut row = vec![method_label(m).to_string()];
+                let mut avg = 0.0;
+                for l in &lens {
+                    let c = &cells[l];
+                    row.push(report::f1(c.score()));
+                    avg += c.score();
+                }
+                row.push(report::f1(avg / lens.len() as f64));
+                rows.push(row);
+                eprintln!("  {m} done");
+            }
+            let mut headers: Vec<String> = vec!["Method".into()];
+            headers.extend(lens.iter().map(|l| l.to_string()));
+            headers.push("Avg".into());
+            let h: Vec<&str> = headers.iter().map(String::as_str).collect();
+            println!("\n# RULER-analog (kv_rate {})\n", ec.policy_cfg.kv_rate);
+            println!("{}", table(&h, &rows));
+        }
+        "niah" => {
+            let lens = args.usize_list("lens", &[128, 256, 512]);
+            let depths = args.usize("depths", 5);
+            let mut rows = Vec::new();
+            for m in &methods {
+                let (total, grid) =
+                    runner::run_niah(&rt, &man, m, &ec, &lens, depths)?;
+                rows.push(vec![
+                    method_label(m).to_string(),
+                    report::f1(total.score()),
+                ]);
+                if args.has("grid") {
+                    println!("\n## {m} grid (len, depth, score)");
+                    for (l, d, s) in grid {
+                        println!("{l:6} {d:4.2} {s:6.1}");
+                    }
+                }
+                eprintln!("  {m} done");
+            }
+            println!("\n# Needle-in-a-Haystack (kv_rate {})\n",
+                     ec.policy_cfg.kv_rate);
+            println!("{}", table(&["Method", "Score"], &rows));
+        }
+        other => bail!("unknown eval suite `{other}`"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- analyze
+
+fn prefill_full_probe(
+    rt: &Runtime,
+    man: &Manifest,
+    len: usize,
+    seed: u64,
+) -> Result<(PrefillFullOut, Vec<i32>)> {
+    let mut rng = Rng::new(seed);
+    let s = workload::kv_recall(&mut rng, len, None, 2);
+    let tok = Tokenizer;
+    let ids = tok.encode(&s.prompt);
+    let b = fastkv::util::bucket_for(len, &man.buckets.prefill_ns)
+        .context("len exceeds buckets")?;
+    let mut padded = ids.clone();
+    padded.resize(b, 0);
+    let out = Exec::run(
+        rt,
+        &format!("prefill_full_{b}"),
+        vec![
+            HostTensorI32::new(vec![b], padded).into(),
+            In::scalar_i32(len as i32),
+        ],
+    )?;
+    Ok((PrefillFullOut::from_vec(out), ids))
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("fig1a");
+    let rt = open_runtime(args)?;
+    let man = rt.manifest.clone();
+    let len = args.usize("len", 512);
+    let seed = args.usize("seed", 0) as u64;
+    match which {
+        "fig1a" => {
+            // paper: top-512 of 128K (0.4%); here scale top-k to ~12.5%
+            let topk = args.usize("topk", len / 8);
+            let reps = args.usize("reps", 4);
+            let split = man.model.tsp_layer;
+            // (early_sum, early_n, late_sum, late_n) per distance
+            let mut agg: BTreeMap<usize, (f64, usize, f64, usize)> =
+                BTreeMap::new();
+            for r in 0..reps {
+                let (out, _) = prefill_full_probe(&rt, &man, len, seed + r as u64)?;
+                let sets = analysis::critical_sets(&out.acc, len, topk);
+                for (d, em, lm) in
+                    analysis::overlap_by_distance(&sets, split)
+                {
+                    let e = agg.entry(d).or_insert((0.0, 0, 0.0, 0));
+                    if !em.is_nan() {
+                        e.0 += em;
+                        e.1 += 1;
+                    }
+                    if !lm.is_nan() {
+                        e.2 += lm;
+                        e.3 += 1;
+                    }
+                }
+            }
+            println!("\n# Fig 1(a): critical-token overlap vs layer distance (top-{topk}, len {len})\n");
+            let rows: Vec<Vec<String>> = agg
+                .iter()
+                .map(|(d, (es, en, ls, ln))| {
+                    let fmt = |sum: f64, n: usize| {
+                        if n == 0 {
+                            "-".to_string()
+                        } else {
+                            report::f2(sum / n as f64)
+                        }
+                    };
+                    vec![d.to_string(), fmt(*es, *en), fmt(*ls, *ln)]
+                })
+                .collect();
+            println!(
+                "{}",
+                table(
+                    &[
+                        "layer distance",
+                        &format!("early layers (<{split})"),
+                        &format!("late layers (>={split})"),
+                    ],
+                    &rows
+                )
+            );
+        }
+        "fig1b" => {
+            let reps = args.usize("reps", 4);
+            let ks = args.usize_list("ks", &[4, 16, 64, len / 8]);
+            let mut rows = Vec::new();
+            let mut recalls: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+            for r in 0..reps {
+                let (out, _) =
+                    prefill_full_probe(&rt, &man, len, seed + r as u64)?;
+                for &k in &ks {
+                    let rec = analysis::topk_recall(&out.acc, len, k);
+                    recalls.entry(k).or_default().extend(rec);
+                }
+            }
+            for (k, v) in &recalls {
+                let per_layer = v.len() / man.model.n_layers.max(1);
+                let _ = per_layer;
+                let (m, _) = fastkv::util::mean_std(v);
+                rows.push(vec![
+                    k.to_string(),
+                    format!("{:.1}%", 100.0 * m),
+                ]);
+            }
+            println!("\n# Fig 1(b): top-K attention recall (len {len}, mean over layers x {reps} prompts)\n");
+            println!("{}", table(&["K", "recall"], &rows));
+        }
+        "fig3" => {
+            let n = man.buckets.sweep_n;
+            let nt = man.buckets.sweep_nt;
+            let reps = args.usize("reps", 4);
+            let mut rows = Vec::new();
+            let mut tsp_d: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+            let mut gem_d: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+            for r in 0..reps {
+                let (full, ids) =
+                    prefill_full_probe(&rt, &man, n, seed + r as u64)?;
+                for t in 1..man.model.n_layers {
+                    // TSP at layer t (in-HLO artifact)
+                    let mut padded = ids.clone();
+                    padded.resize(n, 0);
+                    let sw = SweepOut::from_vec(Exec::run(
+                        &rt,
+                        &format!("sweep_tsp_l{t}_{n}"),
+                        vec![
+                            HostTensorI32::new(vec![n], padded).into(),
+                            In::scalar_i32(n as i32),
+                        ],
+                    )?);
+                    tsp_d.entry(t).or_default().push(
+                        analysis::hidden_distance(
+                            &full.final_h.data,
+                            &sw.final_h.data,
+                        ),
+                    );
+                    // GemFilter-like: select top-nt at layer t, re-prefill
+                    let keep = fastkv::coordinator::selection::select_salient(
+                        full.win.row(t.saturating_sub(1)),
+                        man.model.n_heads,
+                        full.win.shape[2],
+                        n,
+                        nt,
+                        man.model.window,
+                        man.model.pool_kernel,
+                    );
+                    let sel: Vec<i32> =
+                        keep.iter().map(|&i| ids[i]).collect();
+                    let b2 = fastkv::util::bucket_for(
+                        sel.len(),
+                        &man.buckets.prefill_ns,
+                    )
+                    .unwrap();
+                    let mut p2 = sel.clone();
+                    p2.resize(b2, 0);
+                    let gf = PrefillFullOut::from_vec(Exec::run(
+                        &rt,
+                        &format!("prefill_full_{b2}"),
+                        vec![
+                            HostTensorI32::new(vec![b2], p2).into(),
+                            In::scalar_i32(sel.len() as i32),
+                        ],
+                    )?);
+                    gem_d.entry(t).or_default().push(
+                        analysis::hidden_distance(
+                            &full.final_h.data,
+                            &gf.final_h.data,
+                        ),
+                    );
+                }
+            }
+            for t in 1..man.model.n_layers {
+                rows.push(vec![
+                    t.to_string(),
+                    report::f2(fastkv::util::mean_std(&tsp_d[&t]).0),
+                    report::f2(fastkv::util::mean_std(&gem_d[&t]).0),
+                ]);
+            }
+            println!("\n# Fig 3: normalized L2 distance of final hidden state vs full-context (len {n}, keep {nt})\n");
+            println!(
+                "{}",
+                table(&["TSP/filter layer", "TSP", "GemFilter-like"], &rows)
+            );
+        }
+        other => bail!("unknown analysis `{other}`"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- ablate
+
+fn cmd_ablate(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("tsp-rate");
+    let rt = open_runtime(args)?;
+    let man = rt.manifest.clone();
+    let base = EvalConfig {
+        policy_cfg: policy_cfg(args, &man),
+        samples_per_task: args.usize("samples", 6),
+        max_new: args.usize("gen", 16),
+        seed: args.usize("seed", 0) as u64,
+    };
+    let len = args.usize("len", 512);
+
+    // Score = mean over the longbench categories (matches Fig 5 y-axis).
+    let score_with = |cfg: &PolicyCfg, policy: &str| -> Result<(f64, f64)> {
+        let ec = EvalConfig {
+            policy_cfg: cfg.clone(),
+            samples_per_task: base.samples_per_task,
+            max_new: base.max_new,
+            seed: base.seed,
+        };
+        let cells = runner::run_longbench(&rt, &man, policy, &ec, len)?;
+        let avg = cells.values().map(|c| c.score()).sum::<f64>()
+            / cells.len() as f64;
+        let prefill: f64 = cells.values().map(|c| c.prefill_secs).sum();
+        let n: usize = cells.values().map(|c| c.n).sum();
+        Ok((avg, prefill / n as f64))
+    };
+
+    match which {
+        "tsp-rate" => {
+            let rates = [0.05, 0.1, 0.2, 0.3, 0.5];
+            let mut rows = Vec::new();
+            for r in rates {
+                let mut cfg = base.policy_cfg.clone();
+                cfg.tsp_rate = r;
+                let (score, pf) = score_with(&cfg, "fastkv")?;
+                rows.push(vec![
+                    format!("{r}"),
+                    report::f1(score),
+                    report::ms(pf),
+                ]);
+                eprintln!("  tsp_rate {r} done");
+            }
+            println!("\n# Fig 5(a): TSP rate ablation (kv_rate {}, len {len})\n", base.policy_cfg.kv_rate);
+            println!(
+                "{}",
+                table(&["TSP rate", "LongBench avg", "prefill ms"], &rows)
+            );
+        }
+        "tsp-layer" => {
+            // Uses the in-HLO sweep artifacts for prefill-latency and the
+            // logit-path quality proxy; full generate quality via fastkv
+            // needs per-layer stage artifacts, so this ablation reports
+            // the Fig 5(b) latency curve + the Fig 3 distance curve.
+            bail!("use `analyze fig3` (distance curve) and `ablate layer-grid` (accuracy grid)");
+        }
+        "grid" => {
+            // Table 9: TSP rate x KV retention.
+            let tsps = args_f64_list(args, "tsp-rates", &[0.1, 0.2, 0.3]);
+            let kvs = args_f64_list(args, "kv-rates", &[0.1, 0.2, 0.3]);
+            let mut rows = Vec::new();
+            for t in &tsps {
+                let mut row = vec![format!("{t}")];
+                for k in &kvs {
+                    if k > t {
+                        row.push("-".into());
+                        continue;
+                    }
+                    let mut cfg = base.policy_cfg.clone();
+                    cfg.tsp_rate = *t;
+                    cfg.kv_rate = *k;
+                    let (score, _) = score_with(&cfg, "fastkv")?;
+                    row.push(report::f1(score));
+                }
+                rows.push(row);
+                eprintln!("  tsp {t} done");
+            }
+            let mut headers = vec!["TSP \\ KV".to_string()];
+            headers.extend(kvs.iter().map(|k| k.to_string()));
+            let h: Vec<&str> = headers.iter().map(String::as_str).collect();
+            println!("\n# Table 9: TSP rate x KV retention (len {len})\n");
+            println!("{}", table(&h, &rows));
+        }
+        "layer-grid" => {
+            // Table 10 analog via the sweep artifacts: teacher-forced
+            // first-token agreement with full-context across layers/rates
+            // is produced by analyze fig3; here we report fastkv accuracy
+            // with the compiled TSP layer but varying rates (the compiled
+            // stage boundary is fixed at build time).
+            let tsps = args_f64_list(
+                args,
+                "tsp-rates",
+                &[0.1, 0.2, 0.3, 0.5],
+            );
+            let mut rows = Vec::new();
+            for t in &tsps {
+                let mut cfg = base.policy_cfg.clone();
+                cfg.tsp_rate = *t;
+                let (score, pf) = score_with(&cfg, "fastkv")?;
+                rows.push(vec![
+                    format!("{t}"),
+                    report::f1(score),
+                    report::ms(pf),
+                ]);
+                eprintln!("  tsp {t} done");
+            }
+            println!("\n# Table 10 (rate axis at compiled TSP layer {}; layer axis => analyze fig3)\n", man.model.tsp_layer);
+            println!(
+                "{}",
+                table(&["TSP rate", "LongBench avg", "prefill ms"], &rows)
+            );
+        }
+        other => bail!("unknown ablation `{other}`"),
+    }
+    Ok(())
+}
+
+fn args_f64_list(args: &Args, key: &str, default: &[f64]) -> Vec<f64> {
+    match args.get(key) {
+        None => default.to_vec(),
+        Some(v) => v
+            .split(',')
+            .map(|s| s.trim().parse().expect("bad float list"))
+            .collect(),
+    }
+}
+
+// ---------------------------------------------------------------- bench
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let man = rt.manifest.clone();
+    let cfg = policy_cfg(args, &man);
+    let lens = args.usize_list("lens", &[256, 512, 1024]);
+    let methods = methods_from(args);
+    let gen = args.usize("gen", 32);
+    let reps = args.usize("reps", 3);
+    let tok = Tokenizer;
+
+    println!("\n# Fig 4/9: end-to-end latency breakdown (gen {gen} tokens, {reps} reps)\n");
+    let mut rows = Vec::new();
+    for &len in &lens {
+        for m in &methods {
+            let policy = match make_policy(m) {
+                Ok(p) => p,
+                Err(_) => continue,
+            };
+            let mut pf = Vec::new();
+            let mut dc = Vec::new();
+            let mut steps = 0usize;
+            let mut ok = true;
+            // untimed warmup: compiles all artifacts this config touches
+            {
+                let mut rng = Rng::new(999);
+                let s = workload::kv_recall(&mut rng, len, None, 1);
+                let ids = tok.encode(&s.prompt);
+                if let Err(e) =
+                    generate(&rt, &man, policy.as_ref(), &cfg, &ids, gen)
+                {
+                    eprintln!("  {m}@{len}: {e}");
+                    ok = false;
+                }
+            }
+            for r in 0..reps {
+                if !ok {
+                    break;
+                }
+                let mut rng = Rng::new(r as u64);
+                let s = workload::kv_recall(&mut rng, len, None, 1);
+                let ids = tok.encode(&s.prompt);
+                match generate(&rt, &man, policy.as_ref(), &cfg, &ids, gen)
+                {
+                    Ok(out) => {
+                        pf.push(out.stats.prefill_secs);
+                        dc.push(out.stats.decode_secs);
+                        steps += out.stats.decode_steps;
+                    }
+                    Err(e) => {
+                        eprintln!("  {m}@{len}: {e}");
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok || pf.is_empty() {
+                rows.push(vec![
+                    len.to_string(),
+                    method_label(m).to_string(),
+                    "OOM/unsupported".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                continue;
+            }
+            let (pm, _) = fastkv::util::mean_std(&pf);
+            let (dm, _) = fastkv::util::mean_std(&dc);
+            let per_tok = dc.iter().sum::<f64>() / steps.max(1) as f64;
+            rows.push(vec![
+                len.to_string(),
+                method_label(m).to_string(),
+                report::ms(pm),
+                report::ms(per_tok),
+                report::ms(pm + dm),
+            ]);
+            eprintln!("  {m}@{len} done");
+        }
+    }
+    println!(
+        "{}",
+        table(
+            &[
+                "ctx len",
+                "Method",
+                "prefill ms",
+                "decode ms/tok",
+                "total ms",
+            ],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------- serve
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use fastkv::coordinator::scheduler::AdmitOrder;
+    use fastkv::coordinator::server::{Server, ServerConfig};
+    use fastkv::workload::traces::{self, ArrivalKind};
+
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    let man = Manifest::load(&dir)?;
+    let mut policy_cfg = policy_cfg(args, &man);
+    policy_cfg.use_pallas = false;
+    let len = args.usize("len", 256);
+    let n = args.usize("requests", 16);
+    let rate = args.f64("rate", 4.0);
+    let kind = match args.str_or("trace", "poisson") {
+        "bursty" => ArrivalKind::Bursty,
+        _ => ArrivalKind::Poisson,
+    };
+    let order = match args.str_or("order", "fcfs") {
+        "shortest" => AdmitOrder::ShortestFirst,
+        _ => AdmitOrder::Fcfs,
+    };
+    let cfg = ServerConfig {
+        artifact_dir: dir,
+        policy: args.str_or("policy", "fastkv").to_string(),
+        policy_cfg,
+        decode_batch: args.usize("batch", 4),
+        max_new: args.usize("gen", 16),
+        max_prompt: len,
+        order,
+    };
+    println!(
+        "serving trace: {n} reqs, {rate} req/s ({:?}), policy {}, batch {}",
+        kind, cfg.policy, cfg.decode_batch
+    );
+    let server = Server::spawn(cfg)?;
+    let handle = server.handle();
+    let trace = traces::generate(
+        args.usize("seed", 0) as u64,
+        n,
+        rate,
+        &[len],
+        args.usize("gen", 16),
+        kind,
+    );
+    let tok = Tokenizer;
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for ev in &trace {
+        let wait = ev.at - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+        }
+        let ids = tok.encode(&ev.sample.prompt);
+        let (_, rx) = handle.submit(ids, ev.max_new)?;
+        rxs.push(rx);
+    }
+    let mut tokens = 0usize;
+    let mut errors = 0usize;
+    for rx in rxs {
+        let r = rx.recv()?;
+        if r.error.is_some() {
+            errors += 1;
+        }
+        tokens += r.tokens.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\ndone: {n} requests, {errors} errors, {:.1} tok/s out, {:.2}s wall",
+        tokens as f64 / wall,
+        wall
+    );
+    println!("\n{}", handle.metrics.report());
+    Ok(())
+}
+
+// ---------------------------------------------------------------- overhead
+
+fn cmd_overhead(args: &Args) -> Result<()> {
+    // Table 8: the saliency summaries are fused into the attention kernel,
+    // so the "estimation" cost is the coordinator-side selection (head
+    // mean + pool + top-k). We time prefill vs selection explicitly.
+    let rt = open_runtime(args)?;
+    let man = rt.manifest.clone();
+    let lens = args.usize_list("lens", &[256, 512, 1024]);
+    let reps = args.usize("reps", 5);
+    let mut rows = Vec::new();
+    for &len in &lens {
+        let mut prefill = Vec::new();
+        let mut estimate = Vec::new();
+        for r in 0..reps {
+            let t0 = std::time::Instant::now();
+            let (out, _) =
+                prefill_full_probe(&rt, &man, len, r as u64)?;
+            prefill.push(t0.elapsed().as_secs_f64());
+            let t1 = std::time::Instant::now();
+            let budget = (0.1 * len as f64).ceil() as usize;
+            for l in 0..man.model.n_layers {
+                let _ = fastkv::coordinator::selection::select_kv_groupwise(
+                    out.win.row(l),
+                    man.model.n_heads,
+                    out.win.shape[2],
+                    len,
+                    man.model.n_kv_heads,
+                    budget,
+                    man.model.window,
+                    man.model.pool_kernel,
+                );
+            }
+            estimate.push(t1.elapsed().as_secs_f64());
+        }
+        let (pm, ps) = fastkv::util::mean_std(&prefill);
+        let (em, es) = fastkv::util::mean_std(&estimate);
+        rows.push(vec![
+            len.to_string(),
+            format!("{:.1} ± {:.1}", pm * 1e3, ps * 1e3),
+            format!("{:.3} ± {:.3}", em * 1e3, es * 1e3),
+            format!("{:.2}%", 100.0 * em / (pm + em)),
+        ]);
+    }
+    println!("\n# Table 8: token-importance estimation overhead\n");
+    println!(
+        "{}",
+        table(
+            &["ctx len", "prefill ms", "estimation ms", "overhead"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------- info
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    let man = Manifest::load(&dir)?;
+    println!("model: {:?}", man.model);
+    println!("params: {}", man.n_params);
+    println!("kernel: {}", man.kernel);
+    println!("buckets: {:?}", man.buckets);
+    println!("artifacts ({}):", man.artifacts.len());
+    for (name, a) in &man.artifacts {
+        println!(
+            "  {name:28} kind={:14} n={:5} batch={} cap={}",
+            a.kind, a.n, a.batch, a.cap
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,226 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Architecture of the compiled model (mirrors `configs.ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub tsp_layer: usize,
+    pub window: usize,
+    pub pool_kernel: usize,
+    pub max_train_len: usize,
+}
+
+/// Shape buckets the artifacts were compiled for.
+#[derive(Debug, Clone)]
+pub struct Buckets {
+    pub prefill_ns: Vec<usize>,
+    pub stage1_ns: Vec<usize>,
+    pub stage2_ns: Vec<usize>,
+    pub pyramid_ns: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+    pub decode_caps: Vec<usize>,
+    pub sweep_n: usize,
+    pub sweep_nt: usize,
+    pub pallas_n: usize,
+    pub max_gen: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub n: usize,
+    pub batch: usize,
+    pub cap: usize,
+    pub tsp_layer: usize,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub n_params: usize,
+    pub kernel: String,
+    pub buckets: Buckets,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn sigs(v: &Value) -> Vec<TensorSig> {
+    v.as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|e| TensorSig {
+            shape: e.req("shape").usize_arr(),
+            dtype: e.req("dtype").as_str().unwrap_or("float32").to_string(),
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let v = Value::parse(&text)
+            .with_context(|| format!("parsing {path:?}"))?;
+
+        let m = v.req("model");
+        let model = ModelMeta {
+            vocab_size: m.req("vocab_size").as_usize().unwrap(),
+            d_model: m.req("d_model").as_usize().unwrap(),
+            n_layers: m.req("n_layers").as_usize().unwrap(),
+            n_heads: m.req("n_heads").as_usize().unwrap(),
+            n_kv_heads: m.req("n_kv_heads").as_usize().unwrap(),
+            head_dim: m.req("head_dim").as_usize().unwrap(),
+            tsp_layer: m.req("tsp_layer").as_usize().unwrap(),
+            window: m.req("window").as_usize().unwrap(),
+            pool_kernel: m.req("pool_kernel").as_usize().unwrap(),
+            max_train_len: m.req("max_train_len").as_usize().unwrap(),
+        };
+
+        let b = v.req("buckets");
+        let buckets = Buckets {
+            prefill_ns: b.req("prefill_ns").usize_arr(),
+            stage1_ns: b.req("stage1_ns").usize_arr(),
+            stage2_ns: b.req("stage2_ns").usize_arr(),
+            pyramid_ns: b.req("pyramid_ns").usize_arr(),
+            decode_batches: b.req("decode_batches").usize_arr(),
+            decode_caps: b.req("decode_caps").usize_arr(),
+            sweep_n: b.req("sweep_n").as_usize().unwrap(),
+            sweep_nt: b.req("sweep_nt").as_usize().unwrap(),
+            pallas_n: b.req("pallas_n").as_usize().unwrap(),
+            max_gen: b.req("max_gen").as_usize().unwrap(),
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for a in v.req("artifacts").as_arr().unwrap_or(&[]) {
+            let meta = ArtifactMeta {
+                name: a.req("name").as_str().unwrap().to_string(),
+                file: a.req("file").as_str().unwrap().to_string(),
+                kind: a.req("kind").as_str().unwrap().to_string(),
+                n: a.get("n").and_then(|x| x.as_usize()).unwrap_or(0),
+                batch: a.get("batch").and_then(|x| x.as_usize()).unwrap_or(1),
+                cap: a.get("cap").and_then(|x| x.as_usize()).unwrap_or(0),
+                tsp_layer: a
+                    .get("tsp_layer")
+                    .and_then(|x| x.as_usize())
+                    .unwrap_or(model.tsp_layer),
+                inputs: sigs(a.req("inputs")),
+                outputs: sigs(a.req("outputs")),
+            };
+            artifacts.insert(meta.name.clone(), meta);
+        }
+        if artifacts.is_empty() {
+            bail!("manifest {path:?} lists no artifacts");
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            n_params: v.req("n_params").as_usize().unwrap(),
+            kernel: v
+                .get("kernel")
+                .and_then(|k| k.as_str())
+                .unwrap_or("jnp")
+                .to_string(),
+            buckets,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact `{name}` not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Load the flat f32 weight vector.
+    pub fn load_weights(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join("weights.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != self.n_params * 4 {
+            bail!(
+                "weights.bin has {} bytes, expected {} ({} f32 params)",
+                bytes.len(),
+                self.n_params * 4,
+                self.n_params
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Default artifact dir: $FASTKV_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FASTKV_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("fastkv_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = r#"{
+          "model": {"vocab_size":256,"d_model":96,"n_layers":8,"n_heads":4,
+                    "n_kv_heads":2,"head_dim":24,"tsp_layer":4,"window":8,
+                    "pool_kernel":7,"max_train_len":512,"d_ffn":192,
+                    "rope_theta":10000.0,"norm_eps":1e-5,"gqa_groups":2},
+          "n_params": 10,
+          "kernel": "jnp",
+          "buckets": {"prefill_ns":[64,128],"stage1_ns":[256],
+                      "stage2_ns":[64],"pyramid_ns":[256],
+                      "decode_batches":[1,4],"decode_caps":[128],
+                      "sweep_n":256,"sweep_nt":64,"pallas_n":128,
+                      "max_gen":64},
+          "params": [],
+          "artifacts": [
+            {"name":"prefill_full_64","file":"prefill_full_64.hlo.txt",
+             "kind":"prefill_full","n":64,"layers":8,
+             "inputs":[{"shape":[10],"dtype":"float32"}],
+             "outputs":[{"shape":[256],"dtype":"float32"}]}
+          ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.n_layers, 8);
+        assert_eq!(m.buckets.decode_caps, vec![128]);
+        let a = m.artifact("prefill_full_64").unwrap();
+        assert_eq!(a.outputs[0].shape, vec![256]);
+        assert!(m.artifact("nope").is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Serving metrics: counters + latency histograms (log-bucketed), printed
+//! by the server and the bench harness.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Log-bucketed latency histogram (microsecond resolution).
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn record(&mut self, d: Duration) {
+        self.samples.push(d.as_secs_f64());
+    }
+
+    pub fn record_secs(&mut self, s: f64) {
+        self.samples.push(s);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        crate::util::mean_std(&self.samples).0
+    }
+
+    pub fn p(&self, pct: f64) -> f64 {
+        crate::util::percentile(&self.samples, pct)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn summary(&self) -> String {
+        if self.samples.is_empty() {
+            return "n=0".into();
+        }
+        format!(
+            "n={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms",
+            self.count(),
+            self.mean() * 1e3,
+            self.p(50.0) * 1e3,
+            self.p(95.0) * 1e3,
+            self.p(99.0) * 1e3,
+        )
+    }
+}
+
+/// Shared registry for the serving stack.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl Metrics {
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn observe(&self, name: &str, secs: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.histograms
+            .entry(name.to_string())
+            .or_default()
+            .record_secs(secs);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Histogram {
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .get(name)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    pub fn report(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, v) in &g.counters {
+            out.push_str(&format!("{k:32} {v}\n"));
+        }
+        for (k, h) in &g.histograms {
+            out.push_str(&format!("{k:32} {}\n", h.summary()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_histograms() {
+        let m = Metrics::default();
+        m.inc("requests", 2);
+        m.inc("requests", 3);
+        assert_eq!(m.counter("requests"), 5);
+        m.observe("latency", 0.010);
+        m.observe("latency", 0.020);
+        let h = m.histogram("latency");
+        assert_eq!(h.count(), 2);
+        assert!((h.mean() - 0.015).abs() < 1e-9);
+        assert!(m.report().contains("requests"));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.record_secs(i as f64);
+        }
+        assert!(h.p(50.0) <= h.p(95.0));
+        assert!(h.p(95.0) <= h.p(99.0));
+    }
+}

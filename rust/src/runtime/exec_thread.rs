@@ -1,0 +1,125 @@
+//! Executor thread: owns the (non-`Send`) PJRT runtime and serves execute
+//! requests over channels, so the threaded serving coordinator can call
+//! into PJRT from any thread.
+//!
+//! This is the substrate a GPU serving stack gets from CUDA streams; here
+//! the single executor thread also matches the paper's single-A100 testbed
+//! (one device, requests serialized onto it).
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::runtime::{In, Runtime, RuntimeStats};
+use crate::tensor::HostTensor;
+
+enum Msg {
+    Run {
+        name: String,
+        inputs: Vec<In>,
+        reply: mpsc::Sender<Result<Vec<HostTensor>>>,
+    },
+    Warmup {
+        names: Vec<String>,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Stats {
+        reply: mpsc::Sender<RuntimeStats>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle; all clones feed the same executor thread.
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+pub struct Executor {
+    handle: ExecutorHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Spawn the executor thread; fails fast if the runtime cannot load.
+    pub fn spawn(artifact_dir: PathBuf) -> Result<Executor> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("fastkv-executor".into())
+            .spawn(move || {
+                let rt = match Runtime::new(&artifact_dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Run { name, inputs, reply } => {
+                            let _ = reply.send(rt.run(&name, &inputs));
+                        }
+                        Msg::Warmup { names, reply } => {
+                            let refs: Vec<&str> =
+                                names.iter().map(|s| s.as_str()).collect();
+                            let _ = reply.send(rt.warmup(&refs));
+                        }
+                        Msg::Stats { reply } => {
+                            let _ = reply.send(rt.stats());
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx.recv()??;
+        Ok(Executor { handle: ExecutorHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> ExecutorHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl ExecutorHandle {
+    pub fn run(&self, name: &str, inputs: Vec<In>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Run { name: name.to_string(), inputs, reply })
+            .map_err(|_| anyhow::anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("executor dropped reply"))?
+    }
+
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Warmup {
+                names: names.iter().map(|s| s.to_string()).collect(),
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("executor dropped reply"))?
+    }
+
+    pub fn stats(&self) -> Result<RuntimeStats> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Stats { reply })
+            .map_err(|_| anyhow::anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("executor dropped reply"))
+    }
+}

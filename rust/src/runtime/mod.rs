@@ -1,0 +1,231 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts and executes them.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!
+//! Performance notes (EXPERIMENTS.md §Perf):
+//!  * executables are compiled once and cached (lazy, on first use);
+//!  * the flat weight vector (~2.8 MB) is transferred to a device buffer
+//!    once at startup and reused via `execute_b`, so the per-call host→
+//!    device traffic is only the small activations;
+//!  * PJRT objects hold raw pointers (`!Send`), so threaded callers go
+//!    through `exec_thread::ExecutorHandle` which owns the runtime on a
+//!    dedicated thread.
+
+pub mod exec_thread;
+pub mod outputs;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::manifest::Manifest;
+use crate::tensor::{HostTensor, HostTensorI32};
+
+/// One artifact input (f32 or i32 host tensor).
+#[derive(Debug, Clone)]
+pub enum In {
+    F32(HostTensor),
+    I32(HostTensorI32),
+}
+
+impl In {
+    pub fn scalar_i32(v: i32) -> In {
+        In::I32(HostTensorI32::scalar(v))
+    }
+}
+
+impl From<HostTensor> for In {
+    fn from(t: HostTensor) -> In {
+        In::F32(t)
+    }
+}
+
+impl From<HostTensorI32> for In {
+    fn from(t: HostTensorI32) -> In {
+        In::I32(t)
+    }
+}
+
+/// Cumulative executor statistics (exposed by the `stats` CLI).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+    pub per_artifact: BTreeMap<String, (usize, f64)>,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    weights: xla::PjRtBuffer,
+    weights_host: Vec<f32>,
+    exes: RefCell<BTreeMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e}"))?;
+        let weights_host = manifest.load_weights()?;
+        let weights = client
+            .buffer_from_host_buffer(&weights_host, &[weights_host.len()], None)
+            .map_err(|e| anyhow::anyhow!("weights upload: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            weights,
+            weights_host,
+            exes: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn weights_host(&self) -> &[f32] {
+        &self.weights_host
+    }
+
+    /// Compile (or fetch cached) an artifact executable.
+    fn executable(
+        &self,
+        name: &str,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("loading {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_secs += dt;
+        }
+        let rc = std::rc::Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Pre-compile a set of artifacts (warmup; avoids first-request jitter).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name`. `inputs` EXCLUDES the leading weight
+    /// vector (input 0), which is pinned on device. Returns one host
+    /// tensor per artifact output (f32 outputs only — all our artifacts
+    /// emit f32; integer outputs would extend `outputs.rs`).
+    pub fn run(&self, name: &str, inputs: &[In]) -> Result<Vec<HostTensor>> {
+        let meta = self.manifest.artifact(name)?.clone();
+        if inputs.len() + 1 != meta.inputs.len() {
+            bail!(
+                "{name}: got {} inputs, artifact takes {} (+weights)",
+                inputs.len(),
+                meta.inputs.len() - 1
+            );
+        }
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for (i, input) in inputs.iter().enumerate() {
+            let sig = &meta.inputs[i + 1];
+            let buf = match input {
+                In::F32(t) => {
+                    if t.shape != sig.shape {
+                        bail!(
+                            "{name} input {i}: shape {:?} != expected {:?}",
+                            t.shape,
+                            sig.shape
+                        );
+                    }
+                    self.client
+                        .buffer_from_host_buffer(&t.data, &t.shape, None)
+                }
+                In::I32(t) => {
+                    if t.shape != sig.shape {
+                        bail!(
+                            "{name} input {i}: shape {:?} != expected {:?}",
+                            t.shape,
+                            sig.shape
+                        );
+                    }
+                    self.client
+                        .buffer_from_host_buffer(&t.data, &t.shape, None)
+                }
+            }
+            .map_err(|e| anyhow::anyhow!("{name} input {i} upload: {e}"))?;
+            bufs.push(buf);
+        }
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(bufs.len() + 1);
+        args.push(&self.weights);
+        args.extend(bufs.iter());
+
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("{name} execute: {e}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{name} fetch: {e}"))?;
+        let parts = literal
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("{name} untuple: {e}"))?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "{name}: {} outputs, manifest says {}",
+                parts.len(),
+                meta.outputs.len()
+            );
+        }
+
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, sig) in parts.iter().zip(&meta.outputs) {
+            // Integer outputs (e.g. pyramid per-layer lens) are widened to
+            // f32 host-side; all values fit exactly.
+            let data = if sig.dtype.contains("int") {
+                lit.to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("{name} output fetch: {e}"))?
+                    .into_iter()
+                    .map(|x| x as f32)
+                    .collect()
+            } else {
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("{name} output fetch: {e}"))?
+            };
+            out.push(HostTensor::new(sig.shape.clone(), data));
+        }
+
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.execute_secs += dt;
+            let e = s.per_artifact.entry(name.to_string()).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += dt;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,177 @@
+//! Typed views over artifact outputs.
+//!
+//! Each artifact kind has a fixed output tuple (see `python/compile/model.py`
+//! docstrings); these structs name the members so the coordinator never
+//! indexes raw tuples.
+
+use crate::tensor::HostTensor;
+
+/// `prefill_full_{N}` / `prefill_pallas_{N}`:
+/// (logits [V], k [L,N,KV,hd], v, win [L,H,N], acc [L,H,N], final_h [D])
+#[derive(Debug)]
+pub struct PrefillFullOut {
+    pub logits: HostTensor,
+    pub k: HostTensor,
+    pub v: HostTensor,
+    pub win: HostTensor,
+    pub acc: HostTensor,
+    pub final_h: HostTensor,
+}
+
+impl PrefillFullOut {
+    pub fn from_vec(mut v: Vec<HostTensor>) -> Self {
+        assert_eq!(v.len(), 6, "prefill_full outputs");
+        let final_h = v.pop().unwrap();
+        let acc = v.pop().unwrap();
+        let win = v.pop().unwrap();
+        let vv = v.pop().unwrap();
+        let k = v.pop().unwrap();
+        let logits = v.pop().unwrap();
+        PrefillFullOut { logits, k, v: vv, win, acc, final_h }
+    }
+}
+
+/// `prefill_stage1_{N}`:
+/// (hidden [N,D], k [T,N,KV,hd], v, win [T,H,N], acc [T,H,N])
+#[derive(Debug)]
+pub struct Stage1Out {
+    pub hidden: HostTensor,
+    pub k: HostTensor,
+    pub v: HostTensor,
+    pub win: HostTensor,
+    pub acc: HostTensor,
+}
+
+impl Stage1Out {
+    pub fn from_vec(mut v: Vec<HostTensor>) -> Self {
+        assert_eq!(v.len(), 5, "stage1 outputs");
+        let acc = v.pop().unwrap();
+        let win = v.pop().unwrap();
+        let vv = v.pop().unwrap();
+        let k = v.pop().unwrap();
+        let hidden = v.pop().unwrap();
+        Stage1Out { hidden, k, v: vv, win, acc }
+    }
+}
+
+/// `prefill_stage2_{Nt}`:
+/// (logits [V], k [L-T,Nt,KV,hd], v, win, acc, final_h [D])
+#[derive(Debug)]
+pub struct Stage2Out {
+    pub logits: HostTensor,
+    pub k: HostTensor,
+    pub v: HostTensor,
+    pub win: HostTensor,
+    pub acc: HostTensor,
+    pub final_h: HostTensor,
+}
+
+impl Stage2Out {
+    pub fn from_vec(v: Vec<HostTensor>) -> Self {
+        let f = PrefillFullOut::from_vec(v);
+        Stage2Out {
+            logits: f.logits,
+            k: f.k,
+            v: f.v,
+            win: f.win,
+            acc: f.acc,
+            final_h: f.final_h,
+        }
+    }
+}
+
+/// `prefill_pyramid_{N}`: (logits [V], k [L,N,KV,hd], v, lens [L])
+#[derive(Debug)]
+pub struct PyramidOut {
+    pub logits: HostTensor,
+    pub k: HostTensor,
+    pub v: HostTensor,
+    pub lens: HostTensor,
+}
+
+impl PyramidOut {
+    pub fn from_vec(mut v: Vec<HostTensor>) -> Self {
+        assert_eq!(v.len(), 4, "pyramid outputs");
+        let lens = v.pop().unwrap();
+        let vv = v.pop().unwrap();
+        let k = v.pop().unwrap();
+        let logits = v.pop().unwrap();
+        PyramidOut { logits, k, v: vv, lens }
+    }
+}
+
+/// `decode_{B}x{C}`: (logits [B,V], k_new [L,B,KV,hd], v_new)
+#[derive(Debug)]
+pub struct DecodeOut {
+    pub logits: HostTensor,
+    pub k_new: HostTensor,
+    pub v_new: HostTensor,
+}
+
+impl DecodeOut {
+    pub fn from_vec(mut v: Vec<HostTensor>) -> Self {
+        assert_eq!(v.len(), 3, "decode outputs");
+        let v_new = v.pop().unwrap();
+        let k_new = v.pop().unwrap();
+        let logits = v.pop().unwrap();
+        DecodeOut { logits, k_new, v_new }
+    }
+}
+
+/// `sweep_tsp_l{t}_{N}`: (logits [V], final_h [D])
+#[derive(Debug)]
+pub struct SweepOut {
+    pub logits: HostTensor,
+    pub final_h: HostTensor,
+}
+
+impl SweepOut {
+    pub fn from_vec(mut v: Vec<HostTensor>) -> Self {
+        assert_eq!(v.len(), 2, "sweep outputs");
+        let final_h = v.pop().unwrap();
+        let logits = v.pop().unwrap();
+        SweepOut { logits, final_h }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: Vec<usize>) -> HostTensor {
+        HostTensor::zeros(shape)
+    }
+
+    #[test]
+    fn prefill_full_unpack_order() {
+        let out = PrefillFullOut::from_vec(vec![
+            t(vec![256]),
+            t(vec![8, 64, 2, 24]),
+            t(vec![8, 64, 2, 24]),
+            t(vec![8, 4, 64]),
+            t(vec![8, 4, 64]),
+            t(vec![96]),
+        ]);
+        assert_eq!(out.logits.shape, vec![256]);
+        assert_eq!(out.k.shape, vec![8, 64, 2, 24]);
+        assert_eq!(out.win.shape, vec![8, 4, 64]);
+        assert_eq!(out.final_h.shape, vec![96]);
+    }
+
+    #[test]
+    fn decode_unpack_order() {
+        let out = DecodeOut::from_vec(vec![
+            t(vec![4, 256]),
+            t(vec![8, 4, 2, 24]),
+            t(vec![8, 4, 2, 24]),
+        ]);
+        assert_eq!(out.logits.shape, vec![4, 256]);
+        assert_eq!(out.k_new.shape, vec![8, 4, 2, 24]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_arity_panics() {
+        DecodeOut::from_vec(vec![t(vec![1])]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Host-side tensor type used between the PJRT runtime and the coordinator.
+//!
+//! Everything on the coordinator hot path (KV rows, score vectors, hidden
+//! states) is an f32 `HostTensor`; token ids / lengths are `HostTensorI32`.
+//! Row-major, shape-checked on construction.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs {} elements",
+            data.len()
+        );
+        HostTensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Stride (in elements) of axis `d`.
+    pub fn stride(&self, d: usize) -> usize {
+        self.shape[d + 1..].iter().product()
+    }
+
+    /// Borrow row `i` along the leading axis.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let s = self.stride(0).max(1);
+        let s0 = self.shape.first().copied().unwrap_or(1);
+        assert!(i < s0, "row {i} out of {s0}");
+        &self.data[i * s..(i + 1) * s]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let s = self.stride(0).max(1);
+        &mut self.data[i * s..(i + 1) * s]
+    }
+
+    /// Borrow sub-tensor at `[i, j]` of a >=2-d tensor.
+    pub fn row2(&self, i: usize, j: usize) -> &[f32] {
+        let s1 = self.stride(1).max(1);
+        let base = i * self.stride(0) + j * s1;
+        &self.data[base..base + s1]
+    }
+
+    /// Reinterpret with a new shape (same element count).
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+impl HostTensorI32 {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensorI32 { shape, data }
+    }
+
+    pub fn scalar(v: i32) -> Self {
+        HostTensorI32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_usizes(shape: Vec<usize>, xs: &[usize]) -> Self {
+        Self::new(shape, xs.iter().map(|&x| x as i32).collect())
+    }
+}
+
+/// L2 distance between two equal-length slices (Fig. 3 metric).
+pub fn l2_distance(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Normalized L2 distance ||a-b|| / ||a|| (the paper's Fig. 3 y-axis).
+pub fn normalized_l2(a: &[f32], b: &[f32]) -> f64 {
+    let norm = a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    if norm == 0.0 {
+        0.0
+    } else {
+        l2_distance(a, b) / norm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_strides() {
+        let t = HostTensor::new(
+            vec![2, 3, 2],
+            (0..12).map(|x| x as f32).collect(),
+        );
+        assert_eq!(t.stride(0), 6);
+        assert_eq!(t.stride(1), 2);
+        assert_eq!(t.row(1), &[6., 7., 8., 9., 10., 11.]);
+        assert_eq!(t.row2(1, 2), &[10., 11.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn argmax_works() {
+        let t = HostTensor::new(vec![4], vec![0.1, 3.0, -1.0, 2.0]);
+        assert_eq!(t.argmax(), 1);
+    }
+
+    #[test]
+    fn distances() {
+        assert_eq!(l2_distance(&[0.0, 3.0], &[4.0, 0.0]), 5.0);
+        assert!((normalized_l2(&[3.0, 4.0], &[3.0, 4.0])).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,79 @@
+//! Byte-level tokenizer + the synthetic-corpus wire format.
+//!
+//! Mirrors `python/compile/data.py` exactly (the model was trained on this
+//! format). Control bytes 0x01-0x06 are task markers; everything else is a
+//! literal byte.
+
+pub const KEY_START: u8 = 1;
+pub const KV_SEP: u8 = 2;
+pub const END: u8 = 3;
+pub const QUERY: u8 = 4;
+pub const MARK: u8 = 5;
+pub const DOC_SEP: u8 = 6;
+
+#[derive(Debug, Clone, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn encode(&self, text: &[u8]) -> Vec<i32> {
+        text.iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> Vec<u8> {
+        ids.iter().map(|&t| (t.clamp(0, 255)) as u8).collect()
+    }
+
+    /// Decode generated ids up to (exclusive of) the END marker, for
+    /// answer scoring.
+    pub fn decode_answer(&self, ids: &[i32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &t in ids {
+            let b = t.clamp(0, 255) as u8;
+            if b == END {
+                break;
+            }
+            out.push(b);
+        }
+        out
+    }
+
+    /// Printable rendering for logs: control bytes as ⟨n⟩.
+    pub fn render(&self, bytes: &[u8]) -> String {
+        bytes
+            .iter()
+            .map(|&b| {
+                if (0x20..0x7f).contains(&b) {
+                    (b as char).to_string()
+                } else {
+                    format!("⟨{b}⟩")
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer;
+        let src = b"hello \x01key\x02value\x03";
+        let ids = t.encode(src);
+        assert_eq!(t.decode(&ids), src.to_vec());
+    }
+
+    #[test]
+    fn answer_stops_at_end() {
+        let t = Tokenizer;
+        let ids = t.encode(b"abc\x03def");
+        assert_eq!(t.decode_answer(&ids), b"abc".to_vec());
+    }
+
+    #[test]
+    fn render_marks_control_bytes() {
+        let t = Tokenizer;
+        assert_eq!(t.render(b"a\x01b"), "a⟨1⟩b");
+    }
+}

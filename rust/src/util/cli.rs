@@ -1,0 +1,128 @@
+//! Tiny CLI argument parser (`clap` is not vendored in this environment).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+pub const FLAG_SET: &str = "true";
+
+impl Args {
+    /// Parse from an iterator of raw args (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), FLAG_SET.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: not a number: {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: not a number: {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Comma-separated list, e.g. `--ns 256,512,1024`.
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad list item {s}")))
+                .collect(),
+        }
+    }
+
+    pub fn str_list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        // NB: a bare `--flag` followed by a non-flag token consumes it as
+        // the value (`--verbose extra` => verbose=extra); boolean flags go
+        // last or use `=`.
+        let a = parse("serve extra --port 8080 --verbose");
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--rate=0.2 --n=512");
+        assert_eq!(a.f64("rate", 0.0), 0.2);
+        assert_eq!(a.usize("n", 0), 512);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--ns 256,512 --methods fastkv,snapkv");
+        assert_eq!(a.usize_list("ns", &[]), vec![256, 512]);
+        assert_eq!(a.str_list("methods", &[]), vec!["fastkv", "snapkv"]);
+        assert_eq!(a.usize_list("missing", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.usize("x", 7), 7);
+        assert_eq!(a.str_or("m", "full"), "full");
+    }
+}

@@ -1,0 +1,54 @@
+//! Substrate utilities built in-repo (this environment vendors no
+//! serde_json / rand / clap): JSON, PRNG, CLI parsing, and small helpers.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+/// Round `n` up to the smallest bucket that fits; `None` if none fits.
+pub fn bucket_for(n: usize, buckets: &[usize]) -> Option<usize> {
+    buckets.iter().copied().filter(|&b| b >= n).min()
+}
+
+/// Simple mean/std over f64 samples.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Percentile (nearest-rank) of an unsorted sample.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_picks_smallest_fit() {
+        assert_eq!(bucket_for(100, &[64, 128, 256]), Some(128));
+        assert_eq!(bucket_for(128, &[64, 128, 256]), Some(128));
+        assert_eq!(bucket_for(300, &[64, 128, 256]), None);
+    }
+
+    #[test]
+    fn stats() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-9);
+        assert!((s - 2.0).abs() < 1e-9);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 0.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 100.0), 4.0);
+    }
+}

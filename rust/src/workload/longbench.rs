@@ -1,0 +1,244 @@
+//! LongBench-analog suite: 6 categories × subtasks (Table 2 / 6 / 7 of the
+//! paper). Each subtask is a synthetic task family the substrate model was
+//! trained on; see DESIGN.md for the category mapping.
+
+use super::{
+    assemble, filler, kv_recall, mark, pair, place, query_for, query_hop2,
+    word, Sample,
+};
+use crate::tokenizer::{DOC_SEP, KV_SEP, KEY_START, MARK, QUERY};
+use crate::util::rng::Rng;
+
+pub const CATEGORIES: &[(&str, &[&str])] = &[
+    ("single_doc_qa", &["narrative_kv", "field_kv"]),
+    ("multi_doc_qa", &["hotpot_hop2", "multikey"]),
+    ("summarization", &["marked_copy"]),
+    ("few_shot", &["echo_upper"]),
+    ("synthetic", &["passage_count", "passage_retrieval"]),
+    ("code", &["fn_return"]),
+];
+
+/// Generate one sample of the named subtask at prompt length `len`.
+pub fn sample(rng: &mut Rng, subtask: &str, len: usize) -> Sample {
+    match subtask {
+        "narrative_kv" => {
+            let mut s = kv_recall(rng, len, None, 0);
+            s.task = "narrative_kv";
+            s
+        }
+        "field_kv" => {
+            let mut s = kv_recall(rng, len, None, 1);
+            s.task = "field_kv";
+            s
+        }
+        "multikey" => {
+            let mut s = kv_recall(rng, len, None, 3);
+            s.task = "multikey";
+            s
+        }
+        "hotpot_hop2" => hop2(rng, len),
+        "marked_copy" => marked_copy(rng, len),
+        "echo_upper" => echo_upper(rng, len),
+        "passage_count" => passage_count(rng, len),
+        "passage_retrieval" => {
+            let depth = rng.f64();
+            let mut s = kv_recall(rng, len, Some(depth), 2);
+            s.task = "passage_retrieval";
+            s
+        }
+        "fn_return" => fn_return(rng, len),
+        other => panic!("unknown subtask {other}"),
+    }
+}
+
+pub fn hop2(rng: &mut Rng, len: usize) -> Sample {
+    let k1 = word(rng, 3, 6);
+    let k2 = word(rng, 3, 6);
+    let v = word(rng, 3, 6);
+    let mut docs = vec![pair(&k1, &k2), pair(&k2, &v)];
+    if rng.chance(0.5) {
+        docs.reverse();
+    }
+    // doc separators around the hops: multi-document flavor
+    let mut inserts: Vec<Vec<u8>> = Vec::new();
+    for d in docs {
+        let mut block = vec![DOC_SEP];
+        block.extend(d);
+        block.push(DOC_SEP);
+        inserts.push(block);
+    }
+    let body = filler(rng, len.saturating_sub(96));
+    let ctx = place(rng, &body, &inserts, None);
+    Sample {
+        prompt: assemble(rng, ctx, &query_hop2(&k1), len),
+        answer: v,
+        task: "hotpot_hop2",
+    }
+}
+
+pub fn marked_copy(rng: &mut Rng, len: usize) -> Sample {
+    let words: Vec<Vec<u8>> = (0..3).map(|_| word(rng, 3, 6)).collect();
+    let inserts: Vec<Vec<u8>> = words.iter().map(|w| mark(w)).collect();
+    let body = filler(rng, len.saturating_sub(64));
+    let ctx = place(rng, &body, &inserts, None);
+    let mut answer = Vec::new();
+    for (i, w) in words.iter().enumerate() {
+        if i > 0 {
+            answer.push(b' ');
+        }
+        answer.extend_from_slice(w);
+    }
+    Sample {
+        prompt: assemble(rng, ctx, &[QUERY, MARK], len),
+        answer,
+        task: "marked_copy",
+    }
+}
+
+pub fn echo_upper(rng: &mut Rng, len: usize) -> Sample {
+    let demo_words: Vec<Vec<u8>> = (0..3).map(|_| word(rng, 3, 6)).collect();
+    let qword = word(rng, 3, 6);
+    let inserts: Vec<Vec<u8>> = demo_words
+        .iter()
+        .map(|w| {
+            let upper: Vec<u8> = w.iter().map(|b| b - 32).collect();
+            pair(w, &upper)
+        })
+        .collect();
+    let body = filler(rng, len.saturating_sub(96));
+    let ctx = place(rng, &body, &inserts, None);
+    let answer: Vec<u8> = qword.iter().map(|b| b - 32).collect();
+    Sample {
+        prompt: assemble(rng, ctx, &query_for(&qword), len),
+        answer,
+        task: "echo_upper",
+    }
+}
+
+pub fn passage_count(rng: &mut Rng, len: usize) -> Sample {
+    let n = rng.range(1, 9);
+    let inserts: Vec<Vec<u8>> =
+        (0..n).map(|_| mark(&word(rng, 3, 6))).collect();
+    let body = filler(rng, len.saturating_sub(72));
+    let ctx = place(rng, &body, &inserts, None);
+    Sample {
+        prompt: assemble(rng, ctx, &[QUERY, QUERY, MARK], len),
+        answer: vec![b'0' + n as u8],
+        task: "passage_count",
+    }
+}
+
+/// Code-completion analog: `def NAME ... return VALUE`, query `NAME`.
+/// Uses the same KV wire format under a code-looking surface so the
+/// trained retrieval circuit transfers.
+pub fn fn_return(rng: &mut Rng, len: usize) -> Sample {
+    let name = word(rng, 4, 7);
+    let value = word(rng, 3, 6);
+    // surface text around the marker pair
+    let mut block = b"def ".to_vec();
+    block.extend(pair(&name, &value));
+    let body = filler(rng, len.saturating_sub(72));
+    let n_decoys = rng.range(1, 3);
+    let mut inserts = vec![block];
+    for _ in 0..n_decoys {
+        let mut d = b"def ".to_vec();
+        d.extend(pair(&word(rng, 4, 7), &word(rng, 3, 6)));
+        inserts.push(d);
+    }
+    rng.shuffle(&mut inserts);
+    let ctx = place(rng, &body, &inserts, None);
+    Sample {
+        prompt: assemble(rng, ctx, &query_for(&name), len),
+        answer: value,
+        task: "fn_return",
+    }
+}
+
+/// Sanity helper used by tests: the queried key of a prompt.
+pub fn queried_key(prompt: &[u8]) -> Option<Vec<u8>> {
+    let q = prompt
+        .windows(2)
+        .rposition(|w| w == [QUERY, KEY_START])?;
+    let rest = &prompt[q + 2..];
+    let end = rest.iter().position(|&b| b == KV_SEP)?;
+    Some(rest[..end].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_subtasks_generate() {
+        let mut rng = Rng::new(11);
+        for (_, subs) in CATEGORIES {
+            for s in *subs {
+                let smp = sample(&mut rng, s, 256);
+                assert_eq!(smp.prompt.len(), 256, "{s}");
+                assert!(!smp.answer.is_empty(), "{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn hop2_answer_reachable() {
+        for seed in 0..10 {
+            let mut rng = Rng::new(seed);
+            let s = hop2(&mut rng, 384);
+            // k1 -> k2 and k2 -> answer must both be present
+            let key1 = {
+                let q = s
+                    .prompt
+                    .windows(3)
+                    .rposition(|w| w[0] == QUERY && w[1] == QUERY)
+                    .unwrap();
+                let rest = &s.prompt[q + 3..];
+                let end =
+                    rest.iter().position(|&b| b == KV_SEP).unwrap();
+                rest[..end].to_vec()
+            };
+            let mut n1 = vec![KEY_START];
+            n1.extend_from_slice(&key1);
+            n1.push(KV_SEP);
+            assert!(s.prompt.windows(n1.len()).any(|w| w == &n1[..]));
+        }
+    }
+
+    #[test]
+    fn echo_upper_answer_is_uppercase_of_query() {
+        let mut rng = Rng::new(5);
+        let s = echo_upper(&mut rng, 256);
+        let key = queried_key(&s.prompt).unwrap();
+        let upper: Vec<u8> = key.iter().map(|b| b - 32).collect();
+        assert_eq!(s.answer, upper);
+    }
+
+    #[test]
+    fn passage_count_matches_marks() {
+        for seed in 0..10 {
+            let mut rng = Rng::new(seed);
+            let s = passage_count(&mut rng, 256);
+            let qpos = s
+                .prompt
+                .windows(3)
+                .rposition(|w| w == [QUERY, QUERY, MARK])
+                .unwrap();
+            let marks = s.prompt[..qpos]
+                .iter()
+                .filter(|&&b| b == MARK)
+                .count();
+            assert_eq!(s.answer, vec![b'0' + marks as u8]);
+        }
+    }
+
+    #[test]
+    fn category_table_is_consistent() {
+        let mut seen = std::collections::BTreeSet::new();
+        for (cat, subs) in CATEGORIES {
+            assert!(!subs.is_empty(), "{cat}");
+            for s in *subs {
+                assert!(seen.insert(*s), "duplicate subtask {s}");
+            }
+        }
+    }
+}

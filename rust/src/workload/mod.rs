@@ -1,0 +1,217 @@
+//! Synthetic benchmark workloads — Rust mirrors of `python/compile/data.py`
+//! (same byte wire format the model was trained on), organized into the
+//! paper's three evaluation suites:
+//!
+//!  * `longbench` — 6-category analog of LongBench (Table 2 / 6 / 7)
+//!  * `ruler`     — retrieval / aggregation / multi-hop analog (Table 3)
+//!  * `niah`      — needle-in-a-haystack grid (Table 4 / Fig. 8)
+
+pub mod longbench;
+pub mod niah;
+pub mod ruler;
+pub mod traces;
+
+use crate::tokenizer::{END, KEY_START, KV_SEP, MARK, QUERY};
+use crate::util::rng::Rng;
+
+/// One evaluation sample: prompt bytes and the expected answer bytes.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub prompt: Vec<u8>,
+    pub answer: Vec<u8>,
+    /// Task label (subtask name in reports).
+    pub task: &'static str,
+}
+
+pub fn word(rng: &mut Rng, lo: usize, hi: usize) -> Vec<u8> {
+    let n = rng.range(lo, hi);
+    (0..n).map(|_| b'a' + rng.below(26) as u8).collect()
+}
+
+pub fn filler(rng: &mut Rng, n: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let w = word(rng, 2, 7);
+        let take = w.len().min(n - out.len());
+        out.extend_from_slice(&w[..take]);
+        if out.len() < n {
+            out.push(b' ');
+        }
+    }
+    out
+}
+
+pub fn pair(key: &[u8], value: &[u8]) -> Vec<u8> {
+    let mut p = vec![KEY_START];
+    p.extend_from_slice(key);
+    p.push(KV_SEP);
+    p.extend_from_slice(value);
+    p.push(END);
+    p
+}
+
+pub fn mark(wordb: &[u8]) -> Vec<u8> {
+    let mut p = vec![MARK];
+    p.extend_from_slice(wordb);
+    p.push(END);
+    p
+}
+
+/// Scatter `inserts` into `body` at sorted random cut points. `depth_hint`
+/// in [0,1] biases all inserts toward that relative depth when given
+/// (needle-depth control for NIAH).
+pub fn place(
+    rng: &mut Rng,
+    body: &[u8],
+    inserts: &[Vec<u8>],
+    depth_hint: Option<f64>,
+) -> Vec<u8> {
+    if inserts.is_empty() {
+        return body.to_vec();
+    }
+    let mut cuts: Vec<usize> = match depth_hint {
+        Some(d) => {
+            let base = ((body.len() as f64) * d) as usize;
+            inserts
+                .iter()
+                .map(|_| {
+                    let jitter = rng.below(body.len() / 8 + 1);
+                    (base + jitter).min(body.len())
+                })
+                .collect()
+        }
+        None => (0..inserts.len()).map(|_| rng.below(body.len() + 1)).collect(),
+    };
+    cuts.sort_unstable();
+    let mut out = Vec::with_capacity(
+        body.len() + inserts.iter().map(Vec::len).sum::<usize>(),
+    );
+    let mut prev = 0;
+    for (c, ins) in cuts.iter().zip(inserts) {
+        out.extend_from_slice(&body[prev..*c]);
+        out.extend_from_slice(ins);
+        prev = *c;
+    }
+    out.extend_from_slice(&body[prev..]);
+    out
+}
+
+/// Assemble a prompt of exactly `target_len` bytes: context (truncated or
+/// filler-extended) followed by `query`.
+pub fn assemble(
+    rng: &mut Rng,
+    ctx: Vec<u8>,
+    query: &[u8],
+    target_len: usize,
+) -> Vec<u8> {
+    let room = target_len.saturating_sub(query.len());
+    let mut out = if ctx.len() >= room {
+        ctx[..room].to_vec()
+    } else {
+        let mut c = ctx;
+        let pad = filler(rng, room - c.len());
+        c.extend_from_slice(&pad);
+        c
+    };
+    out.extend_from_slice(query);
+    out
+}
+
+pub fn query_for(key: &[u8]) -> Vec<u8> {
+    let mut q = vec![QUERY, KEY_START];
+    q.extend_from_slice(key);
+    q.push(KV_SEP);
+    q
+}
+
+pub fn query_hop2(key: &[u8]) -> Vec<u8> {
+    let mut q = vec![QUERY, QUERY, KEY_START];
+    q.extend_from_slice(key);
+    q.push(KV_SEP);
+    q
+}
+
+/// Single-needle KV recall at a controlled depth.
+pub fn kv_recall(
+    rng: &mut Rng,
+    len: usize,
+    depth: Option<f64>,
+    n_distractors: usize,
+) -> Sample {
+    let key = word(rng, 3, 6);
+    let value = word(rng, 3, 6);
+    let mut inserts = vec![pair(&key, &value)];
+    for _ in 0..n_distractors {
+        let k2 = word(rng, 3, 6);
+        let v2 = word(rng, 3, 6);
+        inserts.push(pair(&k2, &v2));
+    }
+    rng.shuffle(&mut inserts);
+    let body = filler(rng, len.saturating_sub(64));
+    let ctx = place(rng, &body, &inserts, depth);
+    let q = query_for(&key);
+    Sample {
+        prompt: assemble(rng, ctx, &q, len),
+        answer: value,
+        task: "kv_recall",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_recall_contains_needle_before_query() {
+        let mut rng = Rng::new(7);
+        for seed in 0..20 {
+            let mut rng2 = Rng::new(seed);
+            let s = kv_recall(&mut rng2, 256, None, 2);
+            assert_eq!(s.prompt.len(), 256);
+            // find query
+            let qpos = s
+                .prompt
+                .windows(2)
+                .rposition(|w| w == [QUERY, KEY_START])
+                .unwrap();
+            // needle = KEY_START key KV_SEP value
+            let key_end = s.prompt[qpos + 2..]
+                .iter()
+                .position(|&b| b == KV_SEP)
+                .unwrap();
+            let key = &s.prompt[qpos + 2..qpos + 2 + key_end];
+            let mut needle = vec![KEY_START];
+            needle.extend_from_slice(key);
+            needle.push(KV_SEP);
+            needle.extend_from_slice(&s.answer);
+            let hay = &s.prompt[..qpos];
+            assert!(
+                hay.windows(needle.len()).any(|w| w == &needle[..]),
+                "needle must appear in context (seed {seed})"
+            );
+            let _ = &mut rng;
+        }
+    }
+
+    #[test]
+    fn depth_hint_places_needle_early_vs_late() {
+        let mut r1 = Rng::new(3);
+        let s_early = kv_recall(&mut r1, 512, Some(0.05), 0);
+        let mut r2 = Rng::new(3);
+        let s_late = kv_recall(&mut r2, 512, Some(0.9), 0);
+        let pos = |s: &Sample| {
+            s.prompt.iter().position(|&b| b == KEY_START).unwrap()
+        };
+        assert!(pos(&s_early) < pos(&s_late));
+    }
+
+    #[test]
+    fn assemble_exact_length() {
+        let mut rng = Rng::new(1);
+        let s = assemble(&mut rng, vec![b'x'; 10], b"??", 128);
+        assert_eq!(s.len(), 128);
+        let s = assemble(&mut rng, vec![b'x'; 500], b"??", 128);
+        assert_eq!(s.len(), 128);
+        assert!(s.ends_with(b"??"));
+    }
+}

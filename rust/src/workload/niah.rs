@@ -1,0 +1,51 @@
+//! Needle-in-a-Haystack grid (Table 4 / Fig. 8): one needle at a
+//! controlled depth × context length; score = retrieval accuracy averaged
+//! over the grid.
+
+use super::{kv_recall, Sample};
+use crate::util::rng::Rng;
+
+/// The evaluation grid: depths × lengths (paper: 10 depths × 16K..128K;
+/// here scaled to the trained context window).
+pub fn grid(lengths: &[usize], depths: usize) -> Vec<(usize, f64)> {
+    let mut cells = Vec::new();
+    for &len in lengths {
+        for d in 0..depths {
+            let depth = if depths == 1 {
+                0.5
+            } else {
+                d as f64 / (depths - 1) as f64
+            };
+            cells.push((len, depth));
+        }
+    }
+    cells
+}
+
+pub fn sample(rng: &mut Rng, len: usize, depth: f64) -> Sample {
+    let mut s = kv_recall(rng, len, Some(depth), 0);
+    s.task = "niah";
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_all_cells() {
+        let g = grid(&[128, 256], 5);
+        assert_eq!(g.len(), 10);
+        assert!(g.iter().any(|&(l, d)| l == 128 && d == 0.0));
+        assert!(g.iter().any(|&(l, d)| l == 256 && d == 1.0));
+    }
+
+    #[test]
+    fn samples_generate() {
+        let mut rng = Rng::new(1);
+        for (len, depth) in grid(&[128, 256], 3) {
+            let s = sample(&mut rng, len, depth);
+            assert_eq!(s.prompt.len(), len);
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! RULER-analog suite (Table 3): retrieval (NIAH variants), aggregation
+//! (common/frequent words), and multi-hop tracing (variable chains),
+//! parameterized by context length.
+
+use super::{
+    assemble, filler, kv_recall, mark, pair, place, query_for, query_hop2,
+    word, Sample,
+};
+use crate::tokenizer::{MARK, QUERY};
+use crate::util::rng::Rng;
+
+pub const TASKS: &[&str] = &[
+    "niah_single",
+    "niah_multikey",
+    "niah_multiquery",
+    "cwe",
+    "fwe",
+    "vt_chain2",
+];
+
+pub fn sample(rng: &mut Rng, task: &str, len: usize) -> Sample {
+    match task {
+        "niah_single" => {
+            let mut s = kv_recall(rng, len, None, 0);
+            s.task = "niah_single";
+            s
+        }
+        "niah_multikey" => {
+            let mut s = kv_recall(rng, len, None, 4);
+            s.task = "niah_multikey";
+            s
+        }
+        // multi-query approximated by querying one of several needles
+        // placed adversarially deep
+        "niah_multiquery" => {
+            let mut s = kv_recall(rng, len, Some(0.1), 3);
+            s.task = "niah_multiquery";
+            s
+        }
+        "cwe" => cwe(rng, len),
+        "fwe" => fwe(rng, len),
+        "vt_chain2" => vt_chain2(rng, len),
+        other => panic!("unknown ruler task {other}"),
+    }
+}
+
+/// Common-words extraction: emit the marked words in order (trained as
+/// `marked_copy`).
+pub fn cwe(rng: &mut Rng, len: usize) -> Sample {
+    let words: Vec<Vec<u8>> = (0..3).map(|_| word(rng, 3, 6)).collect();
+    let inserts: Vec<Vec<u8>> = words.iter().map(|w| mark(w)).collect();
+    let body = filler(rng, len.saturating_sub(64));
+    let ctx = place(rng, &body, &inserts, None);
+    let mut answer = Vec::new();
+    for (i, w) in words.iter().enumerate() {
+        if i > 0 {
+            answer.push(b' ');
+        }
+        answer.extend_from_slice(w);
+    }
+    Sample {
+        prompt: assemble(rng, ctx, &[QUERY, MARK], len),
+        answer,
+        task: "cwe",
+    }
+}
+
+/// Frequent-words estimation analog: count marks (trained `count_marks`).
+pub fn fwe(rng: &mut Rng, len: usize) -> Sample {
+    let n = rng.range(1, 9);
+    let inserts: Vec<Vec<u8>> =
+        (0..n).map(|_| mark(&word(rng, 3, 6))).collect();
+    let body = filler(rng, len.saturating_sub(72));
+    let ctx = place(rng, &body, &inserts, None);
+    Sample {
+        prompt: assemble(rng, ctx, &[QUERY, QUERY, MARK], len),
+        answer: vec![b'0' + n as u8],
+        task: "fwe",
+    }
+}
+
+/// Variable tracking: x1 = x2, x2 = value; query x1 (2-hop chain, trained
+/// as `hop2`).
+pub fn vt_chain2(rng: &mut Rng, len: usize) -> Sample {
+    let x1 = word(rng, 3, 6);
+    let x2 = word(rng, 3, 6);
+    let v = word(rng, 3, 6);
+    let mut inserts = vec![pair(&x1, &x2), pair(&x2, &v)];
+    if rng.chance(0.5) {
+        inserts.reverse();
+    }
+    let body = filler(rng, len.saturating_sub(64));
+    let ctx = place(rng, &body, &inserts, None);
+    Sample {
+        prompt: assemble(rng, ctx, &query_hop2(&x1), len),
+        answer: v,
+        task: "vt_chain2",
+    }
+}
+
+/// A NIAH single-needle sample with an extra distractor key that shares a
+/// prefix with the queried key — adversarial retrieval.
+pub fn niah_hard(rng: &mut Rng, len: usize) -> Sample {
+    let key = word(rng, 4, 6);
+    let value = word(rng, 3, 6);
+    let mut decoy_key = key.clone();
+    let last = decoy_key.len() - 1;
+    decoy_key[last] = if decoy_key[last] == b'z' {
+        b'a'
+    } else {
+        decoy_key[last] + 1
+    };
+    let inserts = vec![pair(&key, &value), pair(&decoy_key, &word(rng, 3, 6))];
+    let body = filler(rng, len.saturating_sub(64));
+    let ctx = place(rng, &body, &inserts, None);
+    Sample {
+        prompt: assemble(rng, ctx, &query_for(&key), len),
+        answer: value,
+        task: "niah_hard",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_at_all_lengths() {
+        let mut rng = Rng::new(3);
+        for t in TASKS {
+            for len in [128usize, 256, 512] {
+                let s = sample(&mut rng, t, len);
+                assert_eq!(s.prompt.len(), len, "{t}@{len}");
+                assert!(!s.answer.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn vt_chain_has_both_links() {
+        for seed in 0..10 {
+            let mut rng = Rng::new(seed);
+            let s = vt_chain2(&mut rng, 256);
+            let key_starts = s
+                .prompt
+                .iter()
+                .filter(|&&b| b == crate::tokenizer::KEY_START)
+                .count();
+            assert!(key_starts >= 3, "two pairs + query");
+        }
+    }
+
+    #[test]
+    fn niah_hard_decoy_differs() {
+        let mut rng = Rng::new(9);
+        let s = niah_hard(&mut rng, 256);
+        assert!(!s.answer.is_empty());
+    }
+}

@@ -1,0 +1,95 @@
+//! Request-arrival traces for the serving benchmarks: Poisson open-loop
+//! and bursty (ON/OFF) arrival processes over the task generators —
+//! exercises the scheduler/batcher under realistic load shapes.
+
+use crate::util::rng::Rng;
+use crate::workload::{kv_recall, Sample};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Poisson arrivals at `rate` req/s.
+    Poisson,
+    /// Bursts: ON period with Poisson(rate), OFF period idle.
+    Bursty,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Seconds from trace start.
+    pub at: f64,
+    pub sample: Sample,
+    pub max_new: usize,
+}
+
+/// Generate a trace of `n` requests with prompt lengths drawn from
+/// `lens` (uniform) and the given arrival process.
+pub fn generate(
+    seed: u64,
+    n: usize,
+    rate: f64,
+    lens: &[usize],
+    max_new: usize,
+    kind: ArrivalKind,
+) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let dt = match kind {
+            ArrivalKind::Poisson => exp_sample(&mut rng, rate),
+            ArrivalKind::Bursty => {
+                // bursts of ~5 at 4x rate, then a gap
+                if i % 5 == 0 && i > 0 {
+                    exp_sample(&mut rng, rate / 4.0)
+                } else {
+                    exp_sample(&mut rng, rate * 4.0)
+                }
+            }
+        };
+        t += dt;
+        let len = *rng.choice(lens);
+        let sample = kv_recall(&mut rng, len, None, 1);
+        out.push(TraceEvent { at: t, sample, max_new });
+    }
+    out
+}
+
+fn exp_sample(rng: &mut Rng, rate: f64) -> f64 {
+    let u = rng.f64().max(1e-12);
+    -u.ln() / rate.max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_sorted_and_sized() {
+        let tr = generate(1, 50, 10.0, &[128, 256], 8, ArrivalKind::Poisson);
+        assert_eq!(tr.len(), 50);
+        assert!(tr.windows(2).all(|w| w[0].at <= w[1].at));
+        assert!(tr.iter().all(|e| e.sample.prompt.len() == 128
+            || e.sample.prompt.len() == 256));
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let tr =
+            generate(2, 400, 20.0, &[128], 8, ArrivalKind::Poisson);
+        let span = tr.last().unwrap().at;
+        let rate = 400.0 / span;
+        assert!((10.0..40.0).contains(&rate), "rate {rate}");
+    }
+
+    #[test]
+    fn bursty_has_higher_variance_of_gaps() {
+        let p = generate(3, 200, 10.0, &[128], 8, ArrivalKind::Poisson);
+        let b = generate(3, 200, 10.0, &[128], 8, ArrivalKind::Bursty);
+        let gaps = |tr: &[TraceEvent]| {
+            tr.windows(2).map(|w| w[1].at - w[0].at).collect::<Vec<_>>()
+        };
+        let (_, sp) = crate::util::mean_std(&gaps(&p));
+        let (_, sb) = crate::util::mean_std(&gaps(&b));
+        assert!(sb > sp, "bursty std {sb} <= poisson std {sp}");
+    }
+}

@@ -1,0 +1,330 @@
+//! Property-based tests on coordinator invariants (hand-rolled generator
+//! loop — proptest is not vendored; each property runs over hundreds of
+//! randomized cases with printable failure seeds).
+
+use fastkv::coordinator::kvcache::{BatchArena, RequestCache};
+use fastkv::coordinator::scheduler::{Action, AdmitOrder, Scheduler};
+use fastkv::coordinator::selection as sel;
+use fastkv::eval::{char_f1, edit_sim, levenshtein};
+use fastkv::manifest::ModelMeta;
+use fastkv::tensor::HostTensor;
+use fastkv::util::json::Value;
+use fastkv::util::rng::Rng;
+
+fn cases(n: usize) -> impl Iterator<Item = (u64, Rng)> {
+    (0..n as u64).map(|seed| (seed, Rng::new(seed)))
+}
+
+// ---------------------------------------------------------------- selection
+
+#[test]
+fn prop_topk_selected_are_the_best() {
+    for (seed, mut rng) in cases(300) {
+        let n = rng.range(1, 64);
+        let n_valid = rng.range(1, n);
+        let k = rng.range(1, n);
+        let scores: Vec<f32> =
+            (0..n).map(|_| rng.f64() as f32).collect();
+        let sel = sel::top_k_with_forced(&scores, n_valid, k, &[]);
+        let expect = k.min(n_valid);
+        assert_eq!(sel.len(), expect, "seed {seed}");
+        assert!(sel.windows(2).all(|w| w[0] < w[1]), "sorted, seed {seed}");
+        assert!(sel.iter().all(|&i| i < n_valid), "valid, seed {seed}");
+        // every selected score >= every unselected valid score
+        let min_sel = sel
+            .iter()
+            .map(|&i| scores[i])
+            .fold(f32::INFINITY, f32::min);
+        for i in 0..n_valid {
+            if !sel.contains(&i) {
+                assert!(
+                    scores[i] <= min_sel + 1e-6,
+                    "seed {seed}: unselected {i} beats selected"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_forced_indices_always_kept() {
+    for (seed, mut rng) in cases(300) {
+        let n = rng.range(4, 64);
+        let n_valid = rng.range(2, n);
+        let k = rng.range(1, n_valid);
+        let window = rng.range(1, k);
+        let scores: Vec<f32> =
+            (0..n).map(|_| rng.f64() as f32).collect();
+        let forced = sel::window_indices(n_valid, window);
+        let s = sel::top_k_with_forced(&scores, n_valid, k, &forced);
+        for f in &forced {
+            assert!(
+                s.contains(f) || s.len() == k && forced.len() > k,
+                "seed {seed}: window idx {f} dropped (sel {s:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_maxpool_dominates_input_and_is_monotone() {
+    for (seed, mut rng) in cases(200) {
+        let n = rng.range(1, 100);
+        let kernel = *[1usize, 3, 5, 7].get(rng.below(4)).unwrap();
+        let x: Vec<f32> =
+            (0..n).map(|_| (rng.f64() * 10.0 - 5.0) as f32).collect();
+        let y = sel::maxpool1d(&x, kernel);
+        assert_eq!(y.len(), n);
+        for i in 0..n {
+            assert!(y[i] >= x[i], "seed {seed}: pool below input at {i}");
+        }
+        let global = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(y.iter().cloned().fold(f32::NEG_INFINITY, f32::max) <= global);
+    }
+}
+
+#[test]
+fn prop_groupwise_budget_exact() {
+    for (seed, mut rng) in cases(200) {
+        let kv = rng.range(1, 4);
+        let groups = rng.range(1, 3);
+        let h = kv * groups;
+        let n = rng.range(8, 96);
+        let n_valid = rng.range(4, n);
+        let k = rng.range(1, n_valid);
+        let win: Vec<f32> =
+            (0..h * n).map(|_| rng.f64() as f32).collect();
+        let sets = sel::select_kv_groupwise(&win, h, n, n_valid, kv, k, 2, 3);
+        assert_eq!(sets.len(), kv, "seed {seed}");
+        for s in &sets {
+            assert_eq!(s.len(), k.min(n_valid), "seed {seed}");
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}
+
+// ---------------------------------------------------------------- kvcache
+
+fn meta(rng: &mut Rng) -> ModelMeta {
+    ModelMeta {
+        vocab_size: 256,
+        d_model: 16,
+        n_layers: rng.range(1, 4),
+        n_heads: 2,
+        n_kv_heads: rng.range(1, 2),
+        head_dim: rng.range(2, 8),
+        tsp_layer: 1,
+        window: 4,
+        pool_kernel: 3,
+        max_train_len: 64,
+    }
+}
+
+#[test]
+fn prop_cache_roundtrip_through_arena() {
+    // fill RequestCache with tagged rows -> load into arena -> rows land at
+    // the right [layer, slot, row] offsets.
+    for (seed, mut rng) in cases(150) {
+        let m = meta(&mut rng);
+        let n = rng.range(8, 32);
+        let tag = |l: usize, t: usize, e: usize| {
+            (l * 10_000 + t * 10 + e) as f32
+        };
+        let re = m.n_kv_heads * m.head_dim;
+        let mut data = Vec::new();
+        for l in 0..m.n_layers {
+            for t in 0..n {
+                for e in 0..re {
+                    data.push(tag(l, t, e));
+                }
+            }
+        }
+        let k_src = HostTensor::new(
+            vec![m.n_layers, n, m.n_kv_heads, m.head_dim],
+            data.clone(),
+        );
+        let v_src = k_src.clone();
+        let mut rc = RequestCache::new(&m);
+        let mut sels = Vec::new();
+        for l in 0..m.n_layers {
+            let len = rng.range(1, n);
+            let s = rng.distinct_sorted(len, n);
+            rc.fill_layer(l, &k_src, &v_src, l, &s);
+            sels.push(s);
+        }
+        let cap = n + 4;
+        let b = rng.range(1, 4);
+        let mut arena = BatchArena::new(&m, b, cap);
+        let slot = arena.alloc_slot().unwrap();
+        arena.load(slot, &rc);
+        for l in 0..m.n_layers {
+            assert_eq!(
+                arena.lens[l * b + slot] as usize,
+                sels[l].len(),
+                "seed {seed}"
+            );
+            for (row, &t) in sels[l].iter().enumerate() {
+                let base = ((l * b + slot) * cap + row) * re;
+                for e in 0..re {
+                    assert_eq!(
+                        arena.k.data[base + e],
+                        tag(l, t, e),
+                        "seed {seed} l{l} row{row}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_arena_slots_never_interfere() {
+    for (seed, mut rng) in cases(100) {
+        let m = meta(&mut rng);
+        let b = rng.range(2, 4);
+        let cap = rng.range(4, 16);
+        let mut arena = BatchArena::new(&m, b, cap);
+        let s0 = arena.alloc_slot().unwrap();
+        let s1 = arena.alloc_slot().unwrap();
+        let mk = |v: f32| {
+            HostTensor::new(
+                vec![m.n_layers, b, m.n_kv_heads, m.head_dim],
+                vec![v; m.n_layers * b * m.n_kv_heads * m.head_dim],
+            )
+        };
+        let a = mk(1.0);
+        let bb = mk(2.0);
+        let n0 = rng.range(1, cap);
+        for _ in 0..n0 {
+            arena.append(s0, &a, &a);
+        }
+        arena.free_slot(s1);
+        let s1b = arena.alloc_slot().unwrap();
+        assert_eq!(s1, s1b, "seed {seed}");
+        arena.append(s1b, &bb, &bb);
+        // slot 0 rows must still be exactly 1.0
+        let re = m.n_kv_heads * m.head_dim;
+        for l in 0..m.n_layers {
+            let len0 = arena.lens[l * b + s0] as usize;
+            assert_eq!(len0, n0.min(cap), "seed {seed}");
+            let base = ((l * b + s0) * cap) * re;
+            for e in 0..len0 * re {
+                assert_eq!(arena.k.data[base + e], 1.0, "seed {seed}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- scheduler
+
+#[test]
+fn prop_scheduler_never_starves_and_never_overfills() {
+    for (seed, mut rng) in cases(200) {
+        let max_active = rng.range(1, 4);
+        let order = if rng.chance(0.5) {
+            AdmitOrder::Fcfs
+        } else {
+            AdmitOrder::ShortestFirst
+        };
+        let mut s: Scheduler<usize> = Scheduler::new(max_active, order);
+        let mut active = 0usize;
+        let mut completed = 0usize;
+        let total = rng.range(1, 20);
+        let mut submitted = 0usize;
+        let mut steps = 0;
+        while completed < total {
+            steps += 1;
+            assert!(steps < 10_000, "seed {seed}: livelock");
+            if submitted < total && rng.chance(0.3) {
+                s.enqueue(rng.range(1, 100));
+                submitted += 1;
+            }
+            match s.next_action(active) {
+                Action::Prefill => {
+                    let _ = s.pop_next(|&x| x).unwrap();
+                    active += 1;
+                    assert!(active <= max_active, "seed {seed}");
+                }
+                Action::DecodeStep => {
+                    if rng.chance(0.4) && active > 0 {
+                        active -= 1;
+                        completed += 1;
+                    }
+                }
+                Action::Idle => {
+                    assert_eq!(active, 0, "seed {seed}");
+                    if submitted < total {
+                        s.enqueue(rng.range(1, 100));
+                        submitted += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- metrics & json
+
+#[test]
+fn prop_scoring_metrics_bounded_and_reflexive() {
+    for (seed, mut rng) in cases(300) {
+        let la = rng.range(0, 12);
+        let lb = rng.range(0, 12);
+        let a: Vec<u8> =
+            (0..la).map(|_| b'a' + rng.below(4) as u8).collect();
+        let b: Vec<u8> =
+            (0..lb).map(|_| b'a' + rng.below(4) as u8).collect();
+        for f in [char_f1, edit_sim] {
+            let v = f(&a, &b);
+            assert!((0.0..=1.0).contains(&v), "seed {seed}: {v}");
+            assert!((f(&a, &a) - 1.0).abs() < 1e-9, "seed {seed}");
+            assert!(
+                (f(&a, &b) - f(&b, &a)).abs() < 1e-9,
+                "seed {seed}: symmetric"
+            );
+        }
+        // levenshtein triangle inequality against empty
+        assert!(levenshtein(&a, &b) <= a.len().max(b.len()));
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> Value {
+        match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.chance(0.5)),
+            2 => Value::Num((rng.below(100_000) as f64) / 8.0),
+            3 => Value::Str(
+                (0..rng.below(8))
+                    .map(|_| {
+                        *[
+                            'a', 'b', '"', '\\', '\n', '€', 'x', '\t',
+                        ]
+                        .get(rng.below(8))
+                        .unwrap()
+                    })
+                    .collect(),
+            ),
+            4 => Value::Arr(
+                (0..rng.below(4))
+                    .map(|_| gen_value(rng, depth + 1))
+                    .collect(),
+            ),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(4) {
+                    m.insert(format!("k{i}"), gen_value(rng, depth + 1));
+                }
+                Value::Obj(m)
+            }
+        }
+    }
+    for (seed, mut rng) in cases(300) {
+        let v = gen_value(&mut rng, 0);
+        let text = v.to_string();
+        let v2 = Value::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e} in {text}"));
+        assert_eq!(v, v2, "seed {seed}: {text}");
+    }
+}
