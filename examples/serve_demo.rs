@@ -25,6 +25,14 @@ fn main() -> Result<()> {
 
     let mut policy_cfg = PolicyCfg::default_for(&man);
     policy_cfg.kv_rate = args.f64("kv-rate", 0.1);
+    // Paged KV backend (the default); --pool-blocks under-provisions the
+    // block pool to force memory-aware admission + preemption.
+    let mut paging = fastkv::PagingConfig::default();
+    paging.block_tokens = args.usize("block-tokens", paging.block_tokens);
+    if let Some(nb) = args.get("pool-blocks") {
+        paging.num_blocks =
+            Some(nb.parse().expect("--pool-blocks: not a number"));
+    }
     let cfg = ServerConfig {
         artifact_dir: dir,
         policy: policy.clone(),
@@ -33,6 +41,7 @@ fn main() -> Result<()> {
         max_new,
         max_prompt: len,
         order: AdmitOrder::Fcfs,
+        paging: Some(paging),
     };
     println!("starting server: policy={policy} batch={} len={len}", cfg.decode_batch);
     let server = Server::spawn(cfg)?;
@@ -70,6 +79,15 @@ fn main() -> Result<()> {
     println!("\n{n_clients} requests in {wall:.2}s  \
               ({:.1} tok/s out, {correct}/{n_clients} answers correct)",
              total_tokens as f64 / wall);
+    println!(
+        "\nblock pool: peak {}/{} blocks in use, prefix hit rate {:.1}%, \
+         {} preempted, {} compactions",
+        handle.metrics.gauge("pool_blocks_in_use_peak"),
+        handle.metrics.gauge("pool_blocks_total"),
+        100.0 * handle.metrics.gauge("pool_prefix_hit_rate"),
+        handle.metrics.counter("preempted"),
+        handle.metrics.counter("compactions"),
+    );
     println!("\nserver metrics:\n{}", handle.metrics.report());
     Ok(())
 }

@@ -1,0 +1,159 @@
+//! Paged KV-cache micro-benchmarks: admit (with and without prefix
+//! sharing), per-step append, staging materialization, and block
+//! compaction — PJRT-independent, with block-pool stats reported next to
+//! the timings.
+//!
+//! Run: cargo bench --bench paging   (FASTKV_BENCH_QUICK=1 for a smoke pass)
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::bench;
+use fastkv::coordinator::kvcache::{BatchArena, RequestCache};
+use fastkv::coordinator::paging::{KvStore, PagedArena, PagingConfig};
+use fastkv::manifest::ModelMeta;
+use fastkv::tensor::HostTensor;
+use fastkv::util::rng::Rng;
+use fastkv::PolicyCfg;
+
+fn meta() -> ModelMeta {
+    ModelMeta {
+        vocab_size: 256,
+        d_model: 96,
+        n_layers: 8,
+        n_heads: 4,
+        n_kv_heads: 2,
+        head_dim: 24,
+        tsp_layer: 4,
+        window: 8,
+        pool_kernel: 7,
+        max_train_len: 512,
+    }
+}
+
+fn cache(m: &ModelMeta, seed: u64, len: usize) -> RequestCache {
+    let re = m.n_kv_heads * m.head_dim;
+    let mut rc = RequestCache::new(m);
+    for l in 0..m.n_layers {
+        let keep = if l < m.tsp_layer { len } else { len / 2 };
+        let mut rng = Rng::new(seed * 100 + l as u64);
+        rc.k[l] = (0..keep * re).map(|_| rng.f64() as f32).collect();
+        rc.v[l] = (0..keep * re).map(|_| rng.f64() as f32).collect();
+        rc.lens[l] = keep;
+    }
+    rc
+}
+
+fn main() {
+    let m = meta();
+    let b = 4;
+    let len = 2048;
+    let cap = len + 64;
+    let cfg = PagingConfig::default();
+
+    println!("\n=== paging (block pool, prefix cache, staging) ===");
+
+    // admit: distinct prompts (all misses) vs shared prompt (all hits)
+    let distinct: Vec<RequestCache> =
+        (0..b as u64).map(|i| cache(&m, i, len)).collect();
+    let mut pa = PagedArena::new(&m, b, cap, cfg.clone());
+    bench("PagedArena admit x4 distinct (2048 tok)", 2, 20, || {
+        let slots: Vec<usize> = distinct
+            .iter()
+            .map(|rc| KvStore::admit(&mut pa, rc).unwrap())
+            .collect();
+        for s in slots {
+            pa.release(s);
+        }
+    });
+    let ps = pa.pool_stats();
+    println!(
+        "{:>46} pool: {} blocks total, hit rate {:.1}%",
+        "",
+        ps.blocks_total,
+        100.0 * ps.prefix_hit_rate()
+    );
+
+    let shared = cache(&m, 7, len);
+    let mut pa = PagedArena::new(&m, b, cap, cfg.clone());
+    // warm the prefix cache once so steady-state admits are all hits
+    let s0 = KvStore::admit(&mut pa, &shared).unwrap();
+    bench("PagedArena admit x3 shared-prefix (2048 tok)", 2, 20, || {
+        let slots: Vec<usize> = (1..b)
+            .map(|_| KvStore::admit(&mut pa, &shared).unwrap())
+            .collect();
+        for s in slots {
+            pa.release(s);
+        }
+    });
+    let ps = pa.pool_stats();
+    println!(
+        "{:>46} pool: {}/{} blocks in use, hit rate {:.1}%, evictions {}",
+        "",
+        ps.blocks_in_use,
+        ps.blocks_total,
+        100.0 * ps.prefix_hit_rate(),
+        ps.evictions
+    );
+    pa.release(s0);
+
+    // flat-arena load for comparison
+    let mut flat = BatchArena::new(&m, b, cap);
+    bench("BatchArena admit x4 (2048 tok, flat copy)", 2, 20, || {
+        let slots: Vec<usize> = distinct
+            .iter()
+            .map(|rc| KvStore::admit(&mut flat, rc).unwrap())
+            .collect();
+        for s in slots {
+            KvStore::release(&mut flat, s);
+        }
+    });
+
+    // per-step append + staging
+    let mut pa = PagedArena::new(&m, b, cap, cfg.clone());
+    let slots: Vec<usize> = distinct
+        .iter()
+        .map(|rc| KvStore::admit(&mut pa, rc).unwrap())
+        .collect();
+    let step = HostTensor::zeros(vec![
+        m.n_layers,
+        b,
+        m.n_kv_heads,
+        m.head_dim,
+    ]);
+    bench("PagedArena append x4 lanes", 3, 200, || {
+        for &s in &slots {
+            let _ = KvStore::append(&mut pa, s, &step, &step);
+        }
+    });
+    bench("PagedArena stage (4 x 2112 cap)", 3, 50, || {
+        let st = KvStore::stage(&pa);
+        std::hint::black_box(&st.k.data[0]);
+    });
+
+    // block compaction driven by policy keep-sets
+    let policy_cfg = PolicyCfg {
+        kv_rate: 0.1,
+        tsp_rate: 0.2,
+        sinks: 4,
+        filter_layer: m.tsp_layer - 1,
+        use_pallas: false,
+    };
+    bench("compact to 50% (policy keep-sets)", 1, 20, || {
+        let mut pa = PagedArena::new(&m, 1, cap, cfg.clone());
+        let slot = KvStore::admit(&mut pa, &distinct[0]).unwrap();
+        let lens = KvStore::layer_lens(&pa, slot);
+        let keep = policy_cfg.compaction_keep(&lens, 0.5, m.window);
+        let released = KvStore::compact(&mut pa, slot, &keep);
+        std::hint::black_box(released);
+    });
+    let ps = pa.pool_stats();
+    println!(
+        "{:>46} final pool: {}/{} in use, cow {}, alloc failures {}",
+        "",
+        ps.blocks_in_use,
+        ps.blocks_total,
+        ps.cow_copies,
+        ps.alloc_failures
+    );
+}

@@ -76,7 +76,7 @@ fn main() {
     bench("BatchArena append", 3, 100, || {
         if !arena.append(slot, &k_new, &k_new) {
             arena.free_slot(slot);
-            arena.alloc_slot();
+            let _ = arena.alloc_slot();
             arena.load(slot, &rc);
         }
     });

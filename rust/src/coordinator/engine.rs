@@ -8,7 +8,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::kvcache::BatchArena;
+use crate::coordinator::paging::{AppendResult, PagedArena, PagingConfig};
 use crate::coordinator::policies::{Exec, Policy, PolicyCfg};
 use crate::manifest::Manifest;
 use crate::runtime::outputs::DecodeOut;
@@ -71,9 +71,17 @@ pub fn generate(
 
     let max_new = max_new.min(man.buckets.max_gen);
     let cap = decode_cap_for(man, pre.cache.max_len(), max_new)?;
-    let mut arena = BatchArena::new(&man.model, 1, cap);
-    let slot = arena.alloc_slot().unwrap();
-    arena.load(slot, &pre.cache);
+    // Default KV backend: the paged arena (worst-case-sized pool for a
+    // single lane, so admission cannot fail here). The prefix cache is
+    // off: a single-request arena dropped at function exit can never
+    // reuse anything, so content hashing would be pure overhead.
+    let mut store = PagedArena::new(
+        &man.model,
+        1,
+        cap,
+        PagingConfig { prefix_cache: false, ..PagingConfig::default() },
+    );
+    let slot = store.admit(&pre.cache).expect("worst-case pool admits");
 
     let mut stats = GenStats {
         prefill_secs,
@@ -90,18 +98,18 @@ pub fn generate(
     let mut pos = pre.next_pos;
     let t1 = Instant::now();
     while tokens.len() < max_new && cur != END as i32 {
+        let staged = store.stage();
         let out = DecodeOut::from_vec(ex.run(
             &artifact,
             vec![
                 HostTensorI32::new(vec![1], vec![cur]).into(),
                 HostTensorI32::new(vec![1], vec![pos as i32]).into(),
-                arena.k.clone().into(),
-                arena.v.clone().into(),
-                arena.lens_tensor().into(),
+                staged.k.into(),
+                staged.v.into(),
+                staged.lens.into(),
             ],
-        )?)
-        ;
-        if !arena.append(slot, &out.k_new, &out.v_new) {
+        )?);
+        if store.append(slot, &out.k_new, &out.v_new) != AppendResult::Ok {
             break; // capacity exhausted
         }
         stats.decode_steps += 1;

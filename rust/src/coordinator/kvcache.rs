@@ -148,7 +148,13 @@ impl BatchArena {
         Some(slot)
     }
 
-    pub fn free_slot(&mut self, slot: usize) {
+    /// Free a slot. Returns false (and touches nothing) if the slot is
+    /// already free: a double free must never zero a region that may have
+    /// been handed to another request in between.
+    pub fn free_slot(&mut self, slot: usize) -> bool {
+        if slot >= self.b || !self.used[slot] {
+            return false;
+        }
         self.used[slot] = false;
         // Zero the slot's rows so stale data can never leak into another
         // request even if lens bookkeeping were wrong.
@@ -159,6 +165,7 @@ impl BatchArena {
             self.v.data[base..base + self.c * re].fill(0.0);
             self.lens[l * self.b + slot] = 0;
         }
+        true
     }
 
     pub fn free_slots(&self) -> usize {
@@ -214,6 +221,37 @@ impl BatchArena {
             self.lens[l * self.b + slot] += 1;
         }
         true
+    }
+
+    /// In-place eviction for the flat layout: retain only `keep[l]` rows
+    /// (ascending logical indices) on each layer of `slot`, moving
+    /// survivors down and zeroing the trimmed tail. The paged backend's
+    /// block-granular equivalent is `PagedArena::compact`.
+    pub fn compact_slot(&mut self, slot: usize, keep: &[Vec<usize>]) {
+        if slot >= self.b || !self.used[slot] {
+            return;
+        }
+        assert_eq!(keep.len(), self.l, "keep sets per layer");
+        let re = self.row_elems();
+        for l in 0..self.l {
+            let old_len = self.lens[l * self.b + slot] as usize;
+            let keep_l = &keep[l];
+            let mut tk = Vec::with_capacity(keep_l.len() * re);
+            let mut tv = Vec::with_capacity(keep_l.len() * re);
+            for &idx in keep_l {
+                assert!(idx < old_len, "keep index {idx} >= len {old_len}");
+                let base = self.base(l, slot, idx);
+                tk.extend_from_slice(&self.k.data[base..base + re]);
+                tv.extend_from_slice(&self.v.data[base..base + re]);
+            }
+            let new_len = keep_l.len();
+            let base = self.base(l, slot, 0);
+            self.k.data[base..base + new_len * re].copy_from_slice(&tk);
+            self.v.data[base..base + new_len * re].copy_from_slice(&tv);
+            self.k.data[base + new_len * re..base + old_len * re].fill(0.0);
+            self.v.data[base + new_len * re..base + old_len * re].fill(0.0);
+            self.lens[l * self.b + slot] = new_len as i32;
+        }
     }
 
     pub fn lens_tensor(&self) -> crate::tensor::HostTensorI32 {
@@ -343,6 +381,76 @@ mod tests {
         assert!(arena.append(slot, &k_new, &k_new));
         assert!(arena.append(slot, &k_new, &k_new));
         assert!(!arena.append(slot, &k_new, &k_new));
+    }
+
+    #[test]
+    fn double_free_cannot_clobber_reallocated_slot() {
+        // Regression (slot-lifecycle audit): freeing a slot twice used to
+        // silently re-zero it; if the slot had been handed to a new
+        // request in between, that request's KV was wiped. Now the second
+        // free reports false and leaves the region alone.
+        let m = meta();
+        let mut arena = BatchArena::new(&m, 1, 2);
+        let slot = arena.alloc_slot().unwrap();
+        let k_new = HostTensor::new(
+            vec![2, 1, 2, 2],
+            (1..=8).map(|x| x as f32).collect(),
+        );
+        arena.append(slot, &k_new, &k_new);
+        assert!(arena.free_slot(slot));
+        // slot re-allocated by a new "request"
+        let slot2 = arena.alloc_slot().unwrap();
+        assert_eq!(slot2, slot);
+        arena.append(slot2, &k_new, &k_new);
+        // stale double-free from the old owner: must be a no-op
+        assert!(!arena.free_slot(slot));
+        assert_eq!(arena.lens[slot2], 1, "new owner's len survived");
+        let re = arena.row_elems();
+        assert_eq!(
+            &arena.k.data[..re],
+            k_new.row2(0, slot2),
+            "new owner's data survived"
+        );
+        // out-of-range frees are rejected, not a panic
+        assert!(!arena.free_slot(99));
+    }
+
+    #[test]
+    fn realloc_resets_stale_lens() {
+        // Regression (slot-lifecycle audit): a re-allocated slot must
+        // never inherit the previous occupant's lens.
+        let m = meta();
+        let mut arena = BatchArena::new(&m, 1, 4);
+        let slot = arena.alloc_slot().unwrap();
+        let k_new = HostTensor::zeros(vec![2, 1, 2, 2]);
+        arena.append(slot, &k_new, &k_new);
+        arena.append(slot, &k_new, &k_new);
+        assert_eq!(arena.slot_len(slot), 2);
+        arena.free_slot(slot);
+        let slot2 = arena.alloc_slot().unwrap();
+        assert_eq!(arena.slot_len(slot2), 0, "stale length leaked");
+        assert!(arena.lens.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn compact_slot_keeps_rows_and_zeroes_tail() {
+        let m = meta();
+        let k = kv_src(2, 4, 2, 2);
+        let v = kv_src(2, 4, 2, 2);
+        let mut rc = RequestCache::new(&m);
+        rc.fill_layer(0, &k, &v, 0, &[0, 1, 2, 3]);
+        rc.fill_layer(1, &k, &v, 1, &[0, 1, 2]);
+        let mut arena = BatchArena::new(&m, 1, 4);
+        let slot = arena.alloc_slot().unwrap();
+        arena.load(slot, &rc);
+        arena.compact_slot(slot, &[vec![1, 3], vec![2]]);
+        assert_eq!(arena.lens, vec![2, 1]);
+        let re = arena.row_elems();
+        // layer 0 row 0 now holds original token 1, row 1 token 3
+        assert_eq!(&arena.k.data[..re], &rc.k[0][re..2 * re]);
+        assert_eq!(&arena.k.data[re..2 * re], &rc.k[0][3 * re..4 * re]);
+        // trimmed tail zeroed
+        assert!(arena.k.data[2 * re..4 * re].iter().all(|&x| x == 0.0));
     }
 
     #[test]

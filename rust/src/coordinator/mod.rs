@@ -2,13 +2,18 @@
 //!
 //! * `policies`  — FastKV + the five baselines (prefill plans + KV
 //!   selection); all Eq. 1-2 selection math lives in `selection`.
-//! * `kvcache`   — compressed per-request caches and the decode batch
+//! * `kvcache`   — compressed per-request caches and the flat decode batch
 //!   arena (artifact-layout staging).
+//! * `paging`    — the paged KV-cache subsystem: block pool + allocator,
+//!   prefix reuse, FastKV-aware eviction, and the `KvStore` backend trait
+//!   (`PagedArena` is the default backend; `BatchArena` the flat fallback).
 //! * `engine`    — single-request generate loop (evals/benches).
-//! * `scheduler` + `server` — the continuous-batching serving stack.
+//! * `scheduler` + `server` — the continuous-batching serving stack with
+//!   memory-aware admission and preemption.
 
 pub mod engine;
 pub mod kvcache;
+pub mod paging;
 pub mod policies;
 pub mod scheduler;
 pub mod selection;

@@ -1,0 +1,351 @@
+//! Free-list block allocator with reference counting and a prefix-cache
+//! eviction queue.
+//!
+//! Lifecycle of a block:
+//!
+//! ```text
+//!            alloc()                      decref() -> 0, unhashed
+//!   free ───────────────▶ in use (ref>0) ───────────────────────▶ free
+//!     ▲                      │      ▲
+//!     │ alloc() (evict,      │      │ revive() on a prefix hit
+//!     │ hash unregistered)   │ decref() -> 0, hashed
+//!     │                      ▼      │
+//!     └──────────────── evictable (ref=0, content kept)
+//! ```
+//!
+//! *Evictable* blocks are the prefix cache's working set: their contents
+//! are intact and addressable by hash, but they are reclaimed (oldest
+//! first) the moment the free list runs dry.
+
+use std::collections::VecDeque;
+
+use super::block::{BlockId, BlockMeta, BlockStore};
+
+/// Result of an allocation: the block, plus the hash that must be removed
+/// from the prefix cache if the block was reclaimed from the evictable
+/// queue.
+#[derive(Debug, Clone, Copy)]
+pub struct AllocOutcome {
+    pub id: BlockId,
+    pub evicted_hash: Option<u64>,
+}
+
+#[derive(Debug)]
+pub struct BlockAllocator {
+    store: BlockStore,
+    meta: Vec<BlockMeta>,
+    /// Strictly free blocks (no useful content).
+    free: Vec<BlockId>,
+    /// Candidate queue of ref-0 cached blocks, oldest in front (LRU
+    /// eviction order). May contain *stale* entries for blocks revived
+    /// through the prefix cache since being pushed — `revive` is O(1) and
+    /// leaves its entry behind; `alloc` validates on pop. `cached` is the
+    /// exact count of currently-evictable blocks.
+    evictable: VecDeque<BlockId>,
+    cached: usize,
+    /// Copy-on-write block copies performed (stat).
+    pub cow_copies: u64,
+    /// Cached blocks reclaimed for new allocations (stat).
+    pub evictions: u64,
+}
+
+impl BlockAllocator {
+    pub fn new(num_blocks: usize, block_tokens: usize, row_elems: usize) -> Self {
+        // Reverse push so blocks are handed out in 0, 1, 2, ... order
+        // (deterministic layouts make the differential tests readable).
+        let free: Vec<BlockId> =
+            (0..num_blocks as u32).rev().map(BlockId).collect();
+        BlockAllocator {
+            store: BlockStore::new(num_blocks, block_tokens, row_elems),
+            meta: vec![BlockMeta::default(); num_blocks],
+            free,
+            evictable: VecDeque::new(),
+            cached: 0,
+            cow_copies: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn store(&self) -> &BlockStore {
+        &self.store
+    }
+
+    pub fn store_mut(&mut self) -> &mut BlockStore {
+        &mut self.store
+    }
+
+    pub fn meta(&self, id: BlockId) -> &BlockMeta {
+        &self.meta[id.index()]
+    }
+
+    pub fn blocks_total(&self) -> usize {
+        self.store.num_blocks()
+    }
+
+    pub fn blocks_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn blocks_cached(&self) -> usize {
+        self.cached
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.blocks_total() - self.free.len() - self.cached
+    }
+
+    /// Blocks a new allocation burst can obtain (free + evictable).
+    pub fn allocatable(&self) -> usize {
+        self.free.len() + self.cached
+    }
+
+    /// Take a block, preferring the free list and falling back to evicting
+    /// the oldest cached block. Returns `None` only when every block in
+    /// the pool is referenced by a live sequence. Handed-out blocks are
+    /// zeroed: stale KV must never be observable through a fresh block
+    /// even if `filled` bookkeeping were wrong (same hygiene contract as
+    /// `BatchArena::free_slot`).
+    pub fn alloc(&mut self) -> Option<AllocOutcome> {
+        if let Some(id) = self.free.pop() {
+            let m = &mut self.meta[id.index()];
+            debug_assert_eq!(m.ref_count, 0, "free block had refs");
+            m.ref_count = 1;
+            m.filled = 0;
+            m.hash = None;
+            return Some(AllocOutcome { id, evicted_hash: None });
+        }
+        // Pop until a still-valid cached block surfaces; stale entries
+        // (revived since they were parked) are discarded along the way.
+        while let Some(id) = self.evictable.pop_front() {
+            let m = &mut self.meta[id.index()];
+            m.parked = false; // entry consumed either way
+            if m.ref_count != 0 || m.hash.is_none() {
+                continue; // stale: revived or already freed since parked
+            }
+            let evicted_hash = m.hash.take();
+            m.ref_count = 1;
+            m.filled = 0;
+            self.cached -= 1;
+            self.evictions += 1;
+            self.store.zero_block(id);
+            return Some(AllocOutcome { id, evicted_hash });
+        }
+        None
+    }
+
+    pub fn incref(&mut self, id: BlockId) {
+        let m = &mut self.meta[id.index()];
+        assert!(m.ref_count > 0, "incref on unreferenced block {id:?}");
+        m.ref_count += 1;
+    }
+
+    /// Drop one reference. At zero, hashed blocks park in the evictable
+    /// queue (content reusable through the prefix cache); unhashed blocks
+    /// are zeroed and return straight to the free list. Returns the new
+    /// count.
+    pub fn decref(&mut self, id: BlockId) -> u32 {
+        let idx = id.index();
+        assert!(
+            self.meta[idx].ref_count > 0,
+            "decref on unreferenced block {id:?}"
+        );
+        self.meta[idx].ref_count -= 1;
+        let count = self.meta[idx].ref_count;
+        if count == 0 {
+            if self.meta[idx].hash.is_some() {
+                // A revived-then-reparked block may still own a (stale)
+                // queue entry; `parked` keeps it to one entry per block so
+                // the queue can never outgrow the pool.
+                if !self.meta[idx].parked {
+                    self.evictable.push_back(id);
+                    self.meta[idx].parked = true;
+                }
+                self.cached += 1;
+            } else {
+                self.meta[idx].filled = 0;
+                self.store.zero_block(id);
+                self.free.push(id);
+            }
+        }
+        count
+    }
+
+    /// Claim a block found through the prefix cache: live shared blocks
+    /// gain a reference; ref-0 cached blocks are revived in O(1) (their
+    /// evictable-queue entry is left behind as a stale marker that `alloc`
+    /// skips on pop). Returns false if the block no longer holds cached
+    /// content (stale map entry), in which case the caller must treat the
+    /// lookup as a miss.
+    pub fn revive(&mut self, id: BlockId) -> bool {
+        let m = &mut self.meta[id.index()];
+        if m.hash.is_none() {
+            return false;
+        }
+        if m.ref_count > 0 {
+            m.ref_count += 1;
+        } else {
+            m.ref_count = 1;
+            self.cached -= 1;
+        }
+        true
+    }
+
+    /// Mark a full block immutable and addressable under `hash`.
+    pub fn seal(&mut self, id: BlockId, hash: u64) {
+        let m = &mut self.meta[id.index()];
+        debug_assert!(m.ref_count > 0, "sealing unreferenced block");
+        m.hash = Some(hash);
+    }
+
+    /// Clear a seal before mutating a uniquely-owned block in place;
+    /// returns the hash the caller must unregister from the prefix cache.
+    pub fn unseal(&mut self, id: BlockId) -> Option<u64> {
+        self.meta[id.index()].hash.take()
+    }
+
+    pub fn set_filled(&mut self, id: BlockId, rows: u32) {
+        debug_assert!(rows as usize <= self.store.block_tokens());
+        self.meta[id.index()].filled = rows;
+    }
+
+    pub fn note_cow(&mut self) {
+        self.cow_copies += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc3() -> BlockAllocator {
+        BlockAllocator::new(3, 4, 2)
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = alloc3();
+        assert_eq!(a.blocks_free(), 3);
+        let b0 = a.alloc().unwrap().id;
+        let b1 = a.alloc().unwrap().id;
+        assert_eq!((b0, b1), (BlockId(0), BlockId(1)));
+        assert_eq!(a.blocks_in_use(), 2);
+        assert_eq!(a.decref(b0), 0);
+        assert_eq!(a.blocks_free(), 2);
+        assert_eq!(a.blocks_in_use(), 1);
+    }
+
+    #[test]
+    fn refcounted_block_survives_one_decref() {
+        let mut a = alloc3();
+        let b = a.alloc().unwrap().id;
+        a.incref(b);
+        assert_eq!(a.decref(b), 1);
+        assert_eq!(a.blocks_in_use(), 1);
+        assert_eq!(a.decref(b), 0);
+        assert_eq!(a.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn hashed_blocks_park_then_evict_oldest() {
+        let mut a = alloc3();
+        let b0 = a.alloc().unwrap().id;
+        a.seal(b0, 111);
+        let b1 = a.alloc().unwrap().id;
+        a.seal(b1, 222);
+        a.decref(b0);
+        a.decref(b1);
+        assert_eq!(a.blocks_cached(), 2);
+        assert_eq!(a.blocks_free(), 1);
+        // exhaust the free list, then evictions begin with the oldest (b0)
+        let _ = a.alloc().unwrap();
+        let out = a.alloc().unwrap();
+        assert_eq!(out.id, b0);
+        assert_eq!(out.evicted_hash, Some(111));
+        assert_eq!(a.evictions, 1);
+    }
+
+    #[test]
+    fn revive_pulls_from_evictable() {
+        let mut a = alloc3();
+        let b = a.alloc().unwrap().id;
+        a.seal(b, 7);
+        a.decref(b);
+        assert_eq!(a.blocks_cached(), 1);
+        assert!(a.revive(b));
+        assert_eq!(a.meta(b).ref_count, 1);
+        assert_eq!(a.blocks_cached(), 0);
+        // live shared revive just bumps the count
+        assert!(a.revive(b));
+        assert_eq!(a.meta(b).ref_count, 2);
+        // unhashed blocks cannot be revived
+        let u = a.alloc().unwrap().id;
+        a.decref(u);
+        assert!(!a.revive(u));
+    }
+
+    #[test]
+    fn stale_evictable_entries_are_skipped_on_alloc() {
+        // revive() leaves its queue entry behind as a stale marker;
+        // alloc() must discard it instead of evicting the live block, and
+        // accounting must stay exact throughout.
+        let mut a = alloc3();
+        let b = a.alloc().unwrap().id;
+        a.seal(b, 7);
+        a.decref(b); // parked
+        assert!(a.revive(b)); // live again; queue entry now stale
+        assert_eq!(a.blocks_cached(), 0);
+        let c = a.alloc().unwrap().id;
+        a.seal(c, 9);
+        a.decref(c); // queue: [b(stale), c(valid)]
+        assert_eq!(a.blocks_cached(), 1, "counter ignores stale entry");
+        let _ = a.alloc().unwrap(); // drains the free list
+        // eviction must skip the stale b entry and take c
+        let out = a.alloc().unwrap();
+        assert_eq!(out.id, c);
+        assert_eq!(out.evicted_hash, Some(9));
+        assert_eq!(a.blocks_cached(), 0);
+        assert_eq!(a.blocks_in_use(), 3);
+        assert!(a.alloc().is_none(), "pool truly exhausted");
+        assert_eq!(a.evictions, 1);
+        // park/revive/park keeps a single queue entry per block: b can be
+        // evicted exactly once afterwards, not twice
+        a.decref(b);
+        assert!(a.revive(b));
+        a.decref(b);
+        assert_eq!(a.blocks_cached(), 1);
+        let out = a.alloc().unwrap();
+        assert_eq!(out.id, b);
+        assert_eq!(out.evicted_hash, Some(7));
+        assert!(a.alloc().is_none(), "no duplicate entry to double-evict");
+    }
+
+    #[test]
+    fn freed_and_evicted_blocks_are_zeroed() {
+        let mut a = alloc3();
+        let b = a.alloc().unwrap().id;
+        a.store_mut().write_row(b, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        a.decref(b); // unhashed -> free list, zeroed
+        assert!(a.store().k_rows(b, 1).iter().all(|&x| x == 0.0));
+        assert!(a.store().v_rows(b, 1).iter().all(|&x| x == 0.0));
+        // hashed blocks keep content while cached, zeroed on eviction
+        let h = a.alloc().unwrap().id;
+        a.store_mut().write_row(h, 0, &[5.0, 5.0], &[6.0, 6.0]);
+        a.seal(h, 42);
+        a.decref(h);
+        assert_eq!(a.store().k_row(h, 0), &[5.0, 5.0], "cached content kept");
+        let _ = a.alloc().unwrap(); // free list
+        let _ = a.alloc().unwrap(); // free list
+        let out = a.alloc().unwrap(); // evicts h
+        assert_eq!(out.id, h);
+        assert!(a.store().k_rows(h, 1).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut a = alloc3();
+        let ids: Vec<BlockId> = (0..3).map(|_| a.alloc().unwrap().id).collect();
+        assert!(a.alloc().is_none());
+        a.decref(ids[1]);
+        assert!(a.alloc().is_some());
+    }
+}

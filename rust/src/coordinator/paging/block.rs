@@ -1,0 +1,166 @@
+//! Physical block storage for the paged KV cache.
+//!
+//! A *block* holds `block_tokens` consecutive token rows of K and V data
+//! (each row is `kv_heads * head_dim` f32). Blocks carry no layer or
+//! sequence identity of their own — that mapping lives in the per-sequence
+//! block tables owned by `PagedArena` — so any block can serve any
+//! (sequence, layer) position, which is what makes prefix sharing and
+//! copy-on-write possible.
+
+/// Index of a physical block in the pool slab.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u32);
+
+impl BlockId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Per-block bookkeeping kept by the allocator.
+#[derive(Debug, Clone, Default)]
+pub struct BlockMeta {
+    /// Number of block-table entries pointing at this block. 0 means the
+    /// block is on the free list or parked in the evictable (prefix-cache)
+    /// queue.
+    pub ref_count: u32,
+    /// Valid rows in `[0, block_tokens]`.
+    pub filled: u32,
+    /// Chained content hash once the block is full, immutable, and
+    /// registered in the prefix cache. `None` for mutable tail blocks and
+    /// decode-written blocks.
+    pub hash: Option<u64>,
+    /// True while an entry for this block sits in the allocator's
+    /// evictable queue (possibly stale after a revive). Guarantees at most
+    /// one queue entry per block, bounding the queue at pool size.
+    pub parked: bool,
+}
+
+/// Contiguous slab of `num_blocks` fixed-size blocks (K and V planes).
+#[derive(Debug)]
+pub struct BlockStore {
+    block_tokens: usize,
+    row_elems: usize,
+    num_blocks: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl BlockStore {
+    pub fn new(num_blocks: usize, block_tokens: usize, row_elems: usize) -> Self {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        assert!(row_elems > 0, "row_elems must be positive");
+        let elems = num_blocks * block_tokens * row_elems;
+        BlockStore {
+            block_tokens,
+            row_elems,
+            num_blocks,
+            k: vec![0.0; elems],
+            v: vec![0.0; elems],
+        }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.row_elems
+    }
+
+    /// Total f32 elements held (K + V planes), for memory reporting.
+    pub fn total_elems(&self) -> usize {
+        self.k.len() + self.v.len()
+    }
+
+    fn base(&self, block: BlockId, row: usize) -> usize {
+        debug_assert!(block.index() < self.num_blocks, "block out of range");
+        debug_assert!(row < self.block_tokens, "row out of range");
+        (block.index() * self.block_tokens + row) * self.row_elems
+    }
+
+    pub fn write_row(&mut self, block: BlockId, row: usize, k_row: &[f32], v_row: &[f32]) {
+        let re = self.row_elems;
+        assert_eq!(k_row.len(), re, "k row width");
+        assert_eq!(v_row.len(), re, "v row width");
+        let base = self.base(block, row);
+        self.k[base..base + re].copy_from_slice(k_row);
+        self.v[base..base + re].copy_from_slice(v_row);
+    }
+
+    pub fn k_row(&self, block: BlockId, row: usize) -> &[f32] {
+        let base = self.base(block, row);
+        &self.k[base..base + self.row_elems]
+    }
+
+    pub fn v_row(&self, block: BlockId, row: usize) -> &[f32] {
+        let base = self.base(block, row);
+        &self.v[base..base + self.row_elems]
+    }
+
+    /// Borrow `rows` consecutive K rows starting at row 0 (hashing helper).
+    pub fn k_rows(&self, block: BlockId, rows: usize) -> &[f32] {
+        let base = self.base(block, 0);
+        &self.k[base..base + rows * self.row_elems]
+    }
+
+    pub fn v_rows(&self, block: BlockId, rows: usize) -> &[f32] {
+        let base = self.base(block, 0);
+        &self.v[base..base + rows * self.row_elems]
+    }
+
+    /// Copy the first `rows` rows of `src` into `dst` (copy-on-write).
+    /// `src` and `dst` are distinct blocks, so the ranges never overlap.
+    pub fn copy_rows(&mut self, src: BlockId, dst: BlockId, rows: usize) {
+        assert_ne!(src, dst, "copy_rows onto itself");
+        let n = rows * self.row_elems;
+        let s = self.base(src, 0);
+        let d = self.base(dst, 0);
+        self.k.copy_within(s..s + n, d);
+        self.v.copy_within(s..s + n, d);
+    }
+
+    /// Zero a block's contents (hygiene when returning to the free list).
+    pub fn zero_block(&mut self, block: BlockId) {
+        let n = self.block_tokens * self.row_elems;
+        let base = self.base(block, 0);
+        self.k[base..base + n].fill(0.0);
+        self.v[base..base + n].fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_roundtrip() {
+        let mut s = BlockStore::new(4, 2, 3);
+        s.write_row(BlockId(1), 0, &[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
+        s.write_row(BlockId(1), 1, &[7.0, 8.0, 9.0], &[10.0, 11.0, 12.0]);
+        assert_eq!(s.k_row(BlockId(1), 0), &[1.0, 2.0, 3.0]);
+        assert_eq!(s.v_row(BlockId(1), 1), &[10.0, 11.0, 12.0]);
+        assert_eq!(s.k_rows(BlockId(1), 2), &[1.0, 2.0, 3.0, 7.0, 8.0, 9.0]);
+        // neighbours untouched
+        assert!(s.k_row(BlockId(0), 0).iter().all(|&x| x == 0.0));
+        assert!(s.k_row(BlockId(2), 0).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn copy_and_zero() {
+        let mut s = BlockStore::new(3, 2, 2);
+        s.write_row(BlockId(0), 0, &[1.0, 1.0], &[2.0, 2.0]);
+        s.write_row(BlockId(0), 1, &[3.0, 3.0], &[4.0, 4.0]);
+        s.copy_rows(BlockId(0), BlockId(2), 2);
+        assert_eq!(s.k_row(BlockId(2), 1), &[3.0, 3.0]);
+        assert_eq!(s.v_row(BlockId(2), 0), &[2.0, 2.0]);
+        s.zero_block(BlockId(0));
+        assert!(s.k_rows(BlockId(0), 2).iter().all(|&x| x == 0.0));
+        // the copy survives zeroing the source
+        assert_eq!(s.k_row(BlockId(2), 1), &[3.0, 3.0]);
+    }
+}

@@ -1,0 +1,982 @@
+//! Paged KV-cache subsystem: block pool, prefix reuse, and FastKV-aware
+//! eviction.
+//!
+//! The seed runtime staged decode KV in a flat [`BatchArena`] — one
+//! contiguous `[L, B, C, KV, hd]` region, one whole slot per request, no
+//! sharing, no incremental growth. This module replaces that with a
+//! vLLM-style paged design while keeping the decode-artifact ABI intact:
+//!
+//!  * [`block::BlockStore`] — a global slab of fixed-size token blocks;
+//!  * [`allocator::BlockAllocator`] — free-list allocation, ref-counting,
+//!    copy-on-write, and LRU reclamation of cached blocks;
+//!  * [`prefix::PrefixCache`] — chained content hashes so requests sharing
+//!    a compressed-KV prefix reuse physical blocks;
+//!  * [`PagedArena`] — the per-batch façade: per-(sequence, layer) block
+//!    tables plus an incrementally-maintained staging tensor in the exact
+//!    artifact layout, so a decode step still sees one dense input.
+//!
+//! Both arenas implement [`KvStore`], the backend trait the engine,
+//! server, and scheduler program against; `PagedArena` is the default.
+//! See `README.md` in this directory for the design rationale.
+
+pub mod allocator;
+pub mod block;
+pub mod prefix;
+
+use crate::coordinator::kvcache::{BatchArena, RequestCache};
+use crate::manifest::ModelMeta;
+use crate::tensor::{HostTensor, HostTensorI32};
+
+use allocator::BlockAllocator;
+use block::BlockId;
+use prefix::PrefixCache;
+
+/// Tunables for [`PagedArena`].
+#[derive(Debug, Clone)]
+pub struct PagingConfig {
+    /// Tokens per physical block.
+    pub block_tokens: usize,
+    /// Pool size in blocks. `None` sizes the pool for the worst case
+    /// (`L * B * ceil(C / block_tokens)`), which can never under-provision;
+    /// smaller pools enable real memory-aware admission and preemption.
+    pub num_blocks: Option<usize>,
+    /// Enable hash-based prefix reuse of full blocks.
+    pub prefix_cache: bool,
+}
+
+impl Default for PagingConfig {
+    fn default() -> Self {
+        PagingConfig { block_tokens: 16, num_blocks: None, prefix_cache: true }
+    }
+}
+
+/// Outcome of a per-step KV append.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppendResult {
+    /// Row appended on every layer.
+    Ok,
+    /// The sequence hit its staging-lane capacity `C`; the request is done
+    /// growing (same condition the flat arena reported as `false`).
+    CapacityExhausted,
+    /// The block pool cannot supply the blocks this step needs; the caller
+    /// should compact or preempt — the sequence itself is intact.
+    PoolExhausted,
+}
+
+/// Dense decode-step inputs materialized from a KV store.
+#[derive(Debug, Clone)]
+pub struct Staged {
+    /// `[L, B, C, KV, hd]`
+    pub k: HostTensor,
+    pub v: HostTensor,
+    /// `[L, B]` valid rows.
+    pub lens: HostTensorI32,
+}
+
+/// Block-pool gauges for metrics/reporting.
+#[derive(Debug, Clone, Default)]
+pub struct PoolStats {
+    pub blocks_total: usize,
+    pub blocks_in_use: usize,
+    pub blocks_cached: usize,
+    pub blocks_free: usize,
+    pub block_tokens: usize,
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    pub cow_copies: u64,
+    pub evictions: u64,
+    pub alloc_failures: u64,
+}
+
+impl PoolStats {
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Backend abstraction for decode-stage KV storage. The flat
+/// [`BatchArena`] and the paged [`PagedArena`] both implement it; the
+/// engine and server program against this trait only.
+pub trait KvStore {
+    /// Number of decode lanes (batch slots).
+    fn slots(&self) -> usize;
+    fn free_slots(&self) -> usize;
+    /// Per-lane token capacity `C` of the staging layout.
+    fn capacity(&self) -> usize;
+    /// Cheap pre-prefill admission check from a post-compression per-layer
+    /// token estimate. `max_new` is the remaining decode budget; backends
+    /// may reserve only minimal growth headroom for it (over-commit),
+    /// relying on compaction/preemption for the rest.
+    fn can_admit(&self, per_layer_tokens: usize, max_new: usize) -> bool;
+    /// Whether a request with this post-compression budget could EVER be
+    /// admitted, even on a fully drained store (lane + pool sizing
+    /// permitting). Distinguishes "wait for memory" from "hopeless" —
+    /// e.g. preemption must not requeue a request the pool can never
+    /// take back.
+    fn could_ever_admit(&self, per_layer_tokens: usize) -> bool;
+    /// Load a compressed request cache; `None` when no lane is free or the
+    /// pool cannot cover it (the store is left unchanged in that case).
+    fn admit(&mut self, cache: &RequestCache) -> Option<usize>;
+    /// Release a lane and its storage. Returns false if it was not in use
+    /// (double-release guard).
+    fn release(&mut self, slot: usize) -> bool;
+    /// Append one decode step's KV row per layer
+    /// (`k_new`/`v_new`: `[L, B, KV, hd]`).
+    fn append(&mut self, slot: usize, k_new: &HostTensor, v_new: &HostTensor) -> AppendResult;
+    /// Valid rows per layer for a lane.
+    fn layer_lens(&self, slot: usize) -> Vec<usize>;
+    /// Longest per-layer length for a lane.
+    fn seq_len(&self, slot: usize) -> usize {
+        self.layer_lens(slot).into_iter().max().unwrap_or(0)
+    }
+    /// Block-granular eviction: retain only `keep[l]` (ascending logical
+    /// row indices) on each layer. Returns physical blocks actually
+    /// released back to the pool.
+    fn compact(&mut self, slot: usize, keep: &[Vec<usize>]) -> usize;
+    /// Materialize dense decode inputs.
+    fn stage(&self) -> Staged;
+    fn pool_stats(&self) -> PoolStats;
+}
+
+// ---------------------------------------------------------------------------
+// PagedArena
+
+/// Paged decode KV store: per-(lane, layer) block tables over a shared
+/// ref-counted pool, plus an incrementally-maintained dense staging copy
+/// in artifact layout (the ABI bridge to the compiled decode step).
+#[derive(Debug)]
+pub struct PagedArena {
+    l: usize,
+    b: usize,
+    c: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    block_tokens: usize,
+    alloc: BlockAllocator,
+    prefix: PrefixCache,
+    /// `tables[slot][layer]` → physical blocks, in logical order.
+    tables: Vec<Vec<Vec<BlockId>>>,
+    /// `lens[slot][layer]` → valid tokens.
+    lens: Vec<Vec<usize>>,
+    used: Vec<bool>,
+    stage_k: HostTensor,
+    stage_v: HostTensor,
+    alloc_failures: u64,
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+impl PagedArena {
+    pub fn new(meta: &ModelMeta, b: usize, c: usize, cfg: PagingConfig) -> Self {
+        let l = meta.n_layers;
+        let re = meta.n_kv_heads * meta.head_dim;
+        let bt = cfg.block_tokens.max(1);
+        let worst = l * b * ceil_div(c.max(1), bt);
+        let num_blocks = cfg.num_blocks.unwrap_or(worst).max(1);
+        let shape = vec![l, b, c, meta.n_kv_heads, meta.head_dim];
+        PagedArena {
+            l,
+            b,
+            c,
+            kv_heads: meta.n_kv_heads,
+            head_dim: meta.head_dim,
+            block_tokens: bt,
+            alloc: BlockAllocator::new(num_blocks, bt, re),
+            prefix: PrefixCache::new(cfg.prefix_cache),
+            tables: vec![vec![Vec::new(); l]; b],
+            lens: vec![vec![0; l]; b],
+            used: vec![false; b],
+            stage_k: HostTensor::zeros(shape.clone()),
+            stage_v: HostTensor::zeros(shape),
+            alloc_failures: 0,
+        }
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    fn stage_base(&self, l: usize, slot: usize, row: usize) -> usize {
+        ((l * self.b + slot) * self.c + row) * self.row_elems()
+    }
+
+    /// Blocks a sequence of `per_layer_tokens` per layer would need,
+    /// assuming no sharing (conservative).
+    pub fn blocks_for(&self, per_layer_tokens: usize) -> usize {
+        self.l * ceil_div(per_layer_tokens, self.block_tokens)
+    }
+
+    fn find_free_lane(&self) -> Option<usize> {
+        (0..self.b).find(|&s| !self.used[s])
+    }
+
+    /// Undo a partial admission: drop every reference acquired so far.
+    fn rollback(&mut self, acquired: Vec<BlockId>) {
+        for id in acquired {
+            self.alloc.decref(id);
+        }
+        self.alloc_failures += 1;
+    }
+
+    /// Chunk `len` rows of K/V (row-major, `row_elems`-wide) into freshly
+    /// allocated, unsealed blocks. The caller must have pre-checked pool
+    /// feasibility — every `alloc` here is expected to succeed.
+    fn fill_blocks(
+        &mut self,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        len: usize,
+    ) -> Vec<BlockId> {
+        let bt = self.block_tokens;
+        let re = self.row_elems();
+        let mut table = Vec::with_capacity(ceil_div(len, bt));
+        let mut row0 = 0usize;
+        while row0 < len {
+            let rows = (len - row0).min(bt);
+            let out = self.alloc.alloc().expect("pre-checked block alloc");
+            if let Some(old_hash) = out.evicted_hash {
+                self.prefix.remove(old_hash);
+            }
+            for r in 0..rows {
+                let s = (row0 + r) * re;
+                self.alloc.store_mut().write_row(
+                    out.id,
+                    r,
+                    &k_rows[s..s + re],
+                    &v_rows[s..s + re],
+                );
+            }
+            self.alloc.set_filled(out.id, rows as u32);
+            table.push(out.id);
+            row0 += rows;
+        }
+        table
+    }
+
+    /// Load a compressed request cache into a free lane, sharing full
+    /// blocks through the prefix cache where the content chain matches.
+    pub fn admit(&mut self, cache: &RequestCache) -> Option<usize> {
+        let slot = self.find_free_lane()?;
+        assert_eq!(cache.k.len(), self.l, "cache layer count");
+        let re = self.row_elems();
+        assert_eq!(cache.row_elems(), re, "cache row width");
+        for l in 0..self.l {
+            if cache.lens[l] > self.c {
+                return None;
+            }
+        }
+
+        let bt = self.block_tokens;
+        let mut new_tables: Vec<Vec<BlockId>> = Vec::with_capacity(self.l);
+        let mut acquired: Vec<BlockId> = Vec::new();
+        for l in 0..self.l {
+            let len = cache.lens[l];
+            let mut table = Vec::with_capacity(ceil_div(len, bt));
+            let mut chain = prefix::layer_seed(l);
+            let mut row0 = 0usize;
+            while row0 < len {
+                let rows = (len - row0).min(bt);
+                let full = rows == bt;
+                let k_rows = &cache.k[l][row0 * re..(row0 + rows) * re];
+                let v_rows = &cache.v[l][row0 * re..(row0 + rows) * re];
+                let mut reused = None;
+                let mut hash = 0u64;
+                if full && self.prefix.enabled {
+                    hash = prefix::chain_hash(chain, l, k_rows, v_rows);
+                    if let Some(bid) = self.prefix.lookup(hash) {
+                        if self.alloc.revive(bid) {
+                            reused = Some(bid);
+                        } else {
+                            // stale map entry; treat as a miss
+                            self.prefix.remove(hash);
+                        }
+                    }
+                }
+                let bid = match reused {
+                    Some(bid) => bid,
+                    None => match self.alloc.alloc() {
+                        Some(out) => {
+                            if let Some(old) = out.evicted_hash {
+                                self.prefix.remove(old);
+                            }
+                            for r in 0..rows {
+                                self.alloc.store_mut().write_row(
+                                    out.id,
+                                    r,
+                                    &k_rows[r * re..(r + 1) * re],
+                                    &v_rows[r * re..(r + 1) * re],
+                                );
+                            }
+                            self.alloc.set_filled(out.id, rows as u32);
+                            if full && self.prefix.enabled {
+                                self.alloc.seal(out.id, hash);
+                                self.prefix.insert(hash, out.id);
+                            }
+                            out.id
+                        }
+                        None => {
+                            self.rollback(acquired);
+                            return None;
+                        }
+                    },
+                };
+                table.push(bid);
+                acquired.push(bid);
+                if full {
+                    chain = hash;
+                }
+                row0 += rows;
+            }
+            new_tables.push(table);
+        }
+
+        // Commit: bookkeeping + staging copy (read rows back from the
+        // store so shared and fresh blocks take the same path).
+        self.used[slot] = true;
+        for (l, table) in new_tables.iter().enumerate() {
+            let mut row = 0usize;
+            {
+                let alloc = &self.alloc;
+                let store = alloc.store();
+                let stage_k = &mut self.stage_k;
+                let stage_v = &mut self.stage_v;
+                for &bid in table {
+                    let filled = alloc.meta(bid).filled as usize;
+                    for r in 0..filled {
+                        let base =
+                            ((l * self.b + slot) * self.c + row) * re;
+                        stage_k.data[base..base + re]
+                            .copy_from_slice(store.k_row(bid, r));
+                        stage_v.data[base..base + re]
+                            .copy_from_slice(store.v_row(bid, r));
+                        row += 1;
+                    }
+                }
+            }
+            debug_assert_eq!(row, cache.lens[l], "staged rows vs cache len");
+            // lane was zeroed on release; rows above `row` are already 0
+            self.lens[slot][l] = cache.lens[l];
+        }
+        self.tables[slot] = new_tables;
+        Some(slot)
+    }
+
+    /// Fork a lane (shared-prefix clone for parallel decoding): every
+    /// block gains a reference; appends later copy-on-write the shared
+    /// tail. Fails only when no lane is free.
+    pub fn fork(&mut self, slot: usize) -> Option<usize> {
+        if !self.used[slot] {
+            return None;
+        }
+        let dst = self.find_free_lane()?;
+        let tables = self.tables[slot].clone();
+        for layer_table in &tables {
+            for &bid in layer_table {
+                self.alloc.incref(bid);
+            }
+        }
+        self.tables[dst] = tables;
+        self.lens[dst] = self.lens[slot].clone();
+        self.used[dst] = true;
+        let re = self.row_elems();
+        for l in 0..self.l {
+            let src = self.stage_base(l, slot, 0);
+            let d = self.stage_base(l, dst, 0);
+            let n = self.c * re;
+            self.stage_k.data.copy_within(src..src + n, d);
+            self.stage_v.data.copy_within(src..src + n, d);
+        }
+        Some(dst)
+    }
+
+    pub fn release(&mut self, slot: usize) -> bool {
+        if slot >= self.b || !self.used[slot] {
+            return false;
+        }
+        let tables = std::mem::take(&mut self.tables[slot]);
+        for layer_table in tables {
+            for bid in layer_table {
+                self.alloc.decref(bid);
+            }
+        }
+        self.tables[slot] = vec![Vec::new(); self.l];
+        self.lens[slot] = vec![0; self.l];
+        self.used[slot] = false;
+        let re = self.row_elems();
+        for l in 0..self.l {
+            let base = self.stage_base(l, slot, 0);
+            let n = self.c * re;
+            self.stage_k.data[base..base + n].fill(0.0);
+            self.stage_v.data[base..base + n].fill(0.0);
+        }
+        true
+    }
+
+    /// Append one decode row per layer, allocating / copy-on-writing tail
+    /// blocks as needed. All-or-nothing: a pool shortfall is detected
+    /// before any mutation.
+    pub fn append(
+        &mut self,
+        slot: usize,
+        k_new: &HostTensor,
+        v_new: &HostTensor,
+    ) -> AppendResult {
+        if slot >= self.b || !self.used[slot] {
+            debug_assert!(false, "append to unused slot {slot}");
+            return AppendResult::CapacityExhausted;
+        }
+        let bt = self.block_tokens;
+        for l in 0..self.l {
+            if self.lens[slot][l] >= self.c {
+                return AppendResult::CapacityExhausted;
+            }
+        }
+        // Pre-pass: blocks this step must obtain from the pool.
+        let mut needed = 0usize;
+        for l in 0..self.l {
+            let len = self.lens[slot][l];
+            if len % bt == 0 {
+                needed += 1; // fresh tail block
+            } else {
+                let cur = *self.tables[slot][l].last().expect("tail block");
+                if self.alloc.meta(cur).ref_count > 1 {
+                    needed += 1; // copy-on-write
+                }
+            }
+        }
+        if self.alloc.allocatable() < needed {
+            self.alloc_failures += 1;
+            return AppendResult::PoolExhausted;
+        }
+
+        let re = self.row_elems();
+        for l in 0..self.l {
+            let len = self.lens[slot][l];
+            let row_in_block = len % bt;
+            let bid = if row_in_block == 0 {
+                let out = self.alloc.alloc().expect("pre-checked alloc");
+                if let Some(old) = out.evicted_hash {
+                    self.prefix.remove(old);
+                }
+                self.tables[slot][l].push(out.id);
+                out.id
+            } else {
+                let cur = *self.tables[slot][l].last().expect("tail block");
+                let meta = self.alloc.meta(cur).clone();
+                if meta.ref_count > 1 {
+                    // Copy-on-write: private copy of the shared tail.
+                    let out = self.alloc.alloc().expect("pre-checked alloc");
+                    if let Some(old) = out.evicted_hash {
+                        self.prefix.remove(old);
+                    }
+                    self.alloc
+                        .store_mut()
+                        .copy_rows(cur, out.id, meta.filled as usize);
+                    self.alloc.set_filled(out.id, meta.filled);
+                    self.alloc.decref(cur);
+                    *self.tables[slot][l].last_mut().expect("tail") = out.id;
+                    self.alloc.note_cow();
+                    out.id
+                } else {
+                    if meta.hash.is_some() {
+                        // Uniquely owned but registered: unregister before
+                        // mutating so the prefix cache never aliases
+                        // diverged content.
+                        if let Some(h) = self.alloc.unseal(cur) {
+                            self.prefix.remove(h);
+                        }
+                    }
+                    cur
+                }
+            };
+            let k_row = &k_new.row2(l, slot)[..re];
+            let v_row = &v_new.row2(l, slot)[..re];
+            self.alloc.store_mut().write_row(bid, row_in_block, k_row, v_row);
+            self.alloc.set_filled(bid, (row_in_block + 1) as u32);
+            let base = self.stage_base(l, slot, len);
+            self.stage_k.data[base..base + re].copy_from_slice(k_row);
+            self.stage_v.data[base..base + re].copy_from_slice(v_row);
+            self.lens[slot][l] = len + 1;
+        }
+        AppendResult::Ok
+    }
+
+    /// Block-granular eviction: keep only `keep[l]` rows per layer,
+    /// rebuilding only the layers that actually shrink so dropped tokens
+    /// release pool blocks (identity keep-sets touch nothing). No-op
+    /// (returns 0) if the pool temporarily cannot hold the rebuilt layers
+    /// (possible when old blocks are shared).
+    pub fn compact(&mut self, slot: usize, keep: &[Vec<usize>]) -> usize {
+        if slot >= self.b || !self.used[slot] {
+            return 0;
+        }
+        assert_eq!(keep.len(), self.l, "keep sets per layer");
+        let bt = self.block_tokens;
+        let re = self.row_elems();
+
+        // Only layers that shrink are rebuilt: an identity keep-set (all
+        // rows retained — ascending distinct indices below len imply
+        // exactly that when the counts match) would otherwise burn scarce
+        // blocks and privatize shared ones for zero release.
+        let shrinking: Vec<usize> = (0..self.l)
+            .filter(|&l| keep[l].len() < self.lens[slot][l])
+            .collect();
+        if shrinking.is_empty() {
+            return 0;
+        }
+
+        // Feasibility: all shrinking layers are gathered and decref'd
+        // BEFORE any allocation (see below), so the rebuild draws from
+        // allocatable() + every exclusively-owned old block.
+        let mut needed_new = 0usize;
+        let mut freeable = 0usize;
+        for &l in &shrinking {
+            needed_new += ceil_div(keep[l].len(), bt);
+            for &bid in &self.tables[slot][l] {
+                if self.alloc.meta(bid).ref_count == 1 {
+                    freeable += 1;
+                }
+            }
+        }
+        if self.alloc.allocatable() + freeable < needed_new {
+            return 0;
+        }
+
+        let in_use_before = self.alloc.blocks_in_use();
+        // Phase 1: gather every shrinking layer's survivors, then release
+        // every old block. Interleaving gather/alloc per layer would let
+        // an early layer's allocations consume blocks a later layer's
+        // decrefs were counted on (shared early layers free nothing), and
+        // decref zeroes freed blocks — so all reads complete first.
+        let mut gathered: Vec<(usize, usize, Vec<f32>, Vec<f32>)> =
+            Vec::with_capacity(shrinking.len());
+        for &l in &shrinking {
+            let old_len = self.lens[slot][l];
+            let keep_l = &keep[l];
+            debug_assert!(
+                keep_l.windows(2).all(|w| w[0] < w[1]),
+                "keep indices must be ascending and distinct"
+            );
+            let mut tk = Vec::with_capacity(keep_l.len() * re);
+            let mut tv = Vec::with_capacity(keep_l.len() * re);
+            for &idx in keep_l {
+                assert!(idx < old_len, "keep index {idx} >= len {old_len}");
+                let bid = self.tables[slot][l][idx / bt];
+                let r = idx % bt;
+                tk.extend_from_slice(self.alloc.store().k_row(bid, r));
+                tv.extend_from_slice(self.alloc.store().v_row(bid, r));
+            }
+            gathered.push((l, old_len, tk, tv));
+        }
+        for &l in &shrinking {
+            let old = std::mem::take(&mut self.tables[slot][l]);
+            for bid in old {
+                self.alloc.decref(bid);
+            }
+        }
+
+        // Phase 2: rebuild (unsealed: content has diverged from any
+        // registered prefix). The feasibility check above guarantees
+        // every alloc() succeeds.
+        for (l, old_len, tk, tv) in gathered {
+            let new_len = keep[l].len();
+            self.tables[slot][l] = self.fill_blocks(&tk, &tv, new_len);
+            self.lens[slot][l] = new_len;
+            // Staging: survivors first, zero the trimmed tail.
+            let base = self.stage_base(l, slot, 0);
+            self.stage_k.data[base..base + new_len * re]
+                .copy_from_slice(&tk);
+            self.stage_v.data[base..base + new_len * re]
+                .copy_from_slice(&tv);
+            let tail0 = base + new_len * re;
+            let tail1 = base + old_len * re;
+            self.stage_k.data[tail0..tail1].fill(0.0);
+            self.stage_v.data[tail0..tail1].fill(0.0);
+        }
+        in_use_before.saturating_sub(self.alloc.blocks_in_use())
+    }
+
+    pub fn layer_lens(&self, slot: usize) -> Vec<usize> {
+        self.lens[slot].clone()
+    }
+
+    pub fn stage(&self) -> Staged {
+        let mut lens = vec![0i32; self.l * self.b];
+        for slot in 0..self.b {
+            for l in 0..self.l {
+                lens[l * self.b + slot] = self.lens[slot][l] as i32;
+            }
+        }
+        Staged {
+            k: self.stage_k.clone(),
+            v: self.stage_v.clone(),
+            lens: HostTensorI32::new(vec![self.l, self.b], lens),
+        }
+    }
+
+    pub fn pool_stats(&self) -> PoolStats {
+        PoolStats {
+            blocks_total: self.alloc.blocks_total(),
+            blocks_in_use: self.alloc.blocks_in_use(),
+            blocks_cached: self.alloc.blocks_cached(),
+            blocks_free: self.alloc.blocks_free(),
+            block_tokens: self.block_tokens,
+            prefix_hits: self.prefix.hits,
+            prefix_misses: self.prefix.misses,
+            cow_copies: self.alloc.cow_copies,
+            evictions: self.alloc.evictions,
+            alloc_failures: self.alloc_failures,
+        }
+    }
+
+    pub fn free_lanes(&self) -> usize {
+        self.used.iter().filter(|u| !**u).count()
+    }
+}
+
+impl KvStore for PagedArena {
+    fn slots(&self) -> usize {
+        self.b
+    }
+
+    fn free_slots(&self) -> usize {
+        self.free_lanes()
+    }
+
+    fn capacity(&self) -> usize {
+        self.c
+    }
+
+    fn can_admit(&self, per_layer_tokens: usize, max_new: usize) -> bool {
+        if self.free_lanes() == 0 || per_layer_tokens > self.c {
+            return false;
+        }
+        // Admission covers the request's post-compression KV budget plus
+        // one growth block per layer if it will decode at all. Growth
+        // beyond that headroom is deliberately NOT reserved (vLLM-style
+        // over-commit): it is absorbed by block compaction and, failing
+        // that, preemption — reserving worst-case `max_new` growth up
+        // front would forfeit most of the batching the paged pool exists
+        // to provide.
+        let headroom = if max_new == 0 { 0 } else { self.l };
+        self.blocks_for(per_layer_tokens) + headroom
+            <= self.alloc.allocatable()
+    }
+
+    fn could_ever_admit(&self, per_layer_tokens: usize) -> bool {
+        per_layer_tokens <= self.c
+            && self.blocks_for(per_layer_tokens) + self.l
+                <= self.alloc.blocks_total()
+    }
+
+    fn admit(&mut self, cache: &RequestCache) -> Option<usize> {
+        PagedArena::admit(self, cache)
+    }
+
+    fn release(&mut self, slot: usize) -> bool {
+        PagedArena::release(self, slot)
+    }
+
+    fn append(&mut self, slot: usize, k_new: &HostTensor, v_new: &HostTensor) -> AppendResult {
+        PagedArena::append(self, slot, k_new, v_new)
+    }
+
+    fn layer_lens(&self, slot: usize) -> Vec<usize> {
+        PagedArena::layer_lens(self, slot)
+    }
+
+    fn compact(&mut self, slot: usize, keep: &[Vec<usize>]) -> usize {
+        PagedArena::compact(self, slot, keep)
+    }
+
+    fn stage(&self) -> Staged {
+        PagedArena::stage(self)
+    }
+
+    fn pool_stats(&self) -> PoolStats {
+        PagedArena::pool_stats(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Flat BatchArena as a KvStore backend (the seed behavior, kept for
+// comparison benches and as a fallback).
+
+impl KvStore for BatchArena {
+    fn slots(&self) -> usize {
+        self.b
+    }
+
+    fn free_slots(&self) -> usize {
+        BatchArena::free_slots(self)
+    }
+
+    fn capacity(&self) -> usize {
+        self.c
+    }
+
+    fn can_admit(&self, per_layer_tokens: usize, _max_new: usize) -> bool {
+        // Seed semantics: admission needs a lane and a cache that fits;
+        // decode growth past C just stops the request early.
+        BatchArena::free_slots(self) > 0 && per_layer_tokens <= self.c
+    }
+
+    fn could_ever_admit(&self, per_layer_tokens: usize) -> bool {
+        per_layer_tokens <= self.c
+    }
+
+    fn admit(&mut self, cache: &RequestCache) -> Option<usize> {
+        if cache.max_len() > self.c {
+            return None;
+        }
+        let slot = self.alloc_slot()?;
+        self.load(slot, cache);
+        Some(slot)
+    }
+
+    fn release(&mut self, slot: usize) -> bool {
+        self.free_slot(slot)
+    }
+
+    fn append(&mut self, slot: usize, k_new: &HostTensor, v_new: &HostTensor) -> AppendResult {
+        if BatchArena::append(self, slot, k_new, v_new) {
+            AppendResult::Ok
+        } else {
+            AppendResult::CapacityExhausted
+        }
+    }
+
+    fn layer_lens(&self, slot: usize) -> Vec<usize> {
+        (0..self.l).map(|l| self.lens[l * self.b + slot] as usize).collect()
+    }
+
+    fn compact(&mut self, slot: usize, keep: &[Vec<usize>]) -> usize {
+        self.compact_slot(slot, keep);
+        0 // flat slab: no blocks to release
+    }
+
+    fn stage(&self) -> Staged {
+        Staged {
+            k: self.k.clone(),
+            v: self.v.clone(),
+            lens: self.lens_tensor(),
+        }
+    }
+
+    fn pool_stats(&self) -> PoolStats {
+        PoolStats::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            vocab_size: 256,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 2,
+            head_dim: 2,
+            tsp_layer: 1,
+            window: 2,
+            pool_kernel: 3,
+            max_train_len: 64,
+        }
+    }
+
+    fn cache_with(m: &ModelMeta, lens: &[usize], tag: f32) -> RequestCache {
+        let mut rc = RequestCache::new(m);
+        let re = m.n_kv_heads * m.head_dim;
+        for (l, &len) in lens.iter().enumerate() {
+            rc.k[l] = (0..len * re)
+                .map(|i| tag + (l * 10_000 + i) as f32)
+                .collect();
+            rc.v[l] = (0..len * re)
+                .map(|i| -(tag + (l * 10_000 + i) as f32))
+                .collect();
+            rc.lens[l] = len;
+        }
+        rc
+    }
+
+    #[test]
+    fn admit_stage_release_roundtrip() {
+        let m = meta();
+        let cfg = PagingConfig { block_tokens: 4, ..Default::default() };
+        let mut pa = PagedArena::new(&m, 2, 12, cfg);
+        let rc = cache_with(&m, &[6, 3], 1.0);
+        let slot = PagedArena::admit(&mut pa, &rc).unwrap();
+        assert_eq!(pa.layer_lens(slot), vec![6, 3]);
+        let st = pa.stage();
+        let re = pa.row_elems();
+        // layer 0 row 0 must equal the cache's first row
+        let base = ((0 * 2 + slot) * 12) * re;
+        assert_eq!(&st.k.data[base..base + re], &rc.k[0][..re]);
+        assert_eq!(st.lens.data[slot], 6);
+        assert_eq!(st.lens.data[2 + slot], 3);
+        // blocks: layer0 ceil(6/4)=2, layer1 ceil(3/4)=1
+        assert_eq!(pa.pool_stats().blocks_in_use, 3);
+        assert!(pa.release(slot));
+        assert!(!pa.release(slot), "double release guarded");
+        // full unshared blocks were sealed, so they park in the cache
+        let ps = pa.pool_stats();
+        assert_eq!(ps.blocks_in_use, 0);
+        assert!(st.k.data[base] != 0.0);
+    }
+
+    #[test]
+    fn shared_prompt_reuses_full_blocks() {
+        let m = meta();
+        let cfg = PagingConfig { block_tokens: 4, ..Default::default() };
+        let mut pa = PagedArena::new(&m, 2, 16, cfg);
+        let rc = cache_with(&m, &[8, 8], 2.0);
+        let s0 = PagedArena::admit(&mut pa, &rc).unwrap();
+        let used_one = pa.pool_stats().blocks_in_use;
+        assert_eq!(used_one, 4); // 2 layers x 2 full blocks
+        let s1 = PagedArena::admit(&mut pa, &rc).unwrap();
+        let ps = pa.pool_stats();
+        // identical content: the second admit allocates nothing new
+        assert_eq!(ps.blocks_in_use, used_one);
+        assert!(ps.prefix_hits >= 4, "hits {}", ps.prefix_hits);
+        // staged lanes identical
+        let st = pa.stage();
+        let re = pa.row_elems();
+        for l in 0..2 {
+            let b0 = ((l * 2 + s0) * 16) * re;
+            let b1 = ((l * 2 + s1) * 16) * re;
+            assert_eq!(
+                &st.k.data[b0..b0 + 8 * re],
+                &st.k.data[b1..b1 + 8 * re]
+            );
+        }
+    }
+
+    #[test]
+    fn append_and_capacity() {
+        let m = meta();
+        let cfg = PagingConfig { block_tokens: 2, ..Default::default() };
+        let mut pa = PagedArena::new(&m, 1, 3, cfg);
+        let rc = cache_with(&m, &[2, 2], 3.0);
+        let slot = PagedArena::admit(&mut pa, &rc).unwrap();
+        let step = HostTensor::new(
+            vec![2, 1, 2, 2],
+            (0..8).map(|x| 100.0 + x as f32).collect(),
+        );
+        assert_eq!(
+            PagedArena::append(&mut pa, slot, &step, &step),
+            AppendResult::Ok
+        );
+        assert_eq!(pa.layer_lens(slot), vec![3, 3]);
+        assert_eq!(
+            PagedArena::append(&mut pa, slot, &step, &step),
+            AppendResult::CapacityExhausted
+        );
+        let st = pa.stage();
+        let re = pa.row_elems();
+        let base = ((0 * 1 + slot) * 3 + 2) * re;
+        assert_eq!(&st.k.data[base..base + re], step.row2(0, slot));
+    }
+
+    #[test]
+    fn pool_exhaustion_is_not_capacity() {
+        let m = meta();
+        let cfg = PagingConfig {
+            block_tokens: 2,
+            num_blocks: Some(2),
+            ..Default::default()
+        };
+        let mut pa = PagedArena::new(&m, 1, 8, cfg);
+        let rc = cache_with(&m, &[2, 2], 4.0);
+        let slot = PagedArena::admit(&mut pa, &rc).unwrap();
+        let step = HostTensor::zeros(vec![2, 1, 2, 2]);
+        // both blocks used; the next append needs 2 fresh tail blocks
+        assert_eq!(
+            PagedArena::append(&mut pa, slot, &step, &step),
+            AppendResult::PoolExhausted
+        );
+        assert_eq!(pa.layer_lens(slot), vec![2, 2], "append was atomic");
+        assert_eq!(pa.pool_stats().alloc_failures, 1);
+    }
+
+    #[test]
+    fn fork_then_append_copies_on_write() {
+        let m = meta();
+        let cfg = PagingConfig { block_tokens: 4, ..Default::default() };
+        let mut pa = PagedArena::new(&m, 2, 8, cfg);
+        let rc = cache_with(&m, &[6, 6], 5.0);
+        let s0 = PagedArena::admit(&mut pa, &rc).unwrap();
+        let used_one = pa.pool_stats().blocks_in_use;
+        let s1 = pa.fork(s0).unwrap();
+        assert_eq!(pa.pool_stats().blocks_in_use, used_one, "fork is free");
+        let step = HostTensor::new(vec![2, 2, 2, 2], vec![9.0; 16]);
+        assert_eq!(
+            PagedArena::append(&mut pa, s1, &step, &step),
+            AppendResult::Ok
+        );
+        let ps = pa.pool_stats();
+        assert!(ps.cow_copies >= 1, "tail was shared -> COW");
+        // parent unchanged: its staged tail row is still zero
+        let st = pa.stage();
+        let re = pa.row_elems();
+        let parent_row6 = ((0 * 2 + s0) * 8 + 6) * re;
+        assert!(st.k.data[parent_row6..parent_row6 + re]
+            .iter()
+            .all(|&x| x == 0.0));
+        let child_row6 = ((0 * 2 + s1) * 8 + 6) * re;
+        assert_eq!(&st.k.data[child_row6..child_row6 + re], &[9.0; 4][..]);
+    }
+
+    #[test]
+    fn compact_releases_blocks() {
+        let m = meta();
+        let cfg = PagingConfig { block_tokens: 2, ..Default::default() };
+        let mut pa = PagedArena::new(&m, 1, 8, cfg);
+        let rc = cache_with(&m, &[8, 8], 6.0);
+        let slot = PagedArena::admit(&mut pa, &rc).unwrap();
+        assert_eq!(pa.pool_stats().blocks_in_use, 8);
+        // keep rows {0, 7} per layer
+        let keep = vec![vec![0usize, 7], vec![0usize, 7]];
+        let released = PagedArena::compact(&mut pa, slot, &keep);
+        assert!(released >= 6, "released {released}");
+        assert_eq!(pa.layer_lens(slot), vec![2, 2]);
+        let st = pa.stage();
+        let re = pa.row_elems();
+        // row 1 of layer 0 staging now holds old row 7
+        let base = ((0 * 1 + slot) * 8 + 1) * re;
+        assert_eq!(&st.k.data[base..base + re], &rc.k[0][7 * re..8 * re]);
+        // rows beyond the kept set are zeroed
+        let tail = ((0 * 1 + slot) * 8 + 2) * re;
+        assert!(st.k.data[tail..tail + re].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn can_admit_accounts_for_pool() {
+        let m = meta();
+        let cfg = PagingConfig {
+            block_tokens: 2,
+            num_blocks: Some(4),
+            ..Default::default()
+        };
+        let pa = PagedArena::new(&m, 2, 8, cfg);
+        // budget 2 layers x ceil(2/2)=2 + 2 headroom -> 4 blocks: fits
+        assert!(KvStore::can_admit(&pa, 2, 2));
+        // budget 2 layers x ceil(4/2)=4 + 2 headroom -> 6 blocks: too big
+        assert!(!KvStore::can_admit(&pa, 4, 2));
+        // no decode growth -> no headroom reserved: exactly fits
+        assert!(KvStore::can_admit(&pa, 4, 0));
+    }
+}

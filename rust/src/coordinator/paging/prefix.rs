@@ -1,0 +1,131 @@
+//! Hash-based prefix cache: content-addressed reuse of full KV blocks.
+//!
+//! Each full block loaded at admission is hashed with a *chained* FNV-1a
+//! over (previous chain value, layer, the block's K and V rows), so a hash
+//! identifies both the block's content and its position in the sequence —
+//! exactly the vLLM prefix-caching keying, except we hash the compressed
+//! KV rows themselves rather than prompt token ids. Hashing content makes
+//! reuse policy-aware for free: two requests share a block iff the policy
+//! actually produced identical retained KV for that span, which holds for
+//! shared prompts under any deterministic policy.
+//!
+//! Collisions: 64-bit FNV over full row bytes; a false positive requires a
+//! 2^-64-scale collision on same-layer same-chain content. Accepted (and
+//! documented) like vLLM's token-hash scheme.
+
+use std::collections::HashMap;
+
+use super::block::BlockId;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Chain seed for the first block of a layer (layer-distinct so identical
+/// content in different layers never aliases).
+pub fn layer_seed(layer: usize) -> u64 {
+    fnv1a(FNV_OFFSET, &(layer as u64).to_le_bytes())
+}
+
+/// Chained block hash: previous chain value + layer + row contents.
+pub fn chain_hash(prev: u64, layer: usize, k_rows: &[f32], v_rows: &[f32]) -> u64 {
+    let mut h = fnv1a(prev, &(layer as u64).to_le_bytes());
+    for &x in k_rows {
+        h = fnv1a(h, &x.to_bits().to_le_bytes());
+    }
+    for &x in v_rows {
+        h = fnv1a(h, &x.to_bits().to_le_bytes());
+    }
+    h
+}
+
+/// Hash → physical block map with hit/miss accounting.
+#[derive(Debug)]
+pub struct PrefixCache {
+    map: HashMap<u64, BlockId>,
+    pub enabled: bool,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PrefixCache {
+    pub fn new(enabled: bool) -> Self {
+        PrefixCache { map: HashMap::new(), enabled, hits: 0, misses: 0 }
+    }
+
+    /// Look up a block by chain hash, counting the hit or miss.
+    pub fn lookup(&mut self, hash: u64) -> Option<BlockId> {
+        let got = self.map.get(&hash).copied();
+        if got.is_some() {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        got
+    }
+
+    pub fn insert(&mut self, hash: u64, id: BlockId) {
+        self.map.insert(hash, id);
+    }
+
+    pub fn remove(&mut self, hash: u64) {
+        self.map.remove(&hash);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_hash_discriminates() {
+        let k = [1.0f32, 2.0];
+        let v = [3.0f32, 4.0];
+        let h0 = chain_hash(layer_seed(0), 0, &k, &v);
+        // different layer, same content
+        assert_ne!(h0, chain_hash(layer_seed(1), 1, &k, &v));
+        // different predecessor
+        assert_ne!(h0, chain_hash(h0, 0, &k, &v));
+        // different content
+        assert_ne!(h0, chain_hash(layer_seed(0), 0, &[1.0, 2.5], &v));
+        // deterministic
+        assert_eq!(h0, chain_hash(layer_seed(0), 0, &k, &v));
+    }
+
+    #[test]
+    fn lookup_counts_hits_and_misses() {
+        let mut p = PrefixCache::new(true);
+        assert!(p.lookup(42).is_none());
+        p.insert(42, BlockId(3));
+        assert_eq!(p.lookup(42), Some(BlockId(3)));
+        assert_eq!((p.hits, p.misses), (1, 1));
+        assert!((p.hit_rate() - 0.5).abs() < 1e-12);
+        p.remove(42);
+        assert!(p.lookup(42).is_none());
+        assert!(p.is_empty());
+    }
+}

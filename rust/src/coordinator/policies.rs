@@ -85,6 +85,41 @@ impl PolicyCfg {
     pub fn tsp_count(&self, n: usize, window: usize) -> usize {
         ((self.tsp_rate * n as f64).ceil() as usize).max(window).min(n)
     }
+
+    /// Worst-case per-layer retained tokens after this policy compresses a
+    /// prompt of `n` tokens (the admission controller's estimate of the
+    /// post-compression KV budget).
+    pub fn per_layer_budget(&self, policy: &str, n: usize, window: usize) -> usize {
+        match policy {
+            // coupled / uncompressed policies retain up to the full prompt
+            "full" | "pyramid_infer" => n,
+            _ => self.kv_budget(n, window).max(self.tsp_count(n, window)),
+        }
+    }
+
+    /// Decode-time eviction: per-layer keep-sets for block-granular
+    /// compaction under memory pressure. Each layer keeps its attention
+    /// sinks, the observation window, and the most recent tokens, shrunk
+    /// to `shrink` of its current length (floored so the window + sinks
+    /// always survive). The per-layer lengths come from the KV store, so
+    /// FastKV's decoupled per-layer retention carries straight through to
+    /// which blocks are released.
+    pub fn compaction_keep(
+        &self,
+        layer_lens: &[usize],
+        shrink: f64,
+        window: usize,
+    ) -> Vec<Vec<usize>> {
+        layer_lens
+            .iter()
+            .map(|&n| {
+                let target = ((n as f64 * shrink).floor() as usize)
+                    .max(window + self.sinks)
+                    .min(n);
+                sel::select_streaming(n, target, self.sinks)
+            })
+            .collect()
+    }
 }
 
 /// Prefill outcome handed to the decode engine.
@@ -562,6 +597,47 @@ mod tests {
         assert_eq!(cfg.kv_budget(10, 8), 8);
         assert_eq!(cfg.kv_budget(4, 8), 4);
         assert_eq!(cfg.tsp_count(1000, 8), 200);
+    }
+
+    #[test]
+    fn compaction_keep_shrinks_per_layer_and_keeps_anchors() {
+        let cfg = PolicyCfg {
+            kv_rate: 0.1,
+            tsp_rate: 0.2,
+            sinks: 2,
+            filter_layer: 3,
+            use_pallas: false,
+        };
+        // FastKV-style decoupled lens: early layers long, late layers short
+        let lens = [40usize, 40, 10, 10];
+        let keep = cfg.compaction_keep(&lens, 0.5, 4);
+        assert_eq!(keep.len(), 4);
+        for (l, k) in keep.iter().enumerate() {
+            let n = lens[l];
+            let target = (n / 2).max(4 + 2).min(n);
+            assert_eq!(k.len(), target, "layer {l}");
+            assert!(k.windows(2).all(|w| w[0] < w[1]));
+            // sinks survive
+            assert!(k.contains(&0) && k.contains(&1), "layer {l}: {k:?}");
+            // most recent token survives
+            assert!(k.contains(&(n - 1)), "layer {l}");
+        }
+    }
+
+    #[test]
+    fn per_layer_budget_matches_policy_class() {
+        let cfg = PolicyCfg {
+            kv_rate: 0.1,
+            tsp_rate: 0.2,
+            sinks: 4,
+            filter_layer: 3,
+            use_pallas: false,
+        };
+        assert_eq!(cfg.per_layer_budget("full", 1000, 8), 1000);
+        assert_eq!(cfg.per_layer_budget("pyramid_infer", 1000, 8), 1000);
+        // decoupled policies: max(kv budget, tsp count) = 200
+        assert_eq!(cfg.per_layer_budget("fastkv", 1000, 8), 200);
+        assert_eq!(cfg.per_layer_budget("snapkv", 1000, 8), 200);
     }
 
     #[test]

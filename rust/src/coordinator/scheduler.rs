@@ -31,6 +31,11 @@ pub enum AdmitOrder {
 #[derive(Debug)]
 pub struct Scheduler<T> {
     queue: VecDeque<T>,
+    /// Preempted requests waiting to resume. Always admitted before the
+    /// regular queue — under *any* admit order — so preemption never
+    /// starves a request (ShortestFirst would otherwise keep picking
+    /// fresh short prompts over a preempted long one forever).
+    resume: VecDeque<T>,
     pub order: AdmitOrder,
     /// Admit only when at least this many decode slots are free AND the
     /// active set has drained below the watermark (hysteresis avoids
@@ -40,20 +45,41 @@ pub struct Scheduler<T> {
 
 impl<T> Scheduler<T> {
     pub fn new(max_active: usize, order: AdmitOrder) -> Self {
-        Scheduler { queue: VecDeque::new(), order, max_active }
+        Scheduler {
+            queue: VecDeque::new(),
+            resume: VecDeque::new(),
+            order,
+            max_active,
+        }
     }
 
     pub fn enqueue(&mut self, item: T) {
         self.queue.push_back(item);
     }
 
+    /// Put a preempted request on the resume queue: it is re-admitted
+    /// before anything in the regular queue once memory frees up
+    /// (resume, not starve), FIFO among preempted peers.
+    pub fn requeue_front(&mut self, item: T) {
+        self.resume.push_back(item);
+    }
+
     pub fn queue_len(&self) -> usize {
-        self.queue.len()
+        self.resume.len() + self.queue.len()
     }
 
     /// Decide the next action given the number of active decode slots.
     pub fn next_action(&self, active: usize) -> Action {
-        if active < self.max_active && !self.queue.is_empty() {
+        self.next_action_mem(active, true)
+    }
+
+    /// Memory-aware variant: `can_admit` is the KV store's verdict on
+    /// whether the head-of-queue request's post-compression KV budget fits
+    /// the block pool. When it does not, queued work waits and decoding
+    /// continues (draining the pool) instead of admitting a request that
+    /// would immediately be preempted.
+    pub fn next_action_mem(&self, active: usize, can_admit: bool) -> Action {
+        if active < self.max_active && self.queue_len() > 0 && can_admit {
             Action::Prefill
         } else if active > 0 {
             Action::DecodeStep
@@ -62,9 +88,27 @@ impl<T> Scheduler<T> {
         }
     }
 
-    /// Pop the next request to admit per the configured order.
-    /// `prompt_len` extracts the length for ShortestFirst.
+    /// Borrow the request `pop_next` would return, without removing it
+    /// (admission checks need its prompt length first).
+    pub fn peek_next(&self, prompt_len: impl Fn(&T) -> usize) -> Option<&T> {
+        if let Some(r) = self.resume.front() {
+            return Some(r);
+        }
+        match self.order {
+            AdmitOrder::Fcfs => self.queue.front(),
+            AdmitOrder::ShortestFirst => {
+                self.queue.iter().min_by_key(|t| prompt_len(*t))
+            }
+        }
+    }
+
+    /// Pop the next request to admit: preempted requests first, then the
+    /// regular queue per the configured order. `prompt_len` extracts the
+    /// length for ShortestFirst.
     pub fn pop_next(&mut self, prompt_len: impl Fn(&T) -> usize) -> Option<T> {
+        if let Some(r) = self.resume.pop_front() {
+            return Some(r);
+        }
         match self.order {
             AdmitOrder::Fcfs => self.queue.pop_front(),
             AdmitOrder::ShortestFirst => {
@@ -107,6 +151,49 @@ mod tests {
         s.enqueue(1);
         assert_eq!(s.pop_next(|&x| x), Some(5));
         assert_eq!(s.pop_next(|&x| x), Some(1));
+    }
+
+    #[test]
+    fn memory_pressure_blocks_admission_but_not_decode() {
+        let mut s: Scheduler<usize> = Scheduler::new(2, AdmitOrder::Fcfs);
+        s.enqueue(10);
+        // pool says no: keep decoding instead of admitting
+        assert_eq!(s.next_action_mem(1, false), Action::DecodeStep);
+        assert_eq!(s.next_action_mem(1, true), Action::Prefill);
+        // nothing active and nothing admissible: wait for memory
+        assert_eq!(s.next_action_mem(0, false), Action::Idle);
+    }
+
+    #[test]
+    fn requeue_front_resumes_before_queue_under_any_order() {
+        // Regression: under ShortestFirst a push_front-based requeue was a
+        // no-op — fresh short prompts kept overtaking the preempted
+        // request forever. The resume queue must win under both orders.
+        for order in [AdmitOrder::Fcfs, AdmitOrder::ShortestFirst] {
+            let mut s: Scheduler<usize> = Scheduler::new(4, order);
+            s.enqueue(1);
+            s.enqueue(2);
+            let preempted = 99; // longer than everything queued
+            s.requeue_front(preempted);
+            assert_eq!(s.queue_len(), 3);
+            assert_eq!(*s.peek_next(|&x| x).unwrap(), 99, "{order:?}");
+            assert_eq!(s.pop_next(|&x| x), Some(99), "{order:?}");
+            assert_eq!(s.pop_next(|&x| x), Some(1));
+        }
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        for order in [AdmitOrder::Fcfs, AdmitOrder::ShortestFirst] {
+            let mut s: Scheduler<usize> = Scheduler::new(4, order);
+            s.enqueue(50);
+            s.enqueue(10);
+            s.enqueue(30);
+            let peeked = *s.peek_next(|&x| x).unwrap();
+            assert_eq!(s.pop_next(|&x| x), Some(peeked));
+        }
+        let s: Scheduler<usize> = Scheduler::new(4, AdmitOrder::Fcfs);
+        assert!(s.peek_next(|&x| x).is_none());
     }
 
     #[test]

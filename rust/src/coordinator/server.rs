@@ -1,15 +1,29 @@
-//! The serving coordinator: a continuous-batching inference server.
+//! The serving coordinator: a continuous-batching inference server over a
+//! paged KV cache.
 //!
 //! One serving thread owns the (non-Send) PJRT runtime and drives the
 //! loop: admit → prefill (policy compresses KV) → batched decode steps →
 //! retire. Clients submit prompts from any thread through `ServerHandle`
 //! and receive a `Response` on a per-request channel.
 //!
-//! This is the deployment shape the paper targets ("readily compatible
-//! with modern serving frameworks ... orthogonal to batching and paged
-//! attention"): FastKV (or any baseline policy) plugs in as the prefill /
-//! KV-compression stage, and the decode batcher sees only compressed
-//! caches.
+//! Decode KV lives behind the [`KvStore`] trait; the default backend is
+//! the paged [`PagedArena`] (block pool + prefix reuse), with the flat
+//! [`BatchArena`] available for comparison. On top of the store the loop
+//! implements:
+//!
+//!  * **memory-aware admission** — a queued request is admitted only when
+//!    the block pool can cover its post-compression KV budget plus decode
+//!    growth (`Scheduler::next_action_mem`);
+//!  * **block-granular compaction** — on pool exhaustion mid-decode the
+//!    affected lane first evicts by blocks using the policy's per-layer
+//!    keep-sets (`PolicyCfg::compaction_keep`);
+//!  * **preemption with resume** — if compaction cannot free enough, the
+//!    request releases its blocks and returns to the head of the queue;
+//!    on re-admission it re-prefills `prompt ++ generated-so-far` and
+//!    continues where it left off instead of aborting.
+//!
+//! Block-pool gauges (blocks in use, prefix-cache hit rate, preemptions)
+//! are published through [`Metrics`] every scheduler iteration.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -19,6 +33,9 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::engine::decode_cap_for;
 use crate::coordinator::kvcache::BatchArena;
+use crate::coordinator::paging::{
+    AppendResult, KvStore, PagedArena, PagingConfig,
+};
 use crate::coordinator::policies::{make_policy, Exec, PolicyCfg};
 use crate::coordinator::scheduler::{Action, AdmitOrder, Scheduler};
 use crate::manifest::Manifest;
@@ -27,6 +44,10 @@ use crate::runtime::outputs::DecodeOut;
 use crate::runtime::Runtime;
 use crate::tensor::HostTensorI32;
 use crate::tokenizer::END;
+
+/// Shrink factor compaction applies to each layer's length when the pool
+/// runs dry (keep-sets never drop the observation window or sinks).
+const COMPACT_SHRINK: f64 = 0.5;
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -40,6 +61,9 @@ pub struct ServerConfig {
     /// Largest prompt admitted (bucket-limited).
     pub max_prompt: usize,
     pub order: AdmitOrder,
+    /// KV backend: `Some(cfg)` = paged arena (the default), `None` = the
+    /// flat `BatchArena` (seed behavior, for comparison).
+    pub paging: Option<PagingConfig>,
 }
 
 #[derive(Debug)]
@@ -49,6 +73,11 @@ pub struct Request {
     pub max_new: usize,
     submitted: Instant,
     reply: mpsc::Sender<Response>,
+    /// Tokens generated before a preemption; re-prefilled as part of the
+    /// prompt on resume so generation continues seamlessly.
+    resumed: Vec<i32>,
+    /// TTFT measured at first admission, preserved across preemptions.
+    first_ttft: Option<f64>,
 }
 
 #[derive(Debug, Clone)]
@@ -92,6 +121,8 @@ impl ServerHandle {
                 max_new,
                 submitted: Instant::now(),
                 reply,
+                resumed: Vec::new(),
+                first_ttft: None,
             }))
             .map_err(|_| anyhow::anyhow!("server thread gone"))?;
         Ok((id, rx))
@@ -173,6 +204,79 @@ fn serve_loop(
     }
 }
 
+fn reject(mut req: Request, metrics: &Metrics, why: String) {
+    metrics.inc("rejected", 1);
+    let tokens = std::mem::take(&mut req.resumed);
+    let _ = req.reply.send(Response {
+        id: req.id,
+        tokens,
+        ttft_secs: req.first_ttft.unwrap_or(0.0),
+        e2e_secs: req.submitted.elapsed().as_secs_f64(),
+        prefill_secs: 0.0,
+        decode_steps: 0,
+        error: Some(why),
+    });
+}
+
+/// Largest prompt the policy's prefill path can bucket. Resume-by-
+/// recompute re-prefills `prompt ++ generated`, so a request may only be
+/// preempted while that combined length still fits — otherwise it could
+/// never be re-admitted.
+fn prefill_len_limit(man: &Manifest, policy: &str, use_pallas: bool) -> usize {
+    let max = |v: &[usize]| v.iter().copied().max().unwrap_or(0);
+    match policy {
+        "fastkv" | "gemfilter" => max(&man.buckets.stage1_ns),
+        "pyramid_infer" => max(&man.buckets.pyramid_ns),
+        _ => {
+            // run_prefill_full can also take the Pallas artifact, whose
+            // bucket may exceed the jnp prefill buckets.
+            let lim = max(&man.buckets.prefill_ns);
+            if use_pallas {
+                lim.max(man.buckets.pallas_n)
+            } else {
+                lim
+            }
+        }
+    }
+}
+
+/// Retire a finished request: release its lane and send the response.
+fn finish(a: Active, store: &mut dyn KvStore, metrics: &Metrics) {
+    store.release(a.slot);
+    metrics.inc("completed", 1);
+    metrics.observe("e2e_secs", a.req.submitted.elapsed().as_secs_f64());
+    metrics.observe("ttft_secs", a.ttft_secs);
+    metrics.inc("tokens_out", a.tokens.len() as u64);
+    let _ = a.req.reply.send(Response {
+        id: a.req.id,
+        tokens: a.tokens,
+        ttft_secs: a.ttft_secs,
+        e2e_secs: a.req.submitted.elapsed().as_secs_f64(),
+        prefill_secs: a.prefill_secs,
+        decode_steps: a.pos,
+        error: None,
+    });
+}
+
+fn publish_pool_gauges(store: &dyn KvStore, metrics: &Metrics) {
+    let ps = store.pool_stats();
+    metrics.set_gauge("pool_blocks_total", ps.blocks_total as f64);
+    metrics.set_gauge("pool_blocks_in_use", ps.blocks_in_use as f64);
+    // High-water mark: the instantaneous gauge reads 0 once the pool
+    // drains, so peak utilization gets its own gauge.
+    let peak = metrics
+        .gauge("pool_blocks_in_use_peak")
+        .max(ps.blocks_in_use as f64);
+    metrics.set_gauge("pool_blocks_in_use_peak", peak);
+    metrics.set_gauge("pool_blocks_cached", ps.blocks_cached as f64);
+    metrics.set_gauge("pool_prefix_hits", ps.prefix_hits as f64);
+    metrics.set_gauge("pool_prefix_misses", ps.prefix_misses as f64);
+    metrics.set_gauge("pool_prefix_hit_rate", ps.prefix_hit_rate());
+    metrics.set_gauge("pool_cow_copies", ps.cow_copies as f64);
+    metrics.set_gauge("pool_evictions", ps.evictions as f64);
+    metrics.set_gauge("pool_alloc_failures", ps.alloc_failures as f64);
+}
+
 fn serve_inner(
     cfg: &ServerConfig,
     rt: &Runtime,
@@ -181,15 +285,13 @@ fn serve_inner(
 ) -> Result<()> {
     let man = rt.manifest.clone();
     let policy = make_policy(&cfg.policy)?;
-    // Worst-case cache: full-context policy keeps max_prompt entries.
-    let worst = match cfg.policy.as_str() {
-        "full" => cfg.max_prompt,
-        "pyramid_infer" => cfg.max_prompt,
-        _ => cfg
-            .policy_cfg
-            .kv_budget(cfg.max_prompt, man.model.window)
-            .max(cfg.policy_cfg.tsp_count(cfg.max_prompt, man.model.window)),
-    };
+    // Worst-case per-layer retention for the largest admissible prompt —
+    // sizes the decode capacity bucket.
+    let worst = cfg.policy_cfg.per_layer_budget(
+        &cfg.policy,
+        cfg.max_prompt,
+        man.model.window,
+    );
     let cap = decode_cap_for(&man, worst, cfg.max_new)?;
     let b = cfg.decode_batch;
     anyhow::ensure!(
@@ -198,10 +300,19 @@ fn serve_inner(
         man.buckets.decode_batches
     );
     let artifact = format!("decode_{b}x{cap}");
-    let mut arena = BatchArena::new(&man.model, b, cap);
+    let mut store: Box<dyn KvStore> = match &cfg.paging {
+        Some(pc) => {
+            Box::new(PagedArena::new(&man.model, b, cap, pc.clone()))
+        }
+        None => Box::new(BatchArena::new(&man.model, b, cap)),
+    };
     let mut sched: Scheduler<Request> = Scheduler::new(b, cfg.order);
     let mut active: Vec<Active> = Vec::new();
     let mut shutdown = false;
+    // Set after a deferred admission: forces one decode pass before the
+    // next admission attempt so the loop cannot hot-spin on
+    // prefill-then-defer while the pool estimate and reality disagree.
+    let mut admission_paused = false;
 
     while !(shutdown && sched.queue_len() == 0 && active.is_empty()) {
         // Drain incoming messages (non-blocking if we have work).
@@ -235,30 +346,88 @@ fn serve_inner(
             break;
         }
 
-        match sched.next_action(active.len()) {
+        // Memory-aware admission: can the pool cover the head request's
+        // post-compression budget (plus minimal growth headroom — see
+        // `KvStore::can_admit`; full decode growth is over-committed)?
+        let admit_ok = if std::mem::take(&mut admission_paused) {
+            false
+        } else {
+            match sched.peek_next(|r: &Request| r.prompt.len()) {
+                None => true,
+                Some(r) => {
+                    let n = (r.prompt.len() + r.resumed.len())
+                        .min(cfg.max_prompt + cfg.max_new);
+                    let per_layer = cfg.policy_cfg.per_layer_budget(
+                        &cfg.policy,
+                        n,
+                        man.model.window,
+                    );
+                    let remaining =
+                        r.max_new.saturating_sub(r.resumed.len()).max(1);
+                    store.can_admit(per_layer, remaining)
+                }
+            }
+        };
+
+        match sched.next_action_mem(active.len(), admit_ok) {
             Action::Prefill => {
                 let req = sched.pop_next(|r| r.prompt.len()).unwrap();
-                match admit(rt, &man, policy.as_ref(), cfg, req, &mut arena) {
+                match admit(rt, &man, policy.as_ref(), cfg, req, store.as_mut())
+                {
                     Ok(a) => {
                         metrics.observe("prefill_secs", a.prefill_secs);
-                        active.push(a);
+                        if a.done {
+                            // Resumed request already at its token budget
+                            // (or END on the first token): respond now
+                            // rather than dragging it through a decode
+                            // step that must ignore it.
+                            finish(a, store.as_mut(), metrics);
+                        } else {
+                            active.push(a);
+                        }
                     }
-                    Err((req, e)) => {
-                        metrics.inc("rejected", 1);
-                        let _ = req.reply.send(Response {
-                            id: req.id,
-                            tokens: vec![],
-                            ttft_secs: 0.0,
-                            e2e_secs: req.submitted.elapsed().as_secs_f64(),
-                            prefill_secs: 0.0,
-                            decode_steps: 0,
-                            error: Some(format!("{e:#}")),
-                        });
+                    Err(AdmitFail::Defer(req)) => {
+                        // Prefilled but the pool could not take the cache;
+                        // resume from the queue head once decoding frees
+                        // blocks. With nothing active the pool can never
+                        // improve, so reject instead of livelocking; with
+                        // actives, pause admission for one iteration so
+                        // the loop decodes (and frees blocks) instead of
+                        // hot-spinning on prefill-then-defer.
+                        if active.is_empty() {
+                            reject(
+                                req,
+                                metrics,
+                                "request cannot fit the KV block pool".into(),
+                            );
+                        } else {
+                            metrics.inc("admit_deferred", 1);
+                            sched.requeue_front(req);
+                            admission_paused = true;
+                        }
+                    }
+                    Err(AdmitFail::Reject(req, e)) => {
+                        reject(req, metrics, format!("{e:#}"));
                     }
                 }
             }
             Action::DecodeStep => {
-                decode_step(rt, &artifact, &mut arena, &mut active, metrics)?;
+                let out = decode_step(
+                    rt,
+                    &artifact,
+                    store.as_ref(),
+                    &active,
+                    metrics,
+                )?;
+                apply_decode(
+                    cfg,
+                    &man,
+                    store.as_mut(),
+                    &mut sched,
+                    &mut active,
+                    &out,
+                    metrics,
+                );
                 // Retire finished requests.
                 let mut i = 0;
                 while i < active.len() {
@@ -266,31 +435,26 @@ fn serve_inner(
                         || active[i].tokens.len() >= active[i].max_new()
                     {
                         let a = active.swap_remove(i);
-                        arena.free_slot(a.slot);
-                        metrics.inc("completed", 1);
-                        metrics.observe(
-                            "e2e_secs",
-                            a.req.submitted.elapsed().as_secs_f64(),
-                        );
-                        metrics.observe("ttft_secs", a.ttft_secs);
-                        metrics
-                            .inc("tokens_out", a.tokens.len() as u64);
-                        let _ = a.req.reply.send(Response {
-                            id: a.req.id,
-                            tokens: a.tokens,
-                            ttft_secs: a.ttft_secs,
-                            e2e_secs: a.req.submitted.elapsed().as_secs_f64(),
-                            prefill_secs: a.prefill_secs,
-                            decode_steps: a.pos,
-                            error: None,
-                        });
+                        finish(a, store.as_mut(), metrics);
                     } else {
                         i += 1;
                     }
                 }
             }
-            Action::Idle => {}
+            Action::Idle => {
+                // Queue blocked on memory with nothing active: the pool
+                // will never improve, so fail the head request fast.
+                if !admit_ok && active.is_empty() && sched.queue_len() > 0 {
+                    let req = sched.pop_next(|r| r.prompt.len()).unwrap();
+                    reject(
+                        req,
+                        metrics,
+                        "request cannot fit the KV block pool".into(),
+                    );
+                }
+            }
         }
+        publish_pool_gauges(store.as_ref(), metrics);
     }
     Ok(())
 }
@@ -301,59 +465,81 @@ impl Active {
     }
 }
 
+enum AdmitFail {
+    /// Permanent failure: send an error response.
+    Reject(Request, anyhow::Error),
+    /// Pool momentarily too full: requeue and retry after decode frees
+    /// blocks.
+    Defer(Request),
+}
+
 fn admit(
     rt: &Runtime,
     man: &Manifest,
     policy: &dyn crate::coordinator::policies::Policy,
     cfg: &ServerConfig,
     req: Request,
-    arena: &mut BatchArena,
-) -> std::result::Result<Active, (Request, anyhow::Error)> {
+    store: &mut dyn KvStore,
+) -> std::result::Result<Active, AdmitFail> {
     if req.prompt.len() > cfg.max_prompt {
-        return Err((
+        return Err(AdmitFail::Reject(
             req,
             anyhow::anyhow!("prompt exceeds max_prompt {}", cfg.max_prompt),
         ));
     }
-    let t0 = Instant::now();
-    let pre =
-        match policy.prefill(rt, man, &req.prompt, &cfg.policy_cfg) {
-            Ok(p) => p,
-            Err(e) => return Err((req, e)),
-        };
-    let prefill_secs = t0.elapsed().as_secs_f64();
-    let slot = match arena.alloc_slot() {
-        Some(s) => s,
-        None => return Err((req, anyhow::anyhow!("no free decode slot"))),
+    // Resume support: re-prefill the original prompt plus everything
+    // generated before the preemption.
+    let full_prompt: Vec<i32> = if req.resumed.is_empty() {
+        req.prompt.clone()
+    } else {
+        let mut p = req.prompt.clone();
+        p.extend_from_slice(&req.resumed);
+        p
     };
-    arena.load(slot, &pre.cache);
-    let ttft = req.submitted.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let pre = match policy.prefill(rt, man, &full_prompt, &cfg.policy_cfg) {
+        Ok(p) => p,
+        Err(e) => return Err(AdmitFail::Reject(req, e)),
+    };
+    let prefill_secs = t0.elapsed().as_secs_f64();
+    let slot = match store.admit(&pre.cache) {
+        Some(s) => s,
+        None => return Err(AdmitFail::Defer(req)),
+    };
+    let ttft = req
+        .first_ttft
+        .unwrap_or_else(|| req.submitted.elapsed().as_secs_f64());
+    let mut tokens = req.resumed.clone();
+    tokens.push(pre.first_token);
+    let done =
+        pre.first_token == END as i32 || tokens.len() >= req.max_new;
     Ok(Active {
         pos: pre.next_pos,
         cur: pre.first_token,
-        tokens: vec![pre.first_token],
+        tokens,
         slot,
         req,
         prefill_secs,
         ttft_secs: ttft,
-        done: pre.first_token == END as i32,
+        done,
     })
 }
 
 fn decode_step(
     rt: &Runtime,
     artifact: &str,
-    arena: &mut BatchArena,
-    active: &mut [Active],
+    store: &dyn KvStore,
+    active: &[Active],
     metrics: &Metrics,
-) -> Result<()> {
-    let b = arena.b;
+) -> Result<DecodeOut> {
+    let b = store.slots();
     let mut toks = vec![0i32; b];
     let mut poss = vec![0i32; b];
     for a in active.iter() {
         toks[a.slot] = a.cur;
         poss[a.slot] = a.pos as i32;
     }
+    let staged = store.stage();
     let t0 = Instant::now();
     let out = DecodeOut::from_vec(
         Exec::run(
@@ -362,34 +548,113 @@ fn decode_step(
             vec![
                 HostTensorI32::new(vec![b], toks).into(),
                 HostTensorI32::new(vec![b], poss).into(),
-                arena.k.clone().into(),
-                arena.v.clone().into(),
-                arena.lens_tensor().into(),
+                staged.k.into(),
+                staged.v.into(),
+                staged.lens.into(),
             ],
         )
         .context("decode step")?,
     );
     metrics.observe("decode_step_secs", t0.elapsed().as_secs_f64());
+    Ok(out)
+}
 
-    for a in active.iter_mut() {
-        if !arena.append(a.slot, &out.k_new, &out.v_new) {
-            a.done = true;
+/// Apply one decode step's outputs: append per lane, compacting or
+/// preempting lanes the pool cannot grow.
+fn apply_decode(
+    cfg: &ServerConfig,
+    man: &Manifest,
+    store: &mut dyn KvStore,
+    sched: &mut Scheduler<Request>,
+    active: &mut Vec<Active>,
+    out: &DecodeOut,
+    metrics: &Metrics,
+) {
+    let mut preempted: Vec<usize> = Vec::new();
+    for (idx, a) in active.iter_mut().enumerate() {
+        if a.done {
+            // Already finished (max_new reached on resume, or END) —
+            // never grow the cache or sample past the end; the retire
+            // loop collects it right after this pass.
             continue;
         }
-        a.pos += 1;
-        let logits = out.logits.row(a.slot);
-        let next = logits
-            .iter()
-            .enumerate()
-            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
-            .map(|(i, _)| i as i32)
-            .unwrap_or(0);
-        if next == END as i32 {
-            a.done = true;
-        } else {
-            a.cur = next;
-            a.tokens.push(next);
+        let mut res = store.append(a.slot, &out.k_new, &out.v_new);
+        if res == AppendResult::PoolExhausted {
+            // FastKV-aware eviction first: per-layer keep-sets from the
+            // policy config drive block-granular compaction of this lane.
+            let lens = store.layer_lens(a.slot);
+            let keep = cfg.policy_cfg.compaction_keep(
+                &lens,
+                COMPACT_SHRINK,
+                man.model.window,
+            );
+            let released = store.compact(a.slot, &keep);
+            if released > 0 {
+                metrics.inc("compactions", 1);
+                res = store.append(a.slot, &out.k_new, &out.v_new);
+            }
+        }
+        match res {
+            AppendResult::Ok => {
+                a.pos += 1;
+                let logits = out.logits.row(a.slot);
+                let next = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0);
+                if next == END as i32 {
+                    a.done = true;
+                } else {
+                    a.cur = next;
+                    a.tokens.push(next);
+                }
+            }
+            AppendResult::CapacityExhausted => {
+                a.done = true;
+            }
+            AppendResult::PoolExhausted => {
+                // Only preempt when the request can actually resume: the
+                // re-prefill of prompt + generated tokens must fit the
+                // policy's prefill buckets, and the store must be able to
+                // take the regrown cache back even from a drained state
+                // (lane capacity AND total pool size). Otherwise finish
+                // gracefully with what was generated (like a capacity
+                // stop) instead of parking a request that would wedge the
+                // resume queue and end in a rejection.
+                let full_len = a.req.prompt.len() + a.tokens.len();
+                let budget = cfg.policy_cfg.per_layer_budget(
+                    &cfg.policy,
+                    full_len,
+                    man.model.window,
+                );
+                let len_limit = prefill_len_limit(
+                    man,
+                    &cfg.policy,
+                    cfg.policy_cfg.use_pallas,
+                );
+                if full_len <= len_limit
+                    && store.could_ever_admit(budget)
+                {
+                    preempted.push(idx);
+                } else {
+                    metrics.inc("finished_on_pressure", 1);
+                    a.done = true;
+                }
+            }
         }
     }
-    Ok(())
+    // Preempt: release blocks and resume from the queue head later. The
+    // generated tokens ride along in the request and are re-prefilled as
+    // prompt context on re-admission.
+    for &idx in preempted.iter().rev() {
+        let a = active.swap_remove(idx);
+        store.release(a.slot);
+        metrics.inc("preempted", 1);
+        let mut req = a.req;
+        req.resumed = a.tokens;
+        req.first_ttft = Some(a.ttft_secs);
+        sched.requeue_front(req);
+    }
 }

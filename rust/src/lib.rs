@@ -11,7 +11,25 @@
 //!    baselines), KV-cache manager, continuous-batching server, eval &
 //!    bench harnesses.
 //!
-//! Quick start (after `make artifacts`): see `examples/quickstart.rs`.
+//! # KV-cache backends
+//!
+//! Decode-stage KV lives behind the [`coordinator::paging::KvStore`]
+//! trait. The default backend is [`coordinator::paging::PagedArena`], a
+//! vLLM-style paged cache: a global pool of fixed-size token blocks with a
+//! free-list allocator, ref-counted blocks with copy-on-write append, and
+//! a hash-based prefix cache so requests sharing a compressed-KV prefix
+//! reuse physical blocks. The seed's flat
+//! [`coordinator::kvcache::BatchArena`] remains available as the
+//! comparison backend. The serving stack layers memory-aware admission
+//! (admit only when the pool covers the request's post-compression KV
+//! budget), preemption back to the queue on pool exhaustion, and
+//! block-granular compaction driven by the policies' per-layer retention
+//! on top of this substrate; see `rust/src/coordinator/paging/README.md`
+//! for the design.
+//!
+//! Quick start (after `make artifacts`): see `examples/quickstart.rs`;
+//! `examples/paging_demo.rs` exercises prefix reuse and preemption without
+//! artifacts.
 
 pub mod analysis;
 pub mod coordinator;
@@ -25,6 +43,9 @@ pub mod util;
 pub mod workload;
 
 pub use coordinator::engine::{generate, GenResult, GenStats};
+pub use coordinator::paging::{
+    AppendResult, KvStore, PagedArena, PagingConfig, PoolStats,
+};
 pub use coordinator::policies::{
     make_policy, Policy, PolicyCfg, ALL_POLICIES,
 };

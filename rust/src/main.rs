@@ -65,6 +65,7 @@ fn print_help() {
          \x20 ablate   tsp-rate|tsp-layer|grid|layer-grid [--samples N]\n\
          \x20 bench    [--lens 256,512,1024] [--methods ...] [--gen 64]\n\
          \x20 serve    [--policy fastkv] [--requests 16] [--rate 4] [--trace poisson|bursty]\n\
+         \x20          [--flat] [--pool-blocks N] [--block-tokens 16] [--no-prefix-cache]\n\
          \x20 overhead [--lens 256,512,1024]\n\
          \x20 info\n\
          \n\
@@ -701,6 +702,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "shortest" => AdmitOrder::ShortestFirst,
         _ => AdmitOrder::Fcfs,
     };
+    // KV backend: paged by default; --flat selects the seed BatchArena.
+    // --pool-blocks N under-provisions the pool to exercise memory-aware
+    // admission and preemption; --block-tokens sets the block size.
+    let paging = if args.has("flat") {
+        None
+    } else {
+        let mut pc = fastkv::PagingConfig::default();
+        pc.block_tokens = args.usize("block-tokens", pc.block_tokens);
+        if let Some(nb) = args.get("pool-blocks") {
+            pc.num_blocks = Some(nb.parse().expect("--pool-blocks: not a number"));
+        }
+        pc.prefix_cache = !args.has("no-prefix-cache");
+        Some(pc)
+    };
     let cfg = ServerConfig {
         artifact_dir: dir,
         policy: args.str_or("policy", "fastkv").to_string(),
@@ -709,10 +724,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_new: args.usize("gen", 16),
         max_prompt: len,
         order,
+        paging,
     };
     println!(
-        "serving trace: {n} reqs, {rate} req/s ({:?}), policy {}, batch {}",
-        kind, cfg.policy, cfg.decode_batch
+        "serving trace: {n} reqs, {rate} req/s ({:?}), policy {}, batch {}, kv backend {}",
+        kind,
+        cfg.policy,
+        cfg.decode_batch,
+        if cfg.paging.is_some() { "paged" } else { "flat" }
     );
     let server = Server::spawn(cfg)?;
     let handle = server.handle();

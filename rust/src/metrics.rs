@@ -60,6 +60,7 @@ pub struct Metrics {
 #[derive(Debug, Default)]
 struct Inner {
     counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
     histograms: BTreeMap<String, Histogram>,
 }
 
@@ -67,6 +68,22 @@ impl Metrics {
     pub fn inc(&self, name: &str, by: u64) {
         let mut g = self.inner.lock().unwrap();
         *g.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    /// Set a point-in-time gauge (block-pool occupancy, hit rates, ...).
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .gauges
+            .get(name)
+            .copied()
+            .unwrap_or(0.0)
     }
 
     pub fn observe(&self, name: &str, secs: f64) {
@@ -103,6 +120,9 @@ impl Metrics {
         for (k, v) in &g.counters {
             out.push_str(&format!("{k:32} {v}\n"));
         }
+        for (k, v) in &g.gauges {
+            out.push_str(&format!("{k:32} {v:.3}\n"));
+        }
         for (k, h) in &g.histograms {
             out.push_str(&format!("{k:32} {}\n", h.summary()));
         }
@@ -126,6 +146,19 @@ mod tests {
         assert_eq!(h.count(), 2);
         assert!((h.mean() - 0.015).abs() < 1e-9);
         assert!(m.report().contains("requests"));
+    }
+
+    #[test]
+    fn gauges_set_and_read() {
+        let m = Metrics::default();
+        assert_eq!(m.gauge("blocks_in_use"), 0.0);
+        m.set_gauge("blocks_in_use", 12.0);
+        m.set_gauge("blocks_in_use", 7.0); // gauges overwrite
+        assert_eq!(m.gauge("blocks_in_use"), 7.0);
+        m.set_gauge("prefix_hit_rate", 0.5);
+        let rep = m.report();
+        assert!(rep.contains("blocks_in_use"), "{rep}");
+        assert!(rep.contains("prefix_hit_rate"), "{rep}");
     }
 
     #[test]

@@ -185,6 +185,7 @@ fn serving_stack_completes_concurrent_requests() {
         max_new: 6,
         max_prompt: 256,
         order: AdmitOrder::Fcfs,
+        paging: Some(fastkv::PagingConfig::default()),
     })
     .unwrap();
     let handle = server.handle();

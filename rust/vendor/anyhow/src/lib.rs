@@ -1,0 +1,252 @@
+//! Minimal, API-compatible subset of the `anyhow` crate, vendored because
+//! this build environment has no crates.io registry access.
+//!
+//! Supported surface (exactly what the fastkv crate uses):
+//!  * `anyhow::Error` — context-chain error; `{e}` prints the outermost
+//!    message, `{e:#}` prints the full `outer: ...: root` chain, `{e:?}`
+//!    prints the message plus a `Caused by:` list.
+//!  * `anyhow::Result<T>` (with default error type).
+//!  * `anyhow!`, `bail!`, `ensure!` macros (format-string forms).
+//!  * `Context` extension trait: `.context(..)` / `.with_context(..)` on
+//!    `Result<T, E: Into<Error>>` (covers std errors *and* `anyhow::Error`)
+//!    and on `Option<T>`.
+//!  * `From<E>` for every `E: std::error::Error + Send + Sync + 'static`,
+//!    so `?` converts io/channel/parse errors as the real crate does.
+
+use std::convert::Infallible;
+use std::fmt;
+
+/// Context-chain error: `msgs[0]` is the outermost (most recent) context,
+/// the last entry is the root cause.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msgs: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (used by the `Context` trait).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.msgs.insert(0, context.to_string());
+        self
+    }
+
+    /// The root-cause message (innermost of the chain).
+    pub fn root_cause(&self) -> &str {
+        self.msgs.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterate the chain from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.msgs.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, matching real anyhow.
+            write!(f, "{}", self.msgs.join(": "))
+        } else {
+            write!(f, "{}", self.msgs.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msgs.first().map(String::as_str).unwrap_or(""))?;
+        if self.msgs.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, m) in self.msgs[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`; that is what
+// makes this blanket conversion coherent (same trick as the real crate).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                let err: Error = e.into();
+                Err(err.context(context))
+            }
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                let err: Error = e.into();
+                Err(err.context(f()))
+            }
+        }
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context)),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Error::from(io_err()).context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{:#}", f().unwrap_err()), "gone");
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u32> = None;
+        let e = none.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        let r: std::result::Result<u32, std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 3: gone");
+        // context on an already-anyhow error stacks
+        let e2: Error = anyhow!("root");
+        let r2: Result<u32> = Err(e2);
+        let e2 = r2.context("outer").unwrap_err();
+        assert_eq!(format!("{e2:#}"), "outer: root");
+    }
+
+    #[test]
+    fn macros() {
+        fn b() -> Result<()> {
+            bail!("bad {}", 7)
+        }
+        assert_eq!(b().unwrap_err().to_string(), "bad 7");
+        fn e(x: usize) -> Result<()> {
+            ensure!(x > 2, "x too small: {x}");
+            Ok(())
+        }
+        assert!(e(3).is_ok());
+        assert_eq!(e(1).unwrap_err().to_string(), "x too small: 1");
+        let name = "art";
+        let err = anyhow!("compiling {name}: oops");
+        assert_eq!(err.to_string(), "compiling art: oops");
+    }
+}
