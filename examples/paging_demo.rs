@@ -125,6 +125,7 @@ fn pressure_run(
         block_tokens: bt,
         num_blocks: Some(pool_blocks),
         prefix_cache: false,
+        ..Default::default()
     };
     let mut pool = PagedArena::new(m, lanes, cap, cfg);
     // queue item: (id, cache, remaining decode steps)
@@ -239,6 +240,7 @@ fn main() {
         block_tokens: bt,
         num_blocks: None,
         prefix_cache: true,
+        ..Default::default()
     };
     let mut pool = PagedArena::new(&m, requests, cap, cfg.clone());
     let shared = compressed_cache(&m, 42, len);

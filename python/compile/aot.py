@@ -156,6 +156,26 @@ def build(cfg: ModelConfig = TINY, buckets: BucketConfig = BUCKETS,
                 {"kind": "decode", "batch": b, "cap": c},
             )
 
+    # --- decode_paged_step (block-table decode over the slab) ---------------
+    # The slab bucket NB is the worst case L * B * ceil(C / bt): a rust-side
+    # pool sized any smaller is zero-padded up at (version-cached) upload.
+    bt = buckets.block_tokens
+    for b in buckets.decode_batches:
+        for c in buckets.decode_caps:
+            if c > max_n + buckets.max_gen:
+                continue
+            mb = -(-c // bt)  # ceil
+            nb = L_ * b * mb
+            fn = functools.partial(M.decode_paged_step, cfg=cfg)
+            em.emit(
+                f"decode_paged_{b}x{c}", fn,
+                (flat_s, _spec((b,), I32), _spec((b,), I32),
+                 _spec((nb, bt, KV, hd)), _spec((nb, bt, KV, hd)),
+                 _spec((L_, b, mb), I32), _spec((L_, b), I32)),
+                {"kind": "decode_paged", "batch": b, "cap": c,
+                 "pool_blocks": nb, "block_tokens": bt},
+            )
+
     # --- sweep_tsp (Fig. 3 / Fig. 5b / Table 10) ----------------------------
     n, nt = buckets.sweep_n, buckets.sweep_nt
     for t in range(1, cfg.n_layers):
@@ -194,6 +214,7 @@ def build(cfg: ModelConfig = TINY, buckets: BucketConfig = BUCKETS,
             "sweep_nt": buckets.sweep_nt,
             "pallas_n": buckets.pallas_n,
             "max_gen": buckets.max_gen,
+            "block_tokens": buckets.block_tokens,
         },
         "params": [
             {"name": name, "shape": list(shape)}

@@ -62,9 +62,14 @@ class BucketConfig:
     stage2_ns: tuple = (64, 128, 256, 512)
     # PyramidInfer buckets (per-layer cosine token schedule baked in).
     pyramid_ns: tuple = (256, 512, 1024)
-    # Decode artifacts: (batch, kv cache capacity) pairs.
+    # Decode artifacts: (batch, kv cache capacity) pairs. Each pair is
+    # compiled twice: the dense `decode_{b}x{c}` bridge and the
+    # block-table `decode_paged_{b}x{c}` variant (slab + table indices).
     decode_batches: tuple = (1, 4)
     decode_caps: tuple = (128, 320, 576, 1088, 2112)
+    # Tokens per physical block of the paged decode artifacts (must match
+    # the rust PagingConfig.block_tokens for block-table decode to engage).
+    block_tokens: int = 16
     # Fig-3 / Fig-5(b) sweep: one full-model artifact per candidate TSP layer
     # at this context bucket / TSP token count.
     sweep_n: int = 256

@@ -10,6 +10,10 @@ Entry points (see DESIGN.md artifact table):
   prefill_stage2  — FastKV stage 2: layers [T, L) over TSP-selected hiddens.
   prefill_pyramid — PyramidInfer: per-layer cosine token-count schedule.
   decode_step     — batched single-token decode over compressed caches.
+  decode_paged_step — block-table decode: the same math, but the KV inputs
+                    are the paged block slab plus per-(layer, lane) block
+                    tables (gather in HLO), so the host never densifies
+                    the pool.
   sweep_tsp       — full model with TSP applied *inside* HLO at layer t
                     (Fig. 3 / Fig. 5(b) / Table 10 sweeps).
 
@@ -221,6 +225,53 @@ def decode_step(flat, tokens, positions, k_cache, v_cache, lens, *,
     logits, k_new, v_new = jax.vmap(
         one_seq, in_axes=(0, 0, 1, 1, 1), out_axes=(0, 1, 1)
     )(tokens, positions, k_cache, v_cache, lens)
+    return logits, k_new, v_new
+
+
+def decode_paged_step(flat, tokens, positions, slab_k, slab_v, tables,
+                      lens, *, cfg: ModelConfig):
+    """Block-table (paged) batched single-token decode.
+
+    tokens [B] i32, positions [B] i32 (absolute),
+    slab_k/slab_v [NB, bt, KV, hd] — the shared block pool slab,
+    tables [L, B, MB] i32 — physical block of each lane's i-th logical
+    block (-1 past the table's end; MB = ceil(C / bt)),
+    lens [L, B] i32 ->
+    (logits [B,V], k_new [L,B,KV,hd], v_new [L,B,KV,hd])
+
+    Each lane's cache is gathered from the slab through its block table
+    (logical row r lives in block ``tables[l, b, r // bt]`` at row
+    ``r % bt``), then attended exactly like ``decode_step``: columns past
+    ``lens`` are masked, and the new token's K/V is written at slot
+    ``lens`` in-HLO. Junk rows gathered through -1 / stale table entries
+    are therefore never attended. Equivalence to ``decode_step`` is pinned
+    by ``python/tests/test_model.py`` and, end to end against the rust
+    staging layout, by ``rust/tests/paging.rs``.
+    """
+    params = unflatten(flat, cfg)
+    nb = slab_k.shape[0]
+
+    def one_seq(tok, pos, tbl, ln):
+        # tbl: [L, MB]; ln: [L]
+        x = params["embed"][tok]
+        k_news, v_news = [], []
+        for i in range(cfg.n_layers):
+            lp = L.layer_params(params, i)
+            idx = jnp.clip(tbl[i], 0, nb - 1)              # [MB]
+            kc = slab_k[idx].reshape(-1, cfg.n_kv_heads, cfg.head_dim)
+            vc = slab_v[idx].reshape(-1, cfg.n_kv_heads, cfg.head_dim)
+            x, k_new, v_new = L.decode_layer_cached(
+                x, lp, cfg, pos, kc, vc, ln[i]
+            )
+            k_news.append(k_new)
+            v_news.append(v_new)
+        h = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = h @ params["lm_head"]
+        return logits, jnp.stack(k_news), jnp.stack(v_news)
+
+    logits, k_new, v_new = jax.vmap(
+        one_seq, in_axes=(0, 0, 1, 1), out_axes=(0, 1, 1)
+    )(tokens, positions, tables, lens)
     return logits, k_new, v_new
 
 

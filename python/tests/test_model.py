@@ -187,6 +187,96 @@ class TestDecode:
                 atol=1e-4,
             )
 
+    def test_paged_decode_equals_dense_decode(self, flat):
+        """Block-table decode over a scattered slab must equal dense decode
+        over the same logical caches (logits and new KV rows), including
+        lanes with per-layer lens, shared blocks, and partial tails."""
+        rng = np.random.default_rng(9)
+        lcfg = CFG
+        b, bt, mb = 2, 4, 6
+        c = bt * mb  # 24: dense capacity == gathered capacity
+        nb = 40      # slab bigger than needed; unused blocks hold junk
+        lens = np.asarray(
+            [[5, 11], [8, 3], [23, 16], [1, 20]][: lcfg.n_layers], np.int32
+        )
+        kc = np.zeros((lcfg.n_layers, b, c, lcfg.n_kv_heads,
+                       lcfg.head_dim), np.float32)
+        vc = np.zeros_like(kc)
+        slab_k = rng.normal(size=(nb, bt, lcfg.n_kv_heads,
+                                  lcfg.head_dim)).astype(np.float32)
+        slab_v = rng.normal(size=slab_k.shape).astype(np.float32) * 0.5
+        tables = np.full((lcfg.n_layers, b, mb), -1, np.int32)
+        # Scatter each lane's cache into randomly-chosen slab blocks and
+        # mirror the gathered content into the dense layout.
+        free = list(rng.permutation(nb - 1) + 1)  # block 0 left as junk
+        for l in range(lcfg.n_layers):
+            for s in range(b):
+                n = int(lens[l, s])
+                nblk = -(-n // bt)
+                for i in range(nblk):
+                    blk = int(free.pop())
+                    tables[l, s, i] = blk
+                    rows = min(bt, n - i * bt)
+                    kc[l, s, i * bt : i * bt + rows] = slab_k[blk, :rows]
+                    vc[l, s, i * bt : i * bt + rows] = slab_v[blk, :rows]
+        toks = jnp.asarray([5, 97], jnp.int32)
+        poss = jnp.asarray([30, 41], jnp.int32)
+        lg_d, kn_d, vn_d = M.decode_step(
+            flat, toks, poss, jnp.asarray(kc), jnp.asarray(vc),
+            jnp.asarray(lens), cfg=CFG,
+        )
+        lg_p, kn_p, vn_p = M.decode_paged_step(
+            flat, toks, poss, jnp.asarray(slab_k), jnp.asarray(slab_v),
+            jnp.asarray(tables), jnp.asarray(lens), cfg=CFG,
+        )
+        np.testing.assert_allclose(
+            np.asarray(lg_p), np.asarray(lg_d), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(kn_p), np.asarray(kn_d), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(vn_p), np.asarray(vn_d), rtol=1e-4, atol=1e-4
+        )
+
+    def test_paged_decode_ignores_rows_past_lens(self, flat):
+        """Rows beyond lens — junk in partially-filled tail blocks or
+        whole stale blocks reachable through clipped -1 entries — must not
+        influence the outputs."""
+        rng = np.random.default_rng(10)
+        lcfg = CFG
+        b, bt, mb = 1, 4, 3
+        nb = 2 * lcfg.n_layers + 1
+        lens = np.full((lcfg.n_layers, b), 6, np.int32)  # 1.5 blocks
+        slab_k = rng.normal(size=(nb, bt, lcfg.n_kv_heads,
+                                  lcfg.head_dim)).astype(np.float32)
+        slab_v = rng.normal(size=slab_k.shape).astype(np.float32)
+        tables = np.full((lcfg.n_layers, b, mb), -1, np.int32)
+        for l in range(lcfg.n_layers):
+            tables[l, 0, 0] = 2 * l + 1
+            tables[l, 0, 1] = 2 * l + 2
+        toks = jnp.asarray([17], jnp.int32)
+        poss = jnp.asarray([6], jnp.int32)
+        out1 = M.decode_paged_step(
+            flat, toks, poss, jnp.asarray(slab_k), jnp.asarray(slab_v),
+            jnp.asarray(tables), jnp.asarray(lens), cfg=CFG,
+        )
+        # poison every row past lens in referenced tail blocks + block 0
+        slab_k2, slab_v2 = slab_k.copy(), slab_v.copy()
+        for l in range(lcfg.n_layers):
+            slab_k2[2 * l + 2, 2:] = 1e3   # rows 2,3 of the tail block
+            slab_v2[2 * l + 2, 2:] = -1e3
+        slab_k2[0] = 7e2
+        slab_v2[0] = -7e2
+        out2 = M.decode_paged_step(
+            flat, toks, poss, jnp.asarray(slab_k2), jnp.asarray(slab_v2),
+            jnp.asarray(tables), jnp.asarray(lens), cfg=CFG,
+        )
+        for a, b_ in zip(out1, out2):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b_), rtol=1e-5, atol=1e-5
+            )
+
     def test_compressed_cache_changes_little_when_keeping_salient(
         self, flat
     ):

@@ -1,0 +1,469 @@
+//! The decode planner/stepper shared by the single-request engine and the
+//! continuous-batching server.
+//!
+//! Before this module, `engine.rs::generate` and `server.rs` each carried
+//! their own decode loop: densify the whole KV store (`KvStore::stage`),
+//! run the `decode_{B}x{C}` artifact, append, argmax, handle END. Both now
+//! drive a [`DecodeBatch`]:
+//!
+//!  * [`DecodeBatch::step`] plans one batched decode step. When the store
+//!    exposes a block-table [`DecodeView`] and the manifest carries the
+//!    matching `decode_paged_{B}x{C}` artifact, the inputs are the block
+//!    slab (device-pinned per store — see `Runtime::run_with_pinned`)
+//!    plus table indices and lens: O(referenced blocks) planning work per
+//!    token, with the slab materialized only when its version went stale
+//!    (see the paging README for what that costs until buffer donation
+//!    lands). Otherwise it falls back to the dense staged bridge
+//!    (`decode_{B}x{C}`), which remains available behind
+//!    `PagingConfig::dense_staging` and for the flat arena.
+//!  * [`advance_lane`] applies one lane's slice of the outputs: append the
+//!    new KV row (block-compacting under pool pressure when a
+//!    [`CompactSpec`] is supplied), then sample the next token.
+//!
+//! Policy-level reactions stay with the callers: the engine stops on any
+//! exhaustion (recording `truncated_by_capacity`), the server preempts.
+
+use anyhow::Result;
+
+use crate::coordinator::paging::{AppendResult, KvStore};
+use crate::coordinator::policies::{Exec, PolicyCfg};
+use crate::manifest::{decode_artifact_name, decode_paged_artifact_name, Manifest};
+use crate::metrics::Metrics;
+use crate::runtime::outputs::DecodeOut;
+use crate::runtime::{In, PinnedInput};
+use crate::tensor::HostTensorI32;
+use crate::tokenizer::END;
+
+/// One active lane's contribution to a batched decode step.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneInput {
+    pub slot: usize,
+    /// Token being decoded this step.
+    pub token: i32,
+    /// Absolute position of that token.
+    pub pos: usize,
+}
+
+/// Which input ABI a step used.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodePath {
+    /// Block-table-native: slab + tables + lens (`decode_paged_{B}x{C}`).
+    BlockTable,
+    /// Dense staging bridge (`decode_{B}x{C}`).
+    Staged,
+}
+
+#[derive(Debug, Clone)]
+struct PagedArtifact {
+    name: String,
+    /// Static pool bucket `nb` of the artifact's slab inputs.
+    pool_blocks: usize,
+    /// Static tokens-per-block the artifact was compiled for.
+    block_tokens: usize,
+    /// Static table width `mb = ceil(cap / block_tokens)`.
+    max_blocks: usize,
+}
+
+impl PagedArtifact {
+    /// Whether a store's live view fits this artifact's static shapes.
+    fn accepts(&self, view: &crate::coordinator::paging::DecodeView<'_>, cap: usize) -> bool {
+        view.block_tokens == self.block_tokens
+            && view.num_blocks <= self.pool_blocks
+            && view.max_blocks <= self.max_blocks
+            && view.capacity == cap
+    }
+}
+
+/// Plans batched decode steps for one `(batch, capacity)` bucket.
+#[derive(Debug, Clone)]
+pub struct DecodeBatch {
+    b: usize,
+    cap: usize,
+    dense: String,
+    paged: Option<PagedArtifact>,
+}
+
+impl DecodeBatch {
+    /// Resolve the artifact family for a `(batch, capacity)` bucket. The
+    /// paged artifact is optional: older artifact dirs without it simply
+    /// keep the staged path.
+    pub fn new(man: &Manifest, b: usize, cap: usize) -> DecodeBatch {
+        let paged_name = decode_paged_artifact_name(b, cap);
+        let paged = man.artifacts.get(&paged_name).map(|meta| {
+            let bt = meta.block_tokens.max(1);
+            PagedArtifact {
+                name: paged_name,
+                pool_blocks: meta.pool_blocks,
+                block_tokens: bt,
+                max_blocks: (cap + bt - 1) / bt,
+            }
+        });
+        DecodeBatch { b, cap, dense: decode_artifact_name(b, cap), paged }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// The path [`DecodeBatch::step`] will take for this store.
+    pub fn path_for(&self, store: &dyn KvStore) -> DecodePath {
+        match (&self.paged, store.decode_view()) {
+            (Some(art), Some(view)) if art.accepts(&view, self.cap) => {
+                DecodePath::BlockTable
+            }
+            _ => DecodePath::Staged,
+        }
+    }
+
+    /// Artifact name the next step will execute (for logs / warmup).
+    pub fn artifact_for(&self, store: &dyn KvStore) -> &str {
+        match self.path_for(store) {
+            DecodePath::BlockTable => {
+                &self.paged.as_ref().expect("paged artifact").name
+            }
+            DecodePath::Staged => &self.dense,
+        }
+    }
+
+    /// Run one batched decode step over `lanes`. Idle slots decode a
+    /// dummy token 0 at position 0 whose outputs are simply never applied
+    /// (same contract the server loop always had).
+    pub fn step(
+        &self,
+        ex: &dyn Exec,
+        store: &dyn KvStore,
+        lanes: &[LaneInput],
+        metrics: Option<&Metrics>,
+    ) -> Result<DecodeOut> {
+        let b = self.b;
+        let mut toks = vec![0i32; b];
+        let mut poss = vec![0i32; b];
+        for lane in lanes {
+            toks[lane.slot] = lane.token;
+            poss[lane.slot] = lane.pos as i32;
+        }
+        let toks = HostTensorI32::new(vec![b], toks);
+        let poss = HostTensorI32::new(vec![b], poss);
+
+        // Build the view once; it decides the path and feeds the inputs.
+        let view = store.decode_view();
+        let paged = match (&self.paged, &view) {
+            (Some(art), Some(v)) if art.accepts(v, self.cap) => Some(art),
+            _ => None,
+        };
+        let out = match paged {
+            Some(art) => {
+                let view = view.expect("checked above");
+                // Slab planes are pinned on device per store (the store id
+                // rides in the key, so two stores sharing one executor
+                // never thrash or race each other's slot). The O(pool)
+                // materialization below is skipped only when the slab is
+                // unchanged since the last upload; appends change it every
+                // generated token, so on the current pure-AOT ABI the
+                // re-upload per step remains — deleting it needs PJRT
+                // buffer donation (ROADMAP). What this path removes today
+                // is the host-side cost: the dense densify/clone and the
+                // incremental staging double-write.
+                let sid = view.version >> 32;
+                let k_key = format!("decode_slab_k:{sid:x}");
+                let v_key = format!("decode_slab_v:{sid:x}");
+                let current = ex.pinned_is_current(&k_key, view.version)
+                    && ex.pinned_is_current(&v_key, view.version);
+                let inputs = vec![
+                    In::I32(toks),
+                    In::I32(poss),
+                    In::I32(view.tables_tensor(art.max_blocks)),
+                    In::I32(view.lens_tensor()),
+                ];
+                if let Some(m) = metrics {
+                    m.inc("decode_steps_block_table", 1);
+                }
+                let materialize = |v: &crate::coordinator::paging::DecodeView<'_>| {
+                    let (sk, sv) = v.slab_tensors(art.pool_blocks);
+                    vec![
+                        PinnedInput::new(2, &k_key, v.version, sk),
+                        PinnedInput::new(3, &v_key, v.version, sv),
+                    ]
+                };
+                if current {
+                    let cached = vec![
+                        PinnedInput::cached(2, &k_key, view.version),
+                        PinnedInput::cached(3, &v_key, view.version),
+                    ];
+                    match ex.run_pinned(&art.name, cached, inputs.clone()) {
+                        Ok(r) => r,
+                        // The residency check can race an LRU eviction on
+                        // a shared executor; retry with payloads ONLY for
+                        // that specific miss (`Runtime::run_with_pinned`'s
+                        // "not resident" error) — any other failure is a
+                        // genuine execution error and must surface as-is,
+                        // not be masked by a silent re-execution.
+                        Err(e) if format!("{e:#}").contains("is not resident") => {
+                            ex.run_pinned(&art.name, materialize(&view), inputs)?
+                        }
+                        Err(e) => return Err(e),
+                    }
+                } else {
+                    ex.run_pinned(&art.name, materialize(&view), inputs)?
+                }
+            }
+            None => {
+                let staged = store.stage();
+                if let Some(m) = metrics {
+                    m.inc("decode_steps_staged", 1);
+                }
+                ex.run(
+                    &self.dense,
+                    vec![
+                        In::I32(toks),
+                        In::I32(poss),
+                        staged.k.into(),
+                        staged.v.into(),
+                        staged.lens.into(),
+                    ],
+                )?
+            }
+        };
+        Ok(DecodeOut::from_vec(out))
+    }
+}
+
+/// Compaction reaction to pool pressure during [`advance_lane`]: the
+/// policy's per-layer keep-sets drive block-granular eviction before the
+/// append is retried.
+pub struct CompactSpec<'a> {
+    pub policy_cfg: &'a PolicyCfg,
+    /// Shrink factor per layer (`server::COMPACT_SHRINK`).
+    pub shrink: f64,
+    pub window: usize,
+    pub metrics: Option<&'a Metrics>,
+}
+
+/// Per-lane outcome of applying one decode step's outputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneAdvance {
+    /// KV appended and the next token sampled; `ended` flags END.
+    Next { token: i32, ended: bool },
+    /// The lane hit its staging capacity `C`; generation must stop.
+    CapacityStop,
+    /// The block pool cannot grow the lane (even after compaction, when a
+    /// [`CompactSpec`] was supplied); the caller decides preemption.
+    PoolPressure,
+}
+
+/// Apply one lane's slice of a decode step's outputs: append the new KV
+/// row (compacting under pressure if `compact` is given), then sample the
+/// next token from the lane's logits row.
+pub fn advance_lane(
+    store: &mut dyn KvStore,
+    slot: usize,
+    out: &DecodeOut,
+    compact: Option<&CompactSpec<'_>>,
+) -> LaneAdvance {
+    let mut res = store.append(slot, &out.k_new, &out.v_new);
+    if res == AppendResult::PoolExhausted {
+        if let Some(spec) = compact {
+            let lens = store.layer_lens(slot);
+            let keep = spec.policy_cfg.compaction_keep(
+                &lens,
+                spec.shrink,
+                spec.window,
+            );
+            if store.compact(slot, &keep) > 0 {
+                if let Some(m) = spec.metrics {
+                    m.inc("compactions", 1);
+                }
+                res = store.append(slot, &out.k_new, &out.v_new);
+            }
+        }
+    }
+    match res {
+        AppendResult::Ok => {
+            let logits = out.logits.row(slot);
+            let token = logits
+                .iter()
+                .enumerate()
+                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap_or(0);
+            LaneAdvance::Next { token, ended: token == END as i32 }
+        }
+        AppendResult::CapacityExhausted => LaneAdvance::CapacityStop,
+        AppendResult::PoolExhausted => LaneAdvance::PoolPressure,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kvcache::RequestCache;
+    use crate::coordinator::paging::{PagedArena, PagingConfig};
+    use crate::manifest::{ArtifactMeta, Buckets, Manifest, ModelMeta, TensorSig};
+    use crate::tensor::HostTensor;
+    use std::collections::BTreeMap;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            vocab_size: 8,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 2,
+            head_dim: 2,
+            tsp_layer: 1,
+            window: 2,
+            pool_kernel: 3,
+            max_train_len: 64,
+        }
+    }
+
+    fn manifest(with_paged: bool) -> Manifest {
+        let mut artifacts = BTreeMap::new();
+        let mk = |name: &str, kind: &str, pool_blocks, block_tokens| ArtifactMeta {
+            name: name.to_string(),
+            file: format!("{name}.hlo.txt"),
+            kind: kind.to_string(),
+            n: 0,
+            batch: 1,
+            cap: 8,
+            tsp_layer: 1,
+            pool_blocks,
+            block_tokens,
+            inputs: Vec::<TensorSig>::new(),
+            outputs: Vec::new(),
+        };
+        artifacts.insert(
+            "decode_1x8".to_string(),
+            mk("decode_1x8", "decode", 0, 0),
+        );
+        if with_paged {
+            artifacts.insert(
+                "decode_paged_1x8".to_string(),
+                mk("decode_paged_1x8", "decode_paged", 8, 2),
+            );
+        }
+        Manifest {
+            dir: std::path::PathBuf::from("/tmp"),
+            model: meta(),
+            n_params: 1,
+            kernel: "jnp".into(),
+            buckets: Buckets {
+                prefill_ns: vec![64],
+                stage1_ns: vec![64],
+                stage2_ns: vec![64],
+                pyramid_ns: vec![64],
+                decode_batches: vec![1],
+                decode_caps: vec![8],
+                sweep_n: 64,
+                sweep_nt: 16,
+                pallas_n: 64,
+                max_gen: 8,
+                block_tokens: 2,
+            },
+            artifacts,
+        }
+    }
+
+    fn store() -> PagedArena {
+        let m = meta();
+        let cfg = PagingConfig { block_tokens: 2, ..Default::default() };
+        let mut pa = PagedArena::new(&m, 1, 8, cfg);
+        let mut rc = RequestCache::new(&m);
+        let re = 4;
+        for l in 0..2 {
+            rc.k[l] = (0..3 * re).map(|i| i as f32).collect();
+            rc.v[l] = (0..3 * re).map(|i| -(i as f32)).collect();
+            rc.lens[l] = 3;
+        }
+        PagedArena::admit(&mut pa, &rc).unwrap();
+        pa
+    }
+
+    #[test]
+    fn picks_block_table_path_when_artifact_and_view_align() {
+        let pa = store();
+        let batch = DecodeBatch::new(&manifest(true), 1, 8);
+        assert_eq!(batch.path_for(&pa), DecodePath::BlockTable);
+        assert_eq!(batch.artifact_for(&pa), "decode_paged_1x8");
+    }
+
+    #[test]
+    fn falls_back_without_paged_artifact_or_on_mismatch() {
+        let pa = store();
+        let batch = DecodeBatch::new(&manifest(false), 1, 8);
+        assert_eq!(batch.path_for(&pa), DecodePath::Staged);
+        assert_eq!(batch.artifact_for(&pa), "decode_1x8");
+
+        // block-size mismatch between store and artifact -> staged
+        let m = meta();
+        let cfg = PagingConfig { block_tokens: 4, ..Default::default() };
+        let other = PagedArena::new(&m, 1, 8, cfg);
+        let batch = DecodeBatch::new(&manifest(true), 1, 8);
+        assert_eq!(batch.path_for(&other), DecodePath::Staged);
+    }
+
+    #[test]
+    fn dense_staging_flag_forces_staged_path() {
+        let m = meta();
+        let cfg = PagingConfig {
+            block_tokens: 2,
+            dense_staging: true,
+            ..Default::default()
+        };
+        let pa = PagedArena::new(&m, 1, 8, cfg);
+        let batch = DecodeBatch::new(&manifest(true), 1, 8);
+        assert_eq!(batch.path_for(&pa), DecodePath::Staged);
+        assert_eq!(batch.artifact_for(&pa), "decode_1x8");
+    }
+
+    #[test]
+    fn advance_lane_appends_and_samples() {
+        let mut pa = store();
+        let logits = HostTensor::new(
+            vec![1, 8],
+            vec![0.0, 0.1, 3.0, 0.2, 0.0, 0.0, 0.0, 0.0],
+        );
+        let k_new = HostTensor::new(vec![2, 1, 2, 2], vec![7.0; 8]);
+        let out = DecodeOut {
+            logits,
+            k_new: k_new.clone(),
+            v_new: k_new,
+        };
+        match advance_lane(&mut pa, 0, &out, None) {
+            LaneAdvance::Next { token, ended } => {
+                assert_eq!(token, 2);
+                assert!(!ended);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(pa.layer_lens(0), vec![4, 4]);
+    }
+
+    #[test]
+    fn advance_lane_reports_capacity() {
+        let m = meta();
+        let cfg = PagingConfig { block_tokens: 2, ..Default::default() };
+        let mut pa = PagedArena::new(&m, 1, 2, cfg);
+        let mut rc = RequestCache::new(&m);
+        for l in 0..2 {
+            rc.k[l] = vec![1.0; 2 * 4];
+            rc.v[l] = vec![1.0; 2 * 4];
+            rc.lens[l] = 2;
+        }
+        let slot = PagedArena::admit(&mut pa, &rc).unwrap();
+        let t = HostTensor::zeros(vec![2, 1, 2, 2]);
+        let out = DecodeOut {
+            logits: HostTensor::zeros(vec![1, 8]),
+            k_new: t.clone(),
+            v_new: t,
+        };
+        assert_eq!(
+            advance_lane(&mut pa, slot, &out, None),
+            LaneAdvance::CapacityStop
+        );
+    }
+}

@@ -8,11 +8,11 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::paging::{AppendResult, PagedArena, PagingConfig};
+use crate::coordinator::decode::{advance_lane, DecodeBatch, LaneAdvance, LaneInput};
+use crate::coordinator::paging::{PagedArena, PagingConfig};
 use crate::coordinator::policies::{Exec, Policy, PolicyCfg};
 use crate::manifest::Manifest;
-use crate::runtime::outputs::DecodeOut;
-use crate::tensor::HostTensorI32;
+use crate::metrics::Metrics;
 use crate::tokenizer::END;
 use crate::util::bucket_for;
 
@@ -29,6 +29,11 @@ pub struct GenStats {
     pub cache_elems: usize,
     /// Decode cache capacity bucket used.
     pub decode_cap: usize,
+    /// True when generation stopped because the KV store could not grow
+    /// (lane capacity or block pool), not because of END / max_new. The
+    /// seed silently `break`-ed here; the condition is now also counted on
+    /// `Metrics::global()` as `decode_truncated_by_capacity`.
+    pub truncated_by_capacity: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -74,13 +79,14 @@ pub fn generate(
     // Default KV backend: the paged arena (worst-case-sized pool for a
     // single lane, so admission cannot fail here). The prefix cache is
     // off: a single-request arena dropped at function exit can never
-    // reuse anything, so content hashing would be pure overhead.
-    let mut store = PagedArena::new(
-        &man.model,
-        1,
-        cap,
-        PagingConfig { prefix_cache: false, ..PagingConfig::default() },
-    );
+    // reuse anything, so content hashing would be pure overhead. The
+    // block size follows the manifest's decode_paged bucket — a mismatch
+    // would silently pin decode to the dense staged bridge.
+    let mut pc = PagingConfig { prefix_cache: false, ..PagingConfig::default() };
+    if man.buckets.block_tokens > 0 {
+        pc.block_tokens = man.buckets.block_tokens;
+    }
+    let mut store = PagedArena::new(&man.model, 1, cap, pc);
     let slot = store.admit(&pre.cache).expect("worst-case pool admits");
 
     let mut stats = GenStats {
@@ -92,33 +98,36 @@ pub fn generate(
         ..Default::default()
     };
 
-    let artifact = format!("decode_1x{cap}");
+    // Block-table-native decode by default: the batch planner feeds the
+    // `decode_paged_1x{cap}` artifact the slab + table indices, falling
+    // back to the dense staged bridge only when the manifest predates the
+    // paged artifacts (or the store cannot expose a view).
+    let batch = DecodeBatch::new(man, 1, cap);
     let mut tokens = vec![pre.first_token];
     let mut cur = pre.first_token;
     let mut pos = pre.next_pos;
     let t1 = Instant::now();
     while tokens.len() < max_new && cur != END as i32 {
-        let staged = store.stage();
-        let out = DecodeOut::from_vec(ex.run(
-            &artifact,
-            vec![
-                HostTensorI32::new(vec![1], vec![cur]).into(),
-                HostTensorI32::new(vec![1], vec![pos as i32]).into(),
-                staged.k.into(),
-                staged.v.into(),
-                staged.lens.into(),
-            ],
-        )?);
-        if store.append(slot, &out.k_new, &out.v_new) != AppendResult::Ok {
-            break; // capacity exhausted
+        let lane = LaneInput { slot, token: cur, pos };
+        let out = batch.step(ex, &store, &[lane], None)?;
+        match advance_lane(&mut store, slot, &out, None) {
+            LaneAdvance::Next { token, ended } => {
+                stats.decode_steps += 1;
+                pos += 1;
+                if ended {
+                    break;
+                }
+                cur = token;
+                tokens.push(cur);
+            }
+            LaneAdvance::CapacityStop | LaneAdvance::PoolPressure => {
+                // The store cannot grow this request: surface it instead
+                // of the seed's silent break.
+                stats.truncated_by_capacity = true;
+                Metrics::global().inc("decode_truncated_by_capacity", 1);
+                break;
+            }
         }
-        stats.decode_steps += 1;
-        pos += 1;
-        cur = out.logits.argmax() as i32;
-        if cur == END as i32 {
-            break;
-        }
-        tokens.push(cur);
     }
     stats.decode_secs = t1.elapsed().as_secs_f64();
 
@@ -159,6 +168,7 @@ mod tests {
                 sweep_nt: 64,
                 pallas_n: 128,
                 max_gen: 64,
+                block_tokens: 16,
             },
             artifacts: BTreeMap::new(),
         }

@@ -5,12 +5,16 @@
 //! * `kvcache`   — compressed per-request caches and the flat decode batch
 //!   arena (artifact-layout staging).
 //! * `paging`    — the paged KV-cache subsystem: block pool + allocator,
-//!   prefix reuse, FastKV-aware eviction, and the `KvStore` backend trait
-//!   (`PagedArena` is the default backend; `BatchArena` the flat fallback).
+//!   prefix reuse, FastKV-aware eviction, the `KvStore` backend trait
+//!   (`PagedArena` is the default backend; `BatchArena` the flat
+//!   fallback), and the block-table `DecodeView`.
+//! * `decode`    — the `DecodeBatch` planner/stepper both decode loops
+//!   drive (block-table-native by default, staged fallback).
 //! * `engine`    — single-request generate loop (evals/benches).
 //! * `scheduler` + `server` — the continuous-batching serving stack with
 //!   memory-aware admission and preemption.
 
+pub mod decode;
 pub mod engine;
 pub mod kvcache;
 pub mod paging;

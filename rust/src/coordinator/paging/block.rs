@@ -77,6 +77,17 @@ impl BlockStore {
         self.k.len() + self.v.len()
     }
 
+    /// The whole K plane (`[num_blocks, block_tokens, row_elems]` row
+    /// major) — borrowed by `DecodeView` so block-table decode reads the
+    /// slab in place instead of densifying it.
+    pub fn k_plane(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v_plane(&self) -> &[f32] {
+        &self.v
+    }
+
     fn base(&self, block: BlockId, row: usize) -> usize {
         debug_assert!(block.index() < self.num_blocks, "block out of range");
         debug_assert!(row < self.block_tokens, "row out of range");

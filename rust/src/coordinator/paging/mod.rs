@@ -12,8 +12,18 @@
 //!  * [`prefix::PrefixCache`] — chained content hashes so requests sharing
 //!    a compressed-KV prefix reuse physical blocks;
 //!  * [`PagedArena`] — the per-batch façade: per-(sequence, layer) block
-//!    tables plus an incrementally-maintained staging tensor in the exact
-//!    artifact layout, so a decode step still sees one dense input.
+//!    tables over the shared slab;
+//!  * [`view::DecodeView`] — the block-table-native decode description
+//!    (slab borrow + tables + lens, no KV copies) consumed by the
+//!    `decode_paged_{B}x{C}` artifacts and the host-side gather oracle.
+//!
+//! Decode is block-table-native by default: a step hands the runtime the
+//! slab plus block-table indices instead of densifying the pool. The old
+//! dense staging bridge survives behind
+//! [`PagingConfig::dense_staging`] as a differential fallback — with it
+//! enabled the arena additionally maintains the `[L, B, C, KV, hd]`
+//! staging copy incrementally, and `stage()` returns that copy instead of
+//! gathering on demand.
 //!
 //! Both arenas implement [`KvStore`], the backend trait the engine,
 //! server, and scheduler program against; `PagedArena` is the default.
@@ -22,6 +32,9 @@
 pub mod allocator;
 pub mod block;
 pub mod prefix;
+pub mod view;
+
+pub use view::DecodeView;
 
 use crate::coordinator::kvcache::{BatchArena, RequestCache};
 use crate::manifest::ModelMeta;
@@ -42,11 +55,23 @@ pub struct PagingConfig {
     pub num_blocks: Option<usize>,
     /// Enable hash-based prefix reuse of full blocks.
     pub prefix_cache: bool,
+    /// Fallback: additionally maintain the dense `[L, B, C, KV, hd]`
+    /// staging copy incrementally and serve `stage()` from it (the
+    /// pre-block-table decode bridge). Off by default — decode reads block
+    /// tables directly through [`DecodeView`], and `stage()` gathers on
+    /// demand (tests/tools only). Kept so a differential oracle can pin
+    /// block-table decode against the staged path.
+    pub dense_staging: bool,
 }
 
 impl Default for PagingConfig {
     fn default() -> Self {
-        PagingConfig { block_tokens: 16, num_blocks: None, prefix_cache: true }
+        PagingConfig {
+            block_tokens: 16,
+            num_blocks: None,
+            prefix_cache: true,
+            dense_staging: false,
+        }
     }
 }
 
@@ -138,17 +163,37 @@ pub trait KvStore {
     /// row indices) on each layer. Returns physical blocks actually
     /// released back to the pool.
     fn compact(&mut self, slot: usize, keep: &[Vec<usize>]) -> usize;
-    /// Materialize dense decode inputs.
+    /// Materialize dense decode inputs (fallback / oracle path — the
+    /// default decode hot path consumes [`KvStore::decode_view`] instead).
     fn stage(&self) -> Staged;
+    /// Block-table-native decode description, if this backend supports it.
+    /// `None` (the flat arena) forces the dense staged path.
+    fn decode_view(&self) -> Option<DecodeView<'_>> {
+        None
+    }
+    /// Physical blocks currently held by a lane (0 for non-paged
+    /// backends). Drives preemption victim selection.
+    fn held_blocks(&self, _slot: usize) -> usize {
+        0
+    }
     fn pool_stats(&self) -> PoolStats;
 }
 
 // ---------------------------------------------------------------------------
 // PagedArena
 
+/// Dense staging tensors in artifact layout, maintained only under the
+/// [`PagingConfig::dense_staging`] fallback.
+#[derive(Debug)]
+struct StageBuf {
+    k: HostTensor,
+    v: HostTensor,
+}
+
 /// Paged decode KV store: per-(lane, layer) block tables over a shared
-/// ref-counted pool, plus an incrementally-maintained dense staging copy
-/// in artifact layout (the ABI bridge to the compiled decode step).
+/// ref-counted pool. Decode consumes [`DecodeView`] (block tables + slab
+/// borrow); the dense staging copy exists only under the
+/// `dense_staging` fallback.
 #[derive(Debug)]
 pub struct PagedArena {
     l: usize,
@@ -164,13 +209,23 @@ pub struct PagedArena {
     /// `lens[slot][layer]` → valid tokens.
     lens: Vec<Vec<usize>>,
     used: Vec<bool>,
-    stage_k: HostTensor,
-    stage_v: HostTensor,
+    stage_buf: Option<StageBuf>,
+    /// Process-unique store id (upper half of the view version, so a
+    /// device-side pinned-slab cache can never confuse two stores).
+    id: u64,
+    /// Mutation counter (lower half of the view version).
+    mutations: u32,
     alloc_failures: u64,
 }
 
 fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
+}
+
+fn next_store_id() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
 }
 
 impl PagedArena {
@@ -181,6 +236,10 @@ impl PagedArena {
         let worst = l * b * ceil_div(c.max(1), bt);
         let num_blocks = cfg.num_blocks.unwrap_or(worst).max(1);
         let shape = vec![l, b, c, meta.n_kv_heads, meta.head_dim];
+        let stage_buf = cfg.dense_staging.then(|| StageBuf {
+            k: HostTensor::zeros(shape.clone()),
+            v: HostTensor::zeros(shape),
+        });
         PagedArena {
             l,
             b,
@@ -193,9 +252,67 @@ impl PagedArena {
             tables: vec![vec![Vec::new(); l]; b],
             lens: vec![vec![0; l]; b],
             used: vec![false; b],
-            stage_k: HostTensor::zeros(shape.clone()),
-            stage_v: HostTensor::zeros(shape),
+            stage_buf,
+            id: next_store_id(),
+            mutations: 0,
             alloc_failures: 0,
+        }
+    }
+
+    /// Slab/table mutation stamp consumed by [`DecodeView::version`]:
+    /// store id in the upper 32 bits, mutation count in the lower.
+    pub fn version(&self) -> u64 {
+        ((self.id & 0xffff_ffff) << 32) | self.mutations as u64
+    }
+
+    fn touch(&mut self) {
+        self.mutations = self.mutations.wrapping_add(1);
+    }
+
+    /// Physical blocks currently referenced by a lane's tables.
+    pub fn held_blocks(&self, slot: usize) -> usize {
+        if slot >= self.b || !self.used[slot] {
+            return 0;
+        }
+        self.tables[slot].iter().map(|t| t.len()).sum()
+    }
+
+    /// Build the block-table-native decode description for this step:
+    /// tables + lens are copied (O(referenced blocks)), the slab is
+    /// borrowed in place.
+    pub fn view(&self) -> DecodeView<'_> {
+        let max_blocks = self
+            .tables
+            .iter()
+            .flat_map(|lane| lane.iter().map(|t| t.len()))
+            .max()
+            .unwrap_or(0)
+            .max(1);
+        let mut tables = vec![-1i32; self.l * self.b * max_blocks];
+        let mut lens = vec![0i32; self.l * self.b];
+        for slot in 0..self.b {
+            for l in 0..self.l {
+                let base = (l * self.b + slot) * max_blocks;
+                for (i, bid) in self.tables[slot][l].iter().enumerate() {
+                    tables[base + i] = bid.0 as i32;
+                }
+                lens[l * self.b + slot] = self.lens[slot][l] as i32;
+            }
+        }
+        DecodeView {
+            version: self.version(),
+            l: self.l,
+            b: self.b,
+            capacity: self.c,
+            block_tokens: self.block_tokens,
+            kv_heads: self.kv_heads,
+            head_dim: self.head_dim,
+            num_blocks: self.alloc.blocks_total(),
+            max_blocks,
+            tables,
+            lens,
+            slab_k: self.alloc.store().k_plane(),
+            slab_v: self.alloc.store().v_plane(),
         }
     }
 
@@ -341,34 +458,41 @@ impl PagedArena {
             new_tables.push(table);
         }
 
-        // Commit: bookkeeping + staging copy (read rows back from the
-        // store so shared and fresh blocks take the same path).
+        // Commit: bookkeeping, plus the dense staging copy under the
+        // fallback (read rows back from the store so shared and fresh
+        // blocks take the same path).
         self.used[slot] = true;
         for (l, table) in new_tables.iter().enumerate() {
             let mut row = 0usize;
             {
                 let alloc = &self.alloc;
                 let store = alloc.store();
-                let stage_k = &mut self.stage_k;
-                let stage_v = &mut self.stage_v;
-                for &bid in table {
-                    let filled = alloc.meta(bid).filled as usize;
-                    for r in 0..filled {
-                        let base =
-                            ((l * self.b + slot) * self.c + row) * re;
-                        stage_k.data[base..base + re]
-                            .copy_from_slice(store.k_row(bid, r));
-                        stage_v.data[base..base + re]
-                            .copy_from_slice(store.v_row(bid, r));
-                        row += 1;
+                let stage = self.stage_buf.as_mut();
+                if let Some(buf) = stage {
+                    for &bid in table {
+                        let filled = alloc.meta(bid).filled as usize;
+                        for r in 0..filled {
+                            let base =
+                                ((l * self.b + slot) * self.c + row) * re;
+                            buf.k.data[base..base + re]
+                                .copy_from_slice(store.k_row(bid, r));
+                            buf.v.data[base..base + re]
+                                .copy_from_slice(store.v_row(bid, r));
+                            row += 1;
+                        }
+                    }
+                } else {
+                    for &bid in table {
+                        row += alloc.meta(bid).filled as usize;
                     }
                 }
             }
-            debug_assert_eq!(row, cache.lens[l], "staged rows vs cache len");
+            debug_assert_eq!(row, cache.lens[l], "block rows vs cache len");
             // lane was zeroed on release; rows above `row` are already 0
             self.lens[slot][l] = cache.lens[l];
         }
         self.tables[slot] = new_tables;
+        self.touch();
         Some(slot)
     }
 
@@ -394,9 +518,12 @@ impl PagedArena {
             let src = self.stage_base(l, slot, 0);
             let d = self.stage_base(l, dst, 0);
             let n = self.c * re;
-            self.stage_k.data.copy_within(src..src + n, d);
-            self.stage_v.data.copy_within(src..src + n, d);
+            if let Some(buf) = self.stage_buf.as_mut() {
+                buf.k.data.copy_within(src..src + n, d);
+                buf.v.data.copy_within(src..src + n, d);
+            }
         }
+        self.touch();
         Some(dst)
     }
 
@@ -417,9 +544,12 @@ impl PagedArena {
         for l in 0..self.l {
             let base = self.stage_base(l, slot, 0);
             let n = self.c * re;
-            self.stage_k.data[base..base + n].fill(0.0);
-            self.stage_v.data[base..base + n].fill(0.0);
+            if let Some(buf) = self.stage_buf.as_mut() {
+                buf.k.data[base..base + n].fill(0.0);
+                buf.v.data[base..base + n].fill(0.0);
+            }
         }
+        self.touch();
         true
     }
 
@@ -505,10 +635,13 @@ impl PagedArena {
             self.alloc.store_mut().write_row(bid, row_in_block, k_row, v_row);
             self.alloc.set_filled(bid, (row_in_block + 1) as u32);
             let base = self.stage_base(l, slot, len);
-            self.stage_k.data[base..base + re].copy_from_slice(k_row);
-            self.stage_v.data[base..base + re].copy_from_slice(v_row);
+            if let Some(buf) = self.stage_buf.as_mut() {
+                buf.k.data[base..base + re].copy_from_slice(k_row);
+                buf.v.data[base..base + re].copy_from_slice(v_row);
+            }
             self.lens[slot][l] = len + 1;
         }
+        self.touch();
         AppendResult::Ok
     }
 
@@ -593,17 +726,18 @@ impl PagedArena {
             let new_len = keep[l].len();
             self.tables[slot][l] = self.fill_blocks(&tk, &tv, new_len);
             self.lens[slot][l] = new_len;
-            // Staging: survivors first, zero the trimmed tail.
+            // Staging fallback: survivors first, zero the trimmed tail.
             let base = self.stage_base(l, slot, 0);
-            self.stage_k.data[base..base + new_len * re]
-                .copy_from_slice(&tk);
-            self.stage_v.data[base..base + new_len * re]
-                .copy_from_slice(&tv);
-            let tail0 = base + new_len * re;
-            let tail1 = base + old_len * re;
-            self.stage_k.data[tail0..tail1].fill(0.0);
-            self.stage_v.data[tail0..tail1].fill(0.0);
+            if let Some(buf) = self.stage_buf.as_mut() {
+                buf.k.data[base..base + new_len * re].copy_from_slice(&tk);
+                buf.v.data[base..base + new_len * re].copy_from_slice(&tv);
+                let tail0 = base + new_len * re;
+                let tail1 = base + old_len * re;
+                buf.k.data[tail0..tail1].fill(0.0);
+                buf.v.data[tail0..tail1].fill(0.0);
+            }
         }
+        self.touch();
         in_use_before.saturating_sub(self.alloc.blocks_in_use())
     }
 
@@ -612,16 +746,26 @@ impl PagedArena {
     }
 
     pub fn stage(&self) -> Staged {
-        let mut lens = vec![0i32; self.l * self.b];
-        for slot in 0..self.b {
-            for l in 0..self.l {
-                lens[l * self.b + slot] = self.lens[slot][l] as i32;
+        match &self.stage_buf {
+            // Fallback: the incrementally-maintained dense copy (one clone
+            // per call — the old per-token decode cost).
+            Some(buf) => {
+                let mut lens = vec![0i32; self.l * self.b];
+                for slot in 0..self.b {
+                    for l in 0..self.l {
+                        lens[l * self.b + slot] = self.lens[slot][l] as i32;
+                    }
+                }
+                Staged {
+                    k: buf.k.clone(),
+                    v: buf.v.clone(),
+                    lens: HostTensorI32::new(vec![self.l, self.b], lens),
+                }
             }
-        }
-        Staged {
-            k: self.stage_k.clone(),
-            v: self.stage_v.clone(),
-            lens: HostTensorI32::new(vec![self.l, self.b], lens),
+            // Default: gather through the block tables on demand. Decode
+            // never takes this path (it consumes the view directly); it
+            // exists for tests, tools, and the differential oracle.
+            None => self.view().gather_dense(),
         }
     }
 
@@ -702,6 +846,21 @@ impl KvStore for PagedArena {
 
     fn stage(&self) -> Staged {
         PagedArena::stage(self)
+    }
+
+    fn decode_view(&self) -> Option<DecodeView<'_>> {
+        if self.stage_buf.is_some() {
+            // dense-staging fallback: decode must take the staged bridge
+            // (that is the whole point of the flag); the inherent `view()`
+            // stays callable for tests and oracles.
+            None
+        } else {
+            Some(PagedArena::view(self))
+        }
+    }
+
+    fn held_blocks(&self, slot: usize) -> usize {
+        PagedArena::held_blocks(self, slot)
     }
 
     fn pool_stats(&self) -> PoolStats {
@@ -961,6 +1120,89 @@ mod tests {
         // rows beyond the kept set are zeroed
         let tail = ((0 * 1 + slot) * 8 + 2) * re;
         assert!(st.k.data[tail..tail + re].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn view_gathers_identically_to_dense_staging() {
+        // The block-table view and the dense-staging fallback must describe
+        // the exact same KV, whichever way it is read.
+        let m = meta();
+        let mk = |dense| PagingConfig {
+            block_tokens: 3,
+            dense_staging: dense,
+            ..Default::default()
+        };
+        let mut a = PagedArena::new(&m, 2, 10, mk(false));
+        let mut b = PagedArena::new(&m, 2, 10, mk(true));
+        let rc = cache_with(&m, &[7, 4], 8.0);
+        let sa = PagedArena::admit(&mut a, &rc).unwrap();
+        let sb = PagedArena::admit(&mut b, &rc).unwrap();
+        assert_eq!(sa, sb);
+        let step = HostTensor::new(
+            vec![2, 2, 2, 2],
+            (0..16).map(|x| 50.0 + x as f32).collect(),
+        );
+        assert_eq!(PagedArena::append(&mut a, sa, &step, &step), AppendResult::Ok);
+        assert_eq!(PagedArena::append(&mut b, sb, &step, &step), AppendResult::Ok);
+        let keep = vec![vec![0usize, 2, 7], vec![1usize, 4]];
+        PagedArena::compact(&mut a, sa, &keep);
+        PagedArena::compact(&mut b, sb, &keep);
+
+        let st_a = a.stage(); // gather-on-demand
+        let st_b = b.stage(); // incremental dense copy
+        assert_eq!(st_a.lens.data, st_b.lens.data);
+        assert_eq!(st_a.k.data, st_b.k.data);
+        assert_eq!(st_a.v.data, st_b.v.data);
+
+        // row-level gather matches the staged layout
+        let view = a.view();
+        let re = a.row_elems();
+        for l in 0..2 {
+            for row in 0..view.len(l, sa) {
+                let base = ((l * 2 + sa) * 10 + row) * re;
+                assert_eq!(view.k_row(l, sa, row), &st_b.k.data[base..base + re]);
+                assert_eq!(view.v_row(l, sa, row), &st_b.v.data[base..base + re]);
+            }
+        }
+        // artifact-shaped tensors are consistent with the view
+        let tt = view.tables_tensor(view.max_blocks + 2);
+        assert_eq!(tt.shape, vec![2, 2, view.max_blocks + 2]);
+        let (sk, sv) = view.slab_tensors(view.num_blocks + 1);
+        assert_eq!(sk.shape[0], view.num_blocks + 1);
+        assert_eq!(sk.data.len(), sv.data.len());
+    }
+
+    #[test]
+    fn view_version_tracks_mutations() {
+        let m = meta();
+        let mut pa =
+            PagedArena::new(&m, 1, 8, PagingConfig::default());
+        let v0 = pa.version();
+        let rc = cache_with(&m, &[4, 4], 9.0);
+        let slot = PagedArena::admit(&mut pa, &rc).unwrap();
+        let v1 = pa.version();
+        assert_ne!(v0, v1, "admit must bump the version");
+        let step = HostTensor::zeros(vec![2, 1, 2, 2]);
+        PagedArena::append(&mut pa, slot, &step, &step);
+        assert_ne!(v1, pa.version(), "append must bump the version");
+        // distinct stores can never share a version (store id in the
+        // upper bits)
+        let pb = PagedArena::new(&m, 1, 8, PagingConfig::default());
+        assert_ne!(pa.version() >> 32, pb.version() >> 32);
+    }
+
+    #[test]
+    fn held_blocks_counts_lane_tables() {
+        let m = meta();
+        let cfg = PagingConfig { block_tokens: 2, ..Default::default() };
+        let mut pa = PagedArena::new(&m, 2, 8, cfg);
+        assert_eq!(pa.held_blocks(0), 0);
+        let rc = cache_with(&m, &[5, 2], 10.0);
+        let slot = PagedArena::admit(&mut pa, &rc).unwrap();
+        // layer0 ceil(5/2)=3 + layer1 ceil(2/2)=1
+        assert_eq!(pa.held_blocks(slot), 4);
+        pa.release(slot);
+        assert_eq!(pa.held_blocks(slot), 0);
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! `DecodeView` — the zero-copy, block-table-native description of one
+//! decode step's KV inputs.
+//!
+//! A view borrows the block slab (no KV data is copied) and carries the
+//! per-(layer, lane) block tables and valid lengths in exactly the layout
+//! the `decode_paged_{B}x{C}` artifact family consumes:
+//!
+//! ```text
+//!   slab_k / slab_v   [num_blocks, block_tokens, KV, hd]   (borrowed)
+//!   tables            [L, B, max_blocks] i32, -1 padded
+//!   lens              [L, B] i32
+//! ```
+//!
+//! `max_blocks` is the widest table *actually held* this step, so building
+//! a view costs O(referenced blocks) — independent of both the pool size
+//! and the staging capacity `C`. That is the property that deletes the
+//! dense staging bridge: the old hot path cloned a full `[L, B, C, KV, hd]`
+//! tensor pair per generated token.
+//!
+//! The same view also serves as the host-side gather oracle:
+//! [`DecodeView::k_row`] / [`DecodeView::v_row`] resolve a logical token
+//! row through the table, and [`DecodeView::gather_dense`] materializes
+//! the dense staging layout on demand (used by `PagedArena::stage()` when
+//! the incremental staging copy is disabled, and by the differential
+//! tests that pin block-table decode against the staged path).
+
+use crate::tensor::{HostTensor, HostTensorI32};
+
+use super::Staged;
+
+/// Borrowed block-table description of a paged KV store's decode inputs.
+#[derive(Debug)]
+pub struct DecodeView<'a> {
+    /// Slab mutation stamp: upper 32 bits identify the owning store, lower
+    /// 32 bits count its mutations. Lets a device-side pinned-buffer cache
+    /// skip re-uploading an unchanged slab (`runtime::Runtime::run_pinned`).
+    pub version: u64,
+    pub l: usize,
+    pub b: usize,
+    /// Per-lane staging capacity `C` of the owning store (the dense layout
+    /// this view replaces; `gather_dense` reproduces it exactly).
+    pub capacity: usize,
+    pub block_tokens: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// Physical blocks in the slab.
+    pub num_blocks: usize,
+    /// Widest table across all (layer, lane) pairs this step (>= 1).
+    pub max_blocks: usize,
+    /// `tables[(l * b + slot) * max_blocks + i]` = physical block id of the
+    /// lane's i-th logical block, or -1 past the table's end.
+    pub tables: Vec<i32>,
+    /// `lens[l * b + slot]` = valid token rows.
+    pub lens: Vec<i32>,
+    pub(super) slab_k: &'a [f32],
+    pub(super) slab_v: &'a [f32],
+}
+
+impl<'a> DecodeView<'a> {
+    /// f32 elements per token row (`KV * hd`).
+    pub fn row_elems(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+
+    /// Valid rows of `(layer, slot)`.
+    pub fn len(&self, layer: usize, slot: usize) -> usize {
+        self.lens[layer * self.b + slot] as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lens.iter().all(|&n| n == 0)
+    }
+
+    /// The lane's block table for one layer (including -1 padding).
+    pub fn table(&self, layer: usize, slot: usize) -> &[i32] {
+        let base = (layer * self.b + slot) * self.max_blocks;
+        &self.tables[base..base + self.max_blocks]
+    }
+
+    fn row_base(&self, layer: usize, slot: usize, row: usize) -> usize {
+        debug_assert!(row < self.len(layer, slot), "row past len");
+        let bt = self.block_tokens;
+        let bid = self.table(layer, slot)[row / bt];
+        debug_assert!(bid >= 0, "logical row maps to a padded table entry");
+        (bid as usize * bt + row % bt) * self.row_elems()
+    }
+
+    /// Logical token row `row` of `(layer, slot)`, resolved through the
+    /// block table (the gather the paged decode artifact performs in HLO).
+    pub fn k_row(&self, layer: usize, slot: usize, row: usize) -> &[f32] {
+        let base = self.row_base(layer, slot, row);
+        &self.slab_k[base..base + self.row_elems()]
+    }
+
+    pub fn v_row(&self, layer: usize, slot: usize, row: usize) -> &[f32] {
+        let base = self.row_base(layer, slot, row);
+        &self.slab_v[base..base + self.row_elems()]
+    }
+
+    /// Block tables as the artifact's `[L, B, mb]` i32 input, padded (or
+    /// exactly sized) to `mb >= self.max_blocks`.
+    pub fn tables_tensor(&self, mb: usize) -> HostTensorI32 {
+        assert!(
+            mb >= self.max_blocks,
+            "artifact table width {mb} < live width {}",
+            self.max_blocks
+        );
+        let mut data = vec![-1i32; self.l * self.b * mb];
+        for ls in 0..self.l * self.b {
+            let src = &self.tables[ls * self.max_blocks..(ls + 1) * self.max_blocks];
+            data[ls * mb..ls * mb + self.max_blocks].copy_from_slice(src);
+        }
+        HostTensorI32::new(vec![self.l, self.b, mb], data)
+    }
+
+    /// Valid lengths as the artifact's `[L, B]` i32 input.
+    pub fn lens_tensor(&self) -> HostTensorI32 {
+        HostTensorI32::new(vec![self.l, self.b], self.lens.clone())
+    }
+
+    /// Slab planes as the artifact's `[nb, bt, KV, hd]` f32 inputs, zero
+    /// padded to the artifact's pool bucket `nb >= self.num_blocks`. This
+    /// is the one O(pool) copy left on the paged path, and it runs only
+    /// when the device-side pinned slab is stale (see `Runtime::run_pinned`).
+    pub fn slab_tensors(&self, nb: usize) -> (HostTensor, HostTensor) {
+        assert!(
+            nb >= self.num_blocks,
+            "artifact pool bucket {nb} < live pool {}",
+            self.num_blocks
+        );
+        let shape = vec![nb, self.block_tokens, self.kv_heads, self.head_dim];
+        let elems = nb * self.block_tokens * self.row_elems();
+        let mut k = vec![0.0f32; elems];
+        let mut v = vec![0.0f32; elems];
+        k[..self.slab_k.len()].copy_from_slice(self.slab_k);
+        v[..self.slab_v.len()].copy_from_slice(self.slab_v);
+        (HostTensor::new(shape.clone(), k), HostTensor::new(shape, v))
+    }
+
+    /// Materialize the dense `[L, B, C, KV, hd]` staging layout (plus
+    /// `[L, B]` lens) this view replaces. Byte-identical to what the
+    /// incrementally-maintained staging copy would hold: only valid rows
+    /// are written, everything else stays zero.
+    pub fn gather_dense(&self) -> Staged {
+        let re = self.row_elems();
+        let shape =
+            vec![self.l, self.b, self.capacity, self.kv_heads, self.head_dim];
+        let mut k = HostTensor::zeros(shape.clone());
+        let mut v = HostTensor::zeros(shape);
+        for l in 0..self.l {
+            for s in 0..self.b {
+                let n = self.len(l, s);
+                for row in 0..n {
+                    let dst = ((l * self.b + s) * self.capacity + row) * re;
+                    k.data[dst..dst + re].copy_from_slice(self.k_row(l, s, row));
+                    v.data[dst..dst + re].copy_from_slice(self.v_row(l, s, row));
+                }
+            }
+        }
+        Staged { k, v, lens: self.lens_tensor() }
+    }
+}

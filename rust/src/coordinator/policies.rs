@@ -35,17 +35,89 @@ use crate::util::bucket_for;
 /// backed `ExecutorHandle` both implement it.
 pub trait Exec {
     fn run(&self, name: &str, inputs: Vec<In>) -> Result<Vec<HostTensor>>;
+
+    /// Whether pinned input `key` is still resident on the executor at
+    /// exactly `version` (lets callers skip materializing the payload).
+    /// Executors without a pinned-buffer cache report `false`.
+    fn pinned_is_current(&self, _key: &str, _version: u64) -> bool {
+        false
+    }
+
+    /// Run with some inputs pinned on device across calls (the paged
+    /// decode slab). The default splices the payloads in as ordinary
+    /// inputs — correct for any executor, just without reuse.
+    fn run_pinned(
+        &self,
+        name: &str,
+        pinned: Vec<crate::runtime::PinnedInput>,
+        inputs: Vec<In>,
+    ) -> Result<Vec<HostTensor>> {
+        let n = pinned.len() + inputs.len();
+        let mut slots: Vec<Option<In>> = (0..n).map(|_| None).collect();
+        for p in pinned {
+            anyhow::ensure!(
+                p.index < n && slots[p.index].is_none(),
+                "pinned input `{}` index {} out of range or duplicated",
+                p.key,
+                p.index
+            );
+            let t = p.tensor.with_context(|| {
+                format!(
+                    "pinned input `{}` sent without payload to an \
+                     executor that cannot cache it",
+                    p.key
+                )
+            })?;
+            slots[p.index] = Some(In::F32(t));
+        }
+        let mut rest = inputs.into_iter();
+        let assembled: Vec<In> = slots
+            .into_iter()
+            .map(|s| s.or_else(|| rest.next()).expect("arity"))
+            .collect();
+        self.run(name, assembled)
+    }
 }
 
 impl Exec for crate::runtime::Runtime {
     fn run(&self, name: &str, inputs: Vec<In>) -> Result<Vec<HostTensor>> {
         crate::runtime::Runtime::run(self, name, &inputs)
     }
+
+    fn pinned_is_current(&self, key: &str, version: u64) -> bool {
+        crate::runtime::Runtime::pinned_is_current(self, key, version)
+    }
+
+    fn run_pinned(
+        &self,
+        name: &str,
+        pinned: Vec<crate::runtime::PinnedInput>,
+        inputs: Vec<In>,
+    ) -> Result<Vec<HostTensor>> {
+        crate::runtime::Runtime::run_with_pinned(self, name, &pinned, &inputs)
+    }
 }
 
 impl Exec for crate::runtime::exec_thread::ExecutorHandle {
     fn run(&self, name: &str, inputs: Vec<In>) -> Result<Vec<HostTensor>> {
         crate::runtime::exec_thread::ExecutorHandle::run(self, name, inputs)
+    }
+
+    fn pinned_is_current(&self, key: &str, version: u64) -> bool {
+        crate::runtime::exec_thread::ExecutorHandle::pinned_is_current(
+            self, key, version,
+        )
+    }
+
+    fn run_pinned(
+        &self,
+        name: &str,
+        pinned: Vec<crate::runtime::PinnedInput>,
+        inputs: Vec<In>,
+    ) -> Result<Vec<HostTensor>> {
+        crate::runtime::exec_thread::ExecutorHandle::run_pinned(
+            self, name, pinned, inputs,
+        )
     }
 }
 

@@ -19,6 +19,19 @@ pub enum Action {
     Idle,
 }
 
+/// Choose which active lane to preempt when the block pool runs dry:
+/// the lane with the least decode progress (fewest generated tokens)
+/// loses the least recompute work on resume; ties break toward the lane
+/// holding the fewest blocks (its re-admission is cheapest). Candidates
+/// are `(progress, held_blocks)` pairs; returns the winning index.
+pub fn pick_preemption_victim(candidates: &[(usize, usize)]) -> Option<usize> {
+    candidates
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, &(progress, blocks))| (progress, blocks))
+        .map(|(i, _)| i)
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AdmitOrder {
     /// First come, first served.
@@ -180,6 +193,23 @@ mod tests {
             assert_eq!(s.pop_next(|&x| x), Some(99), "{order:?}");
             assert_eq!(s.pop_next(|&x| x), Some(1));
         }
+    }
+
+    #[test]
+    fn victim_is_least_progress_then_fewest_blocks() {
+        // least generated tokens wins outright
+        assert_eq!(
+            pick_preemption_victim(&[(10, 1), (2, 50), (7, 0)]),
+            Some(1)
+        );
+        // tie on progress -> fewest held blocks
+        assert_eq!(
+            pick_preemption_victim(&[(3, 9), (3, 2), (5, 0)]),
+            Some(1)
+        );
+        // stable choice for full ties: first candidate
+        assert_eq!(pick_preemption_victim(&[(3, 2), (3, 2)]), Some(0));
+        assert_eq!(pick_preemption_victim(&[]), None);
     }
 
     #[test]

@@ -18,9 +18,15 @@
 //!    affected lane first evicts by blocks using the policy's per-layer
 //!    keep-sets (`PolicyCfg::compaction_keep`);
 //!  * **preemption with resume** — if compaction cannot free enough, the
-//!    request releases its blocks and returns to the head of the queue;
-//!    on re-admission it re-prefills `prompt ++ generated-so-far` and
-//!    continues where it left off instead of aborting.
+//!    *least-progress resumable lane* (fewest generated tokens, ties to
+//!    fewest held blocks — `scheduler::pick_preemption_victim`) releases
+//!    its blocks and returns to the head of the queue; on re-admission it
+//!    re-prefills `prompt ++ generated-so-far` and continues where it
+//!    left off instead of aborting.
+//!
+//! Decode steps go through the shared [`DecodeBatch`] planner: block-table
+//! native (`decode_paged_{B}x{C}`, slab + table indices) whenever the
+//! store and manifest support it, dense staged bridge otherwise.
 //!
 //! Block-pool gauges (blocks in use, prefix-cache hit rate, preemptions)
 //! are published through [`Metrics`] every scheduler iteration.
@@ -31,18 +37,21 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::decode::{
+    advance_lane, CompactSpec, DecodeBatch, DecodePath, LaneAdvance,
+    LaneInput,
+};
 use crate::coordinator::engine::decode_cap_for;
 use crate::coordinator::kvcache::BatchArena;
-use crate::coordinator::paging::{
-    AppendResult, KvStore, PagedArena, PagingConfig,
+use crate::coordinator::paging::{KvStore, PagedArena, PagingConfig};
+use crate::coordinator::policies::{make_policy, PolicyCfg};
+use crate::coordinator::scheduler::{
+    pick_preemption_victim, Action, AdmitOrder, Scheduler,
 };
-use crate::coordinator::policies::{make_policy, Exec, PolicyCfg};
-use crate::coordinator::scheduler::{Action, AdmitOrder, Scheduler};
 use crate::manifest::Manifest;
 use crate::metrics::Metrics;
 use crate::runtime::outputs::DecodeOut;
 use crate::runtime::Runtime;
-use crate::tensor::HostTensorI32;
 use crate::tokenizer::END;
 
 /// Shrink factor compaction applies to each layer's length when the pool
@@ -299,13 +308,31 @@ fn serve_inner(
         "decode batch {b} not compiled (buckets: {:?})",
         man.buckets.decode_batches
     );
-    let artifact = format!("decode_{b}x{cap}");
+    let batch = DecodeBatch::new(&man, b, cap);
     let mut store: Box<dyn KvStore> = match &cfg.paging {
         Some(pc) => {
             Box::new(PagedArena::new(&man.model, b, cap, pc.clone()))
         }
         None => Box::new(BatchArena::new(&man.model, b, cap)),
     };
+    // Surface the decode path once: a paged store silently pinned to the
+    // dense bridge (block-size mismatch, pool larger than the artifact's
+    // slab bucket, or a manifest without decode_paged artifacts) is the
+    // O(cap)-per-token regression this stack exists to avoid — make it
+    // loud rather than discoverable only via the step counters.
+    let block_table = batch.path_for(store.as_ref()) == DecodePath::BlockTable;
+    metrics.set_gauge("decode_block_table", if block_table { 1.0 } else { 0.0 });
+    let wants_block_table =
+        cfg.paging.as_ref().map(|p| !p.dense_staging).unwrap_or(false);
+    if wants_block_table && !block_table {
+        eprintln!(
+            "[server] block-table decode unavailable — falling back to the \
+             dense staged bridge via `{}` (check block_tokens vs the \
+             manifest's, pool size vs the artifact slab bucket, and that \
+             the artifact dir carries decode_paged_{b}x{cap})",
+            batch.artifact_for(store.as_ref())
+        );
+    }
     let mut sched: Scheduler<Request> = Scheduler::new(b, cfg.order);
     let mut active: Vec<Active> = Vec::new();
     let mut shutdown = false;
@@ -414,7 +441,7 @@ fn serve_inner(
             Action::DecodeStep => {
                 let out = decode_step(
                     rt,
-                    &artifact,
+                    &batch,
                     store.as_ref(),
                     &active,
                     metrics,
@@ -527,40 +554,69 @@ fn admit(
 
 fn decode_step(
     rt: &Runtime,
-    artifact: &str,
+    batch: &DecodeBatch,
     store: &dyn KvStore,
     active: &[Active],
     metrics: &Metrics,
 ) -> Result<DecodeOut> {
-    let b = store.slots();
-    let mut toks = vec![0i32; b];
-    let mut poss = vec![0i32; b];
-    for a in active.iter() {
-        toks[a.slot] = a.cur;
-        poss[a.slot] = a.pos as i32;
-    }
-    let staged = store.stage();
+    let lanes: Vec<LaneInput> = active
+        .iter()
+        .map(|a| LaneInput { slot: a.slot, token: a.cur, pos: a.pos })
+        .collect();
     let t0 = Instant::now();
-    let out = DecodeOut::from_vec(
-        Exec::run(
-            rt,
-            artifact,
-            vec![
-                HostTensorI32::new(vec![b], toks).into(),
-                HostTensorI32::new(vec![b], poss).into(),
-                staged.k.into(),
-                staged.v.into(),
-                staged.lens.into(),
-            ],
-        )
-        .context("decode step")?,
-    );
+    let out = batch
+        .step(rt, store, &lanes, Some(metrics))
+        .context("decode step")?;
     metrics.observe("decode_step_secs", t0.elapsed().as_secs_f64());
     Ok(out)
 }
 
-/// Apply one decode step's outputs: append per lane, compacting or
-/// preempting lanes the pool cannot grow.
+/// Whether a lane could resume after preemption: the re-prefill of
+/// prompt + generated tokens must fit the policy's prefill buckets, and
+/// the store must be able to take the regrown cache back even from a
+/// drained state (lane capacity AND total pool size).
+fn can_resume(
+    cfg: &ServerConfig,
+    man: &Manifest,
+    a: &Active,
+    store: &dyn KvStore,
+) -> bool {
+    let full_len = a.req.prompt.len() + a.tokens.len();
+    let budget = cfg.policy_cfg.per_layer_budget(
+        &cfg.policy,
+        full_len,
+        man.model.window,
+    );
+    let len_limit =
+        prefill_len_limit(man, &cfg.policy, cfg.policy_cfg.use_pallas);
+    full_len <= len_limit && store.could_ever_admit(budget)
+}
+
+/// Preempt the lane at `idx`: release its blocks and park the request on
+/// the resume queue (generated tokens ride along and are re-prefilled as
+/// prompt context on re-admission). Order-preserving removal so the
+/// caller's scan index stays meaningful.
+fn preempt(
+    active: &mut Vec<Active>,
+    idx: usize,
+    store: &mut dyn KvStore,
+    sched: &mut Scheduler<Request>,
+    metrics: &Metrics,
+) {
+    let a = active.remove(idx);
+    store.release(a.slot);
+    metrics.inc("preempted", 1);
+    let mut req = a.req;
+    req.resumed = a.tokens;
+    req.first_ttft = Some(a.ttft_secs);
+    sched.requeue_front(req);
+}
+
+/// Apply one decode step's outputs through the shared lane stepper:
+/// append + sample per lane, compacting under pool pressure; when
+/// compaction cannot free enough, preempt the least-progress resumable
+/// lane (which may be another lane than the one that hit the wall) and
+/// retry.
 fn apply_decode(
     cfg: &ServerConfig,
     man: &Manifest,
@@ -570,91 +626,92 @@ fn apply_decode(
     out: &DecodeOut,
     metrics: &Metrics,
 ) {
-    let mut preempted: Vec<usize> = Vec::new();
-    for (idx, a) in active.iter_mut().enumerate() {
-        if a.done {
+    let spec = CompactSpec {
+        policy_cfg: &cfg.policy_cfg,
+        shrink: COMPACT_SHRINK,
+        window: man.model.window,
+        metrics: Some(metrics),
+    };
+    let mut i = 0;
+    while i < active.len() {
+        if active[i].done {
             // Already finished (max_new reached on resume, or END) —
             // never grow the cache or sample past the end; the retire
             // loop collects it right after this pass.
+            i += 1;
             continue;
         }
-        let mut res = store.append(a.slot, &out.k_new, &out.v_new);
-        if res == AppendResult::PoolExhausted {
-            // FastKV-aware eviction first: per-layer keep-sets from the
-            // policy config drive block-granular compaction of this lane.
-            let lens = store.layer_lens(a.slot);
-            let keep = cfg.policy_cfg.compaction_keep(
-                &lens,
-                COMPACT_SHRINK,
-                man.model.window,
-            );
-            let released = store.compact(a.slot, &keep);
-            if released > 0 {
-                metrics.inc("compactions", 1);
-                res = store.append(a.slot, &out.k_new, &out.v_new);
-            }
-        }
-        match res {
-            AppendResult::Ok => {
-                a.pos += 1;
-                let logits = out.logits.row(a.slot);
-                let next = logits
-                    .iter()
-                    .enumerate()
-                    .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
-                    .map(|(i, _)| i as i32)
-                    .unwrap_or(0);
-                if next == END as i32 {
-                    a.done = true;
-                } else {
-                    a.cur = next;
-                    a.tokens.push(next);
+        let slot = active[i].slot;
+        // Policy compaction fires at most ONCE per lane per step (the
+        // first attempt); victim-preemption retries must not compound
+        // shrink^k eviction onto the same lane within a single step.
+        let mut allow_compact = true;
+        loop {
+            let spec_opt = if allow_compact { Some(&spec) } else { None };
+            match advance_lane(store, slot, out, spec_opt) {
+                LaneAdvance::Next { token, ended } => {
+                    let a = &mut active[i];
+                    a.pos += 1;
+                    if ended {
+                        a.done = true;
+                    } else {
+                        a.cur = token;
+                        a.tokens.push(token);
+                    }
+                    i += 1;
+                    break;
+                }
+                LaneAdvance::CapacityStop => {
+                    active[i].done = true;
+                    i += 1;
+                    break;
+                }
+                LaneAdvance::PoolPressure => {
+                    allow_compact = false;
+                    // Victim selection: the lane losing the least decode
+                    // progress among every lane that can actually resume —
+                    // not necessarily the lane that hit pool exhaustion.
+                    let mut candidates: Vec<(usize, (usize, usize))> =
+                        Vec::new();
+                    for (j, a) in active.iter().enumerate() {
+                        if !a.done && can_resume(cfg, man, a, store) {
+                            candidates.push((
+                                j,
+                                (a.tokens.len(), store.held_blocks(a.slot)),
+                            ));
+                        }
+                    }
+                    let keys: Vec<(usize, usize)> =
+                        candidates.iter().map(|&(_, k)| k).collect();
+                    let victim = pick_preemption_victim(&keys)
+                        .map(|k| candidates[k].0);
+                    match victim {
+                        Some(v) if v != i => {
+                            preempt(active, v, store, sched, metrics);
+                            if v < i {
+                                i -= 1; // removal shifted this lane left
+                            }
+                            // retry the pressured lane with freed blocks
+                        }
+                        Some(_) => {
+                            // this lane is itself the cheapest victim; the
+                            // next lane slides into index i
+                            preempt(active, i, store, sched, metrics);
+                            break;
+                        }
+                        None => {
+                            // Nobody can resume: finish gracefully with
+                            // what was generated (like a capacity stop)
+                            // instead of parking a request that would end
+                            // in rejection.
+                            metrics.inc("finished_on_pressure", 1);
+                            active[i].done = true;
+                            i += 1;
+                            break;
+                        }
+                    }
                 }
             }
-            AppendResult::CapacityExhausted => {
-                a.done = true;
-            }
-            AppendResult::PoolExhausted => {
-                // Only preempt when the request can actually resume: the
-                // re-prefill of prompt + generated tokens must fit the
-                // policy's prefill buckets, and the store must be able to
-                // take the regrown cache back even from a drained state
-                // (lane capacity AND total pool size). Otherwise finish
-                // gracefully with what was generated (like a capacity
-                // stop) instead of parking a request that would wedge the
-                // resume queue and end in a rejection.
-                let full_len = a.req.prompt.len() + a.tokens.len();
-                let budget = cfg.policy_cfg.per_layer_budget(
-                    &cfg.policy,
-                    full_len,
-                    man.model.window,
-                );
-                let len_limit = prefill_len_limit(
-                    man,
-                    &cfg.policy,
-                    cfg.policy_cfg.use_pallas,
-                );
-                if full_len <= len_limit
-                    && store.could_ever_admit(budget)
-                {
-                    preempted.push(idx);
-                } else {
-                    metrics.inc("finished_on_pressure", 1);
-                    a.done = true;
-                }
-            }
         }
-    }
-    // Preempt: release blocks and resume from the queue head later. The
-    // generated tokens ride along in the request and are re-prefilled as
-    // prompt context on re-admission.
-    for &idx in preempted.iter().rev() {
-        let a = active.swap_remove(idx);
-        store.release(a.slot);
-        metrics.inc("preempted", 1);
-        let mut req = a.req;
-        req.resumed = a.tokens;
-        req.first_ttft = Some(a.ttft_secs);
-        sched.requeue_front(req);
     }
 }

@@ -196,6 +196,7 @@ mod tests {
             compute_tokens: 480,
             cache_elems: 200,
             decode_cap: 128,
+            ..Default::default()
         };
         c.absorb(1.0, &stats, 8);
         c.absorb(0.0, &stats, 8);

@@ -22,10 +22,25 @@
 //! [`coordinator::kvcache::BatchArena`] remains available as the
 //! comparison backend. The serving stack layers memory-aware admission
 //! (admit only when the pool covers the request's post-compression KV
-//! budget), preemption back to the queue on pool exhaustion, and
-//! block-granular compaction driven by the policies' per-layer retention
-//! on top of this substrate; see `rust/src/coordinator/paging/README.md`
-//! for the design.
+//! budget), preemption back to the queue on pool exhaustion (least
+//! progress first), and block-granular compaction driven by the policies'
+//! per-layer retention on top of this substrate; see
+//! `rust/src/coordinator/paging/README.md` for the design.
+//!
+//! # Block-table-native decode
+//!
+//! Decode is block-table-native by default: both decode loops (the
+//! single-request engine and the batched server) drive
+//! [`coordinator::decode::DecodeBatch`], which hands the
+//! `decode_paged_{B}x{C}` artifacts the block slab (device-pinned by
+//! version) plus table indices through
+//! [`coordinator::paging::DecodeView`] — O(referenced blocks) planning
+//! work per token instead of the old O(pool) densify (`KvStore::stage`);
+//! the per-step slab re-upload itself remains until PJRT buffer donation
+//! lands (see the paging README for the exact accounting). The
+//! dense staged bridge survives behind
+//! [`coordinator::paging::PagingConfig::dense_staging`] and as the
+//! automatic fallback for manifests that predate the paged artifacts.
 //!
 //! Quick start (after `make artifacts`): see `examples/quickstart.rs`;
 //! `examples/paging_demo.rs` exercises prefix reuse and preemption without
@@ -42,9 +57,10 @@ pub mod tokenizer;
 pub mod util;
 pub mod workload;
 
+pub use coordinator::decode::{DecodeBatch, DecodePath};
 pub use coordinator::engine::{generate, GenResult, GenStats};
 pub use coordinator::paging::{
-    AppendResult, KvStore, PagedArena, PagingConfig, PoolStats,
+    AppendResult, DecodeView, KvStore, PagedArena, PagingConfig, PoolStats,
 };
 pub use coordinator::policies::{
     make_policy, Policy, PolicyCfg, ALL_POLICIES,

@@ -66,6 +66,7 @@ fn print_help() {
          \x20 bench    [--lens 256,512,1024] [--methods ...] [--gen 64]\n\
          \x20 serve    [--policy fastkv] [--requests 16] [--rate 4] [--trace poisson|bursty]\n\
          \x20          [--flat] [--pool-blocks N] [--block-tokens 16] [--no-prefix-cache]\n\
+         \x20          [--dense-staging]  (fallback: staged decode bridge instead of block tables)\n\
          \x20 overhead [--lens 256,512,1024]\n\
          \x20 info\n\
          \n\
@@ -130,12 +131,21 @@ fn cmd_run(args: &Args) -> Result<()> {
         "kv cache      : {} f32 elems (cap bucket {})",
         out.stats.cache_elems, out.stats.decode_cap
     );
+    if out.stats.truncated_by_capacity {
+        println!("note          : generation truncated by KV capacity");
+    }
     if args.has("stats") {
         let s = rt.stats();
         println!(
             "\nruntime: {} compiles ({:.2}s), {} execs ({:.2}s)",
             s.compiles, s.compile_secs, s.executions, s.execute_secs
         );
+        if s.pinned_uploads + s.pinned_hits > 0 {
+            println!(
+                "pinned slabs: {} uploads, {} reuses, {} bytes resident",
+                s.pinned_uploads, s.pinned_hits, s.pinned_bytes
+            );
+        }
         for (name, (n, secs)) in &s.per_artifact {
             println!(
                 "  {name:24} n={n:4}  total {:8.1} ms  mean {:7.2} ms",
@@ -704,16 +714,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     // KV backend: paged by default; --flat selects the seed BatchArena.
     // --pool-blocks N under-provisions the pool to exercise memory-aware
-    // admission and preemption; --block-tokens sets the block size.
+    // admission and preemption; --block-tokens sets the block size (it
+    // must match the compiled decode_paged artifacts for block-table
+    // decode; a mismatch falls back to the staged bridge, as does
+    // --dense-staging explicitly).
     let paging = if args.has("flat") {
         None
     } else {
         let mut pc = fastkv::PagingConfig::default();
-        pc.block_tokens = args.usize("block-tokens", pc.block_tokens);
+        let default_bt = if man.buckets.block_tokens > 0 {
+            man.buckets.block_tokens
+        } else {
+            pc.block_tokens
+        };
+        pc.block_tokens = args.usize("block-tokens", default_bt);
         if let Some(nb) = args.get("pool-blocks") {
             pc.num_blocks = Some(nb.parse().expect("--pool-blocks: not a number"));
         }
         pc.prefix_cache = !args.has("no-prefix-cache");
+        pc.dense_staging = args.has("dense-staging");
         Some(pc)
     };
     let cfg = ServerConfig {

@@ -36,6 +36,19 @@ pub struct Buckets {
     pub sweep_nt: usize,
     pub pallas_n: usize,
     pub max_gen: usize,
+    /// Tokens per physical block the `decode_paged_*` artifacts were
+    /// compiled for (0 on manifests that predate them).
+    pub block_tokens: usize,
+}
+
+/// Canonical name of the dense decode artifact for a `(batch, cap)` bucket.
+pub fn decode_artifact_name(batch: usize, cap: usize) -> String {
+    format!("decode_{batch}x{cap}")
+}
+
+/// Canonical name of the block-table decode artifact for a bucket.
+pub fn decode_paged_artifact_name(batch: usize, cap: usize) -> String {
+    format!("decode_paged_{batch}x{cap}")
 }
 
 #[derive(Debug, Clone)]
@@ -53,6 +66,10 @@ pub struct ArtifactMeta {
     pub batch: usize,
     pub cap: usize,
     pub tsp_layer: usize,
+    /// `decode_paged` only: static pool bucket of the slab inputs.
+    pub pool_blocks: usize,
+    /// `decode_paged` only: tokens per physical block.
+    pub block_tokens: usize,
     pub inputs: Vec<TensorSig>,
     pub outputs: Vec<TensorSig>,
 }
@@ -112,6 +129,11 @@ impl Manifest {
             sweep_nt: b.req("sweep_nt").as_usize().unwrap(),
             pallas_n: b.req("pallas_n").as_usize().unwrap(),
             max_gen: b.req("max_gen").as_usize().unwrap(),
+            // absent on manifests that predate block-table decode
+            block_tokens: b
+                .get("block_tokens")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(0),
         };
 
         let mut artifacts = BTreeMap::new();
@@ -127,6 +149,14 @@ impl Manifest {
                     .get("tsp_layer")
                     .and_then(|x| x.as_usize())
                     .unwrap_or(model.tsp_layer),
+                pool_blocks: a
+                    .get("pool_blocks")
+                    .and_then(|x| x.as_usize())
+                    .unwrap_or(0),
+                block_tokens: a
+                    .get("block_tokens")
+                    .and_then(|x| x.as_usize())
+                    .unwrap_or(0),
                 inputs: sigs(a.req("inputs")),
                 outputs: sigs(a.req("outputs")),
             };
@@ -206,11 +236,16 @@ mod tests {
                       "stage2_ns":[64],"pyramid_ns":[256],
                       "decode_batches":[1,4],"decode_caps":[128],
                       "sweep_n":256,"sweep_nt":64,"pallas_n":128,
-                      "max_gen":64},
+                      "max_gen":64,"block_tokens":16},
           "params": [],
           "artifacts": [
             {"name":"prefill_full_64","file":"prefill_full_64.hlo.txt",
              "kind":"prefill_full","n":64,"layers":8,
+             "inputs":[{"shape":[10],"dtype":"float32"}],
+             "outputs":[{"shape":[256],"dtype":"float32"}]},
+            {"name":"decode_paged_1x128","file":"decode_paged_1x128.hlo.txt",
+             "kind":"decode_paged","batch":1,"cap":128,
+             "pool_blocks":64,"block_tokens":16,
              "inputs":[{"shape":[10],"dtype":"float32"}],
              "outputs":[{"shape":[256],"dtype":"float32"}]}
           ]
@@ -219,8 +254,18 @@ mod tests {
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.model.n_layers, 8);
         assert_eq!(m.buckets.decode_caps, vec![128]);
+        assert_eq!(m.buckets.block_tokens, 16);
         let a = m.artifact("prefill_full_64").unwrap();
         assert_eq!(a.outputs[0].shape, vec![256]);
+        assert_eq!(a.pool_blocks, 0, "non-paged artifacts default to 0");
+        let p = m.artifact("decode_paged_1x128").unwrap();
+        assert_eq!((p.pool_blocks, p.block_tokens), (64, 16));
         assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn decode_artifact_names() {
+        assert_eq!(decode_artifact_name(4, 320), "decode_4x320");
+        assert_eq!(decode_paged_artifact_name(1, 128), "decode_paged_1x128");
     }
 }

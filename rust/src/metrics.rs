@@ -65,6 +65,17 @@ struct Inner {
 }
 
 impl Metrics {
+    /// Process-wide registry for paths that have no `Metrics` handle of
+    /// their own (e.g. `engine::generate`, which is invoked by evals and
+    /// benches without a serving stack around it). Servers keep their own
+    /// per-instance registries; this one aggregates engine-level events
+    /// such as `decode_truncated_by_capacity`.
+    pub fn global() -> &'static Metrics {
+        use std::sync::OnceLock;
+        static GLOBAL: OnceLock<Metrics> = OnceLock::new();
+        GLOBAL.get_or_init(Metrics::default)
+    }
+
     pub fn inc(&self, name: &str, by: u64) {
         let mut g = self.inner.lock().unwrap();
         *g.counters.entry(name.to_string()).or_default() += by;
@@ -159,6 +170,14 @@ mod tests {
         let rep = m.report();
         assert!(rep.contains("blocks_in_use"), "{rep}");
         assert!(rep.contains("prefix_hit_rate"), "{rep}");
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        let a = Metrics::global();
+        let before = a.counter("global_test_counter");
+        Metrics::global().inc("global_test_counter", 2);
+        assert_eq!(a.counter("global_test_counter"), before + 2);
     }
 
     #[test]

@@ -6,18 +6,25 @@
 //! the single executor thread also matches the paper's single-A100 testbed
 //! (one device, requests serialized onto it).
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
-use crate::runtime::{In, Runtime, RuntimeStats};
+use crate::runtime::{In, PinnedInput, Runtime, RuntimeStats};
 use crate::tensor::HostTensor;
 
 enum Msg {
     Run {
         name: String,
+        inputs: Vec<In>,
+        reply: mpsc::Sender<Result<Vec<HostTensor>>>,
+    },
+    RunPinned {
+        name: String,
+        pinned: Vec<PinnedInput>,
         inputs: Vec<In>,
         reply: mpsc::Sender<Result<Vec<HostTensor>>>,
     },
@@ -35,6 +42,10 @@ enum Msg {
 #[derive(Clone)]
 pub struct ExecutorHandle {
     tx: mpsc::Sender<Msg>,
+    /// Handle-side mirror of which pinned `(key, version)` pairs the
+    /// executor holds, so callers can skip materializing an unchanged
+    /// slab before sending (shared by every clone of this handle).
+    pinned_versions: Arc<Mutex<BTreeMap<String, u64>>>,
 }
 
 pub struct Executor {
@@ -65,6 +76,11 @@ impl Executor {
                         Msg::Run { name, inputs, reply } => {
                             let _ = reply.send(rt.run(&name, &inputs));
                         }
+                        Msg::RunPinned { name, pinned, inputs, reply } => {
+                            let _ = reply.send(rt.run_with_pinned(
+                                &name, &pinned, &inputs,
+                            ));
+                        }
                         Msg::Warmup { names, reply } => {
                             let refs: Vec<&str> =
                                 names.iter().map(|s| s.as_str()).collect();
@@ -78,7 +94,13 @@ impl Executor {
                 }
             })?;
         ready_rx.recv()??;
-        Ok(Executor { handle: ExecutorHandle { tx }, join: Some(join) })
+        Ok(Executor {
+            handle: ExecutorHandle {
+                tx,
+                pinned_versions: Arc::new(Mutex::new(BTreeMap::new())),
+            },
+            join: Some(join),
+        })
     }
 
     pub fn handle(&self) -> ExecutorHandle {
@@ -102,6 +124,58 @@ impl ExecutorHandle {
             .send(Msg::Run { name: name.to_string(), inputs, reply })
             .map_err(|_| anyhow::anyhow!("executor thread gone"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("executor dropped reply"))?
+    }
+
+    /// Whether the executor holds pinned input `key` at `version`, per
+    /// this handle's mirror of successful `run_pinned` calls.
+    pub fn pinned_is_current(&self, key: &str, version: u64) -> bool {
+        self.pinned_versions
+            .lock()
+            .unwrap()
+            .get(key)
+            .map(|&v| v == version)
+            .unwrap_or(false)
+    }
+
+    /// Forward a pinned run to the executor thread; on success, record
+    /// the pinned versions it now holds.
+    pub fn run_pinned(
+        &self,
+        name: &str,
+        pinned: Vec<PinnedInput>,
+        inputs: Vec<In>,
+    ) -> Result<Vec<HostTensor>> {
+        let versions: Vec<(String, u64)> =
+            pinned.iter().map(|p| (p.key.clone(), p.version)).collect();
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::RunPinned { name: name.to_string(), pinned, inputs, reply })
+            .map_err(|_| anyhow::anyhow!("executor thread gone"))?;
+        let out = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("executor dropped reply"))?;
+        let mut map = self.pinned_versions.lock().unwrap();
+        if out.is_ok() {
+            // Bound the mirror to the executor's own pinned cache cap: a
+            // mirror that only ever grows would both leak (one fresh
+            // store id per engine call) and over-claim residency for
+            // LRU-evicted keys. Past the cap, keep only the keys this
+            // call touched.
+            if map.len() >= crate::runtime::PINNED_CACHE_CAP {
+                map.retain(|k, _| versions.iter().any(|(vk, _)| vk == k));
+            }
+            for (k, v) in versions {
+                map.insert(k, v);
+            }
+        } else {
+            // Unknown executor state for these keys — stop claiming them
+            // so the next step sends payloads instead of racing a miss.
+            for (k, _) in versions {
+                map.remove(&k);
+            }
+        }
+        drop(map);
+        out
     }
 
     pub fn warmup(&self, names: &[&str]) -> Result<()> {

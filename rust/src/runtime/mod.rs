@@ -8,9 +8,27 @@
 //!  * the flat weight vector (~2.8 MB) is transferred to a device buffer
 //!    once at startup and reused via `execute_b`, so the per-call host→
 //!    device traffic is only the small activations;
+//!  * large recurring inputs — the paged decode artifacts' block-slab
+//!    planes — go through [`Runtime::run_with_pinned`]: a device buffer is
+//!    kept per `(key, version)` (keys are per-store, LRU-bounded) and
+//!    re-uploaded only when the version stamp changes, so an unchanged
+//!    slab costs zero host→device traffic. Note that appends change the
+//!    slab every generated token, so per-step re-upload persists on the
+//!    pure-AOT ABI until PJRT buffer donation lands (the API shape here
+//!    already supports swapping that in); the win decode banks today is
+//!    host-side (no densify/clone per token);
 //!  * PJRT objects hold raw pointers (`!Send`), so threaded callers go
 //!    through `exec_thread::ExecutorHandle` which owns the runtime on a
 //!    dedicated thread.
+//!
+//! Gather-based decode ABI (`decode_paged_{B}x{C}`, see
+//! `python/compile/model.py::decode_paged_step`): inputs are
+//! `(weights, tokens [B] i32, positions [B] i32, slab_k [NB, bt, KV, hd],
+//! slab_v [NB, bt, KV, hd], tables [L, B, MB] i32, lens [L, B] i32)`; the
+//! slab planes are the pinned inputs (indices 2 and 3), everything else is
+//! per-step. Inputs are validated against the manifest signature by shape
+//! *and* dtype — an f32 tensor where the artifact expects i32 block-table
+//! indices would silently reinterpret bits on a real device.
 
 pub mod exec_thread;
 pub mod outputs;
@@ -50,6 +68,32 @@ impl From<HostTensorI32> for In {
     }
 }
 
+/// A large recurring artifact input held on device across calls, keyed by
+/// `(key, version)`. Built by the decode planner for the paged artifacts'
+/// block-slab planes.
+#[derive(Debug, Clone)]
+pub struct PinnedInput {
+    /// Position among the artifact's non-weight inputs.
+    pub index: usize,
+    pub key: String,
+    /// Content stamp; a matching resident buffer is reused without upload.
+    pub version: u64,
+    /// Host payload. `None` when the caller verified residency first via
+    /// `Exec::pinned_is_current` — the executor errors if it is wrong.
+    pub tensor: Option<HostTensor>,
+}
+
+impl PinnedInput {
+    pub fn new(index: usize, key: &str, version: u64, tensor: HostTensor) -> Self {
+        PinnedInput { index, key: key.to_string(), version, tensor: Some(tensor) }
+    }
+
+    /// Reference an already-resident `(key, version)` without a payload.
+    pub fn cached(index: usize, key: &str, version: u64) -> Self {
+        PinnedInput { index, key: key.to_string(), version, tensor: None }
+    }
+}
+
 /// Cumulative executor statistics (exposed by the `stats` CLI).
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
@@ -57,8 +101,32 @@ pub struct RuntimeStats {
     pub compile_secs: f64,
     pub executions: usize,
     pub execute_secs: f64,
+    /// Pinned-input uploads actually performed (version changed).
+    pub pinned_uploads: usize,
+    /// Pinned-input reuses (version matched, no host→device traffic).
+    pub pinned_hits: usize,
+    /// Device bytes currently held by pinned inputs.
+    pub pinned_bytes: usize,
     pub per_artifact: BTreeMap<String, (usize, f64)>,
 }
+
+/// A resident pinned buffer plus the bookkeeping to validate reuse.
+struct PinnedSlot {
+    version: u64,
+    shape: Vec<usize>,
+    bytes: usize,
+    /// Monotonic use stamp for LRU eviction.
+    last_used: u64,
+    buf: xla::PjRtBuffer,
+}
+
+/// Most pinned keys the runtime keeps resident. Keys are per-store
+/// (`decode_slab_k:{store_id}`), so without a cap a long-lived runtime
+/// serving many short-lived engine stores would accumulate dead buffers;
+/// least-recently-used entries are dropped past this bound.
+/// `ExecutorHandle`'s residency mirror bounds itself to the same value —
+/// a larger mirror would over-claim residency for evicted keys.
+pub const PINNED_CACHE_CAP: usize = 8;
 
 pub struct Runtime {
     client: xla::PjRtClient,
@@ -66,6 +134,8 @@ pub struct Runtime {
     weights: xla::PjRtBuffer,
     weights_host: Vec<f32>,
     exes: RefCell<BTreeMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    pinned: RefCell<BTreeMap<String, PinnedSlot>>,
+    pinned_clock: std::cell::Cell<u64>,
     stats: RefCell<RuntimeStats>,
 }
 
@@ -84,8 +154,19 @@ impl Runtime {
             weights,
             weights_host,
             exes: RefCell::new(BTreeMap::new()),
+            pinned: RefCell::new(BTreeMap::new()),
+            pinned_clock: std::cell::Cell::new(0),
             stats: RefCell::new(RuntimeStats::default()),
         })
+    }
+
+    /// Whether pinned input `key` is resident at exactly `version`.
+    pub fn pinned_is_current(&self, key: &str, version: u64) -> bool {
+        self.pinned
+            .borrow()
+            .get(key)
+            .map(|s| s.version == version)
+            .unwrap_or(false)
     }
 
     pub fn stats(&self) -> RuntimeStats {
@@ -132,56 +213,214 @@ impl Runtime {
         Ok(())
     }
 
+    /// Upload one ordinary input after validating shape AND dtype against
+    /// the manifest signature (`i` is the absolute non-weight input index).
+    fn upload_input(
+        &self,
+        name: &str,
+        i: usize,
+        input: &In,
+        sig: &crate::manifest::TensorSig,
+    ) -> Result<xla::PjRtBuffer> {
+        let want_int = sig.dtype.contains("int");
+        let buf = match input {
+            In::F32(t) => {
+                if want_int {
+                    bail!(
+                        "{name} input {i}: f32 tensor where artifact \
+                         expects {}",
+                        sig.dtype
+                    );
+                }
+                if t.shape != sig.shape {
+                    bail!(
+                        "{name} input {i}: shape {:?} != expected {:?}",
+                        t.shape,
+                        sig.shape
+                    );
+                }
+                self.client.buffer_from_host_buffer(&t.data, &t.shape, None)
+            }
+            In::I32(t) => {
+                if !want_int {
+                    bail!(
+                        "{name} input {i}: i32 tensor where artifact \
+                         expects {}",
+                        sig.dtype
+                    );
+                }
+                if t.shape != sig.shape {
+                    bail!(
+                        "{name} input {i}: shape {:?} != expected {:?}",
+                        t.shape,
+                        sig.shape
+                    );
+                }
+                self.client.buffer_from_host_buffer(&t.data, &t.shape, None)
+            }
+        }
+        .map_err(|e| anyhow::anyhow!("{name} input {i} upload: {e}"))?;
+        Ok(buf)
+    }
+
     /// Execute artifact `name`. `inputs` EXCLUDES the leading weight
     /// vector (input 0), which is pinned on device. Returns one host
     /// tensor per artifact output (f32 outputs only — all our artifacts
     /// emit f32; integer outputs would extend `outputs.rs`).
     pub fn run(&self, name: &str, inputs: &[In]) -> Result<Vec<HostTensor>> {
+        self.run_with_pinned(name, &[], inputs)
+    }
+
+    /// Like [`Runtime::run`], with some inputs device-pinned across calls:
+    /// each [`PinnedInput`] occupies `index` among the non-weight inputs
+    /// and is re-uploaded only when its `(key, version)` is not already
+    /// resident — an unchanged slab costs nothing. (A slab mutated since
+    /// the last call is re-uploaded in full; in-place device append needs
+    /// buffer donation, tracked on the ROADMAP.)
+    pub fn run_with_pinned(
+        &self,
+        name: &str,
+        pinned: &[PinnedInput],
+        inputs: &[In],
+    ) -> Result<Vec<HostTensor>> {
         let meta = self.manifest.artifact(name)?.clone();
-        if inputs.len() + 1 != meta.inputs.len() {
+        let n = meta.inputs.len() - 1;
+        if inputs.len() + pinned.len() != n {
             bail!(
-                "{name}: got {} inputs, artifact takes {} (+weights)",
+                "{name}: got {} inputs + {} pinned, artifact takes {n} \
+                 (+weights)",
                 inputs.len(),
-                meta.inputs.len() - 1
+                pinned.len()
             );
         }
         let exe = self.executable(name)?;
         let t0 = Instant::now();
 
-        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
-        for (i, input) in inputs.iter().enumerate() {
-            let sig = &meta.inputs[i + 1];
-            let buf = match input {
-                In::F32(t) => {
-                    if t.shape != sig.shape {
-                        bail!(
-                            "{name} input {i}: shape {:?} != expected {:?}",
-                            t.shape,
-                            sig.shape
-                        );
-                    }
-                    self.client
-                        .buffer_from_host_buffer(&t.data, &t.shape, None)
+        // Ensure every pinned input is resident at the requested version.
+        {
+            let mut cache = self.pinned.borrow_mut();
+            let mut stats = self.stats.borrow_mut();
+            for p in pinned {
+                if p.index >= n {
+                    bail!("{name}: pinned input index {} out of range", p.index);
                 }
-                In::I32(t) => {
-                    if t.shape != sig.shape {
-                        bail!(
-                            "{name} input {i}: shape {:?} != expected {:?}",
-                            t.shape,
-                            sig.shape
-                        );
+                let sig = &meta.inputs[p.index + 1];
+                let now = self.pinned_clock.get() + 1;
+                self.pinned_clock.set(now);
+                let hit = match cache.get_mut(&p.key) {
+                    Some(s) if s.version == p.version && s.shape == sig.shape => {
+                        s.last_used = now;
+                        true
                     }
-                    self.client
-                        .buffer_from_host_buffer(&t.data, &t.shape, None)
+                    _ => false,
+                };
+                if hit {
+                    stats.pinned_hits += 1;
+                    continue;
+                }
+                let t = p.tensor.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "{name}: pinned input `{}`@{} is not resident and \
+                         no payload was provided",
+                        p.key,
+                        p.version
+                    )
+                })?;
+                if t.shape != sig.shape {
+                    bail!(
+                        "{name} pinned `{}`: shape {:?} != expected {:?}",
+                        p.key,
+                        t.shape,
+                        sig.shape
+                    );
+                }
+                if sig.dtype.contains("int") {
+                    bail!(
+                        "{name} pinned `{}`: f32 payload where artifact \
+                         expects {}",
+                        p.key,
+                        sig.dtype
+                    );
+                }
+                let buf = self
+                    .client
+                    .buffer_from_host_buffer(&t.data, &t.shape, None)
+                    .map_err(|e| {
+                        anyhow::anyhow!("{name} pinned `{}` upload: {e}", p.key)
+                    })?;
+                let bytes = buf
+                    .on_device_size_in_bytes()
+                    .unwrap_or(t.data.len() * 4);
+                if let Some(old) = cache.insert(
+                    p.key.clone(),
+                    PinnedSlot {
+                        version: p.version,
+                        shape: sig.shape.clone(),
+                        bytes,
+                        last_used: now,
+                        buf,
+                    },
+                ) {
+                    stats.pinned_bytes =
+                        stats.pinned_bytes.saturating_sub(old.bytes);
+                }
+                stats.pinned_uploads += 1;
+                stats.pinned_bytes += bytes;
+            }
+            // LRU bound — but never evict a key this call is about to use.
+            while cache.len() > PINNED_CACHE_CAP {
+                let victim = cache
+                    .iter()
+                    .filter(|(k, _)| {
+                        !pinned.iter().any(|p| p.key.as_str() == k.as_str())
+                    })
+                    .min_by_key(|(_, s)| s.last_used)
+                    .map(|(k, _)| k.clone());
+                match victim {
+                    Some(k) => {
+                        if let Some(old) = cache.remove(&k) {
+                            stats.pinned_bytes =
+                                stats.pinned_bytes.saturating_sub(old.bytes);
+                        }
+                    }
+                    None => break, // every resident key is in use this call
                 }
             }
-            .map_err(|e| anyhow::anyhow!("{name} input {i} upload: {e}"))?;
-            bufs.push(buf);
         }
 
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(bufs.len() + 1);
+        // Upload the per-step inputs into the positions pinned ones skip.
+        let mut fresh: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        let mut fresh_at: Vec<Option<usize>> = vec![None; n];
+        let mut pinned_at: Vec<Option<&PinnedInput>> = vec![None; n];
+        for p in pinned {
+            if pinned_at[p.index].is_some() {
+                bail!("{name}: duplicate pinned input index {}", p.index);
+            }
+            pinned_at[p.index] = Some(p);
+        }
+        {
+            let mut next = inputs.iter();
+            for slot in 0..n {
+                if pinned_at[slot].is_some() {
+                    continue;
+                }
+                let input = next.next().expect("input arity checked");
+                let sig = &meta.inputs[slot + 1];
+                fresh_at[slot] = Some(fresh.len());
+                fresh.push(self.upload_input(name, slot, input, sig)?);
+            }
+        }
+
+        let cache = self.pinned.borrow();
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(n + 1);
         args.push(&self.weights);
-        args.extend(bufs.iter());
+        for slot in 0..n {
+            if let Some(p) = pinned_at[slot] {
+                args.push(&cache.get(&p.key).expect("pinned resident").buf);
+            } else {
+                args.push(&fresh[fresh_at[slot].expect("fresh uploaded")]);
+            }
+        }
 
         let result = exe
             .execute_b(&args)

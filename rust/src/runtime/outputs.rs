@@ -100,7 +100,10 @@ impl PyramidOut {
     }
 }
 
-/// `decode_{B}x{C}`: (logits [B,V], k_new [L,B,KV,hd], v_new)
+/// `decode_{B}x{C}` and `decode_paged_{B}x{C}`:
+/// (logits [B,V], k_new [L,B,KV,hd], v_new) — the block-table artifact
+/// deliberately shares the dense artifact's output tuple so the decode
+/// stepper applies either path's outputs identically.
 #[derive(Debug)]
 pub struct DecodeOut {
     pub logits: HostTensor,

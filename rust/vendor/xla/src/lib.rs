@@ -11,6 +11,17 @@
 //! Swapping in the real bindings is a Cargo.toml change only: the method
 //! names and signatures here mirror the `PjRtClient::cpu()` /
 //! `HloModuleProto::from_text_file` / `compile` / `execute_b` pattern.
+//!
+//! Input shapes this surface must cover (the runtime validates them
+//! against the manifest, the stub only has to accept the element types):
+//!  * dense decode (`decode_{B}x{C}`): f32 `[L, B, C, KV, hd]` caches plus
+//!    i32 `[B]` tokens/positions and i32 `[L, B]` lens;
+//!  * block-table decode (`decode_paged_{B}x{C}`): f32 slab planes
+//!    `[NB, bt, KV, hd]` (device-pinned across steps via
+//!    `Runtime::run_with_pinned`), i32 block tables `[L, B, MB]`, and the
+//!    same token/position/lens inputs. `on_device_size_in_bytes` feeds the
+//!    runtime's pinned-memory gauge and mirrors the PJRT C API
+//!    (`PJRT_Buffer_OnDeviceSizeInBytes`).
 
 use std::fmt;
 use std::path::Path;
@@ -75,6 +86,12 @@ pub struct PjRtBuffer {
 
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// Device bytes backing this buffer (PJRT_Buffer_OnDeviceSizeInBytes).
+    /// Callers fall back to the host-side size when unavailable.
+    pub fn on_device_size_in_bytes(&self) -> Result<usize> {
         Err(unavailable())
     }
 }
