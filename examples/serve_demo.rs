@@ -7,6 +7,7 @@
 
 use anyhow::Result;
 use fastkv::coordinator::policies::PolicyCfg;
+use fastkv::metrics::names;
 use fastkv::coordinator::scheduler::AdmitOrder;
 use fastkv::coordinator::server::{Server, ServerConfig};
 use fastkv::tokenizer::Tokenizer;
@@ -33,6 +34,9 @@ fn main() -> Result<()> {
         paging.num_blocks =
             Some(nb.parse().expect("--pool-blocks: not a number"));
     }
+    // Host swap budget for preempted lanes (MiB); 0 = recompute-resume.
+    paging.swap_bytes =
+        args.usize("swap-mb", paging.swap_bytes >> 20) << 20;
     let cfg = ServerConfig {
         artifact_dir: dir,
         policy: policy.clone(),
@@ -87,6 +91,15 @@ fn main() -> Result<()> {
         100.0 * handle.metrics.gauge("pool_prefix_hit_rate"),
         handle.metrics.counter("preempted"),
         handle.metrics.counter("compactions"),
+    );
+    println!(
+        "swap: {} out / {} in, {} recompute fallbacks, {} prefills \
+         recomputed",
+        handle.metrics.counter(names::SWAP_OUTS),
+        handle.metrics.counter(names::SWAP_INS),
+        handle.metrics.counter(names::SWAP_FALLBACK_RECOMPUTE)
+            + handle.metrics.counter(names::SWAP_REFUSED),
+        handle.metrics.counter(names::PREFILL_RECOMPUTED),
     );
     println!("\nserver metrics:\n{}", handle.metrics.report());
     Ok(())

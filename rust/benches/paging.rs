@@ -1,9 +1,12 @@
 //! Paged KV-cache micro-benchmarks: admit (with and without prefix
 //! sharing), per-step append, staging materialization, block compaction,
-//! and the decode-step input-prep comparison (dense staged bridge vs
+//! the decode-step input-prep comparison (dense staged bridge vs
 //! block-table `DecodeView`) across staging capacities and pool sizes at
-//! fixed retained KV — PJRT-independent, with block-pool stats reported
-//! next to the timings.
+//! fixed retained KV, and the preemption-resume comparison (swap-to-host
+//! restore vs the re-prefill floor) — PJRT-independent, with block-pool
+//! stats reported next to the timings. The swap comparison additionally
+//! writes a `BENCH_paging_swap.json` summary so CI captures the resume
+//! cost trajectory.
 //!
 //! Run: cargo bench --bench paging   (FASTKV_BENCH_QUICK=1 for a smoke pass)
 
@@ -259,4 +262,85 @@ fn main() {
          version pinning; per-append device update awaits donation)",
         ""
     );
+
+    // --------------------------------------------------------------------
+    // Preemption resume: swap-to-host restore vs the re-prefill floor.
+    // Swap serializes the lane's blocks to host and restores them into
+    // fresh blocks; recompute-resume at minimum rebuilds the compressed
+    // cache and re-admits it (measured below as "re-admit floor") and in
+    // reality additionally re-runs the whole policy prefill on device —
+    // so the gap reported here is a strict lower bound on the win.
+    println!("\n=== preemption resume: swap-to-host vs re-prefill floor ===");
+    use fastkv::SwapIn;
+    use std::time::Instant;
+    let resume_len = 2048usize;
+    let swap_cfg = PagingConfig {
+        prefix_cache: false, // symmetric: neither path gets block reuse
+        swap_bytes: 1 << 30,
+        ..PagingConfig::default()
+    };
+    let rc = cache(&m, 11, resume_len);
+    let mut pa = PagedArena::new(&m, b, resume_len + 64, swap_cfg.clone());
+    let mut slot = KvStore::admit(&mut pa, &rc).unwrap();
+    let reps = if bench_util::quick() { 3 } else { 30 };
+    // warm
+    let h = pa.swap_out(slot).expect("swap budget");
+    slot = match pa.swap_in(h) {
+        SwapIn::Restored(s) => s,
+        other => panic!("swap-in failed in bench: {other:?}"),
+    };
+    let mut out_ms = Vec::with_capacity(reps);
+    let mut in_ms = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let h = pa.swap_out(slot).expect("swap budget");
+        out_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        let t1 = Instant::now();
+        slot = match pa.swap_in(h) {
+            SwapIn::Restored(s) => s,
+            other => panic!("swap-in failed in bench: {other:?}"),
+        };
+        in_ms.push(t1.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let (swap_out_ms, swap_in_ms) = (mean(&out_ms), mean(&in_ms));
+    println!(
+        "{:44} {swap_out_ms:10.2} ms (out) + {swap_in_ms:.2} ms (in), n={reps}",
+        format!("swap roundtrip ({resume_len} tok)")
+    );
+    let outs = pa.swap_stats().swap_outs; // sanity: every rep swapped
+    assert!(outs as usize >= reps);
+
+    let mut pa2 =
+        PagedArena::new(&m, b, resume_len + 64, swap_cfg.clone());
+    let mut slot2 = KvStore::admit(&mut pa2, &rc).unwrap();
+    let r_readmit = bench(
+        &format!("re-admit floor of recompute ({resume_len} tok)"),
+        2,
+        reps,
+        || {
+            assert!(pa2.release(slot2));
+            slot2 = KvStore::admit(&mut pa2, &rc).unwrap();
+        },
+    );
+    println!(
+        "{:>46} (+ the policy prefill itself on the real recompute path)",
+        ""
+    );
+
+    let entry_bytes =
+        rc.total_elems() * std::mem::size_of::<f32>();
+    let json = format!(
+        "{{\n  \"resume_tokens\": {resume_len},\n  \"layers\": {},\n  \
+         \"entry_bytes\": {entry_bytes},\n  \"swap_out_ms\": {swap_out_ms:.4},\n  \
+         \"swap_in_ms\": {swap_in_ms:.4},\n  \
+         \"readmit_floor_ms\": {:.4},\n  \
+         \"swap_in_vs_readmit\": {:.3},\n  \"reps\": {reps}\n}}\n",
+        m.n_layers,
+        r_readmit.mean_ms,
+        swap_in_ms / r_readmit.mean_ms.max(1e-9),
+    );
+    std::fs::write("BENCH_paging_swap.json", &json)
+        .expect("write BENCH_paging_swap.json");
+    println!("\nwrote BENCH_paging_swap.json:\n{json}");
 }

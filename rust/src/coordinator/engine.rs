@@ -79,10 +79,16 @@ pub fn generate(
     // Default KV backend: the paged arena (worst-case-sized pool for a
     // single lane, so admission cannot fail here). The prefix cache is
     // off: a single-request arena dropped at function exit can never
-    // reuse anything, so content hashing would be pure overhead. The
-    // block size follows the manifest's decode_paged bucket — a mismatch
-    // would silently pin decode to the dense staged bridge.
-    let mut pc = PagingConfig { prefix_cache: false, ..PagingConfig::default() };
+    // reuse anything, so content hashing would be pure overhead. Swap is
+    // off for the same reason — a single worst-case-sized lane is never
+    // preempted. The block size follows the manifest's decode_paged
+    // bucket — a mismatch would silently pin decode to the dense staged
+    // bridge.
+    let mut pc = PagingConfig {
+        prefix_cache: false,
+        swap_bytes: 0,
+        ..PagingConfig::default()
+    };
     if man.buckets.block_tokens > 0 {
         pc.block_tokens = man.buckets.block_tokens;
     }

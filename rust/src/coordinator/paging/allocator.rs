@@ -39,8 +39,11 @@ pub struct BlockAllocator {
     /// Candidate queue of ref-0 cached blocks, oldest in front (LRU
     /// eviction order). May contain *stale* entries for blocks revived
     /// through the prefix cache since being pushed — `revive` is O(1) and
-    /// leaves its entry behind; `alloc` validates on pop. `cached` is the
-    /// exact count of currently-evictable blocks.
+    /// leaves its entry behind; `alloc` validates on pop. The `parked`
+    /// flag bounds the queue at one entry per block, and `sweep_stale`
+    /// backstops that bound (triggered by `decref` past
+    /// `2 * blocks_total`). `cached` is the exact count of
+    /// currently-evictable blocks.
     evictable: VecDeque<BlockId>,
     cached: usize,
     /// Copy-on-write block copies performed (stat).
@@ -159,6 +162,14 @@ impl BlockAllocator {
                 if !self.meta[idx].parked {
                     self.evictable.push_back(id);
                     self.meta[idx].parked = true;
+                    // Defensive backstop: with `parked` bookkeeping intact
+                    // the queue is bounded at one entry per block, so this
+                    // can only fire if that invariant regresses — sweep
+                    // the stale entries instead of growing without bound
+                    // under a churny prefix-hit workload.
+                    if self.evictable.len() > 2 * self.blocks_total() {
+                        self.sweep_stale();
+                    }
                 }
                 self.cached += 1;
             } else {
@@ -168,6 +179,37 @@ impl BlockAllocator {
             }
         }
         count
+    }
+
+    /// Entries currently sitting in the evictable queue, valid *and*
+    /// stale (observability + regression tests pin this against
+    /// `blocks_total`).
+    pub fn evictable_len(&self) -> usize {
+        self.evictable.len()
+    }
+
+    /// Drop stale evictable entries in place (blocks revived or freed
+    /// since they were parked), preserving the LRU order of the valid
+    /// ones. O(queue). Normally unnecessary — `parked` caps the queue at
+    /// one entry per block — this exists as the backstop `decref`
+    /// triggers if the queue ever outgrows `2 * blocks_total`.
+    pub fn sweep_stale(&mut self) {
+        // Clear every queue entry's mark first, then keep exactly one
+        // entry per still-cached block (re-marking as we go) — this both
+        // drops stale entries and dedupes, so the queue is <= blocks_total
+        // afterwards no matter how the invariant was violated.
+        let meta = &mut self.meta;
+        for id in self.evictable.iter() {
+            meta[id.index()].parked = false;
+        }
+        self.evictable.retain(|id| {
+            let m = &mut meta[id.index()];
+            let keep = m.ref_count == 0 && m.hash.is_some() && !m.parked;
+            if keep {
+                m.parked = true;
+            }
+            keep
+        });
     }
 
     /// Claim a block found through the prefix cache: live shared blocks
@@ -338,6 +380,45 @@ mod tests {
         let out = a.alloc().unwrap(); // evicts h
         assert_eq!(out.id, h);
         assert!(a.store().k_rows(h, 1).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn evictable_queue_bounded_and_sweep_drops_stale() {
+        let mut a = alloc3();
+        let b = a.alloc().unwrap().id;
+        a.seal(b, 7);
+        // churny prefix-hit workload: park + revive over and over must
+        // not accumulate queue entries
+        for _ in 0..100 {
+            a.decref(b);
+            assert!(a.revive(b));
+        }
+        assert!(
+            a.evictable_len() <= a.blocks_total(),
+            "queue leaked: {} entries for {} blocks",
+            a.evictable_len(),
+            a.blocks_total()
+        );
+        // the surviving entry is stale (block is live): sweep drops it
+        a.sweep_stale();
+        assert_eq!(a.evictable_len(), 0);
+        // and the block can still park + evict normally afterwards
+        a.decref(b);
+        assert_eq!(a.evictable_len(), 1);
+        assert_eq!(a.blocks_cached(), 1);
+        let _ = a.alloc().unwrap();
+        let _ = a.alloc().unwrap();
+        let out = a.alloc().unwrap();
+        assert_eq!(out.id, b);
+        assert_eq!(out.evicted_hash, Some(7));
+        // sweep on a queue holding only valid entries is a no-op
+        let mut v = alloc3();
+        let x = v.alloc().unwrap().id;
+        v.seal(x, 1);
+        v.decref(x);
+        v.sweep_stale();
+        assert_eq!(v.evictable_len(), 1);
+        assert!(v.revive(x), "valid entry survived the sweep");
     }
 
     #[test]

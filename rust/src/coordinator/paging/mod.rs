@@ -15,7 +15,10 @@
 //!    tables over the shared slab;
 //!  * [`view::DecodeView`] — the block-table-native decode description
 //!    (slab borrow + tables + lens, no KV copies) consumed by the
-//!    `decode_paged_{B}x{C}` artifacts and the host-side gather oracle.
+//!    `decode_paged_{B}x{C}` artifacts and the host-side gather oracle;
+//!  * [`swap::SwapArena`] — byte-budgeted host parking for preempted
+//!    lanes, so resume restores the FastKV-selected KV instead of
+//!    re-prefilling it ([`PagedArena::swap_out`] / [`PagedArena::swap_in`]).
 //!
 //! Decode is block-table-native by default: a step hands the runtime the
 //! slab plus block-table indices instead of densifying the pool. The old
@@ -32,8 +35,10 @@
 pub mod allocator;
 pub mod block;
 pub mod prefix;
+pub mod swap;
 pub mod view;
 
+pub use swap::{SwapHandle, SwapIn, SwapStats};
 pub use view::DecodeView;
 
 use crate::coordinator::kvcache::{BatchArena, RequestCache};
@@ -43,6 +48,7 @@ use crate::tensor::{HostTensor, HostTensorI32};
 use allocator::BlockAllocator;
 use block::BlockId;
 use prefix::PrefixCache;
+use swap::{SwapArena, SwapEntry};
 
 /// Tunables for [`PagedArena`].
 #[derive(Debug, Clone)]
@@ -62,6 +68,12 @@ pub struct PagingConfig {
     /// demand (tests/tools only). Kept so a differential oracle can pin
     /// block-table decode against the staged path.
     pub dense_staging: bool,
+    /// Host-side swap budget in bytes for preempted lanes
+    /// ([`swap::SwapArena`]). A preempted lane's blocks are serialized to
+    /// host within this budget and restored on resume — no re-prefill, no
+    /// policy re-run. `0` disables swapping (preemption always
+    /// recompute-resumes, the pre-swap behavior).
+    pub swap_bytes: usize,
 }
 
 impl Default for PagingConfig {
@@ -71,6 +83,9 @@ impl Default for PagingConfig {
             num_blocks: None,
             prefix_cache: true,
             dense_staging: false,
+            // Generous default for an f32 host cache: preemption should
+            // swap unless the operator opts out (`swap_bytes: 0`).
+            swap_bytes: 128 << 20,
         }
     }
 }
@@ -177,6 +192,37 @@ pub trait KvStore {
         0
     }
     fn pool_stats(&self) -> PoolStats;
+
+    // --- swap-to-host preemption (optional capability) ---------------
+    // Backends without host swap keep these defaults: every preemption
+    // then takes the recompute-resume fallback, the pre-swap behavior.
+
+    /// Serialize a lane to host memory and release its blocks. `None`
+    /// when unsupported, disabled, or over budget — the lane is left
+    /// intact and the caller falls back to recompute-resume.
+    fn swap_out(&mut self, _slot: usize) -> Option<SwapHandle> {
+        None
+    }
+    /// Restore a swapped lane; see [`SwapIn`] for the outcome ladder.
+    fn swap_in(&mut self, _handle: SwapHandle) -> SwapIn {
+        SwapIn::Gone
+    }
+    /// Whether the handle still holds a restorable entry (false once it
+    /// was dropped under budget pressure or consumed).
+    fn swap_contains(&self, _handle: SwapHandle) -> bool {
+        false
+    }
+    /// Admission-gate check: could `swap_in` succeed right now?
+    fn can_swap_in(&self, _handle: SwapHandle, _max_new_remaining: usize) -> bool {
+        false
+    }
+    /// Discard a swapped entry whose request will never resume.
+    fn swap_drop(&mut self, _handle: SwapHandle) -> bool {
+        false
+    }
+    fn swap_stats(&self) -> SwapStats {
+        SwapStats::default()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -204,6 +250,8 @@ pub struct PagedArena {
     block_tokens: usize,
     alloc: BlockAllocator,
     prefix: PrefixCache,
+    /// Host-side parking lot for preempted lanes (swap-to-host resume).
+    swap: SwapArena,
     /// `tables[slot][layer]` → physical blocks, in logical order.
     tables: Vec<Vec<Vec<BlockId>>>,
     /// `lens[slot][layer]` → valid tokens.
@@ -249,6 +297,7 @@ impl PagedArena {
             block_tokens: bt,
             alloc: BlockAllocator::new(num_blocks, bt, re),
             prefix: PrefixCache::new(cfg.prefix_cache),
+            swap: SwapArena::new(cfg.swap_bytes),
             tables: vec![vec![Vec::new(); l]; b],
             lens: vec![vec![0; l]; b],
             used: vec![false; b],
@@ -383,6 +432,12 @@ impl PagedArena {
 
     /// Load a compressed request cache into a free lane, sharing full
     /// blocks through the prefix cache where the content chain matches.
+    ///
+    /// NOTE: [`PagedArena::swap_in`] mirrors this fill-and-commit
+    /// structure with preserved hashes instead of computed chain hashes —
+    /// a fix to the chunk/seal/staging logic here almost certainly
+    /// applies there too (the swap differential oracle in
+    /// `rust/tests/paging.rs` pins the two together).
     pub fn admit(&mut self, cache: &RequestCache) -> Option<usize> {
         let slot = self.find_free_lane()?;
         assert_eq!(cache.k.len(), self.l, "cache layer count");
@@ -551,6 +606,216 @@ impl PagedArena {
         }
         self.touch();
         true
+    }
+
+    /// Serialize a lane to the host swap arena and release its blocks
+    /// back to the pool. The entry preserves per-layer lens, every row in
+    /// logical order, and the prefix-hash chain (per-block seals), so
+    /// [`PagedArena::swap_in`] restores the exact FastKV-selected cache —
+    /// no policy re-run, no re-prefill, no re-hashing.
+    ///
+    /// Returns `None` — with the lane left fully intact — when swapping
+    /// is disabled or the byte budget cannot take the lane even after
+    /// dropping older entries; the caller then falls back to
+    /// recompute-resume (releasing the lane itself).
+    pub fn swap_out(&mut self, slot: usize) -> Option<SwapHandle> {
+        if slot >= self.b || !self.used[slot] || !self.swap.enabled() {
+            return None;
+        }
+        let re = self.row_elems();
+        let mut lens = Vec::with_capacity(self.l);
+        let mut ks: Vec<Vec<f32>> = Vec::with_capacity(self.l);
+        let mut vs: Vec<Vec<f32>> = Vec::with_capacity(self.l);
+        let mut hashes: Vec<Vec<Option<u64>>> = Vec::with_capacity(self.l);
+        for l in 0..self.l {
+            let len = self.lens[slot][l];
+            let mut k = Vec::with_capacity(len * re);
+            let mut v = Vec::with_capacity(len * re);
+            let mut hs = Vec::with_capacity(self.tables[slot][l].len());
+            let mut rows = 0usize;
+            for &bid in &self.tables[slot][l] {
+                let meta = self.alloc.meta(bid);
+                let filled = meta.filled as usize;
+                hs.push(meta.hash);
+                k.extend_from_slice(self.alloc.store().k_rows(bid, filled));
+                v.extend_from_slice(self.alloc.store().v_rows(bid, filled));
+                rows += filled;
+            }
+            debug_assert_eq!(rows, len, "block rows vs lane len");
+            lens.push(len);
+            ks.push(k);
+            vs.push(v);
+            hashes.push(hs);
+        }
+        let bytes = ks.iter().map(|k| k.len()).sum::<usize>()
+            * 2
+            * std::mem::size_of::<f32>();
+        let handle = self.swap.insert(SwapEntry {
+            lens,
+            k: ks,
+            v: vs,
+            hashes,
+            bytes,
+        })?;
+        self.release(slot);
+        Some(handle)
+    }
+
+    /// Restore a swapped lane into freshly allocated blocks, re-sharing
+    /// sealed full blocks through the prefix cache via their preserved
+    /// hashes. A successful restore consumes the handle; [`SwapIn::Busy`]
+    /// leaves it valid (lane or pool momentarily unavailable) and
+    /// [`SwapIn::Gone`] means the entry was dropped under budget pressure
+    /// — recompute-resume is the only way back.
+    ///
+    /// NOTE: deliberately mirrors [`PagedArena::admit`]'s fill-and-commit
+    /// structure (hash source is the only difference: preserved seals vs
+    /// computed chain); keep the two in lockstep when changing either —
+    /// the swap differential oracle pins them together.
+    pub fn swap_in(&mut self, handle: SwapHandle) -> SwapIn {
+        if !self.swap.contains(handle) {
+            return SwapIn::Gone;
+        }
+        let slot = match self.find_free_lane() {
+            Some(s) => s,
+            None => return SwapIn::Busy,
+        };
+        let entry = self.swap.take(handle).expect("checked contains");
+        debug_assert_eq!(entry.lens.len(), self.l, "swap entry layer count");
+        let bt = self.block_tokens;
+        let re = self.row_elems();
+
+        let mut new_tables: Vec<Vec<BlockId>> = Vec::with_capacity(self.l);
+        let mut acquired: Vec<BlockId> = Vec::new();
+        let mut shortfall = false;
+        'layers: for l in 0..self.l {
+            let len = entry.lens[l];
+            let mut table = Vec::with_capacity(ceil_div(len, bt));
+            let mut row0 = 0usize;
+            let mut bi = 0usize;
+            while row0 < len {
+                let rows = (len - row0).min(bt);
+                let hash = entry.hashes[l].get(bi).copied().flatten();
+                let k_rows = &entry.k[l][row0 * re..(row0 + rows) * re];
+                let v_rows = &entry.v[l][row0 * re..(row0 + rows) * re];
+                let mut reused = None;
+                if let Some(h) = hash {
+                    if self.prefix.enabled {
+                        if let Some(bid) = self.prefix.lookup(h) {
+                            if self.alloc.revive(bid) {
+                                reused = Some(bid);
+                            } else {
+                                self.prefix.remove(h);
+                            }
+                        }
+                    }
+                }
+                let bid = match reused {
+                    Some(bid) => bid,
+                    None => match self.alloc.alloc() {
+                        Some(out) => {
+                            if let Some(old) = out.evicted_hash {
+                                self.prefix.remove(old);
+                            }
+                            for r in 0..rows {
+                                self.alloc.store_mut().write_row(
+                                    out.id,
+                                    r,
+                                    &k_rows[r * re..(r + 1) * re],
+                                    &v_rows[r * re..(r + 1) * re],
+                                );
+                            }
+                            self.alloc.set_filled(out.id, rows as u32);
+                            if let Some(h) = hash {
+                                if self.prefix.enabled {
+                                    self.alloc.seal(out.id, h);
+                                    self.prefix.insert(h, out.id);
+                                }
+                            }
+                            out.id
+                        }
+                        None => {
+                            shortfall = true;
+                            break 'layers;
+                        }
+                    },
+                };
+                table.push(bid);
+                acquired.push(bid);
+                row0 += rows;
+                bi += 1;
+            }
+            new_tables.push(table);
+        }
+        if shortfall {
+            self.rollback(acquired);
+            self.swap.put_back(handle, entry);
+            return SwapIn::Busy;
+        }
+
+        // Commit (mirrors `admit`): bookkeeping plus the dense staging
+        // copy under the fallback, reading rows back from the store so
+        // shared and fresh blocks take the same path.
+        self.used[slot] = true;
+        for (l, table) in new_tables.iter().enumerate() {
+            let mut row = 0usize;
+            {
+                let alloc = &self.alloc;
+                let store = alloc.store();
+                let stage = self.stage_buf.as_mut();
+                if let Some(buf) = stage {
+                    for &bid in table {
+                        let filled = alloc.meta(bid).filled as usize;
+                        for r in 0..filled {
+                            let base =
+                                ((l * self.b + slot) * self.c + row) * re;
+                            buf.k.data[base..base + re]
+                                .copy_from_slice(store.k_row(bid, r));
+                            buf.v.data[base..base + re]
+                                .copy_from_slice(store.v_row(bid, r));
+                            row += 1;
+                        }
+                    }
+                } else {
+                    for &bid in table {
+                        row += alloc.meta(bid).filled as usize;
+                    }
+                }
+            }
+            debug_assert_eq!(row, entry.lens[l], "restored rows vs entry len");
+            self.lens[slot][l] = entry.lens[l];
+        }
+        self.tables[slot] = new_tables;
+        self.swap.note_swap_in();
+        self.touch();
+        SwapIn::Restored(slot)
+    }
+
+    /// Whether [`PagedArena::swap_in`] could restore this handle right
+    /// now: a free lane plus pool coverage of its blocks (conservative,
+    /// no sharing assumed), with one growth block per layer reserved when
+    /// the request will keep decoding — the same over-commit contract as
+    /// [`KvStore::can_admit`].
+    pub fn can_swap_in(&self, handle: SwapHandle, max_new_remaining: usize) -> bool {
+        let Some(e) = self.swap.get(handle) else { return false };
+        if self.free_lanes() == 0 || e.max_len() > self.c {
+            return false;
+        }
+        let headroom = if max_new_remaining == 0 { 0 } else { self.l };
+        e.total_blocks(self.block_tokens) + headroom <= self.alloc.allocatable()
+    }
+
+    pub fn swap_contains(&self, handle: SwapHandle) -> bool {
+        self.swap.contains(handle)
+    }
+
+    /// Discard a swapped entry (its request finished or was rejected).
+    pub fn swap_drop(&mut self, handle: SwapHandle) -> bool {
+        self.swap.drop_entry(handle)
+    }
+
+    pub fn swap_stats(&self) -> SwapStats {
+        self.swap.stats()
     }
 
     /// Append one decode row per layer, allocating / copy-on-writing tail
@@ -865,6 +1130,30 @@ impl KvStore for PagedArena {
 
     fn pool_stats(&self) -> PoolStats {
         PagedArena::pool_stats(self)
+    }
+
+    fn swap_out(&mut self, slot: usize) -> Option<SwapHandle> {
+        PagedArena::swap_out(self, slot)
+    }
+
+    fn swap_in(&mut self, handle: SwapHandle) -> SwapIn {
+        PagedArena::swap_in(self, handle)
+    }
+
+    fn swap_contains(&self, handle: SwapHandle) -> bool {
+        PagedArena::swap_contains(self, handle)
+    }
+
+    fn can_swap_in(&self, handle: SwapHandle, max_new_remaining: usize) -> bool {
+        PagedArena::can_swap_in(self, handle, max_new_remaining)
+    }
+
+    fn swap_drop(&mut self, handle: SwapHandle) -> bool {
+        PagedArena::swap_drop(self, handle)
+    }
+
+    fn swap_stats(&self) -> SwapStats {
+        PagedArena::swap_stats(self)
     }
 }
 
@@ -1203,6 +1492,131 @@ mod tests {
         assert_eq!(pa.held_blocks(slot), 4);
         pa.release(slot);
         assert_eq!(pa.held_blocks(slot), 0);
+    }
+
+    #[test]
+    fn swap_roundtrip_restores_lane_and_pool_accounting() {
+        let m = meta();
+        let cfg = PagingConfig {
+            block_tokens: 2,
+            prefix_cache: false,
+            ..Default::default()
+        };
+        let mut pa = PagedArena::new(&m, 2, 8, cfg);
+        let rc = cache_with(&m, &[5, 3], 11.0);
+        let slot = PagedArena::admit(&mut pa, &rc).unwrap();
+        let step = HostTensor::new(
+            vec![2, 2, 2, 2],
+            (0..16).map(|x| 60.0 + x as f32).collect(),
+        );
+        assert_eq!(
+            PagedArena::append(&mut pa, slot, &step, &step),
+            AppendResult::Ok
+        );
+        let before = pa.stage();
+        let lens_before = pa.layer_lens(slot);
+        let in_use = pa.pool_stats().blocks_in_use;
+
+        let h = pa.swap_out(slot).expect("default budget takes one lane");
+        assert_eq!(pa.pool_stats().blocks_in_use, 0, "blocks released");
+        assert!(!pa.used[slot]);
+        assert!(pa.swap_contains(h));
+        assert!(pa.can_swap_in(h, 4));
+
+        match pa.swap_in(h) {
+            SwapIn::Restored(s) => {
+                assert_eq!(s, slot, "same free lane picked");
+            }
+            other => panic!("expected restore, got {other:?}"),
+        }
+        assert!(!pa.swap_contains(h), "handle consumed");
+        assert_eq!(pa.layer_lens(slot), lens_before);
+        assert_eq!(pa.pool_stats().blocks_in_use, in_use);
+        let after = pa.stage();
+        assert_eq!(before.lens.data, after.lens.data);
+        assert_eq!(before.k.data, after.k.data);
+        assert_eq!(before.v.data, after.v.data);
+        let ss = pa.swap_stats();
+        assert_eq!((ss.swap_outs, ss.swap_ins, ss.used_bytes), (1, 1, 0));
+        // consumed handles are gone, not busy
+        assert_eq!(pa.swap_in(h), SwapIn::Gone);
+    }
+
+    #[test]
+    fn swap_in_reshares_sealed_blocks_through_prefix_cache() {
+        let m = meta();
+        let cfg = PagingConfig { block_tokens: 4, ..Default::default() };
+        let mut pa = PagedArena::new(&m, 2, 16, cfg);
+        let rc = cache_with(&m, &[8, 8], 12.0);
+        let s0 = PagedArena::admit(&mut pa, &rc).unwrap();
+        let s1 = PagedArena::admit(&mut pa, &rc).unwrap();
+        let shared = pa.pool_stats().blocks_in_use;
+        assert_eq!(shared, 4, "both lanes share the sealed blocks");
+        let h = pa.swap_out(s1).unwrap();
+        // blocks stay alive through s0's references
+        assert_eq!(pa.pool_stats().blocks_in_use, shared);
+        let hits_before = pa.pool_stats().prefix_hits;
+        match pa.swap_in(h) {
+            SwapIn::Restored(_) => {}
+            other => panic!("expected restore, got {other:?}"),
+        }
+        let ps = pa.pool_stats();
+        assert_eq!(
+            ps.blocks_in_use, shared,
+            "restore revived via preserved hashes, no fresh blocks"
+        );
+        assert!(ps.prefix_hits > hits_before);
+        let _ = s0;
+    }
+
+    #[test]
+    fn swap_disabled_or_over_budget_refuses_and_leaves_lane_intact() {
+        let m = meta();
+        let mk = |bytes| PagingConfig {
+            block_tokens: 2,
+            prefix_cache: false,
+            swap_bytes: bytes,
+            ..Default::default()
+        };
+        // disabled
+        let mut off = PagedArena::new(&m, 1, 8, mk(0));
+        let rc = cache_with(&m, &[4, 4], 13.0);
+        let slot = PagedArena::admit(&mut off, &rc).unwrap();
+        assert!(off.swap_out(slot).is_none());
+        assert_eq!(off.layer_lens(slot), vec![4, 4], "lane untouched");
+        // budget smaller than one lane
+        let mut tiny = PagedArena::new(&m, 1, 8, mk(8));
+        let slot = PagedArena::admit(&mut tiny, &rc).unwrap();
+        assert!(tiny.swap_out(slot).is_none());
+        assert_eq!(tiny.layer_lens(slot), vec![4, 4], "lane untouched");
+        assert_eq!(tiny.swap_stats().refused, 1);
+    }
+
+    #[test]
+    fn swap_in_reports_busy_until_memory_frees() {
+        let m = meta();
+        let cfg = PagingConfig {
+            block_tokens: 2,
+            num_blocks: Some(8),
+            prefix_cache: false,
+            ..Default::default()
+        };
+        let mut pa = PagedArena::new(&m, 1, 8, cfg);
+        let rc = cache_with(&m, &[4, 4], 14.0);
+        let slot = PagedArena::admit(&mut pa, &rc).unwrap();
+        let h = pa.swap_out(slot).unwrap();
+        // occupy the only lane (and most of the pool) with another request
+        let other = cache_with(&m, &[6, 6], 15.0);
+        let s2 = PagedArena::admit(&mut pa, &other).unwrap();
+        assert!(!pa.can_swap_in(h, 2), "no free lane");
+        assert_eq!(pa.swap_in(h), SwapIn::Busy);
+        assert!(pa.swap_contains(h), "busy keeps the entry");
+        pa.release(s2);
+        assert!(pa.can_swap_in(h, 0));
+        match pa.swap_in(h) {
+            SwapIn::Restored(s) => assert_eq!(pa.layer_lens(s), vec![4, 4]),
+            other => panic!("expected restore, got {other:?}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! Host-side KV swap arena: preempted lanes become durable artifacts.
+//!
+//! FastKV's retained KV is expensive, carefully-selected state — the
+//! TSP-layer selection ran once at prefill and everything the lane
+//! decoded since rode on it. Recompute-resume (re-prefilling
+//! `prompt ++ generated` after a preemption) re-pays exactly that cost
+//! and, worse, re-*selects*: the re-run policy sees a longer prompt and
+//! may retain different entries than the cache the lane was decoding
+//! against (selection drift). Swap-to-host treats the once-compressed KV
+//! as a durable artifact instead: at preemption the lane's blocks are
+//! serialized to a byte-budgeted host arena (per-layer lens + rows + the
+//! prefix-hash chain), and resume restores them into freshly allocated
+//! blocks — no policy re-run, no prefill, bit-identical KV.
+//!
+//! Budgeting: the arena holds at most `budget_bytes` of payload. A new
+//! swap-out evicts the *oldest* entries to make room (their owners fall
+//! back to recompute-resume — the handle reports [`SwapIn::Gone`]), and
+//! is refused outright only when the lane alone exceeds the budget.
+//! `budget_bytes == 0` disables swapping entirely (pure recompute-resume,
+//! the pre-swap behavior).
+//!
+//! The arena is deliberately dumb storage: which lane to swap, when to
+//! restore, and what to do on `Gone`/`Busy` are the serving loop's
+//! decisions (`server.rs`); block allocation and prefix re-sharing on
+//! restore are `PagedArena::swap_in`'s.
+
+use std::collections::{HashMap, VecDeque};
+
+/// Opaque ticket for a lane swapped out to host memory. Rides on the
+/// scheduler's resume-queue entry; consumed by a successful swap-in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SwapHandle(pub u64);
+
+/// Outcome of a swap-in attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwapIn {
+    /// KV restored into this lane; the handle is consumed.
+    Restored(usize),
+    /// No free lane, or the block pool cannot cover the restore right
+    /// now. The handle stays valid — retry after decode frees memory.
+    Busy,
+    /// The handle was dropped under host-memory pressure (or never
+    /// existed). The caller must fall back to recompute-resume.
+    Gone,
+}
+
+/// One serialized lane: dense per-layer rows plus the per-block prefix
+/// hashes captured at swap-out.
+#[derive(Debug, Clone)]
+pub struct SwapEntry {
+    /// Valid rows per layer.
+    pub lens: Vec<usize>,
+    /// `[layer][len * row_elems]` K rows in logical order.
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    /// `[layer][block]` chain hash of each block at swap-out: `Some` for
+    /// full sealed blocks (so swap-in re-shares them through the prefix
+    /// cache without re-hashing), `None` for mutable tails and
+    /// decode-written blocks.
+    pub hashes: Vec<Vec<Option<u64>>>,
+    /// Host bytes held by the K + V payload.
+    pub bytes: usize,
+}
+
+impl SwapEntry {
+    /// Blocks a restore needs, assuming no prefix sharing (conservative —
+    /// mirrors `PagedArena::blocks_for`).
+    pub fn total_blocks(&self, block_tokens: usize) -> usize {
+        let bt = block_tokens.max(1);
+        self.lens.iter().map(|&n| (n + bt - 1) / bt).sum()
+    }
+
+    pub fn max_len(&self) -> usize {
+        self.lens.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Aggregate swap gauges/counters for metrics and reporting.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SwapStats {
+    pub budget_bytes: usize,
+    pub used_bytes: usize,
+    pub entries: usize,
+    /// Lanes serialized to host.
+    pub swap_outs: u64,
+    /// Lanes restored from host.
+    pub swap_ins: u64,
+    /// Swap-outs refused because one lane exceeded the whole budget (or
+    /// swapping is disabled).
+    pub refused: u64,
+    /// Entries evicted (oldest-first) to make room for newer swap-outs;
+    /// their owners recompute-resume.
+    pub dropped: u64,
+}
+
+/// Byte-budgeted store of swapped lanes. Insertion evicts oldest-first
+/// under pressure; lookups are O(1).
+#[derive(Debug)]
+pub struct SwapArena {
+    budget: usize,
+    used: usize,
+    entries: HashMap<u64, SwapEntry>,
+    /// Insertion order, oldest in front. May hold ids already consumed by
+    /// a swap-in or an explicit drop — validated against `entries` when
+    /// popped for eviction (same stale-marker discipline as the block
+    /// allocator's evictable queue).
+    order: VecDeque<u64>,
+    next: u64,
+    swap_outs: u64,
+    swap_ins: u64,
+    refused: u64,
+    dropped: u64,
+}
+
+impl SwapArena {
+    pub fn new(budget_bytes: usize) -> Self {
+        SwapArena {
+            budget: budget_bytes,
+            used: 0,
+            entries: HashMap::new(),
+            order: VecDeque::new(),
+            next: 1,
+            swap_outs: 0,
+            swap_ins: 0,
+            refused: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.budget > 0
+    }
+
+    /// Park a serialized lane. Evicts oldest entries while over budget;
+    /// refuses (`None`) when the entry alone cannot fit — the caller
+    /// falls back to recompute-resume and the lane is left untouched.
+    pub fn insert(&mut self, entry: SwapEntry) -> Option<SwapHandle> {
+        if entry.bytes > self.budget {
+            self.refused += 1;
+            return None;
+        }
+        while self.used + entry.bytes > self.budget {
+            let Some(old) = self.order.pop_front() else { break };
+            if let Some(e) = self.entries.remove(&old) {
+                self.used -= e.bytes;
+                self.dropped += 1;
+            }
+        }
+        let id = self.next;
+        self.next += 1;
+        self.used += entry.bytes;
+        self.entries.insert(id, entry);
+        self.order.push_back(id);
+        self.swap_outs += 1;
+        Some(SwapHandle(id))
+    }
+
+    pub fn contains(&self, h: SwapHandle) -> bool {
+        self.entries.contains_key(&h.0)
+    }
+
+    pub fn get(&self, h: SwapHandle) -> Option<&SwapEntry> {
+        self.entries.get(&h.0)
+    }
+
+    /// Remove an entry for a restore attempt. If the attempt fails
+    /// (pool shortfall), pair with [`SwapArena::put_back`] — the entry's
+    /// order id stays in the queue across the round trip (so it keeps
+    /// its eviction priority and `insert` can always reach it), which is
+    /// why pruning happens only on *final* removals.
+    pub fn take(&mut self, h: SwapHandle) -> Option<SwapEntry> {
+        let e = self.entries.remove(&h.0)?;
+        self.used -= e.bytes;
+        Some(e)
+    }
+
+    /// Drop consumed ids from the order queue once stale ids dominate it
+    /// — the same bounded-stale-markers discipline as the block
+    /// allocator's evictable queue. Called on final removals only (a
+    /// taken-but-put-back entry must keep its queue id), it bounds
+    /// `order` at ~2x the live entry count plus a small floor no matter
+    /// how many preempt/resume cycles a long-running server performs.
+    fn prune_order(&mut self) {
+        if self.order.len() > 2 * self.entries.len() + 8 {
+            let entries = &self.entries;
+            self.order.retain(|id| entries.contains_key(id));
+        }
+    }
+
+    /// Undo a [`SwapArena::take`] after a failed restore. Never evicts:
+    /// the bytes were part of the budget a moment ago. The handle's
+    /// `order` entry is still in the queue (stale-marker discipline), so
+    /// its eviction priority is preserved.
+    pub fn put_back(&mut self, h: SwapHandle, entry: SwapEntry) {
+        self.used += entry.bytes;
+        self.entries.insert(h.0, entry);
+    }
+
+    /// Discard an entry (request finished, rejected, or restored).
+    pub fn drop_entry(&mut self, h: SwapHandle) -> bool {
+        match self.entries.remove(&h.0) {
+            Some(e) => {
+                self.used -= e.bytes;
+                self.prune_order();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Count a successful restore (the entry was consumed via `take` and
+    /// will not come back — its order id is now prunable).
+    pub fn note_swap_in(&mut self) {
+        self.swap_ins += 1;
+        self.prune_order();
+    }
+
+    pub fn stats(&self) -> SwapStats {
+        SwapStats {
+            budget_bytes: self.budget,
+            used_bytes: self.used,
+            entries: self.entries.len(),
+            swap_outs: self.swap_outs,
+            swap_ins: self.swap_ins,
+            refused: self.refused,
+            dropped: self.dropped,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(bytes: usize) -> SwapEntry {
+        SwapEntry {
+            lens: vec![bytes / 8, bytes / 8],
+            k: vec![Vec::new(); 2],
+            v: vec![Vec::new(); 2],
+            hashes: vec![Vec::new(); 2],
+            bytes,
+        }
+    }
+
+    #[test]
+    fn insert_take_putback_roundtrip() {
+        let mut a = SwapArena::new(100);
+        let h = a.insert(entry(40)).unwrap();
+        assert!(a.contains(h));
+        assert_eq!(a.stats().used_bytes, 40);
+        let e = a.take(h).unwrap();
+        assert_eq!(a.stats().used_bytes, 0);
+        assert!(!a.contains(h));
+        a.put_back(h, e);
+        assert!(a.contains(h));
+        assert_eq!(a.stats().used_bytes, 40);
+        assert!(a.drop_entry(h));
+        assert!(!a.drop_entry(h), "double drop guarded");
+    }
+
+    #[test]
+    fn over_budget_entry_is_refused() {
+        let mut a = SwapArena::new(10);
+        assert!(a.insert(entry(11)).is_none());
+        assert_eq!(a.stats().refused, 1);
+        assert_eq!(a.stats().used_bytes, 0);
+        // zero budget disables swapping entirely
+        let mut z = SwapArena::new(0);
+        assert!(!z.enabled());
+        assert!(z.insert(entry(1)).is_none());
+    }
+
+    #[test]
+    fn pressure_drops_oldest_first() {
+        let mut a = SwapArena::new(100);
+        let h0 = a.insert(entry(40)).unwrap();
+        let h1 = a.insert(entry(40)).unwrap();
+        // 40 + 40 + 40 > 100: h0 (oldest) is dropped
+        let h2 = a.insert(entry(40)).unwrap();
+        assert!(!a.contains(h0), "oldest evicted");
+        assert!(a.contains(h1) && a.contains(h2));
+        let s = a.stats();
+        assert_eq!((s.dropped, s.entries, s.used_bytes), (1, 2, 80));
+        // consumed entries leave stale order ids that eviction skips
+        let e1 = a.take(h1).unwrap();
+        a.note_swap_in();
+        drop(e1);
+        let h3 = a.insert(entry(60)).unwrap(); // 40 + 60 > 100: drops h2
+        assert!(!a.contains(h2));
+        assert!(a.contains(h3));
+        assert_eq!(a.stats().dropped, 2);
+    }
+
+    #[test]
+    fn order_queue_bounded_across_many_roundtrips() {
+        // Regression: every swap-out used to leave its id in `order`
+        // forever once consumed — unbounded growth over a long-running
+        // server's preempt/resume cycles. Final removals prune.
+        let mut a = SwapArena::new(1000);
+        for _ in 0..500 {
+            let h = a.insert(entry(10)).unwrap();
+            let e = a.take(h).unwrap();
+            drop(e);
+            a.note_swap_in();
+        }
+        assert!(
+            a.order.len() <= 2 * a.entries.len() + 8,
+            "order queue leaked: {} ids for {} entries",
+            a.order.len(),
+            a.entries.len()
+        );
+        for _ in 0..500 {
+            let h = a.insert(entry(10)).unwrap();
+            assert!(a.drop_entry(h));
+        }
+        assert!(a.order.len() <= 8, "drops must prune too");
+        // a failed-restore round trip keeps the id: the entry must stay
+        // reachable for pressure eviction afterwards
+        let h = a.insert(entry(900)).unwrap();
+        let e = a.take(h).unwrap();
+        a.put_back(h, e);
+        let h2 = a.insert(entry(900)).unwrap(); // over budget: evicts h
+        assert!(!a.contains(h), "put-back entry still evictable");
+        assert!(a.contains(h2));
+    }
+
+    #[test]
+    fn entry_block_math() {
+        let e = SwapEntry {
+            lens: vec![5, 0, 8],
+            k: vec![Vec::new(); 3],
+            v: vec![Vec::new(); 3],
+            hashes: vec![Vec::new(); 3],
+            bytes: 0,
+        };
+        assert_eq!(e.total_blocks(4), 2 + 0 + 2);
+        assert_eq!(e.max_len(), 8);
+    }
+}

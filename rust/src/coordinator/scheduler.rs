@@ -47,7 +47,10 @@ pub struct Scheduler<T> {
     /// Preempted requests waiting to resume. Always admitted before the
     /// regular queue — under *any* admit order — so preemption never
     /// starves a request (ShortestFirst would otherwise keep picking
-    /// fresh short prompts over a preempted long one forever).
+    /// fresh short prompts over a preempted long one forever). Entries
+    /// carry their resume capital with them: a swap handle to
+    /// host-parked KV (restore, zero prefill) or just the generated
+    /// tokens (recompute fallback) — see `server::SwapResume`.
     resume: VecDeque<T>,
     pub order: AdmitOrder,
     /// Admit only when at least this many decode slots are free AND the
@@ -79,6 +82,12 @@ impl<T> Scheduler<T> {
 
     pub fn queue_len(&self) -> usize {
         self.resume.len() + self.queue.len()
+    }
+
+    /// Preempted requests currently parked for resume (resume-queue
+    /// depth gauge).
+    pub fn resume_len(&self) -> usize {
+        self.resume.len()
     }
 
     /// Decide the next action given the number of active decode slots.

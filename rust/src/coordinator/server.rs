@@ -17,12 +17,20 @@
 //!  * **block-granular compaction** — on pool exhaustion mid-decode the
 //!    affected lane first evicts by blocks using the policy's per-layer
 //!    keep-sets (`PolicyCfg::compaction_keep`);
-//!  * **preemption with resume** — if compaction cannot free enough, the
-//!    *least-progress resumable lane* (fewest generated tokens, ties to
-//!    fewest held blocks — `scheduler::pick_preemption_victim`) releases
-//!    its blocks and returns to the head of the queue; on re-admission it
-//!    re-prefills `prompt ++ generated-so-far` and continues where it
-//!    left off instead of aborting.
+//!  * **preemption with swap-to-host resume** — if compaction cannot free
+//!    enough, the *least-progress resumable lane* (fewest generated
+//!    tokens, ties to fewest held blocks —
+//!    `scheduler::pick_preemption_victim`) is preempted: its
+//!    FastKV-selected blocks are serialized to the byte-budgeted host
+//!    swap arena (`PagedArena::swap_out`) and the request parks on the
+//!    resume queue carrying the `SwapHandle` plus its decode cursor. On
+//!    re-admission the blocks are restored in place (`swap_in`) — zero
+//!    policy work, zero prefill, bit-identical KV. Only when the swap
+//!    budget refuses the lane or the handle is dropped under host-memory
+//!    pressure does resume fall back to re-prefilling
+//!    `prompt ++ generated-so-far` (recompute-resume, which re-pays the
+//!    prefill FastKV eliminated and may re-select different KV). The
+//!    full pressure ladder is: compact → swap → recompute → reject.
 //!
 //! Decode steps go through the shared [`DecodeBatch`] planner: block-table
 //! native (`decode_paged_{B}x{C}`, slab + table indices) whenever the
@@ -43,13 +51,17 @@ use crate::coordinator::decode::{
 };
 use crate::coordinator::engine::decode_cap_for;
 use crate::coordinator::kvcache::BatchArena;
-use crate::coordinator::paging::{KvStore, PagedArena, PagingConfig};
-use crate::coordinator::policies::{make_policy, PolicyCfg};
+use crate::coordinator::paging::{
+    KvStore, PagedArena, PagingConfig, SwapHandle, SwapIn,
+};
+use crate::coordinator::policies::{
+    make_policy, Exec, Policy, PolicyCfg, PrefillOutcome,
+};
 use crate::coordinator::scheduler::{
     pick_preemption_victim, Action, AdmitOrder, Scheduler,
 };
 use crate::manifest::Manifest;
-use crate::metrics::Metrics;
+use crate::metrics::{names, Metrics};
 use crate::runtime::outputs::DecodeOut;
 use crate::runtime::Runtime;
 use crate::tokenizer::END;
@@ -82,11 +94,78 @@ pub struct Request {
     pub max_new: usize,
     submitted: Instant,
     reply: mpsc::Sender<Response>,
-    /// Tokens generated before a preemption; re-prefilled as part of the
-    /// prompt on resume so generation continues seamlessly.
+    /// Tokens generated before a preemption. The final response always
+    /// includes them; the recompute-resume *fallback* additionally
+    /// re-prefills them as prompt context (the swap path never does).
     resumed: Vec<i32>,
     /// TTFT measured at first admission, preserved across preemptions.
     first_ttft: Option<f64>,
+    /// Host-swapped KV from the last preemption plus the decode cursor;
+    /// resume restores the blocks without touching the policy, falling
+    /// back to recompute only when the handle is gone.
+    swap: Option<SwapResume>,
+    /// A completed prefill whose `store.admit` was deferred (pool
+    /// momentarily full). The retry re-attempts admission only — the
+    /// policy prefill is never recomputed for a deferral.
+    pending: Option<PendingPrefill>,
+    /// Set once a policy prefill has run for this request; any further
+    /// prefill is paid-for work re-done (`names::PREFILL_RECOMPUTED`).
+    prefilled: bool,
+}
+
+/// Decode cursor riding with a swapped-out request on the resume queue.
+#[derive(Debug, Clone, Copy)]
+pub struct SwapResume {
+    pub handle: SwapHandle,
+    /// Token that was being decoded when the lane was preempted.
+    pub cur: i32,
+    /// Absolute position of that token.
+    pub pos: usize,
+}
+
+/// Prefill outcome carried across a deferred admission.
+#[derive(Debug)]
+struct PendingPrefill {
+    outcome: PrefillOutcome,
+    prefill_secs: f64,
+}
+
+impl Request {
+    /// Construct a request without a live server — tests and benches
+    /// drive [`admit`] / [`preempt`] / [`try_resume`] directly against a
+    /// store. The returned receiver observes the final [`Response`].
+    pub fn synthetic(
+        id: u64,
+        prompt: Vec<i32>,
+        max_new: usize,
+    ) -> (Request, mpsc::Receiver<Response>) {
+        let (reply, rx) = mpsc::channel();
+        (
+            Request {
+                id,
+                prompt,
+                max_new,
+                submitted: Instant::now(),
+                reply,
+                resumed: Vec::new(),
+                first_ttft: None,
+                swap: None,
+                pending: None,
+                prefilled: false,
+            },
+            rx,
+        )
+    }
+
+    /// Generated-so-far tokens a preemption parked with this request.
+    pub fn resumed_tokens(&self) -> &[i32] {
+        &self.resumed
+    }
+
+    /// The swap ticket riding with this request, if it was swapped out.
+    pub fn swap_resume(&self) -> Option<&SwapResume> {
+        self.swap.as_ref()
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -132,6 +211,9 @@ impl ServerHandle {
                 reply,
                 resumed: Vec::new(),
                 first_ttft: None,
+                swap: None,
+                pending: None,
+                prefilled: false,
             }))
             .map_err(|_| anyhow::anyhow!("server thread gone"))?;
         Ok((id, rx))
@@ -147,7 +229,10 @@ pub struct Server {
     join: Option<std::thread::JoinHandle<()>>,
 }
 
-struct Active {
+/// One admitted request's decode-loop state. Public (with read-only
+/// accessors) so tests and benches can drive the real
+/// admit/decode/preempt/resume machinery without a PJRT runtime.
+pub struct Active {
     req: Request,
     slot: usize,
     tokens: Vec<i32>,
@@ -156,6 +241,51 @@ struct Active {
     prefill_secs: f64,
     ttft_secs: f64,
     done: bool,
+}
+
+impl Active {
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+
+    pub fn cur(&self) -> i32 {
+        self.cur
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    pub fn request_id(&self) -> u64 {
+        self.req.id
+    }
+
+    /// Apply one lane-step outcome to this request's decode cursor
+    /// (token bookkeeping only — the KV append already happened inside
+    /// `advance_lane`). `PoolPressure` is the caller's problem.
+    pub fn apply(&mut self, adv: LaneAdvance) {
+        match adv {
+            LaneAdvance::Next { token, ended } => {
+                self.pos += 1;
+                if ended {
+                    self.done = true;
+                } else {
+                    self.cur = token;
+                    self.tokens.push(token);
+                }
+            }
+            LaneAdvance::CapacityStop => self.done = true,
+            LaneAdvance::PoolPressure => {}
+        }
+    }
 }
 
 impl Server {
@@ -213,7 +343,16 @@ fn serve_loop(
     }
 }
 
-fn reject(mut req: Request, metrics: &Metrics, why: String) {
+fn reject(
+    mut req: Request,
+    store: &mut dyn KvStore,
+    metrics: &Metrics,
+    why: String,
+) {
+    // A rejected request never resumes: free its host-swapped KV.
+    if let Some(sr) = req.swap.take() {
+        store.swap_drop(sr.handle);
+    }
     metrics.inc("rejected", 1);
     let tokens = std::mem::take(&mut req.resumed);
     let _ = req.reply.send(Response {
@@ -249,8 +388,49 @@ fn prefill_len_limit(man: &Manifest, policy: &str, use_pallas: bool) -> usize {
     }
 }
 
+/// Memory-aware admission verdict for the head-of-queue request,
+/// matched to the path it will actually take:
+///
+///  * swapped resume — can the exact swapped blocks be restored now?
+///  * deferred admission — the cache is already materialized; gate on
+///    its true per-layer footprint, not the prompt-length estimate;
+///  * fresh / recompute — the policy's worst-case estimate for the
+///    (re-)prefill, as before.
+///
+/// `remaining` deliberately has no `.max(1)` clamp: a request with no
+/// decode budget left reserves zero growth headroom, and `admit` agrees
+/// by finishing it without growing the cache (`resume_admit_state`).
+fn admit_gate(
+    cfg: &ServerConfig,
+    man: &Manifest,
+    store: &dyn KvStore,
+    r: &Request,
+) -> bool {
+    let remaining = r.max_new.saturating_sub(r.resumed.len());
+    if let Some(sr) = &r.swap {
+        if store.swap_contains(sr.handle) {
+            return store.can_swap_in(sr.handle, remaining);
+        }
+        // handle dropped: this request will recompute-resume below
+    }
+    if let Some(p) = &r.pending {
+        return store.can_admit(p.outcome.cache.max_len(), remaining);
+    }
+    let n = (r.prompt.len() + r.resumed.len())
+        .min(cfg.max_prompt + cfg.max_new);
+    let per_layer =
+        cfg.policy_cfg.per_layer_budget(&cfg.policy, n, man.model.window);
+    store.can_admit(per_layer, remaining)
+}
+
 /// Retire a finished request: release its lane and send the response.
-fn finish(a: Active, store: &mut dyn KvStore, metrics: &Metrics) {
+fn finish(mut a: Active, store: &mut dyn KvStore, metrics: &Metrics) {
+    // Defensive: a finishing request must never leak a swap entry (the
+    // resume ladder clears it, but budget bytes are too precious to
+    // trust that from here).
+    if let Some(sr) = a.req.swap.take() {
+        store.swap_drop(sr.handle);
+    }
     store.release(a.slot);
     metrics.inc("completed", 1);
     metrics.observe("e2e_secs", a.req.submitted.elapsed().as_secs_f64());
@@ -284,6 +464,11 @@ fn publish_pool_gauges(store: &dyn KvStore, metrics: &Metrics) {
     metrics.set_gauge("pool_cow_copies", ps.cow_copies as f64);
     metrics.set_gauge("pool_evictions", ps.evictions as f64);
     metrics.set_gauge("pool_alloc_failures", ps.alloc_failures as f64);
+    let ss = store.swap_stats();
+    metrics.set_gauge(names::SWAP_BYTES_USED, ss.used_bytes as f64);
+    metrics.set_gauge(names::SWAP_BYTES_BUDGET, ss.budget_bytes as f64);
+    metrics.set_gauge(names::SWAP_ENTRIES, ss.entries as f64);
+    metrics.set_gauge(names::SWAP_DROPPED, ss.dropped as f64);
 }
 
 fn serve_inner(
@@ -381,60 +566,96 @@ fn serve_inner(
         } else {
             match sched.peek_next(|r: &Request| r.prompt.len()) {
                 None => true,
-                Some(r) => {
-                    let n = (r.prompt.len() + r.resumed.len())
-                        .min(cfg.max_prompt + cfg.max_new);
-                    let per_layer = cfg.policy_cfg.per_layer_budget(
-                        &cfg.policy,
-                        n,
-                        man.model.window,
-                    );
-                    let remaining =
-                        r.max_new.saturating_sub(r.resumed.len()).max(1);
-                    store.can_admit(per_layer, remaining)
-                }
+                Some(r) => admit_gate(cfg, &man, store.as_ref(), r),
             }
         };
 
         match sched.next_action_mem(active.len(), admit_ok) {
             Action::Prefill => {
                 let req = sched.pop_next(|r| r.prompt.len()).unwrap();
-                match admit(rt, &man, policy.as_ref(), cfg, req, store.as_mut())
-                {
-                    Ok(a) => {
-                        metrics.observe("prefill_secs", a.prefill_secs);
-                        if a.done {
-                            // Resumed request already at its token budget
-                            // (or END on the first token): respond now
-                            // rather than dragging it through a decode
-                            // step that must ignore it.
-                            finish(a, store.as_mut(), metrics);
-                        } else {
-                            active.push(a);
-                        }
+                // Swap-first resume ladder: restore host-swapped blocks
+                // with zero policy work; recompute only when the handle
+                // is gone (dropped under host-memory pressure).
+                let req = match try_resume(req, store.as_mut(), metrics) {
+                    Resume::Restored(a) => {
+                        active.push(a);
+                        None
                     }
-                    Err(AdmitFail::Defer(req)) => {
-                        // Prefilled but the pool could not take the cache;
-                        // resume from the queue head once decoding frees
-                        // blocks. With nothing active the pool can never
-                        // improve, so reject instead of livelocking; with
-                        // actives, pause admission for one iteration so
-                        // the loop decodes (and frees blocks) instead of
-                        // hot-spinning on prefill-then-defer.
+                    Resume::Busy(mut req) => {
                         if active.is_empty() {
-                            reject(
-                                req,
-                                metrics,
-                                "request cannot fit the KV block pool".into(),
-                            );
+                            // Nothing decoding, so the pool can never
+                            // improve on its own: drop the entry and
+                            // recompute-resume right now rather than
+                            // livelock.
+                            if let Some(sr) = req.swap.take() {
+                                store.as_mut().swap_drop(sr.handle);
+                                metrics
+                                    .inc(names::SWAP_FALLBACK_RECOMPUTE, 1);
+                            }
+                            Some(req)
                         } else {
                             metrics.inc("admit_deferred", 1);
                             sched.requeue_front(req);
                             admission_paused = true;
+                            None
                         }
                     }
-                    Err(AdmitFail::Reject(req, e)) => {
-                        reject(req, metrics, format!("{e:#}"));
+                    Resume::Recompute(req) => Some(req),
+                };
+                if let Some(req) = req {
+                    match admit(
+                        rt,
+                        &man,
+                        policy.as_ref(),
+                        cfg,
+                        req,
+                        store.as_mut(),
+                        metrics,
+                    ) {
+                        Ok(a) => {
+                            metrics.observe("prefill_secs", a.prefill_secs);
+                            if a.done {
+                                // Resumed request already at its token
+                                // budget (or END on the first token):
+                                // respond now rather than dragging it
+                                // through a decode step that must ignore
+                                // it.
+                                finish(a, store.as_mut(), metrics);
+                            } else {
+                                active.push(a);
+                            }
+                        }
+                        Err(AdmitFail::Defer(req)) => {
+                            // The pool could not take the cache; the
+                            // finished prefill rides with the request so
+                            // the retry is admission-only. With nothing
+                            // active the pool can never improve, so
+                            // reject instead of livelocking; with
+                            // actives, pause admission for one iteration
+                            // so the loop decodes (and frees blocks)
+                            // instead of hot-spinning on admit-then-defer.
+                            if active.is_empty() {
+                                reject(
+                                    req,
+                                    store.as_mut(),
+                                    metrics,
+                                    "request cannot fit the KV block pool"
+                                        .into(),
+                                );
+                            } else {
+                                metrics.inc("admit_deferred", 1);
+                                sched.requeue_front(req);
+                                admission_paused = true;
+                            }
+                        }
+                        Err(AdmitFail::Reject(req, e)) => {
+                            reject(
+                                req,
+                                store.as_mut(),
+                                metrics,
+                                format!("{e:#}"),
+                            );
+                        }
                     }
                 }
             }
@@ -469,19 +690,58 @@ fn serve_inner(
                 }
             }
             Action::Idle => {
-                // Queue blocked on memory with nothing active: the pool
-                // will never improve, so fail the head request fast.
+                // Queue blocked on memory with nothing active. A swapped
+                // request deserves one resume attempt first (its gate may
+                // have been conservative — prefix sharing can make the
+                // actual restore cheaper); anything else can never fit.
                 if !admit_ok && active.is_empty() && sched.queue_len() > 0 {
                     let req = sched.pop_next(|r| r.prompt.len()).unwrap();
-                    reject(
-                        req,
-                        metrics,
-                        "request cannot fit the KV block pool".into(),
-                    );
+                    match try_resume(req, store.as_mut(), metrics) {
+                        // Conservative gate, real restore: prefix sharing
+                        // can make the actual swap-in cheaper than the
+                        // no-sharing estimate.
+                        Resume::Restored(a) => active.push(a),
+                        Resume::Busy(mut req) => {
+                            // The swapped blocks cannot fit even a
+                            // drained pool: the entry is useless. Drop it
+                            // and give recompute-resume one shot — its
+                            // re-run policy re-compresses the generated
+                            // tokens too, so its footprint can be smaller
+                            // than the swapped one.
+                            if let Some(sr) = req.swap.take() {
+                                store.as_mut().swap_drop(sr.handle);
+                                metrics
+                                    .inc(names::SWAP_FALLBACK_RECOMPUTE, 1);
+                            }
+                            if admit_gate(cfg, &man, store.as_ref(), &req) {
+                                sched.requeue_front(req);
+                            } else {
+                                reject(
+                                    req,
+                                    store.as_mut(),
+                                    metrics,
+                                    "request cannot fit the KV block pool"
+                                        .into(),
+                                );
+                            }
+                        }
+                        // Never swapped (or already fell back): the
+                        // recompute gate itself said no — the pool will
+                        // never improve, fail fast.
+                        Resume::Recompute(req) => {
+                            reject(
+                                req,
+                                store.as_mut(),
+                                metrics,
+                                "request cannot fit the KV block pool".into(),
+                            );
+                        }
+                    }
                 }
             }
         }
         publish_pool_gauges(store.as_ref(), metrics);
+        metrics.set_gauge("resume_queue_depth", sched.resume_len() as f64);
     }
     Ok(())
 }
@@ -492,21 +752,45 @@ impl Active {
     }
 }
 
-enum AdmitFail {
+pub enum AdmitFail {
     /// Permanent failure: send an error response.
     Reject(Request, anyhow::Error),
     /// Pool momentarily too full: requeue and retry after decode frees
-    /// blocks.
+    /// blocks. The completed prefill rides along inside the request
+    /// (`PendingPrefill`), so the retry costs only a `store.admit`.
     Defer(Request),
 }
 
-fn admit(
-    rt: &Runtime,
+/// Token list + finished flag for a request right after (re-)admission.
+/// A request already at its budget — fully generated before a
+/// preemption, or `max_new == 0` — is finished *as-is*: the freshly
+/// decoded first token must NOT be appended (doing so used to emit
+/// `max_new + 1` tokens) and the lane must never grow the cache.
+pub fn resume_admit_state(
+    resumed: &[i32],
+    first_token: i32,
+    max_new: usize,
+) -> (Vec<i32>, bool) {
+    let mut tokens = resumed.to_vec();
+    if tokens.len() >= max_new {
+        return (tokens, true);
+    }
+    tokens.push(first_token);
+    let done = first_token == END as i32 || tokens.len() >= max_new;
+    (tokens, done)
+}
+
+/// Prefill (or reuse a carried prefill) and load the request's cache
+/// into the store. Public so tests can drive the real admission path
+/// with a stub policy and no PJRT runtime.
+pub fn admit(
+    ex: &dyn Exec,
     man: &Manifest,
-    policy: &dyn crate::coordinator::policies::Policy,
+    policy: &dyn Policy,
     cfg: &ServerConfig,
-    req: Request,
+    mut req: Request,
     store: &mut dyn KvStore,
+    metrics: &Metrics,
 ) -> std::result::Result<Active, AdmitFail> {
     if req.prompt.len() > cfg.max_prompt {
         return Err(AdmitFail::Reject(
@@ -514,32 +798,48 @@ fn admit(
             anyhow::anyhow!("prompt exceeds max_prompt {}", cfg.max_prompt),
         ));
     }
-    // Resume support: re-prefill the original prompt plus everything
-    // generated before the preemption.
-    let full_prompt: Vec<i32> = if req.resumed.is_empty() {
-        req.prompt.clone()
-    } else {
-        let mut p = req.prompt.clone();
-        p.extend_from_slice(&req.resumed);
-        p
+    let (pre, prefill_secs) = match req.pending.take() {
+        // Deferred admission: the prefill already ran — only the
+        // `store.admit` below is retried.
+        Some(p) => (p.outcome, p.prefill_secs),
+        None => {
+            if req.prefilled {
+                // Recompute-resume (or a deferral that lost its carried
+                // prefill — which the carry exists to prevent): this
+                // prefill is paid-for work being re-done.
+                metrics.inc(names::PREFILL_RECOMPUTED, 1);
+            }
+            // Recompute-resume re-prefills the original prompt plus
+            // everything generated before the preemption.
+            let full_prompt: Vec<i32> = if req.resumed.is_empty() {
+                req.prompt.clone()
+            } else {
+                let mut p = req.prompt.clone();
+                p.extend_from_slice(&req.resumed);
+                p
+            };
+            let t0 = Instant::now();
+            let pre =
+                match policy.prefill(ex, man, &full_prompt, &cfg.policy_cfg) {
+                    Ok(p) => p,
+                    Err(e) => return Err(AdmitFail::Reject(req, e)),
+                };
+            req.prefilled = true;
+            (pre, t0.elapsed().as_secs_f64())
+        }
     };
-    let t0 = Instant::now();
-    let pre = match policy.prefill(rt, man, &full_prompt, &cfg.policy_cfg) {
-        Ok(p) => p,
-        Err(e) => return Err(AdmitFail::Reject(req, e)),
-    };
-    let prefill_secs = t0.elapsed().as_secs_f64();
     let slot = match store.admit(&pre.cache) {
         Some(s) => s,
-        None => return Err(AdmitFail::Defer(req)),
+        None => {
+            req.pending = Some(PendingPrefill { outcome: pre, prefill_secs });
+            return Err(AdmitFail::Defer(req));
+        }
     };
     let ttft = req
         .first_ttft
         .unwrap_or_else(|| req.submitted.elapsed().as_secs_f64());
-    let mut tokens = req.resumed.clone();
-    tokens.push(pre.first_token);
-    let done =
-        pre.first_token == END as i32 || tokens.len() >= req.max_new;
+    let (tokens, done) =
+        resume_admit_state(&req.resumed, pre.first_token, req.max_new);
     Ok(Active {
         pos: pre.next_pos,
         cur: pre.first_token,
@@ -571,10 +871,25 @@ fn decode_step(
     Ok(out)
 }
 
-/// Whether a lane could resume after preemption: the re-prefill of
-/// prompt + generated tokens must fit the policy's prefill buckets, and
-/// the store must be able to take the regrown cache back even from a
-/// drained state (lane capacity AND total pool size).
+/// Core resumability test (public for the preemption edge-case tests):
+/// the re-prefill of `full_len = prompt + generated` tokens must fit the
+/// policy's prefill buckets, and the store must be able to take the
+/// regrown cache back even from a drained state (lane capacity AND total
+/// pool size). Deliberately judged on the *recompute* fallback even when
+/// swap is enabled — a swap handle can be dropped under host-memory
+/// pressure at any time, so a victim that could only resume via swap
+/// would risk ending in rejection.
+pub fn can_resume_parts(
+    full_len: usize,
+    len_limit: usize,
+    per_layer_budget: usize,
+    store: &dyn KvStore,
+) -> bool {
+    full_len <= len_limit && store.could_ever_admit(per_layer_budget)
+}
+
+/// Whether a lane could resume after preemption (see
+/// [`can_resume_parts`]).
 fn can_resume(
     cfg: &ServerConfig,
     man: &Manifest,
@@ -589,14 +904,19 @@ fn can_resume(
     );
     let len_limit =
         prefill_len_limit(man, &cfg.policy, cfg.policy_cfg.use_pallas);
-    full_len <= len_limit && store.could_ever_admit(budget)
+    can_resume_parts(full_len, len_limit, budget, store)
 }
 
-/// Preempt the lane at `idx`: release its blocks and park the request on
-/// the resume queue (generated tokens ride along and are re-prefilled as
-/// prompt context on re-admission). Order-preserving removal so the
-/// caller's scan index stays meaningful.
-fn preempt(
+/// Preempt the lane at `idx` and park its request on the resume queue.
+/// Fast path: the lane's FastKV-selected blocks are swapped to host and
+/// the [`SwapHandle`] + decode cursor ride with the request, so resume is
+/// a block restore — no policy re-run. Fallback (swap disabled or over
+/// budget): release the blocks and carry only the generated tokens for
+/// recompute-resume. A lane that already spent its token budget is
+/// finished on the spot instead of parked — re-admitting it could only
+/// emit tokens past `max_new`. Order-preserving removal so the caller's
+/// scan index stays meaningful.
+pub fn preempt(
     active: &mut Vec<Active>,
     idx: usize,
     store: &mut dyn KvStore,
@@ -604,12 +924,77 @@ fn preempt(
     metrics: &Metrics,
 ) {
     let a = active.remove(idx);
-    store.release(a.slot);
+    if a.tokens.len() >= a.req.max_new {
+        finish(a, store, metrics);
+        return;
+    }
     metrics.inc("preempted", 1);
-    let mut req = a.req;
-    req.resumed = a.tokens;
-    req.first_ttft = Some(a.ttft_secs);
+    let Active { mut req, slot, tokens, cur, pos, ttft_secs, .. } = a;
+    req.first_ttft = Some(ttft_secs);
+    req.resumed = tokens;
+    match store.swap_out(slot) {
+        Some(handle) => {
+            // Blocks are on host; the lane's pool blocks were released
+            // by `swap_out` itself.
+            metrics.inc(names::SWAP_OUTS, 1);
+            req.swap = Some(SwapResume { handle, cur, pos });
+        }
+        None => {
+            // Swap disabled or budget exhausted: recompute-resume.
+            store.release(slot);
+            metrics.inc(names::SWAP_REFUSED, 1);
+            req.swap = None;
+        }
+    }
     sched.requeue_front(req);
+}
+
+/// Attempted resume outcome for a request popped off the resume queue.
+pub enum Resume {
+    /// KV restored from the host swap arena; decode continues exactly
+    /// where it stopped with zero prefill work.
+    Restored(Active),
+    /// No swap entry to restore (never swapped, or the handle was
+    /// dropped under budget pressure): fall back to recompute-resume.
+    Recompute(Request),
+    /// Lane or pool momentarily full; retry after decode frees memory.
+    Busy(Request),
+}
+
+/// Swap-first resume: restore a preempted request's host-swapped KV if
+/// it has any, skipping the policy prefill entirely.
+pub fn try_resume(
+    mut req: Request,
+    store: &mut dyn KvStore,
+    metrics: &Metrics,
+) -> Resume {
+    let Some(sr) = req.swap else { return Resume::Recompute(req) };
+    match store.swap_in(sr.handle) {
+        SwapIn::Restored(slot) => {
+            metrics.inc(names::SWAP_INS, 1);
+            req.swap = None;
+            let tokens = std::mem::take(&mut req.resumed);
+            let ttft = req.first_ttft.unwrap_or(0.0);
+            // `done` is always false here: fully-generated lanes are
+            // finished at preemption time, never parked (see `preempt`).
+            Resume::Restored(Active {
+                slot,
+                tokens,
+                cur: sr.cur,
+                pos: sr.pos,
+                prefill_secs: 0.0,
+                ttft_secs: ttft,
+                done: false,
+                req,
+            })
+        }
+        SwapIn::Busy => Resume::Busy(req),
+        SwapIn::Gone => {
+            metrics.inc(names::SWAP_FALLBACK_RECOMPUTE, 1);
+            req.swap = None;
+            Resume::Recompute(req)
+        }
+    }
 }
 
 /// Apply one decode step's outputs through the shared lane stepper:
@@ -649,20 +1034,9 @@ fn apply_decode(
         loop {
             let spec_opt = if allow_compact { Some(&spec) } else { None };
             match advance_lane(store, slot, out, spec_opt) {
-                LaneAdvance::Next { token, ended } => {
-                    let a = &mut active[i];
-                    a.pos += 1;
-                    if ended {
-                        a.done = true;
-                    } else {
-                        a.cur = token;
-                        a.tokens.push(token);
-                    }
-                    i += 1;
-                    break;
-                }
-                LaneAdvance::CapacityStop => {
-                    active[i].done = true;
+                adv @ (LaneAdvance::Next { .. }
+                | LaneAdvance::CapacityStop) => {
+                    active[i].apply(adv);
                     i += 1;
                     break;
                 }

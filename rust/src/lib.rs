@@ -22,10 +22,14 @@
 //! [`coordinator::kvcache::BatchArena`] remains available as the
 //! comparison backend. The serving stack layers memory-aware admission
 //! (admit only when the pool covers the request's post-compression KV
-//! budget), preemption back to the queue on pool exhaustion (least
-//! progress first), and block-granular compaction driven by the policies'
-//! per-layer retention on top of this substrate; see
-//! `rust/src/coordinator/paging/README.md` for the design.
+//! budget), block-granular compaction driven by the policies' per-layer
+//! retention, and preemption with **swap-to-host resume** on top of this
+//! substrate: a preempted lane's FastKV-selected blocks are serialized
+//! to a byte-budgeted host arena ([`coordinator::paging::swap`]) and
+//! restored on resume — no re-prefill, no policy re-run — falling back
+//! to recompute-resume only when the swap budget refuses the lane or
+//! drops its entry. See `rust/src/coordinator/paging/README.md` for the
+//! design.
 //!
 //! # Block-table-native decode
 //!
@@ -61,6 +65,7 @@ pub use coordinator::decode::{DecodeBatch, DecodePath};
 pub use coordinator::engine::{generate, GenResult, GenStats};
 pub use coordinator::paging::{
     AppendResult, DecodeView, KvStore, PagedArena, PagingConfig, PoolStats,
+    SwapHandle, SwapIn, SwapStats,
 };
 pub use coordinator::policies::{
     make_policy, Policy, PolicyCfg, ALL_POLICIES,

@@ -67,6 +67,7 @@ fn print_help() {
          \x20 serve    [--policy fastkv] [--requests 16] [--rate 4] [--trace poisson|bursty]\n\
          \x20          [--flat] [--pool-blocks N] [--block-tokens 16] [--no-prefix-cache]\n\
          \x20          [--dense-staging]  (fallback: staged decode bridge instead of block tables)\n\
+         \x20          [--swap-mb M]  (host swap budget for preempted lanes; 0 = recompute-resume)\n\
          \x20 overhead [--lens 256,512,1024]\n\
          \x20 info\n\
          \n\
@@ -733,6 +734,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         pc.prefix_cache = !args.has("no-prefix-cache");
         pc.dense_staging = args.has("dense-staging");
+        // --swap-mb M: host swap budget for preempted lanes (0 disables
+        // swap-to-host; preemption then recompute-resumes).
+        pc.swap_bytes = args.usize("swap-mb", pc.swap_bytes >> 20) << 20;
         Some(pc)
     };
     let cfg = ServerConfig {

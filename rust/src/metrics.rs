@@ -5,6 +5,37 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
+/// Metric names shared across the serving stack so producers (server),
+/// consumers (benches, demos), and assertions (tests) can never drift
+/// apart on spelling.
+pub mod names {
+    /// Policy prefills re-run for a request that already completed one —
+    /// recompute-resume after a lost swap handle, or a deferred admission
+    /// that somehow dropped its carried prefill. The swap-to-host and
+    /// carried-prefill paths exist precisely to keep this at zero; tests
+    /// pin it there.
+    pub const PREFILL_RECOMPUTED: &str = "prefill_recomputed";
+    /// Preempted lanes serialized to the host swap arena.
+    pub const SWAP_OUTS: &str = "swap_outs";
+    /// Lanes restored from the swap arena (zero-prefill resume).
+    pub const SWAP_INS: &str = "swap_ins";
+    /// Preemptions that could not swap (disabled, or the lane alone
+    /// exceeds the budget) and fell back to recompute-resume.
+    pub const SWAP_REFUSED: &str = "swap_out_refused";
+    /// Resumes whose handle was gone (dropped under host-memory
+    /// pressure) and fell back to recompute-resume.
+    pub const SWAP_FALLBACK_RECOMPUTE: &str = "swap_fallback_recompute";
+    /// Gauge: host bytes currently held by swapped lanes.
+    pub const SWAP_BYTES_USED: &str = "swap_bytes_used";
+    /// Gauge: configured swap budget in bytes.
+    pub const SWAP_BYTES_BUDGET: &str = "swap_bytes_budget";
+    /// Gauge: swapped lanes currently parked on host.
+    pub const SWAP_ENTRIES: &str = "swap_entries";
+    /// Gauge: entries evicted oldest-first to make room for newer
+    /// swap-outs (their owners recompute-resume).
+    pub const SWAP_DROPPED: &str = "swap_entries_dropped";
+}
+
 /// Log-bucketed latency histogram (microsecond resolution).
 #[derive(Debug, Clone, Default)]
 pub struct Histogram {

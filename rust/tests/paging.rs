@@ -10,8 +10,9 @@
 //! compactions, and preemption/resume.
 
 use fastkv::coordinator::kvcache::{BatchArena, RequestCache};
+use fastkv::coordinator::paging::allocator::BlockAllocator;
 use fastkv::coordinator::paging::{
-    AppendResult, KvStore, PagedArena, PagingConfig,
+    AppendResult, KvStore, PagedArena, PagingConfig, SwapIn,
 };
 use fastkv::coordinator::scheduler::{Action, AdmitOrder, Scheduler};
 use fastkv::manifest::ModelMeta;
@@ -590,6 +591,7 @@ fn prop_block_table_decode_matches_staged_decode() {
             num_blocks: pool,
             prefix_cache: false,
             dense_staging: dense,
+            ..Default::default()
         };
         let mut via_view = PagedArena::new(&m, lanes, c, mk(false));
         let mut via_stage = PagedArena::new(&m, lanes, c, mk(true));
@@ -740,4 +742,784 @@ fn prop_block_table_decode_matches_staged_decode() {
         let produced: usize = streams.iter().map(|s| s.len()).sum();
         assert!(produced > 0, "seed {seed}: nothing generated");
     }
+}
+
+// ------------------------------------------------------------ swap-to-host
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use fastkv::coordinator::decode::{advance_lane, LaneAdvance};
+use fastkv::coordinator::policies::{Exec, Policy, PolicyCfg, PrefillOutcome};
+use fastkv::coordinator::server::{
+    admit, can_resume_parts, preempt, resume_admit_state, try_resume, Active,
+    AdmitFail, Request, Resume, ServerConfig,
+};
+use fastkv::manifest::{Buckets, Manifest};
+use fastkv::metrics::{names, Metrics};
+use fastkv::runtime::outputs::DecodeOut;
+use fastkv::tokenizer::END;
+
+/// All KV rows of a lane read through the block-table view, one
+/// `K ++ V` vector per layer — slot-independent, so lanes can be
+/// compared across stores that placed them differently.
+fn lane_rows(pa: &PagedArena, slot: usize, layers: usize) -> Vec<Vec<f32>> {
+    let v = pa.view();
+    (0..layers)
+        .map(|l| {
+            let mut out = Vec::new();
+            for row in 0..v.len(l, slot) {
+                out.extend_from_slice(v.k_row(l, slot, row));
+            }
+            for row in 0..v.len(l, slot) {
+                out.extend_from_slice(v.v_row(l, slot, row));
+            }
+            out
+        })
+        .collect()
+}
+
+#[test]
+fn prop_swap_roundtrip_preserves_selected_kv_across_churn() {
+    // The tentpole invariant: a swapped-out lane — including decode
+    // appends and FastKV compactions that recompute-resume could never
+    // reproduce — restores bit-identically after arbitrary churn on the
+    // rest of the pool (appends, admissions, releases, compactions).
+    for (seed, mut rng) in cases(60) {
+        let m = meta(&mut rng);
+        let bt = rng.range(2, 4);
+        let lanes = 3;
+        let c = rng.range(8, 16);
+        let cfg = PagingConfig {
+            block_tokens: bt,
+            num_blocks: None,
+            prefix_cache: rng.chance(0.5),
+            swap_bytes: 64 << 20,
+            ..Default::default()
+        };
+        let mut pa = PagedArena::new(&m, lanes, c, cfg);
+        let rc = rand_cache(&mut rng, &m, c.min(8), seed as f64 + 0.25);
+        let victim = KvStore::admit(&mut pa, &rc).unwrap();
+        let mut others: Vec<usize> = Vec::new();
+        if rng.chance(0.7) {
+            let orc = rand_cache(&mut rng, &m, c.min(6), seed as f64 + 0.5);
+            others.push(KvStore::admit(&mut pa, &orc).unwrap());
+        }
+        for _ in 0..rng.range(0, 4) {
+            let step = rand_step(&mut rng, &m, lanes);
+            let _ = KvStore::append(&mut pa, victim, &step, &step);
+        }
+        if rng.chance(0.5) {
+            // Compact the victim first: the swapped entry must preserve
+            // the *compacted* selection — exactly the state a re-run
+            // policy prefill would not reproduce.
+            let lens = KvStore::layer_lens(&pa, victim);
+            let keep: Vec<Vec<usize>> = lens
+                .iter()
+                .map(|&n| {
+                    let k = rng.range(1, n.max(1));
+                    rng.distinct_sorted(k.min(n), n)
+                })
+                .collect();
+            KvStore::compact(&mut pa, victim, &keep);
+        }
+        let expect_lens = KvStore::layer_lens(&pa, victim);
+        let expect = lane_rows(&pa, victim, m.n_layers);
+        let total = pa.pool_stats().blocks_total;
+
+        let h = pa.swap_out(victim).expect("budget covers one lane");
+
+        for step_i in 0..rng.range(0, 8) {
+            match rng.below(3) {
+                0 => {
+                    let step = rand_step(&mut rng, &m, lanes);
+                    for &s in &others {
+                        let _ = KvStore::append(&mut pa, s, &step, &step);
+                    }
+                }
+                1 => {
+                    let rc2 = rand_cache(
+                        &mut rng,
+                        &m,
+                        c.min(6),
+                        seed as f64 + 10.0 + step_i as f64,
+                    );
+                    if let Some(s) = KvStore::admit(&mut pa, &rc2) {
+                        if rng.chance(0.6) {
+                            pa.release(s);
+                        } else {
+                            others.push(s);
+                        }
+                    }
+                }
+                _ => {
+                    if let Some(&s) = others.first() {
+                        let lens = KvStore::layer_lens(&pa, s);
+                        let keep: Vec<Vec<usize>> = lens
+                            .iter()
+                            .map(|&n| (0..(n + 1) / 2).collect())
+                            .collect();
+                        KvStore::compact(&mut pa, s, &keep);
+                    }
+                }
+            }
+            let ps = pa.pool_stats();
+            assert_eq!(
+                ps.blocks_in_use + ps.blocks_cached + ps.blocks_free,
+                total,
+                "seed {seed}: accounting while lane parked"
+            );
+        }
+
+        let mut res = pa.swap_in(h);
+        while res == SwapIn::Busy {
+            // churn filled every lane: free one and retry (the serving
+            // loop would wait for decode to retire one instead)
+            let s = others.pop().unwrap_or_else(|| {
+                panic!("seed {seed}: swap-in busy with no lane to free")
+            });
+            pa.release(s);
+            res = pa.swap_in(h);
+        }
+        let slot = match res {
+            SwapIn::Restored(s) => s,
+            other => panic!("seed {seed}: expected restore, got {other:?}"),
+        };
+        assert_eq!(
+            KvStore::layer_lens(&pa, slot),
+            expect_lens,
+            "seed {seed}: restored lens"
+        );
+        assert_eq!(
+            lane_rows(&pa, slot, m.n_layers),
+            expect,
+            "seed {seed}: swapped-in KV differs from the pre-preemption \
+             selection"
+        );
+        let ps = pa.pool_stats();
+        assert_eq!(
+            ps.blocks_in_use + ps.blocks_cached + ps.blocks_free,
+            total,
+            "seed {seed}: accounting after restore"
+        );
+        assert_eq!(
+            pa.swap_stats().used_bytes,
+            0,
+            "seed {seed}: entry bytes freed on restore"
+        );
+    }
+}
+
+#[test]
+fn swap_budget_drop_oldest_forces_recompute_fallback() {
+    // Budget fits one swapped lane (plus slack): the second swap-out
+    // drops the first entry, whose owner must then recompute-resume.
+    let m = sim_meta();
+    let re = m.n_kv_heads * m.head_dim;
+    let len = 4usize;
+    let bytes_one = m.n_layers * len * re * 2 * std::mem::size_of::<f32>();
+    let cfg = PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes: bytes_one + bytes_one / 2,
+        ..Default::default()
+    };
+    let mut pa = PagedArena::new(&m, 2, 16, cfg);
+    let mk_cache = |tag: f32| {
+        let mut rc = RequestCache::new(&m);
+        for l in 0..m.n_layers {
+            rc.k[l] = (0..len * re).map(|i| tag + i as f32).collect();
+            rc.v[l] = (0..len * re).map(|i| -(tag + i as f32)).collect();
+            rc.lens[l] = len;
+        }
+        rc
+    };
+    let s0 = KvStore::admit(&mut pa, &mk_cache(100.0)).unwrap();
+    let s1 = KvStore::admit(&mut pa, &mk_cache(200.0)).unwrap();
+    let h0 = pa.swap_out(s0).unwrap();
+    let h1 = pa.swap_out(s1).unwrap();
+    assert!(!pa.swap_contains(h0), "oldest entry dropped under pressure");
+    assert!(pa.swap_contains(h1));
+    assert_eq!(pa.swap_stats().dropped, 1);
+    assert_eq!(pa.swap_in(h0), SwapIn::Gone, "dropped handle is gone");
+    match pa.swap_in(h1) {
+        SwapIn::Restored(s) => assert_eq!(KvStore::layer_lens(&pa, s), vec![len; m.n_layers]),
+        other => panic!("expected restore, got {other:?}"),
+    }
+}
+
+// ------------------------------------------- server-level swap machinery
+
+fn sim_meta() -> ModelMeta {
+    ModelMeta {
+        vocab_size: 256,
+        d_model: 8,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 2,
+        head_dim: 2,
+        tsp_layer: 1,
+        window: 2,
+        pool_kernel: 3,
+        max_train_len: 64,
+    }
+}
+
+fn sim_manifest(prefill_limit: usize) -> Manifest {
+    Manifest {
+        dir: std::path::PathBuf::from("/tmp"),
+        model: sim_meta(),
+        n_params: 1,
+        kernel: "jnp".into(),
+        buckets: Buckets {
+            prefill_ns: vec![prefill_limit],
+            stage1_ns: vec![prefill_limit],
+            stage2_ns: vec![prefill_limit],
+            pyramid_ns: vec![prefill_limit],
+            decode_batches: vec![1, 2, 4],
+            decode_caps: vec![64],
+            sweep_n: 64,
+            sweep_nt: 16,
+            pallas_n: prefill_limit,
+            max_gen: 16,
+            block_tokens: 2,
+        },
+        artifacts: BTreeMap::new(),
+    }
+}
+
+fn sim_server_cfg(max_prompt: usize, max_new: usize) -> ServerConfig {
+    ServerConfig {
+        artifact_dir: std::path::PathBuf::from("/tmp"),
+        policy: "full".into(),
+        policy_cfg: PolicyCfg {
+            kv_rate: 1.0,
+            tsp_rate: 1.0,
+            sinks: 1,
+            filter_layer: 0,
+            use_pallas: false,
+        },
+        decode_batch: 4,
+        max_new,
+        max_prompt,
+        order: AdmitOrder::Fcfs,
+        paging: Some(PagingConfig::default()),
+    }
+}
+
+/// Executor stub: the sim policy never runs artifacts.
+struct NoExec;
+
+impl Exec for NoExec {
+    fn run(
+        &self,
+        _name: &str,
+        _inputs: Vec<fastkv::runtime::In>,
+    ) -> anyhow::Result<Vec<HostTensor>> {
+        anyhow::bail!("tests never execute artifacts")
+    }
+}
+
+/// Deterministic KV row for (layer, position, token) — the "model" both
+/// the sim policy's prefill and the sim decode loop share, so
+/// recompute-resume rebuilds bit-identical KV and any swap bug surfaces
+/// as a diverging stream.
+fn sim_kv_row(l: usize, pos: usize, token: i32, re: usize) -> Vec<f32> {
+    (0..re)
+        .map(|i| {
+            (l as f32) * 1000.0
+                + (pos as f32) * 10.0
+                + (token as f32) * 0.125
+                + (i as f32) * 0.0625
+        })
+        .collect()
+}
+
+/// Deterministic next token from the full sequence (never END).
+fn sim_next_token(seq: &[i32]) -> i32 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &t in seq {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    4 + (h % 200) as i32
+}
+
+/// Stand-in policy: prefill of a sequence produces exactly the KV rows
+/// the sim decode loop would have appended for it, counts every call,
+/// and can be told to emit END once the sequence reaches `end_after`.
+struct SimPolicy {
+    calls: AtomicUsize,
+    end_after: usize,
+}
+
+impl SimPolicy {
+    fn new() -> Self {
+        SimPolicy { calls: AtomicUsize::new(0), end_after: usize::MAX }
+    }
+
+    fn calls(&self) -> usize {
+        self.calls.load(Ordering::Relaxed)
+    }
+}
+
+impl Policy for SimPolicy {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn prefill(
+        &self,
+        _ex: &dyn Exec,
+        man: &Manifest,
+        tokens: &[i32],
+        _cfg: &PolicyCfg,
+    ) -> anyhow::Result<PrefillOutcome> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let m = &man.model;
+        let re = m.n_kv_heads * m.head_dim;
+        let mut cache = RequestCache::new(m);
+        for l in 0..m.n_layers {
+            let mut k = Vec::with_capacity(tokens.len() * re);
+            for (pos, &t) in tokens.iter().enumerate() {
+                k.extend_from_slice(&sim_kv_row(l, pos, t, re));
+            }
+            cache.v[l] = k.iter().map(|x| -x).collect();
+            cache.k[l] = k;
+            cache.lens[l] = tokens.len();
+        }
+        let first_token = if tokens.len() >= self.end_after {
+            END as i32
+        } else {
+            sim_next_token(tokens)
+        };
+        Ok(PrefillOutcome {
+            first_token,
+            cache,
+            next_pos: tokens.len(),
+            final_h: Vec::new(),
+            compute_tokens: tokens.len() * m.n_layers,
+        })
+    }
+}
+
+/// One synthetic decode round over the active lanes, through the real
+/// `advance_lane` + `Active::apply` machinery.
+fn sim_decode_round(
+    pa: &mut PagedArena,
+    active: &mut [Active],
+    prompts: &HashMap<u64, Vec<i32>>,
+) {
+    let m = sim_meta();
+    let re = m.n_kv_heads * m.head_dim;
+    let b = KvStore::slots(pa);
+    for a in active.iter_mut() {
+        if a.is_done() {
+            continue;
+        }
+        let mut k_new = HostTensor::zeros(vec![
+            m.n_layers,
+            b,
+            m.n_kv_heads,
+            m.head_dim,
+        ]);
+        let mut v_new = k_new.clone();
+        for l in 0..m.n_layers {
+            let row = sim_kv_row(l, a.pos(), a.cur(), re);
+            let base = (l * b + a.slot()) * re;
+            k_new.data[base..base + re].copy_from_slice(&row);
+            for (i, x) in row.iter().enumerate() {
+                v_new.data[base + i] = -x;
+            }
+        }
+        let mut seq = prompts[&a.request_id()].clone();
+        seq.extend_from_slice(a.tokens());
+        let next = sim_next_token(&seq);
+        let mut logits = HostTensor::zeros(vec![b, m.vocab_size]);
+        logits.data[a.slot() * m.vocab_size + next as usize] = 1.0;
+        let out = DecodeOut { logits, k_new, v_new };
+        let adv = advance_lane(pa, a.slot(), &out, None);
+        assert!(
+            matches!(adv, LaneAdvance::Next { .. }),
+            "sim decode hit {adv:?}"
+        );
+        a.apply(adv);
+    }
+}
+
+struct StackResult {
+    streams: HashMap<u64, Vec<i32>>,
+    final_rows: HashMap<u64, Vec<Vec<f32>>>,
+    policy_calls: usize,
+    metrics: Metrics,
+}
+
+/// Drive a full serve-shaped lifecycle — admit, decode, preempt at a
+/// token-progress trigger, resume, retire — through the real server
+/// functions, with swap enabled (`swap_bytes > 0`) or recompute-only.
+fn run_stack(
+    swap_bytes: usize,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    preempt_at: usize,
+) -> StackResult {
+    let m = sim_meta();
+    let man = sim_manifest(64);
+    let policy = SimPolicy::new();
+    let metrics = Metrics::default();
+    let cfg = sim_server_cfg(32, max_new);
+    let lanes = prompts.len();
+    let pcfg = PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes,
+        ..Default::default()
+    };
+    let mut pa = PagedArena::new(&m, lanes, 64, pcfg);
+    let mut sched: Scheduler<Request> = Scheduler::new(lanes, AdmitOrder::Fcfs);
+    let mut prompt_map: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut rxs = Vec::new(); // kept alive; this driver retires lanes itself
+    for (i, p) in prompts.iter().enumerate() {
+        let (req, rx) = Request::synthetic(i as u64, p.clone(), max_new);
+        rxs.push(rx);
+        prompt_map.insert(i as u64, p.clone());
+        sched.enqueue(req);
+    }
+    let mut active: Vec<Active> = Vec::new();
+    let mut preempted_once = vec![false; prompts.len()];
+    let mut streams: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut final_rows: HashMap<u64, Vec<Vec<f32>>> = HashMap::new();
+    let mut guard = 0;
+    while streams.len() < prompts.len() {
+        guard += 1;
+        assert!(guard < 1_000, "sim serve loop livelocked");
+        // admission / resume phase
+        while sched.queue_len() > 0 {
+            let req = sched.pop_next(|r| r.prompt.len()).unwrap();
+            match try_resume(req, &mut pa, &metrics) {
+                Resume::Restored(a) => {
+                    assert!(
+                        swap_bytes > 0,
+                        "swap-disabled stack must never restore"
+                    );
+                    active.push(a);
+                }
+                Resume::Busy(_) => {
+                    panic!("worst-case pool reported swap-in busy")
+                }
+                Resume::Recompute(req) => {
+                    match admit(&NoExec, &man, &policy, &cfg, req, &mut pa, &metrics)
+                    {
+                        Ok(a) => {
+                            if a.is_done() {
+                                final_rows.insert(
+                                    a.request_id(),
+                                    lane_rows(&pa, a.slot(), m.n_layers),
+                                );
+                                streams
+                                    .insert(a.request_id(), a.tokens().to_vec());
+                                pa.release(a.slot());
+                            } else {
+                                active.push(a);
+                            }
+                        }
+                        Err(_) => panic!("worst-case pool refused admission"),
+                    }
+                }
+            }
+        }
+        sim_decode_round(&mut pa, &mut active, &prompt_map);
+        // retire before the preemption triggers so a just-finished lane
+        // is never preempted (the real loop's retire pass does the same)
+        let mut j = 0;
+        while j < active.len() {
+            if active[j].is_done() || active[j].tokens().len() >= max_new {
+                let a = active.remove(j);
+                final_rows
+                    .insert(a.request_id(), lane_rows(&pa, a.slot(), m.n_layers));
+                streams.insert(a.request_id(), a.tokens().to_vec());
+                pa.release(a.slot());
+            } else {
+                j += 1;
+            }
+        }
+        // token-progress preemption trigger: fires at the same point in
+        // every stack, once per request
+        let mut j = 0;
+        while j < active.len() {
+            let id = active[j].request_id() as usize;
+            if !preempted_once[id] && active[j].tokens().len() >= preempt_at {
+                preempted_once[id] = true;
+                preempt(&mut active, j, &mut pa, &mut sched, &metrics);
+            } else {
+                j += 1;
+            }
+        }
+    }
+    StackResult {
+        streams,
+        final_rows,
+        policy_calls: policy.calls(),
+        metrics,
+    }
+}
+
+#[test]
+fn swapped_resume_matches_recompute_resume_end_to_end() {
+    // The differential oracle of the acceptance criteria: the swap stack
+    // and the recompute stack must produce identical token streams and
+    // identical final KV per request — while the swap stack performs
+    // ZERO policy prefill calls on resume.
+    let prompts: Vec<Vec<i32>> =
+        vec![vec![10, 11, 12], vec![20, 21, 22, 23], vec![30, 31]];
+    let max_new = 5;
+    let n = prompts.len();
+    let swapped = run_stack(128 << 20, &prompts, max_new, 2);
+    let recompute = run_stack(0, &prompts, max_new, 2);
+    for id in 0..n as u64 {
+        assert_eq!(
+            swapped.streams[&id], recompute.streams[&id],
+            "token stream diverged for request {id}"
+        );
+        assert_eq!(swapped.streams[&id].len(), max_new);
+        assert_eq!(
+            swapped.final_rows[&id], recompute.final_rows[&id],
+            "final KV diverged for request {id}"
+        );
+    }
+    // prefill accounting: swap resumes are free, recompute pays again
+    assert_eq!(
+        swapped.policy_calls, n,
+        "swap path must not prefill on resume"
+    );
+    assert_eq!(
+        recompute.policy_calls,
+        2 * n,
+        "recompute path re-prefills every preempted request"
+    );
+    assert_eq!(swapped.metrics.counter(names::PREFILL_RECOMPUTED), 0);
+    assert_eq!(
+        recompute.metrics.counter(names::PREFILL_RECOMPUTED),
+        n as u64
+    );
+    assert_eq!(swapped.metrics.counter(names::SWAP_OUTS), n as u64);
+    assert_eq!(swapped.metrics.counter(names::SWAP_INS), n as u64);
+    assert_eq!(swapped.metrics.counter("preempted"), n as u64);
+    assert_eq!(recompute.metrics.counter(names::SWAP_REFUSED), n as u64);
+}
+
+#[test]
+fn deferred_admission_carries_prefill_and_never_recomputes() {
+    let m = sim_meta();
+    let man = sim_manifest(64);
+    let policy = SimPolicy::new();
+    let metrics = Metrics::default();
+    let cfg = sim_server_cfg(32, 4);
+    let pcfg = PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes: 0,
+        ..Default::default()
+    };
+    // a single lane, so the second admission must defer
+    let mut pa = PagedArena::new(&m, 1, 32, pcfg);
+    let (r0, _rx0) = Request::synthetic(0, vec![5, 6, 7], 4);
+    let a0 = match admit(&NoExec, &man, &policy, &cfg, r0, &mut pa, &metrics) {
+        Ok(a) => a,
+        Err(_) => panic!("first admission must succeed"),
+    };
+    assert_eq!(policy.calls(), 1);
+    let (r1, _rx1) = Request::synthetic(1, vec![8, 9], 4);
+    let deferred =
+        match admit(&NoExec, &man, &policy, &cfg, r1, &mut pa, &metrics) {
+            Err(AdmitFail::Defer(r)) => r,
+            _ => panic!("expected deferral with no free lane"),
+        };
+    assert_eq!(policy.calls(), 2, "deferral happens after the prefill");
+    // a retry while the pool is still full must re-attempt admission
+    // only, not the prefill
+    let deferred =
+        match admit(&NoExec, &man, &policy, &cfg, deferred, &mut pa, &metrics) {
+            Err(AdmitFail::Defer(r)) => r,
+            _ => panic!("still no free lane"),
+        };
+    assert_eq!(policy.calls(), 2, "deferral retry re-ran the prefill");
+    // the lane frees; the carried prefill admits without policy work
+    pa.release(a0.slot());
+    let a1 =
+        match admit(&NoExec, &man, &policy, &cfg, deferred, &mut pa, &metrics) {
+            Ok(a) => a,
+            _ => panic!("admission must succeed with a free lane"),
+        };
+    assert_eq!(policy.calls(), 2, "carried prefill was recomputed");
+    assert_eq!(
+        metrics.counter(names::PREFILL_RECOMPUTED),
+        0,
+        "double-prefill-per-deferral regression"
+    );
+    assert_eq!(a1.tokens().len(), 1);
+}
+
+#[test]
+fn resume_admit_edge_cases() {
+    // END as the first token of a resumed request: finished, END recorded
+    let (toks, done) = resume_admit_state(&[7, 8], END as i32, 10);
+    assert!(done);
+    assert_eq!(toks, vec![7, 8, END as i32]);
+    // resume landing exactly at max_new: no extra token may be emitted
+    let (toks, done) = resume_admit_state(&[4, 5, 6], 9, 3);
+    assert!(done);
+    assert_eq!(toks, vec![4, 5, 6], "resumed request emitted past max_new");
+    // max_new == 0: nothing generated (and no cache growth implied, which
+    // is what lets `can_admit` reserve zero headroom for it)
+    let (toks, done) = resume_admit_state(&[], 9, 0);
+    assert!(done);
+    assert!(toks.is_empty());
+    // normal continuation
+    let (toks, done) = resume_admit_state(&[4], 9, 3);
+    assert!(!done);
+    assert_eq!(toks, vec![4, 9]);
+}
+
+#[test]
+fn preempting_fully_generated_lane_finishes_without_extra_token() {
+    let m = sim_meta();
+    let man = sim_manifest(64);
+    let policy = SimPolicy::new();
+    let metrics = Metrics::default();
+    let max_new = 3;
+    let cfg = sim_server_cfg(32, max_new);
+    let pcfg = PagingConfig { block_tokens: 2, ..Default::default() };
+    let mut pa = PagedArena::new(&m, 1, 32, pcfg);
+    let prompts: HashMap<u64, Vec<i32>> =
+        [(0u64, vec![5, 6, 7])].into_iter().collect();
+    let (req, rx) = Request::synthetic(0, vec![5, 6, 7], max_new);
+    let a = match admit(&NoExec, &man, &policy, &cfg, req, &mut pa, &metrics) {
+        Ok(a) => a,
+        Err(_) => panic!("admit"),
+    };
+    let mut active = vec![a];
+    // decode until the token budget is spent but the lane has not been
+    // retired yet (the window where the old code double-charged)
+    while active[0].tokens().len() < max_new {
+        sim_decode_round(&mut pa, &mut active, &prompts);
+    }
+    let mut sched: Scheduler<Request> = Scheduler::new(1, AdmitOrder::Fcfs);
+    preempt(&mut active, 0, &mut pa, &mut sched, &metrics);
+    assert!(active.is_empty());
+    assert_eq!(
+        sched.queue_len(),
+        0,
+        "fully generated lane must not be parked for resume"
+    );
+    let resp = rx.try_recv().expect("finished response");
+    assert!(resp.error.is_none());
+    assert_eq!(
+        resp.tokens.len(),
+        max_new,
+        "extra token emitted past max_new"
+    );
+    assert_eq!(pa.pool_stats().blocks_in_use, 0, "lane released");
+    assert_eq!(metrics.counter("preempted"), 0, "finish, not preemption");
+    assert_eq!(policy.calls(), 1, "no resume prefill for a finished lane");
+}
+
+#[test]
+fn end_as_first_resumed_token_finishes_at_admission() {
+    let m = sim_meta();
+    let man = sim_manifest(64);
+    // emit END once the re-prefilled sequence reaches 5 tokens
+    let policy = SimPolicy { calls: AtomicUsize::new(0), end_after: 5 };
+    let metrics = Metrics::default();
+    let cfg = sim_server_cfg(32, 8);
+    let pcfg = PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes: 0, // force the recompute-resume path
+        ..Default::default()
+    };
+    let mut pa = PagedArena::new(&m, 1, 32, pcfg);
+    let prompts: HashMap<u64, Vec<i32>> =
+        [(0u64, vec![5, 6, 7])].into_iter().collect();
+    let (req, _rx) = Request::synthetic(0, vec![5, 6, 7], 8);
+    let a = match admit(&NoExec, &man, &policy, &cfg, req, &mut pa, &metrics) {
+        Ok(a) => a,
+        Err(_) => panic!("admit"),
+    };
+    let mut active = vec![a];
+    sim_decode_round(&mut pa, &mut active, &prompts); // 2 tokens now
+    let mut sched: Scheduler<Request> = Scheduler::new(1, AdmitOrder::Fcfs);
+    preempt(&mut active, 0, &mut pa, &mut sched, &metrics);
+    assert_eq!(metrics.counter(names::SWAP_REFUSED), 1, "swap disabled");
+    let req = sched.pop_next(|r| r.prompt.len()).unwrap();
+    let req = match try_resume(req, &mut pa, &metrics) {
+        Resume::Recompute(r) => r,
+        _ => panic!("no swap entry to restore"),
+    };
+    // re-prefill sees 3 prompt + 2 generated = 5 tokens -> END
+    let a = match admit(&NoExec, &man, &policy, &cfg, req, &mut pa, &metrics) {
+        Ok(a) => a,
+        Err(_) => panic!("resume admission"),
+    };
+    assert!(a.is_done(), "END on resume must finish at admission");
+    assert_eq!(*a.tokens().last().unwrap(), END as i32);
+    assert_eq!(a.tokens().len(), 3, "2 resumed tokens + END");
+    assert_eq!(metrics.counter(names::PREFILL_RECOMPUTED), 1);
+}
+
+#[test]
+fn can_resume_skips_lanes_beyond_prefill_limit_or_pool() {
+    let m = sim_meta();
+    let pcfg = PagingConfig {
+        block_tokens: 2,
+        num_blocks: Some(8),
+        ..Default::default()
+    };
+    let pa = PagedArena::new(&m, 1, 8, pcfg);
+    // within the prefill bucket and pool: a valid victim
+    assert!(can_resume_parts(10, 16, 4, &pa));
+    // re-prefill would exceed the prefill bucket: never preempt this lane
+    assert!(!can_resume_parts(17, 16, 4, &pa));
+    // per-layer budget beyond lane capacity: could never re-admit
+    assert!(!can_resume_parts(10, 16, 9, &pa));
+    // budget that fits the lane but not the whole pool even when drained
+    assert!(!can_resume_parts(10, 16, 7, &pa));
+}
+
+#[test]
+fn evictable_queue_bounded_under_prefix_churn() {
+    // Regression for the unbounded-stale-entries bug: a churny
+    // prefix-hit workload (park + revive over and over) must keep the
+    // allocator's evictable queue at or below one entry per block.
+    let mut a = BlockAllocator::new(8, 4, 2);
+    let ids: Vec<_> = (0..4)
+        .map(|i| {
+            let b = a.alloc().unwrap().id;
+            a.seal(b, 100 + i);
+            b
+        })
+        .collect();
+    for round in 0..200 {
+        for &b in &ids {
+            a.decref(b);
+        }
+        for &b in &ids {
+            assert!(a.revive(b), "round {round}");
+        }
+        assert!(
+            a.evictable_len() <= a.blocks_total(),
+            "round {round}: queue grew to {} entries for {} blocks",
+            a.evictable_len(),
+            a.blocks_total()
+        );
+    }
+    // the sweep drops the (now all stale) survivors outright
+    a.sweep_stale();
+    assert_eq!(a.evictable_len(), 0);
+    // and normal park/evict still works afterwards
+    for &b in &ids {
+        a.decref(b);
+    }
+    assert_eq!(a.evictable_len(), 4);
+    assert_eq!(a.blocks_cached(), 4);
 }
