@@ -4,6 +4,14 @@
 //!
 //! Run:  cargo run --release --example serve_demo -- [--clients 8]
 //!       [--len 256] [--policy fastkv] [--batch 4]
+//!
+//! Multi-tenant contention: `--tenants T --quota-blocks R` serves a
+//! *weighted* workload — tenant 0 submits half the clients (the heavy
+//! tenant), the rest round-robin across tenants 1..T — with every tenant
+//! guaranteed a reserved floor of R pool blocks. Pair with
+//! `--pool-blocks` to make the pool tight enough that the quota matters;
+//! per-tenant completions / preemptions / block charges are reported at
+//! the end.
 
 use anyhow::Result;
 use fastkv::coordinator::policies::PolicyCfg;
@@ -14,6 +22,7 @@ use fastkv::tokenizer::Tokenizer;
 use fastkv::util::cli::Args;
 use fastkv::util::rng::Rng;
 use fastkv::workload;
+use fastkv::{TenantId, TenantQuota};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -37,6 +46,15 @@ fn main() -> Result<()> {
     // Host swap budget for preempted lanes (MiB); 0 = recompute-resume.
     paging.swap_bytes =
         args.usize("swap-mb", paging.swap_bytes >> 20) << 20;
+    // --tenants T + --quota-blocks R: reserved floor of R blocks per
+    // tenant (quotas only engage when both are set).
+    let tenants = args.usize("tenants", 1).max(1);
+    let quota_blocks = args.usize("quota-blocks", 0);
+    if tenants > 1 && quota_blocks > 0 {
+        paging.tenant_quotas = (0..tenants as u32)
+            .map(|t| (TenantId(t), TenantQuota::reserved(quota_blocks)))
+            .collect();
+    }
     let cfg = ServerConfig {
         artifact_dir: dir,
         policy: policy.clone(),
@@ -54,13 +72,24 @@ fn main() -> Result<()> {
 
     let t0 = std::time::Instant::now();
     // Submit all requests up front (closed-loop offered load), then join.
+    // Weighted tenant assignment: tenant 0 (heavy) submits half the
+    // clients, the rest round-robin across tenants 1..T.
+    let tenant_of = |i: usize| -> TenantId {
+        if tenants <= 1 {
+            TenantId::DEFAULT
+        } else if i < n_clients / 2 {
+            TenantId(0)
+        } else {
+            TenantId(1 + ((i - n_clients / 2) % (tenants - 1)) as u32)
+        }
+    };
     let mut expected = Vec::new();
     let mut rxs = Vec::new();
     for i in 0..n_clients {
         let mut rng = Rng::new(7000 + i as u64);
         let s = workload::kv_recall(&mut rng, len, None, 1);
         let ids = tok.encode(&s.prompt);
-        let (id, rx) = handle.submit(ids, max_new)?;
+        let (id, rx) = handle.submit_for(ids, max_new, tenant_of(i))?;
         expected.push((id, s.answer));
         rxs.push(rx);
     }
@@ -101,6 +130,25 @@ fn main() -> Result<()> {
             + handle.metrics.counter(names::SWAP_REFUSED),
         handle.metrics.counter(names::PREFILL_RECOMPUTED),
     );
+    if tenants > 1 {
+        println!(
+            "\nper-tenant (quota floor {} blocks{}):",
+            quota_blocks,
+            if quota_blocks == 0 { " — quotas OFF" } else { "" }
+        );
+        for t in 0..tenants as u32 {
+            let t = TenantId(t);
+            println!(
+                "  tenant {t}: {} completed, {} preempted, {} rejected, \
+                 {} blocks held at exit, quota denials pool-wide {}",
+                handle.metrics.counter(&names::tenant_completed(t)),
+                handle.metrics.counter(&names::tenant_preempted(t)),
+                handle.metrics.counter(&names::tenant_rejected(t)),
+                handle.metrics.gauge(&names::tenant_blocks_held(t)),
+                handle.metrics.gauge(names::POOL_QUOTA_DENIALS),
+            );
+        }
+    }
     println!("\nserver metrics:\n{}", handle.metrics.report());
     Ok(())
 }

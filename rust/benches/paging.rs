@@ -2,11 +2,12 @@
 //! sharing), per-step append, staging materialization, block compaction,
 //! the decode-step input-prep comparison (dense staged bridge vs
 //! block-table `DecodeView`) across staging capacities and pool sizes at
-//! fixed retained KV, and the preemption-resume comparison (swap-to-host
-//! restore vs the re-prefill floor) — PJRT-independent, with block-pool
-//! stats reported next to the timings. The swap comparison additionally
-//! writes a `BENCH_paging_swap.json` summary so CI captures the resume
-//! cost trajectory.
+//! fixed retained KV, the preemption-resume comparison (swap-to-host
+//! restore vs the re-prefill floor), and a 2-tenant contention scenario
+//! (quotas off vs on) — PJRT-independent, with block-pool stats reported
+//! next to the timings. The swap and tenant comparisons additionally
+//! write `BENCH_paging_swap.json` / `BENCH_paging_tenants.json`
+//! summaries so CI captures the trajectories.
 //!
 //! Run: cargo bench --bench paging   (FASTKV_BENCH_QUICK=1 for a smoke pass)
 
@@ -20,6 +21,7 @@ use fastkv::manifest::ModelMeta;
 use fastkv::tensor::HostTensor;
 use fastkv::util::rng::Rng;
 use fastkv::PolicyCfg;
+use fastkv::{TenantId, TenantQuota};
 
 fn meta() -> ModelMeta {
     ModelMeta {
@@ -343,4 +345,100 @@ fn main() {
     std::fs::write("BENCH_paging_swap.json", &json)
         .expect("write BENCH_paging_swap.json");
     println!("\nwrote BENCH_paging_swap.json:\n{json}");
+
+    // --------------------------------------------------------------------
+    // 2-tenant contention: a heavy tenant churning large admissions
+    // against a light tenant's small ones over a tight pool. Quotas OFF:
+    // the light tenant admits only when the heavy churn happens to leave
+    // room. Quotas ON (reserved floor for the light tenant): the light
+    // tenant admits every round; the quota accounting itself must not
+    // measurably slow the admit hot path.
+    println!("\n=== 2-tenant contention: quotas off vs reserved floor ===");
+    let heavy = TenantId(0);
+    let light = TenantId(1);
+    let heavy_len = 512usize;
+    let light_len = 64usize;
+    let rounds = if bench_util::quick() { 20 } else { 200 };
+    let bt = PagingConfig::default().block_tokens;
+    let heavy_rc: Vec<RequestCache> =
+        (0..3u64).map(|i| cache(&m, 80 + i, heavy_len)).collect();
+    let light_rc = cache(&m, 90, light_len);
+    let blocks_of = |rc: &RequestCache| -> usize {
+        rc.lens.iter().map(|&n| (n + bt - 1) / bt).sum()
+    };
+    let heavy_blocks = blocks_of(&heavy_rc[0]);
+    // pool: exactly three heavy lanes saturate it — with quotas off the
+    // light tenant finds nothing left; the reserved floor carves out one
+    // light admission (+ a growth block per layer of margin)
+    let pool = 3 * heavy_blocks;
+    let light_floor = blocks_of(&light_rc) + m.n_layers;
+    let mut results = Vec::new(); // (label, light_admits, denials, mean_ms)
+    for quota_on in [false, true] {
+        let mut cfg = PagingConfig {
+            num_blocks: Some(pool),
+            prefix_cache: false,
+            swap_bytes: 0,
+            ..PagingConfig::default()
+        };
+        if quota_on {
+            cfg.tenant_quotas =
+                vec![(light, TenantQuota::reserved(light_floor))];
+        }
+        let mut pa = PagedArena::new(&m, b, heavy_len + 64, cfg);
+        let mut light_admits = 0usize;
+        let mut heavy_admits = 0usize;
+        let label = if quota_on {
+            "contended round (light floor reserved)"
+        } else {
+            "contended round (quotas off)"
+        };
+        let t0 = std::time::Instant::now();
+        for _round in 0..rounds {
+            // heavy churn: admit as many large caches as fit, keep them
+            // one round, release the oldest
+            let mut held: Vec<usize> = Vec::new();
+            for rc in &heavy_rc {
+                if let Some(s) = pa.admit_for(rc, heavy) {
+                    held.push(s);
+                    heavy_admits += 1;
+                }
+            }
+            // the light tenant tries one small admission per round
+            if let Some(s) = pa.admit_for(&light_rc, light) {
+                light_admits += 1;
+                pa.release(s);
+            }
+            for s in held {
+                pa.release(s);
+            }
+        }
+        let mean_ms = t0.elapsed().as_secs_f64() * 1e3 / rounds as f64;
+        let ps = pa.pool_stats();
+        println!(
+            "{label:44} {mean_ms:10.3} ms/round  light {light_admits}/{rounds} \
+             admits, heavy {heavy_admits}, quota denials {}",
+            ps.quota_denials
+        );
+        results.push((quota_on, light_admits, ps.quota_denials, mean_ms));
+    }
+    let (_, light_off, _, ms_off) = results[0];
+    let (_, light_on, denials_on, ms_on) = results[1];
+    assert_eq!(
+        light_on, rounds,
+        "reserved floor must admit the light tenant every round"
+    );
+    let json = format!(
+        "{{\n  \"pool_blocks\": {pool},\n  \"heavy_len\": {heavy_len},\n  \
+         \"light_len\": {light_len},\n  \"light_floor_blocks\": {light_floor},\n  \
+         \"rounds\": {rounds},\n  \"light_admits_quota_off\": {light_off},\n  \
+         \"light_admits_quota_on\": {light_on},\n  \
+         \"quota_denials_on\": {denials_on},\n  \
+         \"round_ms_quota_off\": {ms_off:.4},\n  \
+         \"round_ms_quota_on\": {ms_on:.4},\n  \
+         \"quota_overhead\": {:.3}\n}}\n",
+        ms_on / ms_off.max(1e-9),
+    );
+    std::fs::write("BENCH_paging_tenants.json", &json)
+        .expect("write BENCH_paging_tenants.json");
+    println!("\nwrote BENCH_paging_tenants.json:\n{json}");
 }

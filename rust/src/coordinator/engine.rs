@@ -9,7 +9,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::coordinator::decode::{advance_lane, DecodeBatch, LaneAdvance, LaneInput};
-use crate::coordinator::paging::{PagedArena, PagingConfig};
+use crate::coordinator::paging::{PagedArena, PagingConfig, TenantId};
 use crate::coordinator::policies::{Exec, Policy, PolicyCfg};
 use crate::manifest::Manifest;
 use crate::metrics::Metrics;
@@ -93,7 +93,11 @@ pub fn generate(
         pc.block_tokens = man.buckets.block_tokens;
     }
     let mut store = PagedArena::new(&man.model, 1, cap, pc);
-    let slot = store.admit(&pre.cache).expect("worst-case pool admits");
+    // Single-tenant default: a one-lane, worst-case-sized private arena
+    // has no contention for quotas to arbitrate.
+    let slot = store
+        .admit_for(&pre.cache, TenantId::DEFAULT)
+        .expect("worst-case pool admits");
 
     let mut stats = GenStats {
         prefill_secs,

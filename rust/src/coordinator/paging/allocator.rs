@@ -1,5 +1,5 @@
-//! Free-list block allocator with reference counting and a prefix-cache
-//! eviction queue.
+//! Free-list block allocator with reference counting, a prefix-cache
+//! eviction queue, and per-tenant quota enforcement.
 //!
 //! Lifecycle of a block:
 //!
@@ -16,20 +16,59 @@
 //! *Evictable* blocks are the prefix cache's working set: their contents
 //! are intact and addressable by hash, but they are reclaimed (oldest
 //! first) the moment the free list runs dry.
+//!
+//! # Tenancy
+//!
+//! Every transition into the live (`ref > 0`) state — `alloc` from the
+//! free list or evictable queue, `revive` of a ref-0 cached block — names
+//! the tenant performing it, and that tenant is *charged* for the block
+//! until its refcount returns to zero (the first-toucher rule; see
+//! [`super::tenant`] for why). Charges are what quotas bound:
+//!
+//! * a tenant may never hold more than its **ceiling** of charged blocks;
+//! * a tenant may never take a block that the pool needs in order to keep
+//!   every *other* tenant's unused **reserved floor** satisfiable.
+//!
+//! With no quotas configured every tenant gets the default (floor 0,
+//! ceiling unlimited) and the allocator behaves exactly as it did before
+//! tenancy existed.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 use super::block::{BlockId, BlockMeta, BlockStore};
+use super::tenant::{TenantId, TenantQuota};
 
 /// Result of an allocation: the block, plus the hash that must be removed
 /// from the prefix cache if the block was reclaimed from the evictable
 /// queue.
 #[derive(Debug, Clone, Copy)]
 pub struct AllocOutcome {
+    /// The freshly chargeable block (zeroed, `ref_count == 1`).
     pub id: BlockId,
+    /// Hash of the cached content this allocation evicted, if any; the
+    /// caller must unregister it from the prefix cache.
     pub evicted_hash: Option<u64>,
 }
 
+/// Outcome of claiming a block through the prefix cache
+/// ([`BlockAllocator::revive`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Revive {
+    /// The block is live for the caller (ref bumped, or pulled from the
+    /// evictable queue and charged to the reviving tenant).
+    Revived,
+    /// The block no longer holds cached content — a stale prefix-map
+    /// entry the caller must unregister and treat as a miss.
+    Stale,
+    /// Reviving the cached block would breach the tenant's quota (or eat
+    /// another tenant's reserved floor). The map entry is still valid;
+    /// the caller should treat the lookup as a miss *without*
+    /// unregistering it.
+    OverQuota,
+}
+
+/// Free-list block allocator: ref-counting, LRU reclamation of cached
+/// blocks, and per-tenant charge accounting against [`TenantQuota`]s.
 #[derive(Debug)]
 pub struct BlockAllocator {
     store: BlockStore,
@@ -46,13 +85,25 @@ pub struct BlockAllocator {
     /// currently-evictable blocks.
     evictable: VecDeque<BlockId>,
     cached: usize,
+    /// Configured quotas; tenants absent here get the default (unconstrained) quota.
+    quotas: BTreeMap<TenantId, TenantQuota>,
+    /// Live blocks charged per tenant (first-toucher rule). Maintained so
+    /// that `Σ held == blocks_in_use` at all times.
+    held: BTreeMap<TenantId, usize>,
     /// Copy-on-write block copies performed (stat).
     pub cow_copies: u64,
     /// Cached blocks reclaimed for new allocations (stat).
     pub evictions: u64,
+    /// Block takes refused by a tenant quota while the pool still had
+    /// allocatable blocks (stat; pure pool exhaustion is not counted,
+    /// and each denied take counts exactly once — a quota-blocked
+    /// revival falls through to the allocation attempt that counts it).
+    pub quota_denials: u64,
 }
 
 impl BlockAllocator {
+    /// Pool of `num_blocks` blocks of `block_tokens` rows, each row
+    /// `row_elems` f32 wide (per K/V plane).
     pub fn new(num_blocks: usize, block_tokens: usize, row_elems: usize) -> Self {
         // Reverse push so blocks are handed out in 0, 1, 2, ... order
         // (deterministic layouts make the differential tests readable).
@@ -64,57 +115,236 @@ impl BlockAllocator {
             free,
             evictable: VecDeque::new(),
             cached: 0,
+            quotas: BTreeMap::new(),
+            held: BTreeMap::new(),
             cow_copies: 0,
             evictions: 0,
+            quota_denials: 0,
         }
     }
 
+    /// The underlying block slab.
     pub fn store(&self) -> &BlockStore {
         &self.store
     }
 
+    /// Mutable access to the slab (row writes, COW copies).
     pub fn store_mut(&mut self) -> &mut BlockStore {
         &mut self.store
     }
 
+    /// Bookkeeping for one block.
     pub fn meta(&self, id: BlockId) -> &BlockMeta {
         &self.meta[id.index()]
     }
 
+    /// Pool size in blocks.
     pub fn blocks_total(&self) -> usize {
         self.store.num_blocks()
     }
 
+    /// Blocks on the free list.
     pub fn blocks_free(&self) -> usize {
         self.free.len()
     }
 
+    /// Ref-0 blocks whose cached content is still addressable by hash.
     pub fn blocks_cached(&self) -> usize {
         self.cached
     }
 
+    /// Blocks referenced by at least one live block table.
     pub fn blocks_in_use(&self) -> usize {
         self.blocks_total() - self.free.len() - self.cached
     }
 
-    /// Blocks a new allocation burst can obtain (free + evictable).
+    /// Blocks a new allocation burst can obtain (free + evictable),
+    /// ignoring quotas — see [`BlockAllocator::available_to`] for the
+    /// tenant-facing number.
     pub fn allocatable(&self) -> usize {
         self.free.len() + self.cached
     }
 
-    /// Take a block, preferring the free list and falling back to evicting
-    /// the oldest cached block. Returns `None` only when every block in
-    /// the pool is referenced by a live sequence. Handed-out blocks are
-    /// zeroed: stale KV must never be observable through a fresh block
-    /// even if `filled` bookkeeping were wrong (same hygiene contract as
-    /// `BatchArena::free_slot`).
-    pub fn alloc(&mut self) -> Option<AllocOutcome> {
+    // --- tenant quota accounting ------------------------------------
+
+    /// Install (or replace) a tenant's quota. Applies to future
+    /// allocations only; blocks already charged are never clawed back.
+    pub fn set_quota(&mut self, tenant: TenantId, quota: TenantQuota) {
+        self.quotas.insert(tenant, quota);
+    }
+
+    /// The tenant's effective quota (the default unconstrained quota when none
+    /// was configured).
+    pub fn quota(&self, tenant: TenantId) -> TenantQuota {
+        self.quotas.get(&tenant).copied().unwrap_or_default()
+    }
+
+    /// Whether any quota is configured at all (the victim-selection
+    /// tie-breaker only activates then).
+    pub fn quotas_configured(&self) -> bool {
+        !self.quotas.is_empty()
+    }
+
+    /// Blocks currently charged to `tenant`.
+    pub fn held(&self, tenant: TenantId) -> usize {
+        self.held.get(&tenant).copied().unwrap_or(0)
+    }
+
+    /// Tenants worth reporting: every tenant with a configured quota or
+    /// that has *ever* held blocks. Zero-held tenants are deliberately
+    /// kept (the `held` map never forgets a key) so a published
+    /// `tenant_{id}_blocks_held` gauge is written back to 0 after the
+    /// tenant's last release instead of going stale at its old value.
+    pub fn tenants(&self) -> Vec<TenantId> {
+        let mut ids: Vec<TenantId> = self.quotas.keys().copied().collect();
+        for &t in self.held.keys() {
+            if !ids.contains(&t) {
+                ids.push(t);
+            }
+        }
+        ids.sort();
+        ids
+    }
+
+    /// Whether `tenant` is bursting past its reserved floor. Always false
+    /// when no quotas are configured (preserving the pre-tenancy
+    /// preemption-victim ordering).
+    pub fn over_quota(&self, tenant: TenantId) -> bool {
+        self.quotas_configured()
+            && self.held(tenant) > self.quota(tenant).reserved_blocks
+    }
+
+    /// Whether `tenant` sits at (or past) its burst ceiling: its next
+    /// take is refused no matter how many blocks *other* tenants free —
+    /// only this tenant's own releases (or compaction) can relieve it.
+    /// Preemption victim selection uses this to avoid churning innocent
+    /// lanes whose blocks could never help.
+    pub fn at_ceiling(&self, tenant: TenantId) -> bool {
+        self.held(tenant) >= self.quota(tenant).ceiling_blocks
+    }
+
+    /// Unused reserved floor of every tenant except `tenant`: blocks the
+    /// pool must keep obtainable for them, i.e. blocks `tenant` may not
+    /// take.
+    fn reserved_headroom_excluding(&self, tenant: TenantId) -> usize {
+        self.quotas
+            .iter()
+            .filter(|(&t, _)| t != tenant)
+            .map(|(&t, q)| q.reserved_blocks.saturating_sub(self.held(t)))
+            .sum()
+    }
+
+    /// Blocks `tenant` can obtain right now: the allocatable pool minus
+    /// every other tenant's unused reserved floor (its own floor is, by
+    /// construction, part of what remains).
+    pub fn available_to(&self, tenant: TenantId) -> usize {
+        self.allocatable()
+            .saturating_sub(self.reserved_headroom_excluding(tenant))
+    }
+
+    /// Most blocks `tenant` could ever hold, even on a fully drained
+    /// pool: total pool minus the other tenants' full reserved floors,
+    /// capped by its own ceiling. Drives `could_ever_admit` — a request
+    /// above this can never be admitted for this tenant, no matter how
+    /// long it waits.
+    pub fn max_ever_available(&self, tenant: TenantId) -> usize {
+        let floors: usize = self
+            .quotas
+            .iter()
+            .filter(|(&t, _)| t != tenant)
+            .map(|(_, q)| q.reserved_blocks)
+            .sum();
+        self.blocks_total()
+            .saturating_sub(floors)
+            .min(self.quota(tenant).ceiling_blocks)
+    }
+
+    /// Whether `tenant` may take `n` more blocks right now (ceiling and
+    /// other tenants' floors both respected).
+    pub fn can_take(&self, tenant: TenantId, n: usize) -> bool {
+        let q = self.quota(tenant);
+        self.held(tenant).saturating_add(n) <= q.ceiling_blocks
+            && n <= self.available_to(tenant)
+    }
+
+    /// [`BlockAllocator::can_take`], evaluated *as if* every block in
+    /// `released` with `ref_count == 1` had just been decref'd to zero
+    /// (compaction's release-then-rebuild feasibility check). Uncharges
+    /// are simulated per owning tenant, so a rebuild is refused if the
+    /// release would widen *another* tenant's unused floor enough to
+    /// starve this one.
+    pub fn can_take_after_release(
+        &self,
+        tenant: TenantId,
+        n: usize,
+        released: &[BlockId],
+    ) -> bool {
+        let mut freed_total = 0usize;
+        let mut freed_by: BTreeMap<TenantId, usize> = BTreeMap::new();
+        for &id in released {
+            let m = &self.meta[id.index()];
+            if m.ref_count == 1 {
+                freed_total += 1;
+                *freed_by.entry(m.owner).or_default() += 1;
+            }
+        }
+        let freed_of = |t: TenantId| freed_by.get(&t).copied().unwrap_or(0);
+        let q = self.quota(tenant);
+        let held_t = self.held(tenant).saturating_sub(freed_of(tenant));
+        if held_t.saturating_add(n) > q.ceiling_blocks {
+            return false;
+        }
+        let floors: usize = self
+            .quotas
+            .iter()
+            .filter(|(&t, _)| t != tenant)
+            .map(|(&t, q)| {
+                q.reserved_blocks
+                    .saturating_sub(self.held(t).saturating_sub(freed_of(t)))
+            })
+            .sum();
+        n <= (self.allocatable() + freed_total).saturating_sub(floors)
+    }
+
+    fn charge(&mut self, tenant: TenantId, id: BlockId) {
+        self.meta[id.index()].owner = tenant;
+        *self.held.entry(tenant).or_insert(0) += 1;
+    }
+
+    fn uncharge(&mut self, id: BlockId) {
+        let owner = self.meta[id.index()].owner;
+        let h = self
+            .held
+            .get_mut(&owner)
+            .expect("uncharge of a tenant that holds nothing");
+        debug_assert!(*h > 0, "held underflow for tenant {owner:?}");
+        *h -= 1;
+    }
+
+    // --- allocation --------------------------------------------------
+
+    /// Take a block for `tenant`, preferring the free list and falling
+    /// back to evicting the oldest cached block. Returns `None` when
+    /// every block in the pool is referenced by a live sequence **or**
+    /// when the tenant's quota refuses the take (counted in
+    /// `quota_denials` if the pool itself had blocks). Handed-out blocks
+    /// are zeroed: stale KV must never be observable through a fresh
+    /// block even if `filled` bookkeeping were wrong (same hygiene
+    /// contract as `BatchArena::free_slot`).
+    pub fn alloc(&mut self, tenant: TenantId) -> Option<AllocOutcome> {
+        if !self.can_take(tenant, 1) {
+            if self.allocatable() > 0 {
+                self.quota_denials += 1;
+            }
+            return None;
+        }
         if let Some(id) = self.free.pop() {
             let m = &mut self.meta[id.index()];
             debug_assert_eq!(m.ref_count, 0, "free block had refs");
             m.ref_count = 1;
             m.filled = 0;
             m.hash = None;
+            self.charge(tenant, id);
             return Some(AllocOutcome { id, evicted_hash: None });
         }
         // Pop until a still-valid cached block surfaces; stale entries
@@ -130,22 +360,26 @@ impl BlockAllocator {
             m.filled = 0;
             self.cached -= 1;
             self.evictions += 1;
+            self.charge(tenant, id);
             self.store.zero_block(id);
             return Some(AllocOutcome { id, evicted_hash });
         }
         None
     }
 
+    /// Add a reference to a live block (prefix sharing, `fork`). The
+    /// charge stays with the block's current owner — sharing is free for
+    /// the new referent under the first-toucher rule.
     pub fn incref(&mut self, id: BlockId) {
         let m = &mut self.meta[id.index()];
         assert!(m.ref_count > 0, "incref on unreferenced block {id:?}");
         m.ref_count += 1;
     }
 
-    /// Drop one reference. At zero, hashed blocks park in the evictable
-    /// queue (content reusable through the prefix cache); unhashed blocks
-    /// are zeroed and return straight to the free list. Returns the new
-    /// count.
+    /// Drop one reference. At zero, the owning tenant is uncharged, then
+    /// hashed blocks park in the evictable queue (content reusable
+    /// through the prefix cache) and unhashed blocks are zeroed and
+    /// return straight to the free list. Returns the new count.
     pub fn decref(&mut self, id: BlockId) -> u32 {
         let idx = id.index();
         assert!(
@@ -155,6 +389,7 @@ impl BlockAllocator {
         self.meta[idx].ref_count -= 1;
         let count = self.meta[idx].ref_count;
         if count == 0 {
+            self.uncharge(id);
             if self.meta[idx].hash.is_some() {
                 // A revived-then-reparked block may still own a (stale)
                 // queue entry; `parked` keeps it to one entry per block so
@@ -212,24 +447,33 @@ impl BlockAllocator {
         });
     }
 
-    /// Claim a block found through the prefix cache: live shared blocks
-    /// gain a reference; ref-0 cached blocks are revived in O(1) (their
-    /// evictable-queue entry is left behind as a stale marker that `alloc`
-    /// skips on pop). Returns false if the block no longer holds cached
-    /// content (stale map entry), in which case the caller must treat the
-    /// lookup as a miss.
-    pub fn revive(&mut self, id: BlockId) -> bool {
-        let m = &mut self.meta[id.index()];
-        if m.hash.is_none() {
-            return false;
+    /// Claim a block found through the prefix cache for `tenant`: live
+    /// shared blocks gain a reference (no charge — first-toucher rule);
+    /// ref-0 cached blocks are revived in O(1) and charged to the
+    /// reviving tenant (their evictable-queue entry is left behind as a
+    /// stale marker that `alloc` skips on pop). See [`Revive`] for the
+    /// three outcomes; only [`Revive::Stale`] means the prefix-map entry
+    /// should be unregistered.
+    pub fn revive(&mut self, id: BlockId, tenant: TenantId) -> Revive {
+        if self.meta[id.index()].hash.is_none() {
+            return Revive::Stale;
         }
-        if m.ref_count > 0 {
-            m.ref_count += 1;
-        } else {
-            m.ref_count = 1;
-            self.cached -= 1;
+        if self.meta[id.index()].ref_count > 0 {
+            self.meta[id.index()].ref_count += 1;
+            return Revive::Revived;
         }
-        true
+        // Pulling a cached block out of the evictable pool consumes one
+        // allocatable block, exactly like `alloc` — same quota gate. Not
+        // counted in `quota_denials` here: the arena's load loop falls
+        // through to an `alloc` attempt that re-evaluates the same gate,
+        // and a single denied take must count once.
+        if !self.can_take(tenant, 1) {
+            return Revive::OverQuota;
+        }
+        self.meta[id.index()].ref_count = 1;
+        self.cached -= 1;
+        self.charge(tenant, id);
+        Revive::Revived
     }
 
     /// Mark a full block immutable and addressable under `hash`.
@@ -245,11 +489,13 @@ impl BlockAllocator {
         self.meta[id.index()].hash.take()
     }
 
+    /// Record how many rows of a block hold valid KV.
     pub fn set_filled(&mut self, id: BlockId, rows: u32) {
         debug_assert!(rows as usize <= self.store.block_tokens());
         self.meta[id.index()].filled = rows;
     }
 
+    /// Count one copy-on-write block copy (stat).
     pub fn note_cow(&mut self) {
         self.cow_copies += 1;
     }
@@ -259,48 +505,64 @@ impl BlockAllocator {
 mod tests {
     use super::*;
 
+    const T0: TenantId = TenantId::DEFAULT;
+    const T1: TenantId = TenantId(1);
+    const T2: TenantId = TenantId(2);
+
     fn alloc3() -> BlockAllocator {
         BlockAllocator::new(3, 4, 2)
+    }
+
+    /// `Σ held == blocks_in_use` must hold at every step.
+    fn assert_charges_reconcile(a: &BlockAllocator) {
+        let total: usize = a.tenants().iter().map(|&t| a.held(t)).sum();
+        assert_eq!(total, a.blocks_in_use(), "charges vs in-use blocks");
     }
 
     #[test]
     fn alloc_free_roundtrip() {
         let mut a = alloc3();
         assert_eq!(a.blocks_free(), 3);
-        let b0 = a.alloc().unwrap().id;
-        let b1 = a.alloc().unwrap().id;
+        let b0 = a.alloc(T0).unwrap().id;
+        let b1 = a.alloc(T0).unwrap().id;
         assert_eq!((b0, b1), (BlockId(0), BlockId(1)));
         assert_eq!(a.blocks_in_use(), 2);
+        assert_eq!(a.held(T0), 2);
+        assert_charges_reconcile(&a);
         assert_eq!(a.decref(b0), 0);
         assert_eq!(a.blocks_free(), 2);
         assert_eq!(a.blocks_in_use(), 1);
+        assert_eq!(a.held(T0), 1);
+        assert_charges_reconcile(&a);
     }
 
     #[test]
     fn refcounted_block_survives_one_decref() {
         let mut a = alloc3();
-        let b = a.alloc().unwrap().id;
+        let b = a.alloc(T0).unwrap().id;
         a.incref(b);
         assert_eq!(a.decref(b), 1);
         assert_eq!(a.blocks_in_use(), 1);
+        assert_eq!(a.held(T0), 1, "charge persists while referenced");
         assert_eq!(a.decref(b), 0);
         assert_eq!(a.blocks_in_use(), 0);
+        assert_eq!(a.held(T0), 0);
     }
 
     #[test]
     fn hashed_blocks_park_then_evict_oldest() {
         let mut a = alloc3();
-        let b0 = a.alloc().unwrap().id;
+        let b0 = a.alloc(T0).unwrap().id;
         a.seal(b0, 111);
-        let b1 = a.alloc().unwrap().id;
+        let b1 = a.alloc(T0).unwrap().id;
         a.seal(b1, 222);
         a.decref(b0);
         a.decref(b1);
         assert_eq!(a.blocks_cached(), 2);
         assert_eq!(a.blocks_free(), 1);
         // exhaust the free list, then evictions begin with the oldest (b0)
-        let _ = a.alloc().unwrap();
-        let out = a.alloc().unwrap();
+        let _ = a.alloc(T0).unwrap();
+        let out = a.alloc(T0).unwrap();
         assert_eq!(out.id, b0);
         assert_eq!(out.evicted_hash, Some(111));
         assert_eq!(a.evictions, 1);
@@ -309,20 +571,20 @@ mod tests {
     #[test]
     fn revive_pulls_from_evictable() {
         let mut a = alloc3();
-        let b = a.alloc().unwrap().id;
+        let b = a.alloc(T0).unwrap().id;
         a.seal(b, 7);
         a.decref(b);
         assert_eq!(a.blocks_cached(), 1);
-        assert!(a.revive(b));
+        assert_eq!(a.revive(b, T0), Revive::Revived);
         assert_eq!(a.meta(b).ref_count, 1);
         assert_eq!(a.blocks_cached(), 0);
         // live shared revive just bumps the count
-        assert!(a.revive(b));
+        assert_eq!(a.revive(b, T0), Revive::Revived);
         assert_eq!(a.meta(b).ref_count, 2);
         // unhashed blocks cannot be revived
-        let u = a.alloc().unwrap().id;
+        let u = a.alloc(T0).unwrap().id;
         a.decref(u);
-        assert!(!a.revive(u));
+        assert_eq!(a.revive(u, T0), Revive::Stale);
     }
 
     #[test]
@@ -331,53 +593,53 @@ mod tests {
         // alloc() must discard it instead of evicting the live block, and
         // accounting must stay exact throughout.
         let mut a = alloc3();
-        let b = a.alloc().unwrap().id;
+        let b = a.alloc(T0).unwrap().id;
         a.seal(b, 7);
         a.decref(b); // parked
-        assert!(a.revive(b)); // live again; queue entry now stale
+        assert_eq!(a.revive(b, T0), Revive::Revived); // queue entry now stale
         assert_eq!(a.blocks_cached(), 0);
-        let c = a.alloc().unwrap().id;
+        let c = a.alloc(T0).unwrap().id;
         a.seal(c, 9);
         a.decref(c); // queue: [b(stale), c(valid)]
         assert_eq!(a.blocks_cached(), 1, "counter ignores stale entry");
-        let _ = a.alloc().unwrap(); // drains the free list
+        let _ = a.alloc(T0).unwrap(); // drains the free list
         // eviction must skip the stale b entry and take c
-        let out = a.alloc().unwrap();
+        let out = a.alloc(T0).unwrap();
         assert_eq!(out.id, c);
         assert_eq!(out.evicted_hash, Some(9));
         assert_eq!(a.blocks_cached(), 0);
         assert_eq!(a.blocks_in_use(), 3);
-        assert!(a.alloc().is_none(), "pool truly exhausted");
+        assert!(a.alloc(T0).is_none(), "pool truly exhausted");
         assert_eq!(a.evictions, 1);
         // park/revive/park keeps a single queue entry per block: b can be
         // evicted exactly once afterwards, not twice
         a.decref(b);
-        assert!(a.revive(b));
+        assert_eq!(a.revive(b, T0), Revive::Revived);
         a.decref(b);
         assert_eq!(a.blocks_cached(), 1);
-        let out = a.alloc().unwrap();
+        let out = a.alloc(T0).unwrap();
         assert_eq!(out.id, b);
         assert_eq!(out.evicted_hash, Some(7));
-        assert!(a.alloc().is_none(), "no duplicate entry to double-evict");
+        assert!(a.alloc(T0).is_none(), "no duplicate entry to double-evict");
     }
 
     #[test]
     fn freed_and_evicted_blocks_are_zeroed() {
         let mut a = alloc3();
-        let b = a.alloc().unwrap().id;
+        let b = a.alloc(T0).unwrap().id;
         a.store_mut().write_row(b, 0, &[1.0, 2.0], &[3.0, 4.0]);
         a.decref(b); // unhashed -> free list, zeroed
         assert!(a.store().k_rows(b, 1).iter().all(|&x| x == 0.0));
         assert!(a.store().v_rows(b, 1).iter().all(|&x| x == 0.0));
         // hashed blocks keep content while cached, zeroed on eviction
-        let h = a.alloc().unwrap().id;
+        let h = a.alloc(T0).unwrap().id;
         a.store_mut().write_row(h, 0, &[5.0, 5.0], &[6.0, 6.0]);
         a.seal(h, 42);
         a.decref(h);
         assert_eq!(a.store().k_row(h, 0), &[5.0, 5.0], "cached content kept");
-        let _ = a.alloc().unwrap(); // free list
-        let _ = a.alloc().unwrap(); // free list
-        let out = a.alloc().unwrap(); // evicts h
+        let _ = a.alloc(T0).unwrap(); // free list
+        let _ = a.alloc(T0).unwrap(); // free list
+        let out = a.alloc(T0).unwrap(); // evicts h
         assert_eq!(out.id, h);
         assert!(a.store().k_rows(h, 1).iter().all(|&x| x == 0.0));
     }
@@ -385,13 +647,13 @@ mod tests {
     #[test]
     fn evictable_queue_bounded_and_sweep_drops_stale() {
         let mut a = alloc3();
-        let b = a.alloc().unwrap().id;
+        let b = a.alloc(T0).unwrap().id;
         a.seal(b, 7);
         // churny prefix-hit workload: park + revive over and over must
         // not accumulate queue entries
         for _ in 0..100 {
             a.decref(b);
-            assert!(a.revive(b));
+            assert_eq!(a.revive(b, T0), Revive::Revived);
         }
         assert!(
             a.evictable_len() <= a.blocks_total(),
@@ -406,27 +668,165 @@ mod tests {
         a.decref(b);
         assert_eq!(a.evictable_len(), 1);
         assert_eq!(a.blocks_cached(), 1);
-        let _ = a.alloc().unwrap();
-        let _ = a.alloc().unwrap();
-        let out = a.alloc().unwrap();
+        let _ = a.alloc(T0).unwrap();
+        let _ = a.alloc(T0).unwrap();
+        let out = a.alloc(T0).unwrap();
         assert_eq!(out.id, b);
         assert_eq!(out.evicted_hash, Some(7));
         // sweep on a queue holding only valid entries is a no-op
         let mut v = alloc3();
-        let x = v.alloc().unwrap().id;
+        let x = v.alloc(T0).unwrap().id;
         v.seal(x, 1);
         v.decref(x);
         v.sweep_stale();
         assert_eq!(v.evictable_len(), 1);
-        assert!(v.revive(x), "valid entry survived the sweep");
+        assert_eq!(v.revive(x, T0), Revive::Revived, "entry survived sweep");
     }
 
     #[test]
     fn exhaustion_returns_none() {
         let mut a = alloc3();
-        let ids: Vec<BlockId> = (0..3).map(|_| a.alloc().unwrap().id).collect();
-        assert!(a.alloc().is_none());
+        let ids: Vec<BlockId> =
+            (0..3).map(|_| a.alloc(T0).unwrap().id).collect();
+        assert!(a.alloc(T0).is_none());
+        assert_eq!(a.quota_denials, 0, "pool exhaustion is not a denial");
         a.decref(ids[1]);
-        assert!(a.alloc().is_some());
+        assert!(a.alloc(T0).is_some());
+    }
+
+    // --- tenancy ------------------------------------------------------
+
+    #[test]
+    fn ceiling_caps_a_tenants_charges() {
+        let mut a = BlockAllocator::new(4, 4, 2);
+        a.set_quota(T1, TenantQuota::bounded(0, 2));
+        let b0 = a.alloc(T1).unwrap().id;
+        let _b1 = a.alloc(T1).unwrap().id;
+        assert!(a.alloc(T1).is_none(), "ceiling reached");
+        assert_eq!(a.quota_denials, 1);
+        assert!(a.at_ceiling(T1), "other tenants' frees cannot help T1");
+        assert!(!a.at_ceiling(T2));
+        // another tenant still allocates freely
+        assert!(a.alloc(T2).is_some());
+        assert_charges(&a, &[(T1, 2), (T2, 1)]);
+        // releasing makes room under the ceiling again
+        a.decref(b0);
+        assert!(!a.at_ceiling(T1));
+        assert!(a.alloc(T1).is_some());
+    }
+
+    #[test]
+    fn reserved_floor_is_protected_from_other_tenants() {
+        let mut a = BlockAllocator::new(4, 4, 2);
+        a.set_quota(T1, TenantQuota::reserved(2));
+        // T2 may take only pool - T1's unused floor = 2 blocks
+        assert_eq!(a.available_to(T2), 2);
+        assert!(a.alloc(T2).is_some());
+        assert!(a.alloc(T2).is_some());
+        assert!(a.alloc(T2).is_none(), "floor protected");
+        assert_eq!(a.quota_denials, 1);
+        // T1 itself can still take its full floor
+        assert_eq!(a.available_to(T1), 2);
+        assert!(a.alloc(T1).is_some());
+        assert!(a.alloc(T1).is_some());
+        assert!(a.alloc(T1).is_none(), "pool genuinely exhausted now");
+        // as T1 uses its floor, T2's availability does not grow
+        assert_eq!(a.available_to(T2), 0);
+        assert!(a.over_quota(T2), "T2 bursts past its (zero) floor");
+        assert!(!a.over_quota(T1), "T1 sits exactly at its floor");
+    }
+
+    #[test]
+    fn revive_of_cached_block_is_quota_gated_and_charged() {
+        let mut a = BlockAllocator::new(3, 4, 2);
+        a.set_quota(T2, TenantQuota::reserved(2));
+        let b = a.alloc(T1).unwrap().id;
+        a.seal(b, 7);
+        a.decref(b); // cached, uncharged
+        assert_eq!(a.held(T1), 0);
+        // reviving the cached block would eat T2's floor (allocatable 3,
+        // T2 floor 2, T1 already... 0 held; available_to(T1) = 1) — one
+        // revive fits, a second take does not
+        assert_eq!(a.revive(b, T1), Revive::Revived);
+        assert_eq!(a.held(T1), 1, "revival charges the reviving tenant");
+        assert!(a.alloc(T1).is_none(), "floor blocks the second take");
+        assert_eq!(a.quota_denials, 1);
+        // live-block sharing is free and never quota-gated
+        assert_eq!(a.revive(b, T2), Revive::Revived);
+        assert_eq!(a.held(T2), 0, "sharer is not charged");
+        assert_eq!(a.meta(b).ref_count, 2);
+        // OverQuota must NOT be reported as Stale: with a ceiling of 0,
+        // T0 cannot revive a cached block, but the map entry stays valid
+        a.decref(b);
+        a.decref(b); // cached again
+        a.set_quota(T0, TenantQuota::bounded(0, 0));
+        assert_eq!(a.revive(b, T0), Revive::OverQuota);
+        assert_eq!(a.revive(b, T1), Revive::Revived, "entry still valid");
+    }
+
+    #[test]
+    fn first_toucher_charge_follows_live_period() {
+        let mut a = BlockAllocator::new(3, 4, 2);
+        a.set_quota(T1, TenantQuota::default());
+        let b = a.alloc(T1).unwrap().id;
+        a.seal(b, 9);
+        a.incref(b); // T2 shares it (e.g. prefix hit): no charge
+        assert_charges(&a, &[(T1, 1), (T2, 0)]);
+        // first toucher drops its ref; the charge stays with T1 while the
+        // block is live (documented first-toucher consequence)
+        a.decref(b);
+        assert_charges(&a, &[(T1, 1), (T2, 0)]);
+        // last ref gone: uncharged; a revival by T2 charges T2
+        a.decref(b);
+        assert_charges(&a, &[(T1, 0), (T2, 0)]);
+        assert_eq!(a.revive(b, T2), Revive::Revived);
+        assert_charges(&a, &[(T1, 0), (T2, 1)]);
+        assert_eq!(a.blocks_in_use(), 1);
+    }
+
+    #[test]
+    fn can_take_after_release_simulates_uncharges() {
+        // Quota installed *after* the pool filled, so the drained state
+        // already violates T1's floor — exactly the situation compaction
+        // feasibility has to reason about.
+        let mut a = BlockAllocator::new(4, 4, 2);
+        let r0 = a.alloc(T2).unwrap().id;
+        let r1 = a.alloc(T2).unwrap().id;
+        let _r2 = a.alloc(T2).unwrap().id;
+        let t1b = a.alloc(T1).unwrap().id;
+        a.set_quota(T1, TenantQuota::reserved(2));
+        assert_eq!(a.allocatable(), 0);
+        // T1 holds 1 of its floor of 2: one of the two blocks a T2
+        // release frees is owed to T1, so T2 may rebuild into only one
+        assert!(a.can_take_after_release(T2, 1, &[r0, r1]));
+        assert!(
+            !a.can_take_after_release(T2, 2, &[r0, r1]),
+            "second freed block is owed to T1's unused floor"
+        );
+        // T1's own rebuild is not taxed by its own floor
+        assert!(a.can_take_after_release(T1, 1, &[t1b]));
+        assert!(!a.can_take_after_release(T1, 2, &[t1b]));
+        // shared blocks (ref > 1) free nothing
+        a.incref(r0);
+        assert!(!a.can_take_after_release(T2, 1, &[r0]));
+    }
+
+    #[test]
+    fn max_ever_available_respects_floors_and_ceiling() {
+        let mut a = BlockAllocator::new(10, 4, 2);
+        assert_eq!(a.max_ever_available(T0), 10, "no quotas: whole pool");
+        a.set_quota(T1, TenantQuota::reserved(3));
+        a.set_quota(T2, TenantQuota::bounded(2, 4));
+        assert_eq!(a.max_ever_available(T0), 10 - 3 - 2);
+        assert_eq!(a.max_ever_available(T1), 10 - 2, "own floor not counted");
+        assert_eq!(a.max_ever_available(T2), 4, "ceiling caps it");
+    }
+
+    fn assert_charges(a: &BlockAllocator, want: &[(TenantId, usize)]) {
+        for &(t, n) in want {
+            assert_eq!(a.held(t), n, "held({t:?})");
+        }
+        let total: usize = a.tenants().iter().map(|&t| a.held(t)).sum();
+        assert_eq!(total, a.blocks_in_use(), "Σ held == blocks_in_use");
     }
 }

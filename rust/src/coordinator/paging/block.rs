@@ -7,11 +7,17 @@
 //! (sequence, layer) position, which is what makes prefix sharing and
 //! copy-on-write possible.
 
+use super::tenant::TenantId;
+
 /// Index of a physical block in the pool slab.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct BlockId(pub u32);
+pub struct BlockId(
+    /// Position in the slab, `0..num_blocks`.
+    pub u32,
+);
 
 impl BlockId {
+    /// The block's position as a slab/`meta` index.
     pub fn index(self) -> usize {
         self.0 as usize
     }
@@ -34,6 +40,11 @@ pub struct BlockMeta {
     /// evictable queue (possibly stale after a revive). Guarantees at most
     /// one queue entry per block, bounding the queue at pool size.
     pub parked: bool,
+    /// Tenant charged for this block (first-toucher rule): whoever
+    /// allocated or revived it into its current live period. Meaningful
+    /// only while `ref_count > 0`; quota accounting in
+    /// `BlockAllocator` charges and uncharges through it.
+    pub owner: TenantId,
 }
 
 /// Contiguous slab of `num_blocks` fixed-size blocks (K and V planes).
@@ -47,6 +58,8 @@ pub struct BlockStore {
 }
 
 impl BlockStore {
+    /// Zero-initialized slab of `num_blocks` blocks, each holding
+    /// `block_tokens` rows of `row_elems` f32 per K/V plane.
     pub fn new(num_blocks: usize, block_tokens: usize, row_elems: usize) -> Self {
         assert!(block_tokens > 0, "block_tokens must be positive");
         assert!(row_elems > 0, "row_elems must be positive");
@@ -60,14 +73,17 @@ impl BlockStore {
         }
     }
 
+    /// Blocks in the slab.
     pub fn num_blocks(&self) -> usize {
         self.num_blocks
     }
 
+    /// Token rows per block.
     pub fn block_tokens(&self) -> usize {
         self.block_tokens
     }
 
+    /// f32 elements per token row (`kv_heads * head_dim`).
     pub fn row_elems(&self) -> usize {
         self.row_elems
     }
@@ -84,6 +100,7 @@ impl BlockStore {
         &self.k
     }
 
+    /// The whole V plane (layout mirrors [`BlockStore::k_plane`]).
     pub fn v_plane(&self) -> &[f32] {
         &self.v
     }
@@ -94,6 +111,7 @@ impl BlockStore {
         (block.index() * self.block_tokens + row) * self.row_elems
     }
 
+    /// Write one token row of K and V into a block.
     pub fn write_row(&mut self, block: BlockId, row: usize, k_row: &[f32], v_row: &[f32]) {
         let re = self.row_elems;
         assert_eq!(k_row.len(), re, "k row width");
@@ -103,11 +121,13 @@ impl BlockStore {
         self.v[base..base + re].copy_from_slice(v_row);
     }
 
+    /// One token row of the K plane.
     pub fn k_row(&self, block: BlockId, row: usize) -> &[f32] {
         let base = self.base(block, row);
         &self.k[base..base + self.row_elems]
     }
 
+    /// One token row of the V plane.
     pub fn v_row(&self, block: BlockId, row: usize) -> &[f32] {
         let base = self.base(block, row);
         &self.v[base..base + self.row_elems]
@@ -119,6 +139,7 @@ impl BlockStore {
         &self.k[base..base + rows * self.row_elems]
     }
 
+    /// Borrow `rows` consecutive V rows starting at row 0.
     pub fn v_rows(&self, block: BlockId, rows: usize) -> &[f32] {
         let base = self.base(block, 0);
         &self.v[base..base + rows * self.row_elems]

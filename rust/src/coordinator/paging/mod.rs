@@ -18,7 +18,12 @@
 //!    `decode_paged_{B}x{C}` artifacts and the host-side gather oracle;
 //!  * [`swap::SwapArena`] — byte-budgeted host parking for preempted
 //!    lanes, so resume restores the FastKV-selected KV instead of
-//!    re-prefilling it ([`PagedArena::swap_out`] / [`PagedArena::swap_in`]).
+//!    re-prefilling it ([`PagedArena::swap_out`] / [`PagedArena::swap_in`]);
+//!  * [`tenant`] — multi-tenant quotas: every lane belongs to a
+//!    [`TenantId`], blocks are charged to the tenant that first touched
+//!    them, and a [`TenantQuota`] bounds each tenant with a reserved
+//!    floor, a burst ceiling, and a per-tenant swap byte cap, so one
+//!    heavy tenant cannot starve the pool for everyone else.
 //!
 //! Decode is block-table-native by default: a step hands the runtime the
 //! slab plus block-table indices instead of densifying the pool. The old
@@ -31,21 +36,24 @@
 //! Both arenas implement [`KvStore`], the backend trait the engine,
 //! server, and scheduler program against; `PagedArena` is the default.
 //! See `README.md` in this directory for the design rationale.
+#![warn(missing_docs)]
 
 pub mod allocator;
 pub mod block;
 pub mod prefix;
 pub mod swap;
+pub mod tenant;
 pub mod view;
 
 pub use swap::{SwapHandle, SwapIn, SwapStats};
+pub use tenant::{TenantId, TenantQuota, TenantStats};
 pub use view::DecodeView;
 
 use crate::coordinator::kvcache::{BatchArena, RequestCache};
 use crate::manifest::ModelMeta;
 use crate::tensor::{HostTensor, HostTensorI32};
 
-use allocator::BlockAllocator;
+use allocator::{BlockAllocator, Revive};
 use block::BlockId;
 use prefix::PrefixCache;
 use swap::{SwapArena, SwapEntry};
@@ -74,6 +82,12 @@ pub struct PagingConfig {
     /// policy re-run. `0` disables swapping (preemption always
     /// recompute-resumes, the pre-swap behavior).
     pub swap_bytes: usize,
+    /// Per-tenant quotas installed at construction (reserved block
+    /// floor, burst ceiling, optional swap byte cap — see
+    /// [`TenantQuota`]). Empty (the default) means single-tenant
+    /// behavior: every request runs as [`TenantId::DEFAULT`] with the
+    /// whole pool available.
+    pub tenant_quotas: Vec<(TenantId, TenantQuota)>,
 }
 
 impl Default for PagingConfig {
@@ -86,6 +100,7 @@ impl Default for PagingConfig {
             // Generous default for an f32 host cache: preemption should
             // swap unless the operator opts out (`swap_bytes: 0`).
             swap_bytes: 128 << 20,
+            tenant_quotas: Vec::new(),
         }
     }
 }
@@ -106,8 +121,9 @@ pub enum AppendResult {
 /// Dense decode-step inputs materialized from a KV store.
 #[derive(Debug, Clone)]
 pub struct Staged {
-    /// `[L, B, C, KV, hd]`
+    /// K rows, `[L, B, C, KV, hd]`.
     pub k: HostTensor,
+    /// V rows, same layout as `k`.
     pub v: HostTensor,
     /// `[L, B]` valid rows.
     pub lens: HostTensorI32,
@@ -116,19 +132,33 @@ pub struct Staged {
 /// Block-pool gauges for metrics/reporting.
 #[derive(Debug, Clone, Default)]
 pub struct PoolStats {
+    /// Pool size in blocks.
     pub blocks_total: usize,
+    /// Blocks referenced by live block tables.
     pub blocks_in_use: usize,
+    /// Ref-0 blocks kept for prefix reuse (reclaimable).
     pub blocks_cached: usize,
+    /// Blocks on the free list.
     pub blocks_free: usize,
+    /// Token rows per block.
     pub block_tokens: usize,
+    /// Prefix-cache lookups that found a reusable block.
     pub prefix_hits: u64,
+    /// Prefix-cache lookups that missed.
     pub prefix_misses: u64,
+    /// Copy-on-write block copies performed.
     pub cow_copies: u64,
+    /// Cached blocks reclaimed for new allocations.
     pub evictions: u64,
+    /// Admissions/appends the pool could not supply blocks for.
     pub alloc_failures: u64,
+    /// Block takes refused by a tenant quota while the pool itself still
+    /// had allocatable blocks (pure exhaustion is `alloc_failures`).
+    pub quota_denials: u64,
 }
 
 impl PoolStats {
+    /// Prefix-cache hit fraction (0 when no lookups happened).
     pub fn prefix_hit_rate(&self) -> f64 {
         let total = self.prefix_hits + self.prefix_misses;
         if total == 0 {
@@ -145,6 +175,7 @@ impl PoolStats {
 pub trait KvStore {
     /// Number of decode lanes (batch slots).
     fn slots(&self) -> usize;
+    /// Lanes not currently serving a request.
     fn free_slots(&self) -> usize;
     /// Per-lane token capacity `C` of the staging layout.
     fn capacity(&self) -> usize;
@@ -191,7 +222,87 @@ pub trait KvStore {
     fn held_blocks(&self, _slot: usize) -> usize {
         0
     }
+    /// Block-pool gauges snapshot.
     fn pool_stats(&self) -> PoolStats;
+
+    // --- multi-tenant quotas (optional capability) -------------------
+    // Backends without tenancy keep these defaults: every request runs
+    // as `TenantId::DEFAULT` with no quota, the pre-tenancy behavior.
+
+    /// Tenant-aware [`KvStore::can_admit`]: additionally requires that
+    /// the take fits the tenant's burst ceiling and leaves every *other*
+    /// tenant's unused reserved floor obtainable.
+    fn can_admit_for(
+        &self,
+        per_layer_tokens: usize,
+        max_new: usize,
+        tenant: TenantId,
+    ) -> bool {
+        let _ = tenant;
+        self.can_admit(per_layer_tokens, max_new)
+    }
+    /// Tenant-aware [`KvStore::could_ever_admit`]: judged against the
+    /// most this tenant could ever obtain (pool minus other tenants'
+    /// full floors, capped by its own ceiling).
+    fn could_ever_admit_for(
+        &self,
+        per_layer_tokens: usize,
+        tenant: TenantId,
+    ) -> bool {
+        let _ = tenant;
+        self.could_ever_admit(per_layer_tokens)
+    }
+    /// Tenant-aware [`KvStore::admit`]: the lane and every block it
+    /// takes are charged to `tenant`.
+    fn admit_for(
+        &mut self,
+        cache: &RequestCache,
+        tenant: TenantId,
+    ) -> Option<usize> {
+        let _ = tenant;
+        self.admit(cache)
+    }
+    /// Install (or replace) a tenant's quota at runtime. No-op for
+    /// backends without tenancy.
+    fn set_tenant_quota(&mut self, tenant: TenantId, quota: TenantQuota) {
+        let _ = (tenant, quota);
+    }
+    /// Tenant a lane is charged to ([`TenantId::DEFAULT`] for non-tenant
+    /// backends or unused lanes).
+    fn tenant_of(&self, slot: usize) -> TenantId {
+        let _ = slot;
+        TenantId::DEFAULT
+    }
+    /// Whether `tenant` currently holds more blocks than its reserved
+    /// floor (always false when no quotas are configured). Preemption
+    /// victim selection prefers lanes of over-quota tenants.
+    fn tenant_over_quota(&self, tenant: TenantId) -> bool {
+        let _ = tenant;
+        false
+    }
+    /// Whether `tenant` sits at its burst ceiling: freeing *other*
+    /// tenants' blocks cannot relieve it, so pool pressure from its
+    /// lanes must be resolved within the tenant (or by finishing the
+    /// lane). Always false without tenancy.
+    fn tenant_at_ceiling(&self, tenant: TenantId) -> bool {
+        let _ = tenant;
+        false
+    }
+    /// Whether preempting a lane of tenant `victim` can increase what
+    /// `pressured` may take from the pool. Victim-selection filter: it
+    /// rules out lanes whose frees are owed straight back to a quota
+    /// (the victim's own protected floor, or any cross-tenant free when
+    /// the pressured tenant is ceiling-bound). Always true without
+    /// tenancy.
+    fn preempt_helps(&self, victim: TenantId, pressured: TenantId) -> bool {
+        let _ = (victim, pressured);
+        true
+    }
+    /// Per-tenant accounting rows for metrics/reporting (empty for
+    /// backends without tenancy).
+    fn tenant_stats(&self) -> Vec<TenantStats> {
+        Vec::new()
+    }
 
     // --- swap-to-host preemption (optional capability) ---------------
     // Backends without host swap keep these defaults: every preemption
@@ -220,6 +331,7 @@ pub trait KvStore {
     fn swap_drop(&mut self, _handle: SwapHandle) -> bool {
         false
     }
+    /// Swap-arena gauges/counters snapshot.
     fn swap_stats(&self) -> SwapStats {
         SwapStats::default()
     }
@@ -257,6 +369,9 @@ pub struct PagedArena {
     /// `lens[slot][layer]` → valid tokens.
     lens: Vec<Vec<usize>>,
     used: Vec<bool>,
+    /// Tenant each lane is serving (meaningful while `used[slot]`; block
+    /// takes for the lane are charged against this tenant's quota).
+    tenants: Vec<TenantId>,
     stage_buf: Option<StageBuf>,
     /// Process-unique store id (upper half of the view version, so a
     /// device-side pinned-slab cache can never confuse two stores).
@@ -277,6 +392,10 @@ fn next_store_id() -> u64 {
 }
 
 impl PagedArena {
+    /// Arena for `b` decode lanes of capacity `c` over a shared block
+    /// pool sized by `cfg` (worst case when `cfg.num_blocks` is `None`),
+    /// with `cfg.tenant_quotas` installed on the allocator and the swap
+    /// arena.
     pub fn new(meta: &ModelMeta, b: usize, c: usize, cfg: PagingConfig) -> Self {
         let l = meta.n_layers;
         let re = meta.n_kv_heads * meta.head_dim;
@@ -288,6 +407,14 @@ impl PagedArena {
             k: HostTensor::zeros(shape.clone()),
             v: HostTensor::zeros(shape),
         });
+        let mut alloc = BlockAllocator::new(num_blocks, bt, re);
+        let mut swap = SwapArena::new(cfg.swap_bytes);
+        for &(t, q) in &cfg.tenant_quotas {
+            alloc.set_quota(t, q);
+            if let Some(sb) = q.swap_bytes {
+                swap.set_tenant_budget(t, sb);
+            }
+        }
         PagedArena {
             l,
             b,
@@ -295,17 +422,93 @@ impl PagedArena {
             kv_heads: meta.n_kv_heads,
             head_dim: meta.head_dim,
             block_tokens: bt,
-            alloc: BlockAllocator::new(num_blocks, bt, re),
+            alloc,
             prefix: PrefixCache::new(cfg.prefix_cache),
-            swap: SwapArena::new(cfg.swap_bytes),
+            swap,
             tables: vec![vec![Vec::new(); l]; b],
             lens: vec![vec![0; l]; b],
             used: vec![false; b],
+            tenants: vec![TenantId::DEFAULT; b],
             stage_buf,
             id: next_store_id(),
             mutations: 0,
             alloc_failures: 0,
         }
+    }
+
+    /// Install (or replace) a tenant's quota after construction (tests,
+    /// runtime re-configuration). Blocks already charged are unaffected.
+    pub fn set_tenant_quota(&mut self, tenant: TenantId, quota: TenantQuota) {
+        self.alloc.set_quota(tenant, quota);
+        if let Some(sb) = quota.swap_bytes {
+            self.swap.set_tenant_budget(tenant, sb);
+        }
+    }
+
+    /// Tenant the lane is charged to ([`TenantId::DEFAULT`] for unused
+    /// lanes).
+    pub fn tenant_of(&self, slot: usize) -> TenantId {
+        if slot < self.b && self.used[slot] {
+            self.tenants[slot]
+        } else {
+            TenantId::DEFAULT
+        }
+    }
+
+    /// Whether `tenant` is bursting past its reserved floor (see
+    /// [`allocator::BlockAllocator::over_quota`]).
+    pub fn tenant_over_quota(&self, tenant: TenantId) -> bool {
+        self.alloc.over_quota(tenant)
+    }
+
+    /// Whether `tenant` sits at its burst ceiling (see
+    /// [`allocator::BlockAllocator::at_ceiling`]).
+    pub fn tenant_at_ceiling(&self, tenant: TenantId) -> bool {
+        self.alloc.at_ceiling(tenant)
+    }
+
+    /// Can preempting a lane of `victim` relieve `pressured`'s block
+    /// shortage?
+    ///
+    ///  * same tenant — always: its own charges drop, which helps
+    ///    against ceiling and floor denials alike;
+    ///  * `pressured` at its burst ceiling — no cross-tenant free can
+    ///    ever help;
+    ///  * otherwise a cross-tenant free helps only if `victim` is over
+    ///    its reserved floor: a victim *inside* its floor hands every
+    ///    freed block straight back to that floor's protected headroom,
+    ///    leaving `available_to(pressured)` unchanged (the floor
+    ///    arithmetic in [`allocator::BlockAllocator::available_to`]);
+    ///  * no quotas configured — everyone helps (pre-tenancy behavior).
+    pub fn preempt_helps(&self, victim: TenantId, pressured: TenantId) -> bool {
+        if victim == pressured {
+            return true;
+        }
+        if self.alloc.at_ceiling(pressured) {
+            return false;
+        }
+        !self.alloc.quotas_configured() || self.alloc.over_quota(victim)
+    }
+
+    /// Per-tenant accounting rows: block charges + quota bounds from the
+    /// allocator, swap bytes from the swap arena. `Σ held_blocks` always
+    /// equals [`PoolStats::blocks_in_use`].
+    pub fn tenant_stats(&self) -> Vec<TenantStats> {
+        self.alloc
+            .tenants()
+            .into_iter()
+            .map(|t| {
+                let q = self.alloc.quota(t);
+                TenantStats {
+                    tenant: t,
+                    held_blocks: self.alloc.held(t),
+                    reserved_blocks: q.reserved_blocks,
+                    ceiling_blocks: q.ceiling_blocks,
+                    swap_bytes_used: self.swap.tenant_used(t),
+                    swap_bytes_budget: self.swap.tenant_cap(t),
+                }
+            })
+            .collect()
     }
 
     /// Slab/table mutation stamp consumed by [`DecodeView::version`]:
@@ -365,10 +568,12 @@ impl PagedArena {
         }
     }
 
+    /// f32 elements per token row (`KV * hd`).
     pub fn row_elems(&self) -> usize {
         self.kv_heads * self.head_dim
     }
 
+    /// Token rows per physical block.
     pub fn block_tokens(&self) -> usize {
         self.block_tokens
     }
@@ -388,18 +593,33 @@ impl PagedArena {
     }
 
     /// Undo a partial admission: drop every reference acquired so far.
+    /// Callers record the failure cause themselves
+    /// ([`PagedArena::count_take_failure`]) — a quota denial and a pool
+    /// shortfall must land in different stats.
     fn rollback(&mut self, acquired: Vec<BlockId>) {
         for id in acquired {
             self.alloc.decref(id);
         }
-        self.alloc_failures += 1;
+    }
+
+    /// Record a failed block take by cause, keeping
+    /// [`PoolStats::alloc_failures`] (pool exhaustion) and
+    /// [`PoolStats::quota_denials`] (tenant quota, counted inside
+    /// [`allocator::BlockAllocator::alloc`]) disjoint. Call *before* any
+    /// rollback decrefs put blocks back.
+    fn count_take_failure(&mut self) {
+        if self.alloc.allocatable() == 0 {
+            self.alloc_failures += 1;
+        }
     }
 
     /// Chunk `len` rows of K/V (row-major, `row_elems`-wide) into freshly
-    /// allocated, unsealed blocks. The caller must have pre-checked pool
-    /// feasibility — every `alloc` here is expected to succeed.
+    /// allocated, unsealed blocks charged to `tenant`. The caller must
+    /// have pre-checked pool *and quota* feasibility — every `alloc` here
+    /// is expected to succeed.
     fn fill_blocks(
         &mut self,
+        tenant: TenantId,
         k_rows: &[f32],
         v_rows: &[f32],
         len: usize,
@@ -410,7 +630,7 @@ impl PagedArena {
         let mut row0 = 0usize;
         while row0 < len {
             let rows = (len - row0).min(bt);
-            let out = self.alloc.alloc().expect("pre-checked block alloc");
+            let out = self.alloc.alloc(tenant).expect("pre-checked block alloc");
             if let Some(old_hash) = out.evicted_hash {
                 self.prefix.remove(old_hash);
             }
@@ -430,15 +650,32 @@ impl PagedArena {
         table
     }
 
-    /// Load a compressed request cache into a free lane, sharing full
-    /// blocks through the prefix cache where the content chain matches.
+    /// Load a compressed request cache into a free lane for the default
+    /// tenant (single-tenant entry points: the engine, pre-tenancy tests
+    /// and tools). See [`PagedArena::admit_for`].
+    pub fn admit(&mut self, cache: &RequestCache) -> Option<usize> {
+        self.admit_for(cache, TenantId::DEFAULT)
+    }
+
+    /// Load a compressed request cache into a free lane for `tenant`,
+    /// sharing full blocks through the prefix cache where the content
+    /// chain matches. Every block the lane takes (fresh allocations and
+    /// revivals of cached blocks, but not shares of live blocks — the
+    /// first-toucher rule) is charged against the tenant's quota; a
+    /// quota denial mid-load rolls the admission back and returns `None`
+    /// exactly like pool exhaustion, so the serving loop's defer path
+    /// handles both.
     ///
     /// NOTE: [`PagedArena::swap_in`] mirrors this fill-and-commit
     /// structure with preserved hashes instead of computed chain hashes —
     /// a fix to the chunk/seal/staging logic here almost certainly
     /// applies there too (the swap differential oracle in
     /// `rust/tests/paging.rs` pins the two together).
-    pub fn admit(&mut self, cache: &RequestCache) -> Option<usize> {
+    pub fn admit_for(
+        &mut self,
+        cache: &RequestCache,
+        tenant: TenantId,
+    ) -> Option<usize> {
         let slot = self.find_free_lane()?;
         assert_eq!(cache.k.len(), self.l, "cache layer count");
         let re = self.row_elems();
@@ -467,17 +704,19 @@ impl PagedArena {
                 if full && self.prefix.enabled {
                     hash = prefix::chain_hash(chain, l, k_rows, v_rows);
                     if let Some(bid) = self.prefix.lookup(hash) {
-                        if self.alloc.revive(bid) {
-                            reused = Some(bid);
-                        } else {
+                        match self.alloc.revive(bid, tenant) {
+                            Revive::Revived => reused = Some(bid),
                             // stale map entry; treat as a miss
-                            self.prefix.remove(hash);
+                            Revive::Stale => self.prefix.remove(hash),
+                            // quota-blocked: fall through to alloc, which
+                            // will be refused too and roll the load back
+                            Revive::OverQuota => {}
                         }
                     }
                 }
                 let bid = match reused {
                     Some(bid) => bid,
-                    None => match self.alloc.alloc() {
+                    None => match self.alloc.alloc(tenant) {
                         Some(out) => {
                             if let Some(old) = out.evicted_hash {
                                 self.prefix.remove(old);
@@ -498,6 +737,7 @@ impl PagedArena {
                             out.id
                         }
                         None => {
+                            self.count_take_failure();
                             self.rollback(acquired);
                             return None;
                         }
@@ -517,6 +757,7 @@ impl PagedArena {
         // fallback (read rows back from the store so shared and fresh
         // blocks take the same path).
         self.used[slot] = true;
+        self.tenants[slot] = tenant;
         for (l, table) in new_tables.iter().enumerate() {
             let mut row = 0usize;
             {
@@ -568,6 +809,9 @@ impl PagedArena {
         self.tables[dst] = tables;
         self.lens[dst] = self.lens[slot].clone();
         self.used[dst] = true;
+        // The clone serves the same tenant; its future appends (and COW
+        // copies) are charged there.
+        self.tenants[dst] = self.tenants[slot];
         let re = self.row_elems();
         for l in 0..self.l {
             let src = self.stage_base(l, slot, 0);
@@ -582,6 +826,8 @@ impl PagedArena {
         Some(dst)
     }
 
+    /// Release a lane and its storage. Returns false if it was not in
+    /// use (double-release guard).
     pub fn release(&mut self, slot: usize) -> bool {
         if slot >= self.b || !self.used[slot] {
             return false;
@@ -595,6 +841,7 @@ impl PagedArena {
         self.tables[slot] = vec![Vec::new(); self.l];
         self.lens[slot] = vec![0; self.l];
         self.used[slot] = false;
+        self.tenants[slot] = TenantId::DEFAULT;
         let re = self.row_elems();
         for l in 0..self.l {
             let base = self.stage_base(l, slot, 0);
@@ -623,6 +870,17 @@ impl PagedArena {
             return None;
         }
         let re = self.row_elems();
+        // The payload size is fully determined by the lane's lens — ask
+        // the arena *before* serializing, so a lane the budget can never
+        // take (per-tenant cap, possibly 0) costs nothing to refuse
+        // instead of an O(lane-bytes) copy per preemption.
+        let predicted: usize = self.lens[slot].iter().sum::<usize>()
+            * re
+            * 2
+            * std::mem::size_of::<f32>();
+        if self.swap.would_refuse(predicted, self.tenants[slot]) {
+            return None;
+        }
         let mut lens = Vec::with_capacity(self.l);
         let mut ks: Vec<Vec<f32>> = Vec::with_capacity(self.l);
         let mut vs: Vec<Vec<f32>> = Vec::with_capacity(self.l);
@@ -656,6 +914,10 @@ impl PagedArena {
             v: vs,
             hashes,
             bytes,
+            // The parked bytes stay charged to the lane's tenant, so one
+            // tenant's preemption churn can only displace its own
+            // entries (per-tenant swap budgets).
+            tenant: self.tenants[slot],
         })?;
         self.release(slot);
         Some(handle)
@@ -682,6 +944,10 @@ impl PagedArena {
         };
         let entry = self.swap.take(handle).expect("checked contains");
         debug_assert_eq!(entry.lens.len(), self.l, "swap entry layer count");
+        // Restored blocks are charged to the tenant the lane was
+        // preempted from; a quota denial mid-restore reports Busy (entry
+        // kept) exactly like a pool shortfall.
+        let tenant = entry.tenant;
         let bt = self.block_tokens;
         let re = self.row_elems();
 
@@ -702,17 +968,17 @@ impl PagedArena {
                 if let Some(h) = hash {
                     if self.prefix.enabled {
                         if let Some(bid) = self.prefix.lookup(h) {
-                            if self.alloc.revive(bid) {
-                                reused = Some(bid);
-                            } else {
-                                self.prefix.remove(h);
+                            match self.alloc.revive(bid, tenant) {
+                                Revive::Revived => reused = Some(bid),
+                                Revive::Stale => self.prefix.remove(h),
+                                Revive::OverQuota => {}
                             }
                         }
                     }
                 }
                 let bid = match reused {
                     Some(bid) => bid,
-                    None => match self.alloc.alloc() {
+                    None => match self.alloc.alloc(tenant) {
                         Some(out) => {
                             if let Some(old) = out.evicted_hash {
                                 self.prefix.remove(old);
@@ -748,6 +1014,7 @@ impl PagedArena {
             new_tables.push(table);
         }
         if shortfall {
+            self.count_take_failure();
             self.rollback(acquired);
             self.swap.put_back(handle, entry);
             return SwapIn::Busy;
@@ -757,6 +1024,7 @@ impl PagedArena {
         // copy under the fallback, reading rows back from the store so
         // shared and fresh blocks take the same path.
         self.used[slot] = true;
+        self.tenants[slot] = tenant;
         for (l, table) in new_tables.iter().enumerate() {
             let mut row = 0usize;
             {
@@ -793,18 +1061,20 @@ impl PagedArena {
 
     /// Whether [`PagedArena::swap_in`] could restore this handle right
     /// now: a free lane plus pool coverage of its blocks (conservative,
-    /// no sharing assumed), with one growth block per layer reserved when
-    /// the request will keep decoding — the same over-commit contract as
-    /// [`KvStore::can_admit`].
+    /// no sharing assumed) *within the owning tenant's quota*, with one
+    /// growth block per layer reserved when the request will keep
+    /// decoding — the same over-commit contract as [`KvStore::can_admit`].
     pub fn can_swap_in(&self, handle: SwapHandle, max_new_remaining: usize) -> bool {
         let Some(e) = self.swap.get(handle) else { return false };
         if self.free_lanes() == 0 || e.max_len() > self.c {
             return false;
         }
         let headroom = if max_new_remaining == 0 { 0 } else { self.l };
-        e.total_blocks(self.block_tokens) + headroom <= self.alloc.allocatable()
+        self.alloc
+            .can_take(e.tenant, e.total_blocks(self.block_tokens) + headroom)
     }
 
+    /// Whether the handle still holds a restorable entry.
     pub fn swap_contains(&self, handle: SwapHandle) -> bool {
         self.swap.contains(handle)
     }
@@ -814,13 +1084,15 @@ impl PagedArena {
         self.swap.drop_entry(handle)
     }
 
+    /// Swap-arena gauges/counters snapshot.
     pub fn swap_stats(&self) -> SwapStats {
         self.swap.stats()
     }
 
     /// Append one decode row per layer, allocating / copy-on-writing tail
-    /// blocks as needed. All-or-nothing: a pool shortfall is detected
-    /// before any mutation.
+    /// blocks as needed; fresh blocks are charged to the lane's tenant.
+    /// All-or-nothing: a pool (or quota) shortfall is detected before any
+    /// mutation and reported as [`AppendResult::PoolExhausted`].
     pub fn append(
         &mut self,
         slot: usize,
@@ -850,8 +1122,15 @@ impl PagedArena {
                 }
             }
         }
-        if self.alloc.allocatable() < needed {
-            self.alloc_failures += 1;
+        let tenant = self.tenants[slot];
+        if !self.alloc.can_take(tenant, needed) {
+            // Exhaustion and quota denial stay disjoint in the stats; no
+            // allocation runs here, so the denial is counted inline.
+            if self.alloc.allocatable() < needed {
+                self.alloc_failures += 1;
+            } else {
+                self.alloc.quota_denials += 1;
+            }
             return AppendResult::PoolExhausted;
         }
 
@@ -860,7 +1139,7 @@ impl PagedArena {
             let len = self.lens[slot][l];
             let row_in_block = len % bt;
             let bid = if row_in_block == 0 {
-                let out = self.alloc.alloc().expect("pre-checked alloc");
+                let out = self.alloc.alloc(tenant).expect("pre-checked alloc");
                 if let Some(old) = out.evicted_hash {
                     self.prefix.remove(old);
                 }
@@ -871,7 +1150,7 @@ impl PagedArena {
                 let meta = self.alloc.meta(cur).clone();
                 if meta.ref_count > 1 {
                     // Copy-on-write: private copy of the shared tail.
-                    let out = self.alloc.alloc().expect("pre-checked alloc");
+                    let out = self.alloc.alloc(tenant).expect("pre-checked alloc");
                     if let Some(old) = out.evicted_hash {
                         self.prefix.remove(old);
                     }
@@ -936,18 +1215,18 @@ impl PagedArena {
 
         // Feasibility: all shrinking layers are gathered and decref'd
         // BEFORE any allocation (see below), so the rebuild draws from
-        // allocatable() + every exclusively-owned old block.
+        // allocatable() + every exclusively-owned old block — evaluated
+        // under the lane tenant's quota, with the releases' per-owner
+        // uncharges simulated (a freed block may be owed to another
+        // tenant's reserved floor rather than to this rebuild).
+        let tenant = self.tenants[slot];
         let mut needed_new = 0usize;
-        let mut freeable = 0usize;
+        let mut released: Vec<BlockId> = Vec::new();
         for &l in &shrinking {
             needed_new += ceil_div(keep[l].len(), bt);
-            for &bid in &self.tables[slot][l] {
-                if self.alloc.meta(bid).ref_count == 1 {
-                    freeable += 1;
-                }
-            }
+            released.extend_from_slice(&self.tables[slot][l]);
         }
-        if self.alloc.allocatable() + freeable < needed_new {
+        if !self.alloc.can_take_after_release(tenant, needed_new, &released) {
             return 0;
         }
 
@@ -989,7 +1268,7 @@ impl PagedArena {
         // every alloc() succeeds.
         for (l, old_len, tk, tv) in gathered {
             let new_len = keep[l].len();
-            self.tables[slot][l] = self.fill_blocks(&tk, &tv, new_len);
+            self.tables[slot][l] = self.fill_blocks(tenant, &tk, &tv, new_len);
             self.lens[slot][l] = new_len;
             // Staging fallback: survivors first, zero the trimmed tail.
             let base = self.stage_base(l, slot, 0);
@@ -1006,10 +1285,12 @@ impl PagedArena {
         in_use_before.saturating_sub(self.alloc.blocks_in_use())
     }
 
+    /// Valid rows per layer for a lane.
     pub fn layer_lens(&self, slot: usize) -> Vec<usize> {
         self.lens[slot].clone()
     }
 
+    /// Materialize dense decode inputs (fallback / oracle path).
     pub fn stage(&self) -> Staged {
         match &self.stage_buf {
             // Fallback: the incrementally-maintained dense copy (one clone
@@ -1034,6 +1315,7 @@ impl PagedArena {
         }
     }
 
+    /// Block-pool gauges snapshot.
     pub fn pool_stats(&self) -> PoolStats {
         PoolStats {
             blocks_total: self.alloc.blocks_total(),
@@ -1046,9 +1328,11 @@ impl PagedArena {
             cow_copies: self.alloc.cow_copies,
             evictions: self.alloc.evictions,
             alloc_failures: self.alloc_failures,
+            quota_denials: self.alloc.quota_denials,
         }
     }
 
+    /// Lanes not currently serving a request.
     pub fn free_lanes(&self) -> usize {
         self.used.iter().filter(|u| !**u).count()
     }
@@ -1068,6 +1352,15 @@ impl KvStore for PagedArena {
     }
 
     fn can_admit(&self, per_layer_tokens: usize, max_new: usize) -> bool {
+        self.can_admit_for(per_layer_tokens, max_new, TenantId::DEFAULT)
+    }
+
+    fn can_admit_for(
+        &self,
+        per_layer_tokens: usize,
+        max_new: usize,
+        tenant: TenantId,
+    ) -> bool {
         if self.free_lanes() == 0 || per_layer_tokens > self.c {
             return false;
         }
@@ -1077,20 +1370,62 @@ impl KvStore for PagedArena {
         // over-commit): it is absorbed by block compaction and, failing
         // that, preemption — reserving worst-case `max_new` growth up
         // front would forfeit most of the batching the paged pool exists
-        // to provide.
+        // to provide. `can_take` additionally holds the take to the
+        // tenant's ceiling and to the other tenants' unused reserved
+        // floors.
         let headroom = if max_new == 0 { 0 } else { self.l };
-        self.blocks_for(per_layer_tokens) + headroom
-            <= self.alloc.allocatable()
+        self.alloc
+            .can_take(tenant, self.blocks_for(per_layer_tokens) + headroom)
     }
 
     fn could_ever_admit(&self, per_layer_tokens: usize) -> bool {
+        self.could_ever_admit_for(per_layer_tokens, TenantId::DEFAULT)
+    }
+
+    fn could_ever_admit_for(
+        &self,
+        per_layer_tokens: usize,
+        tenant: TenantId,
+    ) -> bool {
         per_layer_tokens <= self.c
             && self.blocks_for(per_layer_tokens) + self.l
-                <= self.alloc.blocks_total()
+                <= self.alloc.max_ever_available(tenant)
     }
 
     fn admit(&mut self, cache: &RequestCache) -> Option<usize> {
         PagedArena::admit(self, cache)
+    }
+
+    fn admit_for(
+        &mut self,
+        cache: &RequestCache,
+        tenant: TenantId,
+    ) -> Option<usize> {
+        PagedArena::admit_for(self, cache, tenant)
+    }
+
+    fn set_tenant_quota(&mut self, tenant: TenantId, quota: TenantQuota) {
+        PagedArena::set_tenant_quota(self, tenant, quota)
+    }
+
+    fn tenant_of(&self, slot: usize) -> TenantId {
+        PagedArena::tenant_of(self, slot)
+    }
+
+    fn tenant_over_quota(&self, tenant: TenantId) -> bool {
+        PagedArena::tenant_over_quota(self, tenant)
+    }
+
+    fn tenant_at_ceiling(&self, tenant: TenantId) -> bool {
+        PagedArena::tenant_at_ceiling(self, tenant)
+    }
+
+    fn preempt_helps(&self, victim: TenantId, pressured: TenantId) -> bool {
+        PagedArena::preempt_helps(self, victim, pressured)
+    }
+
+    fn tenant_stats(&self) -> Vec<TenantStats> {
+        PagedArena::tenant_stats(self)
     }
 
     fn release(&mut self, slot: usize) -> bool {
@@ -1617,6 +1952,87 @@ mod tests {
             SwapIn::Restored(s) => assert_eq!(pa.layer_lens(s), vec![4, 4]),
             other => panic!("expected restore, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn tenant_quota_bounds_admission_and_stats_reconcile() {
+        let m = meta();
+        let cfg = PagingConfig {
+            block_tokens: 2,
+            num_blocks: Some(8),
+            prefix_cache: false,
+            tenant_quotas: vec![(TenantId(1), TenantQuota::reserved(4))],
+            ..Default::default()
+        };
+        let mut pa = PagedArena::new(&m, 2, 8, cfg);
+        // heavy tenant 2 may take only pool - light tenant's floor = 4
+        assert!(KvStore::can_admit_for(&pa, 4, 0, TenantId(2)));
+        assert!(
+            !KvStore::can_admit_for(&pa, 4, 1, TenantId(2)),
+            "growth headroom would eat the light tenant's floor"
+        );
+        let heavy = cache_with(&m, &[4, 4], 20.0);
+        let s_heavy = pa.admit_for(&heavy, TenantId(2)).unwrap();
+        // the floor protects the remaining 4 blocks: a second heavy admit
+        // rolls back on quota while the light tenant still fits
+        assert!(pa.admit_for(&heavy, TenantId(2)).is_none());
+        assert!(pa.pool_stats().quota_denials > 0);
+        let light = cache_with(&m, &[4, 4], 21.0);
+        let s_light = pa.admit_for(&light, TenantId(1)).unwrap();
+        // charges reconcile with pool accounting
+        let ts = pa.tenant_stats();
+        let held: usize = ts.iter().map(|t| t.held_blocks).sum();
+        assert_eq!(held, pa.pool_stats().blocks_in_use);
+        assert!(pa.tenant_over_quota(TenantId(2)), "bursting past floor 0");
+        assert!(!pa.tenant_over_quota(TenantId(1)), "within its floor");
+        assert_eq!(pa.tenant_of(s_heavy), TenantId(2));
+        assert_eq!(pa.tenant_of(s_light), TenantId(1));
+        // ever-admissible is floor-aware per tenant
+        assert!(!KvStore::could_ever_admit_for(&pa, 6, TenantId(2)));
+        assert!(KvStore::could_ever_admit_for(&pa, 6, TenantId(1)));
+        pa.release(s_heavy);
+        pa.release(s_light);
+        assert!(pa.tenant_stats().iter().all(|t| t.held_blocks == 0));
+    }
+
+    #[test]
+    fn preempt_helps_filters_useless_victims() {
+        let m = meta();
+        let cfg = PagingConfig {
+            block_tokens: 2,
+            num_blocks: Some(8),
+            prefix_cache: false,
+            tenant_quotas: vec![
+                (TenantId(1), TenantQuota::reserved(4)),
+                (TenantId(2), TenantQuota::bounded(0, 4)),
+            ],
+            ..Default::default()
+        };
+        let mut pa = PagedArena::new(&m, 2, 8, cfg);
+        // T1 sits exactly at its floor; T2 bursts exactly to its ceiling
+        let s1 =
+            pa.admit_for(&cache_with(&m, &[4, 4], 30.0), TenantId(1)).unwrap();
+        let s2 =
+            pa.admit_for(&cache_with(&m, &[4, 4], 31.0), TenantId(2)).unwrap();
+        assert!(pa.tenant_at_ceiling(TenantId(2)));
+        // own lanes always help
+        assert!(pa.preempt_helps(TenantId(2), TenantId(2)));
+        // ceiling-bound pressured tenant: no cross-tenant free can help
+        assert!(!pa.preempt_helps(TenantId(1), TenantId(2)));
+        // a victim inside its own floor hands its frees back to the
+        // floor — useless to any third tenant
+        assert!(!pa.preempt_helps(TenantId(1), TenantId(3)));
+        // an over-floor victim frees real headroom
+        assert!(pa.preempt_helps(TenantId(2), TenantId(3)));
+        let _ = (s1, s2);
+        // without quotas everyone helps (pre-tenancy behavior)
+        let pb = PagedArena::new(
+            &m,
+            1,
+            8,
+            PagingConfig { block_tokens: 2, ..Default::default() },
+        );
+        assert!(pb.preempt_helps(TenantId(7), TenantId(9)));
     }
 
     #[test]

@@ -50,12 +50,16 @@ pub fn chain_hash(prev: u64, layer: usize, k_rows: &[f32], v_rows: &[f32]) -> u6
 #[derive(Debug)]
 pub struct PrefixCache {
     map: HashMap<u64, BlockId>,
+    /// Whether prefix reuse is on (off = every lookup is skipped).
     pub enabled: bool,
+    /// Lookups that found a registered block.
     pub hits: u64,
+    /// Lookups that missed.
     pub misses: u64,
 }
 
 impl PrefixCache {
+    /// Empty cache; `enabled = false` turns registration/lookup off.
     pub fn new(enabled: bool) -> Self {
         PrefixCache { map: HashMap::new(), enabled, hits: 0, misses: 0 }
     }
@@ -71,22 +75,27 @@ impl PrefixCache {
         got
     }
 
+    /// Register a sealed block under its chain hash.
     pub fn insert(&mut self, hash: u64, id: BlockId) {
         self.map.insert(hash, id);
     }
 
+    /// Unregister a hash (block evicted, diverged, or stale).
     pub fn remove(&mut self, hash: u64) {
         self.map.remove(&hash);
     }
 
+    /// Registered hashes.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when nothing is registered.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Hit fraction over all lookups (0 when none happened).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {

@@ -19,17 +19,31 @@
 //! `budget_bytes == 0` disables swapping entirely (pure recompute-resume,
 //! the pre-swap behavior).
 //!
+//! **Per-tenant budgets**: each entry is charged to the tenant of the
+//! lane it came from, and a tenant may hold at most its configured swap
+//! byte cap ([`SwapArena::set_tenant_budget`]; the arena-wide budget by
+//! default). A tenant over its own cap first drops *its own* oldest
+//! entries; if the lane alone exceeds the cap the swap-out is refused —
+//! so one tenant's preemption churn degrades only that tenant to
+//! recompute-resume, never its neighbours. Global pressure still evicts
+//! oldest-first across tenants.
+//!
 //! The arena is deliberately dumb storage: which lane to swap, when to
 //! restore, and what to do on `Gone`/`Busy` are the serving loop's
 //! decisions (`server.rs`); block allocation and prefix re-sharing on
 //! restore are `PagedArena::swap_in`'s.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use super::tenant::TenantId;
 
 /// Opaque ticket for a lane swapped out to host memory. Rides on the
 /// scheduler's resume-queue entry; consumed by a successful swap-in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct SwapHandle(pub u64);
+pub struct SwapHandle(
+    /// Raw arena entry id.
+    pub u64,
+);
 
 /// Outcome of a swap-in attempt.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,6 +66,7 @@ pub struct SwapEntry {
     pub lens: Vec<usize>,
     /// `[layer][len * row_elems]` K rows in logical order.
     pub k: Vec<Vec<f32>>,
+    /// V rows, same layout as `k`.
     pub v: Vec<Vec<f32>>,
     /// `[layer][block]` chain hash of each block at swap-out: `Some` for
     /// full sealed blocks (so swap-in re-shares them through the prefix
@@ -60,6 +75,10 @@ pub struct SwapEntry {
     pub hashes: Vec<Vec<Option<u64>>>,
     /// Host bytes held by the K + V payload.
     pub bytes: usize,
+    /// Tenant of the lane this entry was serialized from; the bytes are
+    /// charged against this tenant's swap budget, and a restore's block
+    /// allocations are charged to it too.
+    pub tenant: TenantId,
 }
 
 impl SwapEntry {
@@ -70,6 +89,7 @@ impl SwapEntry {
         self.lens.iter().map(|&n| (n + bt - 1) / bt).sum()
     }
 
+    /// Longest per-layer length (lane-capacity check on restore).
     pub fn max_len(&self) -> usize {
         self.lens.iter().copied().max().unwrap_or(0)
     }
@@ -78,8 +98,11 @@ impl SwapEntry {
 /// Aggregate swap gauges/counters for metrics and reporting.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SwapStats {
+    /// Configured arena-wide byte budget.
     pub budget_bytes: usize,
+    /// Bytes currently parked across all tenants.
     pub used_bytes: usize,
+    /// Live parked entries.
     pub entries: usize,
     /// Lanes serialized to host.
     pub swap_outs: u64,
@@ -99,6 +122,11 @@ pub struct SwapStats {
 pub struct SwapArena {
     budget: usize,
     used: usize,
+    /// Per-tenant byte caps; tenants absent here get the arena-wide
+    /// `budget`.
+    tenant_budgets: BTreeMap<TenantId, usize>,
+    /// Bytes currently parked per tenant.
+    used_by: BTreeMap<TenantId, usize>,
     entries: HashMap<u64, SwapEntry>,
     /// Insertion order, oldest in front. May hold ids already consumed by
     /// a swap-in or an explicit drop — validated against `entries` when
@@ -113,10 +141,13 @@ pub struct SwapArena {
 }
 
 impl SwapArena {
+    /// Arena with an overall byte budget (`0` disables swapping).
     pub fn new(budget_bytes: usize) -> Self {
         SwapArena {
             budget: budget_bytes,
             used: 0,
+            tenant_budgets: BTreeMap::new(),
+            used_by: BTreeMap::new(),
             entries: HashMap::new(),
             order: VecDeque::new(),
             next: 1,
@@ -127,38 +158,114 @@ impl SwapArena {
         }
     }
 
+    /// Whether swapping is enabled at all.
     pub fn enabled(&self) -> bool {
         self.budget > 0
     }
 
-    /// Park a serialized lane. Evicts oldest entries while over budget;
-    /// refuses (`None`) when the entry alone cannot fit — the caller
-    /// falls back to recompute-resume and the lane is left untouched.
+    /// Cap the bytes `tenant` may park (clamped to the arena budget at
+    /// check time; `0` disables swapping for this tenant only).
+    pub fn set_tenant_budget(&mut self, tenant: TenantId, bytes: usize) {
+        self.tenant_budgets.insert(tenant, bytes);
+    }
+
+    /// Effective byte cap for `tenant` (the arena budget unless
+    /// overridden).
+    pub fn tenant_cap(&self, tenant: TenantId) -> usize {
+        self.tenant_budgets
+            .get(&tenant)
+            .copied()
+            .unwrap_or(self.budget)
+            .min(self.budget)
+    }
+
+    /// Bytes currently parked by `tenant`.
+    pub fn tenant_used(&self, tenant: TenantId) -> usize {
+        self.used_by.get(&tenant).copied().unwrap_or(0)
+    }
+
+    fn remove_entry(&mut self, id: u64) -> Option<SwapEntry> {
+        let e = self.entries.remove(&id)?;
+        self.used -= e.bytes;
+        if let Some(u) = self.used_by.get_mut(&e.tenant) {
+            *u = u.saturating_sub(e.bytes);
+        }
+        Some(e)
+    }
+
+    /// Pre-serialization gate: would an entry of `bytes` for `tenant` be
+    /// refused outright (it alone exceeds the tenant's cap or the arena
+    /// budget)? Counts the refusal, so callers can skip the O(lane)
+    /// serialization entirely — a tenant pinned to `swap_bytes: Some(0)`
+    /// would otherwise pay a full KV copy on every preemption just to be
+    /// told no.
+    pub fn would_refuse(&mut self, bytes: usize, tenant: TenantId) -> bool {
+        if bytes > self.tenant_cap(tenant) {
+            self.refused += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Oldest live entry belonging to `tenant`, if any (its order id is
+    /// left in the queue as a stale marker, per the usual discipline).
+    fn oldest_of(&self, tenant: TenantId) -> Option<u64> {
+        self.order
+            .iter()
+            .copied()
+            .find(|id| self.entries.get(id).is_some_and(|e| e.tenant == tenant))
+    }
+
+    /// Park a serialized lane, charging `entry.tenant`. Pressure ladder:
+    /// the tenant's *own* oldest entries are dropped while it is over its
+    /// per-tenant cap, then globally-oldest entries are dropped while the
+    /// arena is over the overall budget. Refuses (`None`) only when the
+    /// entry alone cannot fit its tenant's cap (or the arena budget) —
+    /// the caller falls back to recompute-resume for that tenant and the
+    /// lane is left untouched.
     pub fn insert(&mut self, entry: SwapEntry) -> Option<SwapHandle> {
-        if entry.bytes > self.budget {
+        let cap = self.tenant_cap(entry.tenant);
+        if entry.bytes > cap {
             self.refused += 1;
             return None;
         }
+        // Per-tenant pressure: a bursty tenant cannibalizes itself only.
+        // (Self-evicted ids stay in `order` as stale markers; unlike
+        // global-pressure eviction they are not popped on the way out, so
+        // prune here keeps the queue bounded under per-tenant churn.)
+        let mut self_evicted = false;
+        while self.tenant_used(entry.tenant) + entry.bytes > cap {
+            let Some(old) = self.oldest_of(entry.tenant) else { break };
+            self.remove_entry(old);
+            self.dropped += 1;
+            self_evicted = true;
+        }
+        if self_evicted {
+            self.prune_order();
+        }
+        // Global pressure: oldest-first across tenants, as before.
         while self.used + entry.bytes > self.budget {
             let Some(old) = self.order.pop_front() else { break };
-            if let Some(e) = self.entries.remove(&old) {
-                self.used -= e.bytes;
+            if self.remove_entry(old).is_some() {
                 self.dropped += 1;
             }
         }
         let id = self.next;
         self.next += 1;
         self.used += entry.bytes;
+        *self.used_by.entry(entry.tenant).or_insert(0) += entry.bytes;
         self.entries.insert(id, entry);
         self.order.push_back(id);
         self.swap_outs += 1;
         Some(SwapHandle(id))
     }
 
+    /// Whether the handle still refers to a live entry.
     pub fn contains(&self, h: SwapHandle) -> bool {
         self.entries.contains_key(&h.0)
     }
 
+    /// Borrow an entry (admission-gate sizing).
     pub fn get(&self, h: SwapHandle) -> Option<&SwapEntry> {
         self.entries.get(&h.0)
     }
@@ -169,9 +276,7 @@ impl SwapArena {
     /// its eviction priority and `insert` can always reach it), which is
     /// why pruning happens only on *final* removals.
     pub fn take(&mut self, h: SwapHandle) -> Option<SwapEntry> {
-        let e = self.entries.remove(&h.0)?;
-        self.used -= e.bytes;
-        Some(e)
+        self.remove_entry(h.0)
     }
 
     /// Drop consumed ids from the order queue once stale ids dominate it
@@ -193,14 +298,14 @@ impl SwapArena {
     /// its eviction priority is preserved.
     pub fn put_back(&mut self, h: SwapHandle, entry: SwapEntry) {
         self.used += entry.bytes;
+        *self.used_by.entry(entry.tenant).or_insert(0) += entry.bytes;
         self.entries.insert(h.0, entry);
     }
 
     /// Discard an entry (request finished, rejected, or restored).
     pub fn drop_entry(&mut self, h: SwapHandle) -> bool {
-        match self.entries.remove(&h.0) {
-            Some(e) => {
-                self.used -= e.bytes;
+        match self.remove_entry(h.0) {
+            Some(_) => {
                 self.prune_order();
                 true
             }
@@ -215,6 +320,7 @@ impl SwapArena {
         self.prune_order();
     }
 
+    /// Aggregate gauges/counters snapshot.
     pub fn stats(&self) -> SwapStats {
         SwapStats {
             budget_bytes: self.budget,
@@ -232,14 +338,19 @@ impl SwapArena {
 mod tests {
     use super::*;
 
-    fn entry(bytes: usize) -> SwapEntry {
+    fn entry_for(bytes: usize, tenant: TenantId) -> SwapEntry {
         SwapEntry {
             lens: vec![bytes / 8, bytes / 8],
             k: vec![Vec::new(); 2],
             v: vec![Vec::new(); 2],
             hashes: vec![Vec::new(); 2],
             bytes,
+            tenant,
         }
+    }
+
+    fn entry(bytes: usize) -> SwapEntry {
+        entry_for(bytes, TenantId::DEFAULT)
     }
 
     #[test]
@@ -325,6 +436,71 @@ mod tests {
     }
 
     #[test]
+    fn per_tenant_budget_isolates_neighbours() {
+        let t1 = TenantId(1);
+        let t2 = TenantId(2);
+        let mut a = SwapArena::new(100);
+        a.set_tenant_budget(t1, 40);
+        // a lane bigger than the tenant cap is refused outright, even
+        // though the arena as a whole could take it
+        assert!(a.insert(entry_for(50, t1)).is_none());
+        assert_eq!(a.stats().refused, 1);
+        // within the cap: fine, and charged to t1
+        let h0 = a.insert(entry_for(30, t1)).unwrap();
+        assert_eq!(a.tenant_used(t1), 30);
+        // t1 over its own cap drops its OWN oldest entry, not t2's
+        let h2 = a.insert(entry_for(50, t2)).unwrap();
+        let h1 = a.insert(entry_for(30, t1)).unwrap();
+        assert!(!a.contains(h0), "t1 self-evicted its oldest");
+        assert!(a.contains(h2), "t2 untouched by t1's churn");
+        assert!(a.contains(h1));
+        assert_eq!(a.tenant_used(t1), 30);
+        assert_eq!(a.tenant_used(t2), 50);
+        assert_eq!(a.stats().dropped, 1);
+        // uncapped tenants still fall under the arena-wide budget
+        assert_eq!(a.tenant_cap(t2), 100);
+        // take/put_back keep per-tenant accounting exact
+        let e = a.take(h1).unwrap();
+        assert_eq!(a.tenant_used(t1), 0);
+        a.put_back(h1, e);
+        assert_eq!(a.tenant_used(t1), 30);
+        assert!(a.drop_entry(h1));
+        assert_eq!(a.tenant_used(t1), 0);
+    }
+
+    #[test]
+    fn order_queue_bounded_under_per_tenant_self_eviction_churn() {
+        // Per-tenant eviction leaves stale order ids behind; the insert
+        // path must prune them or a capped tenant churning swap-outs
+        // grows the queue forever.
+        let t1 = TenantId(1);
+        let mut a = SwapArena::new(10_000);
+        a.set_tenant_budget(t1, 25);
+        for _ in 0..500 {
+            // each insert (20 bytes) self-evicts the previous one
+            let _ = a.insert(entry_for(20, t1)).unwrap();
+        }
+        assert!(
+            a.order.len() <= 2 * a.entries.len() + 8,
+            "order queue leaked under self-eviction: {} ids for {} entries",
+            a.order.len(),
+            a.entries.len()
+        );
+        assert_eq!(a.tenant_used(t1), 20);
+        assert_eq!(a.stats().dropped, 499);
+    }
+
+    #[test]
+    fn zero_tenant_budget_disables_swap_for_that_tenant_only() {
+        let t1 = TenantId(1);
+        let mut a = SwapArena::new(100);
+        a.set_tenant_budget(t1, 0);
+        assert!(a.insert(entry_for(10, t1)).is_none());
+        assert_eq!(a.stats().refused, 1);
+        assert!(a.insert(entry(10)).is_some(), "other tenants unaffected");
+    }
+
+    #[test]
     fn entry_block_math() {
         let e = SwapEntry {
             lens: vec![5, 0, 8],
@@ -332,6 +508,7 @@ mod tests {
             v: vec![Vec::new(); 3],
             hashes: vec![Vec::new(); 3],
             bytes: 0,
+            tenant: TenantId::DEFAULT,
         };
         assert_eq!(e.total_blocks(4), 2 + 0 + 2);
         assert_eq!(e.max_len(), 8);

@@ -1,0 +1,146 @@
+//! Tenant identity and per-tenant resource quotas for the shared block
+//! pool.
+//!
+//! FastKV's decoupling of the TSP rate from the KV retention rate only
+//! pays off at serving scale if many users can share one block pool
+//! without a single heavy tenant starving the rest. This module supplies
+//! the vocabulary: a [`TenantId`] rides on every request, and a
+//! [`TenantQuota`] bounds what that tenant may take from the shared
+//! resources — a **reserved floor** of blocks other tenants can never
+//! consume, a **burstable ceiling** it may grow into when the pool has
+//! slack, and an optional cap on the host swap bytes its preempted lanes
+//! may park.
+//!
+//! # Charging model: first-toucher
+//!
+//! Prefix-shared blocks are charged to **exactly one** tenant — the one
+//! whose allocation or prefix-cache revival brought the block into its
+//! current live (`ref_count > 0`) period — for that entire live period.
+//! Later sharers (prefix hits on a live block, `fork`) ride free; the
+//! charge is dropped only when the last reference goes away. The
+//! alternative, fractional charging per referencing tenant, would need
+//! per-(block, tenant) refcounts and would make `can_admit` verdicts
+//! depend on sharing that is only discovered *during* admission; the
+//! first-toucher rule keeps the invariant `Σ_tenants held == blocks_in_use`
+//! exact at every step, which the quota tests and the per-tenant metrics
+//! gauges rely on. The documented consequence: a tenant stays charged for
+//! a block even if it drops its own reference while another tenant still
+//! holds one. In practice sharing is overwhelmingly same-prompt traffic
+//! where the first toucher is also the longest holder.
+
+/// Identity of the tenant (user, organization, API key, ...) a request is
+/// served under. Dense small integers by convention — the serving CLIs
+/// number tenants `0..N` — but any `u32` works.
+#[derive(
+    Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash,
+)]
+pub struct TenantId(
+    /// Raw tenant number.
+    pub u32,
+);
+
+impl TenantId {
+    /// The single-tenant default every non-tenant-aware entry point uses
+    /// (the engine, legacy `submit`, tests that predate quotas).
+    pub const DEFAULT: TenantId = TenantId(0);
+}
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Per-tenant resource bounds enforced by the block allocator and the
+/// swap arena. Tenants without a configured quota get the default: no
+/// reserved floor, unlimited ceiling, the arena-wide swap budget —
+/// i.e. exactly the pre-quota behavior.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantQuota {
+    /// Blocks guaranteed to this tenant: the allocator refuses to hand
+    /// other tenants blocks that would eat into the *unused* part of this
+    /// floor, so up to `reserved_blocks` are always obtainable by this
+    /// tenant no matter how hard the rest of the pool is contended.
+    pub reserved_blocks: usize,
+    /// Hard cap on blocks charged to this tenant at once (burst ceiling
+    /// over the shared pool). `usize::MAX` means no cap.
+    pub ceiling_blocks: usize,
+    /// Host swap bytes this tenant's preempted lanes may hold in the
+    /// [`super::swap::SwapArena`]. `None` inherits the arena-wide budget;
+    /// `Some(0)` disables swapping for this tenant (its preemptions
+    /// always recompute-resume).
+    pub swap_bytes: Option<usize>,
+}
+
+impl Default for TenantQuota {
+    fn default() -> Self {
+        TenantQuota {
+            reserved_blocks: 0,
+            ceiling_blocks: usize::MAX,
+            swap_bytes: None,
+        }
+    }
+}
+
+impl TenantQuota {
+    /// Quota with a reserved floor and no burst ceiling — the common
+    /// "protect the light tenants" configuration the serve CLIs expose as
+    /// `--quota-blocks`.
+    pub fn reserved(blocks: usize) -> Self {
+        TenantQuota { reserved_blocks: blocks, ..Default::default() }
+    }
+
+    /// Quota with both a floor and a ceiling.
+    pub fn bounded(reserved: usize, ceiling: usize) -> Self {
+        TenantQuota {
+            reserved_blocks: reserved,
+            ceiling_blocks: ceiling,
+            ..Default::default()
+        }
+    }
+}
+
+/// Point-in-time per-tenant accounting, published as metrics gauges by
+/// the server (`tenant_{id}_*`) and reported by the serve demos. Sourced
+/// from the allocator's charge table and the swap arena's per-tenant byte
+/// accounting; `Σ held_blocks` over all tenants always equals the pool's
+/// `blocks_in_use`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantStats {
+    /// Which tenant this row describes.
+    pub tenant: TenantId,
+    /// Blocks currently charged to the tenant (first-toucher rule).
+    pub held_blocks: usize,
+    /// Configured reserved floor (0 when no quota is set).
+    pub reserved_blocks: usize,
+    /// Configured burst ceiling (`usize::MAX` when uncapped).
+    pub ceiling_blocks: usize,
+    /// Host swap bytes currently held by this tenant's parked lanes.
+    pub swap_bytes_used: usize,
+    /// Effective swap byte cap for this tenant (the arena-wide budget
+    /// unless the quota overrides it).
+    pub swap_bytes_budget: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_quota_is_unconstrained() {
+        let q = TenantQuota::default();
+        assert_eq!(q.reserved_blocks, 0);
+        assert_eq!(q.ceiling_blocks, usize::MAX);
+        assert_eq!(q.swap_bytes, None);
+    }
+
+    #[test]
+    fn constructors() {
+        let q = TenantQuota::reserved(8);
+        assert_eq!((q.reserved_blocks, q.ceiling_blocks), (8, usize::MAX));
+        let q = TenantQuota::bounded(4, 12);
+        assert_eq!((q.reserved_blocks, q.ceiling_blocks), (4, 12));
+        assert_eq!(TenantId::DEFAULT, TenantId(0));
+        assert_eq!(format!("{}", TenantId(3)), "3");
+    }
+}

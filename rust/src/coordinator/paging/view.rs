@@ -35,13 +35,18 @@ pub struct DecodeView<'a> {
     /// 32 bits count its mutations. Lets a device-side pinned-buffer cache
     /// skip re-uploading an unchanged slab (`runtime::Runtime::run_pinned`).
     pub version: u64,
+    /// Layers.
     pub l: usize,
+    /// Decode lanes (batch slots).
     pub b: usize,
     /// Per-lane staging capacity `C` of the owning store (the dense layout
     /// this view replaces; `gather_dense` reproduces it exactly).
     pub capacity: usize,
+    /// Token rows per physical block.
     pub block_tokens: usize,
+    /// KV heads per token row.
     pub kv_heads: usize,
+    /// Elements per head.
     pub head_dim: usize,
     /// Physical blocks in the slab.
     pub num_blocks: usize,
@@ -67,6 +72,7 @@ impl<'a> DecodeView<'a> {
         self.lens[layer * self.b + slot] as usize
     }
 
+    /// True when no lane holds any valid rows.
     pub fn is_empty(&self) -> bool {
         self.lens.iter().all(|&n| n == 0)
     }
@@ -92,6 +98,7 @@ impl<'a> DecodeView<'a> {
         &self.slab_k[base..base + self.row_elems()]
     }
 
+    /// V-plane counterpart of [`DecodeView::k_row`].
     pub fn v_row(&self, layer: usize, slot: usize, row: usize) -> &[f32] {
         let base = self.row_base(layer, slot, row);
         &self.slab_v[base..base + self.row_elems()]

@@ -5,6 +5,13 @@
 //! long and run on the same device), and decoding proceeds in lockstep
 //! batched steps between admissions. This mirrors the vLLM-style router
 //! architecture referenced in DESIGN.md, scaled to one device.
+//!
+//! Under multi-tenant quotas admission is *fair* rather than strictly
+//! head-of-line: [`Scheduler::pop_admissible`] takes the first queued
+//! request that passes the memory-and-quota gate, so a light tenant's
+//! request steps past a quota-blocked heavy one instead of starving
+//! behind it, and [`pick_preemption_victim`] prefers lanes of tenants
+//! bursting past their reserved floor.
 
 use std::collections::VecDeque;
 
@@ -19,16 +26,29 @@ pub enum Action {
     Idle,
 }
 
-/// Choose which active lane to preempt when the block pool runs dry:
-/// the lane with the least decode progress (fewest generated tokens)
-/// loses the least recompute work on resume; ties break toward the lane
-/// holding the fewest blocks (its re-admission is cheapest). Candidates
-/// are `(progress, held_blocks)` pairs; returns the winning index.
-pub fn pick_preemption_victim(candidates: &[(usize, usize)]) -> Option<usize> {
+/// Choose which active lane to preempt when the block pool runs dry.
+/// Candidates are `(over_quota, progress, held_blocks)` triples:
+///
+/// 1. lanes whose **tenant is bursting past its reserved floor**
+///    (`over_quota`, from `KvStore::tenant_over_quota`) are preferred —
+///    quota pressure lands on the tenant causing it, not on a tenant
+///    inside its guaranteed floor (always `false` when no quotas are
+///    configured, restoring the pre-tenancy ordering);
+/// 2. then the lane with the least decode progress (fewest generated
+///    tokens), which loses the least recompute work on resume;
+/// 3. ties break toward the lane holding the fewest blocks (its
+///    re-admission is cheapest).
+///
+/// Returns the winning index.
+pub fn pick_preemption_victim(
+    candidates: &[(bool, usize, usize)],
+) -> Option<usize> {
     candidates
         .iter()
         .enumerate()
-        .min_by_key(|(_, &(progress, blocks))| (progress, blocks))
+        .min_by_key(|(_, &(over_quota, progress, blocks))| {
+            (!over_quota, progress, blocks)
+        })
         .map(|(i, _)| i)
 }
 
@@ -144,6 +164,44 @@ impl<T> Scheduler<T> {
             }
         }
     }
+
+    /// Whether any queued request passes the `ok` predicate (the serving
+    /// loop's memory-and-quota admission gate). Companion to
+    /// [`Scheduler::pop_admissible`].
+    pub fn has_admissible(&self, mut ok: impl FnMut(&T) -> bool) -> bool {
+        self.resume.iter().any(|t| ok(t)) || self.queue.iter().any(|t| ok(t))
+    }
+
+    /// Fair admission: pop the first request that passes the `ok`
+    /// predicate instead of head-blocking on an inadmissible one.
+    /// Preempted requests are still scanned first (FIFO among
+    /// themselves), then the regular queue per the configured order. With
+    /// a single tenant this degrades gracefully — the head is admissible
+    /// whenever anything is, since every request draws on the same pool —
+    /// but under per-tenant quotas it is what lets a light tenant's
+    /// request step past a quota-blocked heavy one at the head of the
+    /// queue rather than starve behind it.
+    pub fn pop_admissible(
+        &mut self,
+        prompt_len: impl Fn(&T) -> usize,
+        mut ok: impl FnMut(&T) -> bool,
+    ) -> Option<T> {
+        if let Some(i) = self.resume.iter().position(|t| ok(t)) {
+            return self.resume.remove(i);
+        }
+        let idx = match self.order {
+            AdmitOrder::Fcfs => self.queue.iter().position(|t| ok(t))?,
+            AdmitOrder::ShortestFirst => {
+                self.queue
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, t)| ok(t))
+                    .min_by_key(|&(_, t)| prompt_len(t))?
+                    .0
+            }
+        };
+        self.queue.remove(idx)
+    }
 }
 
 #[cfg(test)]
@@ -206,19 +264,87 @@ mod tests {
 
     #[test]
     fn victim_is_least_progress_then_fewest_blocks() {
-        // least generated tokens wins outright
+        // no tenant over quota: least generated tokens wins outright
         assert_eq!(
-            pick_preemption_victim(&[(10, 1), (2, 50), (7, 0)]),
+            pick_preemption_victim(&[
+                (false, 10, 1),
+                (false, 2, 50),
+                (false, 7, 0)
+            ]),
             Some(1)
         );
         // tie on progress -> fewest held blocks
         assert_eq!(
-            pick_preemption_victim(&[(3, 9), (3, 2), (5, 0)]),
+            pick_preemption_victim(&[
+                (false, 3, 9),
+                (false, 3, 2),
+                (false, 5, 0)
+            ]),
             Some(1)
         );
         // stable choice for full ties: first candidate
-        assert_eq!(pick_preemption_victim(&[(3, 2), (3, 2)]), Some(0));
+        assert_eq!(
+            pick_preemption_victim(&[(false, 3, 2), (false, 3, 2)]),
+            Some(0)
+        );
         assert_eq!(pick_preemption_victim(&[]), None);
+    }
+
+    #[test]
+    fn victim_prefers_over_quota_tenants() {
+        // an over-quota lane loses even against a least-progress one
+        assert_eq!(
+            pick_preemption_victim(&[
+                (false, 0, 1),
+                (true, 50, 99),
+                (false, 2, 0)
+            ]),
+            Some(1)
+        );
+        // among over-quota lanes, least progress then fewest blocks
+        assert_eq!(
+            pick_preemption_victim(&[
+                (true, 5, 1),
+                (true, 2, 9),
+                (true, 2, 3),
+                (false, 0, 0)
+            ]),
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn pop_admissible_skips_blocked_head() {
+        let mut s: Scheduler<usize> = Scheduler::new(4, AdmitOrder::Fcfs);
+        s.enqueue(100); // quota-blocked head
+        s.enqueue(7);
+        s.enqueue(8);
+        assert!(s.has_admissible(|&x| x < 50));
+        // the blocked head is skipped, FIFO among the admissible rest
+        assert_eq!(s.pop_admissible(|&x| x, |&x| x < 50), Some(7));
+        assert_eq!(s.pop_admissible(|&x| x, |&x| x < 50), Some(8));
+        assert_eq!(s.pop_admissible(|&x| x, |&x| x < 50), None);
+        assert!(!s.has_admissible(|&x| x < 50));
+        // the blocked request is still queued, not dropped
+        assert_eq!(s.queue_len(), 1);
+        assert_eq!(s.pop_next(|&x| x), Some(100));
+    }
+
+    #[test]
+    fn pop_admissible_resume_first_and_shortest_order() {
+        // resume entries win over fresher (even shorter) queued requests
+        let mut s: Scheduler<usize> =
+            Scheduler::new(4, AdmitOrder::ShortestFirst);
+        s.enqueue(3);
+        s.requeue_front(40);
+        assert_eq!(s.pop_admissible(|&x| x, |_| true), Some(40));
+        // inadmissible resume entries are skipped, then ShortestFirst
+        // picks the shortest admissible queued request
+        s.requeue_front(99);
+        s.enqueue(10);
+        assert_eq!(s.pop_admissible(|&x| x, |&x| x < 50), Some(3));
+        assert_eq!(s.pop_admissible(|&x| x, |&x| x < 50), Some(10));
+        assert_eq!(s.queue_len(), 1, "inadmissible resume entry kept");
     }
 
     #[test]

@@ -36,8 +36,21 @@
 //! native (`decode_paged_{B}x{C}`, slab + table indices) whenever the
 //! store and manifest support it, dense staged bridge otherwise.
 //!
+//!  * **multi-tenant fairness** — every request carries a
+//!    [`TenantId`] (`ServerHandle::submit_for`; plain `submit` uses the
+//!    single-tenant default), the admission gate judges the *tenant's*
+//!    remaining quota (`KvStore::can_admit_for`), the queue is scanned
+//!    for the first admissible request rather than head-blocking
+//!    (`Scheduler::pop_admissible`) so a light tenant steps past a
+//!    quota-blocked heavy one, preemption prefers lanes of tenants
+//!    bursting past their reserved floor, and swap bytes are budgeted
+//!    per tenant. Quotas are configured through
+//!    `PagingConfig::tenant_quotas`.
+//!
 //! Block-pool gauges (blocks in use, prefix-cache hit rate, preemptions)
-//! are published through [`Metrics`] every scheduler iteration.
+//! plus per-tenant gauges (`tenant_{id}_blocks_held`, swap bytes,
+//! preemptions, rejects) are published through [`Metrics`] every
+//! scheduler iteration.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -52,7 +65,7 @@ use crate::coordinator::decode::{
 use crate::coordinator::engine::decode_cap_for;
 use crate::coordinator::kvcache::BatchArena;
 use crate::coordinator::paging::{
-    KvStore, PagedArena, PagingConfig, SwapHandle, SwapIn,
+    KvStore, PagedArena, PagingConfig, SwapHandle, SwapIn, TenantId,
 };
 use crate::coordinator::policies::{
     make_policy, Exec, Policy, PolicyCfg, PrefillOutcome,
@@ -92,6 +105,10 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub max_new: usize,
+    /// Tenant this request is served under: its KV blocks and swap bytes
+    /// are charged against this tenant's quota, and admission /
+    /// preemption fairness is judged per tenant.
+    pub tenant: TenantId,
     submitted: Instant,
     reply: mpsc::Sender<Response>,
     /// Tokens generated before a preemption. The final response always
@@ -139,12 +156,23 @@ impl Request {
         prompt: Vec<i32>,
         max_new: usize,
     ) -> (Request, mpsc::Receiver<Response>) {
+        Request::synthetic_for(id, prompt, max_new, TenantId::DEFAULT)
+    }
+
+    /// [`Request::synthetic`] under a specific tenant (quota tests).
+    pub fn synthetic_for(
+        id: u64,
+        prompt: Vec<i32>,
+        max_new: usize,
+        tenant: TenantId,
+    ) -> (Request, mpsc::Receiver<Response>) {
         let (reply, rx) = mpsc::channel();
         (
             Request {
                 id,
                 prompt,
                 max_new,
+                tenant,
                 submitted: Instant::now(),
                 reply,
                 resumed: Vec::new(),
@@ -192,11 +220,24 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Submit a prompt; returns a receiver for the final response.
+    /// Submit a prompt under the single-tenant default; returns a
+    /// receiver for the final response.
     pub fn submit(
         &self,
         prompt: Vec<i32>,
         max_new: usize,
+    ) -> Result<(u64, mpsc::Receiver<Response>)> {
+        self.submit_for(prompt, max_new, TenantId::DEFAULT)
+    }
+
+    /// Submit a prompt on behalf of `tenant`: its KV blocks, swap bytes,
+    /// admission and preemption fairness are all accounted against that
+    /// tenant's quota (`PagingConfig::tenant_quotas`).
+    pub fn submit_for(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        tenant: TenantId,
     ) -> Result<(u64, mpsc::Receiver<Response>)> {
         let id = self
             .next_id
@@ -207,6 +248,7 @@ impl ServerHandle {
                 id,
                 prompt,
                 max_new,
+                tenant,
                 submitted: Instant::now(),
                 reply,
                 resumed: Vec::new(),
@@ -266,6 +308,11 @@ impl Active {
 
     pub fn request_id(&self) -> u64 {
         self.req.id
+    }
+
+    /// Tenant the underlying request is served under.
+    pub fn tenant(&self) -> TenantId {
+        self.req.tenant
     }
 
     /// Apply one lane-step outcome to this request's decode cursor
@@ -354,6 +401,7 @@ fn reject(
         store.swap_drop(sr.handle);
     }
     metrics.inc("rejected", 1);
+    metrics.inc(&names::tenant_rejected(req.tenant), 1);
     let tokens = std::mem::take(&mut req.resumed);
     let _ = req.reply.send(Response {
         id: req.id,
@@ -388,14 +436,19 @@ fn prefill_len_limit(man: &Manifest, policy: &str, use_pallas: bool) -> usize {
     }
 }
 
-/// Memory-aware admission verdict for the head-of-queue request,
-/// matched to the path it will actually take:
+/// Memory-aware admission verdict for a queued request, matched to the
+/// path it will actually take:
 ///
-///  * swapped resume — can the exact swapped blocks be restored now?
+///  * swapped resume — can the exact swapped blocks be restored now
+///    (already judged against the owning tenant's quota)?
 ///  * deferred admission — the cache is already materialized; gate on
 ///    its true per-layer footprint, not the prompt-length estimate;
 ///  * fresh / recompute — the policy's worst-case estimate for the
 ///    (re-)prefill, as before.
+///
+/// Every verdict is the *tenant's*: `can_admit_for` holds the take to
+/// the request tenant's burst ceiling and to the other tenants' unused
+/// reserved floors.
 ///
 /// `remaining` deliberately has no `.max(1)` clamp: a request with no
 /// decode budget left reserves zero growth headroom, and `admit` agrees
@@ -414,13 +467,17 @@ fn admit_gate(
         // handle dropped: this request will recompute-resume below
     }
     if let Some(p) = &r.pending {
-        return store.can_admit(p.outcome.cache.max_len(), remaining);
+        return store.can_admit_for(
+            p.outcome.cache.max_len(),
+            remaining,
+            r.tenant,
+        );
     }
     let n = (r.prompt.len() + r.resumed.len())
         .min(cfg.max_prompt + cfg.max_new);
     let per_layer =
         cfg.policy_cfg.per_layer_budget(&cfg.policy, n, man.model.window);
-    store.can_admit(per_layer, remaining)
+    store.can_admit_for(per_layer, remaining, r.tenant)
 }
 
 /// Retire a finished request: release its lane and send the response.
@@ -433,6 +490,7 @@ fn finish(mut a: Active, store: &mut dyn KvStore, metrics: &Metrics) {
     }
     store.release(a.slot);
     metrics.inc("completed", 1);
+    metrics.inc(&names::tenant_completed(a.req.tenant), 1);
     metrics.observe("e2e_secs", a.req.submitted.elapsed().as_secs_f64());
     metrics.observe("ttft_secs", a.ttft_secs);
     metrics.inc("tokens_out", a.tokens.len() as u64);
@@ -464,6 +522,24 @@ fn publish_pool_gauges(store: &dyn KvStore, metrics: &Metrics) {
     metrics.set_gauge("pool_cow_copies", ps.cow_copies as f64);
     metrics.set_gauge("pool_evictions", ps.evictions as f64);
     metrics.set_gauge("pool_alloc_failures", ps.alloc_failures as f64);
+    metrics.set_gauge(names::POOL_QUOTA_DENIALS, ps.quota_denials as f64);
+    // Per-tenant rows: block charges reconcile with the pool gauge
+    // (Σ tenant_{id}_blocks_held == pool_blocks_in_use), swap bytes with
+    // the arena's used_bytes.
+    for ts in store.tenant_stats() {
+        metrics.set_gauge(
+            &names::tenant_blocks_held(ts.tenant),
+            ts.held_blocks as f64,
+        );
+        metrics.set_gauge(
+            &names::tenant_blocks_reserved(ts.tenant),
+            ts.reserved_blocks as f64,
+        );
+        metrics.set_gauge(
+            &names::tenant_swap_bytes_used(ts.tenant),
+            ts.swap_bytes_used as f64,
+        );
+    }
     let ss = store.swap_stats();
     metrics.set_gauge(names::SWAP_BYTES_USED, ss.used_bytes as f64);
     metrics.set_gauge(names::SWAP_BYTES_BUDGET, ss.budget_bytes as f64);
@@ -558,21 +634,46 @@ fn serve_inner(
             break;
         }
 
-        // Memory-aware admission: can the pool cover the head request's
-        // post-compression budget (plus minimal growth headroom — see
-        // `KvStore::can_admit`; full decode growth is over-committed)?
+        // Memory-aware, tenant-fair admission: can the pool cover ANY
+        // queued request's post-compression budget within its tenant's
+        // quota (plus minimal growth headroom — see `KvStore::can_admit`;
+        // full decode growth is over-committed)? Scanning past the head
+        // is what keeps a light tenant from starving behind a
+        // quota-blocked heavy request. The O(queue) gate sweep runs at
+        // most once per iteration, and only when its verdict can matter:
+        // a full batch cannot admit and an empty queue has nothing to
+        // scan. When a slot is free the sweep pops the winning request
+        // directly, so Prefill never pays a second identical scan.
+        let mut admissible: Option<Request> = None;
         let admit_ok = if std::mem::take(&mut admission_paused) {
             false
+        } else if sched.queue_len() == 0 {
+            true
+        } else if active.len() >= sched.max_active {
+            false
         } else {
-            match sched.peek_next(|r: &Request| r.prompt.len()) {
-                None => true,
-                Some(r) => admit_gate(cfg, &man, store.as_ref(), r),
-            }
+            admissible = sched.pop_admissible(
+                |r| r.prompt.len(),
+                |r| admit_gate(cfg, &man, store.as_ref(), r),
+            );
+            admissible.is_some()
         };
 
-        match sched.next_action_mem(active.len(), admit_ok) {
+        // A popped request means exactly next_action_mem's Prefill
+        // conditions held (slot free, queue non-empty, gate passed);
+        // force Prefill so it is never dropped on the floor — the pop
+        // already shrank `queue_len`, which next_action_mem would
+        // otherwise re-read.
+        let action = if admissible.is_some() {
+            Action::Prefill
+        } else {
+            sched.next_action_mem(active.len(), admit_ok)
+        };
+        match action {
             Action::Prefill => {
-                let req = sched.pop_next(|r| r.prompt.len()).unwrap();
+                let req = admissible
+                    .take()
+                    .expect("Prefill forced only with a popped request");
                 // Swap-first resume ladder: restore host-swapped blocks
                 // with zero policy work; recompute only when the handle
                 // is gone (dropped under host-memory pressure).
@@ -828,7 +929,7 @@ pub fn admit(
             (pre, t0.elapsed().as_secs_f64())
         }
     };
-    let slot = match store.admit(&pre.cache) {
+    let slot = match store.admit_for(&pre.cache, req.tenant) {
         Some(s) => s,
         None => {
             req.pending = Some(PendingPrefill { outcome: pre, prefill_secs });
@@ -875,17 +976,20 @@ fn decode_step(
 /// the re-prefill of `full_len = prompt + generated` tokens must fit the
 /// policy's prefill buckets, and the store must be able to take the
 /// regrown cache back even from a drained state (lane capacity AND total
-/// pool size). Deliberately judged on the *recompute* fallback even when
-/// swap is enabled — a swap handle can be dropped under host-memory
-/// pressure at any time, so a victim that could only resume via swap
-/// would risk ending in rejection.
+/// pool size, judged within the *tenant's* quota — another tenant's
+/// reserved floor is never coming back). Deliberately judged on the
+/// *recompute* fallback even when swap is enabled — a swap handle can be
+/// dropped under host-memory pressure at any time, so a victim that
+/// could only resume via swap would risk ending in rejection.
 pub fn can_resume_parts(
     full_len: usize,
     len_limit: usize,
     per_layer_budget: usize,
+    tenant: TenantId,
     store: &dyn KvStore,
 ) -> bool {
-    full_len <= len_limit && store.could_ever_admit(per_layer_budget)
+    full_len <= len_limit
+        && store.could_ever_admit_for(per_layer_budget, tenant)
 }
 
 /// Whether a lane could resume after preemption (see
@@ -904,18 +1008,19 @@ fn can_resume(
     );
     let len_limit =
         prefill_len_limit(man, &cfg.policy, cfg.policy_cfg.use_pallas);
-    can_resume_parts(full_len, len_limit, budget, store)
+    can_resume_parts(full_len, len_limit, budget, a.req.tenant, store)
 }
 
 /// Preempt the lane at `idx` and park its request on the resume queue.
-/// Fast path: the lane's FastKV-selected blocks are swapped to host and
-/// the [`SwapHandle`] + decode cursor ride with the request, so resume is
-/// a block restore — no policy re-run. Fallback (swap disabled or over
-/// budget): release the blocks and carry only the generated tokens for
-/// recompute-resume. A lane that already spent its token budget is
-/// finished on the spot instead of parked — re-admitting it could only
-/// emit tokens past `max_new`. Order-preserving removal so the caller's
-/// scan index stays meaningful.
+/// Fast path: the lane's FastKV-selected blocks are swapped to host
+/// (within the lane tenant's swap byte budget) and the [`SwapHandle`] +
+/// decode cursor ride with the request, so resume is a block restore —
+/// no policy re-run. Fallback (swap disabled or over budget): release
+/// the blocks and carry only the generated tokens for recompute-resume.
+/// A lane that already spent its token budget is finished on the spot
+/// instead of parked — re-admitting it could only emit tokens past
+/// `max_new`. Order-preserving removal so the caller's scan index stays
+/// meaningful.
 pub fn preempt(
     active: &mut Vec<Active>,
     idx: usize,
@@ -929,6 +1034,7 @@ pub fn preempt(
         return;
     }
     metrics.inc("preempted", 1);
+    metrics.inc(&names::tenant_preempted(a.req.tenant), 1);
     let Active { mut req, slot, tokens, cur, pos, ttft_secs, .. } = a;
     req.first_ttft = Some(ttft_secs);
     req.resumed = tokens;
@@ -1042,20 +1148,37 @@ fn apply_decode(
                 }
                 LaneAdvance::PoolPressure => {
                     allow_compact = false;
-                    // Victim selection: the lane losing the least decode
-                    // progress among every lane that can actually resume —
-                    // not necessarily the lane that hit pool exhaustion.
-                    let mut candidates: Vec<(usize, (usize, usize))> =
+                    // Victim selection among every lane that can actually
+                    // resume — not necessarily the lane that hit pool
+                    // exhaustion: over-quota tenants' lanes first (quota
+                    // pressure lands on whoever is bursting), then least
+                    // decode progress, then fewest held blocks. Lanes
+                    // whose preemption cannot relieve the pressured
+                    // tenant (cross-tenant frees when it is
+                    // ceiling-bound, or victims inside their own
+                    // protected floor whose frees are owed back to that
+                    // floor) are filtered out up front, so innocent
+                    // lanes are never churned for a denial their blocks
+                    // cannot fix (`KvStore::preempt_helps`).
+                    let pressured = active[i].req.tenant;
+                    let mut candidates: Vec<(usize, (bool, usize, usize))> =
                         Vec::new();
                     for (j, a) in active.iter().enumerate() {
-                        if !a.done && can_resume(cfg, man, a, store) {
+                        if !a.done
+                            && store.preempt_helps(a.req.tenant, pressured)
+                            && can_resume(cfg, man, a, store)
+                        {
                             candidates.push((
                                 j,
-                                (a.tokens.len(), store.held_blocks(a.slot)),
+                                (
+                                    store.tenant_over_quota(a.req.tenant),
+                                    a.tokens.len(),
+                                    store.held_blocks(a.slot),
+                                ),
                             ));
                         }
                     }
-                    let keys: Vec<(usize, usize)> =
+                    let keys: Vec<(bool, usize, usize)> =
                         candidates.iter().map(|&(_, k)| k).collect();
                     let victim = pick_preemption_victim(&keys)
                         .map(|k| candidates[k].0);

@@ -46,6 +46,21 @@
 //! [`coordinator::paging::PagingConfig::dense_staging`] and as the
 //! automatic fallback for manifests that predate the paged artifacts.
 //!
+//! # Multi-tenant serving
+//!
+//! Every request is served under a [`TenantId`]
+//! (`ServerHandle::submit_for`; plain `submit` uses the single-tenant
+//! default), and [`PagingConfig::tenant_quotas`] installs per-tenant
+//! [`TenantQuota`]s: a reserved block floor other tenants can never
+//! consume, a burstable ceiling over the shared pool, and a per-tenant
+//! swap byte cap. Blocks are charged to the tenant that first touched
+//! them (prefix sharers ride free), admission gates on the *tenant's*
+//! remaining quota with fair queue scanning (no head-of-line starvation
+//! behind a quota-blocked heavy tenant), and preemption prefers lanes of
+//! tenants bursting past their floor. Per-tenant gauges
+//! (`tenant_{id}_blocks_held`, swap bytes, preemptions, rejects) are
+//! published alongside the pool gauges — see `docs/metrics.md`.
+//!
 //! Quick start (after `make artifacts`): see `examples/quickstart.rs`;
 //! `examples/paging_demo.rs` exercises prefix reuse and preemption without
 //! artifacts.
@@ -65,7 +80,7 @@ pub use coordinator::decode::{DecodeBatch, DecodePath};
 pub use coordinator::engine::{generate, GenResult, GenStats};
 pub use coordinator::paging::{
     AppendResult, DecodeView, KvStore, PagedArena, PagingConfig, PoolStats,
-    SwapHandle, SwapIn, SwapStats,
+    SwapHandle, SwapIn, SwapStats, TenantId, TenantQuota, TenantStats,
 };
 pub use coordinator::policies::{
     make_policy, Policy, PolicyCfg, ALL_POLICIES,

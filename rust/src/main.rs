@@ -68,6 +68,8 @@ fn print_help() {
          \x20          [--flat] [--pool-blocks N] [--block-tokens 16] [--no-prefix-cache]\n\
          \x20          [--dense-staging]  (fallback: staged decode bridge instead of block tables)\n\
          \x20          [--swap-mb M]  (host swap budget for preempted lanes; 0 = recompute-resume)\n\
+         \x20          [--tenants T] [--quota-blocks R]  (T tenants round-robin, each with a\n\
+         \x20           reserved floor of R pool blocks; 0 tenants/blocks = single-tenant)\n\
          \x20 overhead [--lens 256,512,1024]\n\
          \x20 info\n\
          \n\
@@ -737,8 +739,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // --swap-mb M: host swap budget for preempted lanes (0 disables
         // swap-to-host; preemption then recompute-resumes).
         pc.swap_bytes = args.usize("swap-mb", pc.swap_bytes >> 20) << 20;
+        // --tenants T + --quota-blocks R: every tenant gets a reserved
+        // floor of R blocks (burst above it allowed while the pool has
+        // slack); requests are assigned tenants round-robin below.
+        let tenants = args.usize("tenants", 1);
+        let quota = args.usize("quota-blocks", 0);
+        if tenants > 1 && quota > 0 {
+            pc.tenant_quotas = (0..tenants as u32)
+                .map(|t| {
+                    (fastkv::TenantId(t), fastkv::TenantQuota::reserved(quota))
+                })
+                .collect();
+        }
         Some(pc)
     };
+    let tenants = args.usize("tenants", 1).max(1);
     let cfg = ServerConfig {
         artifact_dir: dir,
         policy: args.str_or("policy", "fastkv").to_string(),
@@ -769,13 +784,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let tok = Tokenizer;
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
-    for ev in &trace {
+    for (i, ev) in trace.iter().enumerate() {
         let wait = ev.at - t0.elapsed().as_secs_f64();
         if wait > 0.0 {
             std::thread::sleep(std::time::Duration::from_secs_f64(wait));
         }
         let ids = tok.encode(&ev.sample.prompt);
-        let (_, rx) = handle.submit(ids, ev.max_new)?;
+        // Round-robin tenant assignment (tenant 0 with --tenants 1).
+        let tenant = fastkv::TenantId((i % tenants) as u32);
+        let (_, rx) = handle.submit_for(ids, ev.max_new, tenant)?;
         rxs.push(rx);
     }
     let mut tokens = 0usize;

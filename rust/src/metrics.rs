@@ -34,6 +34,44 @@ pub mod names {
     /// Gauge: entries evicted oldest-first to make room for newer
     /// swap-outs (their owners recompute-resume).
     pub const SWAP_DROPPED: &str = "swap_entries_dropped";
+    /// Gauge: block takes refused by a tenant quota while the pool still
+    /// had allocatable blocks (from `PoolStats::quota_denials`).
+    pub const POOL_QUOTA_DENIALS: &str = "pool_quota_denials";
+
+    use crate::coordinator::paging::TenantId;
+
+    /// Gauge name: blocks currently charged to the tenant (first-toucher
+    /// rule; reconciles with `pool_blocks_in_use` summed over tenants).
+    pub fn tenant_blocks_held(t: TenantId) -> String {
+        format!("tenant_{t}_blocks_held")
+    }
+
+    /// Gauge name: the tenant's configured reserved block floor.
+    pub fn tenant_blocks_reserved(t: TenantId) -> String {
+        format!("tenant_{t}_blocks_reserved")
+    }
+
+    /// Gauge name: host swap bytes currently parked by the tenant's
+    /// preempted lanes.
+    pub fn tenant_swap_bytes_used(t: TenantId) -> String {
+        format!("tenant_{t}_swap_bytes_used")
+    }
+
+    /// Counter name: lanes of this tenant preempted under pool pressure.
+    pub fn tenant_preempted(t: TenantId) -> String {
+        format!("tenant_{t}_preempted")
+    }
+
+    /// Counter name: this tenant's requests rejected (pool can never fit,
+    /// prompt too long, or prefill failure).
+    pub fn tenant_rejected(t: TenantId) -> String {
+        format!("tenant_{t}_rejected")
+    }
+
+    /// Counter name: this tenant's requests completed successfully.
+    pub fn tenant_completed(t: TenantId) -> String {
+        format!("tenant_{t}_completed")
+    }
 }
 
 /// Log-bucketed latency histogram (microsecond resolution).

@@ -10,11 +10,14 @@
 //! compactions, and preemption/resume.
 
 use fastkv::coordinator::kvcache::{BatchArena, RequestCache};
-use fastkv::coordinator::paging::allocator::BlockAllocator;
+use fastkv::coordinator::paging::allocator::{BlockAllocator, Revive};
 use fastkv::coordinator::paging::{
-    AppendResult, KvStore, PagedArena, PagingConfig, SwapIn,
+    AppendResult, KvStore, PagedArena, PagingConfig, SwapIn, TenantId,
+    TenantQuota,
 };
-use fastkv::coordinator::scheduler::{Action, AdmitOrder, Scheduler};
+use fastkv::coordinator::scheduler::{
+    pick_preemption_victim, Action, AdmitOrder, Scheduler,
+};
 use fastkv::manifest::ModelMeta;
 use fastkv::tensor::HostTensor;
 use fastkv::util::rng::Rng;
@@ -1475,15 +1478,21 @@ fn can_resume_skips_lanes_beyond_prefill_limit_or_pool() {
         num_blocks: Some(8),
         ..Default::default()
     };
-    let pa = PagedArena::new(&m, 1, 8, pcfg);
+    let mut pa = PagedArena::new(&m, 1, 8, pcfg);
+    let t = TenantId::DEFAULT;
     // within the prefill bucket and pool: a valid victim
-    assert!(can_resume_parts(10, 16, 4, &pa));
+    assert!(can_resume_parts(10, 16, 4, t, &pa));
     // re-prefill would exceed the prefill bucket: never preempt this lane
-    assert!(!can_resume_parts(17, 16, 4, &pa));
+    assert!(!can_resume_parts(17, 16, 4, t, &pa));
     // per-layer budget beyond lane capacity: could never re-admit
-    assert!(!can_resume_parts(10, 16, 9, &pa));
+    assert!(!can_resume_parts(10, 16, 9, t, &pa));
     // budget that fits the lane but not the whole pool even when drained
-    assert!(!can_resume_parts(10, 16, 7, &pa));
+    assert!(!can_resume_parts(10, 16, 7, t, &pa));
+    // a ceiling below the pool shrinks what the tenant could ever retake
+    let capped = TenantId(5);
+    pa.set_tenant_quota(capped, TenantQuota::bounded(0, 4));
+    assert!(!can_resume_parts(10, 16, 4, capped, &pa), "ceiling-aware");
+    assert!(can_resume_parts(10, 16, 4, t, &pa), "others unaffected");
 }
 
 #[test]
@@ -1492,9 +1501,10 @@ fn evictable_queue_bounded_under_prefix_churn() {
     // prefix-hit workload (park + revive over and over) must keep the
     // allocator's evictable queue at or below one entry per block.
     let mut a = BlockAllocator::new(8, 4, 2);
+    let t = TenantId::DEFAULT;
     let ids: Vec<_> = (0..4)
         .map(|i| {
-            let b = a.alloc().unwrap().id;
+            let b = a.alloc(t).unwrap().id;
             a.seal(b, 100 + i);
             b
         })
@@ -1504,7 +1514,7 @@ fn evictable_queue_bounded_under_prefix_churn() {
             a.decref(b);
         }
         for &b in &ids {
-            assert!(a.revive(b), "round {round}");
+            assert_eq!(a.revive(b, t), Revive::Revived, "round {round}");
         }
         assert!(
             a.evictable_len() <= a.blocks_total(),
@@ -1522,4 +1532,407 @@ fn evictable_queue_bounded_under_prefix_churn() {
     }
     assert_eq!(a.evictable_len(), 4);
     assert_eq!(a.blocks_cached(), 4);
+}
+
+// --------------------------------------------------------- multi-tenant
+
+const HEAVY: TenantId = TenantId(0);
+const LIGHT: TenantId = TenantId(1);
+
+/// Fixed-length cache with per-tenant-distinct content (so cross-tenant
+/// admissions share blocks only when the content really matches).
+fn tenant_cache(m: &ModelMeta, len: usize, tag: f32) -> RequestCache {
+    let re = m.n_kv_heads * m.head_dim;
+    let mut rc = RequestCache::new(m);
+    for l in 0..m.n_layers {
+        rc.k[l] = (0..len * re).map(|i| tag + (l * 977 + i) as f32).collect();
+        rc.v[l] = rc.k[l].iter().map(|x| -x).collect();
+        rc.lens[l] = len;
+    }
+    rc
+}
+
+/// Σ per-tenant charges must equal the pool's in-use gauge — published
+/// exactly as the server does (TenantStats rows → `tenant_{id}_*`
+/// gauges) and then read back against `BlockAllocator` accounting.
+fn assert_tenant_gauges_reconcile(pa: &PagedArena, metrics: &Metrics) {
+    let ps = pa.pool_stats();
+    let ts = pa.tenant_stats();
+    for row in &ts {
+        metrics.set_gauge(
+            &names::tenant_blocks_held(row.tenant),
+            row.held_blocks as f64,
+        );
+    }
+    metrics.set_gauge("pool_blocks_in_use", ps.blocks_in_use as f64);
+    let held_sum: f64 = ts
+        .iter()
+        .map(|row| metrics.gauge(&names::tenant_blocks_held(row.tenant)))
+        .sum();
+    assert_eq!(
+        held_sum, ps.blocks_in_use as f64,
+        "per-tenant gauges vs pool accounting"
+    );
+}
+
+#[test]
+fn over_quota_admission_deferred_while_under_quota_admits() {
+    // The heavy tenant saturates everything outside the light tenant's
+    // reserved floor; its next admission is deferred (admit -> None)
+    // while the light tenant's request, arriving LATER in the queue,
+    // still admits — the fair-admission scan plus the floor at work.
+    let m = sim_meta();
+    let pcfg = PagingConfig {
+        block_tokens: 2,
+        num_blocks: Some(10),
+        prefix_cache: false,
+        swap_bytes: 0,
+        tenant_quotas: vec![(LIGHT, TenantQuota::reserved(4))],
+        ..Default::default()
+    };
+    let mut pa = PagedArena::new(&m, 4, 16, pcfg);
+    // heavy request: 2 layers x ceil(4/2) = 4 blocks (+ l growth headroom
+    // at the gate); light request: 2 blocks (+ headroom)
+    let heavy_rc = tenant_cache(&m, 4, 1000.0);
+    let light_rc = tenant_cache(&m, 2, 2000.0);
+    assert!(pa.can_admit_for(4, 4, HEAVY));
+    let h1 = pa.admit_for(&heavy_rc, HEAVY).unwrap();
+    // heavy again: would need 4 + 2 headroom = 6 of available_to(HEAVY)
+    // = (10 - 4 held) - 4 floor = 2 -> gated out AND the load itself
+    // rolls back
+    assert!(!pa.can_admit_for(4, 4, HEAVY), "floor gates the gate");
+    assert!(pa.admit_for(&heavy_rc, HEAVY).is_none(), "load rolls back");
+    assert!(pa.pool_stats().quota_denials > 0);
+    // the light tenant still fits inside its floor
+    assert!(pa.can_admit_for(2, 4, LIGHT));
+    let l1 = pa.admit_for(&light_rc, LIGHT).unwrap();
+    // fair admission: with [heavy, light] queued, the scheduler skips the
+    // quota-blocked heavy head and hands back the light request
+    let mut sched: Scheduler<(TenantId, usize)> =
+        Scheduler::new(4, AdmitOrder::Fcfs);
+    sched.enqueue((HEAVY, 4));
+    sched.enqueue((LIGHT, 2));
+    let popped = sched.pop_admissible(
+        |&(_, n)| n,
+        |&(t, n)| pa.can_admit_for(n, 4, t),
+    );
+    assert_eq!(popped, Some((LIGHT, 2)));
+    assert_eq!(sched.queue_len(), 1, "heavy stays queued, not dropped");
+    pa.release(h1);
+    pa.release(l1);
+}
+
+#[test]
+fn cross_tenant_shared_prefix_charges_once_and_never_double_frees() {
+    // Two tenants admit the same content: full blocks are shared, the
+    // charge stays with the first toucher, and releasing both lanes (in
+    // either order) plus evicting the cached blocks afterwards must keep
+    // pool accounting exact — no double-free, no leaked charge.
+    for heavy_first in [true, false] {
+        let m = sim_meta();
+        let pcfg = PagingConfig {
+            block_tokens: 2,
+            num_blocks: Some(8),
+            swap_bytes: 0,
+            tenant_quotas: vec![
+                (HEAVY, TenantQuota::reserved(2)),
+                (LIGHT, TenantQuota::reserved(2)),
+            ],
+            ..Default::default()
+        };
+        let mut pa = PagedArena::new(&m, 2, 8, pcfg);
+        let rc = tenant_cache(&m, 4, 3000.0);
+        let s0 = pa.admit_for(&rc, HEAVY).unwrap();
+        let in_use_one = pa.pool_stats().blocks_in_use;
+        let s1 = pa.admit_for(&rc, LIGHT).unwrap();
+        let ps = pa.pool_stats();
+        assert_eq!(
+            ps.blocks_in_use, in_use_one,
+            "identical content: the second tenant allocates nothing"
+        );
+        assert!(ps.prefix_hits >= 4, "hits {}", ps.prefix_hits);
+        // first-toucher: the sharer is not charged
+        let ts = pa.tenant_stats();
+        let held = |t: TenantId| {
+            ts.iter().find(|r| r.tenant == t).map_or(0, |r| r.held_blocks)
+        };
+        assert_eq!(held(HEAVY), in_use_one);
+        assert_eq!(held(LIGHT), 0, "prefix sharer rides free");
+        assert_tenant_gauges_reconcile(&pa, &Metrics::default());
+        // release in both orders; blocks must come back exactly once
+        let (first, second) = if heavy_first { (s0, s1) } else { (s1, s0) };
+        assert!(pa.release(first));
+        assert_tenant_gauges_reconcile(&pa, &Metrics::default());
+        assert!(pa.release(second));
+        let ps = pa.pool_stats();
+        assert_eq!(ps.blocks_in_use, 0, "all shared blocks released once");
+        assert_eq!(
+            ps.blocks_cached + ps.blocks_free,
+            ps.blocks_total,
+            "heavy_first={heavy_first}: accounting intact after teardown"
+        );
+        assert_tenant_gauges_reconcile(&pa, &Metrics::default());
+        // drain everything HEAVY may take (pool minus LIGHT's floor) so
+        // cached shared blocks get evicted — a double-parked block would
+        // surface as a duplicate eviction here
+        let filler = tenant_cache(&m, 6, 4000.0);
+        let f = pa.admit_for(&filler, HEAVY).unwrap();
+        let ps = pa.pool_stats();
+        assert_eq!(ps.blocks_in_use, 6);
+        assert!(ps.evictions >= 2, "sealed shared blocks evicted once each");
+        pa.release(f);
+    }
+}
+
+#[test]
+fn quota_preferred_victim_over_least_progress() {
+    // The server's victim key is (tenant_over_quota, progress, held):
+    // a lane of a tenant bursting past its floor is preempted before a
+    // least-progress lane of a tenant inside its floor.
+    let m = sim_meta();
+    let pcfg = PagingConfig {
+        block_tokens: 2,
+        num_blocks: Some(12),
+        prefix_cache: false,
+        swap_bytes: 0,
+        tenant_quotas: vec![
+            (HEAVY, TenantQuota::reserved(4)),
+            (LIGHT, TenantQuota::reserved(4)),
+        ],
+        ..Default::default()
+    };
+    let mut pa = PagedArena::new(&m, 2, 16, pcfg);
+    // heavy holds 6 > floor 4 (bursting); light holds 4 = floor
+    let hs = pa.admit_for(&tenant_cache(&m, 6, 5000.0), HEAVY).unwrap();
+    let ls = pa.admit_for(&tenant_cache(&m, 4, 6000.0), LIGHT).unwrap();
+    assert!(pa.tenant_over_quota(HEAVY));
+    assert!(!pa.tenant_over_quota(LIGHT));
+    // heavy has MORE progress (10 tokens vs 1) — pre-quota ordering would
+    // pick the light lane; quota-aware ordering picks the burster
+    let keys = vec![
+        (
+            pa.tenant_over_quota(pa.tenant_of(hs)),
+            10,
+            KvStore::held_blocks(&pa, hs),
+        ),
+        (
+            pa.tenant_over_quota(pa.tenant_of(ls)),
+            1,
+            KvStore::held_blocks(&pa, ls),
+        ),
+    ];
+    assert_eq!(pick_preemption_victim(&keys), Some(0));
+    // without quotas the same shapes fall back to least-progress
+    assert_eq!(
+        pick_preemption_victim(&[(false, 10, 6), (false, 1, 4)]),
+        Some(1)
+    );
+}
+
+#[test]
+fn per_tenant_swap_refusal_falls_back_to_recompute_for_that_tenant_only() {
+    // HEAVY's quota pins its swap bytes to 0: preempting its lane refuses
+    // the swap-out (lane intact, recompute path) while LIGHT's lane still
+    // swaps under the arena-wide budget.
+    let m = sim_meta();
+    let pcfg = PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes: 1 << 20,
+        tenant_quotas: vec![(
+            HEAVY,
+            TenantQuota { swap_bytes: Some(0), ..TenantQuota::default() },
+        )],
+        ..Default::default()
+    };
+    let mut pa = PagedArena::new(&m, 2, 16, pcfg);
+    let hs = pa.admit_for(&tenant_cache(&m, 4, 7000.0), HEAVY).unwrap();
+    let ls = pa.admit_for(&tenant_cache(&m, 4, 8000.0), LIGHT).unwrap();
+    assert!(pa.swap_out(hs).is_none(), "tenant swap budget 0 refuses");
+    assert_eq!(pa.layer_lens(hs), vec![4, 4], "refused lane left intact");
+    assert_eq!(pa.swap_stats().refused, 1);
+    let h = pa.swap_out(ls).expect("other tenant swaps normally");
+    assert!(pa.swap_contains(h));
+    match pa.swap_in(h) {
+        SwapIn::Restored(s) => {
+            assert_eq!(pa.layer_lens(s), vec![4, 4]);
+            // free the lane again so the server-path check below has room
+            assert!(pa.release(s));
+        }
+        other => panic!("expected restore, got {other:?}"),
+    }
+    // and through the server's preempt ladder: HEAVY's request parks
+    // without a swap ticket (recompute-resume), counted as refused
+    let metrics = Metrics::default();
+    let mut sched: Scheduler<Request> = Scheduler::new(2, AdmitOrder::Fcfs);
+    let (req, _rx) = Request::synthetic_for(9, vec![5, 6, 7], 8, HEAVY);
+    let man = sim_manifest(64);
+    let cfg = sim_server_cfg(32, 8);
+    let policy = SimPolicy::new();
+    let a = match admit(&NoExec, &man, &policy, &cfg, req, &mut pa, &metrics)
+    {
+        Ok(a) => a,
+        Err(_) => panic!("admission must succeed"),
+    };
+    assert_eq!(a.tenant(), HEAVY);
+    let mut active = vec![a];
+    preempt(&mut active, 0, &mut pa, &mut sched, &metrics);
+    assert_eq!(metrics.counter(names::SWAP_REFUSED), 1);
+    assert_eq!(metrics.counter(&names::tenant_preempted(HEAVY)), 1);
+    let parked = sched.pop_next(|r| r.prompt.len()).unwrap();
+    assert!(
+        parked.swap_resume().is_none(),
+        "no swap ticket: recompute-resume for this tenant only"
+    );
+}
+
+/// One sim "round" outcome for the starvation differential below.
+struct TenantRunOutcome {
+    light_admit_rounds: Vec<usize>,
+    light_completed: usize,
+    light_deferred_rounds: usize,
+    heavy_completed: usize,
+}
+
+/// Drive a serve-shaped admission loop (fair scheduler scan + tenant
+/// admission gate + real `server::admit`) over a contended pool. Heavy
+/// offers 6 requests of 4 tokens (held for 4 rounds each); light offers
+/// 2 requests of 2 tokens (held for 1 round). Returns when everything
+/// completed.
+fn run_tenant_contention(light_floor: usize) -> TenantRunOutcome {
+    let m = sim_meta();
+    let man = sim_manifest(64);
+    let policy = SimPolicy::new();
+    let metrics = Metrics::default();
+    let cfg = sim_server_cfg(32, 8);
+    let mut pcfg = PagingConfig {
+        block_tokens: 2,
+        num_blocks: Some(10),
+        prefix_cache: false,
+        swap_bytes: 0,
+        ..Default::default()
+    };
+    if light_floor > 0 {
+        pcfg.tenant_quotas = vec![(LIGHT, TenantQuota::reserved(light_floor))];
+    }
+    let mut pa = PagedArena::new(&m, 4, 16, pcfg);
+    let mut sched: Scheduler<Request> = Scheduler::new(4, AdmitOrder::Fcfs);
+    let mut rxs = Vec::new();
+    // heavy requests first in the queue (worst case for the light tenant)
+    for i in 0..6u64 {
+        let (req, rx) =
+            Request::synthetic_for(i, vec![10 + i as i32; 4], 8, HEAVY);
+        rxs.push(rx);
+        sched.enqueue(req);
+    }
+    for i in 6..8u64 {
+        let (req, rx) =
+            Request::synthetic_for(i, vec![60 + i as i32; 2], 8, LIGHT);
+        rxs.push(rx);
+        sched.enqueue(req);
+    }
+    // (request id, slot, rounds left to hold the lane)
+    let mut active: Vec<(u64, usize, usize, TenantId)> = Vec::new();
+    let mut out = TenantRunOutcome {
+        light_admit_rounds: Vec::new(),
+        light_completed: 0,
+        light_deferred_rounds: 0,
+        heavy_completed: 0,
+    };
+    let gauges = Metrics::default();
+    let mut round = 0usize;
+    while sched.queue_len() > 0 || !active.is_empty() {
+        assert!(round < 100, "contention loop livelocked");
+        // admission phase: fair scan with the tenant-aware gate
+        loop {
+            let popped = sched.pop_admissible(
+                |r| r.prompt.len(),
+                |r| {
+                    active.len() < 4
+                        && pa.can_admit_for(r.prompt.len(), r.max_new, r.tenant)
+                },
+            );
+            let Some(req) = popped else { break };
+            let tenant = req.tenant;
+            let a = match admit(
+                &NoExec, &man, &policy, &cfg, req, &mut pa, &metrics,
+            ) {
+                Ok(a) => a,
+                Err(_) => panic!("gated admission must not fail"),
+            };
+            if tenant == LIGHT {
+                out.light_admit_rounds.push(round);
+            }
+            let hold = if tenant == HEAVY { 4 } else { 1 };
+            active.push((a.request_id(), a.slot(), hold, tenant));
+        }
+        // a queued light request that could not admit this round is a
+        // deferral (the starvation signal under heavy contention)
+        if out.light_admit_rounds.len() < 2
+            && sched.queue_len() > 0
+            && !active.iter().any(|&(_, _, _, t)| t == LIGHT)
+        {
+            out.light_deferred_rounds += 1;
+        }
+        // the per-tenant gauges must reconcile with the pool at EVERY
+        // step of the run, contended or not
+        assert_tenant_gauges_reconcile(&pa, &gauges);
+        // decode-round stand-in: age the active lanes, retire expired ones
+        let mut i = 0;
+        while i < active.len() {
+            active[i].2 -= 1;
+            if active[i].2 == 0 {
+                let (_, slot, _, tenant) = active.swap_remove(i);
+                assert!(pa.release(slot));
+                if tenant == LIGHT {
+                    out.light_completed += 1;
+                } else {
+                    out.heavy_completed += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        round += 1;
+    }
+    assert_eq!(pa.pool_stats().blocks_in_use, 0, "no leaked blocks");
+    out
+}
+
+#[test]
+fn two_tenant_differential_quotas_stop_heavy_starving_light() {
+    // Acceptance differential. Quotas OFF: the heavy tenant's queue
+    // saturates the pool and the light tenant's admissions are deferred
+    // round after round. Quotas ON (reserved floor for the light
+    // tenant): the light tenant admits immediately and completes inside
+    // its floor, while the heavy tenant still finishes everything.
+    let starved = run_tenant_contention(0);
+    let fair = run_tenant_contention(4);
+
+    // both runs eventually complete everything (quotas are not a DoS)
+    assert_eq!(starved.heavy_completed, 6);
+    assert_eq!(fair.heavy_completed, 6);
+    assert_eq!(starved.light_completed, 2);
+    assert_eq!(fair.light_completed, 2);
+
+    // without quotas the light tenant waits behind the heavy queue...
+    assert!(
+        starved.light_deferred_rounds >= 4,
+        "expected sustained deferral, got {}",
+        starved.light_deferred_rounds
+    );
+    let starved_first = *starved.light_admit_rounds.first().unwrap();
+    // ...with quotas its floor admits it in the very first round
+    let fair_first = *fair.light_admit_rounds.first().unwrap();
+    assert_eq!(fair_first, 0, "light tenant admits inside its floor");
+    assert!(
+        starved_first >= 4,
+        "quotas-off run admitted light at round {starved_first}, \
+         expected starvation past round 4"
+    );
+    assert!(
+        fair.light_admit_rounds.last().unwrap() + 1 < starved_first,
+        "every light admission under quotas beats the first one without"
+    );
+    assert_eq!(fair.light_deferred_rounds, 0, "no deferrals under quotas");
 }
