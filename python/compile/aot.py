@@ -176,6 +176,38 @@ def build(cfg: ModelConfig = TINY, buckets: BucketConfig = BUCKETS,
                  "pool_blocks": nb, "block_tokens": bt},
             )
 
+    # --- decode_paged_shard_step (KV-head-sharded block-table decode) -------
+    # One artifact per (batch, cap, S): S slab pairs of [NB, bt, KV/S, hd]
+    # (pinned per shard by the rust runtime), shared tables/lens; outputs
+    # per-shard k_new/v_new slices for the host-side combiner. Shard
+    # counts that do not divide KV are skipped (the rust config layer
+    # rejects them too).
+    shard_counts = [s for s in buckets.shard_counts
+                    if s > 1 and KV % s == 0]
+    for b in buckets.decode_batches:
+        for c in buckets.decode_caps:
+            if c > max_n + buckets.max_gen:
+                continue
+            mb = -(-c // bt)  # ceil
+            nb = L_ * b * mb
+            for s in shard_counts:
+                kvs = KV // s
+                fn = functools.partial(M.decode_paged_shard_step, cfg=cfg,
+                                       shards=s)
+                slab_specs = []
+                for _ in range(s):
+                    slab_specs += [_spec((nb, bt, kvs, hd)),
+                                   _spec((nb, bt, kvs, hd))]
+                em.emit(
+                    f"decode_paged_shard_{b}x{c}s{s}", fn,
+                    (flat_s, _spec((b,), I32), _spec((b,), I32),
+                     *slab_specs,
+                     _spec((L_, b, mb), I32), _spec((L_, b), I32)),
+                    {"kind": "decode_paged_shard", "batch": b, "cap": c,
+                     "pool_blocks": nb, "block_tokens": bt,
+                     "shards": s, "shard_kv_heads": kvs},
+                )
+
     # --- sweep_tsp (Fig. 3 / Fig. 5b / Table 10) ----------------------------
     n, nt = buckets.sweep_n, buckets.sweep_nt
     for t in range(1, cfg.n_layers):
@@ -215,6 +247,8 @@ def build(cfg: ModelConfig = TINY, buckets: BucketConfig = BUCKETS,
             "pallas_n": buckets.pallas_n,
             "max_gen": buckets.max_gen,
             "block_tokens": buckets.block_tokens,
+            "shard_counts": [s for s in buckets.shard_counts
+                             if s > 1 and cfg.n_kv_heads % s == 0],
         },
         "params": [
             {"name": name, "shape": list(shape)}

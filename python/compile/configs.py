@@ -70,6 +70,12 @@ class BucketConfig:
     # Tokens per physical block of the paged decode artifacts (must match
     # the rust PagingConfig.block_tokens for block-table decode to engage).
     block_tokens: int = 16
+    # KV-head shard counts the decode_paged_shard_{b}x{c}s{S} family is
+    # compiled for (counts that do not divide n_kv_heads are skipped at
+    # emission). Each such artifact takes S separate slab pairs — pinned
+    # per shard on the rust side — and returns per-shard k_new/v_new head
+    # slices for the host combiner.
+    shard_counts: tuple = (2,)
     # Fig-3 / Fig-5(b) sweep: one full-model artifact per candidate TSP layer
     # at this context bucket / TSP token count.
     sweep_n: int = 256

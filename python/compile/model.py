@@ -14,6 +14,10 @@ Entry points (see DESIGN.md artifact table):
                     are the paged block slab plus per-(layer, lane) block
                     tables (gather in HLO), so the host never densifies
                     the pool.
+  decode_paged_shard_step — KV-head-sharded block-table decode: S separate
+                    slab pairs (one per shard, pinned per shard on the
+                    rust side) concatenated head-wise in HLO; outputs
+                    per-shard k_new/v_new slices for the host combiner.
   sweep_tsp       — full model with TSP applied *inside* HLO at layer t
                     (Fig. 3 / Fig. 5(b) / Table 10 sweeps).
 
@@ -273,6 +277,41 @@ def decode_paged_step(flat, tokens, positions, slab_k, slab_v, tables,
         one_seq, in_axes=(0, 0, 1, 1), out_axes=(0, 1, 1)
     )(tokens, positions, tables, lens)
     return logits, k_new, v_new
+
+
+def decode_paged_shard_step(flat, tokens, positions, *rest,
+                            cfg: ModelConfig, shards: int):
+    """KV-head-sharded block-table decode.
+
+    ``rest`` is ``(slab_k_0, slab_v_0, ..., slab_k_{S-1}, slab_v_{S-1},
+    tables, lens)``: each shard contributes its own slab pair of
+    ``[NB, bt, KV/S, hd]`` (heads ``[s*KV/S, (s+1)*KV/S)`` of every row —
+    device-pinned per shard on the rust side, so a mutation confined to
+    one shard re-uploads only that shard's planes), while the block
+    tables and lens are shard-oblivious and shared.
+
+    KV heads are independent under GQA attention, so concatenating the
+    shard slabs along the head axis reconstructs the full cache exactly
+    and the math is ``decode_paged_step`` verbatim. Outputs are
+    ``(logits [B,V], k_new_0 [L,B,KV/S,hd], v_new_0, ..., k_new_{S-1},
+    v_new_{S-1})`` — each shard's slice of the new KV row, which the
+    host-side combiner (rust ``coordinator::decode::combine_head_shards``)
+    reassembles; equivalence to the unsharded artifact is pinned by
+    ``python/tests/test_model.py``.
+    """
+    assert cfg.n_kv_heads % shards == 0, "shards must divide kv heads"
+    slabs, tables, lens = rest[:2 * shards], rest[-2], rest[-1]
+    slab_k = jnp.concatenate(slabs[0::2], axis=2)
+    slab_v = jnp.concatenate(slabs[1::2], axis=2)
+    logits, k_new, v_new = decode_paged_step(
+        flat, tokens, positions, slab_k, slab_v, tables, lens, cfg=cfg
+    )
+    kvs = cfg.n_kv_heads // shards
+    outs = [logits]
+    for s in range(shards):
+        outs.append(k_new[:, :, s * kvs:(s + 1) * kvs, :])
+        outs.append(v_new[:, :, s * kvs:(s + 1) * kvs, :])
+    return tuple(outs)
 
 
 def sweep_tsp(flat, tokens, n_valid, *, cfg: ModelConfig, t: int, nt: int,

@@ -277,6 +277,69 @@ class TestDecode:
                 np.asarray(a), np.asarray(b_), rtol=1e-5, atol=1e-5
             )
 
+    def test_sharded_paged_decode_equals_paged_decode(self):
+        """KV-head-sharded decode (S slab pairs concatenated in HLO, plus
+        the host-side head-shard recombination of the outputs) must equal
+        the unsharded paged decode bit-for-bit up to float tolerance —
+        logits AND the reassembled k_new/v_new."""
+        # TEST has a single KV head; sharding needs a divisible count.
+        scfg = ModelConfig(
+            d_model=32, n_layers=2, n_heads=4, n_kv_heads=2, d_ffn=64,
+            tsp_layer=1, max_train_len=128,
+        )
+        sflat = jnp.asarray(flatten(init_params(scfg, 5), scfg))
+        rng = np.random.default_rng(11)
+        b, bt, mb, shards = 2, 4, 4, 2
+        nb = scfg.n_layers * b * mb
+        kvs = scfg.n_kv_heads // shards
+        slab_k = rng.normal(size=(nb, bt, scfg.n_kv_heads,
+                                  scfg.head_dim)).astype(np.float32)
+        slab_v = rng.normal(size=slab_k.shape).astype(np.float32) * 0.5
+        lens = np.asarray([[5, 9], [12, 3]][: scfg.n_layers], np.int32)
+        tables = np.full((scfg.n_layers, b, mb), -1, np.int32)
+        free = list(rng.permutation(nb))
+        for l in range(scfg.n_layers):
+            for s in range(b):
+                for i in range(-(-int(lens[l, s]) // bt)):
+                    tables[l, s, i] = int(free.pop())
+        toks = jnp.asarray([5, 97], jnp.int32)
+        poss = jnp.asarray([int(lens[:, 0].max()),
+                            int(lens[:, 1].max())], jnp.int32)
+        lg_p, kn_p, vn_p = M.decode_paged_step(
+            sflat, toks, poss, jnp.asarray(slab_k), jnp.asarray(slab_v),
+            jnp.asarray(tables), jnp.asarray(lens), cfg=scfg,
+        )
+        # shard the slab head-wise and run the sharded entry point
+        shard_slabs = []
+        for s in range(shards):
+            shard_slabs.append(
+                jnp.asarray(slab_k[:, :, s * kvs:(s + 1) * kvs, :]))
+            shard_slabs.append(
+                jnp.asarray(slab_v[:, :, s * kvs:(s + 1) * kvs, :]))
+        out = M.decode_paged_shard_step(
+            sflat, toks, poss, *shard_slabs,
+            jnp.asarray(tables), jnp.asarray(lens), cfg=scfg, shards=shards,
+        )
+        assert len(out) == 1 + 2 * shards
+        lg_s = out[0]
+        # host-side combine: concatenate shard slices along the KV axis
+        kn_s = jnp.concatenate(out[1::2], axis=2)
+        vn_s = jnp.concatenate(out[2::2], axis=2)
+        np.testing.assert_allclose(
+            np.asarray(lg_s), np.asarray(lg_p), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(kn_s), np.asarray(kn_p), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(vn_s), np.asarray(vn_p), rtol=1e-5, atol=1e-5
+        )
+        # per-shard outputs really are head slices (exact equality)
+        kvs_slice = np.asarray(out[1])
+        np.testing.assert_array_equal(
+            kvs_slice, np.asarray(kn_p)[:, :, :kvs, :]
+        )
+
     def test_compressed_cache_changes_little_when_keeping_salient(
         self, flat
     ):

@@ -347,6 +347,167 @@ fn main() {
     println!("\nwrote BENCH_paging_swap.json:\n{json}");
 
     // --------------------------------------------------------------------
+    // Sharded slabs: input prep (scratch-buffered vs allocating) and
+    // upload amplification. The upload model is the decode planner's own
+    // staleness logic (`decode::stale_shards` against a resident-version
+    // mirror, exactly what `Exec::pinned_is_current` provides): each
+    // simulated step mutates either ONE shard's head slice (locality p)
+    // or a whole row (all shards), then "uploads" — materializes — every
+    // stale shard plane. S=1 must upload the whole slab on any mutation;
+    // S=4 uploads only what moved.
+    println!("\n=== sharded slab: input prep + upload amplification ===");
+    use fastkv::coordinator::decode::{shard_pin_keys, stale_shards};
+    use std::collections::HashMap;
+    let sm = ModelMeta {
+        n_kv_heads: 4,
+        head_dim: 12, // same row width as the meta above (48 f32)
+        ..meta()
+    };
+    let cap_s = 576usize;
+    let retained_s = 256usize;
+    // Input-prep: scratch-buffered table/lens fills vs fresh allocations.
+    {
+        let mut paged =
+            PagedArena::new(&sm, b, cap_s, PagingConfig::default());
+        for i in 0..b as u64 {
+            let rc = cache(&sm, 70 + i, retained_s);
+            KvStore::admit(&mut paged, &rc).unwrap();
+        }
+        let view = paged.view();
+        let mb = view.max_blocks;
+        bench("input prep, fresh Vec per step (old)", 2, 200, || {
+            let tables = view.tables_tensor(mb);
+            let lens = view.lens_tensor();
+            std::hint::black_box((&tables.data[0], &lens.data[0]));
+        });
+        let mut tables = fastkv::tensor::HostTensorI32::empty();
+        let mut lens = fastkv::tensor::HostTensorI32::empty();
+        bench("input prep, reused scratch buffers", 2, 200, || {
+            view.tables_tensor_into(mb, &mut tables);
+            view.lens_tensor_into(&mut lens);
+            std::hint::black_box((&tables.data[0], &lens.data[0]));
+        });
+    }
+    // Upload amplification sweep: fraction of steps whose mutation is
+    // confined to one shard (0.0 = every step appends whole rows).
+    let steps = if bench_util::quick() { 40 } else { 200 };
+    let mut sweep_rows = Vec::new();
+    for &locality in &[0.0f64, 0.5, 1.0] {
+        let mut per_s: Vec<(usize, usize, usize)> = Vec::new(); // (S, uploads, bytes)
+        for &s in &[1usize, 4] {
+            let cfg = PagingConfig { shards: s, ..PagingConfig::default() };
+            let mut pa = PagedArena::new(&sm, b, cap_s, cfg);
+            let mut slots = Vec::new();
+            for i in 0..b as u64 {
+                let rc = cache(&sm, 70 + i, retained_s);
+                slots.push(KvStore::admit(&mut pa, &rc).unwrap());
+            }
+            let srw = pa.shard_spec().shard_row_elems();
+            let mut mirror: HashMap<String, u64> = HashMap::new();
+            let mut rng = Rng::new(1234);
+            let mut uploads = 0usize;
+            let mut bytes = 0usize;
+            let step =
+                HostTensor::zeros(vec![sm.n_layers, b, sm.n_kv_heads, sm.head_dim]);
+            // prime: first step uploads everything (both shapes pay it)
+            for t in 0..steps {
+                if t > 0 {
+                    if rng.f64() < locality {
+                        let shard = rng.below(pa.shard_spec().shards);
+                        assert!(pa.mutate_shard_row(
+                            slots[0],
+                            0,
+                            0,
+                            shard,
+                            &vec![t as f32; srw],
+                            &vec![-(t as f32); srw],
+                        ));
+                    } else {
+                        for &sl in &slots {
+                            let _ = KvStore::append(&mut pa, sl, &step, &step);
+                        }
+                    }
+                }
+                let view = pa.view();
+                let keys = shard_pin_keys(&view);
+                let stale = stale_shards(&view, &keys, &|k, v| {
+                    mirror.get(k).copied() == Some(v)
+                });
+                for &sh in &stale {
+                    // the real upload cost: materialize the stale plane(s)
+                    let (tk, tv) = if view.shards > 1 {
+                        view.view_shard(sh).slab_tensors(view.num_blocks)
+                    } else {
+                        view.slab_tensors(view.num_blocks)
+                    };
+                    bytes += (tk.data.len() + tv.data.len()) * 4;
+                    std::hint::black_box((&tk.data[0], &tv.data[0]));
+                    let ver = if view.shards > 1 {
+                        view.shard_versions[sh]
+                    } else {
+                        view.version
+                    };
+                    mirror.insert(keys[sh].0.clone(), ver);
+                    mirror.insert(keys[sh].1.clone(), ver);
+                    uploads += 1;
+                }
+            }
+            // acceptance: under full locality a sharded store re-uploads
+            // exactly one shard per step (plus the S-shard prime)
+            if s > 1 && (locality - 1.0).abs() < f64::EPSILON {
+                assert_eq!(
+                    uploads,
+                    s + (steps - 1),
+                    "single-shard mutations must re-upload one shard each"
+                );
+            }
+            println!(
+                "{:44} {uploads:6} shard uploads, {:8.1} MiB moved",
+                format!("locality {locality:.1}, S={s} ({steps} steps)"),
+                bytes as f64 / (1 << 20) as f64
+            );
+            per_s.push((s, uploads, bytes));
+        }
+        sweep_rows.push((locality, per_s));
+    }
+    let flat_bytes = |rows: &[(f64, Vec<(usize, usize, usize)>)], loc: f64, s: usize| {
+        rows.iter()
+            .find(|(l, _)| (*l - loc).abs() < f64::EPSILON)
+            .and_then(|(_, v)| v.iter().find(|(sh, _, _)| *sh == s))
+            .map(|&(_, u, by)| (u, by))
+            .unwrap()
+    };
+    let (u1, b1) = flat_bytes(&sweep_rows, 1.0, 1);
+    let (u4, b4) = flat_bytes(&sweep_rows, 1.0, 4);
+    let json = format!(
+        "{{\n  \"steps\": {steps},\n  \"batch\": {b},\n  \"kv_heads\": {},\n  \
+         \"sweep\": [\n{}\n  ],\n  \
+         \"local_mutation_bytes_s1\": {b1},\n  \
+         \"local_mutation_bytes_s4\": {b4},\n  \
+         \"upload_bytes_reduction_at_full_locality\": {:.3},\n  \
+         \"uploads_s1\": {u1},\n  \"uploads_s4\": {u4}\n}}\n",
+        sm.n_kv_heads,
+        sweep_rows
+            .iter()
+            .map(|(loc, v)| {
+                let cells = v
+                    .iter()
+                    .map(|(s, u, by)| format!(
+                        "{{\"shards\": {s}, \"uploads\": {u}, \"bytes\": {by}}}"
+                    ))
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                format!("    {{\"locality\": {loc}, \"runs\": [{cells}]}}")
+            })
+            .collect::<Vec<_>>()
+            .join(",\n"),
+        b1 as f64 / b4 as f64,
+    );
+    std::fs::write("BENCH_paging_shard.json", &json)
+        .expect("write BENCH_paging_shard.json");
+    println!("\nwrote BENCH_paging_shard.json:\n{json}");
+
+    // --------------------------------------------------------------------
     // 2-tenant contention: a heavy tenant churning large admissions
     // against a light tenant's small ones over a tight pool. Quotas OFF:
     // the light tenant admits only when the heavy churn happens to leave

@@ -6,32 +6,48 @@
 //! run the `decode_{B}x{C}` artifact, append, argmax, handle END. Both now
 //! drive a [`DecodeBatch`]:
 //!
-//!  * [`DecodeBatch::step`] plans one batched decode step. When the store
-//!    exposes a block-table [`DecodeView`] and the manifest carries the
-//!    matching `decode_paged_{B}x{C}` artifact, the inputs are the block
-//!    slab (device-pinned per store — see `Runtime::run_with_pinned`)
-//!    plus table indices and lens: O(referenced blocks) planning work per
-//!    token, with the slab materialized only when its version went stale
-//!    (see the paging README for what that costs until buffer donation
-//!    lands). Otherwise it falls back to the dense staged bridge
-//!    (`decode_{B}x{C}`), which remains available behind
-//!    `PagingConfig::dense_staging` and for the flat arena.
+//!  * [`DecodeBatch::step`] plans one batched decode step. Path ladder,
+//!    best first:
+//!    1. **sharded block-table** (`decode_paged_shard_{B}x{C}s{S}`) when
+//!       the store's slab is KV-head-sharded and the manifest carries the
+//!       matching artifact: inputs are S per-shard slab pairs — each
+//!       pinned under its own key/version so only the shards whose plane
+//!       mutated re-upload ([`stale_shards`]) — plus the shared tables and
+//!       lens; outputs are per-shard `k_new`/`v_new` head slices that the
+//!       host-side combiner ([`combine_head_shards`]) reassembles;
+//!    2. **block-table** (`decode_paged_{B}x{C}`): the whole slab pinned
+//!       as one pair, O(referenced blocks) planning work per token;
+//!    3. **dense staged bridge** (`decode_{B}x{C}`), kept behind
+//!       `PagingConfig::dense_staging` and for the flat arena.
 //!  * [`advance_lane`] applies one lane's slice of the outputs: append the
 //!    new KV row (block-compacting under pool pressure when a
 //!    [`CompactSpec`] is supplied), then sample the next token.
 //!
+//! Steady-state input prep reuses caller-owned buffers: both serving
+//! loops own a [`DecodeScratch`] whose tensors are refilled in place
+//! each step (`Exec::run_pinned_ref` borrows them; only executors that
+//! cross a thread boundary fall back to cloning). The one remaining
+//! per-step allocation is the store's own `decode_view()` build
+//! (O(referenced blocks) tables/lens Vecs) — the planner itself adds
+//! none.
+//!
 //! Policy-level reactions stay with the callers: the engine stops on any
 //! exhaustion (recording `truncated_by_capacity`), the server preempts.
 
+use std::collections::BTreeMap;
+
 use anyhow::Result;
 
-use crate::coordinator::paging::{AppendResult, KvStore};
+use crate::coordinator::paging::{AppendResult, DecodeView, KvStore};
 use crate::coordinator::policies::{Exec, PolicyCfg};
-use crate::manifest::{decode_artifact_name, decode_paged_artifact_name, Manifest};
-use crate::metrics::Metrics;
+use crate::manifest::{
+    decode_artifact_name, decode_paged_artifact_name,
+    decode_paged_shard_artifact_name, Manifest,
+};
+use crate::metrics::{names, Metrics};
 use crate::runtime::outputs::DecodeOut;
 use crate::runtime::{In, PinnedInput};
-use crate::tensor::HostTensorI32;
+use crate::tensor::{HostTensor, HostTensorI32};
 use crate::tokenizer::END;
 
 /// One active lane's contribution to a batched decode step.
@@ -47,6 +63,9 @@ pub struct LaneInput {
 /// Which input ABI a step used.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DecodePath {
+    /// KV-head-sharded block tables: S per-shard slab pairs + shared
+    /// tables/lens (`decode_paged_shard_{B}x{C}s{S}`).
+    Sharded,
     /// Block-table-native: slab + tables + lens (`decode_paged_{B}x{C}`).
     BlockTable,
     /// Dense staging bridge (`decode_{B}x{C}`).
@@ -64,13 +83,47 @@ struct PagedArtifact {
     max_blocks: usize,
 }
 
+/// Shared shape-compatibility rule: whether a store's live view fits an
+/// artifact's static block/pool/table/capacity buckets (the shard checks
+/// ride on top for the sharded family).
+fn view_fits(
+    view: &DecodeView<'_>,
+    cap: usize,
+    block_tokens: usize,
+    pool_blocks: usize,
+    max_blocks: usize,
+) -> bool {
+    view.block_tokens == block_tokens
+        && view.num_blocks <= pool_blocks
+        && view.max_blocks <= max_blocks
+        && view.capacity == cap
+}
+
 impl PagedArtifact {
     /// Whether a store's live view fits this artifact's static shapes.
-    fn accepts(&self, view: &crate::coordinator::paging::DecodeView<'_>, cap: usize) -> bool {
-        view.block_tokens == self.block_tokens
-            && view.num_blocks <= self.pool_blocks
-            && view.max_blocks <= self.max_blocks
-            && view.capacity == cap
+    fn accepts(&self, view: &DecodeView<'_>, cap: usize) -> bool {
+        view_fits(view, cap, self.block_tokens, self.pool_blocks, self.max_blocks)
+    }
+}
+
+#[derive(Debug, Clone)]
+struct ShardArtifact {
+    name: String,
+    /// Static pool bucket `nb` of each per-shard slab input.
+    pool_blocks: usize,
+    block_tokens: usize,
+    max_blocks: usize,
+    /// KV-head shard count `S` the artifact was compiled for.
+    shards: usize,
+    /// KV heads per shard (`KV / S`).
+    shard_kv_heads: usize,
+}
+
+impl ShardArtifact {
+    fn accepts(&self, view: &DecodeView<'_>, cap: usize) -> bool {
+        view_fits(view, cap, self.block_tokens, self.pool_blocks, self.max_blocks)
+            && view.shards == self.shards
+            && self.shard_kv_heads * self.shards == view.kv_heads
     }
 }
 
@@ -81,12 +134,15 @@ pub struct DecodeBatch {
     cap: usize,
     dense: String,
     paged: Option<PagedArtifact>,
+    /// Sharded artifact per shard count `S` (from the manifest's
+    /// `shard_counts` bucket).
+    sharded: BTreeMap<usize, ShardArtifact>,
 }
 
 impl DecodeBatch {
     /// Resolve the artifact family for a `(batch, capacity)` bucket. The
-    /// paged artifact is optional: older artifact dirs without it simply
-    /// keep the staged path.
+    /// paged and sharded artifacts are optional: older artifact dirs
+    /// without them simply keep the staged (resp. unsharded) path.
     pub fn new(man: &Manifest, b: usize, cap: usize) -> DecodeBatch {
         let paged_name = decode_paged_artifact_name(b, cap);
         let paged = man.artifacts.get(&paged_name).map(|meta| {
@@ -98,7 +154,31 @@ impl DecodeBatch {
                 max_blocks: (cap + bt - 1) / bt,
             }
         });
-        DecodeBatch { b, cap, dense: decode_artifact_name(b, cap), paged }
+        let mut sharded = BTreeMap::new();
+        for &s in &man.buckets.shard_counts {
+            let name = decode_paged_shard_artifact_name(b, cap, s);
+            if let Some(meta) = man.artifacts.get(&name) {
+                let bt = meta.block_tokens.max(1);
+                sharded.insert(
+                    s,
+                    ShardArtifact {
+                        name,
+                        pool_blocks: meta.pool_blocks,
+                        block_tokens: bt,
+                        max_blocks: (cap + bt - 1) / bt,
+                        shards: meta.shards.max(1),
+                        shard_kv_heads: meta.shard_kv_heads,
+                    },
+                );
+            }
+        }
+        DecodeBatch {
+            b,
+            cap,
+            dense: decode_artifact_name(b, cap),
+            paged,
+            sharded,
+        }
     }
 
     pub fn batch(&self) -> usize {
@@ -109,29 +189,48 @@ impl DecodeBatch {
         self.cap
     }
 
+    fn resolve<'v>(
+        &self,
+        view: &Option<DecodeView<'v>>,
+    ) -> (Option<&ShardArtifact>, Option<&PagedArtifact>) {
+        let Some(v) = view else { return (None, None) };
+        let shard = if v.shards > 1 {
+            self.sharded.get(&v.shards).filter(|a| a.accepts(v, self.cap))
+        } else {
+            None
+        };
+        if shard.is_some() {
+            return (shard, None);
+        }
+        // A sharded store can still decode through the unsharded paged
+        // artifact (the host keeps the canonical dense planes) — only the
+        // per-shard upload win is lost, never correctness.
+        (None, self.paged.as_ref().filter(|a| a.accepts(v, self.cap)))
+    }
+
     /// The path [`DecodeBatch::step`] will take for this store.
     pub fn path_for(&self, store: &dyn KvStore) -> DecodePath {
-        match (&self.paged, store.decode_view()) {
-            (Some(art), Some(view)) if art.accepts(&view, self.cap) => {
-                DecodePath::BlockTable
-            }
+        match self.resolve(&store.decode_view()) {
+            (Some(_), _) => DecodePath::Sharded,
+            (None, Some(_)) => DecodePath::BlockTable,
             _ => DecodePath::Staged,
         }
     }
 
     /// Artifact name the next step will execute (for logs / warmup).
     pub fn artifact_for(&self, store: &dyn KvStore) -> &str {
-        match self.path_for(store) {
-            DecodePath::BlockTable => {
-                &self.paged.as_ref().expect("paged artifact").name
-            }
-            DecodePath::Staged => &self.dense,
+        match self.resolve(&store.decode_view()) {
+            (Some(a), _) => &a.name,
+            (None, Some(a)) => &a.name,
+            _ => &self.dense,
         }
     }
 
-    /// Run one batched decode step over `lanes`. Idle slots decode a
-    /// dummy token 0 at position 0 whose outputs are simply never applied
-    /// (same contract the server loop always had).
+    /// Run one batched decode step over `lanes` with a throwaway scratch
+    /// (tests/tools; the serving loops hold a [`DecodeScratch`] and call
+    /// [`DecodeBatch::step_scratch`]). Idle slots decode a dummy token 0
+    /// at position 0 whose outputs are simply never applied (same
+    /// contract the server loop always had).
     pub fn step(
         &self,
         ex: &dyn Exec,
@@ -139,96 +238,395 @@ impl DecodeBatch {
         lanes: &[LaneInput],
         metrics: Option<&Metrics>,
     ) -> Result<DecodeOut> {
+        let mut scratch = DecodeScratch::new();
+        self.step_scratch(ex, store, lanes, metrics, &mut scratch)
+    }
+
+    /// [`DecodeBatch::step`] with caller-owned reusable buffers: after
+    /// the first step, the planner's input prep allocates nothing —
+    /// tables, lens, token/position tensors, pinned payloads, and key
+    /// strings are all refilled in place. (The store's `decode_view()`
+    /// build remains the one O(referenced blocks) allocation per step.)
+    pub fn step_scratch(
+        &self,
+        ex: &dyn Exec,
+        store: &dyn KvStore,
+        lanes: &[LaneInput],
+        metrics: Option<&Metrics>,
+        scratch: &mut DecodeScratch,
+    ) -> Result<DecodeOut> {
         let b = self.b;
-        let mut toks = vec![0i32; b];
-        let mut poss = vec![0i32; b];
-        for lane in lanes {
-            toks[lane.slot] = lane.token;
-            poss[lane.slot] = lane.pos as i32;
-        }
-        let toks = HostTensorI32::new(vec![b], toks);
-        let poss = HostTensorI32::new(vec![b], poss);
+        scratch.fill_lanes(b, lanes);
 
         // Build the view once; it decides the path and feeds the inputs.
         let view = store.decode_view();
-        let paged = match (&self.paged, &view) {
-            (Some(art), Some(v)) if art.accepts(v, self.cap) => Some(art),
-            _ => None,
-        };
-        let out = match paged {
-            Some(art) => {
-                let view = view.expect("checked above");
-                // Slab planes are pinned on device per store (the store id
-                // rides in the key, so two stores sharing one executor
-                // never thrash or race each other's slot). The O(pool)
-                // materialization below is skipped only when the slab is
-                // unchanged since the last upload; appends change it every
-                // generated token, so on the current pure-AOT ABI the
-                // re-upload per step remains — deleting it needs PJRT
-                // buffer donation (ROADMAP). What this path removes today
-                // is the host-side cost: the dense densify/clone and the
-                // incremental staging double-write.
-                let sid = view.version >> 32;
-                let k_key = format!("decode_slab_k:{sid:x}");
-                let v_key = format!("decode_slab_v:{sid:x}");
-                let current = ex.pinned_is_current(&k_key, view.version)
-                    && ex.pinned_is_current(&v_key, view.version);
-                let inputs = vec![
+        let (shard_art, paged_art) = self.resolve(&view);
+        if shard_art.is_none() && paged_art.is_none() {
+            // Dense staged bridge (fallback/oracle path; deliberately not
+            // scratch-buffered — `stage()` itself materializes the dense
+            // copy, which dwarfs the input plumbing).
+            let staged = store.stage();
+            if let Some(m) = metrics {
+                m.inc("decode_steps_staged", 1);
+            }
+            let (toks, poss) = scratch.lane_tensors();
+            let out = ex.run(
+                &self.dense,
+                vec![
                     In::I32(toks),
                     In::I32(poss),
-                    In::I32(view.tables_tensor(art.max_blocks)),
-                    In::I32(view.lens_tensor()),
-                ];
-                if let Some(m) = metrics {
-                    m.inc("decode_steps_block_table", 1);
-                }
-                let materialize = |v: &crate::coordinator::paging::DecodeView<'_>| {
-                    let (sk, sv) = v.slab_tensors(art.pool_blocks);
-                    vec![
-                        PinnedInput::new(2, &k_key, v.version, sk),
-                        PinnedInput::new(3, &v_key, v.version, sv),
-                    ]
-                };
-                if current {
-                    let cached = vec![
-                        PinnedInput::cached(2, &k_key, view.version),
-                        PinnedInput::cached(3, &v_key, view.version),
-                    ];
-                    match ex.run_pinned(&art.name, cached, inputs.clone()) {
-                        Ok(r) => r,
-                        // The residency check can race an LRU eviction on
-                        // a shared executor; retry with payloads ONLY for
-                        // that specific miss (`Runtime::run_with_pinned`'s
-                        // "not resident" error) — any other failure is a
-                        // genuine execution error and must surface as-is,
-                        // not be masked by a silent re-execution.
-                        Err(e) if format!("{e:#}").contains("is not resident") => {
-                            ex.run_pinned(&art.name, materialize(&view), inputs)?
-                        }
-                        Err(e) => return Err(e),
-                    }
-                } else {
-                    ex.run_pinned(&art.name, materialize(&view), inputs)?
-                }
-            }
-            None => {
-                let staged = store.stage();
-                if let Some(m) = metrics {
-                    m.inc("decode_steps_staged", 1);
-                }
-                ex.run(
-                    &self.dense,
-                    vec![
-                        In::I32(toks),
-                        In::I32(poss),
-                        staged.k.into(),
-                        staged.v.into(),
-                        staged.lens.into(),
-                    ],
-                )?
-            }
+                    staged.k.into(),
+                    staged.v.into(),
+                    staged.lens.into(),
+                ],
+            )?;
+            return Ok(DecodeOut::from_vec(out));
+        }
+
+        let view = view.expect("paged/sharded path checked above");
+        let (name, pool_blocks, max_blocks, shards) = match (shard_art, paged_art)
+        {
+            (Some(a), _) => (&a.name, a.pool_blocks, a.max_blocks, a.shards),
+            (_, Some(a)) => (&a.name, a.pool_blocks, a.max_blocks, 1usize),
+            _ => unreachable!("resolved above"),
         };
-        Ok(DecodeOut::from_vec(out))
+        scratch.fill_tables(&view, max_blocks);
+        // Pins follow the RESOLVED artifact's shard count, not the
+        // store's: a sharded store falling back to the unsharded paged
+        // artifact uploads the whole slab as one legacy-keyed pair.
+        scratch.ensure_pins(&view, shards);
+
+        // Per-shard pinned-slab maintenance: only the shards whose plane
+        // stamp moved since the executor last saw them are materialized
+        // and re-uploaded — a mutation confined to one shard moves 1/S of
+        // the slab (the unsharded path is the S=1 degenerate case). Each
+        // materialization lands in a persistent scratch buffer.
+        let stale = stale_shards(&view, &scratch.keys, &|k, v| {
+            ex.pinned_is_current(k, v)
+        });
+        let mut uploads = 0usize;
+        for s in 0..shards.max(1) {
+            if stale.contains(&s) {
+                scratch.materialize_shard(&view, s, pool_blocks);
+                uploads += 1;
+            } else {
+                scratch.park_shard(&view, s);
+            }
+        }
+        if let Some(m) = metrics {
+            if shards > 1 {
+                m.inc(names::DECODE_STEPS_SHARDED, 1);
+            } else {
+                m.inc("decode_steps_block_table", 1);
+            }
+            m.inc(names::SHARD_UPLOADS, uploads as u64);
+        }
+
+        let out = match ex.run_pinned_ref(name, &scratch.pins, &scratch.ins) {
+            Ok(r) => r,
+            // The residency check can race an LRU eviction on a shared
+            // executor; retry with payloads ONLY for that specific miss
+            // (`Runtime::run_with_pinned`'s "not resident" error) — any
+            // other failure is a genuine execution error and must surface
+            // as-is, not be masked by a silent re-execution.
+            Err(e) if format!("{e:#}").contains("is not resident") => {
+                let mut retried = 0u64;
+                for s in 0..shards.max(1) {
+                    if scratch.pins[2 * s].tensor.is_none() {
+                        scratch.materialize_shard(&view, s, pool_blocks);
+                        retried += 1;
+                    }
+                }
+                if let Some(m) = metrics {
+                    m.inc(names::SHARD_UPLOADS, retried);
+                }
+                ex.run_pinned_ref(name, &scratch.pins, &scratch.ins)?
+            }
+            Err(e) => return Err(e),
+        };
+
+        if shards > 1 {
+            Ok(combine_shard_outputs(out, shards))
+        } else {
+            Ok(DecodeOut::from_vec(out))
+        }
+    }
+}
+
+/// Pinned-buffer keys for `shards` slab-plane pairs of store `sid`: one
+/// `(k_key, v_key)` pair per KV-head shard, or the legacy single pair
+/// for the unsharded (whole-slab) layout. Keys embed the store id so two
+/// stores sharing one executor never thrash or race each other's slots.
+fn pin_keys(sid: u64, shards: usize) -> Vec<(String, String)> {
+    if shards <= 1 {
+        vec![(
+            format!("decode_slab_k:{sid:x}"),
+            format!("decode_slab_v:{sid:x}"),
+        )]
+    } else {
+        (0..shards)
+            .map(|s| {
+                (
+                    format!("decode_slab_k:{sid:x}s{s}"),
+                    format!("decode_slab_v:{sid:x}s{s}"),
+                )
+            })
+            .collect()
+    }
+}
+
+/// Pinned-buffer keys for a store's native shard layout (one pair per
+/// shard of `view.shards`, the legacy single pair when unsharded).
+pub fn shard_pin_keys(view: &DecodeView<'_>) -> Vec<(String, String)> {
+    pin_keys(view.version >> 32, view.shards.max(1))
+}
+
+/// Which of `keys`' slab-plane pairs must re-upload this step, judged
+/// against the executor's resident `(key, version)` pairs (`is_current`
+/// is `Exec::pinned_is_current`, or a mirror in the upload-amplification
+/// bench). The pair count follows `keys` — a single pair is judged on
+/// the whole-slab version (the unsharded layout, whatever the store's
+/// native shard count), per-shard pairs on their own stamps. This is
+/// where per-shard versioning pays: a mutation confined to one shard
+/// ([`crate::coordinator::paging::PagedArena::mutate_shard_row`])
+/// leaves every other shard current.
+pub fn stale_shards(
+    view: &DecodeView<'_>,
+    keys: &[(String, String)],
+    is_current: &dyn Fn(&str, u64) -> bool,
+) -> Vec<usize> {
+    let n = keys.len();
+    assert!(
+        n == 1 || n == view.shards,
+        "keys must cover one whole-slab pair or one pair per shard"
+    );
+    (0..n)
+        .filter(|&s| {
+            let ver = if n <= 1 {
+                view.version
+            } else {
+                view.shard_versions[s]
+            };
+            !(is_current(&keys[s].0, ver) && is_current(&keys[s].1, ver))
+        })
+        .collect()
+}
+
+/// Host-side partial-output combiner: reassemble per-shard head slices
+/// (`[L, B, KV/S, hd]` each, shard-major in `parts`) into the full
+/// `[L, B, KV, hd]` row, concatenating along the KV-head axis. KV heads
+/// are independent under attention, so this is exact — the sharded
+/// artifact's outputs combined equal the unsharded artifact's.
+pub fn combine_head_shards(parts: &[HostTensor]) -> HostTensor {
+    assert!(!parts.is_empty(), "at least one shard");
+    let shape = &parts[0].shape;
+    assert_eq!(shape.len(), 4, "[L, B, KV/S, hd] shard outputs");
+    let (l, b, kvs, hd) = (shape[0], shape[1], shape[2], shape[3]);
+    for p in parts {
+        assert_eq!(&p.shape, shape, "shard output shapes must match");
+    }
+    let s = parts.len();
+    let sub = kvs * hd;
+    // Row-major assembly writes every element exactly once — no zero
+    // prefill pass on the sharded hot path.
+    let mut data = Vec::with_capacity(l * b * sub * s);
+    for row in 0..l * b {
+        for p in parts {
+            data.extend_from_slice(&p.data[row * sub..(row + 1) * sub]);
+        }
+    }
+    HostTensor::new(vec![l, b, kvs * s, hd], data)
+}
+
+/// Assemble a [`DecodeOut`] from the sharded artifact's output tuple
+/// `(logits, k_new_0, v_new_0, ..., k_new_{S-1}, v_new_{S-1})`.
+fn combine_shard_outputs(out: Vec<HostTensor>, shards: usize) -> DecodeOut {
+    assert_eq!(out.len(), 1 + 2 * shards, "sharded decode outputs");
+    let mut it = out.into_iter();
+    let logits = it.next().expect("logits");
+    let mut k_parts = Vec::with_capacity(shards);
+    let mut v_parts = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        k_parts.push(it.next().expect("k_new shard"));
+        v_parts.push(it.next().expect("v_new shard"));
+    }
+    DecodeOut {
+        logits,
+        k_new: combine_head_shards(&k_parts),
+        v_new: combine_head_shards(&v_parts),
+    }
+}
+
+/// Reusable buffers for a decode loop: token/position/table/lens tensors,
+/// pinned slab payloads, and the per-store key strings are all refilled
+/// in place, deleting the hot-loop churn `DecodeView::tables_tensor` &
+/// co. used to cause (what remains per step is the store's own
+/// `decode_view()` build).
+pub struct DecodeScratch {
+    /// `[toks, poss, tables, lens]` in the paged-artifact input order,
+    /// owned here and borrowed by `Exec::run_pinned_ref`.
+    ins: Vec<In>,
+    /// One persistent pinned slot per slab plane (2 per shard), payloads
+    /// parked in `spares` while the device copy is current.
+    pins: Vec<PinnedInput>,
+    spares: Vec<Option<HostTensor>>,
+    /// `(k_key, v_key)` per pinned pair, cached per store id.
+    keys: Vec<(String, String)>,
+    /// Store id (+ effective pair count) the keys/pins were built for.
+    keys_for: (u64, usize),
+    /// Pair count of the RESOLVED artifact this step (1 when a sharded
+    /// store falls back to the unsharded paged artifact — the whole slab
+    /// then travels as one legacy-keyed pair).
+    eff_shards: usize,
+}
+
+impl Default for DecodeScratch {
+    fn default() -> Self {
+        DecodeScratch::new()
+    }
+}
+
+impl DecodeScratch {
+    /// Empty scratch; buffers grow to steady-state size on the first step.
+    pub fn new() -> DecodeScratch {
+        DecodeScratch {
+            ins: vec![
+                In::I32(HostTensorI32::empty()),
+                In::I32(HostTensorI32::empty()),
+                In::I32(HostTensorI32::empty()),
+                In::I32(HostTensorI32::empty()),
+            ],
+            pins: Vec::new(),
+            spares: Vec::new(),
+            keys: Vec::new(),
+            keys_for: (u64::MAX, 0),
+            eff_shards: 1,
+        }
+    }
+
+    fn ins_i32(&mut self, idx: usize) -> &mut HostTensorI32 {
+        match &mut self.ins[idx] {
+            In::I32(t) => t,
+            In::F32(_) => unreachable!("decode scratch inputs are i32"),
+        }
+    }
+
+    /// Fill the `[B]` token/position tensors from this step's lanes.
+    fn fill_lanes(&mut self, b: usize, lanes: &[LaneInput]) {
+        let [In::I32(toks), In::I32(poss), ..] = &mut self.ins[..] else {
+            unreachable!("decode scratch inputs are i32")
+        };
+        for t in [&mut *toks, &mut *poss] {
+            t.shape.clear();
+            t.shape.push(b);
+            t.data.clear();
+            t.data.resize(b, 0);
+        }
+        for lane in lanes {
+            toks.data[lane.slot] = lane.token;
+            poss.data[lane.slot] = lane.pos as i32;
+        }
+    }
+
+    /// Clones of the token/position tensors (staged-bridge path, which
+    /// moves owned inputs).
+    fn lane_tensors(&mut self) -> (HostTensorI32, HostTensorI32) {
+        let toks = self.ins_i32(0).clone();
+        let poss = self.ins_i32(1).clone();
+        (toks, poss)
+    }
+
+    /// Fill the table/lens tensors from the view (in place).
+    fn fill_tables(&mut self, view: &DecodeView<'_>, mb: usize) {
+        view.tables_tensor_into(mb, self.ins_i32(2));
+        view.lens_tensor_into(self.ins_i32(3));
+    }
+
+    /// (Re)build the pinned slots and key strings when the store or the
+    /// resolved artifact's pair count changed; steady-state steps find
+    /// everything cached. `eff_shards` is the RESOLVED artifact's shard
+    /// count — 1 (whole slab, legacy keys) when a sharded store falls
+    /// back to the unsharded paged artifact.
+    fn ensure_pins(&mut self, view: &DecodeView<'_>, eff_shards: usize) {
+        let sid = view.version >> 32;
+        let eff = eff_shards.max(1);
+        self.eff_shards = eff;
+        if self.keys_for == (sid, eff) {
+            return;
+        }
+        self.keys = pin_keys(sid, eff);
+        self.pins.clear();
+        self.spares.clear();
+        for (s, (k_key, v_key)) in self.keys.iter().enumerate() {
+            self.pins.push(PinnedInput::new(
+                2 + 2 * s,
+                k_key,
+                0,
+                HostTensor::empty(),
+            ));
+            self.pins.push(PinnedInput::new(
+                3 + 2 * s,
+                v_key,
+                0,
+                HostTensor::empty(),
+            ));
+            self.spares.push(None);
+            self.spares.push(None);
+        }
+        self.keys_for = (sid, eff);
+    }
+
+    fn shard_version(&self, view: &DecodeView<'_>, s: usize) -> u64 {
+        if self.eff_shards <= 1 {
+            view.version
+        } else {
+            view.shard_versions[s]
+        }
+    }
+
+    /// Materialize shard `s`'s slab planes into the persistent payload
+    /// buffers (stale path: this pair re-uploads).
+    fn materialize_shard(
+        &mut self,
+        view: &DecodeView<'_>,
+        s: usize,
+        pool_blocks: usize,
+    ) {
+        let ver = self.shard_version(view, s);
+        let (ki, vi) = (2 * s, 2 * s + 1);
+        let mut k = self.pins[ki]
+            .tensor
+            .take()
+            .or_else(|| self.spares[ki].take())
+            .unwrap_or_else(HostTensor::empty);
+        let mut v = self.pins[vi]
+            .tensor
+            .take()
+            .or_else(|| self.spares[vi].take())
+            .unwrap_or_else(HostTensor::empty);
+        if self.eff_shards <= 1 {
+            // whole slab as one pair (unsharded artifact — also the
+            // fallback for a sharded store without a shard artifact)
+            view.slab_tensors_into(pool_blocks, &mut k, &mut v);
+        } else {
+            view.view_shard(s).slab_tensors_into(pool_blocks, &mut k, &mut v);
+        }
+        self.pins[ki].tensor = Some(k);
+        self.pins[vi].tensor = Some(v);
+        self.pins[ki].version = ver;
+        self.pins[vi].version = ver;
+    }
+
+    /// Send shard `s` payload-less (current path: the device copy is
+    /// reused); its buffers park in `spares` for the next stale step.
+    fn park_shard(&mut self, view: &DecodeView<'_>, s: usize) {
+        let ver = self.shard_version(view, s);
+        for i in [2 * s, 2 * s + 1] {
+            if let Some(t) = self.pins[i].tensor.take() {
+                self.spares[i] = Some(t);
+            }
+            self.pins[i].version = ver;
+        }
     }
 }
 
@@ -322,8 +720,17 @@ mod tests {
     }
 
     fn manifest(with_paged: bool) -> Manifest {
+        manifest_sharded(with_paged, false)
+    }
+
+    fn manifest_sharded(with_paged: bool, with_sharded: bool) -> Manifest {
         let mut artifacts = BTreeMap::new();
-        let mk = |name: &str, kind: &str, pool_blocks, block_tokens| ArtifactMeta {
+        let mk = |name: &str,
+                  kind: &str,
+                  pool_blocks,
+                  block_tokens,
+                  shards,
+                  shard_kv_heads| ArtifactMeta {
             name: name.to_string(),
             file: format!("{name}.hlo.txt"),
             kind: kind.to_string(),
@@ -333,17 +740,32 @@ mod tests {
             tsp_layer: 1,
             pool_blocks,
             block_tokens,
+            shards,
+            shard_kv_heads,
             inputs: Vec::<TensorSig>::new(),
             outputs: Vec::new(),
         };
         artifacts.insert(
             "decode_1x8".to_string(),
-            mk("decode_1x8", "decode", 0, 0),
+            mk("decode_1x8", "decode", 0, 0, 0, 0),
         );
         if with_paged {
             artifacts.insert(
                 "decode_paged_1x8".to_string(),
-                mk("decode_paged_1x8", "decode_paged", 8, 2),
+                mk("decode_paged_1x8", "decode_paged", 8, 2, 0, 0),
+            );
+        }
+        if with_sharded {
+            artifacts.insert(
+                "decode_paged_shard_1x8s2".to_string(),
+                mk(
+                    "decode_paged_shard_1x8s2",
+                    "decode_paged_shard",
+                    8,
+                    2,
+                    2,
+                    1,
+                ),
             );
         }
         Manifest {
@@ -363,14 +785,19 @@ mod tests {
                 pallas_n: 64,
                 max_gen: 8,
                 block_tokens: 2,
+                shard_counts: if with_sharded { vec![2] } else { vec![] },
             },
             artifacts,
         }
     }
 
     fn store() -> PagedArena {
+        store_sharded(1)
+    }
+
+    fn store_sharded(shards: usize) -> PagedArena {
         let m = meta();
-        let cfg = PagingConfig { block_tokens: 2, ..Default::default() };
+        let cfg = PagingConfig { block_tokens: 2, shards, ..Default::default() };
         let mut pa = PagedArena::new(&m, 1, 8, cfg);
         let mut rc = RequestCache::new(&m);
         let re = 4;
@@ -389,6 +816,117 @@ mod tests {
         let batch = DecodeBatch::new(&manifest(true), 1, 8);
         assert_eq!(batch.path_for(&pa), DecodePath::BlockTable);
         assert_eq!(batch.artifact_for(&pa), "decode_paged_1x8");
+    }
+
+    #[test]
+    fn picks_sharded_path_for_sharded_store_with_artifact() {
+        let pa = store_sharded(2);
+        let batch = DecodeBatch::new(&manifest_sharded(true, true), 1, 8);
+        assert_eq!(batch.path_for(&pa), DecodePath::Sharded);
+        assert_eq!(batch.artifact_for(&pa), "decode_paged_shard_1x8s2");
+        // unsharded store in the same manifest keeps the plain paged path
+        let flat = store();
+        assert_eq!(batch.path_for(&flat), DecodePath::BlockTable);
+    }
+
+    #[test]
+    fn sharded_store_without_shard_artifact_falls_back_to_paged() {
+        // The host keeps canonical dense planes, so a sharded store can
+        // always decode through the unsharded paged artifact.
+        let pa = store_sharded(2);
+        let batch = DecodeBatch::new(&manifest(true), 1, 8);
+        assert_eq!(batch.path_for(&pa), DecodePath::BlockTable);
+        assert_eq!(batch.artifact_for(&pa), "decode_paged_1x8");
+    }
+
+    /// Exec that records each call's artifact name + input shapes (after
+    /// the default pinned splice) and fabricates outputs — pins the input
+    /// ABI a step actually sends without a PJRT backend.
+    struct CaptureExec {
+        calls: std::cell::RefCell<Vec<(String, Vec<Vec<usize>>)>>,
+        outputs: Vec<HostTensor>,
+    }
+
+    impl CaptureExec {
+        fn new(outputs: Vec<HostTensor>) -> Self {
+            CaptureExec { calls: std::cell::RefCell::new(Vec::new()), outputs }
+        }
+    }
+
+    impl Exec for CaptureExec {
+        fn run(
+            &self,
+            name: &str,
+            inputs: Vec<In>,
+        ) -> Result<Vec<HostTensor>> {
+            let shapes = inputs
+                .iter()
+                .map(|i| match i {
+                    In::F32(t) => t.shape.clone(),
+                    In::I32(t) => t.shape.clone(),
+                })
+                .collect();
+            self.calls.borrow_mut().push((name.to_string(), shapes));
+            Ok(self.outputs.clone())
+        }
+    }
+
+    #[test]
+    fn sharded_store_fallback_step_sends_one_whole_slab_pair() {
+        // Regression: pins must follow the RESOLVED artifact's shard
+        // count. A sharded store falling back to the unsharded paged
+        // artifact sends (toks, poss, slab_k, slab_v, tables, lens) —
+        // six inputs, full-KV slab planes — not 2*S half-head pairs.
+        let pa = store_sharded(2);
+        let batch = DecodeBatch::new(&manifest(true), 1, 8);
+        let ex = CaptureExec::new(vec![
+            HostTensor::zeros(vec![1, 8]),    // logits
+            HostTensor::zeros(vec![2, 1, 2, 2]), // k_new
+            HostTensor::zeros(vec![2, 1, 2, 2]), // v_new
+        ]);
+        let lane = LaneInput { slot: 0, token: 1, pos: 3 };
+        let out = batch.step(&ex, &pa, &[lane], None).expect("step runs");
+        assert_eq!(out.k_new.shape, vec![2, 1, 2, 2]);
+        let calls = ex.calls.borrow();
+        assert_eq!(calls.len(), 1);
+        let (name, shapes) = &calls[0];
+        assert_eq!(name, "decode_paged_1x8");
+        assert_eq!(shapes.len(), 6, "whole-slab ABI: 6 inputs");
+        assert_eq!(shapes[2], vec![8, 2, 2, 2], "full-KV slab_k");
+        assert_eq!(shapes[3], vec![8, 2, 2, 2], "full-KV slab_v");
+        assert_eq!(shapes[4], vec![2, 1, 4], "tables [L, B, mb=cap/bt]");
+        assert_eq!(shapes[5], vec![2, 1], "lens");
+    }
+
+    #[test]
+    fn sharded_step_sends_per_shard_pairs_and_combines_outputs() {
+        let pa = store_sharded(2);
+        let batch = DecodeBatch::new(&manifest_sharded(true, true), 1, 8);
+        // fabricate per-shard outputs with distinguishable head slices
+        let part = |tag: f32| {
+            HostTensor::new(vec![2, 1, 1, 2], vec![tag; 4])
+        };
+        let ex = CaptureExec::new(vec![
+            HostTensor::zeros(vec![1, 8]),
+            part(1.0), // k_new shard 0
+            part(2.0), // v_new shard 0
+            part(3.0), // k_new shard 1
+            part(4.0), // v_new shard 1
+        ]);
+        let lane = LaneInput { slot: 0, token: 1, pos: 3 };
+        let out = batch.step(&ex, &pa, &[lane], None).expect("step runs");
+        // combiner: shard 0's head then shard 1's head per row
+        assert_eq!(out.k_new.shape, vec![2, 1, 2, 2]);
+        assert_eq!(&out.k_new.data[..4], &[1.0, 1.0, 3.0, 3.0]);
+        assert_eq!(&out.v_new.data[..4], &[2.0, 2.0, 4.0, 4.0]);
+        let calls = ex.calls.borrow();
+        let (name, shapes) = &calls[0];
+        assert_eq!(name, "decode_paged_shard_1x8s2");
+        assert_eq!(shapes.len(), 8, "sharded ABI: 8 inputs");
+        assert_eq!(shapes[2], vec![8, 2, 1, 2], "shard 0 slab_k (KV/S)");
+        assert_eq!(shapes[4], vec![8, 2, 1, 2], "shard 1 slab_k");
+        assert_eq!(shapes[6], vec![2, 1, 4], "tables shared");
+        assert_eq!(shapes[7], vec![2, 1], "lens shared");
     }
 
     #[test]
@@ -418,6 +956,64 @@ mod tests {
         let batch = DecodeBatch::new(&manifest(true), 1, 8);
         assert_eq!(batch.path_for(&pa), DecodePath::Staged);
         assert_eq!(batch.artifact_for(&pa), "decode_1x8");
+    }
+
+    #[test]
+    fn combine_head_shards_concatenates_along_kv_axis() {
+        // Two shards of [L=1, B=2, KV/S=1, hd=2] -> [1, 2, 2, 2]; shard 0
+        // supplies heads [0, 1), shard 1 heads [1, 2).
+        let p0 = HostTensor::new(vec![1, 2, 1, 2], vec![1., 2., 3., 4.]);
+        let p1 = HostTensor::new(vec![1, 2, 1, 2], vec![5., 6., 7., 8.]);
+        let full = combine_head_shards(&[p0, p1]);
+        assert_eq!(full.shape, vec![1, 2, 2, 2]);
+        assert_eq!(full.data, vec![1., 2., 5., 6., 3., 4., 7., 8.]);
+    }
+
+    #[test]
+    fn stale_shards_tracks_per_shard_versions() {
+        use std::cell::RefCell;
+        use std::collections::HashMap;
+        let mut pa = store_sharded(2);
+        let mirror: RefCell<HashMap<String, u64>> = RefCell::new(HashMap::new());
+        let current =
+            |k: &str, v: u64| mirror.borrow().get(k).copied() == Some(v);
+        {
+            let view = pa.view();
+            let keys = shard_pin_keys(&view);
+            assert_eq!(keys.len(), 2);
+            assert_ne!(keys[0].0, keys[1].0, "per-shard keys are distinct");
+            // nothing resident: every shard uploads
+            assert_eq!(stale_shards(&view, &keys, &current), vec![0, 1]);
+            for (s, (k, v)) in keys.iter().enumerate() {
+                mirror.borrow_mut().insert(k.clone(), view.shard_versions[s]);
+                mirror.borrow_mut().insert(v.clone(), view.shard_versions[s]);
+            }
+            assert!(stale_shards(&view, &keys, &current).is_empty());
+        }
+        // whole-row append dirties every shard
+        let step = HostTensor::zeros(vec![2, 1, 2, 2]);
+        assert_eq!(
+            PagedArena::append(&mut pa, 0, &step, &step),
+            AppendResult::Ok
+        );
+        {
+            let view = pa.view();
+            let keys = shard_pin_keys(&view);
+            assert_eq!(stale_shards(&view, &keys, &current), vec![0, 1]);
+            for (s, (k, v)) in keys.iter().enumerate() {
+                mirror.borrow_mut().insert(k.clone(), view.shard_versions[s]);
+                mirror.borrow_mut().insert(v.clone(), view.shard_versions[s]);
+            }
+        }
+        // a head-local mutation dirties exactly its shard
+        assert!(pa.mutate_shard_row(0, 0, 0, 1, &[9.0, 9.0], &[8.0, 8.0]));
+        let view = pa.view();
+        let keys = shard_pin_keys(&view);
+        assert_eq!(
+            stale_shards(&view, &keys, &current),
+            vec![1],
+            "only the mutated shard re-uploads"
+        );
     }
 
     #[test]

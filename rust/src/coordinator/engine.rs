@@ -8,7 +8,9 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::decode::{advance_lane, DecodeBatch, LaneAdvance, LaneInput};
+use crate::coordinator::decode::{
+    advance_lane, DecodeBatch, DecodeScratch, LaneAdvance, LaneInput,
+};
 use crate::coordinator::paging::{PagedArena, PagingConfig, TenantId};
 use crate::coordinator::policies::{Exec, Policy, PolicyCfg};
 use crate::manifest::Manifest;
@@ -113,13 +115,17 @@ pub fn generate(
     // back to the dense staged bridge only when the manifest predates the
     // paged artifacts (or the store cannot expose a view).
     let batch = DecodeBatch::new(man, 1, cap);
+    // Reusable input-prep buffers: steady-state decode allocates nothing
+    // for tables/lens/token tensors or pinned slab payloads (the store's
+    // per-step view build is the one remaining allocation).
+    let mut scratch = DecodeScratch::new();
     let mut tokens = vec![pre.first_token];
     let mut cur = pre.first_token;
     let mut pos = pre.next_pos;
     let t1 = Instant::now();
     while tokens.len() < max_new && cur != END as i32 {
         let lane = LaneInput { slot, token: cur, pos };
-        let out = batch.step(ex, &store, &[lane], None)?;
+        let out = batch.step_scratch(ex, &store, &[lane], None, &mut scratch)?;
         match advance_lane(&mut store, slot, &out, None) {
             LaneAdvance::Next { token, ended } => {
                 stats.decode_steps += 1;
@@ -179,6 +185,7 @@ mod tests {
                 pallas_n: 128,
                 max_gen: 64,
                 block_tokens: 16,
+                shard_counts: vec![],
             },
             artifacts: BTreeMap::new(),
         }

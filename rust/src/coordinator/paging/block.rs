@@ -121,6 +121,26 @@ impl BlockStore {
         self.v[base..base + re].copy_from_slice(v_row);
     }
 
+    /// Overwrite one contiguous element sub-range of a token row on both
+    /// planes (a KV-head shard's slice — see `super::shard::ShardSpec::
+    /// row_range`). The head-local counterpart of [`BlockStore::write_row`];
+    /// callers own the per-shard staleness bookkeeping.
+    pub fn write_row_range(
+        &mut self,
+        block: BlockId,
+        row: usize,
+        range: std::ops::Range<usize>,
+        k_sub: &[f32],
+        v_sub: &[f32],
+    ) {
+        assert!(range.end <= self.row_elems, "sub-row past row width");
+        assert_eq!(k_sub.len(), range.len(), "k sub-row width");
+        assert_eq!(v_sub.len(), range.len(), "v sub-row width");
+        let base = self.base(block, row);
+        self.k[base + range.start..base + range.end].copy_from_slice(k_sub);
+        self.v[base + range.start..base + range.end].copy_from_slice(v_sub);
+    }
+
     /// One token row of the K plane.
     pub fn k_row(&self, block: BlockId, row: usize) -> &[f32] {
         let base = self.base(block, row);
@@ -180,6 +200,15 @@ mod tests {
         // neighbours untouched
         assert!(s.k_row(BlockId(0), 0).iter().all(|&x| x == 0.0));
         assert!(s.k_row(BlockId(2), 0).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn write_row_range_touches_only_the_slice() {
+        let mut s = BlockStore::new(2, 2, 4);
+        s.write_row(BlockId(0), 1, &[1.0; 4], &[2.0; 4]);
+        s.write_row_range(BlockId(0), 1, 2..4, &[8.0, 9.0], &[-8.0, -9.0]);
+        assert_eq!(s.k_row(BlockId(0), 1), &[1.0, 1.0, 8.0, 9.0]);
+        assert_eq!(s.v_row(BlockId(0), 1), &[2.0, 2.0, -8.0, -9.0]);
     }
 
     #[test]

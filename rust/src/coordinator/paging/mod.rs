@@ -23,7 +23,14 @@
 //!    [`TenantId`], blocks are charged to the tenant that first touched
 //!    them, and a [`TenantQuota`] bounds each tenant with a reserved
 //!    floor, a burst ceiling, and a per-tenant swap byte cap, so one
-//!    heavy tenant cannot starve the pool for everyone else.
+//!    heavy tenant cannot starve the pool for everyone else;
+//!  * [`shard`] — KV-head sharding of the slab across executors
+//!    ([`ShardSpec`], [`ShardedSlabs`]): the K/V planes split into `S`
+//!    per-shard slabs of `[num_blocks, block_tokens, KV/S, hd]` with
+//!    per-shard pinned-upload staleness stamps, while the block table,
+//!    allocator, prefix cache, quotas, swap, and compaction stay
+//!    shard-oblivious (`PagingConfig::shards`, default 1 ≡ the
+//!    bit-identical unsharded path).
 //!
 //! Decode is block-table-native by default: a step hands the runtime the
 //! slab plus block-table indices instead of densifying the pool. The old
@@ -41,13 +48,15 @@
 pub mod allocator;
 pub mod block;
 pub mod prefix;
+pub mod shard;
 pub mod swap;
 pub mod tenant;
 pub mod view;
 
+pub use shard::{ShardSpec, ShardedSlabs};
 pub use swap::{SwapHandle, SwapIn, SwapStats};
 pub use tenant::{TenantId, TenantQuota, TenantStats};
-pub use view::DecodeView;
+pub use view::{DecodeView, ShardView};
 
 use crate::coordinator::kvcache::{BatchArena, RequestCache};
 use crate::manifest::ModelMeta;
@@ -56,7 +65,7 @@ use crate::tensor::{HostTensor, HostTensorI32};
 use allocator::{BlockAllocator, Revive};
 use block::BlockId;
 use prefix::PrefixCache;
-use swap::{SwapArena, SwapEntry};
+use swap::{KvLane, SwapArena, SwapEntry};
 
 /// Tunables for [`PagedArena`].
 #[derive(Debug, Clone)]
@@ -82,12 +91,25 @@ pub struct PagingConfig {
     /// policy re-run. `0` disables swapping (preemption always
     /// recompute-resumes, the pre-swap behavior).
     pub swap_bytes: usize,
+    /// Encode swapped lane payloads as IEEE 754 binary16
+    /// ([`swap::KvLane::F16`]) instead of verbatim f32, halving host
+    /// budget pressure at a per-element precision cost of one f16
+    /// rounding step (relative 2^-11). Off by default; restores under it
+    /// are *not* bit-identical, so lossy entries never re-register their
+    /// preserved prefix hashes for freshly-written blocks.
+    pub swap_half: bool,
     /// Per-tenant quotas installed at construction (reserved block
     /// floor, burst ceiling, optional swap byte cap — see
     /// [`TenantQuota`]). Empty (the default) means single-tenant
     /// behavior: every request runs as [`TenantId::DEFAULT`] with the
     /// whole pool available.
     pub tenant_quotas: Vec<(TenantId, TenantQuota)>,
+    /// KV-head shard count `S` for the slab ([`ShardSpec`]). Must divide
+    /// the model's `kv_heads` — [`PagedArena::new`] panics with
+    /// [`ShardSpec::new`]'s message otherwise (CLIs validate first and
+    /// report it as a config error). `1` (the default) is the unsharded
+    /// single-executor path and is bit-identical to the pre-shard store.
+    pub shards: usize,
 }
 
 impl Default for PagingConfig {
@@ -100,7 +122,9 @@ impl Default for PagingConfig {
             // Generous default for an f32 host cache: preemption should
             // swap unless the operator opts out (`swap_bytes: 0`).
             swap_bytes: 128 << 20,
+            swap_half: false,
             tenant_quotas: Vec::new(),
+            shards: 1,
         }
     }
 }
@@ -224,6 +248,20 @@ pub trait KvStore {
     }
     /// Block-pool gauges snapshot.
     fn pool_stats(&self) -> PoolStats;
+
+    // --- KV-head slab sharding (optional capability) ------------------
+    // Backends without a sharded slab keep these defaults: one logical
+    // shard, no per-shard gauges — the pre-shard behavior.
+
+    /// KV-head shard count of the slab (1 = unsharded).
+    fn shard_count(&self) -> usize {
+        1
+    }
+    /// Per-shard slab bytes (K + V planes), indexed by shard — feeds the
+    /// `shard_{s}_slab_bytes` gauges. Empty for unsharded backends.
+    fn shard_slab_bytes(&self) -> Vec<usize> {
+        Vec::new()
+    }
 
     // --- multi-tenant quotas (optional capability) -------------------
     // Backends without tenancy keep these defaults: every request runs
@@ -364,6 +402,10 @@ pub struct PagedArena {
     prefix: PrefixCache,
     /// Host-side parking lot for preempted lanes (swap-to-host resume).
     swap: SwapArena,
+    /// Encode swapped payloads as f16 (`PagingConfig::swap_half`).
+    swap_half: bool,
+    /// KV-head shard layout + per-shard slab mutation stamps.
+    shard_slabs: ShardedSlabs,
     /// `tables[slot][layer]` → physical blocks, in logical order.
     tables: Vec<Vec<Vec<BlockId>>>,
     /// `lens[slot][layer]` → valid tokens.
@@ -400,6 +442,11 @@ impl PagedArena {
         let l = meta.n_layers;
         let re = meta.n_kv_heads * meta.head_dim;
         let bt = cfg.block_tokens.max(1);
+        // Config-time rejection: an S that cannot split the KV heads has
+        // no valid slab layout; the message names the valid counts.
+        let spec =
+            ShardSpec::new(cfg.shards.max(1), meta.n_kv_heads, meta.head_dim)
+                .unwrap_or_else(|e| panic!("invalid PagingConfig::shards: {e}"));
         let worst = l * b * ceil_div(c.max(1), bt);
         let num_blocks = cfg.num_blocks.unwrap_or(worst).max(1);
         let shape = vec![l, b, c, meta.n_kv_heads, meta.head_dim];
@@ -425,6 +472,8 @@ impl PagedArena {
             alloc,
             prefix: PrefixCache::new(cfg.prefix_cache),
             swap,
+            swap_half: cfg.swap_half,
+            shard_slabs: ShardedSlabs::new(spec),
             tables: vec![vec![Vec::new(); l]; b],
             lens: vec![vec![0; l]; b],
             used: vec![false; b],
@@ -519,6 +568,94 @@ impl PagedArena {
 
     fn touch(&mut self) {
         self.mutations = self.mutations.wrapping_add(1);
+        // Whole-row mutations dirty every KV-head shard's plane.
+        self.shard_slabs.touch_all();
+    }
+
+    /// A head-local mutation: the global stamp moves (whole-slab pinning
+    /// must re-upload) but only `shard`'s plane stamp does, so a
+    /// per-shard pinned cache re-uploads 1/S of the slab.
+    fn touch_shard(&mut self, shard: usize) {
+        self.mutations = self.mutations.wrapping_add(1);
+        self.shard_slabs.touch_one(shard);
+    }
+
+    /// The KV-head shard layout this store was built with.
+    pub fn shard_spec(&self) -> ShardSpec {
+        self.shard_slabs.spec()
+    }
+
+    /// Per-shard slab bytes (K + V planes), indexed by shard — the
+    /// `shard_{s}_slab_bytes` gauges. Every shard is the same size:
+    /// `num_blocks * block_tokens * (KV/S) * hd * 4 * 2`.
+    pub fn shard_slab_bytes(&self) -> Vec<usize> {
+        let spec = self.shard_slabs.spec();
+        let per = self.alloc.blocks_total()
+            * self.block_tokens
+            * spec.shard_row_elems()
+            * std::mem::size_of::<f32>()
+            * 2;
+        vec![per; spec.shards]
+    }
+
+    /// Overwrite one KV-head shard's slice of a logical token row
+    /// (`k_sub`/`v_sub`: `KV/S * hd` elements). This is the head-local
+    /// mutation path: only `shard`'s plane stamp moves, so a sharded
+    /// decode step re-uploads exactly one shard's slab. On the current
+    /// single-device runtime it exists for per-shard refresh flows (and
+    /// is what the upload-amplification bench and the locality tests
+    /// drive); on real multi-device bindings it is the host mirror of a
+    /// device-local write. Returns false (and touches nothing) when the
+    /// lane, layer, or row does not exist.
+    pub fn mutate_shard_row(
+        &mut self,
+        slot: usize,
+        layer: usize,
+        row: usize,
+        shard: usize,
+        k_sub: &[f32],
+        v_sub: &[f32],
+    ) -> bool {
+        let spec = self.shard_slabs.spec();
+        if slot >= self.b
+            || !self.used[slot]
+            || layer >= self.l
+            || row >= self.lens[slot][layer]
+            || shard >= spec.shards
+        {
+            return false;
+        }
+        let bt = self.block_tokens;
+        let bid = self.tables[slot][layer][row / bt];
+        // The row's content diverges from whatever prefix hash the block
+        // was sealed under: unregister before mutating (same discipline
+        // as append's uniquely-owned-tail unseal). Shared blocks are NOT
+        // copy-on-write here — head-local refresh is a whole-content
+        // decision; refuse instead of silently mutating a neighbour.
+        if self.alloc.meta(bid).ref_count > 1 {
+            return false;
+        }
+        if self.alloc.meta(bid).hash.is_some() {
+            if let Some(h) = self.alloc.unseal(bid) {
+                self.prefix.remove(h);
+            }
+        }
+        self.alloc.store_mut().write_row_range(
+            bid,
+            row % bt,
+            spec.row_range(shard),
+            k_sub,
+            v_sub,
+        );
+        // Keep the dense-staging fallback coherent (it mirrors full rows).
+        let base =
+            self.stage_base(layer, slot, row) + spec.row_range(shard).start;
+        if let Some(buf) = self.stage_buf.as_mut() {
+            buf.k.data[base..base + k_sub.len()].copy_from_slice(k_sub);
+            buf.v.data[base..base + v_sub.len()].copy_from_slice(v_sub);
+        }
+        self.touch_shard(shard);
+        true
     }
 
     /// Physical blocks currently referenced by a lane's tables.
@@ -551,6 +688,13 @@ impl PagedArena {
                 lens[l * self.b + slot] = self.lens[slot][l] as i32;
             }
         }
+        let spec = self.shard_slabs.spec();
+        let shard_versions = (0..spec.shards)
+            .map(|s| {
+                ((self.id & 0xffff_ffff) << 32)
+                    | self.shard_slabs.version(s) as u64
+            })
+            .collect();
         DecodeView {
             version: self.version(),
             l: self.l,
@@ -563,6 +707,8 @@ impl PagedArena {
             max_blocks,
             tables,
             lens,
+            shards: spec.shards,
+            shard_versions,
             slab_k: self.alloc.store().k_plane(),
             slab_v: self.alloc.store().v_plane(),
         }
@@ -870,20 +1016,25 @@ impl PagedArena {
             return None;
         }
         let re = self.row_elems();
-        // The payload size is fully determined by the lane's lens — ask
-        // the arena *before* serializing, so a lane the budget can never
-        // take (per-tenant cap, possibly 0) costs nothing to refuse
-        // instead of an O(lane-bytes) copy per preemption.
-        let predicted: usize = self.lens[slot].iter().sum::<usize>()
-            * re
-            * 2
-            * std::mem::size_of::<f32>();
+        // The payload size is fully determined by the lane's lens and the
+        // codec — ask the arena *before* serializing, so a lane the
+        // budget can never take (per-tenant cap, possibly 0) costs
+        // nothing to refuse instead of an O(lane-bytes) copy per
+        // preemption. The f16 codec (`PagingConfig::swap_half`) halves
+        // the charged bytes.
+        let elem_bytes = if self.swap_half {
+            std::mem::size_of::<u16>()
+        } else {
+            std::mem::size_of::<f32>()
+        };
+        let predicted: usize =
+            self.lens[slot].iter().sum::<usize>() * re * 2 * elem_bytes;
         if self.swap.would_refuse(predicted, self.tenants[slot]) {
             return None;
         }
         let mut lens = Vec::with_capacity(self.l);
-        let mut ks: Vec<Vec<f32>> = Vec::with_capacity(self.l);
-        let mut vs: Vec<Vec<f32>> = Vec::with_capacity(self.l);
+        let mut ks: Vec<KvLane> = Vec::with_capacity(self.l);
+        let mut vs: Vec<KvLane> = Vec::with_capacity(self.l);
         let mut hashes: Vec<Vec<Option<u64>>> = Vec::with_capacity(self.l);
         for l in 0..self.l {
             let len = self.lens[slot][l];
@@ -901,13 +1052,16 @@ impl PagedArena {
             }
             debug_assert_eq!(rows, len, "block rows vs lane len");
             lens.push(len);
-            ks.push(k);
-            vs.push(v);
+            ks.push(KvLane::encode(k, self.swap_half));
+            vs.push(KvLane::encode(v, self.swap_half));
             hashes.push(hs);
         }
-        let bytes = ks.iter().map(|k| k.len()).sum::<usize>()
-            * 2
-            * std::mem::size_of::<f32>();
+        let bytes = ks
+            .iter()
+            .chain(&vs)
+            .map(|lane| lane.payload_bytes())
+            .sum::<usize>();
+        debug_assert_eq!(bytes, predicted, "codec-size prediction");
         let handle = self.swap.insert(SwapEntry {
             lens,
             k: ks,
@@ -950,20 +1104,29 @@ impl PagedArena {
         let tenant = entry.tenant;
         let bt = self.block_tokens;
         let re = self.row_elems();
+        // An f16 entry decodes to *approximately* the serialized rows:
+        // reviving a still-cached exact block through its preserved hash
+        // is fine (better, even), but a freshly-written decoded block
+        // must NOT be sealed under the original hash — the prefix cache
+        // would alias lossy content to the exact chain and hand it to
+        // future admissions.
+        let lossy = entry.is_lossy();
 
         let mut new_tables: Vec<Vec<BlockId>> = Vec::with_capacity(self.l);
         let mut acquired: Vec<BlockId> = Vec::new();
         let mut shortfall = false;
         'layers: for l in 0..self.l {
             let len = entry.lens[l];
+            let k_lane = entry.k[l].as_f32();
+            let v_lane = entry.v[l].as_f32();
             let mut table = Vec::with_capacity(ceil_div(len, bt));
             let mut row0 = 0usize;
             let mut bi = 0usize;
             while row0 < len {
                 let rows = (len - row0).min(bt);
                 let hash = entry.hashes[l].get(bi).copied().flatten();
-                let k_rows = &entry.k[l][row0 * re..(row0 + rows) * re];
-                let v_rows = &entry.v[l][row0 * re..(row0 + rows) * re];
+                let k_rows = &k_lane[row0 * re..(row0 + rows) * re];
+                let v_rows = &v_lane[row0 * re..(row0 + rows) * re];
                 let mut reused = None;
                 if let Some(h) = hash {
                     if self.prefix.enabled {
@@ -993,7 +1156,7 @@ impl PagedArena {
                             }
                             self.alloc.set_filled(out.id, rows as u32);
                             if let Some(h) = hash {
-                                if self.prefix.enabled {
+                                if self.prefix.enabled && !lossy {
                                     self.alloc.seal(out.id, h);
                                     self.prefix.insert(h, out.id);
                                 }
@@ -1465,6 +1628,14 @@ impl KvStore for PagedArena {
 
     fn pool_stats(&self) -> PoolStats {
         PagedArena::pool_stats(self)
+    }
+
+    fn shard_count(&self) -> usize {
+        self.shard_spec().shards
+    }
+
+    fn shard_slab_bytes(&self) -> Vec<usize> {
+        PagedArena::shard_slab_bytes(self)
     }
 
     fn swap_out(&mut self, slot: usize) -> Option<SwapHandle> {

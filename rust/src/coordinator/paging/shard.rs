@@ -1,0 +1,283 @@
+//! KV-head sharding of the paged block slab across executors.
+//!
+//! The paged slab stores one token row as `[KV, hd]` f32. KV heads are
+//! independent under attention (with GQA every query head attends only
+//! within its own KV group), so the slab can be split head-wise into `S`
+//! *shards*: shard `s` owns heads `[s * KV/S, (s+1) * KV/S)` of every
+//! row, i.e. a per-shard slab of `[num_blocks, block_tokens, KV/S, hd]`.
+//!
+//! What is sharded and what deliberately is not:
+//!
+//!  * **sharded** — the K/V *planes* handed to executors: each shard has
+//!    its own pinned device slab (`decode_slab_{k,v}:{store}s{s}` keys,
+//!    store id in hex), its own mutation stamp ([`ShardedSlabs`]), and
+//!    its own slice of the `decode_paged_shard_{B}x{C}s{S}` artifact's
+//!    inputs/outputs;
+//!  * **not sharded** — the block table, allocator, prefix cache, tenant
+//!    quotas, swap arena, and compaction. All of those address whole
+//!    blocks by id, never head ranges, so one shard-oblivious copy serves
+//!    every shard (this is exactly why the block tables were made
+//!    device-agnostic).
+//!
+//! The host keeps the canonical dense planes in [`super::block::BlockStore`]
+//! (hashing, swap serialization, compaction gathers, and the staging
+//! oracle all read whole rows); shard planes are *projections* of it,
+//! materialized only when a shard's pinned device copy goes stale. On
+//! real multi-device bindings each projection lives on its own device and
+//! the per-shard stamps below decide which device re-uploads.
+
+use crate::tensor::HostTensor;
+
+/// How a store's K/V planes are partitioned across executors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Number of shards `S` (1 = unsharded, today's single-executor path).
+    pub shards: usize,
+    /// KV heads per token row, across all shards.
+    pub kv_heads: usize,
+    /// Elements per head.
+    pub head_dim: usize,
+}
+
+impl ShardSpec {
+    /// Validated spec: `shards` must be positive and divide `kv_heads`
+    /// evenly — KV-head parallelism has no way to split a head. The
+    /// error is the user-facing config message.
+    pub fn new(
+        shards: usize,
+        kv_heads: usize,
+        head_dim: usize,
+    ) -> Result<ShardSpec, String> {
+        if shards == 0 {
+            return Err("shard count must be at least 1".into());
+        }
+        if kv_heads == 0 || kv_heads % shards != 0 {
+            return Err(format!(
+                "shard count {shards} does not divide kv_heads {kv_heads}: \
+                 KV-head-parallel sharding needs kv_heads % shards == 0 \
+                 (valid counts here: {:?})",
+                (1..=kv_heads).filter(|s| kv_heads % s == 0).collect::<Vec<_>>()
+            ));
+        }
+        Ok(ShardSpec { shards, kv_heads, head_dim })
+    }
+
+    /// The unsharded spec (one slab, one executor — the legacy path).
+    pub fn single(kv_heads: usize, head_dim: usize) -> ShardSpec {
+        ShardSpec { shards: 1, kv_heads, head_dim }
+    }
+
+    /// KV heads each shard owns.
+    pub fn kv_per_shard(&self) -> usize {
+        self.kv_heads / self.shards
+    }
+
+    /// f32 elements of a full token row (`KV * hd`).
+    pub fn row_elems(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+
+    /// f32 elements of one shard's slice of a token row (`KV/S * hd`).
+    pub fn shard_row_elems(&self) -> usize {
+        self.kv_per_shard() * self.head_dim
+    }
+
+    /// Element range shard `s` occupies inside a full row (heads are
+    /// split contiguously, so a shard's slice of a row is contiguous).
+    pub fn row_range(&self, shard: usize) -> std::ops::Range<usize> {
+        debug_assert!(shard < self.shards, "shard out of range");
+        let srw = self.shard_row_elems();
+        shard * srw..(shard + 1) * srw
+    }
+}
+
+/// Per-shard mutation stamps for a store's slab planes. The owning
+/// `PagedArena` bumps *every* shard on ordinary mutations (admits,
+/// appends, COW, compaction — a full row touches all heads) and exactly
+/// one shard for head-local writes ([`super::PagedArena::mutate_shard_row`]),
+/// so a pinned-slab cache re-uploads only the shards whose bytes changed.
+#[derive(Debug)]
+pub struct ShardedSlabs {
+    spec: ShardSpec,
+    versions: Vec<u32>,
+}
+
+impl ShardedSlabs {
+    /// Stamps for `spec.shards` shards, all starting at 0.
+    pub fn new(spec: ShardSpec) -> ShardedSlabs {
+        ShardedSlabs { spec, versions: vec![0; spec.shards] }
+    }
+
+    /// The partitioning this store was built with.
+    pub fn spec(&self) -> ShardSpec {
+        self.spec
+    }
+
+    /// Bump every shard's stamp (a whole-row mutation).
+    pub fn touch_all(&mut self) {
+        for v in &mut self.versions {
+            *v = v.wrapping_add(1);
+        }
+    }
+
+    /// Bump one shard's stamp (a head-local mutation).
+    pub fn touch_one(&mut self, shard: usize) {
+        self.versions[shard] = self.versions[shard].wrapping_add(1);
+    }
+
+    /// Current stamp of one shard.
+    pub fn version(&self, shard: usize) -> u32 {
+        self.versions[shard]
+    }
+
+    /// All shard stamps, indexed by shard.
+    pub fn versions(&self) -> &[u32] {
+        &self.versions
+    }
+}
+
+/// Strided projection of shard `s` out of a dense plane
+/// (`[num_blocks, block_tokens, KV, hd]` row major) into the per-shard
+/// artifact layout `[nb_pad, block_tokens, KV/S, hd]`, zero-padded to the
+/// artifact's pool bucket `nb_pad >= num_blocks`. This is the per-shard
+/// replacement for `DecodeView::slab_tensors` — 1/S of the copy, and only
+/// for shards whose pinned device copy went stale.
+pub fn project_plane(
+    plane: &[f32],
+    spec: ShardSpec,
+    shard: usize,
+    num_blocks: usize,
+    block_tokens: usize,
+    nb_pad: usize,
+) -> HostTensor {
+    assert!(
+        nb_pad >= num_blocks,
+        "artifact pool bucket {nb_pad} < live pool {num_blocks}"
+    );
+    let srw = spec.shard_row_elems();
+    let mut out = HostTensor::zeros(vec![
+        nb_pad,
+        block_tokens,
+        spec.kv_per_shard(),
+        spec.head_dim,
+    ]);
+    project_plane_into(plane, spec, shard, num_blocks, block_tokens, &mut out.data[..nb_pad * block_tokens * srw]);
+    out
+}
+
+/// [`project_plane`] into a caller-owned buffer of exactly
+/// `nb_pad * block_tokens * shard_row_elems` f32 (scratch-buffer variant
+/// for the zero-allocation decode hot loop). Rows past `num_blocks` are
+/// zeroed.
+pub fn project_plane_into(
+    plane: &[f32],
+    spec: ShardSpec,
+    shard: usize,
+    num_blocks: usize,
+    block_tokens: usize,
+    out: &mut [f32],
+) {
+    let re = spec.row_elems();
+    let srw = spec.shard_row_elems();
+    let range = spec.row_range(shard);
+    let rows = num_blocks * block_tokens;
+    debug_assert_eq!(plane.len(), rows * re, "dense plane size");
+    assert!(out.len() >= rows * srw, "projection buffer too small");
+    for row in 0..rows {
+        let src = row * re + range.start;
+        let dst = row * srw;
+        out[dst..dst + srw].copy_from_slice(&plane[src..src + srw]);
+    }
+    out[rows * srw..].fill(0.0);
+}
+
+/// Reassemble `S` per-shard planes (artifact layout, possibly padded past
+/// `num_blocks`) back into the dense `[num_blocks, block_tokens, KV, hd]`
+/// layout. Differential-oracle helper: `reassemble(project(s) for s)` must
+/// be bit-identical to the dense plane it came from.
+pub fn reassemble_planes(
+    spec: ShardSpec,
+    shards: &[HostTensor],
+    num_blocks: usize,
+    block_tokens: usize,
+) -> Vec<f32> {
+    assert_eq!(shards.len(), spec.shards, "one plane per shard");
+    let re = spec.row_elems();
+    let srw = spec.shard_row_elems();
+    let rows = num_blocks * block_tokens;
+    let mut out = vec![0.0f32; rows * re];
+    for (s, plane) in shards.iter().enumerate() {
+        assert!(
+            plane.data.len() >= rows * srw,
+            "shard {s} plane smaller than the live pool"
+        );
+        let range = spec.row_range(s);
+        for row in 0..rows {
+            let dst = row * re + range.start;
+            let src = row * srw;
+            out[dst..dst + srw].copy_from_slice(&plane.data[src..src + srw]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_validates_divisibility() {
+        assert!(ShardSpec::new(0, 4, 2).is_err());
+        let e = ShardSpec::new(3, 4, 2).unwrap_err();
+        assert!(e.contains("does not divide"), "{e}");
+        assert!(e.contains("kv_heads 4"), "{e}");
+        let s = ShardSpec::new(2, 4, 3).unwrap();
+        assert_eq!(s.kv_per_shard(), 2);
+        assert_eq!(s.row_elems(), 12);
+        assert_eq!(s.shard_row_elems(), 6);
+        assert_eq!(s.row_range(1), 6..12);
+        assert_eq!(ShardSpec::single(4, 3).shards, 1);
+    }
+
+    #[test]
+    fn stamps_track_whole_row_and_head_local_mutations() {
+        let mut s = ShardedSlabs::new(ShardSpec::new(4, 4, 2).unwrap());
+        assert_eq!(s.versions(), &[0, 0, 0, 0]);
+        s.touch_all();
+        assert_eq!(s.versions(), &[1, 1, 1, 1]);
+        s.touch_one(2);
+        assert_eq!(s.versions(), &[1, 1, 2, 1]);
+        assert_eq!(s.version(2), 2);
+        assert_eq!(s.spec().shards, 4);
+    }
+
+    #[test]
+    fn project_and_reassemble_roundtrip_bit_identically() {
+        let spec = ShardSpec::new(2, 4, 2).unwrap();
+        let (nb, bt) = (3, 2);
+        let re = spec.row_elems();
+        let plane: Vec<f32> =
+            (0..nb * bt * re).map(|i| i as f32 * 0.25).collect();
+        let shards: Vec<HostTensor> = (0..spec.shards)
+            .map(|s| project_plane(&plane, spec, s, nb, bt, nb + 2))
+            .collect();
+        // shard 1 of row 0 = elems [4, 8) of the dense row
+        assert_eq!(shards[1].shape, vec![nb + 2, bt, 2, 2]);
+        assert_eq!(&shards[1].data[..4], &plane[4..8]);
+        // padded tail blocks are zero
+        let srw = spec.shard_row_elems();
+        assert!(shards[0].data[nb * bt * srw..].iter().all(|&x| x == 0.0));
+        let back = reassemble_planes(spec, &shards, nb, bt);
+        assert_eq!(back, plane);
+    }
+
+    #[test]
+    fn single_shard_projection_is_the_whole_plane() {
+        let spec = ShardSpec::single(2, 3);
+        let (nb, bt) = (2, 2);
+        let plane: Vec<f32> =
+            (0..nb * bt * spec.row_elems()).map(|i| i as f32).collect();
+        let p = project_plane(&plane, spec, 0, nb, bt, nb);
+        assert_eq!(p.data, plane, "S=1 projection is bit-identical");
+    }
+}

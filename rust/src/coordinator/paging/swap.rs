@@ -33,9 +33,138 @@
 //! decisions (`server.rs`); block allocation and prefix re-sharing on
 //! restore are `PagedArena::swap_in`'s.
 
+use std::borrow::Cow;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
 use super::tenant::TenantId;
+
+// ---------------------------------------------------------------------------
+// f16 lane codec (PagingConfig::swap_half)
+//
+// Swapped lanes are cold storage: they are written once at preemption and
+// read once at resume, so a lossy-but-compact encoding halves the host
+// budget pressure at zero hot-path cost. IEEE 754 binary16 keeps ~3
+// decimal digits (relative step 2^-11), ample for attention KV;
+// out-of-range magnitudes saturate to ±65504 rather than overflowing to
+// infinity. Round-to-nearest-even, verified exhaustively against numpy's
+// float16 casts (all 65536 bit patterns decode exactly; every finite half
+// re-encodes to itself).
+
+/// Encode one f32 as IEEE 754 binary16 bits (round-to-nearest-even,
+/// saturating at ±65504; NaN maps to a quiet NaN).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / nan
+        return sign | 0x7c00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7bff; // saturate to ±65504
+    }
+    if e < -25 {
+        return sign; // underflow to signed zero
+    }
+    if e < -14 {
+        // subnormal half: mantissa = round(full / 2^(13 + (-14 - e)))
+        let full = mant | 0x0080_0000;
+        let drop = (13 + (-14 - e)) as u32;
+        let m = full >> drop;
+        let round_bit = (full >> (drop - 1)) & 1;
+        let sticky = (full & ((1u32 << (drop - 1)) - 1)) != 0;
+        let up = round_bit & u32::from(sticky || (m & 1) == 1);
+        return sign | (m + up) as u16;
+    }
+    // normal
+    let m = mant >> 13;
+    let round_bit = (mant >> 12) & 1;
+    let sticky = (mant & 0xfff) != 0;
+    let mut h = sign as u32 | (((e + 15) as u32) << 10) | m;
+    h += round_bit & u32::from(sticky || (m & 1) == 1);
+    if (h & 0x7fff) >= 0x7c00 {
+        // rounded past the largest normal: saturate, never overflow to inf
+        return sign | 0x7bff;
+    }
+    h as u16
+}
+
+/// Decode IEEE 754 binary16 bits to f32 (exact for every finite half).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = if h & 0x8000 != 0 { -1.0f32 } else { 1.0 };
+    let exp = ((h >> 10) & 0x1f) as i32;
+    let mant = (h & 0x3ff) as f32;
+    match exp {
+        0 => sign * mant * (2.0f32).powi(-24),
+        31 => {
+            if mant == 0.0 {
+                sign * f32::INFINITY
+            } else {
+                f32::NAN
+            }
+        }
+        e => sign * (1.0 + mant / 1024.0) * (2.0f32).powi(e - 15),
+    }
+}
+
+/// One layer's serialized K or V rows: either verbatim f32 (the default)
+/// or the f16 encoding behind `PagingConfig::swap_half`. `SwapEntry::bytes`
+/// and every budget check see the *encoded* size, which is the point of
+/// the codec.
+#[derive(Debug, Clone)]
+pub enum KvLane {
+    /// Verbatim rows; restore is bit-identical.
+    F32(Vec<f32>),
+    /// Half-precision rows; restore is within one f16 rounding step
+    /// (relative 2^-11) per element.
+    F16(Vec<u16>),
+}
+
+impl KvLane {
+    /// Encode `rows` under the chosen codec.
+    pub fn encode(rows: Vec<f32>, half: bool) -> KvLane {
+        if half {
+            KvLane::F16(rows.into_iter().map(f32_to_f16).collect())
+        } else {
+            KvLane::F32(rows)
+        }
+    }
+
+    /// Elements held (row count x row width).
+    pub fn len_elems(&self) -> usize {
+        match self {
+            KvLane::F32(v) => v.len(),
+            KvLane::F16(v) => v.len(),
+        }
+    }
+
+    /// Host bytes this lane's payload occupies (what the budget charges).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            KvLane::F32(v) => v.len() * std::mem::size_of::<f32>(),
+            KvLane::F16(v) => v.len() * std::mem::size_of::<u16>(),
+        }
+    }
+
+    /// Whether a decode loses bits relative to the serialized f32 rows.
+    pub fn is_lossy(&self) -> bool {
+        matches!(self, KvLane::F16(_))
+    }
+
+    /// Rows as f32: borrowed verbatim for [`KvLane::F32`], decoded into a
+    /// fresh buffer for [`KvLane::F16`] (restore-time only — the hot path
+    /// never touches swapped lanes).
+    pub fn as_f32(&self) -> Cow<'_, [f32]> {
+        match self {
+            KvLane::F32(v) => Cow::Borrowed(v),
+            KvLane::F16(v) => {
+                Cow::Owned(v.iter().map(|&h| f16_to_f32(h)).collect())
+            }
+        }
+    }
+}
 
 /// Opaque ticket for a lane swapped out to host memory. Rides on the
 /// scheduler's resume-queue entry; consumed by a successful swap-in.
@@ -64,10 +193,11 @@ pub enum SwapIn {
 pub struct SwapEntry {
     /// Valid rows per layer.
     pub lens: Vec<usize>,
-    /// `[layer][len * row_elems]` K rows in logical order.
-    pub k: Vec<Vec<f32>>,
+    /// `[layer]` K rows (`len * row_elems` elements each, logical order),
+    /// under the f32 or f16 codec ([`KvLane`]).
+    pub k: Vec<KvLane>,
     /// V rows, same layout as `k`.
-    pub v: Vec<Vec<f32>>,
+    pub v: Vec<KvLane>,
     /// `[layer][block]` chain hash of each block at swap-out: `Some` for
     /// full sealed blocks (so swap-in re-shares them through the prefix
     /// cache without re-hashing), `None` for mutable tails and
@@ -92,6 +222,13 @@ impl SwapEntry {
     /// Longest per-layer length (lane-capacity check on restore).
     pub fn max_len(&self) -> usize {
         self.lens.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Whether restoring this entry loses bits vs the serialized rows
+    /// (the f16 codec). Lossy restores must not re-register preserved
+    /// hashes for freshly-written blocks — see `PagedArena::swap_in`.
+    pub fn is_lossy(&self) -> bool {
+        self.k.iter().chain(&self.v).any(|l| l.is_lossy())
     }
 }
 
@@ -341,8 +478,8 @@ mod tests {
     fn entry_for(bytes: usize, tenant: TenantId) -> SwapEntry {
         SwapEntry {
             lens: vec![bytes / 8, bytes / 8],
-            k: vec![Vec::new(); 2],
-            v: vec![Vec::new(); 2],
+            k: vec![KvLane::F32(Vec::new()); 2],
+            v: vec![KvLane::F32(Vec::new()); 2],
             hashes: vec![Vec::new(); 2],
             bytes,
             tenant,
@@ -504,13 +641,74 @@ mod tests {
     fn entry_block_math() {
         let e = SwapEntry {
             lens: vec![5, 0, 8],
-            k: vec![Vec::new(); 3],
-            v: vec![Vec::new(); 3],
+            k: vec![KvLane::F32(Vec::new()); 3],
+            v: vec![KvLane::F32(Vec::new()); 3],
             hashes: vec![Vec::new(); 3],
             bytes: 0,
             tenant: TenantId::DEFAULT,
         };
         assert_eq!(e.total_blocks(4), 2 + 0 + 2);
         assert_eq!(e.max_len(), 8);
+        assert!(!e.is_lossy());
+    }
+
+    #[test]
+    fn f16_codec_roundtrips_every_finite_half_exactly() {
+        // Decode is exact for all 65536 bit patterns; every finite half
+        // re-encodes to the same bits (so rounding can only move a value
+        // by at most half an f16 step).
+        for h in 0..=u16::MAX {
+            let x = f16_to_f32(h);
+            if x.is_nan() {
+                assert_eq!(h & 0x7c00, 0x7c00, "NaN only from exp=31");
+                continue;
+            }
+            if x.is_infinite() {
+                continue; // saturating encode never reproduces inf
+            }
+            assert_eq!(f32_to_f16(x), h, "half {h:#06x} -> {x} -> re-encode");
+        }
+        // spot values
+        assert_eq!(f16_to_f32(f32_to_f16(1.0)), 1.0);
+        assert_eq!(f16_to_f32(f32_to_f16(-2.5)), -2.5);
+        assert_eq!(f16_to_f32(f32_to_f16(65504.0)), 65504.0);
+        assert_eq!(f16_to_f32(f32_to_f16(1.0e9)), 65504.0, "saturates");
+        assert_eq!(f16_to_f32(f32_to_f16(-1.0e9)), -65504.0);
+        assert_eq!(f16_to_f32(f32_to_f16(0.0)), 0.0);
+        assert_eq!(f16_to_f32(f32_to_f16(1.0e-12)), 0.0, "underflows");
+    }
+
+    #[test]
+    fn f16_codec_relative_error_bounded() {
+        let mut x = 1.37e-6f32;
+        while x < 6.0e4 {
+            for v in [x, -x] {
+                let y = f16_to_f32(f32_to_f16(v));
+                let tol = v.abs() * (2.0f32).powi(-11) + (2.0f32).powi(-25);
+                assert!(
+                    (y - v).abs() <= tol,
+                    "{v} -> {y}, err {} > tol {tol}",
+                    (y - v).abs()
+                );
+            }
+            x *= 1.0937; // dense sweep across binades
+        }
+    }
+
+    #[test]
+    fn lane_codec_encodes_and_reports_bytes() {
+        let rows: Vec<f32> = vec![0.5, -1.25, 3.0, 10000.0];
+        let full = KvLane::encode(rows.clone(), false);
+        assert!(!full.is_lossy());
+        assert_eq!(full.payload_bytes(), 16);
+        assert_eq!(full.as_f32().as_ref(), &rows[..]);
+        let half = KvLane::encode(rows.clone(), true);
+        assert!(half.is_lossy());
+        assert_eq!(half.payload_bytes(), 8, "half the f32 size");
+        assert_eq!(half.len_elems(), 4);
+        for (a, b) in half.as_f32().iter().zip(&rows) {
+            let tol = b.abs() * (2.0f32).powi(-11) + 1e-7;
+            assert!((a - b).abs() <= tol, "{a} vs {b}");
+        }
     }
 }

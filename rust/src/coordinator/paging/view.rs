@@ -26,6 +26,7 @@
 
 use crate::tensor::{HostTensor, HostTensorI32};
 
+use super::shard::{self, ShardSpec};
 use super::Staged;
 
 /// Borrowed block-table description of a paged KV store's decode inputs.
@@ -57,6 +58,13 @@ pub struct DecodeView<'a> {
     pub tables: Vec<i32>,
     /// `lens[l * b + slot]` = valid token rows.
     pub lens: Vec<i32>,
+    /// KV-head shard count of the owning store (1 = unsharded).
+    pub shards: usize,
+    /// Per-shard slab stamps (`shard_versions[s]`, same store-id-in-the-
+    /// upper-bits encoding as [`DecodeView::version`]); length `shards`.
+    /// A pinned-slab cache keyed per shard re-uploads only the shards
+    /// whose stamp moved.
+    pub shard_versions: Vec<u64>,
     pub(super) slab_k: &'a [f32],
     pub(super) slab_v: &'a [f32],
 }
@@ -107,17 +115,28 @@ impl<'a> DecodeView<'a> {
     /// Block tables as the artifact's `[L, B, mb]` i32 input, padded (or
     /// exactly sized) to `mb >= self.max_blocks`.
     pub fn tables_tensor(&self, mb: usize) -> HostTensorI32 {
+        let mut out = HostTensorI32::empty();
+        self.tables_tensor_into(mb, &mut out);
+        out
+    }
+
+    /// [`DecodeView::tables_tensor`] into a caller-owned tensor, reusing
+    /// its buffers (scratch variant: zero heap allocation once the
+    /// buffers reach steady-state size — see `decode::DecodeScratch`).
+    pub fn tables_tensor_into(&self, mb: usize, out: &mut HostTensorI32) {
         assert!(
             mb >= self.max_blocks,
             "artifact table width {mb} < live width {}",
             self.max_blocks
         );
-        let mut data = vec![-1i32; self.l * self.b * mb];
+        out.shape.clear();
+        out.shape.extend_from_slice(&[self.l, self.b, mb]);
+        out.data.clear();
+        out.data.resize(self.l * self.b * mb, -1);
         for ls in 0..self.l * self.b {
             let src = &self.tables[ls * self.max_blocks..(ls + 1) * self.max_blocks];
-            data[ls * mb..ls * mb + self.max_blocks].copy_from_slice(src);
+            out.data[ls * mb..ls * mb + self.max_blocks].copy_from_slice(src);
         }
-        HostTensorI32::new(vec![self.l, self.b, mb], data)
     }
 
     /// Valid lengths as the artifact's `[L, B]` i32 input.
@@ -125,23 +144,90 @@ impl<'a> DecodeView<'a> {
         HostTensorI32::new(vec![self.l, self.b], self.lens.clone())
     }
 
+    /// [`DecodeView::lens_tensor`] into a caller-owned tensor (scratch
+    /// variant).
+    pub fn lens_tensor_into(&self, out: &mut HostTensorI32) {
+        out.shape.clear();
+        out.shape.extend_from_slice(&[self.l, self.b]);
+        out.data.clear();
+        out.data.extend_from_slice(&self.lens);
+    }
+
     /// Slab planes as the artifact's `[nb, bt, KV, hd]` f32 inputs, zero
     /// padded to the artifact's pool bucket `nb >= self.num_blocks`. This
     /// is the one O(pool) copy left on the paged path, and it runs only
     /// when the device-side pinned slab is stale (see `Runtime::run_pinned`).
     pub fn slab_tensors(&self, nb: usize) -> (HostTensor, HostTensor) {
+        let mut k = HostTensor::empty();
+        let mut v = HostTensor::empty();
+        self.slab_tensors_into(nb, &mut k, &mut v);
+        (k, v)
+    }
+
+    /// [`DecodeView::slab_tensors`] into caller-owned tensors (scratch
+    /// variant for the stale-slab re-upload path).
+    pub fn slab_tensors_into(
+        &self,
+        nb: usize,
+        k: &mut HostTensor,
+        v: &mut HostTensor,
+    ) {
         assert!(
             nb >= self.num_blocks,
             "artifact pool bucket {nb} < live pool {}",
             self.num_blocks
         );
-        let shape = vec![nb, self.block_tokens, self.kv_heads, self.head_dim];
+        let shape = [nb, self.block_tokens, self.kv_heads, self.head_dim];
         let elems = nb * self.block_tokens * self.row_elems();
-        let mut k = vec![0.0f32; elems];
-        let mut v = vec![0.0f32; elems];
-        k[..self.slab_k.len()].copy_from_slice(self.slab_k);
-        v[..self.slab_v.len()].copy_from_slice(self.slab_v);
-        (HostTensor::new(shape.clone(), k), HostTensor::new(shape, v))
+        for t in [&mut *k, &mut *v] {
+            t.shape.clear();
+            t.shape.extend_from_slice(&shape);
+            t.data.clear();
+            t.data.resize(elems, 0.0);
+        }
+        k.data[..self.slab_k.len()].copy_from_slice(self.slab_k);
+        v.data[..self.slab_v.len()].copy_from_slice(self.slab_v);
+    }
+
+    /// The shard layout of the owning store.
+    pub fn shard_spec(&self) -> ShardSpec {
+        debug_assert_eq!(self.kv_heads % self.shards, 0, "validated at config");
+        ShardSpec { shards: self.shards, kv_heads: self.kv_heads, head_dim: self.head_dim }
+    }
+
+    /// Per-shard projection of this view: shard `s`'s slice of the slab
+    /// planes plus its own version stamp. Tables and lens are shared —
+    /// build them once from the parent view; only the slab planes differ
+    /// per shard.
+    pub fn view_shard(&self, shard: usize) -> ShardView<'_> {
+        assert!(shard < self.shards, "shard {shard} of {}", self.shards);
+        ShardView {
+            shard,
+            spec: self.shard_spec(),
+            version: self.shard_versions[shard],
+            block_tokens: self.block_tokens,
+            num_blocks: self.num_blocks,
+            slab_k: self.slab_k,
+            slab_v: self.slab_v,
+        }
+    }
+
+    /// Reassembled dense planes from every shard's projection — the
+    /// differential oracle's check that sharding loses nothing:
+    /// bit-identical to `(slab_k, slab_v)` for any valid shard count.
+    pub fn reassembled_slab(&self) -> (Vec<f32>, Vec<f32>) {
+        let spec = self.shard_spec();
+        let nb = self.num_blocks;
+        let ks: Vec<HostTensor> = (0..self.shards)
+            .map(|s| self.view_shard(s).slab_tensors(nb).0)
+            .collect();
+        let vs: Vec<HostTensor> = (0..self.shards)
+            .map(|s| self.view_shard(s).slab_tensors(nb).1)
+            .collect();
+        (
+            shard::reassemble_planes(spec, &ks, nb, self.block_tokens),
+            shard::reassemble_planes(spec, &vs, nb, self.block_tokens),
+        )
     }
 
     /// Materialize the dense `[L, B, C, KV, hd]` staging layout (plus
@@ -165,5 +251,101 @@ impl<'a> DecodeView<'a> {
             }
         }
         Staged { k, v, lens: self.lens_tensor() }
+    }
+}
+
+/// One KV-head shard's slice of a [`DecodeView`]: the inputs shard `s`'s
+/// executor consumes. Block tables and lens are deliberately *not* here —
+/// they are shard-oblivious and shared from the parent view; only the
+/// slab planes (and their staleness stamp) differ per shard.
+#[derive(Debug)]
+pub struct ShardView<'a> {
+    /// Which shard this is.
+    pub shard: usize,
+    /// The owning store's shard layout.
+    pub spec: ShardSpec,
+    /// This shard's slab stamp (same encoding as [`DecodeView::version`]);
+    /// drives the per-shard pinned-buffer cache.
+    pub version: u64,
+    /// Token rows per physical block.
+    pub block_tokens: usize,
+    /// Physical blocks in the (shared) pool.
+    pub num_blocks: usize,
+    slab_k: &'a [f32],
+    slab_v: &'a [f32],
+}
+
+impl<'a> ShardView<'a> {
+    /// f32 elements of this shard's slice of a token row (`KV/S * hd`).
+    pub fn row_elems(&self) -> usize {
+        self.spec.shard_row_elems()
+    }
+
+    /// This shard's slice of one physical block row, zero-copy (a shard's
+    /// heads are contiguous inside the dense row).
+    pub fn k_block_row(&self, block: usize, row: usize) -> &[f32] {
+        let range = self.spec.row_range(self.shard);
+        let base = (block * self.block_tokens + row) * self.spec.row_elems();
+        &self.slab_k[base + range.start..base + range.end]
+    }
+
+    /// V-plane counterpart of [`ShardView::k_block_row`].
+    pub fn v_block_row(&self, block: usize, row: usize) -> &[f32] {
+        let range = self.spec.row_range(self.shard);
+        let base = (block * self.block_tokens + row) * self.spec.row_elems();
+        &self.slab_v[base + range.start..base + range.end]
+    }
+
+    /// This shard's slab planes in the sharded artifact's layout
+    /// `[nb, bt, KV/S, hd]`, zero-padded to the artifact pool bucket
+    /// `nb >= num_blocks`. The per-shard counterpart of
+    /// [`DecodeView::slab_tensors`]: 1/S of the copy, and only run for
+    /// shards whose pinned device plane went stale.
+    pub fn slab_tensors(&self, nb: usize) -> (HostTensor, HostTensor) {
+        let mut k = HostTensor::empty();
+        let mut v = HostTensor::empty();
+        self.slab_tensors_into(nb, &mut k, &mut v);
+        (k, v)
+    }
+
+    /// [`ShardView::slab_tensors`] into caller-owned tensors (scratch
+    /// variant).
+    pub fn slab_tensors_into(
+        &self,
+        nb: usize,
+        k: &mut HostTensor,
+        v: &mut HostTensor,
+    ) {
+        assert!(
+            nb >= self.num_blocks,
+            "artifact pool bucket {nb} < live pool {}",
+            self.num_blocks
+        );
+        let srw = self.row_elems();
+        let shape =
+            [nb, self.block_tokens, self.spec.kv_per_shard(), self.spec.head_dim];
+        let elems = nb * self.block_tokens * srw;
+        for t in [&mut *k, &mut *v] {
+            t.shape.clear();
+            t.shape.extend_from_slice(&shape);
+            t.data.clear();
+            t.data.resize(elems, 0.0);
+        }
+        shard::project_plane_into(
+            self.slab_k,
+            self.spec,
+            self.shard,
+            self.num_blocks,
+            self.block_tokens,
+            &mut k.data,
+        );
+        shard::project_plane_into(
+            self.slab_v,
+            self.spec,
+            self.shard,
+            self.num_blocks,
+            self.block_tokens,
+            &mut v.data,
+        );
     }
 }

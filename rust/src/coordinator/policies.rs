@@ -77,6 +77,21 @@ pub trait Exec {
             .collect();
         self.run(name, assembled)
     }
+
+    /// Borrowing twin of [`Exec::run_pinned`] for scratch-driven hot
+    /// loops (`decode::DecodeScratch`): the caller keeps ownership of
+    /// every tensor, so steady-state decode performs zero heap
+    /// allocation for input prep. Executors that can borrow (the
+    /// in-thread `Runtime`) override this; the default clones once for
+    /// executors that must move data across a thread boundary.
+    fn run_pinned_ref(
+        &self,
+        name: &str,
+        pinned: &[crate::runtime::PinnedInput],
+        inputs: &[In],
+    ) -> Result<Vec<HostTensor>> {
+        self.run_pinned(name, pinned.to_vec(), inputs.to_vec())
+    }
 }
 
 impl Exec for crate::runtime::Runtime {
@@ -95,6 +110,16 @@ impl Exec for crate::runtime::Runtime {
         inputs: Vec<In>,
     ) -> Result<Vec<HostTensor>> {
         crate::runtime::Runtime::run_with_pinned(self, name, &pinned, &inputs)
+    }
+
+    fn run_pinned_ref(
+        &self,
+        name: &str,
+        pinned: &[crate::runtime::PinnedInput],
+        inputs: &[In],
+    ) -> Result<Vec<HostTensor>> {
+        // In-thread runtime: a true borrow, no clone anywhere.
+        crate::runtime::Runtime::run_with_pinned(self, name, pinned, inputs)
     }
 }
 

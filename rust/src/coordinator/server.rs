@@ -32,9 +32,11 @@
 //!    prefill FastKV eliminated and may re-select different KV). The
 //!    full pressure ladder is: compact → swap → recompute → reject.
 //!
-//! Decode steps go through the shared [`DecodeBatch`] planner: block-table
-//! native (`decode_paged_{B}x{C}`, slab + table indices) whenever the
-//! store and manifest support it, dense staged bridge otherwise.
+//! Decode steps go through the shared [`DecodeBatch`] planner:
+//! KV-head-sharded block tables (`decode_paged_shard_{B}x{C}s{S}`,
+//! per-shard pinned slabs) when the store is sharded and the manifest
+//! carries the family, block-table native (`decode_paged_{B}x{C}`, slab
+//! + table indices) otherwise, dense staged bridge as the last resort.
 //!
 //!  * **multi-tenant fairness** — every request carries a
 //!    [`TenantId`] (`ServerHandle::submit_for`; plain `submit` uses the
@@ -59,8 +61,8 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::coordinator::decode::{
-    advance_lane, CompactSpec, DecodeBatch, DecodePath, LaneAdvance,
-    LaneInput,
+    advance_lane, CompactSpec, DecodeBatch, DecodePath, DecodeScratch,
+    LaneAdvance, LaneInput,
 };
 use crate::coordinator::engine::decode_cap_for;
 use crate::coordinator::kvcache::BatchArena;
@@ -230,6 +232,27 @@ impl ServerHandle {
         self.submit_for(prompt, max_new, TenantId::DEFAULT)
     }
 
+    /// Submit a prompt with the tenant chosen round-robin from the
+    /// *request id* (`id % tenants`). Deterministic per request no matter
+    /// how the submission loop is structured: a workload driver that
+    /// restarts its loop (or interleaves several) still assigns every
+    /// request the same tenant on every machine, which is what keeps
+    /// multi-tenant bench runs reproducible. Returns the id and the
+    /// tenant actually assigned alongside the response receiver.
+    pub fn submit_round_robin(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        tenants: u32,
+    ) -> Result<(u64, TenantId, mpsc::Receiver<Response>)> {
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tenant = TenantId((id % tenants.max(1) as u64) as u32);
+        let rx = self.submit_with(id, prompt, max_new, tenant)?;
+        Ok((id, tenant, rx))
+    }
+
     /// Submit a prompt on behalf of `tenant`: its KV blocks, swap bytes,
     /// admission and preemption fairness are all accounted against that
     /// tenant's quota (`PagingConfig::tenant_quotas`).
@@ -242,6 +265,19 @@ impl ServerHandle {
         let id = self
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let rx = self.submit_with(id, prompt, max_new, tenant)?;
+        Ok((id, rx))
+    }
+
+    /// Shared tail of every submit path: build the fresh `Request` and
+    /// hand it to the serving thread.
+    fn submit_with(
+        &self,
+        id: u64,
+        prompt: Vec<i32>,
+        max_new: usize,
+        tenant: TenantId,
+    ) -> Result<mpsc::Receiver<Response>> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Msg::Submit(Request {
@@ -258,7 +294,7 @@ impl ServerHandle {
                 prefilled: false,
             }))
             .map_err(|_| anyhow::anyhow!("server thread gone"))?;
-        Ok((id, rx))
+        Ok(rx)
     }
 
     pub fn shutdown(&self) {
@@ -545,6 +581,11 @@ fn publish_pool_gauges(store: &dyn KvStore, metrics: &Metrics) {
     metrics.set_gauge(names::SWAP_BYTES_BUDGET, ss.budget_bytes as f64);
     metrics.set_gauge(names::SWAP_ENTRIES, ss.entries as f64);
     metrics.set_gauge(names::SWAP_DROPPED, ss.dropped as f64);
+    // Per-shard slab rows (empty for unsharded backends): the device
+    // bytes each shard executor pins for this store's K + V planes.
+    for (s, bytes) in store.shard_slab_bytes().into_iter().enumerate() {
+        metrics.set_gauge(&names::shard_slab_bytes(s), bytes as f64);
+    }
 }
 
 fn serve_inner(
@@ -581,8 +622,14 @@ fn serve_inner(
     // slab bucket, or a manifest without decode_paged artifacts) is the
     // O(cap)-per-token regression this stack exists to avoid — make it
     // loud rather than discoverable only via the step counters.
-    let block_table = batch.path_for(store.as_ref()) == DecodePath::BlockTable;
+    let path = batch.path_for(store.as_ref());
+    let block_table =
+        matches!(path, DecodePath::BlockTable | DecodePath::Sharded);
     metrics.set_gauge("decode_block_table", if block_table { 1.0 } else { 0.0 });
+    metrics.set_gauge(
+        names::DECODE_SHARDED,
+        if path == DecodePath::Sharded { 1.0 } else { 0.0 },
+    );
     let wants_block_table =
         cfg.paging.as_ref().map(|p| !p.dense_staging).unwrap_or(false);
     if wants_block_table && !block_table {
@@ -596,6 +643,9 @@ fn serve_inner(
     }
     let mut sched: Scheduler<Request> = Scheduler::new(b, cfg.order);
     let mut active: Vec<Active> = Vec::new();
+    // Reusable decode input-prep buffers: the planner allocates nothing
+    // per step beyond the store's own view build.
+    let mut scratch = DecodeScratch::new();
     let mut shutdown = false;
     // Set after a deferred admission: forces one decode pass before the
     // next admission attempt so the loop cannot hot-spin on
@@ -767,6 +817,7 @@ fn serve_inner(
                     store.as_ref(),
                     &active,
                     metrics,
+                    &mut scratch,
                 )?;
                 apply_decode(
                     cfg,
@@ -959,6 +1010,7 @@ fn decode_step(
     store: &dyn KvStore,
     active: &[Active],
     metrics: &Metrics,
+    scratch: &mut DecodeScratch,
 ) -> Result<DecodeOut> {
     let lanes: Vec<LaneInput> = active
         .iter()
@@ -966,7 +1018,7 @@ fn decode_step(
         .collect();
     let t0 = Instant::now();
     let out = batch
-        .step(rt, store, &lanes, Some(metrics))
+        .step_scratch(rt, store, &lanes, Some(metrics), scratch)
         .context("decode step")?;
     metrics.observe("decode_step_secs", t0.elapsed().as_secs_f64());
     Ok(out)

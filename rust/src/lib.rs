@@ -76,11 +76,12 @@ pub mod tokenizer;
 pub mod util;
 pub mod workload;
 
-pub use coordinator::decode::{DecodeBatch, DecodePath};
+pub use coordinator::decode::{DecodeBatch, DecodePath, DecodeScratch};
 pub use coordinator::engine::{generate, GenResult, GenStats};
 pub use coordinator::paging::{
     AppendResult, DecodeView, KvStore, PagedArena, PagingConfig, PoolStats,
-    SwapHandle, SwapIn, SwapStats, TenantId, TenantQuota, TenantStats,
+    ShardSpec, ShardView, SwapHandle, SwapIn, SwapStats, TenantId,
+    TenantQuota, TenantStats,
 };
 pub use coordinator::policies::{
     make_policy, Policy, PolicyCfg, ALL_POLICIES,

@@ -68,8 +68,11 @@ fn print_help() {
          \x20          [--flat] [--pool-blocks N] [--block-tokens 16] [--no-prefix-cache]\n\
          \x20          [--dense-staging]  (fallback: staged decode bridge instead of block tables)\n\
          \x20          [--swap-mb M]  (host swap budget for preempted lanes; 0 = recompute-resume)\n\
-         \x20          [--tenants T] [--quota-blocks R]  (T tenants round-robin, each with a\n\
-         \x20           reserved floor of R pool blocks; 0 tenants/blocks = single-tenant)\n\
+         \x20          [--swap-half]  (f16-encode swapped lanes: half the host budget pressure)\n\
+         \x20          [--shards S]  (KV-head-shard the slab into S per-shard pinned slabs;\n\
+         \x20           S must divide the model's kv_heads; 1 = single-slab path)\n\
+         \x20          [--tenants T] [--quota-blocks R]  (T tenants round-robin by request id,\n\
+         \x20           each with a reserved floor of R pool blocks; 0 = single-tenant)\n\
          \x20 overhead [--lens 256,512,1024]\n\
          \x20 info\n\
          \n\
@@ -736,9 +739,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         pc.prefix_cache = !args.has("no-prefix-cache");
         pc.dense_staging = args.has("dense-staging");
+        // --shards S: split the KV slab head-wise into S per-shard pinned
+        // slabs (needs the decode_paged_shard artifacts for the sharded
+        // decode path; 1 = today's single-slab path, bit-identical).
+        pc.shards = args.usize("shards", 1);
+        if let Err(e) =
+            fastkv::ShardSpec::new(pc.shards.max(1), man.model.n_kv_heads, man.model.head_dim)
+        {
+            bail!("--shards: {e}");
+        }
         // --swap-mb M: host swap budget for preempted lanes (0 disables
         // swap-to-host; preemption then recompute-resumes).
         pc.swap_bytes = args.usize("swap-mb", pc.swap_bytes >> 20) << 20;
+        // --swap-half: encode swapped lanes as f16 (half the host budget
+        // pressure; restores are within one f16 rounding step).
+        pc.swap_half = args.has("swap-half");
         // --tenants T + --quota-blocks R: every tenant gets a reserved
         // floor of R blocks (burst above it allowed while the pool has
         // slack); requests are assigned tenants round-robin below.
@@ -784,15 +799,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let tok = Tokenizer;
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
-    for (i, ev) in trace.iter().enumerate() {
+    for ev in trace.iter() {
         let wait = ev.at - t0.elapsed().as_secs_f64();
         if wait > 0.0 {
             std::thread::sleep(std::time::Duration::from_secs_f64(wait));
         }
         let ids = tok.encode(&ev.sample.prompt);
-        // Round-robin tenant assignment (tenant 0 with --tenants 1).
-        let tenant = fastkv::TenantId((i % tenants) as u32);
-        let (_, rx) = handle.submit_for(ids, ev.max_new, tenant)?;
+        // Round-robin tenant assignment keyed on the REQUEST ID (tenant 0
+        // with --tenants 1): `i % tenants` depended on where the workload
+        // loop happened to (re)start its counter, so two runs of the same
+        // trace could charge requests to different tenants and the
+        // multi-tenant bench numbers would not reproduce across machines.
+        // `id % tenants` is stable per request by construction.
+        let (_, _tenant, rx) =
+            handle.submit_round_robin(ids, ev.max_new, tenants as u32)?;
         rxs.push(rx);
     }
     let mut tokens = 0usize;

@@ -39,6 +39,9 @@ pub struct Buckets {
     /// Tokens per physical block the `decode_paged_*` artifacts were
     /// compiled for (0 on manifests that predate them).
     pub block_tokens: usize,
+    /// KV-head shard counts the `decode_paged_shard_*` family was
+    /// compiled for (empty on manifests that predate slab sharding).
+    pub shard_counts: Vec<usize>,
 }
 
 /// Canonical name of the dense decode artifact for a `(batch, cap)` bucket.
@@ -49,6 +52,16 @@ pub fn decode_artifact_name(batch: usize, cap: usize) -> String {
 /// Canonical name of the block-table decode artifact for a bucket.
 pub fn decode_paged_artifact_name(batch: usize, cap: usize) -> String {
     format!("decode_paged_{batch}x{cap}")
+}
+
+/// Canonical name of the KV-head-sharded block-table decode artifact for
+/// a bucket and shard count.
+pub fn decode_paged_shard_artifact_name(
+    batch: usize,
+    cap: usize,
+    shards: usize,
+) -> String {
+    format!("decode_paged_shard_{batch}x{cap}s{shards}")
 }
 
 #[derive(Debug, Clone)]
@@ -66,10 +79,16 @@ pub struct ArtifactMeta {
     pub batch: usize,
     pub cap: usize,
     pub tsp_layer: usize,
-    /// `decode_paged` only: static pool bucket of the slab inputs.
+    /// `decode_paged`/`decode_paged_shard` only: static pool bucket of
+    /// the slab inputs.
     pub pool_blocks: usize,
-    /// `decode_paged` only: tokens per physical block.
+    /// `decode_paged`/`decode_paged_shard` only: tokens per physical
+    /// block.
     pub block_tokens: usize,
+    /// `decode_paged_shard` only: KV-head shard count `S` (0 otherwise).
+    pub shards: usize,
+    /// `decode_paged_shard` only: KV heads per shard (0 otherwise).
+    pub shard_kv_heads: usize,
     pub inputs: Vec<TensorSig>,
     pub outputs: Vec<TensorSig>,
 }
@@ -134,6 +153,11 @@ impl Manifest {
                 .get("block_tokens")
                 .and_then(|x| x.as_usize())
                 .unwrap_or(0),
+            // absent on manifests that predate slab sharding
+            shard_counts: b
+                .get("shard_counts")
+                .map(|x| x.usize_arr())
+                .unwrap_or_default(),
         };
 
         let mut artifacts = BTreeMap::new();
@@ -155,6 +179,14 @@ impl Manifest {
                     .unwrap_or(0),
                 block_tokens: a
                     .get("block_tokens")
+                    .and_then(|x| x.as_usize())
+                    .unwrap_or(0),
+                shards: a
+                    .get("shards")
+                    .and_then(|x| x.as_usize())
+                    .unwrap_or(0),
+                shard_kv_heads: a
+                    .get("shard_kv_heads")
                     .and_then(|x| x.as_usize())
                     .unwrap_or(0),
                 inputs: sigs(a.req("inputs")),
@@ -260,6 +292,11 @@ mod tests {
         assert_eq!(a.pool_blocks, 0, "non-paged artifacts default to 0");
         let p = m.artifact("decode_paged_1x128").unwrap();
         assert_eq!((p.pool_blocks, p.block_tokens), (64, 16));
+        assert_eq!((p.shards, p.shard_kv_heads), (0, 0), "unsharded default");
+        assert!(
+            m.buckets.shard_counts.is_empty(),
+            "pre-shard manifests parse with no shard counts"
+        );
         assert!(m.artifact("nope").is_err());
     }
 
@@ -267,5 +304,9 @@ mod tests {
     fn decode_artifact_names() {
         assert_eq!(decode_artifact_name(4, 320), "decode_4x320");
         assert_eq!(decode_paged_artifact_name(1, 128), "decode_paged_1x128");
+        assert_eq!(
+            decode_paged_shard_artifact_name(4, 320, 2),
+            "decode_paged_shard_4x320s2"
+        );
     }
 }

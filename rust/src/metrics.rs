@@ -37,8 +37,25 @@ pub mod names {
     /// Gauge: block takes refused by a tenant quota while the pool still
     /// had allocatable blocks (from `PoolStats::quota_denials`).
     pub const POOL_QUOTA_DENIALS: &str = "pool_quota_denials";
+    /// Counter: shard slab planes materialized for device upload (the
+    /// per-shard staleness win: a mutation confined to one shard counts
+    /// 1, a whole-row append counts S; an all-current step counts 0).
+    /// On the unsharded path this counts whole-slab re-uploads.
+    pub const SHARD_UPLOADS: &str = "shard_uploads";
+    /// Counter: decode steps served through the KV-head-sharded
+    /// block-table path (`decode_paged_shard_{B}x{C}s{S}`).
+    pub const DECODE_STEPS_SHARDED: &str = "decode_steps_sharded";
+    /// Gauge (0/1): 1 = the serving loop resolved the sharded decode
+    /// path at startup.
+    pub const DECODE_SHARDED: &str = "decode_sharded";
 
     use crate::coordinator::paging::TenantId;
+
+    /// Gauge name: device bytes shard `s` pins for this store's K + V
+    /// slab planes (`num_blocks * block_tokens * KV/S * hd * 4 * 2`).
+    pub fn shard_slab_bytes(s: usize) -> String {
+        format!("shard_{s}_slab_bytes")
+    }
 
     /// Gauge name: blocks currently charged to the tenant (first-toucher
     /// rule; reconciles with `pool_blocks_in_use` summed over tenants).

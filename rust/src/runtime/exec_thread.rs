@@ -117,6 +117,63 @@ impl Drop for Executor {
     }
 }
 
+/// One executor thread per KV-head shard. Shard `s`'s handle owns the
+/// residency of shard `s`'s pinned slab planes (its own `Runtime`, its
+/// own pinned cache, its own version mirror) — the thread-level
+/// embodiment of "each shard's slab lives on its own device". The
+/// coordinator uploads through `handle(s)` and combines the per-shard
+/// partial outputs host-side (`coordinator::decode::combine_head_shards`).
+///
+/// On the current single-device PJRT runtime the decode hot path keeps
+/// all shards on one executor (`Runtime::run_sharded`) because PJRT
+/// buffers are not shareable across clients; this pool exists so the
+/// multi-device dispatch has its shape ready — spawning, addressing, and
+/// tearing down S runtimes is already exercised.
+pub struct ShardedExecutor {
+    execs: Vec<Executor>,
+}
+
+impl ShardedExecutor {
+    /// Spawn `shards` executor threads over the same artifact dir; fails
+    /// fast if any runtime cannot load (and tears down the ones that
+    /// did).
+    pub fn spawn(artifact_dir: PathBuf, shards: usize) -> Result<ShardedExecutor> {
+        anyhow::ensure!(shards >= 1, "shard count must be at least 1");
+        let mut execs = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            execs.push(Executor::spawn(artifact_dir.clone())?);
+        }
+        Ok(ShardedExecutor { execs })
+    }
+
+    /// Number of shard executors in the pool.
+    pub fn shards(&self) -> usize {
+        self.execs.len()
+    }
+
+    /// Handle to shard `s`'s executor thread.
+    pub fn handle(&self, shard: usize) -> ExecutorHandle {
+        self.execs[shard].handle()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sharded_executor_validates_and_fails_fast() {
+        let dir = std::path::PathBuf::from("/nonexistent-artifacts");
+        // zero shards is rejected before any runtime is touched
+        let err = ShardedExecutor::spawn(dir.clone(), 0).unwrap_err();
+        assert!(format!("{err:#}").contains("shard count"), "{err:#}");
+        // a runtime that cannot load (missing artifacts here; the PJRT
+        // stub in this image) propagates from the first shard's spawn
+        // instead of leaving half a pool running
+        assert!(ShardedExecutor::spawn(dir, 2).is_err());
+    }
+}
+
 impl ExecutorHandle {
     pub fn run(&self, name: &str, inputs: Vec<In>) -> Result<Vec<HostTensor>> {
         let (reply, rx) = mpsc::channel();

@@ -271,6 +271,30 @@ impl Runtime {
         self.run_with_pinned(name, &[], inputs)
     }
 
+    /// Multi-shard dispatch for the `decode_paged_shard_{B}x{C}s{S}`
+    /// family: one group of pinned inputs per KV-head shard (shard `s`'s
+    /// slab planes, under per-shard keys/versions), flattened onto
+    /// [`Runtime::run_with_pinned`]. On this single-device runtime every
+    /// shard's buffers share one executor, and the decode planner drives
+    /// the equivalent flat call directly (`Exec::run_pinned_ref` with the
+    /// same per-shard keys) — the win is already real there (each shard
+    /// re-uploads independently, so a mutation confined to one shard
+    /// moves 1/S of the slab). This method is the multi-device fan-out
+    /// point: with real bindings each group instead targets shard `s`'s
+    /// own device/executor (`exec_thread::ShardedExecutor`).
+    pub fn run_sharded(
+        &self,
+        name: &str,
+        shard_pinned: &[Vec<PinnedInput>],
+        inputs: &[In],
+    ) -> Result<Vec<HostTensor>> {
+        let flat: Vec<PinnedInput> = shard_pinned
+            .iter()
+            .flat_map(|group| group.iter().cloned())
+            .collect();
+        self.run_with_pinned(name, &flat, inputs)
+    }
+
     /// Like [`Runtime::run`], with some inputs device-pinned across calls:
     /// each [`PinnedInput`] occupies `index` among the non-weight inputs
     /// and is re-uploaded only when its `(key, version)` is not already

@@ -32,6 +32,12 @@ impl HostTensor {
         HostTensor { shape, data: vec![0.0; n] }
     }
 
+    /// Zero-element placeholder for `*_into` scratch buffers (note: a
+    /// scalar has an empty *shape* but one element; this has neither).
+    pub fn empty() -> Self {
+        HostTensor { shape: vec![0], data: Vec::new() }
+    }
+
     pub fn scalar(v: f32) -> Self {
         HostTensor { shape: vec![], data: vec![v] }
     }
@@ -98,6 +104,11 @@ impl HostTensorI32 {
 
     pub fn scalar(v: i32) -> Self {
         HostTensorI32 { shape: vec![], data: vec![v] }
+    }
+
+    /// Zero-element placeholder for `*_into` scratch buffers.
+    pub fn empty() -> Self {
+        HostTensorI32 { shape: vec![0], data: Vec::new() }
     }
 
     pub fn from_usizes(shape: Vec<usize>, xs: &[usize]) -> Self {

@@ -986,6 +986,7 @@ fn sim_manifest(prefill_limit: usize) -> Manifest {
             pallas_n: prefill_limit,
             max_gen: 16,
             block_tokens: 2,
+            shard_counts: vec![],
         },
         artifacts: BTreeMap::new(),
     }
@@ -1166,6 +1167,17 @@ fn run_stack(
     max_new: usize,
     preempt_at: usize,
 ) -> StackResult {
+    run_stack_sharded(swap_bytes, prompts, max_new, preempt_at, 1)
+}
+
+/// [`run_stack`] over a KV-head-sharded slab (`PagingConfig::shards`).
+fn run_stack_sharded(
+    swap_bytes: usize,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    preempt_at: usize,
+    shards: usize,
+) -> StackResult {
     let m = sim_meta();
     let man = sim_manifest(64);
     let policy = SimPolicy::new();
@@ -1176,6 +1188,7 @@ fn run_stack(
         block_tokens: 2,
         prefix_cache: false,
         swap_bytes,
+        shards,
         ..Default::default()
     };
     let mut pa = PagedArena::new(&m, lanes, 64, pcfg);
@@ -1935,4 +1948,409 @@ fn two_tenant_differential_quotas_stop_heavy_starving_light() {
         "every light admission under quotas beats the first one without"
     );
     assert_eq!(fair.light_deferred_rounds, 0, "no deferrals under quotas");
+}
+
+// ------------------------------------------------------------- sharding
+
+use fastkv::coordinator::decode::{shard_pin_keys, stale_shards};
+use fastkv::ShardSpec;
+
+/// Meta with 4 KV heads so S ∈ {1, 2, 4} are all valid shard counts.
+fn shard_meta() -> ModelMeta {
+    ModelMeta {
+        vocab_size: 256,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 4,
+        head_dim: 2,
+        tsp_layer: 1,
+        window: 2,
+        pool_kernel: 3,
+        max_train_len: 64,
+    }
+}
+
+#[test]
+fn shard_count_that_does_not_divide_kv_heads_is_rejected_at_config_time() {
+    // The config-time gate with the user-facing message…
+    let err = ShardSpec::new(3, 4, 2).unwrap_err();
+    assert!(err.contains("does not divide"), "{err}");
+    assert!(err.contains("kv_heads 4"), "{err}");
+    assert!(ShardSpec::new(0, 4, 2).is_err());
+    for ok in [1usize, 2, 4] {
+        assert!(ShardSpec::new(ok, 4, 2).is_ok(), "S={ok} divides 4");
+    }
+    // …and PagedArena::new enforces it for PagingConfig::shards.
+    let m = shard_meta();
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        PagedArena::new(
+            &m,
+            1,
+            8,
+            PagingConfig { shards: 3, ..Default::default() },
+        )
+    }));
+    let msg = *res
+        .expect_err("S=3 with 4 KV heads must be rejected")
+        .downcast::<String>()
+        .expect("panic carries the config error string");
+    assert!(msg.contains("invalid PagingConfig::shards"), "{msg}");
+    assert!(msg.contains("does not divide"), "{msg}");
+}
+
+/// Apply one identical mutation schedule to every arena and assert the
+/// sharded stores never drift from the unsharded baseline: same staged
+/// bytes, same pool accounting, and every shard projection reassembles
+/// bit-identically to the canonical dense slab.
+#[test]
+fn prop_sharded_store_is_bit_identical_to_unsharded() {
+    for (seed, mut rng) in cases(40) {
+        let m = shard_meta();
+        let b = rng.range(1, 3);
+        let c = rng.range(8, 20);
+        let bt = rng.range(2, 5);
+        let prefix = rng.chance(0.5);
+        let mk = |s: usize| PagingConfig {
+            block_tokens: bt,
+            prefix_cache: prefix,
+            shards: s,
+            ..Default::default()
+        };
+        let shard_counts = [1usize, 2, 4];
+        let mut arenas: Vec<PagedArena> = shard_counts
+            .iter()
+            .map(|&s| PagedArena::new(&m, b, c, mk(s)))
+            .collect();
+        let mut slots: Vec<usize> = Vec::new();
+        for step in 0..rng.range(6, 20) {
+            let op = rng.below(5);
+            match op {
+                0 | 1 => {
+                    let rc = rand_cache(
+                        &mut rng,
+                        &m,
+                        c.min(12),
+                        (seed * 1000 + step as u64) as f64,
+                    );
+                    let got: Vec<Option<usize>> = arenas
+                        .iter_mut()
+                        .map(|a| KvStore::admit(a, &rc))
+                        .collect();
+                    assert!(
+                        got.iter().all(|g| *g == got[0]),
+                        "seed {seed}: admit outcomes diverged {got:?}"
+                    );
+                    if let Some(slot) = got[0] {
+                        slots.push(slot);
+                    }
+                }
+                2 if !slots.is_empty() => {
+                    let slot = slots[rng.below(slots.len())];
+                    let stepk = rand_step(&mut rng, &m, b);
+                    let stepv = rand_step(&mut rng, &m, b);
+                    let got: Vec<AppendResult> = arenas
+                        .iter_mut()
+                        .map(|a| KvStore::append(a, slot, &stepk, &stepv))
+                        .collect();
+                    assert!(
+                        got.iter().all(|g| *g == got[0]),
+                        "seed {seed}: append outcomes diverged"
+                    );
+                }
+                3 if !slots.is_empty() => {
+                    // block-granular compaction with a shared keep-set
+                    let slot = slots[rng.below(slots.len())];
+                    let lens = arenas[0].layer_lens(slot);
+                    let keep: Vec<Vec<usize>> = lens
+                        .iter()
+                        .map(|&n| {
+                            (0..n).filter(|_| rng.chance(0.6)).collect()
+                        })
+                        .collect();
+                    let got: Vec<usize> = arenas
+                        .iter_mut()
+                        .map(|a| KvStore::compact(a, slot, &keep))
+                        .collect();
+                    assert!(
+                        got.iter().all(|g| *g == got[0]),
+                        "seed {seed}: compact released diverged {got:?}"
+                    );
+                }
+                4 if !slots.is_empty() => {
+                    // preempt-resume roundtrip through the swap arena
+                    // (the restore picks the lowest free lane, which may
+                    // differ from the preempted one — track it, and pin
+                    // that every arena picks the same lane)
+                    let idx = rng.below(slots.len());
+                    let slot = slots[idx];
+                    let handles: Vec<_> = arenas
+                        .iter_mut()
+                        .map(|a| a.swap_out(slot).expect("default budget"))
+                        .collect();
+                    let mut restored_to: Option<usize> = None;
+                    for (a, h) in arenas.iter_mut().zip(handles) {
+                        match a.swap_in(h) {
+                            SwapIn::Restored(s) => {
+                                if let Some(prev) = restored_to {
+                                    assert_eq!(
+                                        s, prev,
+                                        "seed {seed}: lane choice diverged"
+                                    );
+                                }
+                                restored_to = Some(s);
+                            }
+                            other => {
+                                panic!("seed {seed}: swap-in {other:?}")
+                            }
+                        }
+                    }
+                    slots[idx] = restored_to.expect("restored above");
+                }
+                _ if !slots.is_empty() && rng.chance(0.3) => {
+                    let slot = slots.swap_remove(rng.below(slots.len()));
+                    for a in arenas.iter_mut() {
+                        assert!(a.release(slot), "seed {seed}");
+                    }
+                }
+                _ => {}
+            }
+
+            // Differential: staged bytes + pool accounting match the
+            // unsharded baseline after every step…
+            let base = arenas[0].stage();
+            let base_ps = arenas[0].pool_stats();
+            for (i, a) in arenas.iter().enumerate().skip(1) {
+                let st = a.stage();
+                assert_eq!(st.lens.data, base.lens.data, "seed {seed}");
+                assert_eq!(st.k.data, base.k.data, "seed {seed} S={}", shard_counts[i]);
+                assert_eq!(st.v.data, base.v.data, "seed {seed} S={}", shard_counts[i]);
+                let ps = a.pool_stats();
+                assert_eq!(
+                    (ps.blocks_in_use, ps.blocks_cached, ps.blocks_free),
+                    (
+                        base_ps.blocks_in_use,
+                        base_ps.blocks_cached,
+                        base_ps.blocks_free
+                    ),
+                    "seed {seed}: pool accounting S={}",
+                    shard_counts[i]
+                );
+            }
+            // …and every arena's shard projections reassemble to its own
+            // canonical dense slab bit-identically.
+            let (base_k, base_v) = {
+                let v = arenas[0].view();
+                let (k, vv) = v.slab_tensors(v.num_blocks);
+                (k.data, vv.data)
+            };
+            for (i, a) in arenas.iter().enumerate() {
+                let view = a.view();
+                assert_eq!(view.shards, shard_counts[i]);
+                assert_eq!(view.shard_versions.len(), shard_counts[i]);
+                let (rk, rv) = view.reassembled_slab();
+                let (dk, dv) = view.slab_tensors(view.num_blocks);
+                assert_eq!(rk, dk.data, "seed {seed}: K reassembly S={}", shard_counts[i]);
+                assert_eq!(rv, dv.data, "seed {seed}: V reassembly S={}", shard_counts[i]);
+                assert_eq!(dk.data, base_k, "seed {seed}: slab vs baseline");
+                assert_eq!(dv.data, base_v, "seed {seed}: slab vs baseline");
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_stack_matches_unsharded_token_streams_and_final_kv() {
+    // Acceptance differential: identical token streams and bit-identical
+    // final KV through the full serve lifecycle (admit, decode, preempt,
+    // swap-resume, retire) for every valid shard count of the sim model
+    // (kv_heads = 2 -> S ∈ {1, 2}).
+    let prompts: Vec<Vec<i32>> =
+        vec![vec![10, 11, 12], vec![20, 21, 22, 23], vec![30, 31]];
+    let max_new = 5;
+    let base = run_stack_sharded(128 << 20, &prompts, max_new, 2, 1);
+    let sharded = run_stack_sharded(128 << 20, &prompts, max_new, 2, 2);
+    for id in 0..prompts.len() as u64 {
+        assert_eq!(
+            base.streams[&id], sharded.streams[&id],
+            "token stream diverged for request {id} under S=2"
+        );
+        assert_eq!(
+            base.final_rows[&id], sharded.final_rows[&id],
+            "final KV diverged for request {id} under S=2"
+        );
+    }
+    assert_eq!(base.policy_calls, sharded.policy_calls);
+}
+
+#[test]
+fn single_shard_mutation_marks_only_that_shard_stale() {
+    // The upload-amplification acceptance property at the store level: a
+    // whole-row append dirties every shard; a head-local mutation marks
+    // exactly one shard for re-upload (the decode planner and the bench
+    // judge staleness through the same `stale_shards` helper).
+    let m = shard_meta();
+    let cfg = PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        shards: 4,
+        ..Default::default()
+    };
+    let mut pa = PagedArena::new(&m, 1, 8, cfg);
+    let rc = rand_cache(&mut Rng::new(7), &m, 6, 3.0);
+    let slot = KvStore::admit(&mut pa, &rc).unwrap();
+    let mut mirror: HashMap<String, u64> = HashMap::new();
+    let mut sync = |pa: &PagedArena, mirror: &mut HashMap<String, u64>| {
+        let view = pa.view();
+        let keys = shard_pin_keys(&view);
+        let stale =
+            stale_shards(&view, &keys, &|k, v| mirror.get(k).copied() == Some(v));
+        for &s in &stale {
+            mirror.insert(keys[s].0.clone(), view.shard_versions[s]);
+            mirror.insert(keys[s].1.clone(), view.shard_versions[s]);
+        }
+        stale
+    };
+    assert_eq!(sync(&pa, &mut mirror), vec![0, 1, 2, 3], "cold start");
+    assert_eq!(sync(&pa, &mut mirror), Vec::<usize>::new(), "all current");
+
+    // whole-row append: every shard re-uploads
+    let step = rand_step(&mut Rng::new(8), &m, 1);
+    assert_eq!(KvStore::append(&mut pa, slot, &step, &step), AppendResult::Ok);
+    assert_eq!(sync(&pa, &mut mirror), vec![0, 1, 2, 3], "append dirties all");
+
+    // head-local mutation: exactly one shard re-uploads
+    let srw = pa.shard_spec().shard_row_elems();
+    assert!(pa.mutate_shard_row(slot, 0, 0, 2, &vec![9.5; srw], &vec![-9.5; srw]));
+    assert_eq!(sync(&pa, &mut mirror), vec![2], "locality: only shard 2");
+
+    // the mutation landed in the canonical slab too: row 0 of layer 0 of
+    // the (only) lane sits at the start of the staged K plane
+    let st = pa.stage();
+    let re = pa.row_elems();
+    let row0 = &st.k.data[..re];
+    assert_eq!(&row0[2 * srw..3 * srw], &vec![9.5; srw][..]);
+}
+
+#[test]
+fn swap_half_roundtrip_within_tolerance_and_halves_budget_pressure() {
+    let m = shard_meta();
+    let mk = |half: bool| PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_half: half,
+        ..Default::default()
+    };
+    // Baseline lane: the exact f32 path for byte comparison.
+    let rc = rand_cache(&mut Rng::new(42), &m, 10, 5.0);
+    let elems: usize = rc.lens.iter().sum::<usize>() * rc.row_elems() * 2;
+
+    let mut full = PagedArena::new(&m, 1, 12, mk(false));
+    let slot = KvStore::admit(&mut full, &rc).unwrap();
+    let before = lane_rows(&full, slot, m.n_layers);
+    let h = full.swap_out(slot).unwrap();
+    assert_eq!(full.swap_stats().used_bytes, elems * 4, "f32 bytes");
+    assert!(matches!(full.swap_in(h), SwapIn::Restored(_)));
+    assert_eq!(
+        lane_rows(&full, slot, m.n_layers),
+        before,
+        "f32 swap stays bit-identical"
+    );
+
+    let mut half = PagedArena::new(&m, 1, 12, mk(true));
+    let slot = KvStore::admit(&mut half, &rc).unwrap();
+    let before = lane_rows(&half, slot, m.n_layers);
+    let h = half.swap_out(slot).unwrap();
+    // swap_bytes_used reflects the ENCODED size: half the f32 payload.
+    assert_eq!(half.swap_stats().used_bytes, elems * 2, "f16 bytes");
+    assert!(matches!(half.swap_in(h), SwapIn::Restored(_)));
+    let after = lane_rows(&half, slot, m.n_layers);
+    let mut max_rel = 0f32;
+    for (b_l, a_l) in before.iter().zip(&after) {
+        assert_eq!(b_l.len(), a_l.len());
+        for (b, a) in b_l.iter().zip(a_l) {
+            let tol = b.abs() * (2.0f32).powi(-11) + 1e-6;
+            assert!(
+                (a - b).abs() <= tol,
+                "f16 restore error {} > tol {tol} ({b} -> {a})",
+                (a - b).abs()
+            );
+            if b.abs() > 1e-3 {
+                max_rel = max_rel.max((a - b).abs() / b.abs());
+            }
+        }
+    }
+    assert!(max_rel > 0.0, "rows large enough that f16 actually rounds");
+
+    // A tiny budget that fits the f16 lane but not the f32 lane: the
+    // codec is what makes the swap admissible at all.
+    let tiny = PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes: elems * 2 + 16,
+        swap_half: true,
+        ..Default::default()
+    };
+    let mut pa = PagedArena::new(&m, 1, 12, tiny);
+    let slot = KvStore::admit(&mut pa, &rc).unwrap();
+    assert!(pa.swap_out(slot).is_some(), "encoded lane fits the budget");
+}
+
+#[test]
+fn lossy_swap_never_reregisters_preserved_hashes() {
+    // An f16 restore writes *approximations* of the serialized rows: the
+    // preserved chain hashes must not be re-registered for those fresh
+    // blocks, or the prefix cache would alias lossy content to the exact
+    // chain and hand it to future admissions.
+    let m = shard_meta();
+    // pool of exactly 12 blocks: rc takes 4, the filler takes all 12
+    // (evicting rc's parked blocks and unregistering their hashes).
+    let cfg = PagingConfig {
+        block_tokens: 2,
+        num_blocks: Some(12),
+        prefix_cache: true,
+        swap_half: true,
+        ..Default::default()
+    };
+    let mut pa = PagedArena::new(&m, 2, 12, cfg);
+    let re = m.n_kv_heads * m.head_dim;
+    let mut rc = RequestCache::new(&m);
+    for l in 0..m.n_layers {
+        // 1/3 is NOT f16-representable: any lossy re-share would be
+        // detectable as bit drift on a later exact admission.
+        rc.k[l] = (0..4 * re).map(|i| (i as f32 + 1.0) / 3.0).collect();
+        rc.v[l] = (0..4 * re).map(|i| -(i as f32 + 1.0) / 3.0).collect();
+        rc.lens[l] = 4;
+    }
+    let slot = KvStore::admit(&mut pa, &rc).unwrap();
+    let h = pa.swap_out(slot).unwrap();
+    assert_eq!(pa.pool_stats().blocks_cached, 4, "rc parked for reuse");
+    // Fill the whole pool with distinct content so every one of rc's
+    // cached blocks is evicted: the restore can only write fresh
+    // (lossy) blocks.
+    let mut filler = RequestCache::new(&m);
+    for l in 0..m.n_layers {
+        filler.k[l] = (0..12 * re).map(|i| 500.0 + (l * 977 + i) as f32).collect();
+        filler.v[l] = (0..12 * re).map(|i| -(500.0 + (l * 977 + i) as f32)).collect();
+        filler.lens[l] = 12;
+    }
+    let fs = KvStore::admit(&mut pa, &filler).expect("filler fills the pool");
+    assert_eq!(pa.pool_stats().blocks_cached, 0, "rc's blocks evicted");
+    assert!(pa.release(fs));
+    let restored = match pa.swap_in(h) {
+        SwapIn::Restored(s) => s,
+        other => panic!("expected restore, got {other:?}"),
+    };
+    // the restored lane's rows are the f16 approximations…
+    let lossy = lane_rows(&pa, restored, m.n_layers);
+    assert_ne!(&lossy[0][..re], &rc.k[0][..re], "restore really is lossy");
+    // …and a fresh exact admission of the same content must NOT share
+    // those blocks — bit-exact rows prove the hashes stayed unregistered.
+    let s2 = KvStore::admit(&mut pa, &rc).expect("pool has headroom");
+    let rows = lane_rows(&pa, s2, m.n_layers);
+    for (l, row) in rows.iter().enumerate() {
+        let mut expect = rc.k[l].clone();
+        expect.extend(rc.v[l].iter().copied());
+        assert_eq!(row, &expect, "layer {l}: exact admission stayed exact");
+    }
 }
