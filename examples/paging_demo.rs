@@ -25,7 +25,7 @@ use fastkv::coordinator::paging::{
 };
 use fastkv::coordinator::scheduler::{Action, AdmitOrder, Scheduler};
 use fastkv::manifest::ModelMeta;
-use fastkv::metrics::Metrics;
+use fastkv::metrics::{names, Metrics};
 use fastkv::tensor::HostTensor;
 use fastkv::util::cli::Args;
 use fastkv::util::rng::Rng;
@@ -153,7 +153,7 @@ fn pressure_run(
                 match KvStore::admit(&mut pool, &rc) {
                     Some(slot) => active.push((id, slot, rc, want)),
                     None => {
-                        metrics.inc("admit_deferred", 1);
+                        metrics.inc(names::ADMIT_DEFERRED, 1);
                         sched.requeue_front((id, rc, want));
                     }
                 }
@@ -172,7 +172,7 @@ fn pressure_run(
                         let keep =
                             policy_cfg.compaction_keep(&lens, 0.5, m.window);
                         if KvStore::compact(&mut pool, slot, &keep) > 0 {
-                            metrics.inc("compactions", 1);
+                            metrics.inc(names::COMPACTIONS, 1);
                             res = KvStore::append(&mut pool, slot, &step, &step);
                         }
                     }
@@ -190,7 +190,7 @@ fn pressure_run(
                             // the head of the queue
                             let (id, slot, rc, want) = active.swap_remove(i);
                             assert!(pool.release(slot));
-                            metrics.inc("preempted", 1);
+                            metrics.inc(names::PREEMPTED, 1);
                             sched.requeue_front((id, rc, want));
                         }
                     }
@@ -218,9 +218,9 @@ fn pressure_run(
     assert_eq!(completed, requests, "every request finished");
     assert_eq!(stats.blocks_in_use, 0, "all blocks returned");
     PressureOutcome {
-        preempted: metrics.counter("preempted"),
-        deferred: metrics.counter("admit_deferred"),
-        compactions: metrics.counter("compactions"),
+        preempted: metrics.counter(names::PREEMPTED),
+        deferred: metrics.counter(names::ADMIT_DEFERRED),
+        compactions: metrics.counter(names::COMPACTIONS),
         stats,
     }
 }

@@ -4,6 +4,7 @@
 //!
 //! Run:  cargo run --release --example serve_demo -- [--clients 8]
 //!       [--len 256] [--policy fastkv] [--batch 4]
+//!       [--trace-out F.json] [--metrics-out F.json] [--metrics-every N]
 //!
 //! Multi-tenant contention: `--tenants T --quota-blocks R` serves a
 //! *weighted* workload — tenant 0 submits half the clients (the heavy
@@ -12,20 +13,31 @@
 //! `--pool-blocks` to make the pool tight enough that the quota matters;
 //! per-tenant completions / preemptions / block charges are reported at
 //! the end.
+//!
+//! Observability smoke mode (no compiled artifacts needed — what CI
+//! runs): `--sim` drives the real admit / preempt / swap-resume /
+//! finish machinery with a synthetic policy and decode loop, tracing
+//! enabled, then writes the JSON metrics snapshot
+//! (`BENCH_serve_trace.json` + `.prom` sibling) and the Chrome trace,
+//! validates every request's lifecycle ordering, and asserts the phase
+//! histograms are non-empty.
 
 use anyhow::Result;
 use fastkv::coordinator::policies::PolicyCfg;
-use fastkv::metrics::names;
 use fastkv::coordinator::scheduler::AdmitOrder;
 use fastkv::coordinator::server::{Server, ServerConfig};
+use fastkv::metrics::names;
 use fastkv::tokenizer::Tokenizer;
 use fastkv::util::cli::Args;
 use fastkv::util::rng::Rng;
 use fastkv::workload;
-use fastkv::{TenantId, TenantQuota};
+use fastkv::{ObsConfig, TenantId, TenantQuota};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    if args.has("sim") {
+        return sim::run(&args);
+    }
     let dir = fastkv::Manifest::default_dir();
     let man = fastkv::Manifest::load(&dir)?;
     let policy = args.str_or("policy", "fastkv").to_string();
@@ -55,6 +67,19 @@ fn main() -> Result<()> {
             .map(|t| (TenantId(t), TenantQuota::reserved(quota_blocks)))
             .collect();
     }
+    // Observability: --trace-out implies tracing on; --metrics-out adds
+    // the JSON snapshot (+ Prometheus sibling), re-exported every
+    // --metrics-every serve-loop iterations and on shutdown.
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let default_events = if trace_out.is_some() { 65536 } else { 0 };
+    let obs = ObsConfig {
+        trace_events: args.usize("trace-events", default_events),
+        trace_out,
+        metrics_out: args
+            .get("metrics-out")
+            .map(std::path::PathBuf::from),
+        export_every: args.usize("metrics-every", 0),
+    };
     let cfg = ServerConfig {
         artifact_dir: dir,
         policy: policy.clone(),
@@ -64,6 +89,7 @@ fn main() -> Result<()> {
         max_prompt: len,
         order: AdmitOrder::Fcfs,
         paging: Some(paging),
+        obs,
     };
     println!("starting server: policy={policy} batch={} len={len}", cfg.decode_batch);
     let server = Server::spawn(cfg)?;
@@ -112,14 +138,16 @@ fn main() -> Result<()> {
     println!("\n{n_clients} requests in {wall:.2}s  \
               ({:.1} tok/s out, {correct}/{n_clients} answers correct)",
              total_tokens as f64 / wall);
+    // Join the serving thread so the shutdown export has flushed.
+    drop(server);
     println!(
         "\nblock pool: peak {}/{} blocks in use, prefix hit rate {:.1}%, \
          {} preempted, {} compactions",
-        handle.metrics.gauge("pool_blocks_in_use_peak"),
-        handle.metrics.gauge("pool_blocks_total"),
-        100.0 * handle.metrics.gauge("pool_prefix_hit_rate"),
-        handle.metrics.counter("preempted"),
-        handle.metrics.counter("compactions"),
+        handle.metrics.gauge(names::POOL_BLOCKS_IN_USE_PEAK),
+        handle.metrics.gauge(names::POOL_BLOCKS_TOTAL),
+        100.0 * handle.metrics.gauge(names::POOL_PREFIX_HIT_RATE),
+        handle.metrics.counter(names::PREEMPTED),
+        handle.metrics.counter(names::COMPACTIONS),
     );
     println!(
         "swap: {} out / {} in, {} recompute fallbacks, {} prefills \
@@ -150,5 +178,469 @@ fn main() -> Result<()> {
         }
     }
     println!("\nserver metrics:\n{}", handle.metrics.report());
+    let flights = fastkv::obs::flight_text(handle.metrics.tracer());
+    if !flights.is_empty() {
+        println!("flight recorder:\n{flights}");
+    }
     Ok(())
+}
+
+/// Artifact-free observability smoke: the same sim harness idiom as
+/// `rust/tests/paging.rs` (synthetic policy + deterministic decode rows)
+/// driven through the REAL serving functions — `admit`, `preempt`
+/// (swap-to-host), `try_resume`, `finish`, `reject`, `advance_lane` —
+/// with lifecycle tracing on.
+mod sim {
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use anyhow::Result;
+    use fastkv::coordinator::decode::{advance_lane, LaneAdvance};
+    use fastkv::coordinator::kvcache::RequestCache;
+    use fastkv::coordinator::paging::KvStore;
+    use fastkv::coordinator::policies::{
+        Exec, Policy, PolicyCfg, PrefillOutcome,
+    };
+    use fastkv::coordinator::scheduler::{AdmitOrder, Scheduler};
+    use fastkv::coordinator::server::{
+        admit, finish, preempt, reject, try_resume, Active, AdmitFail,
+        Request, Resume, ServerConfig,
+    };
+    use fastkv::manifest::{Buckets, Manifest, ModelMeta};
+    use fastkv::metrics::{names, Metrics};
+    use fastkv::obs::trace::{validate_lifecycle, EventKind, NO_LANE};
+    use fastkv::runtime::outputs::DecodeOut;
+    use fastkv::tensor::HostTensor;
+    use fastkv::util::cli::Args;
+    use fastkv::util::rng::Rng;
+    use fastkv::{PagedArena, PagingConfig, TenantId};
+
+    fn sim_meta() -> ModelMeta {
+        ModelMeta {
+            vocab_size: 256,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 2,
+            head_dim: 2,
+            tsp_layer: 1,
+            window: 2,
+            pool_kernel: 3,
+            max_train_len: 64,
+        }
+    }
+
+    fn sim_manifest(limit: usize) -> Manifest {
+        Manifest {
+            dir: std::path::PathBuf::from("/tmp"),
+            model: sim_meta(),
+            n_params: 1,
+            kernel: "jnp".into(),
+            buckets: Buckets {
+                prefill_ns: vec![limit],
+                stage1_ns: vec![limit],
+                stage2_ns: vec![limit],
+                pyramid_ns: vec![limit],
+                decode_batches: vec![1, 2, 4],
+                decode_caps: vec![64],
+                sweep_n: 64,
+                sweep_nt: 16,
+                pallas_n: limit,
+                max_gen: 16,
+                block_tokens: 2,
+                shard_counts: vec![],
+            },
+            artifacts: std::collections::BTreeMap::new(),
+        }
+    }
+
+    /// Deterministic KV row for (layer, position, token) — shared by the
+    /// sim prefill and the sim decode loop.
+    fn sim_kv_row(l: usize, pos: usize, token: i32, re: usize) -> Vec<f32> {
+        (0..re)
+            .map(|i| {
+                (l as f32) * 1000.0
+                    + (pos as f32) * 10.0
+                    + (token as f32) * 0.125
+                    + (i as f32) * 0.0625
+            })
+            .collect()
+    }
+
+    /// Deterministic next token from the full sequence (never END, so
+    /// requests run to `max_new`).
+    fn sim_next_token(seq: &[i32]) -> i32 {
+        let mut h = 0xcbf29ce484222325u64;
+        for &t in seq {
+            h ^= t as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        4 + (h % 200) as i32
+    }
+
+    /// Stand-in policy: prefill materializes exactly the KV rows the sim
+    /// decode loop would have appended for the sequence.
+    struct SimPolicy {
+        calls: AtomicUsize,
+    }
+
+    impl Policy for SimPolicy {
+        fn name(&self) -> &'static str {
+            "sim"
+        }
+
+        fn prefill(
+            &self,
+            _ex: &dyn Exec,
+            man: &Manifest,
+            tokens: &[i32],
+            _cfg: &PolicyCfg,
+        ) -> anyhow::Result<PrefillOutcome> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            let m = &man.model;
+            let re = m.n_kv_heads * m.head_dim;
+            let mut cache = RequestCache::new(m);
+            for l in 0..m.n_layers {
+                let mut k = Vec::with_capacity(tokens.len() * re);
+                for (pos, &t) in tokens.iter().enumerate() {
+                    k.extend_from_slice(&sim_kv_row(l, pos, t, re));
+                }
+                cache.v[l] = k.iter().map(|x| -x).collect();
+                cache.k[l] = k;
+                cache.lens[l] = tokens.len();
+            }
+            Ok(PrefillOutcome {
+                first_token: sim_next_token(tokens),
+                cache,
+                next_pos: tokens.len(),
+                final_h: Vec::new(),
+                compute_tokens: tokens.len() * m.n_layers,
+            })
+        }
+    }
+
+    /// Executor stub: the sim policy never runs artifacts.
+    struct NoExec;
+
+    impl Exec for NoExec {
+        fn run(
+            &self,
+            _name: &str,
+            _inputs: Vec<fastkv::runtime::In>,
+        ) -> anyhow::Result<Vec<HostTensor>> {
+            anyhow::bail!("sim mode never executes artifacts")
+        }
+    }
+
+    /// One synthetic decode round over the active lanes through the real
+    /// `advance_lane` + `Active::apply`, timed as a decode step.
+    fn decode_round(
+        pa: &mut PagedArena,
+        active: &mut [Active],
+        prompts: &HashMap<u64, Vec<i32>>,
+        metrics: &Metrics,
+    ) {
+        let m = sim_meta();
+        let re = m.n_kv_heads * m.head_dim;
+        let b = KvStore::slots(pa);
+        let t0 = std::time::Instant::now();
+        for a in active.iter_mut() {
+            if a.is_done() {
+                continue;
+            }
+            let mut k_new = HostTensor::zeros(vec![
+                m.n_layers,
+                b,
+                m.n_kv_heads,
+                m.head_dim,
+            ]);
+            let mut v_new = k_new.clone();
+            for l in 0..m.n_layers {
+                let row = sim_kv_row(l, a.pos(), a.cur(), re);
+                let base = (l * b + a.slot()) * re;
+                k_new.data[base..base + re].copy_from_slice(&row);
+                for (i, x) in row.iter().enumerate() {
+                    v_new.data[base + i] = -x;
+                }
+            }
+            let mut seq = prompts[&a.request_id()].clone();
+            seq.extend_from_slice(a.tokens());
+            let next = sim_next_token(&seq);
+            let mut logits = HostTensor::zeros(vec![b, m.vocab_size]);
+            logits.data[a.slot() * m.vocab_size + next as usize] = 1.0;
+            let out = DecodeOut { logits, k_new, v_new };
+            let adv = advance_lane(pa, a.slot(), &out, None);
+            assert!(
+                matches!(adv, LaneAdvance::Next { .. }),
+                "sim decode hit {adv:?}"
+            );
+            metrics.tracer().record(
+                a.request_id(),
+                a.tenant(),
+                a.slot() as i32,
+                EventKind::DecodeStep {
+                    step: a.pos() as u32,
+                    tokens_out: a.tokens().len() as u32,
+                },
+            );
+            a.apply(adv);
+        }
+        metrics
+            .observe(names::DECODE_STEP_SECS, t0.elapsed().as_secs_f64());
+    }
+
+    pub fn run(args: &Args) -> Result<()> {
+        let n = args.usize("clients", 6);
+        let len = args.usize("len", 24);
+        let max_new = args.usize("gen", 8);
+        let preempt_at = args.usize("preempt-at", 3);
+        let lanes = args.usize("batch", 2);
+        let metrics_out = std::path::PathBuf::from(
+            args.str_or("metrics-out", "BENCH_serve_trace.json"),
+        );
+        let trace_out = std::path::PathBuf::from(
+            args.str_or("trace-out", "BENCH_serve_chrome.json"),
+        );
+
+        let man = sim_manifest(64);
+        let m = sim_meta();
+        let policy = SimPolicy { calls: AtomicUsize::new(0) };
+        let metrics = Metrics::default();
+        metrics.tracer().enable(args.usize("trace-events", 4096));
+        let cfg = ServerConfig {
+            artifact_dir: std::path::PathBuf::from("/tmp"),
+            policy: "sim".into(),
+            policy_cfg: PolicyCfg {
+                kv_rate: 1.0,
+                tsp_rate: 1.0,
+                sinks: 1,
+                filter_layer: 0,
+                use_pallas: false,
+            },
+            decode_batch: lanes,
+            max_new,
+            max_prompt: 32,
+            order: AdmitOrder::Fcfs,
+            paging: Some(PagingConfig::default()),
+            obs: Default::default(),
+        };
+        let pcfg = PagingConfig {
+            block_tokens: 2,
+            prefix_cache: false,
+            swap_bytes: 1 << 20,
+            ..Default::default()
+        };
+        let mut pa = PagedArena::new(&m, lanes, 64, pcfg);
+        let mut sched: Scheduler<Request> =
+            Scheduler::new(lanes, AdmitOrder::Fcfs);
+        let tracer = metrics.tracer();
+
+        // Submit n requests under two tenants, plus one oversized request
+        // that must be rejected (exercises the flight recorder).
+        let mut prompts: HashMap<u64, Vec<i32>> = HashMap::new();
+        let mut rxs = Vec::new();
+        let mut ids = Vec::new();
+        for i in 0..n as u64 {
+            let mut rng = Rng::new(9000 + i);
+            let p: Vec<i32> =
+                (0..len).map(|_| 4 + rng.below(200) as i32).collect();
+            let tenant = TenantId((i % 2) as u32);
+            let (req, rx) =
+                Request::synthetic_for(i, p.clone(), max_new, tenant);
+            tracer.record(
+                i,
+                tenant,
+                NO_LANE,
+                EventKind::Submit { prompt_tokens: p.len() as u32 },
+            );
+            prompts.insert(i, p);
+            rxs.push(rx);
+            ids.push(i);
+            sched.enqueue(req);
+        }
+        let reject_id = n as u64;
+        let (big, big_rx) = Request::synthetic(
+            reject_id,
+            vec![5; cfg.max_prompt + 1],
+            max_new,
+        );
+        tracer.record(
+            reject_id,
+            TenantId::DEFAULT,
+            NO_LANE,
+            EventKind::Submit {
+                prompt_tokens: (cfg.max_prompt + 1) as u32,
+            },
+        );
+        sched.enqueue(big);
+
+        let mut active: Vec<Active> = Vec::new();
+        let mut preempted_once = vec![false; n];
+        let mut done = 0usize;
+        let mut guard = 0;
+        while done < n + 1 {
+            guard += 1;
+            assert!(guard < 10_000, "sim serve loop livelocked");
+            // admission / resume phase (lane-limited, so requests queue)
+            while active.len() < lanes && sched.queue_len() > 0 {
+                let req = sched.pop_next(|r| r.prompt.len()).unwrap();
+                match try_resume(req, &mut pa, &metrics) {
+                    Resume::Restored(a) => active.push(a),
+                    Resume::Busy(req) => {
+                        sched.requeue_front(req);
+                        break;
+                    }
+                    Resume::Recompute(req) => {
+                        match admit(
+                            &NoExec, &man, &policy, &cfg, req, &mut pa,
+                            &metrics,
+                        ) {
+                            Ok(a) => active.push(a),
+                            Err(AdmitFail::Defer(req)) => {
+                                sched.requeue_front(req);
+                                break;
+                            }
+                            Err(AdmitFail::Reject(req, e)) => {
+                                reject(
+                                    req,
+                                    &mut pa,
+                                    &metrics,
+                                    format!("{e:#}"),
+                                );
+                                done += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            decode_round(&mut pa, &mut active, &prompts, &metrics);
+            // retire through the real finish (releases the lane, sends
+            // the response, observes TTFT/e2e)
+            let mut j = 0;
+            while j < active.len() {
+                if active[j].is_done()
+                    || active[j].tokens().len() >= max_new
+                {
+                    let a = active.remove(j);
+                    finish(a, &mut pa, &metrics);
+                    done += 1;
+                } else {
+                    j += 1;
+                }
+            }
+            // token-progress preemption trigger, once per request
+            let mut j = 0;
+            while j < active.len() {
+                let id = active[j].request_id() as usize;
+                if id < n
+                    && !preempted_once[id]
+                    && active[j].tokens().len() >= preempt_at
+                {
+                    preempted_once[id] = true;
+                    preempt(&mut active, j, &mut pa, &mut sched, &metrics);
+                } else {
+                    j += 1;
+                }
+            }
+        }
+
+        // Every normal request completed with tokens and a measured TTFT;
+        // the oversized one was rejected without a fake TTFT.
+        for rx in rxs {
+            let resp = rx.recv()?;
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert_eq!(resp.tokens.len(), max_new);
+            assert!(resp.ttft_secs.is_some(), "completed without TTFT");
+        }
+        let rejected = big_rx.recv()?;
+        assert!(rejected.error.is_some(), "oversized request not rejected");
+        assert!(rejected.ttft_secs.is_none(), "reject invented a TTFT");
+
+        // Lifecycle-ordering invariant over every traced request.
+        for &id in ids.iter().chain([&reject_id]) {
+            let evs = tracer.events_for(id, usize::MAX);
+            assert!(!evs.is_empty(), "request {id} left no events");
+            if let Err(e) = validate_lifecycle(&evs) {
+                panic!("request {id} lifecycle violated: {e}\n{evs:#?}");
+            }
+        }
+
+        // Phase timings present and non-empty — the CI smoke assertion.
+        for h in [
+            names::QUEUE_WAIT_SECS,
+            names::PREFILL_SECS,
+            names::DECODE_STEP_SECS,
+            names::SWAP_OUT_SECS,
+            names::SWAP_IN_SECS,
+            names::TTFT_SECS,
+            names::E2E_SECS,
+        ] {
+            assert!(
+                metrics.histogram(h).count() > 0,
+                "phase histogram {h} is empty"
+            );
+        }
+        assert!(
+            metrics.counter(names::SWAP_OUTS) > 0
+                && metrics.counter(names::SWAP_INS) > 0,
+            "sim run exercised no swap-out/swap-in"
+        );
+        // The reject filed a flight-recorder incident carrying history.
+        let incidents = tracer.incidents();
+        assert!(
+            incidents
+                .iter()
+                .any(|i| i.req == reject_id && !i.history.is_empty()),
+            "reject filed no flight-recorder incident"
+        );
+
+        // Export plane: JSON snapshot (+ .prom sibling) and Chrome trace.
+        fastkv::obs::write_json_snapshot(&metrics, &metrics_out)?;
+        fastkv::obs::write_prometheus(
+            &metrics,
+            &metrics_out.with_extension("prom"),
+        )?;
+        fastkv::obs::write_chrome_trace(tracer, &trace_out)?;
+        // Round-trip check: the snapshot parses and carries the phase
+        // histograms + per-tenant series.
+        let raw = std::fs::read_to_string(&metrics_out)?;
+        let v = fastkv::util::json::Value::parse(&raw)?;
+        let hists = v.req("histograms");
+        for h in [names::QUEUE_WAIT_SECS, names::DECODE_STEP_SECS] {
+            assert!(
+                hists.req(h).req("count").as_f64().unwrap_or(0.0) > 0.0,
+                "snapshot missing phase histogram {h}"
+            );
+        }
+        assert!(
+            v.req("counters")
+                .req(&names::tenant_completed(TenantId(1)))
+                .as_f64()
+                .unwrap_or(0.0)
+                > 0.0,
+            "snapshot missing per-tenant series"
+        );
+
+        println!(
+            "sim smoke OK: {} requests ({} rejected), {} policy calls, \
+             {} swap-outs, {} trace events ({} dropped)",
+            n + 1,
+            metrics.counter(names::REJECTED),
+            policy.calls.load(Ordering::Relaxed),
+            metrics.counter(names::SWAP_OUTS),
+            tracer.len(),
+            tracer.dropped(),
+        );
+        println!("{}", metrics.report());
+        let flights = fastkv::obs::flight_text(tracer);
+        if !flights.is_empty() {
+            println!("flight recorder:\n{flights}");
+        }
+        println!(
+            "wrote {} (+ .prom) and {}",
+            metrics_out.display(),
+            trace_out.display()
+        );
+        Ok(())
+    }
 }

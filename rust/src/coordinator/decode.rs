@@ -35,6 +35,7 @@
 //! exhaustion (recording `truncated_by_capacity`), the server preempts.
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -256,6 +257,10 @@ impl DecodeBatch {
         scratch: &mut DecodeScratch,
     ) -> Result<DecodeOut> {
         let b = self.b;
+        // Phase timers: `Instant::now` reads cost no allocation, and the
+        // observes below refill existing histogram slots, so the scratch
+        // path's allocation-free contract holds with or without tracing.
+        let t_start = Instant::now();
         scratch.fill_lanes(b, lanes);
 
         // Build the view once; it decides the path and feeds the inputs.
@@ -267,9 +272,14 @@ impl DecodeBatch {
             // copy, which dwarfs the input plumbing).
             let staged = store.stage();
             if let Some(m) = metrics {
-                m.inc("decode_steps_staged", 1);
+                m.inc(names::DECODE_STEPS_STAGED, 1);
+                m.observe(
+                    names::DECODE_PREP_SECS,
+                    t_start.elapsed().as_secs_f64(),
+                );
             }
             let (toks, poss) = scratch.lane_tensors();
+            let t_exec = Instant::now();
             let out = ex.run(
                 &self.dense,
                 vec![
@@ -280,6 +290,12 @@ impl DecodeBatch {
                     staged.lens.into(),
                 ],
             )?;
+            if let Some(m) = metrics {
+                m.observe(
+                    names::DECODE_EXEC_SECS,
+                    t_exec.elapsed().as_secs_f64(),
+                );
+            }
             return Ok(DecodeOut::from_vec(out));
         }
 
@@ -295,6 +311,13 @@ impl DecodeBatch {
         // store's: a sharded store falling back to the unsharded paged
         // artifact uploads the whole slab as one legacy-keyed pair.
         scratch.ensure_pins(&view, shards);
+        let t_upload = Instant::now();
+        if let Some(m) = metrics {
+            m.observe(
+                names::DECODE_PREP_SECS,
+                (t_upload - t_start).as_secs_f64(),
+            );
+        }
 
         // Per-shard pinned-slab maintenance: only the shards whose plane
         // stamp moved since the executor last saw them are materialized
@@ -313,13 +336,18 @@ impl DecodeBatch {
                 scratch.park_shard(&view, s);
             }
         }
+        let t_exec = Instant::now();
         if let Some(m) = metrics {
             if shards > 1 {
                 m.inc(names::DECODE_STEPS_SHARDED, 1);
             } else {
-                m.inc("decode_steps_block_table", 1);
+                m.inc(names::DECODE_STEPS_BLOCK_TABLE, 1);
             }
             m.inc(names::SHARD_UPLOADS, uploads as u64);
+            m.observe(
+                names::DECODE_UPLOAD_SECS,
+                (t_exec - t_upload).as_secs_f64(),
+            );
         }
 
         let out = match ex.run_pinned_ref(name, &scratch.pins, &scratch.ins) {
@@ -344,12 +372,26 @@ impl DecodeBatch {
             }
             Err(e) => return Err(e),
         };
-
-        if shards > 1 {
-            Ok(combine_shard_outputs(out, shards))
-        } else {
-            Ok(DecodeOut::from_vec(out))
+        let t_combine = Instant::now();
+        if let Some(m) = metrics {
+            m.observe(
+                names::DECODE_EXEC_SECS,
+                (t_combine - t_exec).as_secs_f64(),
+            );
         }
+
+        let out = if shards > 1 {
+            combine_shard_outputs(out, shards)
+        } else {
+            DecodeOut::from_vec(out)
+        };
+        if let Some(m) = metrics {
+            m.observe(
+                names::DECODE_COMBINE_SECS,
+                t_combine.elapsed().as_secs_f64(),
+            );
+        }
+        Ok(out)
     }
 }
 
@@ -673,7 +715,7 @@ pub fn advance_lane(
             );
             if store.compact(slot, &keep) > 0 {
                 if let Some(m) = spec.metrics {
-                    m.inc("compactions", 1);
+                    m.inc(names::COMPACTIONS, 1);
                 }
                 res = store.append(slot, &out.k_new, &out.v_new);
             }

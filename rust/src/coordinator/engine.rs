@@ -14,7 +14,7 @@ use crate::coordinator::decode::{
 use crate::coordinator::paging::{PagedArena, PagingConfig, TenantId};
 use crate::coordinator::policies::{Exec, Policy, PolicyCfg};
 use crate::manifest::Manifest;
-use crate::metrics::Metrics;
+use crate::metrics::{names, Metrics};
 use crate::tokenizer::END;
 use crate::util::bucket_for;
 
@@ -140,7 +140,8 @@ pub fn generate(
                 // The store cannot grow this request: surface it instead
                 // of the seed's silent break.
                 stats.truncated_by_capacity = true;
-                Metrics::global().inc("decode_truncated_by_capacity", 1);
+                Metrics::global()
+                    .inc(names::DECODE_TRUNCATED_BY_CAPACITY, 1);
                 break;
             }
         }

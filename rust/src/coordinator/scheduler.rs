@@ -181,6 +181,12 @@ impl<T> Scheduler<T> {
     /// but under per-tenant quotas it is what lets a light tenant's
     /// request step past a quota-blocked heavy one at the head of the
     /// queue rather than starve behind it.
+    ///
+    /// Lifecycle tracing rides on the `ok` predicate: the serving loop's
+    /// gate closure records a `QuotaDefer` event (plus a `QuotaBlocked`
+    /// flight-recorder incident) for requests it turns down *because of
+    /// quota*, so per-request traces show why admission was skipped even
+    /// though this scheduler never touches the tracer itself.
     pub fn pop_admissible(
         &mut self,
         prompt_len: impl Fn(&T) -> usize,

@@ -77,6 +77,8 @@ use crate::coordinator::scheduler::{
 };
 use crate::manifest::Manifest;
 use crate::metrics::{names, Metrics};
+use crate::obs::trace::{EventKind, IncidentKind, ResumeMode, NO_LANE};
+use crate::obs::ObsConfig;
 use crate::runtime::outputs::DecodeOut;
 use crate::runtime::Runtime;
 use crate::tokenizer::END;
@@ -100,6 +102,9 @@ pub struct ServerConfig {
     /// KV backend: `Some(cfg)` = paged arena (the default), `None` = the
     /// flat `BatchArena` (seed behavior, for comparison).
     pub paging: Option<PagingConfig>,
+    /// Observability: lifecycle tracing and metric export (all off by
+    /// default — see [`ObsConfig`]).
+    pub obs: ObsConfig,
 }
 
 #[derive(Debug)]
@@ -202,7 +207,10 @@ impl Request {
 pub struct Response {
     pub id: u64,
     pub tokens: Vec<i32>,
-    pub ttft_secs: f64,
+    /// Time to first token. `None` when no first token was ever decoded
+    /// (the request was rejected before admission) — never a fake `0.0`,
+    /// so TTFT percentiles stay honest.
+    pub ttft_secs: Option<f64>,
     pub e2e_secs: f64,
     pub prefill_secs: f64,
     pub decode_steps: usize,
@@ -317,7 +325,10 @@ pub struct Active {
     cur: i32,
     pos: usize,
     prefill_secs: f64,
-    ttft_secs: f64,
+    /// `None` only while the request has never produced a first token
+    /// (possible on a deferred-then-finished edge); kept as an `Option`
+    /// so rejects never invent a 0.0 TTFT.
+    ttft_secs: Option<f64>,
     done: bool,
 }
 
@@ -426,7 +437,12 @@ fn serve_loop(
     }
 }
 
-fn reject(
+/// Reject a queued/parked request with an error response. Public so
+/// tests and the sim harness can drive full lifecycles. A rejected
+/// request that never decoded a first token reports `ttft_secs: None`
+/// and bumps `names::TTFT_UNMEASURED` — it must not pollute the TTFT
+/// histogram with a fake 0.0.
+pub fn reject(
     mut req: Request,
     store: &mut dyn KvStore,
     metrics: &Metrics,
@@ -436,13 +452,19 @@ fn reject(
     if let Some(sr) = req.swap.take() {
         store.swap_drop(sr.handle);
     }
-    metrics.inc("rejected", 1);
+    metrics.inc(names::REJECTED, 1);
     metrics.inc(&names::tenant_rejected(req.tenant), 1);
+    if req.first_ttft.is_none() {
+        metrics.inc(names::TTFT_UNMEASURED, 1);
+    }
+    let tracer = metrics.tracer();
+    tracer.record(req.id, req.tenant, NO_LANE, EventKind::Reject);
+    tracer.incident(IncidentKind::Reject, req.id, req.tenant);
     let tokens = std::mem::take(&mut req.resumed);
     let _ = req.reply.send(Response {
         id: req.id,
         tokens,
-        ttft_secs: req.first_ttft.unwrap_or(0.0),
+        ttft_secs: req.first_ttft,
         e2e_secs: req.submitted.elapsed().as_secs_f64(),
         prefill_secs: 0.0,
         decode_steps: 0,
@@ -517,7 +539,10 @@ fn admit_gate(
 }
 
 /// Retire a finished request: release its lane and send the response.
-fn finish(mut a: Active, store: &mut dyn KvStore, metrics: &Metrics) {
+/// Public so tests and the sim harness can drive full lifecycles. TTFT
+/// is observed only when it was actually measured (`names::
+/// TTFT_UNMEASURED` counts the remainder).
+pub fn finish(mut a: Active, store: &mut dyn KvStore, metrics: &Metrics) {
     // Defensive: a finishing request must never leak a swap entry (the
     // resume ladder clears it, but budget bytes are too precious to
     // trust that from here).
@@ -525,11 +550,21 @@ fn finish(mut a: Active, store: &mut dyn KvStore, metrics: &Metrics) {
         store.swap_drop(sr.handle);
     }
     store.release(a.slot);
-    metrics.inc("completed", 1);
+    metrics.inc(names::COMPLETED, 1);
     metrics.inc(&names::tenant_completed(a.req.tenant), 1);
-    metrics.observe("e2e_secs", a.req.submitted.elapsed().as_secs_f64());
-    metrics.observe("ttft_secs", a.ttft_secs);
-    metrics.inc("tokens_out", a.tokens.len() as u64);
+    metrics
+        .observe(names::E2E_SECS, a.req.submitted.elapsed().as_secs_f64());
+    match a.ttft_secs {
+        Some(t) => metrics.observe(names::TTFT_SECS, t),
+        None => metrics.inc(names::TTFT_UNMEASURED, 1),
+    }
+    metrics.inc(names::TOKENS_OUT, a.tokens.len() as u64);
+    metrics.tracer().record(
+        a.req.id,
+        a.req.tenant,
+        a.slot as i32,
+        EventKind::Finish { tokens_out: a.tokens.len() as u32 },
+    );
     let _ = a.req.reply.send(Response {
         id: a.req.id,
         tokens: a.tokens,
@@ -543,21 +578,22 @@ fn finish(mut a: Active, store: &mut dyn KvStore, metrics: &Metrics) {
 
 fn publish_pool_gauges(store: &dyn KvStore, metrics: &Metrics) {
     let ps = store.pool_stats();
-    metrics.set_gauge("pool_blocks_total", ps.blocks_total as f64);
-    metrics.set_gauge("pool_blocks_in_use", ps.blocks_in_use as f64);
+    metrics.set_gauge(names::POOL_BLOCKS_TOTAL, ps.blocks_total as f64);
+    metrics.set_gauge(names::POOL_BLOCKS_IN_USE, ps.blocks_in_use as f64);
     // High-water mark: the instantaneous gauge reads 0 once the pool
     // drains, so peak utilization gets its own gauge.
     let peak = metrics
-        .gauge("pool_blocks_in_use_peak")
+        .gauge(names::POOL_BLOCKS_IN_USE_PEAK)
         .max(ps.blocks_in_use as f64);
-    metrics.set_gauge("pool_blocks_in_use_peak", peak);
-    metrics.set_gauge("pool_blocks_cached", ps.blocks_cached as f64);
-    metrics.set_gauge("pool_prefix_hits", ps.prefix_hits as f64);
-    metrics.set_gauge("pool_prefix_misses", ps.prefix_misses as f64);
-    metrics.set_gauge("pool_prefix_hit_rate", ps.prefix_hit_rate());
-    metrics.set_gauge("pool_cow_copies", ps.cow_copies as f64);
-    metrics.set_gauge("pool_evictions", ps.evictions as f64);
-    metrics.set_gauge("pool_alloc_failures", ps.alloc_failures as f64);
+    metrics.set_gauge(names::POOL_BLOCKS_IN_USE_PEAK, peak);
+    metrics.set_gauge(names::POOL_BLOCKS_CACHED, ps.blocks_cached as f64);
+    metrics.set_gauge(names::POOL_PREFIX_HITS, ps.prefix_hits as f64);
+    metrics.set_gauge(names::POOL_PREFIX_MISSES, ps.prefix_misses as f64);
+    metrics.set_gauge(names::POOL_PREFIX_HIT_RATE, ps.prefix_hit_rate());
+    metrics.set_gauge(names::POOL_COW_COPIES, ps.cow_copies as f64);
+    metrics.set_gauge(names::POOL_EVICTIONS, ps.evictions as f64);
+    metrics
+        .set_gauge(names::POOL_ALLOC_FAILURES, ps.alloc_failures as f64);
     metrics.set_gauge(names::POOL_QUOTA_DENIALS, ps.quota_denials as f64);
     // Per-tenant rows: block charges reconcile with the pool gauge
     // (Σ tenant_{id}_blocks_held == pool_blocks_in_use), swap bytes with
@@ -588,6 +624,31 @@ fn publish_pool_gauges(store: &dyn KvStore, metrics: &Metrics) {
     }
 }
 
+/// Write the configured export files: the JSON metrics snapshot (with a
+/// Prometheus text sibling at `<metrics_out>.prom`) on every call, and
+/// the Chrome trace only on the final (shutdown) call — the ring keeps
+/// filling until then.
+fn export_obs(obs: &ObsConfig, metrics: &Metrics, is_final: bool) {
+    if let Some(path) = &obs.metrics_out {
+        if let Err(e) = crate::obs::write_json_snapshot(metrics, path) {
+            eprintln!("[server] metrics export failed: {e}");
+        }
+        let prom = path.with_extension("prom");
+        if let Err(e) = crate::obs::write_prometheus(metrics, &prom) {
+            eprintln!("[server] prometheus export failed: {e}");
+        }
+    }
+    if is_final {
+        if let Some(path) = &obs.trace_out {
+            if let Err(e) =
+                crate::obs::write_chrome_trace(metrics.tracer(), path)
+            {
+                eprintln!("[server] trace export failed: {e}");
+            }
+        }
+    }
+}
+
 fn serve_inner(
     cfg: &ServerConfig,
     rt: &Runtime,
@@ -595,6 +656,9 @@ fn serve_inner(
     metrics: &Metrics,
 ) -> Result<()> {
     let man = rt.manifest.clone();
+    if cfg.obs.trace_events > 0 {
+        metrics.tracer().enable(cfg.obs.trace_events);
+    }
     let policy = make_policy(&cfg.policy)?;
     // Worst-case per-layer retention for the largest admissible prompt —
     // sizes the decode capacity bucket.
@@ -625,7 +689,10 @@ fn serve_inner(
     let path = batch.path_for(store.as_ref());
     let block_table =
         matches!(path, DecodePath::BlockTable | DecodePath::Sharded);
-    metrics.set_gauge("decode_block_table", if block_table { 1.0 } else { 0.0 });
+    metrics.set_gauge(
+        names::DECODE_BLOCK_TABLE,
+        if block_table { 1.0 } else { 0.0 },
+    );
     metrics.set_gauge(
         names::DECODE_SHARDED,
         if path == DecodePath::Sharded { 1.0 } else { 0.0 },
@@ -651,6 +718,8 @@ fn serve_inner(
     // next admission attempt so the loop cannot hot-spin on
     // prefill-then-defer while the pool estimate and reality disagree.
     let mut admission_paused = false;
+    // Serve-loop iteration counter, for the periodic metrics export.
+    let mut iter: usize = 0;
 
     while !(shutdown && sched.queue_len() == 0 && active.is_empty()) {
         // Drain incoming messages (non-blocking if we have work).
@@ -674,7 +743,15 @@ fn serve_inner(
             };
             match msg {
                 Msg::Submit(r) => {
-                    metrics.inc("submitted", 1);
+                    metrics.inc(names::SUBMITTED, 1);
+                    metrics.tracer().record(
+                        r.id,
+                        r.tenant,
+                        NO_LANE,
+                        EventKind::Submit {
+                            prompt_tokens: r.prompt.len() as u32,
+                        },
+                    );
                     sched.enqueue(r);
                 }
                 Msg::Shutdown => shutdown = true,
@@ -704,7 +781,27 @@ fn serve_inner(
         } else {
             admissible = sched.pop_admissible(
                 |r| r.prompt.len(),
-                |r| admit_gate(cfg, &man, store.as_ref(), r),
+                |r| {
+                    let ok = admit_gate(cfg, &man, store.as_ref(), r);
+                    // Trace quota-blocked deferrals only (a gate miss on
+                    // raw pool pressure is the common case under load and
+                    // would flood the ring every scan).
+                    if !ok && store.tenant_over_quota(r.tenant) {
+                        let tracer = metrics.tracer();
+                        tracer.record(
+                            r.id,
+                            r.tenant,
+                            NO_LANE,
+                            EventKind::QuotaDefer,
+                        );
+                        tracer.incident(
+                            IncidentKind::QuotaBlocked,
+                            r.id,
+                            r.tenant,
+                        );
+                    }
+                    ok
+                },
             );
             admissible.is_some()
         };
@@ -745,7 +842,13 @@ fn serve_inner(
                             }
                             Some(req)
                         } else {
-                            metrics.inc("admit_deferred", 1);
+                            metrics.inc(names::ADMIT_DEFERRED, 1);
+                            metrics.tracer().record(
+                                req.id,
+                                req.tenant,
+                                NO_LANE,
+                                EventKind::AdmitDeferred,
+                            );
                             sched.requeue_front(req);
                             admission_paused = true;
                             None
@@ -764,7 +867,6 @@ fn serve_inner(
                         metrics,
                     ) {
                         Ok(a) => {
-                            metrics.observe("prefill_secs", a.prefill_secs);
                             if a.done {
                                 // Resumed request already at its token
                                 // budget (or END on the first token):
@@ -794,7 +896,13 @@ fn serve_inner(
                                         .into(),
                                 );
                             } else {
-                                metrics.inc("admit_deferred", 1);
+                                metrics.inc(names::ADMIT_DEFERRED, 1);
+                                metrics.tracer().record(
+                                    req.id,
+                                    req.tenant,
+                                    NO_LANE,
+                                    EventKind::AdmitDeferred,
+                                );
                                 sched.requeue_front(req);
                                 admission_paused = true;
                             }
@@ -893,8 +1001,16 @@ fn serve_inner(
             }
         }
         publish_pool_gauges(store.as_ref(), metrics);
-        metrics.set_gauge("resume_queue_depth", sched.resume_len() as f64);
+        metrics.set_gauge(
+            names::RESUME_QUEUE_DEPTH,
+            sched.resume_len() as f64,
+        );
+        iter += 1;
+        if cfg.obs.export_every > 0 && iter % cfg.obs.export_every == 0 {
+            export_obs(&cfg.obs, metrics, false);
+        }
     }
+    export_obs(&cfg.obs, metrics, true);
     Ok(())
 }
 
@@ -950,6 +1066,7 @@ pub fn admit(
             anyhow::anyhow!("prompt exceeds max_prompt {}", cfg.max_prompt),
         ));
     }
+    let tracer = metrics.tracer();
     let (pre, prefill_secs) = match req.pending.take() {
         // Deferred admission: the prefill already ran — only the
         // `store.admit` below is retried.
@@ -958,8 +1075,29 @@ pub fn admit(
             if req.prefilled {
                 // Recompute-resume (or a deferral that lost its carried
                 // prefill — which the carry exists to prevent): this
-                // prefill is paid-for work being re-done.
+                // prefill is paid-for work being re-done. This is the one
+                // place every recompute path funnels through (dropped
+                // handle, refused swap, busy fallback), so the resume
+                // event and its incident are recorded here.
                 metrics.inc(names::PREFILL_RECOMPUTED, 1);
+                tracer.record(
+                    req.id,
+                    req.tenant,
+                    NO_LANE,
+                    EventKind::Resume { mode: ResumeMode::Recompute },
+                );
+                tracer.incident(
+                    IncidentKind::RecomputeResume,
+                    req.id,
+                    req.tenant,
+                );
+            } else {
+                // First prefill for this request: everything since
+                // submission was queue wait.
+                metrics.observe(
+                    names::QUEUE_WAIT_SECS,
+                    req.submitted.elapsed().as_secs_f64(),
+                );
             }
             // Recompute-resume re-prefills the original prompt plus
             // everything generated before the preemption.
@@ -970,6 +1108,14 @@ pub fn admit(
                 p.extend_from_slice(&req.resumed);
                 p
             };
+            tracer.record(
+                req.id,
+                req.tenant,
+                NO_LANE,
+                EventKind::PrefillStart {
+                    tokens: full_prompt.len() as u32,
+                },
+            );
             let t0 = Instant::now();
             let pre =
                 match policy.prefill(ex, man, &full_prompt, &cfg.policy_cfg) {
@@ -977,7 +1123,17 @@ pub fn admit(
                     Err(e) => return Err(AdmitFail::Reject(req, e)),
                 };
             req.prefilled = true;
-            (pre, t0.elapsed().as_secs_f64())
+            let secs = t0.elapsed().as_secs_f64();
+            metrics.observe(names::PREFILL_SECS, secs);
+            tracer.record(
+                req.id,
+                req.tenant,
+                NO_LANE,
+                EventKind::PrefillEnd {
+                    kept_rows: pre.cache.max_len() as u32,
+                },
+            );
+            (pre, secs)
         }
     };
     let slot = match store.admit_for(&pre.cache, req.tenant) {
@@ -987,9 +1143,16 @@ pub fn admit(
             return Err(AdmitFail::Defer(req));
         }
     };
-    let ttft = req
-        .first_ttft
-        .unwrap_or_else(|| req.submitted.elapsed().as_secs_f64());
+    tracer.record(
+        req.id,
+        req.tenant,
+        slot as i32,
+        EventKind::Admit { blocks_held: store.held_blocks(slot) as u32 },
+    );
+    let ttft = Some(
+        req.first_ttft
+            .unwrap_or_else(|| req.submitted.elapsed().as_secs_f64()),
+    );
     let (tokens, done) =
         resume_admit_state(&req.resumed, pre.first_token, req.max_new);
     Ok(Active {
@@ -1020,7 +1183,7 @@ fn decode_step(
     let out = batch
         .step_scratch(rt, store, &lanes, Some(metrics), scratch)
         .context("decode step")?;
-    metrics.observe("decode_step_secs", t0.elapsed().as_secs_f64());
+    metrics.observe(names::DECODE_STEP_SECS, t0.elapsed().as_secs_f64());
     Ok(out)
 }
 
@@ -1085,22 +1248,68 @@ pub fn preempt(
         finish(a, store, metrics);
         return;
     }
-    metrics.inc("preempted", 1);
+    metrics.inc(names::PREEMPTED, 1);
     metrics.inc(&names::tenant_preempted(a.req.tenant), 1);
     let Active { mut req, slot, tokens, cur, pos, ttft_secs, .. } = a;
-    req.first_ttft = Some(ttft_secs);
+    req.first_ttft = ttft_secs;
     req.resumed = tokens;
+    let tracer = metrics.tracer();
+    // Payload computation (swap-bytes delta) is gated on `is_enabled` so
+    // the traced-off path stays a branch.
+    let traced = tracer.is_enabled();
+    let swap_before =
+        if traced { store.swap_stats().used_bytes } else { 0 };
+    let t0 = Instant::now();
     match store.swap_out(slot) {
         Some(handle) => {
             // Blocks are on host; the lane's pool blocks were released
             // by `swap_out` itself.
             metrics.inc(names::SWAP_OUTS, 1);
+            metrics
+                .observe(names::SWAP_OUT_SECS, t0.elapsed().as_secs_f64());
+            if traced {
+                tracer.record(
+                    req.id,
+                    req.tenant,
+                    slot as i32,
+                    EventKind::Preempt {
+                        mode: ResumeMode::Swap,
+                        generated: req.resumed.len() as u32,
+                    },
+                );
+                let bytes = store
+                    .swap_stats()
+                    .used_bytes
+                    .saturating_sub(swap_before);
+                tracer.record(
+                    req.id,
+                    req.tenant,
+                    NO_LANE,
+                    EventKind::SwapOut { bytes: bytes as u64 },
+                );
+            }
             req.swap = Some(SwapResume { handle, cur, pos });
         }
         None => {
             // Swap disabled or budget exhausted: recompute-resume.
             store.release(slot);
             metrics.inc(names::SWAP_REFUSED, 1);
+            if traced {
+                tracer.record(
+                    req.id,
+                    req.tenant,
+                    slot as i32,
+                    EventKind::Preempt {
+                        mode: ResumeMode::Recompute,
+                        generated: req.resumed.len() as u32,
+                    },
+                );
+                tracer.incident(
+                    IncidentKind::SwapRefused,
+                    req.id,
+                    req.tenant,
+                );
+            }
             req.swap = None;
         }
     }
@@ -1127,12 +1336,20 @@ pub fn try_resume(
     metrics: &Metrics,
 ) -> Resume {
     let Some(sr) = req.swap else { return Resume::Recompute(req) };
+    let t0 = Instant::now();
     match store.swap_in(sr.handle) {
         SwapIn::Restored(slot) => {
             metrics.inc(names::SWAP_INS, 1);
+            metrics
+                .observe(names::SWAP_IN_SECS, t0.elapsed().as_secs_f64());
+            metrics.tracer().record(
+                req.id,
+                req.tenant,
+                slot as i32,
+                EventKind::Resume { mode: ResumeMode::Swap },
+            );
             req.swap = None;
             let tokens = std::mem::take(&mut req.resumed);
-            let ttft = req.first_ttft.unwrap_or(0.0);
             // `done` is always false here: fully-generated lanes are
             // finished at preemption time, never parked (see `preempt`).
             Resume::Restored(Active {
@@ -1141,7 +1358,7 @@ pub fn try_resume(
                 cur: sr.cur,
                 pos: sr.pos,
                 prefill_secs: 0.0,
-                ttft_secs: ttft,
+                ttft_secs: req.first_ttft,
                 done: false,
                 req,
             })
@@ -1154,6 +1371,11 @@ pub fn try_resume(
         }
     }
 }
+
+/// Decode-progress events are sampled once per this many generated
+/// tokens per lane — a per-step event would hold a third of a 64k ring
+/// after one 20k-token batch.
+const DECODE_TRACE_EVERY: usize = 4;
 
 /// Apply one decode step's outputs through the shared lane stepper:
 /// append + sample per lane, compacting under pool pressure; when
@@ -1191,9 +1413,43 @@ fn apply_decode(
         let mut allow_compact = true;
         loop {
             let spec_opt = if allow_compact { Some(&spec) } else { None };
+            // Compactions happen inside `advance_lane`; diff the counter
+            // around the call to attribute them to this lane. Gated on
+            // `is_enabled` so the traced-off step adds two branches, not
+            // two registry reads.
+            let traced = metrics.tracer().is_enabled();
+            let compactions_before = if traced {
+                metrics.counter(names::COMPACTIONS)
+            } else {
+                0
+            };
             match advance_lane(store, slot, out, spec_opt) {
                 adv @ (LaneAdvance::Next { .. }
                 | LaneAdvance::CapacityStop) => {
+                    if traced {
+                        let a = &active[i];
+                        if metrics.counter(names::COMPACTIONS)
+                            > compactions_before
+                        {
+                            metrics.tracer().record(
+                                a.req.id,
+                                a.req.tenant,
+                                slot as i32,
+                                EventKind::Compact,
+                            );
+                        }
+                        if a.tokens.len() % DECODE_TRACE_EVERY == 1 {
+                            metrics.tracer().record(
+                                a.req.id,
+                                a.req.tenant,
+                                slot as i32,
+                                EventKind::DecodeStep {
+                                    step: a.pos as u32,
+                                    tokens_out: a.tokens.len() as u32,
+                                },
+                            );
+                        }
+                    }
                     active[i].apply(adv);
                     i += 1;
                     break;
@@ -1253,7 +1509,7 @@ fn apply_decode(
                             // what was generated (like a capacity stop)
                             // instead of parking a request that would end
                             // in rejection.
-                            metrics.inc("finished_on_pressure", 1);
+                            metrics.inc(names::FINISHED_ON_PRESSURE, 1);
                             active[i].done = true;
                             i += 1;
                             break;

@@ -61,6 +61,19 @@
 //! (`tenant_{id}_blocks_held`, swap bytes, preemptions, rejects) are
 //! published alongside the pool gauges — see `docs/metrics.md`.
 //!
+//! # Observability
+//!
+//! The serving stack traces every request lifecycle into a bounded ring
+//! of typed events ([`obs::TraceRecorder`], embedded in
+//! [`metrics::Metrics`]) and times each decode phase (input prep, shard
+//! upload, exec, host-side combine) into log-bucketed histograms.
+//! [`obs::export`] renders the registry as Prometheus text or a JSON
+//! snapshot and the ring as Chrome trace-event JSON; anomalies (reject,
+//! swap refusal, recompute resume, quota denial) file flight-recorder
+//! incidents carrying the request's last events. Tracing is off by
+//! default and the decode scratch path stays allocation-free either
+//! way — see `docs/observability.md`.
+//!
 //! Quick start (after `make artifacts`): see `examples/quickstart.rs`;
 //! `examples/paging_demo.rs` exercises prefix reuse and preemption without
 //! artifacts.
@@ -70,6 +83,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod manifest;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod tensor;
 pub mod tokenizer;
@@ -87,4 +101,5 @@ pub use coordinator::policies::{
     make_policy, Policy, PolicyCfg, ALL_POLICIES,
 };
 pub use manifest::Manifest;
+pub use obs::{ObsConfig, TraceRecorder};
 pub use runtime::Runtime;

@@ -73,6 +73,10 @@ fn print_help() {
          \x20           S must divide the model's kv_heads; 1 = single-slab path)\n\
          \x20          [--tenants T] [--quota-blocks R]  (T tenants round-robin by request id,\n\
          \x20           each with a reserved floor of R pool blocks; 0 = single-tenant)\n\
+         \x20          [--trace-out F.json]  (dump request lifecycles as Chrome trace JSON)\n\
+         \x20          [--trace-events N]  (ring capacity; default 65536 when --trace-out set)\n\
+         \x20          [--metrics-out F.json]  (JSON metrics snapshot + F.prom Prometheus text)\n\
+         \x20          [--metrics-every N]  (re-export every N serve-loop iterations)\n\
          \x20 overhead [--lens 256,512,1024]\n\
          \x20 info\n\
          \n\
@@ -769,6 +773,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(pc)
     };
     let tenants = args.usize("tenants", 1).max(1);
+    // Observability: --trace-out implies tracing on (--trace-events
+    // overrides the ring size); --metrics-out writes the JSON snapshot
+    // plus a `.prom` Prometheus sibling, re-exported every
+    // --metrics-every loop iterations and on shutdown.
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let default_events = if trace_out.is_some() { 65536 } else { 0 };
+    let obs = fastkv::ObsConfig {
+        trace_events: args.usize("trace-events", default_events),
+        trace_out,
+        metrics_out: args.get("metrics-out").map(std::path::PathBuf::from),
+        export_every: args.usize("metrics-every", 0),
+    };
+    let obs_paths: Vec<std::path::PathBuf> = obs
+        .metrics_out
+        .iter()
+        .flat_map(|p| [p.clone(), p.with_extension("prom")])
+        .chain(obs.trace_out.iter().cloned())
+        .collect();
     let cfg = ServerConfig {
         artifact_dir: dir,
         policy: args.str_or("policy", "fastkv").to_string(),
@@ -778,6 +800,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_prompt: len,
         order,
         paging,
+        obs,
     };
     println!(
         "serving trace: {n} reqs, {rate} req/s ({:?}), policy {}, batch {}, kv backend {}",
@@ -830,7 +853,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         tokens as f64 / wall,
         wall
     );
+    // Join the serving thread first so the shutdown export (metrics
+    // snapshot, Chrome trace) has flushed before we report.
+    drop(server);
     println!("\n{}", handle.metrics.report());
+    let flights = fastkv::obs::flight_text(handle.metrics.tracer());
+    if !flights.is_empty() {
+        println!("flight recorder:\n{flights}");
+    }
+    for p in &obs_paths {
+        if p.exists() {
+            println!("wrote {}", p.display());
+        }
+    }
     Ok(())
 }
 

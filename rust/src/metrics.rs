@@ -1,14 +1,98 @@
-//! Serving metrics: counters + latency histograms (log-bucketed), printed
-//! by the server and the bench harness.
+//! Serving metrics: counters, gauges, and log-bucketed latency
+//! histograms, printed by the server and the bench harness and exported
+//! by `obs::export` (Prometheus text / JSON snapshot).
+//!
+//! Steady-state updates are allocation-free: `inc` / `set_gauge` /
+//! `observe` look the series up by `&str` first and only allocate the
+//! owned key on the *first* touch of a new name, and [`Histogram`]
+//! stores fixed log-spaced bucket counts rather than raw samples — a
+//! million-request run has O(1) histogram memory. The exact-sample
+//! [`ExactHistogram`] survives for tests that need reference
+//! percentiles.
+//!
+//! Each [`Metrics`] also embeds a [`TraceRecorder`]
+//! ([`Metrics::tracer`]) so every serving function that already takes a
+//! metrics handle can record lifecycle trace events without a signature
+//! change; tracing is off (and free) by default.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::obs::trace::TraceRecorder;
+
 /// Metric names shared across the serving stack so producers (server),
 /// consumers (benches, demos), and assertions (tests) can never drift
 /// apart on spelling.
 pub mod names {
+    // ------------------------------------------------ request lifecycle
+    /// Requests received by the serving thread.
+    pub const SUBMITTED: &str = "submitted";
+    /// Requests retired successfully.
+    pub const COMPLETED: &str = "completed";
+    /// Requests failed permanently (cannot fit, prompt too long,
+    /// prefill error).
+    pub const REJECTED: &str = "rejected";
+    /// Admissions deferred because the pool (or a swap-in) was
+    /// momentarily full; the request retries after decode frees blocks.
+    pub const ADMIT_DEFERRED: &str = "admit_deferred";
+    /// Lanes preempted under pool pressure.
+    pub const PREEMPTED: &str = "preempted";
+    /// Lanes finished with what they had generated because nothing could
+    /// be preempted to relieve pool pressure.
+    pub const FINISHED_ON_PRESSURE: &str = "finished_on_pressure";
+    /// Tokens emitted across all completed requests.
+    pub const TOKENS_OUT: &str = "tokens_out";
+    /// Completed requests whose TTFT was never measured (finished
+    /// without ever producing a first token — e.g. rejected after
+    /// preemption). Counted here instead of polluting `ttft_secs`
+    /// with a fake 0.0 sample.
+    pub const TTFT_UNMEASURED: &str = "ttft_unmeasured";
+
+    // -------------------------------------------------- latency phases
+    /// Submit → final response, per completed request.
+    pub const E2E_SECS: &str = "e2e_secs";
+    /// Submit → first token, per completed request that produced one.
+    pub const TTFT_SECS: &str = "ttft_secs";
+    /// Submit → first prefill start (scheduler queue wait), per request.
+    pub const QUEUE_WAIT_SECS: &str = "queue_wait_secs";
+    /// Policy prefill wall time, per prefill actually run.
+    pub const PREFILL_SECS: &str = "prefill_secs";
+    /// One batched decode step, end to end.
+    pub const DECODE_STEP_SECS: &str = "decode_step_secs";
+    /// Decode-step phase: input prep (lane tensors, tables, pins).
+    pub const DECODE_PREP_SECS: &str = "decode_prep_secs";
+    /// Decode-step phase: stale shard-slab materialization for device
+    /// upload.
+    pub const DECODE_UPLOAD_SECS: &str = "decode_upload_secs";
+    /// Decode-step phase: artifact execution.
+    pub const DECODE_EXEC_SECS: &str = "decode_exec_secs";
+    /// Decode-step phase: host-side per-shard output combine.
+    pub const DECODE_COMBINE_SECS: &str = "decode_combine_secs";
+    /// Serializing one preempted lane to the host swap arena.
+    pub const SWAP_OUT_SECS: &str = "swap_out_secs";
+    /// Restoring one lane from the host swap arena.
+    pub const SWAP_IN_SECS: &str = "swap_in_secs";
+
+    // ---------------------------------------------------- decode path
+    /// Decode steps served through the dense staged bridge.
+    pub const DECODE_STEPS_STAGED: &str = "decode_steps_staged";
+    /// Decode steps served through the (unsharded) block-table path.
+    pub const DECODE_STEPS_BLOCK_TABLE: &str = "decode_steps_block_table";
+    /// Gauge (0/1): 1 = the serving loop resolved a block-table decode
+    /// path (sharded or not) at startup.
+    pub const DECODE_BLOCK_TABLE: &str = "decode_block_table";
+    /// Single-request engine generations stopped by lane/pool capacity
+    /// rather than END or `max_new` (on `Metrics::global()`).
+    pub const DECODE_TRUNCATED_BY_CAPACITY: &str =
+        "decode_truncated_by_capacity";
+    /// Block-granular compactions fired under pool pressure.
+    pub const COMPACTIONS: &str = "compactions";
+
+    // ------------------------------------------------------ scheduler
+    /// Gauge: requests parked on the scheduler queue at iteration end.
+    pub const RESUME_QUEUE_DEPTH: &str = "resume_queue_depth";
+
     /// Policy prefills re-run for a request that already completed one —
     /// recompute-resume after a lost swap handle, or a deferred admission
     /// that somehow dropped its carried prefill. The swap-to-host and
@@ -34,6 +118,29 @@ pub mod names {
     /// Gauge: entries evicted oldest-first to make room for newer
     /// swap-outs (their owners recompute-resume).
     pub const SWAP_DROPPED: &str = "swap_entries_dropped";
+
+    // ------------------------------------------------------ block pool
+    /// Gauge: blocks in the pool.
+    pub const POOL_BLOCKS_TOTAL: &str = "pool_blocks_total";
+    /// Gauge: blocks currently referenced by lanes or the prefix cache's
+    /// live sharers.
+    pub const POOL_BLOCKS_IN_USE: &str = "pool_blocks_in_use";
+    /// Gauge: high-water mark of `pool_blocks_in_use` over the run.
+    pub const POOL_BLOCKS_IN_USE_PEAK: &str = "pool_blocks_in_use_peak";
+    /// Gauge: blocks retained only by the prefix cache.
+    pub const POOL_BLOCKS_CACHED: &str = "pool_blocks_cached";
+    /// Gauge: prefix-cache hits.
+    pub const POOL_PREFIX_HITS: &str = "pool_prefix_hits";
+    /// Gauge: prefix-cache misses.
+    pub const POOL_PREFIX_MISSES: &str = "pool_prefix_misses";
+    /// Gauge: hits / (hits + misses).
+    pub const POOL_PREFIX_HIT_RATE: &str = "pool_prefix_hit_rate";
+    /// Gauge: copy-on-write block copies.
+    pub const POOL_COW_COPIES: &str = "pool_cow_copies";
+    /// Gauge: prefix-cache evictions.
+    pub const POOL_EVICTIONS: &str = "pool_evictions";
+    /// Gauge: block allocation failures (pool exhausted).
+    pub const POOL_ALLOC_FAILURES: &str = "pool_alloc_failures";
     /// Gauge: block takes refused by a tenant quota while the pool still
     /// had allocatable blocks (from `PoolStats::quota_denials`).
     pub const POOL_QUOTA_DENIALS: &str = "pool_quota_denials";
@@ -91,39 +198,155 @@ pub mod names {
     }
 }
 
-/// Log-bucketed latency histogram (microsecond resolution).
-#[derive(Debug, Clone, Default)]
+/// Fixed bucket count of [`Histogram`].
+pub const HIST_BUCKETS: usize = 64;
+
+/// Lower edge of the first log bucket: 1 µs (samples below land in
+/// bucket 0).
+const HIST_MIN: f64 = 1e-6;
+
+/// Bucket-to-bucket growth ratio (√2): 64 buckets cover 1 µs … ~36 min,
+/// with the last bucket catching everything beyond.
+const HIST_RATIO_LOG2: f64 = 0.5;
+
+/// Log-bucketed latency histogram: fixed √2-spaced buckets from 1 µs,
+/// plus exact count/sum/min/max. O(1) memory regardless of sample
+/// count; percentiles interpolate within the winning bucket (clamped to
+/// the observed min/max, so single-sample histograms report exactly).
+#[derive(Debug, Clone)]
 pub struct Histogram {
-    samples: Vec<f64>,
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+/// Index of the bucket a sample falls in.
+fn bucket_of(s: f64) -> usize {
+    if s < HIST_MIN {
+        return 0;
+    }
+    let idx = 1 + ((s / HIST_MIN).log2() / HIST_RATIO_LOG2).floor() as usize;
+    idx.min(HIST_BUCKETS - 1)
 }
 
 impl Histogram {
+    /// Upper bound (exclusive) of bucket `i`; the last bucket is
+    /// unbounded.
+    pub fn upper_bound(i: usize) -> f64 {
+        if i + 1 >= HIST_BUCKETS {
+            f64::INFINITY
+        } else {
+            HIST_MIN * (HIST_RATIO_LOG2 * i as f64).exp2()
+        }
+    }
+
+    /// Record a duration.
     pub fn record(&mut self, d: Duration) {
-        self.samples.push(d.as_secs_f64());
+        self.record_secs(d.as_secs_f64());
     }
 
+    /// Record a sample in seconds. Negative samples clamp to 0 and
+    /// non-finite samples are dropped (they would poison the sum).
     pub fn record_secs(&mut self, s: f64) {
-        self.samples.push(s);
+        if !s.is_finite() {
+            return;
+        }
+        let s = s.max(0.0);
+        self.counts[bucket_of(s)] += 1;
+        self.count += 1;
+        self.sum += s;
+        self.min = self.min.min(s);
+        self.max = self.max.max(s);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.count as usize
     }
 
+    /// Exact mean of all samples.
     pub fn mean(&self) -> f64 {
-        crate::util::mean_std(&self.samples).0
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
     }
 
+    /// Smallest sample (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest sample (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Percentile estimate: find the bucket holding the target rank and
+    /// interpolate linearly inside it, clamped to the observed min/max.
+    /// Error is bounded by the bucket width (√2 relative).
     pub fn p(&self, pct: f64) -> f64 {
-        crate::util::percentile(&self.samples, pct)
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((pct / 100.0) * self.count as f64).ceil().max(1.0)
+            as u64;
+        let target = target.min(self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen >= target {
+                let floor =
+                    if i == 0 { 0.0 } else { Histogram::upper_bound(i - 1) };
+                let lo = floor.max(self.min);
+                let hi = Histogram::upper_bound(i).min(self.max).max(lo);
+                let into = (target - (seen - c)) as f64 / c as f64;
+                return lo + (hi - lo) * into;
+            }
+        }
+        self.max()
     }
 
+    /// Sum of all samples.
     pub fn total(&self) -> f64 {
-        self.samples.iter().sum()
+        self.sum
     }
 
+    /// Per-bucket sample counts (length [`HIST_BUCKETS`]); bucket `i`
+    /// covers `[upper_bound(i-1), upper_bound(i))`.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// One-line human summary used by [`Metrics::report`].
     pub fn summary(&self) -> String {
-        if self.samples.is_empty() {
+        if self.count == 0 {
             return "n=0".into();
         }
         format!(
@@ -137,10 +360,52 @@ impl Histogram {
     }
 }
 
+/// Exact-sample histogram (the pre-bucketing implementation): stores
+/// every sample and computes nearest-rank percentiles. Unbounded memory
+/// — kept for tests that need reference percentiles to judge
+/// [`Histogram`]'s interpolation against, and for short offline runs.
+#[derive(Debug, Clone, Default)]
+pub struct ExactHistogram {
+    samples: Vec<f64>,
+}
+
+impl ExactHistogram {
+    /// Record a duration.
+    pub fn record(&mut self, d: Duration) {
+        self.samples.push(d.as_secs_f64());
+    }
+
+    /// Record a sample in seconds.
+    pub fn record_secs(&mut self, s: f64) {
+        self.samples.push(s);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Exact mean.
+    pub fn mean(&self) -> f64 {
+        crate::util::mean_std(&self.samples).0
+    }
+
+    /// Exact nearest-rank percentile.
+    pub fn p(&self, pct: f64) -> f64 {
+        crate::util::percentile(&self.samples, pct)
+    }
+
+    /// Sum of all samples.
+    pub fn total(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+}
+
 /// Shared registry for the serving stack.
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    tracer: TraceRecorder,
 }
 
 #[derive(Debug, Default)]
@@ -148,6 +413,18 @@ struct Inner {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
     histograms: BTreeMap<String, Histogram>,
+}
+
+/// Point-in-time copy of every series in a [`Metrics`] registry — the
+/// input to the `obs::export` renderers (Prometheus text, JSON).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// Monotonic counters by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Point-in-time gauges by name.
+    pub gauges: BTreeMap<String, f64>,
+    /// Latency histograms by name.
+    pub histograms: BTreeMap<String, Histogram>,
 }
 
 impl Metrics {
@@ -162,17 +439,34 @@ impl Metrics {
         GLOBAL.get_or_init(Metrics::default)
     }
 
+    /// The lifecycle trace recorder riding with this registry (disabled
+    /// until `tracer().enable(cap)`).
+    pub fn tracer(&self) -> &TraceRecorder {
+        &self.tracer
+    }
+
+    /// Add `by` to a counter. Allocation-free once the name exists.
     pub fn inc(&self, name: &str, by: u64) {
         let mut g = self.inner.lock().unwrap();
-        *g.counters.entry(name.to_string()).or_default() += by;
+        if let Some(c) = g.counters.get_mut(name) {
+            *c += by;
+        } else {
+            g.counters.insert(name.to_string(), by);
+        }
     }
 
     /// Set a point-in-time gauge (block-pool occupancy, hit rates, ...).
+    /// Allocation-free once the name exists.
     pub fn set_gauge(&self, name: &str, value: f64) {
         let mut g = self.inner.lock().unwrap();
-        g.gauges.insert(name.to_string(), value);
+        if let Some(v) = g.gauges.get_mut(name) {
+            *v = value;
+        } else {
+            g.gauges.insert(name.to_string(), value);
+        }
     }
 
+    /// Current gauge value (0 when never set).
     pub fn gauge(&self, name: &str) -> f64 {
         self.inner
             .lock()
@@ -183,14 +477,20 @@ impl Metrics {
             .unwrap_or(0.0)
     }
 
+    /// Record a histogram sample in seconds. Allocation-free once the
+    /// name exists (the histogram's buckets are fixed).
     pub fn observe(&self, name: &str, secs: f64) {
         let mut g = self.inner.lock().unwrap();
-        g.histograms
-            .entry(name.to_string())
-            .or_default()
-            .record_secs(secs);
+        if let Some(h) = g.histograms.get_mut(name) {
+            h.record_secs(secs);
+        } else {
+            let mut h = Histogram::default();
+            h.record_secs(secs);
+            g.histograms.insert(name.to_string(), h);
+        }
     }
 
+    /// Current counter value (0 when never incremented).
     pub fn counter(&self, name: &str) -> u64 {
         self.inner
             .lock()
@@ -201,6 +501,7 @@ impl Metrics {
             .unwrap_or(0)
     }
 
+    /// Copy of a histogram (empty when never observed).
     pub fn histogram(&self, name: &str) -> Histogram {
         self.inner
             .lock()
@@ -211,6 +512,17 @@ impl Metrics {
             .unwrap_or_default()
     }
 
+    /// Copy every series at once (the export plane's input; one lock).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            counters: g.counters.clone(),
+            gauges: g.gauges.clone(),
+            histograms: g.histograms.clone(),
+        }
+    }
+
+    /// Human-readable dump of every series.
     pub fn report(&self) -> String {
         let g = self.inner.lock().unwrap();
         let mut out = String::new();
@@ -274,5 +586,81 @@ mod tests {
         }
         assert!(h.p(50.0) <= h.p(95.0));
         assert!(h.p(95.0) <= h.p(99.0));
+    }
+
+    #[test]
+    fn buckets_are_monotone_and_cover() {
+        let mut prev = 0.0;
+        for i in 0..HIST_BUCKETS {
+            let b = Histogram::upper_bound(i);
+            assert!(b > prev, "bucket {i} bound {b} <= {prev}");
+            prev = b;
+        }
+        assert_eq!(Histogram::upper_bound(0), 1e-6);
+        assert!(Histogram::upper_bound(HIST_BUCKETS - 1).is_infinite());
+        // every finite sample lands in exactly one in-range bucket
+        for s in [0.0, 1e-9, 1e-6, 3.3e-4, 1.0, 17.0, 1e9] {
+            assert!(bucket_of(s) < HIST_BUCKETS);
+        }
+        // boundary: a sample exactly on a bound goes to the bucket above
+        assert_eq!(bucket_of(1e-6), 1);
+        assert!(bucket_of(0.999e-6) == 0);
+    }
+
+    #[test]
+    fn histogram_memory_is_bounded_and_stats_exact() {
+        let mut h = Histogram::default();
+        for i in 0..100_000u64 {
+            h.record_secs(1e-4 + (i % 100) as f64 * 1e-5);
+        }
+        assert_eq!(h.counts.len(), HIST_BUCKETS); // no per-sample storage
+        assert_eq!(h.count(), 100_000);
+        assert!((h.min() - 1e-4).abs() < 1e-12);
+        assert!((h.max() - (1e-4 + 99.0 * 1e-5)).abs() < 1e-12);
+        // mean/sum are exact (not bucketed)
+        let exact_mean = 1e-4 + 49.5 * 1e-5;
+        assert!((h.mean() - exact_mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucketed_percentiles_track_exact_within_bucket_error() {
+        // Log-uniform samples over 1µs..1s: the bucketed estimate must
+        // stay within one √2 bucket of the exact nearest-rank value.
+        let mut h = Histogram::default();
+        let mut e = ExactHistogram::default();
+        for i in 0..2000 {
+            let s = 1e-6 * (1.0218_f64).powi(i % 683);
+            h.record_secs(s);
+            e.record_secs(s);
+        }
+        for pct in [50.0, 90.0, 95.0, 99.0] {
+            let (a, b) = (h.p(pct), e.p(pct));
+            assert!(
+                a / b < 1.5 && b / a < 1.5,
+                "p{pct}: bucketed {a} vs exact {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_sample_percentile_is_exact() {
+        let mut h = Histogram::default();
+        h.record_secs(0.0123);
+        // min/max clamping pins every percentile to the one sample
+        assert!((h.p(50.0) - 0.0123).abs() < 1e-12);
+        assert!((h.p(99.0) - 0.0123).abs() < 1e-12);
+        assert!((h.min() - 0.0123).abs() < 1e-12);
+        assert!((h.max() - 0.0123).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_finite_samples_are_dropped() {
+        let mut h = Histogram::default();
+        h.record_secs(f64::NAN);
+        h.record_secs(f64::INFINITY);
+        assert_eq!(h.count(), 0);
+        h.record_secs(-1.0); // clamps to 0
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min(), 0.0);
     }
 }

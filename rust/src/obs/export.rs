@@ -1,0 +1,395 @@
+//! Export plane for the metrics registry and the lifecycle trace:
+//!
+//!  * [`prometheus_text`] — Prometheus text exposition (counters,
+//!    gauges, and histograms with cumulative `_bucket{le=...}` rows);
+//!  * [`json_snapshot`] — one JSON document with every counter, gauge,
+//!    histogram (count/sum/min/max/percentiles/non-empty buckets), and
+//!    the flight-recorder incidents; round-trips through
+//!    [`crate::util::json::Value::parse`];
+//!  * [`chrome_trace`] — the trace ring rendered as Chrome trace-event
+//!    JSON (open in Perfetto / `chrome://tracing`): one track per lane
+//!    plus a queue/parked track, spans per lifecycle phase, instants
+//!    for compactions, swap-outs, deferrals, and rejects.
+//!
+//! All renderers read point-in-time copies ([`crate::metrics::Metrics::
+//! snapshot`], [`TraceRecorder::snapshot`]) — they never hold the
+//! registry lock while formatting.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::metrics::{Histogram, Metrics};
+use crate::obs::trace::{Event, EventKind, ResumeMode, TraceRecorder};
+use crate::util::json::Value;
+
+/// Prometheus text exposition of every series in the registry.
+/// Histograms emit cumulative `_bucket{le="..."}` rows for non-empty
+/// buckets plus the `+Inf` catch-all, `_sum`, and `_count`.
+pub fn prometheus_text(m: &Metrics) -> String {
+    let snap = m.snapshot();
+    let mut out = String::new();
+    for (k, v) in &snap.counters {
+        out.push_str(&format!("# TYPE {k} counter\n{k} {v}\n"));
+    }
+    for (k, v) in &snap.gauges {
+        out.push_str(&format!("# TYPE {k} gauge\n{k} {v}\n"));
+    }
+    for (k, h) in &snap.histograms {
+        out.push_str(&format!("# TYPE {k} histogram\n"));
+        let mut cum = 0u64;
+        for (i, &c) in h.bucket_counts().iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            let le = Histogram::upper_bound(i);
+            if le.is_finite() {
+                out.push_str(&format!("{k}_bucket{{le=\"{le}\"}} {cum}\n"));
+            }
+        }
+        out.push_str(&format!(
+            "{k}_bucket{{le=\"+Inf\"}} {}\n{k}_sum {}\n{k}_count {}\n",
+            h.count(),
+            h.total(),
+            h.count()
+        ));
+    }
+    out
+}
+
+fn num(v: f64) -> Value {
+    Value::Num(v)
+}
+
+fn hist_json(h: &Histogram) -> Value {
+    let mut o = BTreeMap::new();
+    o.insert("count".into(), num(h.count() as f64));
+    o.insert("sum".into(), num(h.total()));
+    o.insert("min".into(), num(h.min()));
+    o.insert("max".into(), num(h.max()));
+    o.insert("mean".into(), num(h.mean()));
+    o.insert("p50".into(), num(h.p(50.0)));
+    o.insert("p95".into(), num(h.p(95.0)));
+    o.insert("p99".into(), num(h.p(99.0)));
+    let buckets: Vec<Value> = h
+        .bucket_counts()
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(i, &c)| {
+            let mut b = BTreeMap::new();
+            let le = Histogram::upper_bound(i);
+            b.insert(
+                "le".into(),
+                if le.is_finite() {
+                    num(le)
+                } else {
+                    Value::Str("+Inf".into())
+                },
+            );
+            b.insert("n".into(), num(c as f64));
+            Value::Obj(b)
+        })
+        .collect();
+    o.insert("buckets".into(), Value::Arr(buckets));
+    Value::Obj(o)
+}
+
+fn event_json(e: &Event) -> Value {
+    let mut o = BTreeMap::new();
+    o.insert("ts".into(), num(e.ts));
+    o.insert("req".into(), num(e.req as f64));
+    o.insert("tenant".into(), num(e.tenant.0 as f64));
+    o.insert("lane".into(), num(e.lane as f64));
+    o.insert("kind".into(), Value::Str(format!("{:?}", e.kind)));
+    Value::Obj(o)
+}
+
+/// JSON snapshot of the full registry: counters, gauges, histograms
+/// (with non-empty buckets), trace-ring stats, and the flight-recorder
+/// incidents. The output parses back with [`Value::parse`]; the
+/// round-trip is pinned by `tests/obs.rs`.
+pub fn json_snapshot(m: &Metrics) -> Value {
+    let snap = m.snapshot();
+    let mut root = BTreeMap::new();
+    root.insert(
+        "counters".into(),
+        Value::Obj(
+            snap.counters
+                .iter()
+                .map(|(k, &v)| (k.clone(), num(v as f64)))
+                .collect(),
+        ),
+    );
+    root.insert(
+        "gauges".into(),
+        Value::Obj(
+            snap.gauges
+                .iter()
+                .map(|(k, &v)| (k.clone(), num(v)))
+                .collect(),
+        ),
+    );
+    root.insert(
+        "histograms".into(),
+        Value::Obj(
+            snap.histograms
+                .iter()
+                .map(|(k, h)| (k.clone(), hist_json(h)))
+                .collect(),
+        ),
+    );
+    let tr = m.tracer();
+    let mut trace = BTreeMap::new();
+    trace.insert("enabled".into(), Value::Bool(tr.is_enabled()));
+    trace.insert("events".into(), num(tr.len() as f64));
+    trace.insert("dropped".into(), num(tr.dropped() as f64));
+    let incidents: Vec<Value> = tr
+        .incidents()
+        .iter()
+        .map(|inc| {
+            let mut o = BTreeMap::new();
+            o.insert("kind".into(), Value::Str(format!("{:?}", inc.kind)));
+            o.insert("req".into(), num(inc.req as f64));
+            o.insert("tenant".into(), num(inc.tenant.0 as f64));
+            o.insert("ts".into(), num(inc.ts));
+            o.insert(
+                "history".into(),
+                Value::Arr(inc.history.iter().map(event_json).collect()),
+            );
+            Value::Obj(o)
+        })
+        .collect();
+    trace.insert("incidents".into(), Value::Arr(incidents));
+    root.insert("trace".into(), Value::Obj(trace));
+    Value::Obj(root)
+}
+
+/// Write the JSON snapshot to `path`.
+pub fn write_json_snapshot(m: &Metrics, path: &Path) -> std::io::Result<()> {
+    std::fs::write(path, json_snapshot(m).to_string())
+}
+
+/// Write the Prometheus text exposition to `path`.
+pub fn write_prometheus(m: &Metrics, path: &Path) -> std::io::Result<()> {
+    std::fs::write(path, prometheus_text(m))
+}
+
+/// Track id of the queue/parked lifecycle phases (lanes use `lane + 1`).
+const TID_QUEUE: i64 = 0;
+
+fn chrome_event(
+    name: &str,
+    ph: &str,
+    ts_us: f64,
+    dur_us: Option<f64>,
+    tid: i64,
+    e: &Event,
+) -> Value {
+    let mut o = BTreeMap::new();
+    o.insert("name".into(), Value::Str(name.into()));
+    o.insert("cat".into(), Value::Str("lifecycle".into()));
+    o.insert("ph".into(), Value::Str(ph.into()));
+    o.insert("ts".into(), num(ts_us));
+    if let Some(d) = dur_us {
+        o.insert("dur".into(), num(d));
+    }
+    if ph == "i" {
+        // instant scope: thread-local tick
+        o.insert("s".into(), Value::Str("t".into()));
+    }
+    o.insert("pid".into(), num(1.0));
+    o.insert("tid".into(), num(tid as f64));
+    let mut args = BTreeMap::new();
+    args.insert("req".into(), num(e.req as f64));
+    args.insert("tenant".into(), num(e.tenant.0 as f64));
+    args.insert("detail".into(), Value::Str(format!("{:?}", e.kind)));
+    o.insert("args".into(), Value::Obj(args));
+    Value::Obj(o)
+}
+
+fn thread_meta(tid: i64, name: &str) -> Value {
+    let mut o = BTreeMap::new();
+    o.insert("name".into(), Value::Str("thread_name".into()));
+    o.insert("ph".into(), Value::Str("M".into()));
+    o.insert("pid".into(), num(1.0));
+    o.insert("tid".into(), num(tid as f64));
+    let mut args = BTreeMap::new();
+    args.insert("name".into(), Value::Str(name.into()));
+    o.insert("args".into(), Value::Obj(args));
+    Value::Obj(o)
+}
+
+/// Render the trace ring as Chrome trace-event JSON (the
+/// `{"traceEvents": [...]}` object format): per request, the lifecycle
+/// phases become `X` (complete) spans — `queued` (submit → prefill or
+/// admit), `prefill`, `decode` (admit/swap-resume → preempt/finish),
+/// `preempted` (preempt → resume/reject) — placed on one track per lane
+/// (`tid = lane + 1`) with queue-side phases on track 0; compactions,
+/// swap-outs, deferrals, decode-step samples, and rejects are instants.
+/// A span still open when the ring was snapshotted is closed at the
+/// request's last event.
+pub fn chrome_trace(rec: &TraceRecorder) -> String {
+    let events = rec.snapshot();
+    let mut by_req: BTreeMap<u64, Vec<Event>> = BTreeMap::new();
+    for e in events {
+        by_req.entry(e.req).or_default().push(e);
+    }
+    let us = |ts: f64| ts * 1e6;
+    let mut tids = std::collections::BTreeSet::new();
+    tids.insert(TID_QUEUE);
+    let mut out: Vec<Value> = Vec::new();
+    for evs in by_req.values() {
+        // one open span at a time per request: (phase name, start, tid)
+        let mut open: Option<(&'static str, f64, i64)> = None;
+        let last_ts = evs.last().map(|e| e.ts).unwrap_or(0.0);
+        for e in evs {
+            let lane_tid = if e.lane >= 0 {
+                e.lane as i64 + 1
+            } else {
+                TID_QUEUE
+            };
+            tids.insert(lane_tid);
+            let mut close = |open: &mut Option<(&'static str, f64, i64)>,
+                             out: &mut Vec<Value>,
+                             end: f64| {
+                if let Some((name, t0, tid)) = open.take() {
+                    out.push(chrome_event(
+                        name,
+                        "X",
+                        us(t0),
+                        Some(us((end - t0).max(0.0))),
+                        tid,
+                        e,
+                    ));
+                }
+            };
+            match &e.kind {
+                EventKind::Submit { .. } => {
+                    open = Some(("queued", e.ts, TID_QUEUE));
+                }
+                EventKind::PrefillStart { .. } => {
+                    close(&mut open, &mut out, e.ts);
+                    open = Some(("prefill", e.ts, TID_QUEUE));
+                }
+                EventKind::PrefillEnd { .. } => {
+                    close(&mut open, &mut out, e.ts);
+                }
+                EventKind::Admit { .. } => {
+                    close(&mut open, &mut out, e.ts);
+                    open = Some(("decode", e.ts, lane_tid));
+                }
+                EventKind::Resume { mode } => {
+                    close(&mut open, &mut out, e.ts);
+                    if *mode == ResumeMode::Swap {
+                        open = Some(("decode", e.ts, lane_tid));
+                    }
+                    // recompute resume: the prefill span follows
+                }
+                EventKind::Preempt { .. } => {
+                    close(&mut open, &mut out, e.ts);
+                    open = Some(("preempted", e.ts, TID_QUEUE));
+                }
+                EventKind::Finish { .. } => {
+                    close(&mut open, &mut out, e.ts);
+                }
+                EventKind::Reject => {
+                    close(&mut open, &mut out, e.ts);
+                    out.push(chrome_event(
+                        "reject", "i", us(e.ts), None, lane_tid, e,
+                    ));
+                }
+                EventKind::DecodeStep { .. } => {
+                    out.push(chrome_event(
+                        "decode_step",
+                        "i",
+                        us(e.ts),
+                        None,
+                        lane_tid,
+                        e,
+                    ));
+                }
+                EventKind::Compact => {
+                    out.push(chrome_event(
+                        "compact", "i", us(e.ts), None, lane_tid, e,
+                    ));
+                }
+                EventKind::SwapOut { .. } => {
+                    out.push(chrome_event(
+                        "swap_out", "i", us(e.ts), None, TID_QUEUE, e,
+                    ));
+                }
+                EventKind::QuotaDefer | EventKind::AdmitDeferred => {
+                    out.push(chrome_event(
+                        "admit_deferred",
+                        "i",
+                        us(e.ts),
+                        None,
+                        TID_QUEUE,
+                        e,
+                    ));
+                }
+            }
+        }
+        // close any span the snapshot caught mid-phase
+        if let Some((name, t0, tid)) = open.take() {
+            let e = evs.last().expect("open span implies events");
+            out.push(chrome_event(
+                name,
+                "X",
+                us(t0),
+                Some(us((last_ts - t0).max(0.0))),
+                tid,
+                e,
+            ));
+        }
+    }
+    let mut meta: Vec<Value> = tids
+        .into_iter()
+        .map(|tid| {
+            let name = if tid == TID_QUEUE {
+                "queue/parked".to_string()
+            } else {
+                format!("lane {}", tid - 1)
+            };
+            thread_meta(tid, &name)
+        })
+        .collect();
+    meta.extend(out);
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".into(), Value::Arr(meta));
+    root.insert("displayTimeUnit".into(), Value::Str("ms".into()));
+    Value::Obj(root).to_string()
+}
+
+/// Write the Chrome trace to `path`.
+pub fn write_chrome_trace(
+    rec: &TraceRecorder,
+    path: &Path,
+) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace(rec))
+}
+
+/// Human-readable flight-recorder report: one block per incident with
+/// the request's last trace events. Empty string when no incidents were
+/// filed (or tracing is off).
+pub fn flight_text(rec: &TraceRecorder) -> String {
+    let incidents = rec.incidents();
+    if incidents.is_empty() {
+        return String::new();
+    }
+    let mut out = String::new();
+    for inc in &incidents {
+        out.push_str(&format!(
+            "incident {:?} req={} tenant={} at +{:.6}s\n",
+            inc.kind, inc.req, inc.tenant, inc.ts
+        ));
+        for e in &inc.history {
+            out.push_str(&format!(
+                "  +{:.6}s lane={} {:?}\n",
+                e.ts, e.lane, e.kind
+            ));
+        }
+    }
+    out
+}

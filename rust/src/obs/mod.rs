@@ -1,0 +1,55 @@
+//! Observability: request-lifecycle tracing, phase-level timing, and
+//! the metrics export plane.
+//!
+//! The serving stack records typed [`trace::Event`]s into a bounded
+//! ring ([`trace::TraceRecorder`], embedded in every
+//! [`crate::metrics::Metrics`] registry) at each lifecycle transition —
+//! submit, quota-defer, prefill start/end, admit, per-N decode steps,
+//! compact, preempt, swap-out, resume, finish, reject — and snapshots
+//! the last few events of a request into a flight-recorder
+//! [`trace::Incident`] whenever something anomalous happens (reject,
+//! swap refusal, recompute resume, quota denial).
+//!
+//! The [`export`] module renders the registry and the ring for external
+//! consumers: Prometheus text exposition, a JSON snapshot that
+//! round-trips through [`crate::util::json::Value`], and Chrome
+//! trace-event JSON for timeline viewers.
+//!
+//! Tracing is off by default and costs one relaxed atomic load per
+//! would-be event; the decode scratch path stays allocation-free either
+//! way (events are `Copy` records written into a pre-allocated ring).
+//! See `docs/observability.md` for the event schema and phase taxonomy.
+
+pub mod export;
+pub mod trace;
+
+pub use export::{
+    chrome_trace, flight_text, json_snapshot, prometheus_text,
+    write_chrome_trace, write_json_snapshot, write_prometheus,
+};
+pub use trace::{
+    validate_lifecycle, Event, EventKind, Incident, IncidentKind,
+    ResumeMode, TraceRecorder, NO_LANE,
+};
+
+use std::path::PathBuf;
+
+/// Observability knobs on [`crate::coordinator::server::ServerConfig`].
+///
+/// Everything defaults to off: `trace_events == 0` leaves the recorder
+/// disabled (the hot path pays one atomic load per would-be event) and
+/// `None` paths skip all file output.
+#[derive(Debug, Clone, Default)]
+pub struct ObsConfig {
+    /// Ring-buffer capacity in events; `0` disables tracing entirely.
+    pub trace_events: usize,
+    /// Dump the event ring as Chrome trace-event JSON here on shutdown.
+    pub trace_out: Option<PathBuf>,
+    /// Write the JSON metrics snapshot here periodically and on
+    /// shutdown; a Prometheus text sibling with extension `.prom` is
+    /// written next to it.
+    pub metrics_out: Option<PathBuf>,
+    /// Export `metrics_out` every this many serve-loop iterations
+    /// (`0` means only on shutdown).
+    pub export_every: usize,
+}

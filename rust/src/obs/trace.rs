@@ -1,0 +1,485 @@
+//! Request-lifecycle trace recorder: a bounded ring buffer of typed,
+//! fixed-size [`Event`] records plus a flight recorder that snapshots a
+//! request's recent history on anomalies.
+//!
+//! Design constraints, in order:
+//!
+//!  1. **Free when off.** [`TraceRecorder::record`] is a single relaxed
+//!     atomic load + branch when tracing is disabled — no lock, no clock
+//!     read, no allocation. The decode hot loop records through this
+//!     path every step, so "off" must cost nothing measurable.
+//!  2. **Allocation-free when on.** `Event` is `Copy` with no heap
+//!     payload, and the ring is pre-allocated to its full capacity at
+//!     [`TraceRecorder::enable`] time; recording into it never
+//!     allocates. Only the *flight recorder* (anomalies: rejects,
+//!     swap refusals, recompute resumes, quota blocks) clones history,
+//!     and anomalies are rare by construction.
+//!  3. **Bounded.** The ring overwrites oldest-first and counts what it
+//!     dropped; the incident list keeps the newest
+//!     [`MAX_INCIDENTS`] entries.
+//!
+//! The recorder does not interpret events — [`validate_lifecycle`]
+//! checks one request's stream against the serving state machine
+//! (submit ≤ prefill ≤ admit ≤ decode ≤ finish, preempt/resume properly
+//! nested), and `obs::export` renders streams as Chrome trace JSON.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::paging::TenantId;
+
+/// Lane value for events recorded while the request holds no store slot
+/// (queued, parked, rejected before admission).
+pub const NO_LANE: i32 = -1;
+
+/// Events the flight recorder snapshots per incident (the "last K").
+pub const FLIGHT_EVENTS: usize = 32;
+
+/// Newest incidents retained by the flight recorder.
+pub const MAX_INCIDENTS: usize = 32;
+
+/// How a preempted lane will come back: restored bit-identical from the
+/// host swap arena, or by re-running the policy prefill over
+/// `prompt ++ generated` (the expensive fallback).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResumeMode {
+    /// Blocks restored from the host swap arena (zero policy work).
+    Swap,
+    /// Re-prefill of `prompt ++ generated` (paid-for work re-done).
+    Recompute,
+}
+
+/// One lifecycle transition with its typed payload. Every variant is
+/// fixed-size and heap-free so [`Event`] stays `Copy`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Request entered the scheduler queue.
+    Submit {
+        /// Prompt length in tokens.
+        prompt_tokens: u32,
+    },
+    /// The admission gate skipped this request while its tenant was over
+    /// quota (fair scanning stepped past it; it stays queued).
+    QuotaDefer,
+    /// Admission attempt deferred: the pool (or the swap-in) was
+    /// momentarily too full; the request retries after decode frees
+    /// blocks.
+    AdmitDeferred,
+    /// Policy prefill started (runs to the TSP layer, then selects).
+    PrefillStart {
+        /// Tokens fed to the prefill (`prompt ++ generated` on a
+        /// recompute-resume).
+        tokens: u32,
+    },
+    /// Policy prefill finished; the TSP-selected KV is materialized.
+    PrefillEnd {
+        /// Largest per-layer KV length retained after selection.
+        kept_rows: u32,
+    },
+    /// The store accepted the request's cache into a lane.
+    Admit {
+        /// Pool blocks the lane holds right after admission.
+        blocks_held: u32,
+    },
+    /// Sampled decode progress (recorded every N steps, not every step).
+    DecodeStep {
+        /// Absolute decode position of the lane.
+        step: u32,
+        /// Tokens generated so far.
+        tokens_out: u32,
+    },
+    /// Block-granular compaction fired on this lane under pool pressure.
+    Compact,
+    /// Lane preempted under pool pressure; `mode` says how it will
+    /// resume.
+    Preempt {
+        /// Resume path the preemption set up.
+        mode: ResumeMode,
+        /// Tokens generated before the preemption.
+        generated: u32,
+    },
+    /// The preempted lane's KV was serialized to the host swap arena.
+    SwapOut {
+        /// Host bytes the swap entry occupies.
+        bytes: u64,
+    },
+    /// A parked request came back (swap restore enters decode directly;
+    /// recompute goes back through prefill).
+    Resume {
+        /// How the request resumed.
+        mode: ResumeMode,
+    },
+    /// Request retired successfully; its lane was released.
+    Finish {
+        /// Tokens in the final response.
+        tokens_out: u32,
+    },
+    /// Request failed permanently (cannot fit, prompt too long, prefill
+    /// error).
+    Reject,
+}
+
+/// One trace record. Fixed-size and `Copy` so recording into the
+/// pre-allocated ring performs no heap allocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Seconds since the recorder was enabled (monotonic clock).
+    pub ts: f64,
+    /// Request id.
+    pub req: u64,
+    /// Tenant the request is served under.
+    pub tenant: TenantId,
+    /// Store slot the request occupied when recorded, or [`NO_LANE`].
+    pub lane: i32,
+    /// The transition and its payload.
+    pub kind: EventKind,
+}
+
+/// Anomaly class the flight recorder files an [`Incident`] under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IncidentKind {
+    /// Request rejected permanently.
+    Reject,
+    /// Preemption wanted to swap but the budget (or config) refused;
+    /// the lane fell back to recompute-resume.
+    SwapRefused,
+    /// A prefill re-ran for a request that already paid for one.
+    RecomputeResume,
+    /// Admission skipped the request while its tenant was over quota.
+    QuotaBlocked,
+}
+
+/// A flight-recorder report: the anomaly plus the request's last
+/// [`FLIGHT_EVENTS`] trace events at the moment it happened.
+#[derive(Debug, Clone)]
+pub struct Incident {
+    /// Anomaly class.
+    pub kind: IncidentKind,
+    /// Request the anomaly happened to.
+    pub req: u64,
+    /// Tenant of that request.
+    pub tenant: TenantId,
+    /// Seconds since the recorder was enabled.
+    pub ts: f64,
+    /// The request's recent events, oldest first.
+    pub history: Vec<Event>,
+}
+
+#[derive(Debug)]
+struct Ring {
+    epoch: Instant,
+    cap: usize,
+    buf: Vec<Event>,
+    /// Index of the oldest event once the ring has wrapped.
+    head: usize,
+    /// Events overwritten after the ring filled.
+    dropped: u64,
+    incidents: Vec<Incident>,
+}
+
+impl Ring {
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events oldest → newest.
+    fn ordered(&self) -> impl Iterator<Item = &Event> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+}
+
+/// Bounded ring buffer of lifecycle [`Event`]s plus the incident list.
+/// Embedded in [`crate::metrics::Metrics`] so every function that
+/// already takes a metrics handle can record events without a signature
+/// change; disabled (and free) by default.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    enabled: AtomicBool,
+    inner: Mutex<Ring>,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        TraceRecorder {
+            enabled: AtomicBool::new(false),
+            inner: Mutex::new(Ring {
+                epoch: Instant::now(),
+                cap: 0,
+                buf: Vec::new(),
+                head: 0,
+                dropped: 0,
+                incidents: Vec::new(),
+            }),
+        }
+    }
+}
+
+impl TraceRecorder {
+    /// Turn tracing on with a ring of `capacity` events, pre-allocated
+    /// here so [`TraceRecorder::record`] never allocates. Resets the
+    /// clock epoch and any previously recorded events; `capacity == 0`
+    /// leaves tracing off.
+    pub fn enable(&self, capacity: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.epoch = Instant::now();
+        g.cap = capacity;
+        g.buf = Vec::with_capacity(capacity);
+        g.head = 0;
+        g.dropped = 0;
+        g.incidents = Vec::new();
+        drop(g);
+        self.enabled.store(capacity > 0, Ordering::Release);
+    }
+
+    /// Whether [`TraceRecorder::record`] currently stores events. Callers
+    /// use this to skip *payload computation* (e.g. a swap-bytes delta);
+    /// `record` itself performs the same check.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Record one lifecycle transition. A relaxed load + branch when
+    /// tracing is off; a lock + ring write (no allocation) when on.
+    pub fn record(&self, req: u64, tenant: TenantId, lane: i32, kind: EventKind) {
+        if !self.is_enabled() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let ts = g.epoch.elapsed().as_secs_f64();
+        g.push(Event { ts, req, tenant, lane, kind });
+    }
+
+    /// Events currently in the ring (oldest first, ≤ capacity).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    /// Whether the ring holds no events.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events overwritten since the ring filled.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Copy of the ring, oldest → newest.
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.inner.lock().unwrap().ordered().copied().collect()
+    }
+
+    /// The last `k` events recorded for request `req`, oldest first.
+    pub fn events_for(&self, req: u64, k: usize) -> Vec<Event> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<Event> =
+            g.ordered().filter(|e| e.req == req).copied().collect();
+        if out.len() > k {
+            out.drain(..out.len() - k);
+        }
+        out
+    }
+
+    /// Flight-recorder hook: file an incident carrying the request's
+    /// last [`FLIGHT_EVENTS`] events. No-op when tracing is off; keeps
+    /// the newest [`MAX_INCIDENTS`] incidents. A repeat of the newest
+    /// incident's `(kind, req)` is absorbed — a quota-blocked request is
+    /// re-judged every admission scan, and one report per episode is
+    /// what a human wants to read.
+    pub fn incident(&self, kind: IncidentKind, req: u64, tenant: TenantId) {
+        if !self.is_enabled() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.incidents.last().is_some_and(|l| l.kind == kind && l.req == req)
+        {
+            return;
+        }
+        let ts = g.epoch.elapsed().as_secs_f64();
+        let mut history: Vec<Event> =
+            g.ordered().filter(|e| e.req == req).copied().collect();
+        if history.len() > FLIGHT_EVENTS {
+            history.drain(..history.len() - FLIGHT_EVENTS);
+        }
+        if g.incidents.len() >= MAX_INCIDENTS {
+            g.incidents.remove(0);
+        }
+        g.incidents.push(Incident { kind, req, tenant, ts, history });
+    }
+
+    /// Incidents filed so far (oldest first, ≤ [`MAX_INCIDENTS`]).
+    pub fn incidents(&self) -> Vec<Incident> {
+        self.inner.lock().unwrap().incidents.clone()
+    }
+}
+
+/// Serving-lifecycle state for [`validate_lifecycle`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LifeState {
+    Start,
+    Queued,
+    Prefilling,
+    Active,
+    Parked,
+    Done,
+}
+
+/// Check one request's event stream (as returned by
+/// [`TraceRecorder::events_for`]) against the serving lifecycle
+/// invariant:
+///
+///  * timestamps are non-decreasing;
+///  * the stream starts with `Submit` and transitions follow the state
+///    machine `Queued → (Prefilling →) Active → Done`, with
+///    `Preempt`/`Resume` properly nested: a `Preempt` parks the request
+///    and only a `Resume` (swap → straight back to decode, recompute →
+///    back through prefill) or a `Reject` may follow for it;
+///  * decode steps happen only while admitted, swap-outs only while
+///    parked, and nothing follows `Finish`/`Reject`.
+///
+/// Returns `Err(description)` naming the first offending event.
+pub fn validate_lifecycle(events: &[Event]) -> Result<(), String> {
+    use EventKind as K;
+    use LifeState as S;
+    let mut state = S::Start;
+    let mut last_ts = f64::NEG_INFINITY;
+    for (i, ev) in events.iter().enumerate() {
+        if ev.ts < last_ts {
+            return Err(format!(
+                "event {i} ({:?}) goes back in time: {} < {}",
+                ev.kind, ev.ts, last_ts
+            ));
+        }
+        last_ts = ev.ts;
+        let bad = |state: S| {
+            Err(format!(
+                "event {i} ({:?}) illegal in state {state:?} for req {}",
+                ev.kind, ev.req
+            ))
+        };
+        state = match (state, &ev.kind) {
+            (S::Start, K::Submit { .. }) => S::Queued,
+            (S::Queued, K::QuotaDefer | K::AdmitDeferred) => S::Queued,
+            (S::Parked, K::QuotaDefer | K::AdmitDeferred) => S::Parked,
+            (S::Queued, K::PrefillStart { .. }) => S::Prefilling,
+            (S::Prefilling, K::PrefillEnd { .. }) => S::Queued,
+            (S::Queued, K::Admit { .. }) => S::Active,
+            (S::Active, K::DecodeStep { .. } | K::Compact) => S::Active,
+            (S::Active, K::Preempt { .. }) => S::Parked,
+            (S::Parked, K::SwapOut { .. }) => S::Parked,
+            (S::Parked, K::Resume { mode: ResumeMode::Swap }) => S::Active,
+            (S::Parked, K::Resume { mode: ResumeMode::Recompute }) => {
+                S::Queued
+            }
+            (S::Active, K::Finish { .. }) => S::Done,
+            (S::Queued | S::Prefilling | S::Parked, K::Reject) => S::Done,
+            (s, _) => return bad(s),
+        };
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(ts: f64, req: u64, kind: EventKind) -> Event {
+        Event { ts, req, tenant: TenantId::DEFAULT, lane: NO_LANE, kind }
+    }
+
+    #[test]
+    fn disabled_recorder_stores_nothing() {
+        let tr = TraceRecorder::default();
+        tr.record(1, TenantId::DEFAULT, NO_LANE, EventKind::Reject);
+        tr.incident(IncidentKind::Reject, 1, TenantId::DEFAULT);
+        assert!(tr.is_empty());
+        assert!(tr.incidents().is_empty());
+        assert!(!tr.is_enabled());
+    }
+
+    #[test]
+    fn ring_wraps_oldest_first() {
+        let tr = TraceRecorder::default();
+        tr.enable(4);
+        for i in 0..10u64 {
+            tr.record(i, TenantId::DEFAULT, NO_LANE, EventKind::Reject);
+        }
+        let snap = tr.snapshot();
+        assert_eq!(snap.len(), 4);
+        assert_eq!(tr.dropped(), 6);
+        let ids: Vec<u64> = snap.iter().map(|e| e.req).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9]);
+        assert!(snap.windows(2).all(|w| w[0].ts <= w[1].ts));
+    }
+
+    #[test]
+    fn events_for_keeps_last_k() {
+        let tr = TraceRecorder::default();
+        tr.enable(64);
+        for i in 0..8u32 {
+            tr.record(
+                7,
+                TenantId::DEFAULT,
+                NO_LANE,
+                EventKind::DecodeStep { step: i, tokens_out: i },
+            );
+            tr.record(9, TenantId::DEFAULT, NO_LANE, EventKind::QuotaDefer);
+        }
+        let evs = tr.events_for(7, 3);
+        assert_eq!(evs.len(), 3);
+        assert!(evs.iter().all(|e| e.req == 7));
+        assert!(matches!(
+            evs[2].kind,
+            EventKind::DecodeStep { step: 7, .. }
+        ));
+    }
+
+    #[test]
+    fn lifecycle_accepts_preempt_resume_nesting() {
+        use EventKind as K;
+        let evs = vec![
+            ev(0.0, 1, K::Submit { prompt_tokens: 8 }),
+            ev(0.1, 1, K::PrefillStart { tokens: 8 }),
+            ev(0.2, 1, K::PrefillEnd { kept_rows: 8 }),
+            ev(0.3, 1, K::Admit { blocks_held: 4 }),
+            ev(0.4, 1, K::DecodeStep { step: 9, tokens_out: 1 }),
+            ev(0.5, 1, K::Preempt { mode: ResumeMode::Swap, generated: 1 }),
+            ev(0.5, 1, K::SwapOut { bytes: 1024 }),
+            ev(0.6, 1, K::AdmitDeferred),
+            ev(0.7, 1, K::Resume { mode: ResumeMode::Swap }),
+            ev(0.8, 1, K::DecodeStep { step: 10, tokens_out: 2 }),
+            ev(0.9, 1, K::Finish { tokens_out: 3 }),
+        ];
+        validate_lifecycle(&evs).unwrap();
+    }
+
+    #[test]
+    fn lifecycle_rejects_disorder() {
+        use EventKind as K;
+        // decode before admission
+        let evs = vec![
+            ev(0.0, 1, K::Submit { prompt_tokens: 8 }),
+            ev(0.1, 1, K::DecodeStep { step: 1, tokens_out: 1 }),
+        ];
+        assert!(validate_lifecycle(&evs).is_err());
+        // resume without a preemption
+        let evs = vec![
+            ev(0.0, 1, K::Submit { prompt_tokens: 8 }),
+            ev(0.1, 1, K::Resume { mode: ResumeMode::Swap }),
+        ];
+        assert!(validate_lifecycle(&evs).is_err());
+        // time goes backwards
+        let evs = vec![
+            ev(1.0, 1, K::Submit { prompt_tokens: 8 }),
+            ev(0.5, 1, K::PrefillStart { tokens: 8 }),
+        ];
+        assert!(validate_lifecycle(&evs).is_err());
+    }
+}

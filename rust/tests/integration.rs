@@ -186,6 +186,7 @@ fn serving_stack_completes_concurrent_requests() {
         max_prompt: 256,
         order: AdmitOrder::Fcfs,
         paging: Some(fastkv::PagingConfig::default()),
+        obs: Default::default(),
     })
     .unwrap();
     let handle = server.handle();

@@ -1,0 +1,508 @@
+//! Observability integration tests — no artifacts / no PJRT needed.
+//!
+//! Drives full request lifecycles through the real server machinery
+//! (`admit` / `preempt` / `try_resume` / `finish` / `reject`) with
+//! lifecycle tracing enabled, then checks the three pillars the obs
+//! subsystem promises:
+//!
+//!  1. the **lifecycle-ordering invariant** holds for every traced
+//!     request (`validate_lifecycle`);
+//!  2. the **JSON snapshot round-trips** through the crate's own parser
+//!     with exact counter/gauge values;
+//!  3. the **Chrome trace** parses and reconstructs the phase spans;
+//!
+//! plus the ring-buffer wrap contract and the flight-recorder / honest-
+//! TTFT behavior on rejection.
+
+use std::collections::HashMap;
+
+use fastkv::coordinator::decode::{advance_lane, LaneAdvance};
+use fastkv::coordinator::kvcache::RequestCache;
+use fastkv::coordinator::paging::KvStore;
+use fastkv::coordinator::policies::{
+    Exec, Policy, PolicyCfg, PrefillOutcome,
+};
+use fastkv::coordinator::scheduler::{AdmitOrder, Scheduler};
+use fastkv::coordinator::server::{
+    admit, finish, preempt, reject, try_resume, Active, AdmitFail,
+    Request, Resume, ServerConfig,
+};
+use fastkv::manifest::{Buckets, Manifest, ModelMeta};
+use fastkv::metrics::{names, Metrics};
+use fastkv::obs::trace::{
+    validate_lifecycle, EventKind, IncidentKind, ResumeMode, NO_LANE,
+};
+use fastkv::runtime::outputs::DecodeOut;
+use fastkv::tensor::HostTensor;
+use fastkv::util::json::Value;
+use fastkv::{PagedArena, PagingConfig, TenantId, TraceRecorder};
+
+// ---------------------------------------------------------- sim harness
+
+fn sim_meta() -> ModelMeta {
+    ModelMeta {
+        vocab_size: 256,
+        d_model: 8,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 2,
+        head_dim: 2,
+        tsp_layer: 1,
+        window: 2,
+        pool_kernel: 3,
+        max_train_len: 64,
+    }
+}
+
+fn sim_manifest(limit: usize) -> Manifest {
+    Manifest {
+        dir: std::path::PathBuf::from("/tmp"),
+        model: sim_meta(),
+        n_params: 1,
+        kernel: "jnp".into(),
+        buckets: Buckets {
+            prefill_ns: vec![limit],
+            stage1_ns: vec![limit],
+            stage2_ns: vec![limit],
+            pyramid_ns: vec![limit],
+            decode_batches: vec![1, 2, 4],
+            decode_caps: vec![64],
+            sweep_n: 64,
+            sweep_nt: 16,
+            pallas_n: limit,
+            max_gen: 16,
+            block_tokens: 2,
+            shard_counts: vec![],
+        },
+        artifacts: std::collections::BTreeMap::new(),
+    }
+}
+
+fn sim_server_cfg(max_prompt: usize, max_new: usize) -> ServerConfig {
+    ServerConfig {
+        artifact_dir: std::path::PathBuf::from("/tmp"),
+        policy: "sim".into(),
+        policy_cfg: PolicyCfg {
+            kv_rate: 1.0,
+            tsp_rate: 1.0,
+            sinks: 1,
+            filter_layer: 0,
+            use_pallas: false,
+        },
+        decode_batch: 4,
+        max_new,
+        max_prompt,
+        order: AdmitOrder::Fcfs,
+        paging: Some(PagingConfig::default()),
+        obs: Default::default(),
+    }
+}
+
+fn sim_kv_row(l: usize, pos: usize, token: i32, re: usize) -> Vec<f32> {
+    (0..re)
+        .map(|i| {
+            (l as f32) * 1000.0
+                + (pos as f32) * 10.0
+                + (token as f32) * 0.125
+                + (i as f32) * 0.0625
+        })
+        .collect()
+}
+
+fn sim_next_token(seq: &[i32]) -> i32 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &t in seq {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    4 + (h % 200) as i32
+}
+
+struct SimPolicy;
+
+impl Policy for SimPolicy {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn prefill(
+        &self,
+        _ex: &dyn Exec,
+        man: &Manifest,
+        tokens: &[i32],
+        _cfg: &PolicyCfg,
+    ) -> anyhow::Result<PrefillOutcome> {
+        let m = &man.model;
+        let re = m.n_kv_heads * m.head_dim;
+        let mut cache = RequestCache::new(m);
+        for l in 0..m.n_layers {
+            let mut k = Vec::with_capacity(tokens.len() * re);
+            for (pos, &t) in tokens.iter().enumerate() {
+                k.extend_from_slice(&sim_kv_row(l, pos, t, re));
+            }
+            cache.v[l] = k.iter().map(|x| -x).collect();
+            cache.k[l] = k;
+            cache.lens[l] = tokens.len();
+        }
+        Ok(PrefillOutcome {
+            first_token: sim_next_token(tokens),
+            cache,
+            next_pos: tokens.len(),
+            final_h: Vec::new(),
+            compute_tokens: tokens.len() * m.n_layers,
+        })
+    }
+}
+
+struct NoExec;
+
+impl Exec for NoExec {
+    fn run(
+        &self,
+        _name: &str,
+        _inputs: Vec<fastkv::runtime::In>,
+    ) -> anyhow::Result<Vec<HostTensor>> {
+        anyhow::bail!("obs tests never execute artifacts")
+    }
+}
+
+/// One synthetic decode round over the active lanes through the real
+/// `advance_lane` + `Active::apply`, recording a `DecodeStep` event per
+/// advanced lane (as the serving loop's sampled tracing does).
+fn sim_decode_round(
+    pa: &mut PagedArena,
+    active: &mut [Active],
+    prompts: &HashMap<u64, Vec<i32>>,
+    metrics: &Metrics,
+) {
+    let m = sim_meta();
+    let re = m.n_kv_heads * m.head_dim;
+    let b = KvStore::slots(pa);
+    for a in active.iter_mut() {
+        if a.is_done() {
+            continue;
+        }
+        let mut k_new = HostTensor::zeros(vec![
+            m.n_layers,
+            b,
+            m.n_kv_heads,
+            m.head_dim,
+        ]);
+        let mut v_new = k_new.clone();
+        for l in 0..m.n_layers {
+            let row = sim_kv_row(l, a.pos(), a.cur(), re);
+            let base = (l * b + a.slot()) * re;
+            k_new.data[base..base + re].copy_from_slice(&row);
+            for (i, x) in row.iter().enumerate() {
+                v_new.data[base + i] = -x;
+            }
+        }
+        let mut seq = prompts[&a.request_id()].clone();
+        seq.extend_from_slice(a.tokens());
+        let next = sim_next_token(&seq);
+        let mut logits = HostTensor::zeros(vec![b, m.vocab_size]);
+        logits.data[a.slot() * m.vocab_size + next as usize] = 1.0;
+        let out = DecodeOut { logits, k_new, v_new };
+        let adv = advance_lane(pa, a.slot(), &out, None);
+        assert!(
+            matches!(adv, LaneAdvance::Next { .. }),
+            "sim decode hit {adv:?}"
+        );
+        metrics.tracer().record(
+            a.request_id(),
+            a.tenant(),
+            a.slot() as i32,
+            EventKind::DecodeStep {
+                step: a.pos() as u32,
+                tokens_out: a.tokens().len() as u32,
+            },
+        );
+        a.apply(adv);
+    }
+}
+
+/// Drive `n` requests through admit → decode → preempt (swap) → resume →
+/// finish on a lane-limited scheduler, tracing on. Returns the metrics
+/// registry (owning the trace ring) and the request ids.
+fn run_traced_stack(n: u64) -> (Metrics, Vec<u64>) {
+    let m = sim_meta();
+    let man = sim_manifest(64);
+    let policy = SimPolicy;
+    let metrics = Metrics::default();
+    metrics.tracer().enable(1024);
+    let max_new = 6;
+    let cfg = sim_server_cfg(32, max_new);
+    let lanes = 2;
+    let pcfg = PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes: 1 << 20,
+        ..Default::default()
+    };
+    let mut pa = PagedArena::new(&m, lanes, 64, pcfg);
+    let mut sched: Scheduler<Request> =
+        Scheduler::new(lanes, AdmitOrder::Fcfs);
+    let mut prompts: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let p: Vec<i32> =
+            (0..8u64).map(|j| 4 + ((i * 31 + j * 7) % 200) as i32).collect();
+        metrics.tracer().record(
+            i,
+            TenantId::DEFAULT,
+            NO_LANE,
+            EventKind::Submit { prompt_tokens: p.len() as u32 },
+        );
+        let (req, rx) = Request::synthetic(i, p.clone(), max_new);
+        prompts.insert(i, p);
+        rxs.push(rx);
+        sched.enqueue(req);
+    }
+    let mut active: Vec<Active> = Vec::new();
+    let mut preempted_once = vec![false; n as usize];
+    let mut done = 0;
+    let mut guard = 0;
+    while done < n {
+        guard += 1;
+        assert!(guard < 1000, "sim stack livelocked");
+        while active.len() < lanes && sched.queue_len() > 0 {
+            let req = sched.pop_next(|r| r.prompt.len()).unwrap();
+            match try_resume(req, &mut pa, &metrics) {
+                Resume::Restored(a) => active.push(a),
+                Resume::Busy(_) => panic!("worst-case pool went busy"),
+                Resume::Recompute(req) => match admit(
+                    &NoExec, &man, &policy, &cfg, req, &mut pa, &metrics,
+                ) {
+                    Ok(a) => active.push(a),
+                    Err(AdmitFail::Defer(_) | AdmitFail::Reject(..)) => {
+                        panic!("worst-case pool refused admission")
+                    }
+                },
+            }
+        }
+        sim_decode_round(&mut pa, &mut active, &prompts, &metrics);
+        let mut j = 0;
+        while j < active.len() {
+            if active[j].is_done() || active[j].tokens().len() >= max_new {
+                let a = active.remove(j);
+                finish(a, &mut pa, &metrics);
+                done += 1;
+            } else {
+                j += 1;
+            }
+        }
+        let mut j = 0;
+        while j < active.len() {
+            let id = active[j].request_id() as usize;
+            if !preempted_once[id] && active[j].tokens().len() >= 2 {
+                preempted_once[id] = true;
+                preempt(&mut active, j, &mut pa, &mut sched, &metrics);
+            } else {
+                j += 1;
+            }
+        }
+    }
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.tokens.len(), max_new);
+        assert!(resp.ttft_secs.is_some(), "completed request lost TTFT");
+    }
+    (metrics, (0..n).collect())
+}
+
+// ---------------------------------------------------------------- tests
+
+#[test]
+fn lifecycle_ordering_holds_across_preempt_swap_resume() {
+    let (metrics, ids) = run_traced_stack(3);
+    let tracer = metrics.tracer();
+    for &id in &ids {
+        let evs = tracer.events_for(id, usize::MAX);
+        assert!(!evs.is_empty(), "request {id} left no trace");
+        if let Err(e) = validate_lifecycle(&evs) {
+            panic!("request {id} lifecycle violated: {e}\n{evs:#?}");
+        }
+    }
+    // Every request was preempted once with swap on: the full grammar —
+    // Preempt{Swap}, SwapOut, Resume{Swap} — must appear in its trace.
+    for &id in &ids {
+        let evs = tracer.events_for(id, usize::MAX);
+        let has = |f: &dyn Fn(&EventKind) -> bool| {
+            evs.iter().any(|e| f(&e.kind))
+        };
+        assert!(
+            has(&|k| matches!(
+                k,
+                EventKind::Preempt { mode: ResumeMode::Swap, .. }
+            )),
+            "request {id}: no swap preempt event"
+        );
+        assert!(
+            has(&|k| matches!(k, EventKind::SwapOut { .. })),
+            "request {id}: no swap-out event"
+        );
+        assert!(
+            has(&|k| matches!(
+                k,
+                EventKind::Resume { mode: ResumeMode::Swap }
+            )),
+            "request {id}: no swap resume event"
+        );
+        assert!(
+            has(&|k| matches!(k, EventKind::Finish { .. })),
+            "request {id}: no finish event"
+        );
+    }
+    // Phase histograms fed by the real server functions are non-empty
+    // and the TTFT series is honest: 3 measured, none unmeasured.
+    assert_eq!(metrics.histogram(names::QUEUE_WAIT_SECS).count(), 3);
+    assert_eq!(metrics.histogram(names::PREFILL_SECS).count(), 3);
+    assert_eq!(metrics.histogram(names::TTFT_SECS).count(), 3);
+    assert_eq!(metrics.counter(names::TTFT_UNMEASURED), 0);
+    assert!(metrics.histogram(names::SWAP_OUT_SECS).count() >= 3);
+    assert!(metrics.histogram(names::SWAP_IN_SECS).count() >= 3);
+}
+
+#[test]
+fn trace_ring_wraps_oldest_first_and_counts_drops() {
+    let rec = TraceRecorder::default();
+    rec.enable(4);
+    for i in 0..7u64 {
+        rec.record(
+            i,
+            TenantId::DEFAULT,
+            NO_LANE,
+            EventKind::Submit { prompt_tokens: 1 },
+        );
+    }
+    assert_eq!(rec.len(), 4);
+    assert_eq!(rec.dropped(), 3);
+    let evs = rec.snapshot();
+    let reqs: Vec<u64> = evs.iter().map(|e| e.req).collect();
+    assert_eq!(reqs, vec![3, 4, 5, 6], "oldest events overwritten first");
+    assert!(
+        evs.windows(2).all(|w| w[0].ts <= w[1].ts),
+        "snapshot not in chronological order"
+    );
+}
+
+#[test]
+fn json_snapshot_round_trips_through_value_parse() {
+    let m = Metrics::default();
+    m.inc("alpha", 3);
+    m.inc("beta", 41);
+    m.set_gauge("depth", 2.5);
+    for i in 1..=100 {
+        m.observe("lat", i as f64 * 1e-4);
+    }
+    let s = fastkv::obs::json_snapshot(&m).to_string();
+    let v = Value::parse(&s).unwrap_or_else(|e| panic!("bad JSON: {e}"));
+    assert_eq!(v.req("counters").req("alpha").as_f64(), Some(3.0));
+    assert_eq!(v.req("counters").req("beta").as_f64(), Some(41.0));
+    assert_eq!(v.req("gauges").req("depth").as_f64(), Some(2.5));
+    let lat = v.req("histograms").req("lat");
+    assert_eq!(lat.req("count").as_f64(), Some(100.0));
+    let sum = lat.req("sum").as_f64().unwrap();
+    assert!((sum - 0.505).abs() < 1e-9, "sum drifted: {sum}");
+    let buckets = lat.req("buckets").as_arr().unwrap();
+    assert!(!buckets.is_empty(), "non-empty histogram lost its buckets");
+    let n: f64 = buckets
+        .iter()
+        .map(|b| b.req("n").as_f64().unwrap())
+        .sum();
+    assert_eq!(n, 100.0, "bucket counts don't sum to the sample count");
+    // tracing was never enabled on this registry
+    assert_eq!(v.req("trace").req("enabled").as_bool(), Some(false));
+    assert_eq!(v.req("trace").req("events").as_f64(), Some(0.0));
+}
+
+#[test]
+fn chrome_trace_parses_and_reconstructs_phase_spans() {
+    let (metrics, _) = run_traced_stack(3);
+    let s = fastkv::obs::chrome_trace(metrics.tracer());
+    let v = Value::parse(&s).unwrap_or_else(|e| panic!("bad JSON: {e}"));
+    let evs = v.req("traceEvents").as_arr().unwrap();
+    assert!(!evs.is_empty());
+    let span_names: Vec<&str> = evs
+        .iter()
+        .filter(|e| e.req("ph").as_str() == Some("X"))
+        .map(|e| e.req("name").as_str().unwrap())
+        .collect();
+    for phase in ["queued", "prefill", "decode", "preempted"] {
+        assert!(
+            span_names.contains(&phase),
+            "no `{phase}` span in {span_names:?}"
+        );
+    }
+    // spans carry non-negative durations and a lane-or-queue track id
+    for e in evs.iter().filter(|e| e.req("ph").as_str() == Some("X")) {
+        assert!(e.req("dur").as_f64().unwrap() >= 0.0);
+        assert!(e.req("tid").as_f64().unwrap() >= 0.0);
+    }
+    // per-track thread_name metadata names the queue track
+    let meta_names: Vec<&str> = evs
+        .iter()
+        .filter(|e| e.req("ph").as_str() == Some("M"))
+        .map(|e| e.req("args").req("name").as_str().unwrap())
+        .collect();
+    assert!(meta_names.contains(&"queue/parked"), "{meta_names:?}");
+    assert!(
+        meta_names.iter().any(|n| n.starts_with("lane ")),
+        "{meta_names:?}"
+    );
+}
+
+#[test]
+fn reject_files_flight_incident_and_keeps_ttft_honest() {
+    let m = sim_meta();
+    let man = sim_manifest(64);
+    let policy = SimPolicy;
+    let metrics = Metrics::default();
+    metrics.tracer().enable(256);
+    let cfg = sim_server_cfg(8, 4);
+    let pcfg = PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        ..Default::default()
+    };
+    let mut pa = PagedArena::new(&m, 1, 64, pcfg);
+    // oversized prompt: admit must reject it before any prefill
+    let (req, rx) = Request::synthetic(7, vec![5; 9], 4);
+    metrics.tracer().record(
+        7,
+        TenantId::DEFAULT,
+        NO_LANE,
+        EventKind::Submit { prompt_tokens: 9 },
+    );
+    match admit(&NoExec, &man, &policy, &cfg, req, &mut pa, &metrics) {
+        Err(AdmitFail::Reject(req, e)) => {
+            reject(req, &mut pa, &metrics, format!("{e:#}"));
+        }
+        Ok(_) | Err(AdmitFail::Defer(_)) => {
+            panic!("oversized prompt was not rejected")
+        }
+    }
+    let resp = rx.recv().unwrap();
+    assert!(resp.error.is_some());
+    assert!(resp.ttft_secs.is_none(), "reject invented a TTFT");
+    assert_eq!(metrics.histogram(names::TTFT_SECS).count(), 0);
+    assert_eq!(metrics.counter(names::TTFT_UNMEASURED), 1);
+    let evs = metrics.tracer().events_for(7, usize::MAX);
+    validate_lifecycle(&evs).unwrap();
+    let incidents = metrics.tracer().incidents();
+    let inc = incidents
+        .iter()
+        .find(|i| i.kind == IncidentKind::Reject && i.req == 7)
+        .expect("reject filed no flight-recorder incident");
+    assert!(
+        inc.history
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::Submit { .. })),
+        "incident history lost the submit event"
+    );
+    assert!(
+        !fastkv::obs::flight_text(metrics.tracer()).is_empty(),
+        "flight report empty despite an incident"
+    );
+}

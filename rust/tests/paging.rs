@@ -1008,6 +1008,7 @@ fn sim_server_cfg(max_prompt: usize, max_new: usize) -> ServerConfig {
         max_prompt,
         order: AdmitOrder::Fcfs,
         paging: Some(PagingConfig::default()),
+        obs: Default::default(),
     }
 }
 
