@@ -58,6 +58,12 @@ fn main() -> Result<()> {
     // Host swap budget for preempted lanes (MiB); 0 = recompute-resume.
     paging.swap_bytes =
         args.usize("swap-mb", paging.swap_bytes >> 20) << 20;
+    // --precision f32|f16|int8: KV codec for the resident slab and the
+    // default swap tier (per-tenant overrides via TenantQuota::precision).
+    if let Some(p) = args.get("precision") {
+        paging.precision = fastkv::KvCodec::parse(p)
+            .map_err(|e| anyhow::anyhow!("--precision: {e}"))?;
+    }
     // --tenants T + --quota-blocks R: reserved floor of R blocks per
     // tenant (quotas only engage when both are set).
     let tenants = args.usize("tenants", 1).max(1);

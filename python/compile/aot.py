@@ -176,6 +176,27 @@ def build(cfg: ModelConfig = TINY, buckets: BucketConfig = BUCKETS,
                  "pool_blocks": nb, "block_tokens": bt},
             )
 
+    # --- decode_paged_q8_step (int8 slab + per-row scales, in-HLO dequant) --
+    # Same slab/table buckets as decode_paged; the quantized planes travel
+    # as integer-valued f32 (the runtime ABI is f32-only) with one
+    # [NB, bt] scale tensor per plane.
+    for b in buckets.decode_batches:
+        for c in buckets.decode_caps:
+            if c > max_n + buckets.max_gen:
+                continue
+            mb = -(-c // bt)  # ceil
+            nb = L_ * b * mb
+            fn = functools.partial(M.decode_paged_q8_step, cfg=cfg)
+            em.emit(
+                f"decode_paged_q8_{b}x{c}", fn,
+                (flat_s, _spec((b,), I32), _spec((b,), I32),
+                 _spec((nb, bt, KV, hd)), _spec((nb, bt)),
+                 _spec((nb, bt, KV, hd)), _spec((nb, bt)),
+                 _spec((L_, b, mb), I32), _spec((L_, b), I32)),
+                {"kind": "decode_paged_q8", "batch": b, "cap": c,
+                 "pool_blocks": nb, "block_tokens": bt},
+            )
+
     # --- decode_paged_shard_step (KV-head-sharded block-table decode) -------
     # One artifact per (batch, cap, S): S slab pairs of [NB, bt, KV/S, hd]
     # (pinned per shard by the rust runtime), shared tables/lens; outputs
@@ -204,6 +225,24 @@ def build(cfg: ModelConfig = TINY, buckets: BucketConfig = BUCKETS,
                      *slab_specs,
                      _spec((L_, b, mb), I32), _spec((L_, b), I32)),
                     {"kind": "decode_paged_shard", "batch": b, "cap": c,
+                     "pool_blocks": nb, "block_tokens": bt,
+                     "shards": s, "shard_kv_heads": kvs},
+                )
+                # Quantized twin: per shard, (q-K plane, K scales, q-V
+                # plane, V scales); the scales are per *full* row, shared
+                # by all shards of the row.
+                fn = functools.partial(M.decode_paged_q8_shard_step,
+                                       cfg=cfg, shards=s)
+                q8_specs = []
+                for _ in range(s):
+                    q8_specs += [_spec((nb, bt, kvs, hd)), _spec((nb, bt)),
+                                 _spec((nb, bt, kvs, hd)), _spec((nb, bt))]
+                em.emit(
+                    f"decode_paged_q8_shard_{b}x{c}s{s}", fn,
+                    (flat_s, _spec((b,), I32), _spec((b,), I32),
+                     *q8_specs,
+                     _spec((L_, b, mb), I32), _spec((L_, b), I32)),
+                    {"kind": "decode_paged_q8_shard", "batch": b, "cap": c,
                      "pool_blocks": nb, "block_tokens": bt,
                      "shards": s, "shard_kv_heads": kvs},
                 )

@@ -314,6 +314,68 @@ def decode_paged_shard_step(flat, tokens, positions, *rest,
     return tuple(outs)
 
 
+def decode_paged_q8_step(flat, tokens, positions, slab_kq, k_scales,
+                         slab_vq, v_scales, tables, lens, *,
+                         cfg: ModelConfig):
+    """Int8-quantized block-table decode: dequantize in-HLO, then
+    ``decode_paged_step`` verbatim.
+
+    slab_kq/slab_vq [NB, bt, KV, hd] — the quantized slab planes. The
+    runtime ABI is f32-only, so the int8 codes travel as integer-valued
+    f32 in [-127, 127]; XLA folds the dequant multiply into the gather's
+    consumers, so no widened copy of the slab persists.
+    k_scales/v_scales [NB, bt] — one per-row scale per block row
+    (``scale = max|row| / 127``, rust ``paging::codec``); zero rows carry
+    scale 0, making the dequant exact there.
+
+    The dequantized slab equals the rust host-side fallback
+    (``BlockStore`` decode) bit for bit — both compute
+    ``q * scale`` in f32 — so the q8 artifact and the host-dequant paged
+    path agree exactly; equivalence is pinned by
+    ``python/tests/test_model.py``.
+    """
+    slab_k = slab_kq * k_scales[:, :, None, None]
+    slab_v = slab_vq * v_scales[:, :, None, None]
+    return decode_paged_step(
+        flat, tokens, positions, slab_k, slab_v, tables, lens, cfg=cfg
+    )
+
+
+def decode_paged_q8_shard_step(flat, tokens, positions, *rest,
+                               cfg: ModelConfig, shards: int):
+    """Sharded twin of ``decode_paged_q8_step``.
+
+    ``rest`` is ``(slab_kq_0, k_scales_0, slab_vq_0, v_scales_0, ...,
+    tables, lens)``: per shard, the quantized K/V planes of that shard's
+    heads (``[NB, bt, KV/S, hd]``) each paired with per-row scales
+    ``[NB, bt]``. Note the scales are per *full* row, shared by every
+    shard of that row — quantization happened on the unsharded row, so
+    all shards of one row dequantize under the same scale. Outputs match
+    ``decode_paged_shard_step``.
+    """
+    assert cfg.n_kv_heads % shards == 0, "shards must divide kv heads"
+    slabs, tables, lens = rest[:4 * shards], rest[-2], rest[-1]
+    deq_k = [
+        slabs[4 * s + 0] * slabs[4 * s + 1][:, :, None, None]
+        for s in range(shards)
+    ]
+    deq_v = [
+        slabs[4 * s + 2] * slabs[4 * s + 3][:, :, None, None]
+        for s in range(shards)
+    ]
+    slab_k = jnp.concatenate(deq_k, axis=2)
+    slab_v = jnp.concatenate(deq_v, axis=2)
+    logits, k_new, v_new = decode_paged_step(
+        flat, tokens, positions, slab_k, slab_v, tables, lens, cfg=cfg
+    )
+    kvs = cfg.n_kv_heads // shards
+    outs = [logits]
+    for s in range(shards):
+        outs.append(k_new[:, :, s * kvs:(s + 1) * kvs, :])
+        outs.append(v_new[:, :, s * kvs:(s + 1) * kvs, :])
+    return tuple(outs)
+
+
 def sweep_tsp(flat, tokens, n_valid, *, cfg: ModelConfig, t: int, nt: int,
               kernel: str = "jnp"):
     """Full model with TSP applied at layer ``t`` (selection inside HLO).

@@ -340,6 +340,130 @@ class TestDecode:
             kvs_slice, np.asarray(kn_p)[:, :, :kvs, :]
         )
 
+    @staticmethod
+    def _quantize_slab(slab):
+        """Per-row int8 quantization matching rust ``paging::codec``:
+        ``scale = max|row| / 127``, ``q = round(x / scale)`` clipped to
+        [-127, 127]; zero rows carry scale 0. Codes return as
+        integer-valued f32 (the runtime ABI is f32-only)."""
+        nb, bt = slab.shape[:2]
+        rows = slab.reshape(nb, bt, -1)
+        scales = (np.abs(rows).max(axis=2) / 127.0).astype(np.float32)
+        safe = np.maximum(scales[:, :, None], np.float32(1e-30))
+        q = np.where(
+            scales[:, :, None] > 0,
+            np.clip(np.round(rows / safe), -127, 127),
+            np.float32(0),
+        ).astype(np.float32)
+        return q.reshape(slab.shape), scales
+
+    def test_q8_paged_decode_equals_dequant_then_paged(self, flat):
+        """The q8 artifact's in-HLO dequant must equal host-side dequant
+        followed by the plain paged decode — both compute the same
+        ``q * scale`` product in f32, so tolerances are tight. This is
+        the contract that lets the rust planner treat the q8 path and
+        the host-dequant fallback as interchangeable."""
+        rng = np.random.default_rng(12)
+        lcfg = CFG
+        b, bt, mb = 2, 4, 3
+        nb = lcfg.n_layers * b * mb
+        slab_k = rng.normal(size=(nb, bt, lcfg.n_kv_heads,
+                                  lcfg.head_dim)).astype(np.float32)
+        slab_v = rng.normal(size=slab_k.shape).astype(np.float32) * 0.5
+        kq, ksc = self._quantize_slab(slab_k)
+        vq, vsc = self._quantize_slab(slab_v)
+        lens = np.asarray(
+            [[5, 11], [8, 3], [12, 7], [1, 9]][: lcfg.n_layers], np.int32
+        )
+        tables = np.full((lcfg.n_layers, b, mb), -1, np.int32)
+        free = list(rng.permutation(nb))
+        for l in range(lcfg.n_layers):
+            for s in range(b):
+                for i in range(-(-int(lens[l, s]) // bt)):
+                    tables[l, s, i] = int(free.pop())
+        toks = jnp.asarray([5, 97], jnp.int32)
+        poss = jnp.asarray(
+            [int(lens[:, s].max()) for s in range(b)], jnp.int32
+        )
+        deq_k = kq * ksc[:, :, None, None]
+        deq_v = vq * vsc[:, :, None, None]
+        ref = M.decode_paged_step(
+            flat, toks, poss, jnp.asarray(deq_k), jnp.asarray(deq_v),
+            jnp.asarray(tables), jnp.asarray(lens), cfg=CFG,
+        )
+        out = M.decode_paged_q8_step(
+            flat, toks, poss, jnp.asarray(kq), jnp.asarray(ksc),
+            jnp.asarray(vq), jnp.asarray(vsc),
+            jnp.asarray(tables), jnp.asarray(lens), cfg=CFG,
+        )
+        for got, want in zip(out, ref):
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6
+            )
+        # And the quantization itself is a faithful approximation: the
+        # dequantized slab is within scale/2 of the source per element.
+        bound = np.maximum(ksc[:, :, None], 0)[..., None] / 2 + 1e-7
+        assert (np.abs(deq_k - slab_k) <= bound).all()
+
+    def test_q8_sharded_decode_equals_q8_unsharded(self):
+        """Sharded q8 (per-shard quant planes, full-row scales shared by
+        every shard of a row) must equal the unsharded q8 decode."""
+        scfg = ModelConfig(
+            d_model=32, n_layers=2, n_heads=4, n_kv_heads=2, d_ffn=64,
+            tsp_layer=1, max_train_len=128,
+        )
+        sflat = jnp.asarray(flatten(init_params(scfg, 6), scfg))
+        rng = np.random.default_rng(13)
+        b, bt, mb, shards = 2, 4, 4, 2
+        nb = scfg.n_layers * b * mb
+        kvs = scfg.n_kv_heads // shards
+        slab_k = rng.normal(size=(nb, bt, scfg.n_kv_heads,
+                                  scfg.head_dim)).astype(np.float32)
+        slab_v = rng.normal(size=slab_k.shape).astype(np.float32) * 0.5
+        kq, ksc = self._quantize_slab(slab_k)
+        vq, vsc = self._quantize_slab(slab_v)
+        lens = np.asarray([[5, 9], [12, 3]][: scfg.n_layers], np.int32)
+        tables = np.full((scfg.n_layers, b, mb), -1, np.int32)
+        free = list(rng.permutation(nb))
+        for l in range(scfg.n_layers):
+            for s in range(b):
+                for i in range(-(-int(lens[l, s]) // bt)):
+                    tables[l, s, i] = int(free.pop())
+        toks = jnp.asarray([5, 97], jnp.int32)
+        poss = jnp.asarray(
+            [int(lens[:, s].max()) for s in range(b)], jnp.int32
+        )
+        lg_q, kn_q, vn_q = M.decode_paged_q8_step(
+            sflat, toks, poss, jnp.asarray(kq), jnp.asarray(ksc),
+            jnp.asarray(vq), jnp.asarray(vsc),
+            jnp.asarray(tables), jnp.asarray(lens), cfg=scfg,
+        )
+        shard_ins = []
+        for s in range(shards):
+            shard_ins += [
+                jnp.asarray(kq[:, :, s * kvs:(s + 1) * kvs, :]),
+                jnp.asarray(ksc),
+                jnp.asarray(vq[:, :, s * kvs:(s + 1) * kvs, :]),
+                jnp.asarray(vsc),
+            ]
+        out = M.decode_paged_q8_shard_step(
+            sflat, toks, poss, *shard_ins,
+            jnp.asarray(tables), jnp.asarray(lens),
+            cfg=scfg, shards=shards,
+        )
+        assert len(out) == 1 + 2 * shards
+        kn_s = jnp.concatenate(out[1::2], axis=2)
+        vn_s = jnp.concatenate(out[2::2], axis=2)
+        np.testing.assert_allclose(
+            np.asarray(out[0]), np.asarray(lg_q), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(kn_s), np.asarray(kn_q), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(vn_s), np.asarray(vn_q), rtol=1e-5, atol=1e-5
+        )
+
     def test_compressed_cache_changes_little_when_keeping_salient(
         self, flat
     ):

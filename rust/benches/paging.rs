@@ -602,4 +602,126 @@ fn main() {
     std::fs::write("BENCH_paging_tenants.json", &json)
         .expect("write BENCH_paging_tenants.json");
     println!("\nwrote BENCH_paging_tenants.json:\n{json}");
+
+    // --------------------------------------------------------------------
+    // In-slab quantization: lane capacity at an EQUAL resident-byte
+    // budget per precision tier, plus the decode input-prep cost of each
+    // tier. The int8 tier must fit ~4x the f32 lane count in the same
+    // pool bytes (each row pays a 4-byte scale per plane); its decode
+    // prep ships the quantized planes + scales as-is (dequantization
+    // happens in-HLO on the `decode_paged_q8` artifact), so only the
+    // host-dequant *fallback* — a pool without that artifact — pays a
+    // conversion per stale upload, measured separately.
+    println!("\n=== in-slab quantization: lane capacity + prep per tier ===");
+    use fastkv::KvCodec;
+    let re = m.n_kv_heads * m.head_dim;
+    let bt = PagingConfig::default().block_tokens;
+    let budget_bytes = 6usize << 20;
+    let admit_len = 256usize;
+    let lane_slots = 64usize;
+    // (codec, blocks, lanes, slab_bytes, prep_ms, host_dequant_ms)
+    let mut tiers: Vec<(KvCodec, usize, usize, usize, f64, f64)> = Vec::new();
+    for codec in KvCodec::ALL {
+        let blocks = budget_bytes / (2 * bt * codec.bytes_per_row(re));
+        let cfg = PagingConfig {
+            num_blocks: Some(blocks),
+            prefix_cache: false,
+            swap_bytes: 0,
+            precision: codec,
+            ..PagingConfig::default()
+        };
+        let mut pa = PagedArena::new(&m, lane_slots, admit_len + 64, cfg);
+        let mut lanes = 0usize;
+        while lanes < lane_slots {
+            let rc = cache(&m, 300 + lanes as u64, admit_len);
+            match KvStore::admit(&mut pa, &rc) {
+                Some(_) => lanes += 1,
+                None => break,
+            }
+        }
+        let slab_bytes = pa.pool_stats().slab_bytes;
+        assert!(slab_bytes <= budget_bytes, "tier pool within the budget");
+        assert!(lanes > 0 && lanes < lane_slots, "refusal, not lane cap");
+        let view = pa.view();
+        let nb = view.num_blocks;
+        let prep_ms = if codec == KvCodec::Int8PerRow {
+            let mut kq = HostTensor::empty();
+            let mut ksc = HostTensor::empty();
+            let mut vq = HostTensor::empty();
+            let mut vsc = HostTensor::empty();
+            bench(
+                &format!("decode prep {} ({lanes} lanes)", codec.name()),
+                2,
+                20,
+                || {
+                    assert!(view.q8_slab_tensors_into(
+                        nb, &mut kq, &mut ksc, &mut vq, &mut vsc
+                    ));
+                    std::hint::black_box((&kq.data[0], &ksc.data[0]));
+                },
+            )
+            .mean_ms
+        } else {
+            bench(
+                &format!("decode prep {} ({lanes} lanes)", codec.name()),
+                2,
+                20,
+                || {
+                    let (sk, sv) = view.slab_tensors(nb);
+                    std::hint::black_box((&sk.data[0], &sv.data[0]));
+                },
+            )
+            .mean_ms
+        };
+        let host_dequant_ms = if codec == KvCodec::Int8PerRow {
+            bench(&format!("  host-dequant fallback ({lanes} lanes)"), 2, 20, || {
+                let (sk, sv) = view.slab_tensors(nb);
+                std::hint::black_box((&sk.data[0], &sv.data[0]));
+            })
+            .mean_ms
+        } else {
+            0.0
+        };
+        println!(
+            "{:>46} {} blocks, {lanes} lanes before refusal, slab {:.2} MiB",
+            "",
+            blocks,
+            slab_bytes as f64 / (1 << 20) as f64
+        );
+        tiers.push((codec, blocks, lanes, slab_bytes, prep_ms, host_dequant_ms));
+    }
+    let lanes_of = |c: KvCodec| {
+        tiers.iter().find(|t| t.0 == c).map(|t| t.2).unwrap()
+    };
+    let f32_lanes = lanes_of(KvCodec::F32);
+    let f16_lanes = lanes_of(KvCodec::F16);
+    let q8_lanes = lanes_of(KvCodec::Int8PerRow);
+    assert!(
+        q8_lanes as f64 >= 1.9 * f32_lanes as f64,
+        "int8 must fit >=1.9x the f32 lanes at equal pool bytes \
+         ({q8_lanes} vs {f32_lanes})"
+    );
+    let json = format!(
+        "{{\n  \"budget_bytes\": {budget_bytes},\n  \"block_tokens\": {bt},\n  \
+         \"row_elems\": {re},\n  \"admit_tokens\": {admit_len},\n  \
+         \"tiers\": [\n{}\n  ],\n  \
+         \"lanes_f32\": {f32_lanes},\n  \"lanes_f16\": {f16_lanes},\n  \
+         \"lanes_int8\": {q8_lanes},\n  \
+         \"lanes_int8_vs_f32\": {:.3},\n  \"lanes_f16_vs_f32\": {:.3}\n}}\n",
+        tiers
+            .iter()
+            .map(|(c, blocks, lanes, sb, prep, deq)| format!(
+                "    {{\"codec\": \"{}\", \"blocks\": {blocks}, \
+                 \"lanes\": {lanes}, \"slab_bytes\": {sb}, \
+                 \"prep_ms\": {prep:.4}, \"host_dequant_ms\": {deq:.4}}}",
+                c.name()
+            ))
+            .collect::<Vec<_>>()
+            .join(",\n"),
+        q8_lanes as f64 / f32_lanes as f64,
+        f16_lanes as f64 / f32_lanes as f64,
+    );
+    std::fs::write("BENCH_paging_quant.json", &json)
+        .expect("write BENCH_paging_quant.json");
+    println!("\nwrote BENCH_paging_quant.json:\n{json}");
 }

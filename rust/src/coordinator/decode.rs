@@ -15,9 +15,17 @@
 //!       mutated re-upload ([`stale_shards`]) — plus the shared tables and
 //!       lens; outputs are per-shard `k_new`/`v_new` head slices that the
 //!       host-side combiner ([`combine_head_shards`]) reassembles;
-//!    2. **block-table** (`decode_paged_{B}x{C}`): the whole slab pinned
+//!    2. **quantized block-table** (`decode_paged_q8_{B}x{C}`) when the
+//!       store's slab codec is int8 and the manifest carries the q8
+//!       artifact: the quantized planes + per-row scales upload as four
+//!       pinned tensors (~4x fewer slab bytes than the f32 pair) and the
+//!       artifact dequantizes in-HLO; an int8 store *without* the q8
+//!       artifact decodes through the plain paged family — the view
+//!       dequantizes host-side at pinned upload, so correctness never
+//!       depends on the artifact being present;
+//!    3. **block-table** (`decode_paged_{B}x{C}`): the whole slab pinned
 //!       as one pair, O(referenced blocks) planning work per token;
-//!    3. **dense staged bridge** (`decode_{B}x{C}`), kept behind
+//!    4. **dense staged bridge** (`decode_{B}x{C}`), kept behind
 //!       `PagingConfig::dense_staging` and for the flat arena.
 //!  * [`advance_lane`] applies one lane's slice of the outputs: append the
 //!    new KV row (block-compacting under pool pressure when a
@@ -39,11 +47,11 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::paging::{AppendResult, DecodeView, KvStore};
+use crate::coordinator::paging::{AppendResult, DecodeView, KvCodec, KvStore};
 use crate::coordinator::policies::{Exec, PolicyCfg};
 use crate::manifest::{
     decode_artifact_name, decode_paged_artifact_name,
-    decode_paged_shard_artifact_name, Manifest,
+    decode_paged_q8_artifact_name, decode_paged_shard_artifact_name, Manifest,
 };
 use crate::metrics::{names, Metrics};
 use crate::runtime::outputs::DecodeOut;
@@ -67,6 +75,9 @@ pub enum DecodePath {
     /// KV-head-sharded block tables: S per-shard slab pairs + shared
     /// tables/lens (`decode_paged_shard_{B}x{C}s{S}`).
     Sharded,
+    /// Quantized block tables: int8 slab planes + per-row scales + shared
+    /// tables/lens, dequantized in-HLO (`decode_paged_q8_{B}x{C}`).
+    BlockTableQ8,
     /// Block-table-native: slab + tables + lens (`decode_paged_{B}x{C}`).
     BlockTable,
     /// Dense staging bridge (`decode_{B}x{C}`).
@@ -135,9 +146,21 @@ pub struct DecodeBatch {
     cap: usize,
     dense: String,
     paged: Option<PagedArtifact>,
+    /// Quantized twin of `paged` (same slab/table buckets; the slab
+    /// inputs are int8 planes + per-row scales, dequantized in-HLO).
+    paged_q8: Option<PagedArtifact>,
     /// Sharded artifact per shard count `S` (from the manifest's
     /// `shard_counts` bucket).
     sharded: BTreeMap<usize, ShardArtifact>,
+}
+
+/// Outcome of artifact resolution for one step, best path first.
+#[derive(Clone, Copy)]
+enum Resolved<'a> {
+    Shard(&'a ShardArtifact),
+    Q8(&'a PagedArtifact),
+    Paged(&'a PagedArtifact),
+    Staged,
 }
 
 impl DecodeBatch {
@@ -145,16 +168,19 @@ impl DecodeBatch {
     /// paged and sharded artifacts are optional: older artifact dirs
     /// without them simply keep the staged (resp. unsharded) path.
     pub fn new(man: &Manifest, b: usize, cap: usize) -> DecodeBatch {
-        let paged_name = decode_paged_artifact_name(b, cap);
-        let paged = man.artifacts.get(&paged_name).map(|meta| {
-            let bt = meta.block_tokens.max(1);
-            PagedArtifact {
-                name: paged_name,
-                pool_blocks: meta.pool_blocks,
-                block_tokens: bt,
-                max_blocks: (cap + bt - 1) / bt,
-            }
-        });
+        let mk_paged = |name: String| {
+            man.artifacts.get(&name).map(|meta| {
+                let bt = meta.block_tokens.max(1);
+                PagedArtifact {
+                    name,
+                    pool_blocks: meta.pool_blocks,
+                    block_tokens: bt,
+                    max_blocks: (cap + bt - 1) / bt,
+                }
+            })
+        };
+        let paged = mk_paged(decode_paged_artifact_name(b, cap));
+        let paged_q8 = mk_paged(decode_paged_q8_artifact_name(b, cap));
         let mut sharded = BTreeMap::new();
         for &s in &man.buckets.shard_counts {
             let name = decode_paged_shard_artifact_name(b, cap, s);
@@ -178,6 +204,7 @@ impl DecodeBatch {
             cap,
             dense: decode_artifact_name(b, cap),
             paged,
+            paged_q8,
             sharded,
         }
     }
@@ -190,40 +217,51 @@ impl DecodeBatch {
         self.cap
     }
 
-    fn resolve<'v>(
-        &self,
-        view: &Option<DecodeView<'v>>,
-    ) -> (Option<&ShardArtifact>, Option<&PagedArtifact>) {
-        let Some(v) = view else { return (None, None) };
-        let shard = if v.shards > 1 {
-            self.sharded.get(&v.shards).filter(|a| a.accepts(v, self.cap))
-        } else {
-            None
-        };
-        if shard.is_some() {
-            return (shard, None);
+    fn resolve<'s>(&'s self, view: &Option<DecodeView<'_>>) -> Resolved<'s> {
+        let Some(v) = view else { return Resolved::Staged };
+        if v.shards > 1 {
+            if let Some(a) =
+                self.sharded.get(&v.shards).filter(|a| a.accepts(v, self.cap))
+            {
+                // The per-shard upload win beats the q8 byte win for a
+                // store that is both sharded and quantized; the shard
+                // views dequantize host-side at materialization.
+                return Resolved::Shard(a);
+            }
         }
-        // A sharded store can still decode through the unsharded paged
-        // artifact (the host keeps the canonical dense planes) — only the
-        // per-shard upload win is lost, never correctness.
-        (None, self.paged.as_ref().filter(|a| a.accepts(v, self.cap)))
+        if v.codec == KvCodec::Int8PerRow {
+            if let Some(a) =
+                self.paged_q8.as_ref().filter(|a| a.accepts(v, self.cap))
+            {
+                return Resolved::Q8(a);
+            }
+        }
+        // A sharded (or quantized) store can still decode through the
+        // unsharded paged artifact — the host keeps (or can reconstruct)
+        // the canonical dense planes, so only the per-shard / quantized
+        // upload win is lost, never correctness.
+        match self.paged.as_ref().filter(|a| a.accepts(v, self.cap)) {
+            Some(a) => Resolved::Paged(a),
+            None => Resolved::Staged,
+        }
     }
 
     /// The path [`DecodeBatch::step`] will take for this store.
     pub fn path_for(&self, store: &dyn KvStore) -> DecodePath {
         match self.resolve(&store.decode_view()) {
-            (Some(_), _) => DecodePath::Sharded,
-            (None, Some(_)) => DecodePath::BlockTable,
-            _ => DecodePath::Staged,
+            Resolved::Shard(_) => DecodePath::Sharded,
+            Resolved::Q8(_) => DecodePath::BlockTableQ8,
+            Resolved::Paged(_) => DecodePath::BlockTable,
+            Resolved::Staged => DecodePath::Staged,
         }
     }
 
     /// Artifact name the next step will execute (for logs / warmup).
     pub fn artifact_for(&self, store: &dyn KvStore) -> &str {
         match self.resolve(&store.decode_view()) {
-            (Some(a), _) => &a.name,
-            (None, Some(a)) => &a.name,
-            _ => &self.dense,
+            Resolved::Shard(a) => &a.name,
+            Resolved::Q8(a) | Resolved::Paged(a) => &a.name,
+            Resolved::Staged => &self.dense,
         }
     }
 
@@ -265,8 +303,8 @@ impl DecodeBatch {
 
         // Build the view once; it decides the path and feeds the inputs.
         let view = store.decode_view();
-        let (shard_art, paged_art) = self.resolve(&view);
-        if shard_art.is_none() && paged_art.is_none() {
+        let resolved = self.resolve(&view);
+        if matches!(resolved, Resolved::Staged) {
             // Dense staged bridge (fallback/oracle path; deliberately not
             // scratch-buffered — `stage()` itself materializes the dense
             // copy, which dwarfs the input plumbing).
@@ -300,10 +338,16 @@ impl DecodeBatch {
         }
 
         let view = view.expect("paged/sharded path checked above");
-        let (name, pool_blocks, max_blocks, shards) = match (shard_art, paged_art)
-        {
-            (Some(a), _) => (&a.name, a.pool_blocks, a.max_blocks, a.shards),
-            (_, Some(a)) => (&a.name, a.pool_blocks, a.max_blocks, 1usize),
+        if let Resolved::Q8(art) = resolved {
+            return self.step_q8(ex, &view, art, metrics, scratch, t_start);
+        }
+        let (name, pool_blocks, max_blocks, shards) = match resolved {
+            Resolved::Shard(a) => {
+                (&a.name, a.pool_blocks, a.max_blocks, a.shards)
+            }
+            Resolved::Paged(a) => {
+                (&a.name, a.pool_blocks, a.max_blocks, 1usize)
+            }
             _ => unreachable!("resolved above"),
         };
         scratch.fill_tables(&view, max_blocks);
@@ -393,6 +437,70 @@ impl DecodeBatch {
         }
         Ok(out)
     }
+
+    /// Quantized block-table step: the int8 slab planes + per-row scales
+    /// travel as four pinned tensors (input indices 2..=5), tables/lens
+    /// ride in the shared scratch slots, and the artifact dequantizes
+    /// in-HLO. The four planes share the whole-slab stamp — any row write
+    /// requantizes in place, so they go stale (and re-upload) together —
+    /// which still moves ~4x fewer slab bytes than the f32 pair.
+    fn step_q8(
+        &self,
+        ex: &dyn Exec,
+        view: &DecodeView<'_>,
+        art: &PagedArtifact,
+        metrics: Option<&Metrics>,
+        scratch: &mut DecodeScratch,
+        t_start: Instant,
+    ) -> Result<DecodeOut> {
+        scratch.fill_tables(view, art.max_blocks);
+        scratch.ensure_pins_q8(view);
+        let t_upload = Instant::now();
+        if let Some(m) = metrics {
+            m.observe(
+                names::DECODE_PREP_SECS,
+                (t_upload - t_start).as_secs_f64(),
+            );
+        }
+
+        let stale = scratch.keys.iter().any(|(a, b)| {
+            !(ex.pinned_is_current(a, view.version)
+                && ex.pinned_is_current(b, view.version))
+        });
+        if stale {
+            scratch.materialize_q8(view, art.pool_blocks);
+        } else {
+            scratch.park_q8(view);
+        }
+        let t_exec = Instant::now();
+        if let Some(m) = metrics {
+            m.inc(names::DECODE_STEPS_Q8, 1);
+            m.inc(names::SHARD_UPLOADS, stale as u64);
+            m.observe(
+                names::DECODE_UPLOAD_SECS,
+                (t_exec - t_upload).as_secs_f64(),
+            );
+        }
+
+        let out = match ex.run_pinned_ref(&art.name, &scratch.pins, &scratch.ins)
+        {
+            Ok(r) => r,
+            // Same eviction-race retry contract as the f32 paths: resend
+            // payloads only for the specific residency miss.
+            Err(e) if format!("{e:#}").contains("is not resident") => {
+                scratch.materialize_q8(view, art.pool_blocks);
+                if let Some(m) = metrics {
+                    m.inc(names::SHARD_UPLOADS, 1);
+                }
+                ex.run_pinned_ref(&art.name, &scratch.pins, &scratch.ins)?
+            }
+            Err(e) => return Err(e),
+        };
+        if let Some(m) = metrics {
+            m.observe(names::DECODE_EXEC_SECS, t_exec.elapsed().as_secs_f64());
+        }
+        Ok(DecodeOut::from_vec(out))
+    }
 }
 
 /// Pinned-buffer keys for `shards` slab-plane pairs of store `sid`: one
@@ -415,6 +523,24 @@ fn pin_keys(sid: u64, shards: usize) -> Vec<(String, String)> {
             })
             .collect()
     }
+}
+
+/// Pinned-buffer keys for the q8 slab layout of store `sid`: two pairs,
+/// (quantized K plane, K scales) and (quantized V plane, V scales). Keyed
+/// apart from the f32 `decode_slab_{k,v}` family so a precision flip (or
+/// a q8 artifact appearing mid-flight) never aliases a stale device
+/// buffer of the other layout.
+fn pin_keys_q8(sid: u64) -> Vec<(String, String)> {
+    vec![
+        (
+            format!("decode_slab_kq:{sid:x}"),
+            format!("decode_slab_ksc:{sid:x}"),
+        ),
+        (
+            format!("decode_slab_vq:{sid:x}"),
+            format!("decode_slab_vsc:{sid:x}"),
+        ),
+    ]
 }
 
 /// Pinned-buffer keys for a store's native shard layout (one pair per
@@ -514,8 +640,9 @@ pub struct DecodeScratch {
     spares: Vec<Option<HostTensor>>,
     /// `(k_key, v_key)` per pinned pair, cached per store id.
     keys: Vec<(String, String)>,
-    /// Store id (+ effective pair count) the keys/pins were built for.
-    keys_for: (u64, usize),
+    /// Store id + effective pair count + q8-layout flag the keys/pins
+    /// were built for.
+    keys_for: (u64, usize, bool),
     /// Pair count of the RESOLVED artifact this step (1 when a sharded
     /// store falls back to the unsharded paged artifact — the whole slab
     /// then travels as one legacy-keyed pair).
@@ -541,7 +668,7 @@ impl DecodeScratch {
             pins: Vec::new(),
             spares: Vec::new(),
             keys: Vec::new(),
-            keys_for: (u64::MAX, 0),
+            keys_for: (u64::MAX, 0, false),
             eff_shards: 1,
         }
     }
@@ -593,29 +720,50 @@ impl DecodeScratch {
         let sid = view.version >> 32;
         let eff = eff_shards.max(1);
         self.eff_shards = eff;
-        if self.keys_for == (sid, eff) {
+        if self.keys_for == (sid, eff, false) {
             return;
         }
         self.keys = pin_keys(sid, eff);
+        self.rebuild_pin_slots();
+        self.keys_for = (sid, eff, false);
+    }
+
+    /// [`DecodeScratch::ensure_pins`]'s q8 twin: four pinned tensors at
+    /// input indices 2..=5 — (q-K, K scales) then (q-V, V scales) — under
+    /// the `decode_slab_{kq,ksc,vq,vsc}` key family.
+    fn ensure_pins_q8(&mut self, view: &DecodeView<'_>) {
+        let sid = view.version >> 32;
+        self.eff_shards = 1;
+        if self.keys_for == (sid, 2, true) {
+            return;
+        }
+        self.keys = pin_keys_q8(sid);
+        self.rebuild_pin_slots();
+        self.keys_for = (sid, 2, true);
+    }
+
+    /// Rebuild the pinned slots from `self.keys`: pair `p` pins input
+    /// indices `2 + 2p` and `3 + 2p` (inputs 0/1 are toks/poss; tables
+    /// and lens fill the remaining slots in order after the splice).
+    fn rebuild_pin_slots(&mut self) {
         self.pins.clear();
         self.spares.clear();
-        for (s, (k_key, v_key)) in self.keys.iter().enumerate() {
+        for (p, (a_key, b_key)) in self.keys.iter().enumerate() {
             self.pins.push(PinnedInput::new(
-                2 + 2 * s,
-                k_key,
+                2 + 2 * p,
+                a_key,
                 0,
                 HostTensor::empty(),
             ));
             self.pins.push(PinnedInput::new(
-                3 + 2 * s,
-                v_key,
+                3 + 2 * p,
+                b_key,
                 0,
                 HostTensor::empty(),
             ));
             self.spares.push(None);
             self.spares.push(None);
         }
-        self.keys_for = (sid, eff);
     }
 
     fn shard_version(&self, view: &DecodeView<'_>, s: usize) -> u64 {
@@ -668,6 +816,47 @@ impl DecodeScratch {
                 self.spares[i] = Some(t);
             }
             self.pins[i].version = ver;
+        }
+    }
+
+    /// Take pinned slot `i`'s payload buffer (or its parked spare).
+    fn take_buf(&mut self, i: usize) -> HostTensor {
+        self.pins[i]
+            .tensor
+            .take()
+            .or_else(|| self.spares[i].take())
+            .unwrap_or_else(HostTensor::empty)
+    }
+
+    /// Materialize all four q8 planes into the persistent payload buffers
+    /// (stale path: the whole quantized slab re-uploads).
+    fn materialize_q8(&mut self, view: &DecodeView<'_>, pool_blocks: usize) {
+        let mut kq = self.take_buf(0);
+        let mut ksc = self.take_buf(1);
+        let mut vq = self.take_buf(2);
+        let mut vsc = self.take_buf(3);
+        let ok = view.q8_slab_tensors_into(
+            pool_blocks,
+            &mut kq,
+            &mut ksc,
+            &mut vq,
+            &mut vsc,
+        );
+        debug_assert!(ok, "q8 path resolved for a non-int8 store");
+        for (i, t) in [kq, ksc, vq, vsc].into_iter().enumerate() {
+            self.pins[i].tensor = Some(t);
+            self.pins[i].version = view.version;
+        }
+    }
+
+    /// Send the q8 pins payload-less (current path: the device copies are
+    /// reused); buffers park in `spares` for the next stale step.
+    fn park_q8(&mut self, view: &DecodeView<'_>) {
+        for i in 0..4 {
+            if let Some(t) = self.pins[i].tensor.take() {
+                self.spares[i] = Some(t);
+            }
+            self.pins[i].version = view.version;
         }
     }
 }
@@ -833,22 +1022,62 @@ mod tests {
         }
     }
 
+    /// Manifest plus the quantized paged artifact for the 1x8 bucket.
+    fn with_q8(mut man: Manifest) -> Manifest {
+        man.artifacts.insert(
+            "decode_paged_q8_1x8".to_string(),
+            ArtifactMeta {
+                name: "decode_paged_q8_1x8".to_string(),
+                file: "decode_paged_q8_1x8.hlo.txt".to_string(),
+                kind: "decode_paged_q8".to_string(),
+                n: 0,
+                batch: 1,
+                cap: 8,
+                tsp_layer: 1,
+                pool_blocks: 8,
+                block_tokens: 2,
+                shards: 0,
+                shard_kv_heads: 0,
+                inputs: Vec::new(),
+                outputs: Vec::new(),
+            },
+        );
+        man
+    }
+
     fn store() -> PagedArena {
         store_sharded(1)
     }
 
-    fn store_sharded(shards: usize) -> PagedArena {
-        let m = meta();
-        let cfg = PagingConfig { block_tokens: 2, shards, ..Default::default() };
-        let mut pa = PagedArena::new(&m, 1, 8, cfg);
-        let mut rc = RequestCache::new(&m);
+    /// Admit one 3-token lane into every layer of `pa`.
+    fn admit_demo(pa: &mut PagedArena) {
+        let mut rc = RequestCache::new(&meta());
         let re = 4;
         for l in 0..2 {
             rc.k[l] = (0..3 * re).map(|i| i as f32).collect();
             rc.v[l] = (0..3 * re).map(|i| -(i as f32)).collect();
             rc.lens[l] = 3;
         }
-        PagedArena::admit(&mut pa, &rc).unwrap();
+        PagedArena::admit(pa, &rc).unwrap();
+    }
+
+    fn store_sharded(shards: usize) -> PagedArena {
+        let m = meta();
+        let cfg = PagingConfig { block_tokens: 2, shards, ..Default::default() };
+        let mut pa = PagedArena::new(&m, 1, 8, cfg);
+        admit_demo(&mut pa);
+        pa
+    }
+
+    fn store_q8() -> PagedArena {
+        let m = meta();
+        let cfg = PagingConfig {
+            block_tokens: 2,
+            precision: KvCodec::Int8PerRow,
+            ..Default::default()
+        };
+        let mut pa = PagedArena::new(&m, 1, 8, cfg);
+        admit_demo(&mut pa);
         pa
     }
 
@@ -879,6 +1108,46 @@ mod tests {
         let batch = DecodeBatch::new(&manifest(true), 1, 8);
         assert_eq!(batch.path_for(&pa), DecodePath::BlockTable);
         assert_eq!(batch.artifact_for(&pa), "decode_paged_1x8");
+    }
+
+    #[test]
+    fn int8_store_with_q8_artifact_takes_q8_path() {
+        let pa = store_q8();
+        let batch = DecodeBatch::new(&with_q8(manifest(true)), 1, 8);
+        assert_eq!(batch.path_for(&pa), DecodePath::BlockTableQ8);
+        assert_eq!(batch.artifact_for(&pa), "decode_paged_q8_1x8");
+        // an f32 store in the same manifest ignores the q8 artifact
+        let flat = store();
+        assert_eq!(batch.path_for(&flat), DecodePath::BlockTable);
+        assert_eq!(batch.artifact_for(&flat), "decode_paged_1x8");
+    }
+
+    #[test]
+    fn int8_store_without_q8_artifact_host_dequantizes_via_paged() {
+        // Correctness never depends on the q8 artifact: the view
+        // dequantizes host-side at pinned upload on the plain paged path.
+        let pa = store_q8();
+        let batch = DecodeBatch::new(&manifest(true), 1, 8);
+        assert_eq!(batch.path_for(&pa), DecodePath::BlockTable);
+        assert_eq!(batch.artifact_for(&pa), "decode_paged_1x8");
+    }
+
+    #[test]
+    fn sharded_quantized_store_prefers_shard_artifact() {
+        // Per-shard upload granularity beats the q8 byte win when both
+        // artifacts are available (shard views dequantize host-side).
+        let m = meta();
+        let cfg = PagingConfig {
+            block_tokens: 2,
+            shards: 2,
+            precision: KvCodec::Int8PerRow,
+            ..Default::default()
+        };
+        let mut pa = PagedArena::new(&m, 1, 8, cfg);
+        admit_demo(&mut pa);
+        let batch =
+            DecodeBatch::new(&with_q8(manifest_sharded(true, true)), 1, 8);
+        assert_eq!(batch.path_for(&pa), DecodePath::Sharded);
     }
 
     /// Exec that records each call's artifact name + input shapes (after
@@ -969,6 +1238,36 @@ mod tests {
         assert_eq!(shapes[4], vec![8, 2, 1, 2], "shard 1 slab_k");
         assert_eq!(shapes[6], vec![2, 1, 4], "tables shared");
         assert_eq!(shapes[7], vec![2, 1], "lens shared");
+    }
+
+    #[test]
+    fn q8_step_sends_quant_planes_with_scales() {
+        // The q8 ABI: (toks, poss, q_k, k_scales, q_v, v_scales, tables,
+        // lens) — quant planes ship as integer-valued f32 `[nb, bt, KV,
+        // hd]`, scales as `[nb, bt]` (one per row per block).
+        let pa = store_q8();
+        let batch = DecodeBatch::new(&with_q8(manifest(true)), 1, 8);
+        let ex = CaptureExec::new(vec![
+            HostTensor::zeros(vec![1, 8]),       // logits
+            HostTensor::zeros(vec![2, 1, 2, 2]), // k_new
+            HostTensor::zeros(vec![2, 1, 2, 2]), // v_new
+        ]);
+        let lane = LaneInput { slot: 0, token: 1, pos: 3 };
+        let out = batch.step(&ex, &pa, &[lane], None).expect("step runs");
+        assert_eq!(out.k_new.shape, vec![2, 1, 2, 2]);
+        let calls = ex.calls.borrow();
+        assert_eq!(calls.len(), 1);
+        let (name, shapes) = &calls[0];
+        assert_eq!(name, "decode_paged_q8_1x8");
+        assert_eq!(shapes.len(), 8, "q8 ABI: 8 inputs");
+        assert_eq!(shapes[0], vec![1], "toks");
+        assert_eq!(shapes[1], vec![1], "poss");
+        assert_eq!(shapes[2], vec![8, 2, 2, 2], "quantized slab_k");
+        assert_eq!(shapes[3], vec![8, 2], "per-row K scales");
+        assert_eq!(shapes[4], vec![8, 2, 2, 2], "quantized slab_v");
+        assert_eq!(shapes[5], vec![8, 2], "per-row V scales");
+        assert_eq!(shapes[6], vec![2, 1, 4], "tables [L, B, mb]");
+        assert_eq!(shapes[7], vec![2, 1], "lens");
     }
 
     #[test]

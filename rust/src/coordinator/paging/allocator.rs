@@ -36,6 +36,7 @@
 use std::collections::{BTreeMap, VecDeque};
 
 use super::block::{BlockId, BlockMeta, BlockStore};
+use super::codec::KvCodec;
 use super::tenant::{TenantId, TenantQuota};
 
 /// Result of an allocation: the block, plus the hash that must be removed
@@ -103,14 +104,30 @@ pub struct BlockAllocator {
 
 impl BlockAllocator {
     /// Pool of `num_blocks` blocks of `block_tokens` rows, each row
-    /// `row_elems` f32 wide (per K/V plane).
+    /// `row_elems` elements wide (per K/V plane), stored as f32.
     pub fn new(num_blocks: usize, block_tokens: usize, row_elems: usize) -> Self {
+        Self::with_codec(num_blocks, block_tokens, row_elems, KvCodec::F32)
+    }
+
+    /// [`BlockAllocator::new`] with an explicit slab codec
+    /// (`PagingConfig::precision`).
+    pub fn with_codec(
+        num_blocks: usize,
+        block_tokens: usize,
+        row_elems: usize,
+        codec: KvCodec,
+    ) -> Self {
         // Reverse push so blocks are handed out in 0, 1, 2, ... order
         // (deterministic layouts make the differential tests readable).
         let free: Vec<BlockId> =
             (0..num_blocks as u32).rev().map(BlockId).collect();
         BlockAllocator {
-            store: BlockStore::new(num_blocks, block_tokens, row_elems),
+            store: BlockStore::with_codec(
+                num_blocks,
+                block_tokens,
+                row_elems,
+                codec,
+            ),
             meta: vec![BlockMeta::default(); num_blocks],
             free,
             evictable: VecDeque::new(),
@@ -636,7 +653,11 @@ mod tests {
         a.store_mut().write_row(h, 0, &[5.0, 5.0], &[6.0, 6.0]);
         a.seal(h, 42);
         a.decref(h);
-        assert_eq!(a.store().k_row(h, 0), &[5.0, 5.0], "cached content kept");
+        assert_eq!(
+            &a.store().k_row(h, 0)[..],
+            &[5.0, 5.0],
+            "cached content kept"
+        );
         let _ = a.alloc(T0).unwrap(); // free list
         let _ = a.alloc(T0).unwrap(); // free list
         let out = a.alloc(T0).unwrap(); // evicts h

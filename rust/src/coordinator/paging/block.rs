@@ -1,12 +1,29 @@
 //! Physical block storage for the paged KV cache.
 //!
 //! A *block* holds `block_tokens` consecutive token rows of K and V data
-//! (each row is `kv_heads * head_dim` f32). Blocks carry no layer or
+//! (each row is `kv_heads * head_dim` elements). Blocks carry no layer or
 //! sequence identity of their own — that mapping lives in the per-sequence
 //! block tables owned by `PagedArena` — so any block can serve any
 //! (sequence, layer) position, which is what makes prefix sharing and
 //! copy-on-write possible.
+//!
+//! **In-slab quantization.** The slab's element encoding is a
+//! [`KvCodec`]: verbatim f32 (the default — bit-identical to the
+//! pre-codec store), IEEE 754 binary16, or int8 with one f32 scale per
+//! token row per plane (`scale = max|row| / 127`). Rows are encoded at
+//! write time and decoded at read time; `copy_rows`/`zero_block` operate
+//! on the *encoded* representation (exact, no drift), and the per-row
+//! scale layout keeps every operation shard-oblivious — a head-range
+//! patch via [`BlockStore::write_row_range`] reuses the row's scale when
+//! the patch fits it, so untouched elements keep their stored bits, and
+//! only rescales (a whole-row requantization) when the patch grows the
+//! row's magnitude. The API stays f32 at the surface: reads return
+//! `Cow<[f32]>` (borrowed under f32, decoded-to-owned otherwise).
 
+use std::borrow::Cow;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::codec::{self, KvCodec};
 use super::tenant::TenantId;
 
 /// Index of a physical block in the pool slab.
@@ -47,29 +64,202 @@ pub struct BlockMeta {
     pub owner: TenantId,
 }
 
-/// Contiguous slab of `num_blocks` fixed-size blocks (K and V planes).
+/// The int8 planes of a quantized slab, borrowed raw for device upload:
+/// quantized values (`[num_blocks, block_tokens, row_elems]` i8, same
+/// row-major layout as the f32 planes) plus one f32 scale per token row
+/// per plane (`[num_blocks, block_tokens]`). The `decode_paged_q8_*`
+/// artifacts take these and dequantize in-HLO.
+#[derive(Debug, Clone, Copy)]
+pub struct Q8Planes<'a> {
+    /// Quantized K plane.
+    pub k_q: &'a [i8],
+    /// Per-row K scales.
+    pub k_scales: &'a [f32],
+    /// Quantized V plane.
+    pub v_q: &'a [i8],
+    /// Per-row V scales.
+    pub v_scales: &'a [f32],
+}
+
+/// One K or V plane under the slab codec. Scales (int8 only) are indexed
+/// by global row `block * block_tokens + row`.
+#[derive(Debug)]
+enum Plane {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    Int8 { q: Vec<i8>, scales: Vec<f32> },
+}
+
+impl Plane {
+    fn new(codec: KvCodec, rows: usize, row_elems: usize) -> Plane {
+        let elems = rows * row_elems;
+        match codec {
+            KvCodec::F32 => Plane::F32(vec![0.0; elems]),
+            KvCodec::F16 => Plane::F16(vec![0; elems]),
+            KvCodec::Int8PerRow => Plane::Int8 {
+                q: vec![0; elems],
+                scales: vec![0.0; rows],
+            },
+        }
+    }
+
+    /// Decode `re` elements starting at element `base` (row `ri`) into
+    /// `out`. `range` is the element sub-range of the row (full row:
+    /// `0..re`).
+    fn decode_range_into(
+        &self,
+        base: usize,
+        ri: usize,
+        range: std::ops::Range<usize>,
+        out: &mut [f32],
+    ) {
+        let (s, e) = (base + range.start, base + range.end);
+        match self {
+            Plane::F32(p) => out.copy_from_slice(&p[s..e]),
+            Plane::F16(p) => {
+                for (o, &h) in out.iter_mut().zip(&p[s..e]) {
+                    *o = codec::f16_to_f32(h);
+                }
+            }
+            Plane::Int8 { q, scales } => {
+                codec::dequantize_row_int8(&q[s..e], scales[ri], out);
+            }
+        }
+    }
+
+    /// Encode one full row (`re` elements at element `base`, row `ri`).
+    fn encode_row(&mut self, base: usize, ri: usize, re: usize, row: &[f32]) {
+        match self {
+            Plane::F32(p) => p[base..base + re].copy_from_slice(row),
+            Plane::F16(p) => {
+                for (h, &x) in p[base..base + re].iter_mut().zip(row) {
+                    *h = codec::f32_to_f16(x);
+                }
+            }
+            Plane::Int8 { q, scales } => {
+                scales[ri] =
+                    codec::quantize_row_int8(row, &mut q[base..base + re]);
+            }
+        }
+    }
+
+    /// Patch a sub-range of a row. Lossless/f16 planes re-encode just the
+    /// patch; int8 keeps the row's scale when the patch fits it (so the
+    /// untouched elements' stored bits never move) and requantizes the
+    /// whole row only when the patch grows the row's magnitude.
+    fn patch_row(
+        &mut self,
+        base: usize,
+        ri: usize,
+        re: usize,
+        range: std::ops::Range<usize>,
+        sub: &[f32],
+    ) {
+        let (s, e) = (base + range.start, base + range.end);
+        match self {
+            Plane::F32(p) => p[s..e].copy_from_slice(sub),
+            Plane::F16(p) => {
+                for (h, &x) in p[s..e].iter_mut().zip(sub) {
+                    *h = codec::f32_to_f16(x);
+                }
+            }
+            Plane::Int8 { q, scales } => {
+                let scale = scales[ri];
+                let submax = sub.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                if submax <= scale * 127.0 {
+                    codec::quantize_row_int8_with(sub, &mut q[s..e], scale);
+                } else {
+                    let mut full = vec![0.0f32; re];
+                    codec::dequantize_row_int8(
+                        &q[base..base + re],
+                        scale,
+                        &mut full,
+                    );
+                    full[range].copy_from_slice(sub);
+                    scales[ri] = codec::quantize_row_int8(
+                        &full,
+                        &mut q[base..base + re],
+                    );
+                }
+            }
+        }
+    }
+
+    /// Copy `rows` encoded rows (plus scales) from `src_row` to `dst_row`
+    /// (global row indices; ranges never overlap — distinct blocks).
+    fn copy_rows(&mut self, src_row: usize, dst_row: usize, rows: usize, re: usize) {
+        let (s, d, n) = (src_row * re, dst_row * re, rows * re);
+        match self {
+            Plane::F32(p) => p.copy_within(s..s + n, d),
+            Plane::F16(p) => p.copy_within(s..s + n, d),
+            Plane::Int8 { q, scales } => {
+                q.copy_within(s..s + n, d);
+                scales.copy_within(src_row..src_row + rows, dst_row);
+            }
+        }
+    }
+
+    fn zero_rows(&mut self, row0: usize, rows: usize, re: usize) {
+        let (s, n) = (row0 * re, rows * re);
+        match self {
+            Plane::F32(p) => p[s..s + n].fill(0.0),
+            Plane::F16(p) => p[s..s + n].fill(0),
+            Plane::Int8 { q, scales } => {
+                q[s..s + n].fill(0);
+                scales[row0..row0 + rows].fill(0.0);
+            }
+        }
+    }
+}
+
+/// Contiguous slab of `num_blocks` fixed-size blocks (K and V planes),
+/// stored under a [`KvCodec`].
 #[derive(Debug)]
 pub struct BlockStore {
     block_tokens: usize,
     row_elems: usize,
     num_blocks: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    codec: KvCodec,
+    k: Plane,
+    v: Plane,
+    /// Rows encoded through a lossy codec (write-side; `PoolStats`).
+    quant_rows: u64,
+    /// Rows decoded from a lossy codec. Atomic: reads are `&self`.
+    dequant_rows: AtomicU64,
+    /// Nanoseconds spent in *bulk* codec conversions (whole-plane
+    /// dequantization at slab materialization). Per-row conversions ride
+    /// along untimed — they are smaller than the timer call itself.
+    codec_nanos: AtomicU64,
 }
 
 impl BlockStore {
-    /// Zero-initialized slab of `num_blocks` blocks, each holding
-    /// `block_tokens` rows of `row_elems` f32 per K/V plane.
+    /// Zero-initialized f32 slab (the lossless default).
     pub fn new(num_blocks: usize, block_tokens: usize, row_elems: usize) -> Self {
+        Self::with_codec(num_blocks, block_tokens, row_elems, KvCodec::F32)
+    }
+
+    /// Zero-initialized slab of `num_blocks` blocks, each holding
+    /// `block_tokens` rows of `row_elems` elements per K/V plane, encoded
+    /// under `codec`.
+    pub fn with_codec(
+        num_blocks: usize,
+        block_tokens: usize,
+        row_elems: usize,
+        codec: KvCodec,
+    ) -> Self {
         assert!(block_tokens > 0, "block_tokens must be positive");
         assert!(row_elems > 0, "row_elems must be positive");
-        let elems = num_blocks * block_tokens * row_elems;
+        let rows = num_blocks * block_tokens;
         BlockStore {
             block_tokens,
             row_elems,
             num_blocks,
-            k: vec![0.0; elems],
-            v: vec![0.0; elems],
+            codec,
+            k: Plane::new(codec, rows, row_elems),
+            v: Plane::new(codec, rows, row_elems),
+            quant_rows: 0,
+            dequant_rows: AtomicU64::new(0),
+            codec_nanos: AtomicU64::new(0),
         }
     }
 
@@ -83,26 +273,100 @@ impl BlockStore {
         self.block_tokens
     }
 
-    /// f32 elements per token row (`kv_heads * head_dim`).
+    /// Elements per token row (`kv_heads * head_dim`).
     pub fn row_elems(&self) -> usize {
         self.row_elems
     }
 
-    /// Total f32 elements held (K + V planes), for memory reporting.
+    /// The slab's element codec.
+    pub fn codec(&self) -> KvCodec {
+        self.codec
+    }
+
+    /// Total logical f32 elements held (K + V planes), codec-independent.
     pub fn total_elems(&self) -> usize {
-        self.k.len() + self.v.len()
+        2 * self.num_blocks * self.block_tokens * self.row_elems
     }
 
-    /// The whole K plane (`[num_blocks, block_tokens, row_elems]` row
-    /// major) — borrowed by `DecodeView` so block-table decode reads the
-    /// slab in place instead of densifying it.
-    pub fn k_plane(&self) -> &[f32] {
-        &self.k
+    /// Host bytes the slab occupies under its codec (K + V planes, scale
+    /// planes included) — the `pool_bytes_quantized` gauge. Routes
+    /// through [`KvCodec::bytes_per_row`] like every other byte account.
+    pub fn slab_bytes(&self) -> usize {
+        2 * self.num_blocks
+            * self.block_tokens
+            * self.codec.bytes_per_row(self.row_elems)
     }
 
-    /// The whole V plane (layout mirrors [`BlockStore::k_plane`]).
-    pub fn v_plane(&self) -> &[f32] {
-        &self.v
+    /// The whole K plane as f32 (`[num_blocks, block_tokens, row_elems]`
+    /// row major) — `Some` only under the f32 codec, where `DecodeView`
+    /// borrows the slab in place instead of densifying it.
+    pub fn k_plane_f32(&self) -> Option<&[f32]> {
+        match &self.k {
+            Plane::F32(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// The whole V plane as f32 (layout mirrors
+    /// [`BlockStore::k_plane_f32`]).
+    pub fn v_plane_f32(&self) -> Option<&[f32]> {
+        match &self.v {
+            Plane::F32(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Raw int8 planes + per-row scale planes for device upload — `Some`
+    /// only under [`KvCodec::Int8PerRow`].
+    pub fn q8_planes(&self) -> Option<Q8Planes<'_>> {
+        match (&self.k, &self.v) {
+            (
+                Plane::Int8 { q: kq, scales: ks },
+                Plane::Int8 { q: vq, scales: vs },
+            ) => Some(Q8Planes {
+                k_q: kq,
+                k_scales: ks,
+                v_q: vq,
+                v_scales: vs,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Dequantize the whole K plane into the prefix of `out`
+    /// (`out.len() >= num_blocks * block_tokens * row_elems`): the
+    /// host-side dequant fallback that keeps the dense/staged oracle path
+    /// (and non-q8 artifacts over a quantized store) working.
+    pub fn decode_k_plane_into(&self, out: &mut [f32]) {
+        self.decode_plane_into(false, out);
+    }
+
+    /// Dequantize the whole V plane into the prefix of `out`.
+    pub fn decode_v_plane_into(&self, out: &mut [f32]) {
+        self.decode_plane_into(true, out);
+    }
+
+    fn decode_plane_into(&self, v: bool, out: &mut [f32]) {
+        let re = self.row_elems;
+        let rows = self.num_blocks * self.block_tokens;
+        assert!(out.len() >= rows * re, "plane decode target too small");
+        let plane = if v { &self.v } else { &self.k };
+        if let Plane::F32(p) = plane {
+            out[..rows * re].copy_from_slice(p);
+            return;
+        }
+        let t0 = std::time::Instant::now();
+        for ri in 0..rows {
+            plane.decode_range_into(
+                ri * re,
+                ri,
+                0..re,
+                &mut out[ri * re..ri * re + re],
+            );
+        }
+        self.dequant_rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.codec_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
 
     fn base(&self, block: BlockId, row: usize) -> usize {
@@ -111,20 +375,33 @@ impl BlockStore {
         (block.index() * self.block_tokens + row) * self.row_elems
     }
 
-    /// Write one token row of K and V into a block.
+    fn row_index(&self, block: BlockId, row: usize) -> usize {
+        block.index() * self.block_tokens + row
+    }
+
+    /// Write one token row of K and V into a block (encoding under the
+    /// slab codec; int8 derives the row's scale here).
     pub fn write_row(&mut self, block: BlockId, row: usize, k_row: &[f32], v_row: &[f32]) {
         let re = self.row_elems;
         assert_eq!(k_row.len(), re, "k row width");
         assert_eq!(v_row.len(), re, "v row width");
         let base = self.base(block, row);
-        self.k[base..base + re].copy_from_slice(k_row);
-        self.v[base..base + re].copy_from_slice(v_row);
+        let ri = self.row_index(block, row);
+        self.k.encode_row(base, ri, re, k_row);
+        self.v.encode_row(base, ri, re, v_row);
+        if !self.codec.is_lossless() {
+            self.quant_rows += 2;
+        }
     }
 
     /// Overwrite one contiguous element sub-range of a token row on both
     /// planes (a KV-head shard's slice — see `super::shard::ShardSpec::
     /// row_range`). The head-local counterpart of [`BlockStore::write_row`];
-    /// callers own the per-shard staleness bookkeeping.
+    /// callers own the per-shard staleness bookkeeping. Under int8 the
+    /// row's scale is kept when the patch fits it (untouched elements'
+    /// stored bits are unchanged); a patch that grows the row's magnitude
+    /// requantizes the whole row — see `PagedArena::mutate_shard_row` for
+    /// why lossy codecs then mark *all* shards stale.
     pub fn write_row_range(
         &mut self,
         block: BlockId,
@@ -136,52 +413,92 @@ impl BlockStore {
         assert!(range.end <= self.row_elems, "sub-row past row width");
         assert_eq!(k_sub.len(), range.len(), "k sub-row width");
         assert_eq!(v_sub.len(), range.len(), "v sub-row width");
+        let re = self.row_elems;
         let base = self.base(block, row);
-        self.k[base + range.start..base + range.end].copy_from_slice(k_sub);
-        self.v[base + range.start..base + range.end].copy_from_slice(v_sub);
+        let ri = self.row_index(block, row);
+        self.k.patch_row(base, ri, re, range.clone(), k_sub);
+        self.v.patch_row(base, ri, re, range, v_sub);
+        if !self.codec.is_lossless() {
+            self.quant_rows += 2;
+        }
     }
 
-    /// One token row of the K plane.
-    pub fn k_row(&self, block: BlockId, row: usize) -> &[f32] {
-        let base = self.base(block, row);
-        &self.k[base..base + self.row_elems]
+    /// One token row of the K plane (borrowed under f32, decoded
+    /// otherwise).
+    pub fn k_row(&self, block: BlockId, row: usize) -> Cow<'_, [f32]> {
+        self.rows_cow(false, self.base(block, row), self.row_index(block, row), 1)
     }
 
     /// One token row of the V plane.
-    pub fn v_row(&self, block: BlockId, row: usize) -> &[f32] {
-        let base = self.base(block, row);
-        &self.v[base..base + self.row_elems]
+    pub fn v_row(&self, block: BlockId, row: usize) -> Cow<'_, [f32]> {
+        self.rows_cow(true, self.base(block, row), self.row_index(block, row), 1)
     }
 
-    /// Borrow `rows` consecutive K rows starting at row 0 (hashing helper).
-    pub fn k_rows(&self, block: BlockId, rows: usize) -> &[f32] {
-        let base = self.base(block, 0);
-        &self.k[base..base + rows * self.row_elems]
+    /// `rows` consecutive K rows starting at row 0 (hashing/gather
+    /// helper).
+    pub fn k_rows(&self, block: BlockId, rows: usize) -> Cow<'_, [f32]> {
+        self.rows_cow(false, self.base(block, 0), self.row_index(block, 0), rows)
     }
 
-    /// Borrow `rows` consecutive V rows starting at row 0.
-    pub fn v_rows(&self, block: BlockId, rows: usize) -> &[f32] {
-        let base = self.base(block, 0);
-        &self.v[base..base + rows * self.row_elems]
+    /// `rows` consecutive V rows starting at row 0.
+    pub fn v_rows(&self, block: BlockId, rows: usize) -> Cow<'_, [f32]> {
+        self.rows_cow(true, self.base(block, 0), self.row_index(block, 0), rows)
+    }
+
+    fn rows_cow(&self, v: bool, base: usize, ri0: usize, rows: usize) -> Cow<'_, [f32]> {
+        let re = self.row_elems;
+        let plane = if v { &self.v } else { &self.k };
+        if let Plane::F32(p) = plane {
+            return Cow::Borrowed(&p[base..base + rows * re]);
+        }
+        let mut out = vec![0.0f32; rows * re];
+        for r in 0..rows {
+            plane.decode_range_into(
+                base + r * re,
+                ri0 + r,
+                0..re,
+                &mut out[r * re..(r + 1) * re],
+            );
+        }
+        self.dequant_rows.fetch_add(rows as u64, Ordering::Relaxed);
+        Cow::Owned(out)
     }
 
     /// Copy the first `rows` rows of `src` into `dst` (copy-on-write).
-    /// `src` and `dst` are distinct blocks, so the ranges never overlap.
+    /// Operates on the *encoded* representation (scales included), so the
+    /// copy is exact under every codec. `src` and `dst` are distinct
+    /// blocks, so the ranges never overlap.
     pub fn copy_rows(&mut self, src: BlockId, dst: BlockId, rows: usize) {
         assert_ne!(src, dst, "copy_rows onto itself");
-        let n = rows * self.row_elems;
-        let s = self.base(src, 0);
-        let d = self.base(dst, 0);
-        self.k.copy_within(s..s + n, d);
-        self.v.copy_within(s..s + n, d);
+        let re = self.row_elems;
+        let s = self.row_index(src, 0);
+        let d = self.row_index(dst, 0);
+        self.k.copy_rows(s, d, rows, re);
+        self.v.copy_rows(s, d, rows, re);
     }
 
     /// Zero a block's contents (hygiene when returning to the free list).
     pub fn zero_block(&mut self, block: BlockId) {
-        let n = self.block_tokens * self.row_elems;
-        let base = self.base(block, 0);
-        self.k[base..base + n].fill(0.0);
-        self.v[base..base + n].fill(0.0);
+        let re = self.row_elems;
+        let r0 = self.row_index(block, 0);
+        self.k.zero_rows(r0, self.block_tokens, re);
+        self.v.zero_rows(r0, self.block_tokens, re);
+    }
+
+    /// Rows encoded through a lossy codec since construction.
+    pub fn quant_rows(&self) -> u64 {
+        self.quant_rows
+    }
+
+    /// Rows decoded from a lossy codec since construction.
+    pub fn dequant_rows(&self) -> u64 {
+        self.dequant_rows.load(Ordering::Relaxed)
+    }
+
+    /// Seconds spent in bulk codec conversions (whole-plane
+    /// dequantization for slab materialization / the staged oracle).
+    pub fn codec_secs(&self) -> f64 {
+        self.codec_nanos.load(Ordering::Relaxed) as f64 / 1e9
     }
 }
 
@@ -194,12 +511,19 @@ mod tests {
         let mut s = BlockStore::new(4, 2, 3);
         s.write_row(BlockId(1), 0, &[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
         s.write_row(BlockId(1), 1, &[7.0, 8.0, 9.0], &[10.0, 11.0, 12.0]);
-        assert_eq!(s.k_row(BlockId(1), 0), &[1.0, 2.0, 3.0]);
-        assert_eq!(s.v_row(BlockId(1), 1), &[10.0, 11.0, 12.0]);
-        assert_eq!(s.k_rows(BlockId(1), 2), &[1.0, 2.0, 3.0, 7.0, 8.0, 9.0]);
+        assert_eq!(&s.k_row(BlockId(1), 0)[..], &[1.0, 2.0, 3.0]);
+        assert_eq!(&s.v_row(BlockId(1), 1)[..], &[10.0, 11.0, 12.0]);
+        assert_eq!(
+            &s.k_rows(BlockId(1), 2)[..],
+            &[1.0, 2.0, 3.0, 7.0, 8.0, 9.0]
+        );
         // neighbours untouched
         assert!(s.k_row(BlockId(0), 0).iter().all(|&x| x == 0.0));
         assert!(s.k_row(BlockId(2), 0).iter().all(|&x| x == 0.0));
+        // f32 is the zero-copy path and loses nothing
+        assert_eq!(s.codec(), KvCodec::F32);
+        assert_eq!(s.quant_rows(), 0);
+        assert!(s.k_plane_f32().is_some() && s.q8_planes().is_none());
     }
 
     #[test]
@@ -207,8 +531,8 @@ mod tests {
         let mut s = BlockStore::new(2, 2, 4);
         s.write_row(BlockId(0), 1, &[1.0; 4], &[2.0; 4]);
         s.write_row_range(BlockId(0), 1, 2..4, &[8.0, 9.0], &[-8.0, -9.0]);
-        assert_eq!(s.k_row(BlockId(0), 1), &[1.0, 1.0, 8.0, 9.0]);
-        assert_eq!(s.v_row(BlockId(0), 1), &[2.0, 2.0, -8.0, -9.0]);
+        assert_eq!(&s.k_row(BlockId(0), 1)[..], &[1.0, 1.0, 8.0, 9.0]);
+        assert_eq!(&s.v_row(BlockId(0), 1)[..], &[2.0, 2.0, -8.0, -9.0]);
     }
 
     #[test]
@@ -217,11 +541,82 @@ mod tests {
         s.write_row(BlockId(0), 0, &[1.0, 1.0], &[2.0, 2.0]);
         s.write_row(BlockId(0), 1, &[3.0, 3.0], &[4.0, 4.0]);
         s.copy_rows(BlockId(0), BlockId(2), 2);
-        assert_eq!(s.k_row(BlockId(2), 1), &[3.0, 3.0]);
-        assert_eq!(s.v_row(BlockId(2), 0), &[2.0, 2.0]);
+        assert_eq!(&s.k_row(BlockId(2), 1)[..], &[3.0, 3.0]);
+        assert_eq!(&s.v_row(BlockId(2), 0)[..], &[2.0, 2.0]);
         s.zero_block(BlockId(0));
         assert!(s.k_rows(BlockId(0), 2).iter().all(|&x| x == 0.0));
         // the copy survives zeroing the source
-        assert_eq!(s.k_row(BlockId(2), 1), &[3.0, 3.0]);
+        assert_eq!(&s.k_row(BlockId(2), 1)[..], &[3.0, 3.0]);
+    }
+
+    #[test]
+    fn int8_store_roundtrips_within_half_scale() {
+        let mut s = BlockStore::with_codec(2, 2, 4, KvCodec::Int8PerRow);
+        let k = [1.0f32, -2.5, 0.25, 4.0];
+        let v = [-0.5f32, 0.5, 3.0, -3.0];
+        s.write_row(BlockId(1), 0, &k, &v);
+        let ks = 4.0 / 127.0; // k row scale = max|k| / 127
+        let vs = 3.0 / 127.0;
+        for (got, want, sc) in [
+            (s.k_row(BlockId(1), 0), &k[..], ks),
+            (s.v_row(BlockId(1), 0), &v[..], vs),
+        ] {
+            for (a, b) in got.iter().zip(want) {
+                assert!((a - b).abs() <= sc * 0.5 + f32::EPSILON);
+            }
+        }
+        assert_eq!(s.quant_rows(), 2);
+        assert!(s.dequant_rows() >= 2);
+        assert!(s.k_plane_f32().is_none());
+        let q8 = s.q8_planes().expect("int8 planes");
+        assert_eq!(q8.k_scales.len(), 2 * 2); // one scale per row
+        assert!((q8.k_scales[2] - ks).abs() <= f32::EPSILON);
+    }
+
+    #[test]
+    fn int8_patch_within_scale_keeps_untouched_bits() {
+        let mut s = BlockStore::with_codec(1, 1, 4, KvCodec::Int8PerRow);
+        s.write_row(BlockId(0), 0, &[4.0, -2.0, 1.0, 0.5], &[1.0; 4]);
+        let before_q = s.q8_planes().unwrap().k_q.to_vec();
+        let before_scale = s.q8_planes().unwrap().k_scales[0];
+        // patch fits the current scale (|3.0| <= 4.0): scale kept,
+        // elements outside the patch keep their exact stored bits
+        s.write_row_range(BlockId(0), 0, 1..3, &[3.0, -1.5], &[1.0, 1.0]);
+        let q8 = s.q8_planes().unwrap();
+        assert_eq!(q8.k_scales[0], before_scale);
+        assert_eq!(q8.k_q[0], before_q[0]);
+        assert_eq!(q8.k_q[3], before_q[3]);
+        // patch that grows the row magnitude rescales the whole row
+        s.write_row_range(BlockId(0), 0, 1..3, &[9.0, 0.0], &[1.0, 1.0]);
+        let q8 = s.q8_planes().unwrap();
+        assert!((q8.k_scales[0] - 9.0 / 127.0).abs() <= f32::EPSILON);
+        let row = s.k_row(BlockId(0), 0);
+        assert!((row[0] - 4.0).abs() <= (9.0 / 127.0) * 0.5 + 1e-6);
+        assert!((row[1] - 9.0).abs() <= (9.0 / 127.0) * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn slab_bytes_tracks_the_codec() {
+        for (codec, per_row) in [
+            (KvCodec::F32, 4 * 4usize),
+            (KvCodec::F16, 4 * 2),
+            (KvCodec::Int8PerRow, 4 + 4),
+        ] {
+            let s = BlockStore::with_codec(3, 2, 4, codec);
+            assert_eq!(s.slab_bytes(), 2 * 3 * 2 * per_row);
+            assert_eq!(s.total_elems(), 2 * 3 * 2 * 4);
+        }
+    }
+
+    #[test]
+    fn f16_store_decodes_whole_planes() {
+        let mut s = BlockStore::with_codec(2, 1, 2, KvCodec::F16);
+        s.write_row(BlockId(0), 0, &[1.5, -0.25], &[2.0, 0.0]);
+        let mut out = vec![0.0f32; 4];
+        s.decode_k_plane_into(&mut out);
+        assert_eq!(&out[..2], &[1.5, -0.25]); // exactly f16-representable
+        s.decode_v_plane_into(&mut out);
+        assert_eq!(&out[..2], &[2.0, 0.0]);
+        assert!(s.codec_secs() >= 0.0);
     }
 }

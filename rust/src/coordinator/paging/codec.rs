@@ -1,0 +1,317 @@
+//! `KvCodec` — the unified element codec shared by the resident slab and
+//! the swap path.
+//!
+//! FastKV's context reduction decides *which* KV rows survive prefill;
+//! the codec decides *how many bytes* each survivor costs. Quantizing the
+//! rows that remain multiplies how many lanes fit per byte of slab: at a
+//! fixed pool budget, int8 admits ~4x the f32 lane count (the
+//! `BENCH_paging_quant.json` capacity sweep pins >= 1.9x). Three tiers:
+//!
+//! * [`KvCodec::F32`] — verbatim rows, bit-identical everywhere. The
+//!   default; every pre-existing differential runs (and stays) on it.
+//! * [`KvCodec::F16`] — IEEE 754 binary16 per element (the PR 5 swap
+//!   codec, folded in here unchanged; `swap.rs` re-exports the
+//!   conversion functions so its exhaustive tests keep pinning them).
+//! * [`KvCodec::Int8PerRow`] — one i8 per element plus one f32 scale per
+//!   token row (`scale = max|row| / 127`), the row-structured scheme
+//!   KVComp-style lossy KV compression shows decode tolerates. Per-row
+//!   scales keep the layout shard-oblivious: a head-range slice of a row
+//!   reuses the row's scale, so `project_plane`/`reassemble_planes` and
+//!   `write_row_range` never need per-shard rescaling.
+//!
+//! The enum itself is a fieldless *selector* (`Copy + Eq + Hash`) so it
+//! can ride on config structs ([`super::tenant::TenantQuota::precision`],
+//! `PagingConfig::precision`); encoded data lives in the stores
+//! (`block.rs` planes, `swap.rs` lanes). Error discipline: int8
+//! dequantization is within `scale / 2` per element of the encoded f32
+//! (exhaustively tested below); f16 within one rounding step (relative
+//! `2^-11`, exhaustively tested in `swap.rs`); f32 exact.
+
+// ---------------------------------------------------------------------------
+// f16 element codec (moved verbatim from swap.rs, which re-exports it)
+//
+// IEEE 754 binary16 keeps ~3 decimal digits (relative step 2^-11), ample
+// for attention KV; out-of-range magnitudes saturate to ±65504 rather
+// than overflowing to infinity. Round-to-nearest-even, verified
+// exhaustively against numpy's float16 casts (all 65536 bit patterns
+// decode exactly; every finite half re-encodes to itself — see swap.rs
+// tests).
+
+/// Encode one f32 as IEEE 754 binary16 bits (round-to-nearest-even,
+/// saturating at ±65504; NaN maps to a quiet NaN).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / nan
+        return sign | 0x7c00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7bff; // saturate to ±65504
+    }
+    if e < -25 {
+        return sign; // underflow to signed zero
+    }
+    if e < -14 {
+        // subnormal half: mantissa = round(full / 2^(13 + (-14 - e)))
+        let full = mant | 0x0080_0000;
+        let drop = (13 + (-14 - e)) as u32;
+        let m = full >> drop;
+        let round_bit = (full >> (drop - 1)) & 1;
+        let sticky = (full & ((1u32 << (drop - 1)) - 1)) != 0;
+        let up = round_bit & u32::from(sticky || (m & 1) == 1);
+        return sign | (m + up) as u16;
+    }
+    // normal
+    let m = mant >> 13;
+    let round_bit = (mant >> 12) & 1;
+    let sticky = (mant & 0xfff) != 0;
+    let mut h = sign as u32 | (((e + 15) as u32) << 10) | m;
+    h += round_bit & u32::from(sticky || (m & 1) == 1);
+    if (h & 0x7fff) >= 0x7c00 {
+        // rounded past the largest normal: saturate, never overflow to inf
+        return sign | 0x7bff;
+    }
+    h as u16
+}
+
+/// Decode IEEE 754 binary16 bits to f32 (exact for every finite half).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = if h & 0x8000 != 0 { -1.0f32 } else { 1.0 };
+    let exp = ((h >> 10) & 0x1f) as i32;
+    let mant = (h & 0x3ff) as f32;
+    match exp {
+        0 => sign * mant * (2.0f32).powi(-24),
+        31 => {
+            if mant == 0.0 {
+                sign * f32::INFINITY
+            } else {
+                f32::NAN
+            }
+        }
+        e => sign * (1.0 + mant / 1024.0) * (2.0f32).powi(e - 15),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// int8 per-row codec
+
+/// Per-row quantization scale: `max|row| / 127` (0.0 for an all-zero
+/// row, under which every element encodes and decodes as exactly 0).
+pub fn int8_row_scale(row: &[f32]) -> f32 {
+    let maxabs = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    maxabs / 127.0
+}
+
+/// Quantize one row in place into `q` (`q.len() == row.len()`), returning
+/// the scale. `q[i] = round(row[i] / scale)` clamped to `[-127, 127]`;
+/// dequantization error is `<= scale / 2` per element.
+pub fn quantize_row_int8(row: &[f32], q: &mut [i8]) -> f32 {
+    debug_assert_eq!(row.len(), q.len());
+    let scale = int8_row_scale(row);
+    quantize_row_int8_with(row, q, scale);
+    scale
+}
+
+/// Quantize `row` into `q` under a *given* scale (clamping to ±127).
+/// Used by `write_row_range`'s keep-scale-if-possible patching: when a
+/// patched sub-range still fits the row's current scale, requantizing
+/// only the patch leaves every untouched element's stored bits unchanged.
+pub fn quantize_row_int8_with(row: &[f32], q: &mut [i8], scale: f32) {
+    if scale == 0.0 {
+        q.fill(0);
+        return;
+    }
+    for (qi, &x) in q.iter_mut().zip(row) {
+        *qi = (x / scale).round().clamp(-127.0, 127.0) as i8;
+    }
+}
+
+/// Dequantize one row: `out[i] = q[i] * scale`.
+pub fn dequantize_row_int8(q: &[i8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), out.len());
+    for (o, &qi) in out.iter_mut().zip(q) {
+        *o = f32::from(qi) * scale;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the codec selector
+
+/// Element codec for KV rows — shared by the resident slab
+/// (`BlockStore`), the swap path (`swap::KvLane`), and every byte gauge.
+///
+/// Fieldless by design: this is the *selector* carried on configs and
+/// tenant quotas; the encoded payloads (and, for int8, the per-row scale
+/// planes) live in the stores themselves.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum KvCodec {
+    /// 4 bytes/element, bit-identical storage (the pre-codec behavior).
+    #[default]
+    F32,
+    /// 2 bytes/element, IEEE 754 binary16 (one rounding step of error).
+    F16,
+    /// 1 byte/element + one f32 scale per row; error `<= scale / 2` per
+    /// element where `scale = max|row| / 127`.
+    Int8PerRow,
+}
+
+impl KvCodec {
+    /// Host/device bytes one token row of `row_elems` elements occupies
+    /// under this codec, per plane (K or V), scale storage included.
+    /// This is THE bytes-per-row helper: slab gauges, swap budget
+    /// predictions, and `shard_{s}_slab_bytes` all route through it so
+    /// accounting can never drift from the encoded layout.
+    pub fn bytes_per_row(self, row_elems: usize) -> usize {
+        match self {
+            KvCodec::F32 => row_elems * std::mem::size_of::<f32>(),
+            KvCodec::F16 => row_elems * std::mem::size_of::<u16>(),
+            KvCodec::Int8PerRow => {
+                row_elems * std::mem::size_of::<i8>()
+                    + std::mem::size_of::<f32>()
+            }
+        }
+    }
+
+    /// Whether encode-then-decode is bit-identical for every finite f32.
+    pub fn is_lossless(self) -> bool {
+        matches!(self, KvCodec::F32)
+    }
+
+    /// Short stable name (CLI values, metric label suffixes, bench JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            KvCodec::F32 => "f32",
+            KvCodec::F16 => "f16",
+            KvCodec::Int8PerRow => "int8",
+        }
+    }
+
+    /// Parse a CLI spelling (`--precision f32|f16|int8`).
+    pub fn parse(s: &str) -> Result<KvCodec, String> {
+        match s {
+            "f32" => Ok(KvCodec::F32),
+            "f16" | "half" => Ok(KvCodec::F16),
+            "int8" | "q8" => Ok(KvCodec::Int8PerRow),
+            other => Err(format!(
+                "unknown precision {other:?} (expected f32|f16|int8)"
+            )),
+        }
+    }
+
+    /// All tiers, for sweeps and per-tier gauges.
+    pub const ALL: [KvCodec; 3] =
+        [KvCodec::F32, KvCodec::F16, KvCodec::Int8PerRow];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng_next(s: &mut u64) -> u64 {
+        *s ^= *s << 13;
+        *s ^= *s >> 7;
+        *s ^= *s << 17;
+        *s
+    }
+
+    fn rand_row(seed: u64, n: usize, span: f32) -> Vec<f32> {
+        let mut s = seed.max(1);
+        (0..n)
+            .map(|_| {
+                let u = (rng_next(&mut s) >> 11) as f32
+                    / (1u64 << 53) as f32;
+                (u * 2.0 - 1.0) * span
+            })
+            .collect()
+    }
+
+    /// The headline bound: every element of a quantize/dequantize
+    /// round-trip is within `scale / 2` of the input. Exhaustive over the
+    /// quantized domain (every i8 level at many scales) plus randomized
+    /// rows across magnitudes from subnormal-adjacent to 1e6.
+    #[test]
+    fn int8_roundtrip_error_is_within_half_scale() {
+        // Exhaustive over levels: an f32 that sits exactly on a level
+        // round-trips with zero error; one mid-way between levels sees
+        // exactly scale/2.
+        for scale in [1e-6f32, 0.03, 1.0, 512.0] {
+            for level in -127i8..=127 {
+                let x = f32::from(level) * scale;
+                let mut q = [0i8];
+                // encode under the fixed scale (as a stored row would be)
+                quantize_row_int8_with(&[x], &mut q, scale);
+                let mut out = [0.0f32];
+                dequantize_row_int8(&q, scale, &mut out);
+                assert!(
+                    (out[0] - x).abs() <= scale * 0.5 + f32::EPSILON,
+                    "level {level} scale {scale}: {x} -> {}",
+                    out[0]
+                );
+            }
+        }
+        // Randomized full rows with the row-derived scale.
+        for (i, span) in [1e-5f32, 0.1, 1.0, 37.0, 1e6].iter().enumerate() {
+            let row = rand_row(0x9e3779b9 + i as u64, 96, *span);
+            let mut q = vec![0i8; row.len()];
+            let scale = quantize_row_int8(&row, &mut q);
+            let mut out = vec![0.0f32; row.len()];
+            dequantize_row_int8(&q, scale, &mut out);
+            for (a, b) in row.iter().zip(&out) {
+                assert!(
+                    (a - b).abs() <= scale * 0.5 * (1.0 + 1e-5),
+                    "span {span}: |{a} - {b}| > {}/2",
+                    scale
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int8_zero_row_encodes_exactly() {
+        let row = [0.0f32; 8];
+        let mut q = [1i8; 8];
+        let scale = quantize_row_int8(&row, &mut q);
+        assert_eq!(scale, 0.0);
+        assert!(q.iter().all(|&x| x == 0));
+        let mut out = [9.0f32; 8];
+        dequantize_row_int8(&q, scale, &mut out);
+        assert_eq!(out, [0.0f32; 8]);
+    }
+
+    #[test]
+    fn int8_max_magnitude_is_exact_at_the_top_level() {
+        // The row max lands exactly on level ±127, so the extreme
+        // element round-trips to (maxabs/127)*127 — within one ulp.
+        let row = [3.5f32, -7.0, 1.25];
+        let mut q = [0i8; 3];
+        let scale = quantize_row_int8(&row, &mut q);
+        assert_eq!(q[1], -127);
+        let mut out = [0.0f32; 3];
+        dequantize_row_int8(&q, scale, &mut out);
+        assert!((out[1] - -7.0).abs() <= 7.0 * f32::EPSILON * 2.0);
+    }
+
+    #[test]
+    fn bytes_per_row_matches_the_encoded_layout() {
+        let re = 48;
+        assert_eq!(KvCodec::F32.bytes_per_row(re), re * 4);
+        assert_eq!(KvCodec::F16.bytes_per_row(re), re * 2);
+        assert_eq!(KvCodec::Int8PerRow.bytes_per_row(re), re + 4);
+        assert!(KvCodec::F32.is_lossless());
+        assert!(!KvCodec::F16.is_lossless());
+        assert!(!KvCodec::Int8PerRow.is_lossless());
+    }
+
+    #[test]
+    fn parse_accepts_cli_spellings() {
+        assert_eq!(KvCodec::parse("f32"), Ok(KvCodec::F32));
+        assert_eq!(KvCodec::parse("f16"), Ok(KvCodec::F16));
+        assert_eq!(KvCodec::parse("int8"), Ok(KvCodec::Int8PerRow));
+        assert!(KvCodec::parse("bf16").is_err());
+        assert_eq!(KvCodec::default(), KvCodec::F32);
+    }
+}

@@ -47,12 +47,14 @@
 
 pub mod allocator;
 pub mod block;
+pub mod codec;
 pub mod prefix;
 pub mod shard;
 pub mod swap;
 pub mod tenant;
 pub mod view;
 
+pub use codec::KvCodec;
 pub use shard::{ShardSpec, ShardedSlabs};
 pub use swap::{SwapHandle, SwapIn, SwapStats};
 pub use tenant::{TenantId, TenantQuota, TenantStats};
@@ -61,6 +63,8 @@ pub use view::{DecodeView, ShardView};
 use crate::coordinator::kvcache::{BatchArena, RequestCache};
 use crate::manifest::ModelMeta;
 use crate::tensor::{HostTensor, HostTensorI32};
+
+use std::collections::BTreeMap;
 
 use allocator::{BlockAllocator, Revive};
 use block::BlockId;
@@ -91,13 +95,25 @@ pub struct PagingConfig {
     /// policy re-run. `0` disables swapping (preemption always
     /// recompute-resumes, the pre-swap behavior).
     pub swap_bytes: usize,
-    /// Encode swapped lane payloads as IEEE 754 binary16
-    /// ([`swap::KvLane::F16`]) instead of verbatim f32, halving host
-    /// budget pressure at a per-element precision cost of one f16
-    /// rounding step (relative 2^-11). Off by default; restores under it
-    /// are *not* bit-identical, so lossy entries never re-register their
-    /// preserved prefix hashes for freshly-written blocks.
+    /// Legacy alias for a pool-wide f16 *swap* tier: encode swapped lane
+    /// payloads as IEEE 754 binary16 ([`swap::KvLane::F16`]) instead of
+    /// verbatim f32, halving host budget pressure at a per-element
+    /// precision cost of one f16 rounding step (relative 2^-11). Off by
+    /// default; restores under it are *not* bit-identical, so lossy
+    /// entries never re-register their preserved prefix hashes for
+    /// freshly-written blocks. Subsumed by `precision` + per-tenant
+    /// [`TenantQuota::precision`] tiers, which also govern the resident
+    /// slab; a tenant with an explicit tier ignores this flag.
     pub swap_half: bool,
+    /// [`KvCodec`] the resident block-pool slab is stored under
+    /// (in-slab quantization). [`KvCodec::F32`] (the default) is the
+    /// pre-quantization store, bit for bit. [`KvCodec::F16`] and
+    /// [`KvCodec::Int8PerRow`] shrink the pool footprint 2x / ~4x;
+    /// both are lossy, so prefix hashes are still computed over the
+    /// exact pre-quantization rows and lossy restores never re-seal.
+    /// Tenants without an explicit [`TenantQuota::precision`] tier also
+    /// swap at this codec (unless `swap_half` overrides it to f16).
+    pub precision: KvCodec,
     /// Per-tenant quotas installed at construction (reserved block
     /// floor, burst ceiling, optional swap byte cap — see
     /// [`TenantQuota`]). Empty (the default) means single-tenant
@@ -123,6 +139,7 @@ impl Default for PagingConfig {
             // swap unless the operator opts out (`swap_bytes: 0`).
             swap_bytes: 128 << 20,
             swap_half: false,
+            precision: KvCodec::F32,
             tenant_quotas: Vec::new(),
             shards: 1,
         }
@@ -179,6 +196,21 @@ pub struct PoolStats {
     /// Block takes refused by a tenant quota while the pool itself still
     /// had allocatable blocks (pure exhaustion is `alloc_failures`).
     pub quota_denials: u64,
+    /// Resident slab footprint in bytes under the pool's codec (K + V
+    /// planes, scale planes included for int8) — the
+    /// `pool_bytes_quantized` gauge. Codec-aware: an int8 pool reports
+    /// ~1/4 the bytes of the same pool at f32.
+    pub slab_bytes: usize,
+    /// [`KvCodec`] the resident slab is stored under.
+    pub codec: KvCodec,
+    /// K/V rows quantized into a lossy slab (write side; 0 at f32).
+    pub quant_rows: u64,
+    /// K/V rows dequantized out of a lossy slab (read side; 0 at f32).
+    pub dequant_rows: u64,
+    /// Seconds spent in bulk plane encode/decode (the
+    /// `quant_dequant_secs` counter; per-row codec work is counted in
+    /// the row counters but deliberately not timed).
+    pub codec_secs: f64,
 }
 
 impl PoolStats {
@@ -260,6 +292,13 @@ pub trait KvStore {
     /// Per-shard slab bytes (K + V planes), indexed by shard — feeds the
     /// `shard_{s}_slab_bytes` gauges. Empty for unsharded backends.
     fn shard_slab_bytes(&self) -> Vec<usize> {
+        Vec::new()
+    }
+    /// Used lanes grouped by their effective precision tier (the
+    /// tenant's [`TenantQuota::precision`] or the pool default) — feeds
+    /// the `lanes_tier_{f32,f16,int8}` gauges. Empty for backends
+    /// without precision tiers.
+    fn lanes_by_tier(&self) -> Vec<(KvCodec, usize)> {
         Vec::new()
     }
 
@@ -402,8 +441,15 @@ pub struct PagedArena {
     prefix: PrefixCache,
     /// Host-side parking lot for preempted lanes (swap-to-host resume).
     swap: SwapArena,
-    /// Encode swapped payloads as f16 (`PagingConfig::swap_half`).
+    /// Encode swapped payloads as f16 (`PagingConfig::swap_half`),
+    /// for tenants without an explicit precision tier.
     swap_half: bool,
+    /// Resident slab codec (`PagingConfig::precision`); also the swap
+    /// codec for untiered tenants when `swap_half` is off.
+    codec: KvCodec,
+    /// Per-tenant precision tiers ([`TenantQuota::precision`]); consulted
+    /// by [`PagedArena::swap_out`] instead of the global flag.
+    tier: BTreeMap<TenantId, KvCodec>,
     /// KV-head shard layout + per-shard slab mutation stamps.
     shard_slabs: ShardedSlabs,
     /// `tables[slot][layer]` → physical blocks, in logical order.
@@ -454,12 +500,17 @@ impl PagedArena {
             k: HostTensor::zeros(shape.clone()),
             v: HostTensor::zeros(shape),
         });
-        let mut alloc = BlockAllocator::new(num_blocks, bt, re);
+        let mut alloc =
+            BlockAllocator::with_codec(num_blocks, bt, re, cfg.precision);
         let mut swap = SwapArena::new(cfg.swap_bytes);
+        let mut tier = BTreeMap::new();
         for &(t, q) in &cfg.tenant_quotas {
             alloc.set_quota(t, q);
             if let Some(sb) = q.swap_bytes {
                 swap.set_tenant_budget(t, sb);
+            }
+            if let Some(p) = q.precision {
+                tier.insert(t, p);
             }
         }
         PagedArena {
@@ -473,6 +524,8 @@ impl PagedArena {
             prefix: PrefixCache::new(cfg.prefix_cache),
             swap,
             swap_half: cfg.swap_half,
+            codec: cfg.precision,
+            tier,
             shard_slabs: ShardedSlabs::new(spec),
             tables: vec![vec![Vec::new(); l]; b],
             lens: vec![vec![0; l]; b],
@@ -492,6 +545,43 @@ impl PagedArena {
         if let Some(sb) = quota.swap_bytes {
             self.swap.set_tenant_budget(tenant, sb);
         }
+        match quota.precision {
+            Some(p) => {
+                self.tier.insert(tenant, p);
+            }
+            None => {
+                self.tier.remove(&tenant);
+            }
+        }
+    }
+
+    /// The [`KvCodec`] `tenant`'s preempted lanes are parked under: its
+    /// [`TenantQuota::precision`] tier when set, otherwise the pool
+    /// default (`swap_half` → f16, else the slab codec).
+    fn swap_codec_for(&self, tenant: TenantId) -> KvCodec {
+        self.tier.get(&tenant).copied().unwrap_or(if self.swap_half {
+            KvCodec::F16
+        } else {
+            self.codec
+        })
+    }
+
+    /// Used lanes grouped by effective precision tier (all three tiers
+    /// reported, zero included, so the gauges never disappear).
+    pub fn lanes_by_tier(&self) -> Vec<(KvCodec, usize)> {
+        let mut counts = [0usize; KvCodec::ALL.len()];
+        for slot in 0..self.b {
+            if !self.used[slot] {
+                continue;
+            }
+            let codec = self.swap_codec_for(self.tenants[slot]);
+            let i = KvCodec::ALL
+                .iter()
+                .position(|c| *c == codec)
+                .expect("codec in ALL");
+            counts[i] += 1;
+        }
+        KvCodec::ALL.iter().copied().zip(counts).collect()
     }
 
     /// Tenant the lane is charged to ([`TenantId::DEFAULT`] for unused
@@ -587,13 +677,15 @@ impl PagedArena {
 
     /// Per-shard slab bytes (K + V planes), indexed by shard — the
     /// `shard_{s}_slab_bytes` gauges. Every shard is the same size:
-    /// `num_blocks * block_tokens * (KV/S) * hd * 4 * 2`.
+    /// `num_blocks * block_tokens * bytes_per_row(KV/S * hd) * 2`,
+    /// codec-aware ([`KvCodec::bytes_per_row`]); under int8 the per-row
+    /// scale planes are counted once per shard, since each shard's
+    /// executor receives the shared scale tensors alongside its plane.
     pub fn shard_slab_bytes(&self) -> Vec<usize> {
         let spec = self.shard_slabs.spec();
         let per = self.alloc.blocks_total()
             * self.block_tokens
-            * spec.shard_row_elems()
-            * std::mem::size_of::<f32>()
+            * self.codec.bytes_per_row(spec.shard_row_elems())
             * 2;
         vec![per; spec.shards]
     }
@@ -648,13 +740,28 @@ impl PagedArena {
             v_sub,
         );
         // Keep the dense-staging fallback coherent (it mirrors full rows).
-        let base =
-            self.stage_base(layer, slot, row) + spec.row_range(shard).start;
+        // The mirrored bits are read BACK from the store, not copied from
+        // the input: under a lossy slab codec the stored row is the
+        // quantized one, and the oracle must see exactly what decode will.
+        let range = spec.row_range(shard);
+        let base = self.stage_base(layer, slot, row) + range.start;
         if let Some(buf) = self.stage_buf.as_mut() {
-            buf.k.data[base..base + k_sub.len()].copy_from_slice(k_sub);
-            buf.v.data[base..base + v_sub.len()].copy_from_slice(v_sub);
+            let store = self.alloc.store();
+            let r = row % bt;
+            buf.k.data[base..base + k_sub.len()]
+                .copy_from_slice(&store.k_row(bid, r)[range.clone()]);
+            buf.v.data[base..base + v_sub.len()]
+                .copy_from_slice(&store.v_row(bid, r)[range]);
         }
-        self.touch_shard(shard);
+        if self.codec.is_lossless() {
+            self.touch_shard(shard);
+        } else {
+            // A lossy patch can rescale the whole stored row (when the
+            // new sub-row exceeds the row's current int8 scale), moving
+            // bits that belong to *other* shards' planes — every shard's
+            // stamp must move, not just this one's.
+            self.touch();
+        }
         true
     }
 
@@ -709,8 +816,8 @@ impl PagedArena {
             lens,
             shards: spec.shards,
             shard_versions,
-            slab_k: self.alloc.store().k_plane(),
-            slab_v: self.alloc.store().v_plane(),
+            codec: self.alloc.store().codec(),
+            store: self.alloc.store(),
         }
     }
 
@@ -917,9 +1024,9 @@ impl PagedArena {
                             let base =
                                 ((l * self.b + slot) * self.c + row) * re;
                             buf.k.data[base..base + re]
-                                .copy_from_slice(store.k_row(bid, r));
+                                .copy_from_slice(&store.k_row(bid, r));
                             buf.v.data[base..base + re]
-                                .copy_from_slice(store.v_row(bid, r));
+                                .copy_from_slice(&store.v_row(bid, r));
                             row += 1;
                         }
                     }
@@ -1020,15 +1127,12 @@ impl PagedArena {
         // codec — ask the arena *before* serializing, so a lane the
         // budget can never take (per-tenant cap, possibly 0) costs
         // nothing to refuse instead of an O(lane-bytes) copy per
-        // preemption. The f16 codec (`PagingConfig::swap_half`) halves
-        // the charged bytes.
-        let elem_bytes = if self.swap_half {
-            std::mem::size_of::<u16>()
-        } else {
-            std::mem::size_of::<f32>()
-        };
+        // preemption. The codec is the *tenant's* precision tier
+        // (falling back to the pool default), so a premium-f32 tenant is
+        // priced — and refused — at f32 even in an `--swap-half` pool.
+        let codec = self.swap_codec_for(self.tenants[slot]);
         let predicted: usize =
-            self.lens[slot].iter().sum::<usize>() * re * 2 * elem_bytes;
+            self.lens[slot].iter().sum::<usize>() * 2 * codec.bytes_per_row(re);
         if self.swap.would_refuse(predicted, self.tenants[slot]) {
             return None;
         }
@@ -1046,14 +1150,14 @@ impl PagedArena {
                 let meta = self.alloc.meta(bid);
                 let filled = meta.filled as usize;
                 hs.push(meta.hash);
-                k.extend_from_slice(self.alloc.store().k_rows(bid, filled));
-                v.extend_from_slice(self.alloc.store().v_rows(bid, filled));
+                k.extend_from_slice(&self.alloc.store().k_rows(bid, filled));
+                v.extend_from_slice(&self.alloc.store().v_rows(bid, filled));
                 rows += filled;
             }
             debug_assert_eq!(rows, len, "block rows vs lane len");
             lens.push(len);
-            ks.push(KvLane::encode(k, self.swap_half));
-            vs.push(KvLane::encode(v, self.swap_half));
+            ks.push(KvLane::encode(k, codec, re));
+            vs.push(KvLane::encode(v, codec, re));
             hashes.push(hs);
         }
         let bytes = ks
@@ -1104,13 +1208,16 @@ impl PagedArena {
         let tenant = entry.tenant;
         let bt = self.block_tokens;
         let re = self.row_elems();
-        // An f16 entry decodes to *approximately* the serialized rows:
+        // A lossy entry decodes to *approximately* the serialized rows:
         // reviving a still-cached exact block through its preserved hash
         // is fine (better, even), but a freshly-written decoded block
         // must NOT be sealed under the original hash — the prefix cache
         // would alias lossy content to the exact chain and hand it to
-        // future admissions.
-        let lossy = entry.is_lossy();
+        // future admissions. A lossy *slab* codec triggers the same
+        // guard even for f32 entries: writing exact rows into a
+        // quantizing store changes them, so preserved hashes must never
+        // be re-sealed over freshly-written blocks there either.
+        let lossy = entry.is_lossy() || !self.codec.is_lossless();
 
         let mut new_tables: Vec<Vec<BlockId>> = Vec::with_capacity(self.l);
         let mut acquired: Vec<BlockId> = Vec::new();
@@ -1201,9 +1308,9 @@ impl PagedArena {
                             let base =
                                 ((l * self.b + slot) * self.c + row) * re;
                             buf.k.data[base..base + re]
-                                .copy_from_slice(store.k_row(bid, r));
+                                .copy_from_slice(&store.k_row(bid, r));
                             buf.v.data[base..base + re]
-                                .copy_from_slice(store.v_row(bid, r));
+                                .copy_from_slice(&store.v_row(bid, r));
                             row += 1;
                         }
                     }
@@ -1343,8 +1450,15 @@ impl PagedArena {
             self.alloc.set_filled(bid, (row_in_block + 1) as u32);
             let base = self.stage_base(l, slot, len);
             if let Some(buf) = self.stage_buf.as_mut() {
-                buf.k.data[base..base + re].copy_from_slice(k_row);
-                buf.v.data[base..base + re].copy_from_slice(v_row);
+                // Mirror what the store *kept* (quantized under a lossy
+                // codec), not the raw input — the dense oracle must match
+                // block-table decode bit for bit. At f32 the read-back is
+                // the input, so the legacy differentials are unaffected.
+                let store = self.alloc.store();
+                buf.k.data[base..base + re]
+                    .copy_from_slice(&store.k_row(bid, row_in_block));
+                buf.v.data[base..base + re]
+                    .copy_from_slice(&store.v_row(bid, row_in_block));
             }
             self.lens[slot][l] = len + 1;
         }
@@ -1414,8 +1528,8 @@ impl PagedArena {
                 assert!(idx < old_len, "keep index {idx} >= len {old_len}");
                 let bid = self.tables[slot][l][idx / bt];
                 let r = idx % bt;
-                tk.extend_from_slice(self.alloc.store().k_row(bid, r));
-                tv.extend_from_slice(self.alloc.store().v_row(bid, r));
+                tk.extend_from_slice(&self.alloc.store().k_row(bid, r));
+                tv.extend_from_slice(&self.alloc.store().v_row(bid, r));
             }
             gathered.push((l, old_len, tk, tv));
         }
@@ -1434,10 +1548,23 @@ impl PagedArena {
             self.tables[slot][l] = self.fill_blocks(tenant, &tk, &tv, new_len);
             self.lens[slot][l] = new_len;
             // Staging fallback: survivors first, zero the trimmed tail.
+            // Survivor rows are read back from the rebuilt blocks — under
+            // a lossy codec the rebuild requantizes, and the oracle must
+            // hold the requantized bits (at f32 this is `tk`/`tv` again).
             let base = self.stage_base(l, slot, 0);
             if let Some(buf) = self.stage_buf.as_mut() {
-                buf.k.data[base..base + new_len * re].copy_from_slice(&tk);
-                buf.v.data[base..base + new_len * re].copy_from_slice(&tv);
+                let store = self.alloc.store();
+                let mut row = 0usize;
+                for &bid in &self.tables[slot][l] {
+                    let filled = self.alloc.meta(bid).filled as usize;
+                    let b0 = base + row * re;
+                    buf.k.data[b0..b0 + filled * re]
+                        .copy_from_slice(&store.k_rows(bid, filled));
+                    buf.v.data[b0..b0 + filled * re]
+                        .copy_from_slice(&store.v_rows(bid, filled));
+                    row += filled;
+                }
+                debug_assert_eq!(row, new_len, "rebuilt rows vs keep len");
                 let tail0 = base + new_len * re;
                 let tail1 = base + old_len * re;
                 buf.k.data[tail0..tail1].fill(0.0);
@@ -1480,6 +1607,7 @@ impl PagedArena {
 
     /// Block-pool gauges snapshot.
     pub fn pool_stats(&self) -> PoolStats {
+        let store = self.alloc.store();
         PoolStats {
             blocks_total: self.alloc.blocks_total(),
             blocks_in_use: self.alloc.blocks_in_use(),
@@ -1492,6 +1620,11 @@ impl PagedArena {
             evictions: self.alloc.evictions,
             alloc_failures: self.alloc_failures,
             quota_denials: self.alloc.quota_denials,
+            slab_bytes: store.slab_bytes(),
+            codec: store.codec(),
+            quant_rows: store.quant_rows(),
+            dequant_rows: store.dequant_rows(),
+            codec_secs: store.codec_secs(),
         }
     }
 
@@ -1636,6 +1769,10 @@ impl KvStore for PagedArena {
 
     fn shard_slab_bytes(&self) -> Vec<usize> {
         PagedArena::shard_slab_bytes(self)
+    }
+
+    fn lanes_by_tier(&self) -> Vec<(KvCodec, usize)> {
+        PagedArena::lanes_by_tier(self)
     }
 
     fn swap_out(&mut self, slot: usize) -> Option<SwapHandle> {

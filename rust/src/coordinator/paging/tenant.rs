@@ -28,6 +28,8 @@
 //! holds one. In practice sharing is overwhelmingly same-prompt traffic
 //! where the first toucher is also the longest holder.
 
+use super::codec::KvCodec;
+
 /// Identity of the tenant (user, organization, API key, ...) a request is
 /// served under. Dense small integers by convention — the serving CLIs
 /// number tenants `0..N` — but any `u32` works.
@@ -70,6 +72,14 @@ pub struct TenantQuota {
     /// `Some(0)` disables swapping for this tenant (its preemptions
     /// always recompute-resume).
     pub swap_bytes: Option<usize>,
+    /// Precision *tier*: the [`KvCodec`] this tenant's preempted lanes
+    /// are encoded under in the swap arena (and the codec its swap-budget
+    /// predictions are priced at — `PagedArena::swap_out` consults this
+    /// tier, not the global flag). `None` inherits the pool default
+    /// (`PagingConfig::swap_half` → f16, else the slab codec). Premium
+    /// tenants pin `Some(KvCodec::F32)` for bit-identical restores; bulk
+    /// tiers ride `Some(KvCodec::Int8PerRow)` for ~4x cheaper parking.
+    pub precision: Option<KvCodec>,
 }
 
 impl Default for TenantQuota {
@@ -78,6 +88,7 @@ impl Default for TenantQuota {
             reserved_blocks: 0,
             ceiling_blocks: usize::MAX,
             swap_bytes: None,
+            precision: None,
         }
     }
 }
@@ -97,6 +108,12 @@ impl TenantQuota {
             ceiling_blocks: ceiling,
             ..Default::default()
         }
+    }
+
+    /// This quota with an explicit precision tier.
+    pub fn with_precision(mut self, codec: KvCodec) -> Self {
+        self.precision = Some(codec);
+        self
     }
 }
 
@@ -132,6 +149,7 @@ mod tests {
         assert_eq!(q.reserved_blocks, 0);
         assert_eq!(q.ceiling_blocks, usize::MAX);
         assert_eq!(q.swap_bytes, None);
+        assert_eq!(q.precision, None, "untiered tenants inherit the pool");
     }
 
     #[test]
@@ -140,6 +158,8 @@ mod tests {
         assert_eq!((q.reserved_blocks, q.ceiling_blocks), (8, usize::MAX));
         let q = TenantQuota::bounded(4, 12);
         assert_eq!((q.reserved_blocks, q.ceiling_blocks), (4, 12));
+        let q = TenantQuota::reserved(2).with_precision(KvCodec::Int8PerRow);
+        assert_eq!(q.precision, Some(KvCodec::Int8PerRow));
         assert_eq!(TenantId::DEFAULT, TenantId(0));
         assert_eq!(format!("{}", TenantId(3)), "3");
     }

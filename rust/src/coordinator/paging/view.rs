@@ -1,7 +1,7 @@
 //! `DecodeView` — the zero-copy, block-table-native description of one
 //! decode step's KV inputs.
 //!
-//! A view borrows the block slab (no KV data is copied) and carries the
+//! A view borrows the block store (no KV data is copied) and carries the
 //! per-(layer, lane) block tables and valid lengths in exactly the layout
 //! the `decode_paged_{B}x{C}` artifact family consumes:
 //!
@@ -17,6 +17,16 @@
 //! dense staging bridge: the old hot path cloned a full `[L, B, C, KV, hd]`
 //! tensor pair per generated token.
 //!
+//! **Codecs.** The borrowed store may be quantized ([`KvCodec`], exposed
+//! as [`DecodeView::codec`]). Row reads return `Cow<[f32]>` — borrowed
+//! in place under f32, decoded to an owned buffer otherwise — and
+//! [`DecodeView::slab_tensors_into`] dequantizes the whole slab
+//! (the host-side fallback that keeps f32 artifacts working over a
+//! quantized pool). Under [`KvCodec::Int8PerRow`],
+//! [`DecodeView::q8_slab_tensors_into`] instead exports the raw
+//! quantized planes (as integer-valued f32) plus the per-row scale
+//! tensors the `decode_paged_q8_{B}x{C}` artifacts dequantize in-HLO.
+//!
 //! The same view also serves as the host-side gather oracle:
 //! [`DecodeView::k_row`] / [`DecodeView::v_row`] resolve a logical token
 //! row through the table, and [`DecodeView::gather_dense`] materializes
@@ -24,8 +34,12 @@
 //! the incremental staging copy is disabled, and by the differential
 //! tests that pin block-table decode against the staged path).
 
+use std::borrow::Cow;
+
 use crate::tensor::{HostTensor, HostTensorI32};
 
+use super::block::{BlockId, BlockStore};
+use super::codec::KvCodec;
 use super::shard::{self, ShardSpec};
 use super::Staged;
 
@@ -65,8 +79,12 @@ pub struct DecodeView<'a> {
     /// A pinned-slab cache keyed per shard re-uploads only the shards
     /// whose stamp moved.
     pub shard_versions: Vec<u64>,
-    pub(super) slab_k: &'a [f32],
-    pub(super) slab_v: &'a [f32],
+    /// The codec the borrowed slab is stored under — tells decode
+    /// whether a `decode_paged_q8_*` artifact applies
+    /// ([`KvCodec::Int8PerRow`]) or the slab tensors need host
+    /// dequantization before an f32 artifact.
+    pub codec: KvCodec,
+    pub(super) store: &'a BlockStore,
 }
 
 impl<'a> DecodeView<'a> {
@@ -91,25 +109,26 @@ impl<'a> DecodeView<'a> {
         &self.tables[base..base + self.max_blocks]
     }
 
-    fn row_base(&self, layer: usize, slot: usize, row: usize) -> usize {
+    fn block_of(&self, layer: usize, slot: usize, row: usize) -> (BlockId, usize) {
         debug_assert!(row < self.len(layer, slot), "row past len");
         let bt = self.block_tokens;
         let bid = self.table(layer, slot)[row / bt];
         debug_assert!(bid >= 0, "logical row maps to a padded table entry");
-        (bid as usize * bt + row % bt) * self.row_elems()
+        (BlockId(bid as u32), row % bt)
     }
 
     /// Logical token row `row` of `(layer, slot)`, resolved through the
-    /// block table (the gather the paged decode artifact performs in HLO).
-    pub fn k_row(&self, layer: usize, slot: usize, row: usize) -> &[f32] {
-        let base = self.row_base(layer, slot, row);
-        &self.slab_k[base..base + self.row_elems()]
+    /// block table (the gather the paged decode artifact performs in
+    /// HLO). Borrowed under f32, decoded-to-owned under a lossy codec.
+    pub fn k_row(&self, layer: usize, slot: usize, row: usize) -> Cow<'a, [f32]> {
+        let (bid, r) = self.block_of(layer, slot, row);
+        self.store.k_row(bid, r)
     }
 
     /// V-plane counterpart of [`DecodeView::k_row`].
-    pub fn v_row(&self, layer: usize, slot: usize, row: usize) -> &[f32] {
-        let base = self.row_base(layer, slot, row);
-        &self.slab_v[base..base + self.row_elems()]
+    pub fn v_row(&self, layer: usize, slot: usize, row: usize) -> Cow<'a, [f32]> {
+        let (bid, r) = self.block_of(layer, slot, row);
+        self.store.v_row(bid, r)
     }
 
     /// Block tables as the artifact's `[L, B, mb]` i32 input, padded (or
@@ -157,6 +176,10 @@ impl<'a> DecodeView<'a> {
     /// padded to the artifact's pool bucket `nb >= self.num_blocks`. This
     /// is the one O(pool) copy left on the paged path, and it runs only
     /// when the device-side pinned slab is stale (see `Runtime::run_pinned`).
+    ///
+    /// Under a lossy codec this *dequantizes* the slab — the host-side
+    /// fallback that lets plain f32 artifacts decode over a quantized
+    /// pool (the dequant cost lands in `PoolStats::codec_secs`).
     pub fn slab_tensors(&self, nb: usize) -> (HostTensor, HostTensor) {
         let mut k = HostTensor::empty();
         let mut v = HostTensor::empty();
@@ -185,8 +208,74 @@ impl<'a> DecodeView<'a> {
             t.data.clear();
             t.data.resize(elems, 0.0);
         }
-        k.data[..self.slab_k.len()].copy_from_slice(self.slab_k);
-        v.data[..self.slab_v.len()].copy_from_slice(self.slab_v);
+        self.store.decode_k_plane_into(&mut k.data);
+        self.store.decode_v_plane_into(&mut v.data);
+    }
+
+    /// The int8 slab as the `decode_paged_q8_{B}x{C}` artifact's inputs:
+    /// quantized K/V planes as **integer-valued f32** tensors
+    /// `[nb, bt, KV, hd]` (the runtime's host tensors are f32-only) plus
+    /// per-row scale tensors `[nb, bt]`, all zero-padded to the pool
+    /// bucket `nb`. The artifact dequantizes in-HLO
+    /// (`slab * scales[:, :, None, None]`). Returns false — leaving the
+    /// outputs untouched — unless the store codec is
+    /// [`KvCodec::Int8PerRow`]; callers then fall back to the
+    /// dequantizing [`DecodeView::slab_tensors_into`].
+    pub fn q8_slab_tensors_into(
+        &self,
+        nb: usize,
+        k_q: &mut HostTensor,
+        k_scales: &mut HostTensor,
+        v_q: &mut HostTensor,
+        v_scales: &mut HostTensor,
+    ) -> bool {
+        let Some(q8) = self.store.q8_planes() else {
+            return false;
+        };
+        assert!(
+            nb >= self.num_blocks,
+            "artifact pool bucket {nb} < live pool {}",
+            self.num_blocks
+        );
+        let bt = self.block_tokens;
+        let plane_shape = [nb, bt, self.kv_heads, self.head_dim];
+        let elems = nb * bt * self.row_elems();
+        for t in [&mut *k_q, &mut *v_q] {
+            t.shape.clear();
+            t.shape.extend_from_slice(&plane_shape);
+            t.data.clear();
+            t.data.resize(elems, 0.0);
+        }
+        for t in [&mut *k_scales, &mut *v_scales] {
+            t.shape.clear();
+            t.shape.extend_from_slice(&[nb, bt]);
+            t.data.clear();
+            t.data.resize(nb * bt, 0.0);
+        }
+        for (dst, src) in [(&mut *k_q, q8.k_q), (&mut *v_q, q8.v_q)] {
+            for (o, &q) in dst.data.iter_mut().zip(src) {
+                *o = q as f32;
+            }
+        }
+        k_scales.data[..q8.k_scales.len()].copy_from_slice(q8.k_scales);
+        v_scales.data[..q8.v_scales.len()].copy_from_slice(q8.v_scales);
+        true
+    }
+
+    /// Convenience form of [`DecodeView::q8_slab_tensors_into`]:
+    /// `(k_q, k_scales, v_q, v_scales)`, or `None` for non-int8 stores.
+    pub fn q8_slab_tensors(
+        &self,
+        nb: usize,
+    ) -> Option<(HostTensor, HostTensor, HostTensor, HostTensor)> {
+        let (mut kq, mut ks, mut vq, mut vs) = (
+            HostTensor::empty(),
+            HostTensor::empty(),
+            HostTensor::empty(),
+            HostTensor::empty(),
+        );
+        self.q8_slab_tensors_into(nb, &mut kq, &mut ks, &mut vq, &mut vs)
+            .then_some((kq, ks, vq, vs))
     }
 
     /// The shard layout of the owning store.
@@ -207,14 +296,15 @@ impl<'a> DecodeView<'a> {
             version: self.shard_versions[shard],
             block_tokens: self.block_tokens,
             num_blocks: self.num_blocks,
-            slab_k: self.slab_k,
-            slab_v: self.slab_v,
+            codec: self.codec,
+            store: self.store,
         }
     }
 
     /// Reassembled dense planes from every shard's projection — the
     /// differential oracle's check that sharding loses nothing:
-    /// bit-identical to `(slab_k, slab_v)` for any valid shard count.
+    /// identical to the (dequantized) whole-slab planes for any valid
+    /// shard count, bit for bit under lossless codecs.
     pub fn reassembled_slab(&self) -> (Vec<f32>, Vec<f32>) {
         let spec = self.shard_spec();
         let nb = self.num_blocks;
@@ -233,7 +323,9 @@ impl<'a> DecodeView<'a> {
     /// Materialize the dense `[L, B, C, KV, hd]` staging layout (plus
     /// `[L, B]` lens) this view replaces. Byte-identical to what the
     /// incrementally-maintained staging copy would hold: only valid rows
-    /// are written, everything else stays zero.
+    /// are written, everything else stays zero. (Under a lossy codec both
+    /// paths hold the decoded quantized rows — the staging copy mirrors
+    /// the store's read-back, this gathers it directly.)
     pub fn gather_dense(&self) -> Staged {
         let re = self.row_elems();
         let shape =
@@ -245,8 +337,10 @@ impl<'a> DecodeView<'a> {
                 let n = self.len(l, s);
                 for row in 0..n {
                     let dst = ((l * self.b + s) * self.capacity + row) * re;
-                    k.data[dst..dst + re].copy_from_slice(self.k_row(l, s, row));
-                    v.data[dst..dst + re].copy_from_slice(self.v_row(l, s, row));
+                    k.data[dst..dst + re]
+                        .copy_from_slice(&self.k_row(l, s, row));
+                    v.data[dst..dst + re]
+                        .copy_from_slice(&self.v_row(l, s, row));
                 }
             }
         }
@@ -271,8 +365,11 @@ pub struct ShardView<'a> {
     pub block_tokens: usize,
     /// Physical blocks in the (shared) pool.
     pub num_blocks: usize,
-    slab_k: &'a [f32],
-    slab_v: &'a [f32],
+    /// Codec of the underlying store. Sharded decode over a lossy store
+    /// takes the host-dequant path ([`ShardView::slab_tensors_into`]
+    /// decodes before projecting).
+    pub codec: KvCodec,
+    store: &'a BlockStore,
 }
 
 impl<'a> ShardView<'a> {
@@ -281,19 +378,30 @@ impl<'a> ShardView<'a> {
         self.spec.shard_row_elems()
     }
 
-    /// This shard's slice of one physical block row, zero-copy (a shard's
-    /// heads are contiguous inside the dense row).
-    pub fn k_block_row(&self, block: usize, row: usize) -> &[f32] {
-        let range = self.spec.row_range(self.shard);
-        let base = (block * self.block_tokens + row) * self.spec.row_elems();
-        &self.slab_k[base + range.start..base + range.end]
+    /// This shard's slice of one physical block row (a shard's heads are
+    /// contiguous inside the dense row). Zero-copy under f32; under a
+    /// lossy codec the row is decoded and the slice owned.
+    pub fn k_block_row(&self, block: usize, row: usize) -> Cow<'a, [f32]> {
+        self.block_row(false, block, row)
     }
 
     /// V-plane counterpart of [`ShardView::k_block_row`].
-    pub fn v_block_row(&self, block: usize, row: usize) -> &[f32] {
+    pub fn v_block_row(&self, block: usize, row: usize) -> Cow<'a, [f32]> {
+        self.block_row(true, block, row)
+    }
+
+    fn block_row(&self, v: bool, block: usize, row: usize) -> Cow<'a, [f32]> {
         let range = self.spec.row_range(self.shard);
-        let base = (block * self.block_tokens + row) * self.spec.row_elems();
-        &self.slab_v[base + range.start..base + range.end]
+        let bid = BlockId(block as u32);
+        let full = if v {
+            self.store.v_row(bid, row)
+        } else {
+            self.store.k_row(bid, row)
+        };
+        match full {
+            Cow::Borrowed(r) => Cow::Borrowed(&r[range]),
+            Cow::Owned(r) => Cow::Owned(r[range].to_vec()),
+        }
     }
 
     /// This shard's slab planes in the sharded artifact's layout
@@ -309,7 +417,10 @@ impl<'a> ShardView<'a> {
     }
 
     /// [`ShardView::slab_tensors`] into caller-owned tensors (scratch
-    /// variant).
+    /// variant). Under a lossy codec the dense plane is decoded into a
+    /// scratch buffer first and the shard projected from it — the sharded
+    /// host-dequant fallback (in-HLO q8 dequant is wired for the
+    /// unsharded family; see `decode.rs`).
     pub fn slab_tensors_into(
         &self,
         nb: usize,
@@ -331,21 +442,47 @@ impl<'a> ShardView<'a> {
             t.data.clear();
             t.data.resize(elems, 0.0);
         }
-        shard::project_plane_into(
-            self.slab_k,
-            self.spec,
-            self.shard,
-            self.num_blocks,
-            self.block_tokens,
-            &mut k.data,
-        );
-        shard::project_plane_into(
-            self.slab_v,
-            self.spec,
-            self.shard,
-            self.num_blocks,
-            self.block_tokens,
-            &mut v.data,
-        );
+        match (self.store.k_plane_f32(), self.store.v_plane_f32()) {
+            (Some(kp), Some(vp)) => {
+                shard::project_plane_into(
+                    kp,
+                    self.spec,
+                    self.shard,
+                    self.num_blocks,
+                    self.block_tokens,
+                    &mut k.data,
+                );
+                shard::project_plane_into(
+                    vp,
+                    self.spec,
+                    self.shard,
+                    self.num_blocks,
+                    self.block_tokens,
+                    &mut v.data,
+                );
+            }
+            _ => {
+                let rows = self.num_blocks * self.block_tokens;
+                let mut dense = vec![0.0f32; rows * self.spec.row_elems()];
+                self.store.decode_k_plane_into(&mut dense);
+                shard::project_plane_into(
+                    &dense,
+                    self.spec,
+                    self.shard,
+                    self.num_blocks,
+                    self.block_tokens,
+                    &mut k.data,
+                );
+                self.store.decode_v_plane_into(&mut dense);
+                shard::project_plane_into(
+                    &dense,
+                    self.spec,
+                    self.shard,
+                    self.num_blocks,
+                    self.block_tokens,
+                    &mut v.data,
+                );
+            }
+        }
     }
 }

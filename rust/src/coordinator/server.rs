@@ -617,6 +617,17 @@ fn publish_pool_gauges(store: &dyn KvStore, metrics: &Metrics) {
     metrics.set_gauge(names::SWAP_BYTES_BUDGET, ss.budget_bytes as f64);
     metrics.set_gauge(names::SWAP_ENTRIES, ss.entries as f64);
     metrics.set_gauge(names::SWAP_DROPPED, ss.dropped as f64);
+    // Slab codec accounting: resident encoded bytes plus the store's
+    // cumulative quantize/dequantize row counts and bulk codec time.
+    metrics.set_gauge(names::POOL_BYTES_QUANTIZED, ps.slab_bytes as f64);
+    metrics.set_gauge(names::QUANT_ROWS, ps.quant_rows as f64);
+    metrics.set_gauge(names::DEQUANT_ROWS, ps.dequant_rows as f64);
+    metrics.set_gauge(names::QUANT_DEQUANT_SECS, ps.codec_secs);
+    // Per-tier lane rows: every tier published (zeros included) so a
+    // tier emptying never drops the series.
+    for (codec, lanes) in store.lanes_by_tier() {
+        metrics.set_gauge(&names::lanes_tier(codec), lanes as f64);
+    }
     // Per-shard slab rows (empty for unsharded backends): the device
     // bytes each shard executor pins for this store's K + V planes.
     for (s, bytes) in store.shard_slab_bytes().into_iter().enumerate() {

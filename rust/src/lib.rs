@@ -93,8 +93,8 @@ pub mod workload;
 pub use coordinator::decode::{DecodeBatch, DecodePath, DecodeScratch};
 pub use coordinator::engine::{generate, GenResult, GenStats};
 pub use coordinator::paging::{
-    AppendResult, DecodeView, KvStore, PagedArena, PagingConfig, PoolStats,
-    ShardSpec, ShardView, SwapHandle, SwapIn, SwapStats, TenantId,
+    AppendResult, DecodeView, KvCodec, KvStore, PagedArena, PagingConfig,
+    PoolStats, ShardSpec, ShardView, SwapHandle, SwapIn, SwapStats, TenantId,
     TenantQuota, TenantStats,
 };
 pub use coordinator::policies::{

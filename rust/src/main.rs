@@ -68,7 +68,11 @@ fn print_help() {
          \x20          [--flat] [--pool-blocks N] [--block-tokens 16] [--no-prefix-cache]\n\
          \x20          [--dense-staging]  (fallback: staged decode bridge instead of block tables)\n\
          \x20          [--swap-mb M]  (host swap budget for preempted lanes; 0 = recompute-resume)\n\
-         \x20          [--swap-half]  (f16-encode swapped lanes: half the host budget pressure)\n\
+         \x20          [--swap-half]  (legacy alias: pool-wide f16 tier for *swapped lanes only*;\n\
+         \x20           the resident slab stays at --precision. Prefer --precision / per-tenant tiers)\n\
+         \x20          [--precision f32|f16|int8]  (KV codec for the resident slab AND the default\n\
+         \x20           swap tier; int8 = per-row scaled blocks, ~4x lane capacity)\n\
+         \x20          [--tenant-precision T:f32|f16|int8,...]  (per-tenant precision tier overrides)\n\
          \x20          [--shards S]  (KV-head-shard the slab into S per-shard pinned slabs;\n\
          \x20           S must divide the model's kv_heads; 1 = single-slab path)\n\
          \x20          [--tenants T] [--quota-blocks R]  (T tenants round-robin by request id,\n\
@@ -755,9 +759,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // --swap-mb M: host swap budget for preempted lanes (0 disables
         // swap-to-host; preemption then recompute-resumes).
         pc.swap_bytes = args.usize("swap-mb", pc.swap_bytes >> 20) << 20;
-        // --swap-half: encode swapped lanes as f16 (half the host budget
-        // pressure; restores are within one f16 rounding step).
+        // --swap-half: legacy alias for a pool-wide f16 tier on *swapped
+        // lanes only* (the resident slab stays at --precision). Subsumed
+        // by --precision / per-tenant tiers; kept for compatibility.
         pc.swap_half = args.has("swap-half");
+        // --precision: KV codec for the resident slab and the default
+        // swap tier (int8 = per-row scaled blocks, ~4x lane capacity;
+        // lossless restores only at f32).
+        if let Some(p) = args.get("precision") {
+            pc.precision = fastkv::KvCodec::parse(p)
+                .map_err(|e| anyhow::anyhow!("--precision: {e}"))?;
+        }
         // --tenants T + --quota-blocks R: every tenant gets a reserved
         // floor of R blocks (burst above it allowed while the pool has
         // slack); requests are assigned tenants round-robin below.
@@ -769,6 +781,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     (fastkv::TenantId(t), fastkv::TenantQuota::reserved(quota))
                 })
                 .collect();
+        }
+        // --tenant-precision T:f16,U:int8,...: per-tenant precision tier
+        // overrides (swap-encode tier for that tenant's preempted lanes;
+        // untiered tenants inherit the pool default).
+        if let Some(spec) = args.get("tenant-precision") {
+            for part in spec.split(',').filter(|p| !p.is_empty()) {
+                let (t, codec) = part.split_once(':').ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--tenant-precision: expected T:f32|f16|int8, got {part:?}"
+                    )
+                })?;
+                let t: u32 = t.parse().map_err(|_| {
+                    anyhow::anyhow!("--tenant-precision: bad tenant id {t:?}")
+                })?;
+                let codec = fastkv::KvCodec::parse(codec)
+                    .map_err(|e| anyhow::anyhow!("--tenant-precision: {e}"))?;
+                let id = fastkv::TenantId(t);
+                let q = pc
+                    .tenant_quotas
+                    .iter_mut()
+                    .find(|(tid, _)| *tid == id);
+                match q {
+                    Some((_, q)) => q.precision = Some(codec),
+                    None => pc.tenant_quotas.push((
+                        id,
+                        fastkv::TenantQuota::default().with_precision(codec),
+                    )),
+                }
+            }
         }
         Some(pc)
     };

@@ -64,6 +64,25 @@ pub fn decode_paged_shard_artifact_name(
     format!("decode_paged_shard_{batch}x{cap}s{shards}")
 }
 
+/// Canonical name of the int8-slab block-table decode artifact for a
+/// bucket: consumes quantized K/V planes (integer-valued f32) plus
+/// per-row scale tensors and dequantizes in-HLO.
+pub fn decode_paged_q8_artifact_name(batch: usize, cap: usize) -> String {
+    format!("decode_paged_q8_{batch}x{cap}")
+}
+
+/// Canonical name of the sharded int8-slab decode artifact for a bucket
+/// and shard count (emitted by the compiler; the rust coordinator
+/// currently drives the unsharded q8 family and host-dequantizes for
+/// sharded quantized stores).
+pub fn decode_paged_q8_shard_artifact_name(
+    batch: usize,
+    cap: usize,
+    shards: usize,
+) -> String {
+    format!("decode_paged_q8_shard_{batch}x{cap}s{shards}")
+}
+
 #[derive(Debug, Clone)]
 pub struct TensorSig {
     pub shape: Vec<usize>,
@@ -304,6 +323,14 @@ mod tests {
     fn decode_artifact_names() {
         assert_eq!(decode_artifact_name(4, 320), "decode_4x320");
         assert_eq!(decode_paged_artifact_name(1, 128), "decode_paged_1x128");
+        assert_eq!(
+            decode_paged_q8_artifact_name(1, 128),
+            "decode_paged_q8_1x128"
+        );
+        assert_eq!(
+            decode_paged_q8_shard_artifact_name(4, 320, 2),
+            "decode_paged_q8_shard_4x320s2"
+        );
         assert_eq!(
             decode_paged_shard_artifact_name(4, 320, 2),
             "decode_paged_shard_4x320s2"

@@ -155,11 +155,42 @@ pub mod names {
     /// Gauge (0/1): 1 = the serving loop resolved the sharded decode
     /// path at startup.
     pub const DECODE_SHARDED: &str = "decode_sharded";
+    /// Counter: decode steps served through the quantized block-table
+    /// path (`decode_paged_q8_{B}x{C}` — int8 planes + per-row scales,
+    /// dequantized in-HLO).
+    pub const DECODE_STEPS_Q8: &str = "decode_steps_q8";
 
-    use crate::coordinator::paging::TenantId;
+    // ------------------------------------------------- slab quantization
+    /// Gauge: resident bytes of the slab's encoded K + V planes under the
+    /// pool codec (equals `pool_blocks_total * block_tokens *
+    /// bytes_per_row(KV*hd) * 2`; for int8 this includes the per-row
+    /// scale planes). Named "quantized" for the tiers where it diverges
+    /// from the f32 figure, but published for every codec so dashboards
+    /// can diff precision configurations.
+    pub const POOL_BYTES_QUANTIZED: &str = "pool_bytes_quantized";
+    /// Gauge: cumulative seconds the store spent in bulk codec work
+    /// (whole-plane decode for view materialization; per-row write-side
+    /// quantization is too fine to time without distorting it).
+    pub const QUANT_DEQUANT_SECS: &str = "quant_dequant_secs";
+    /// Gauge: rows quantized by write-side encodes since startup.
+    pub const QUANT_ROWS: &str = "quant_rows";
+    /// Gauge: rows dequantized by read-side decodes since startup.
+    pub const DEQUANT_ROWS: &str = "dequant_rows";
+
+    use crate::coordinator::paging::{KvCodec, TenantId};
+
+    /// Gauge name: active lanes whose effective swap tier is `codec`
+    /// (the tenant's precision tier, else the pool default). All three
+    /// tiers are published — zero-valued gauges included — so dashboards
+    /// never lose a series when a tier empties.
+    pub fn lanes_tier(codec: KvCodec) -> String {
+        format!("lanes_tier_{}", codec.name())
+    }
 
     /// Gauge name: device bytes shard `s` pins for this store's K + V
-    /// slab planes (`num_blocks * block_tokens * KV/S * hd * 4 * 2`).
+    /// slab planes (`num_blocks * block_tokens *
+    /// codec.bytes_per_row(KV/S * hd) * 2` — 4 bytes/elem at f32, 2 at
+    /// f16, 1 + the amortized scale at int8).
     pub fn shard_slab_bytes(s: usize) -> String {
         format!("shard_{s}_slab_bytes")
     }

@@ -12,8 +12,8 @@
 use fastkv::coordinator::kvcache::{BatchArena, RequestCache};
 use fastkv::coordinator::paging::allocator::{BlockAllocator, Revive};
 use fastkv::coordinator::paging::{
-    AppendResult, KvStore, PagedArena, PagingConfig, SwapIn, TenantId,
-    TenantQuota,
+    AppendResult, KvCodec, KvStore, PagedArena, PagingConfig, SwapIn,
+    TenantId, TenantQuota,
 };
 use fastkv::coordinator::scheduler::{
     pick_preemption_victim, Action, AdmitOrder, Scheduler,
@@ -772,10 +772,10 @@ fn lane_rows(pa: &PagedArena, slot: usize, layers: usize) -> Vec<Vec<f32>> {
         .map(|l| {
             let mut out = Vec::new();
             for row in 0..v.len(l, slot) {
-                out.extend_from_slice(v.k_row(l, slot, row));
+                out.extend_from_slice(&v.k_row(l, slot, row));
             }
             for row in 0..v.len(l, slot) {
-                out.extend_from_slice(v.v_row(l, slot, row));
+                out.extend_from_slice(&v.v_row(l, slot, row));
             }
             out
         })
@@ -1179,19 +1179,35 @@ fn run_stack_sharded(
     preempt_at: usize,
     shards: usize,
 ) -> StackResult {
+    run_stack_cfg(
+        PagingConfig {
+            block_tokens: 2,
+            prefix_cache: false,
+            swap_bytes,
+            shards,
+            ..Default::default()
+        },
+        prompts,
+        max_new,
+        preempt_at,
+    )
+}
+
+/// [`run_stack`] with full control of the pool config (precision tiers,
+/// shard counts, swap budgets).
+fn run_stack_cfg(
+    pcfg: PagingConfig,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    preempt_at: usize,
+) -> StackResult {
     let m = sim_meta();
     let man = sim_manifest(64);
     let policy = SimPolicy::new();
     let metrics = Metrics::default();
     let cfg = sim_server_cfg(32, max_new);
     let lanes = prompts.len();
-    let pcfg = PagingConfig {
-        block_tokens: 2,
-        prefix_cache: false,
-        swap_bytes,
-        shards,
-        ..Default::default()
-    };
+    let swap_enabled = pcfg.swap_bytes > 0;
     let mut pa = PagedArena::new(&m, lanes, 64, pcfg);
     let mut sched: Scheduler<Request> = Scheduler::new(lanes, AdmitOrder::Fcfs);
     let mut prompt_map: HashMap<u64, Vec<i32>> = HashMap::new();
@@ -1216,7 +1232,7 @@ fn run_stack_sharded(
             match try_resume(req, &mut pa, &metrics) {
                 Resume::Restored(a) => {
                     assert!(
-                        swap_bytes > 0,
+                        swap_enabled,
                         "swap-disabled stack must never restore"
                     );
                     active.push(a);
@@ -2354,4 +2370,420 @@ fn lossy_swap_never_reregisters_preserved_hashes() {
         expect.extend(rc.v[l].iter().copied());
         assert_eq!(row, &expect, "layer {l}: exact admission stayed exact");
     }
+}
+
+// --------------------------------------------------- in-slab quantization
+
+/// Per-row int8 tolerance for `rewrites` lossy rewrites of a row whose
+/// exact content is `row`: each re-quantization contributes at most half
+/// the quantization step (`scale = max|row| / 127`), with headroom for
+/// the slight scale drift that re-encoding already-dequantized content
+/// introduces.
+fn int8_row_tol(row: &[f32], rewrites: usize) -> f32 {
+    let max = row.iter().fold(0f32, |a, x| a.max(x.abs()));
+    0.75 * (max / 127.0) * rewrites.max(1) as f32 + 1e-4
+}
+
+/// Compare two [`lane_rows`] captures row by row (both are `K ++ V` per
+/// layer, so every `re`-sized chunk is one logical row) against the
+/// accumulated int8 bound.
+fn assert_rows_within_int8_bound(
+    exact: &[Vec<f32>],
+    quant: &[Vec<f32>],
+    re: usize,
+    rewrites: usize,
+    ctx: &str,
+) {
+    assert_eq!(exact.len(), quant.len(), "{ctx}: layer count");
+    for (l, (el, ql)) in exact.iter().zip(quant).enumerate() {
+        assert_eq!(el.len(), ql.len(), "{ctx}: layer {l} row bytes");
+        for (r, (erow, qrow)) in el.chunks(re).zip(ql.chunks(re)).enumerate()
+        {
+            let tol = int8_row_tol(erow, rewrites);
+            for (i, (e, q)) in erow.iter().zip(qrow).enumerate() {
+                assert!(
+                    (e - q).abs() <= tol,
+                    "{ctx}: layer {l} row {r} elem {i}: |{e} - {q}| = {} \
+                     > tol {tol} ({rewrites} rewrites)",
+                    (e - q).abs()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_quantized_store_matches_f32_within_bound() {
+    // The lossy differential oracle of the acceptance criteria: an
+    // int8-precision pool driven in lockstep with an f32 pool through
+    // admits, appends, compactions, swap roundtrips, and releases keeps
+    // identical lens/slots/results everywhere and never drifts from the
+    // exact store by more than the accumulated per-row quantization
+    // bound. Shard counts ride along so the sharded quantized mirror is
+    // exercised under the same schedules.
+    for (seed, mut rng) in cases(60) {
+        let m = meta(&mut rng);
+        let re = m.n_kv_heads * m.head_dim;
+        let lanes = rng.range(1, 3);
+        let c = rng.range(6, 16);
+        let bt = rng.range(2, 4);
+        let shards = if rng.chance(0.3) { m.n_kv_heads } else { 1 };
+        let mk = |precision| PagingConfig {
+            block_tokens: bt,
+            num_blocks: None, // worst-case pool: admission never fails
+            prefix_cache: false,
+            swap_bytes: 64 << 20,
+            shards,
+            precision,
+            ..Default::default()
+        };
+        let mut exact = PagedArena::new(&m, lanes, c, mk(KvCodec::F32));
+        let mut quant =
+            PagedArena::new(&m, lanes, c, mk(KvCodec::Int8PerRow));
+        // (slot, lossy-rewrite upper bound for every row of the lane)
+        let mut live: Vec<(usize, usize)> = Vec::new();
+        for step in 0..rng.range(5, 18) {
+            match rng.below(5) {
+                0 => {
+                    let rc = rand_cache(
+                        &mut rng,
+                        &m,
+                        c.min(8),
+                        (seed * 100 + step as u64) as f64,
+                    );
+                    let se = KvStore::admit(&mut exact, &rc);
+                    let sq = KvStore::admit(&mut quant, &rc);
+                    assert_eq!(se, sq, "seed {seed}: slot assignment");
+                    if let Some(s) = se {
+                        live.push((s, 1));
+                    }
+                }
+                1 if !live.is_empty() => {
+                    let kv = rand_step(&mut rng, &m, lanes);
+                    let (slot, _) = live[rng.below(live.len())];
+                    let re_ap = KvStore::append(&mut exact, slot, &kv, &kv);
+                    let rq_ap = KvStore::append(&mut quant, slot, &kv, &kv);
+                    assert_eq!(re_ap, rq_ap, "seed {seed}: append result");
+                }
+                2 if !live.is_empty() => {
+                    let i = rng.below(live.len());
+                    let slot = live[i].0;
+                    let lens = KvStore::layer_lens(&exact, slot);
+                    assert_eq!(
+                        lens,
+                        KvStore::layer_lens(&quant, slot),
+                        "seed {seed}: lens before compact"
+                    );
+                    let keep: Vec<Vec<usize>> = lens
+                        .iter()
+                        .map(|&n| {
+                            let k = rng.range(1, n.max(1));
+                            rng.distinct_sorted(k.min(n), n)
+                        })
+                        .collect();
+                    KvStore::compact(&mut exact, slot, &keep);
+                    KvStore::compact(&mut quant, slot, &keep);
+                    // compaction re-quantizes every kept row once
+                    live[i].1 += 1;
+                }
+                3 if !live.is_empty() => {
+                    // swap roundtrip: the exact pool stays bit-identical,
+                    // the int8 lane re-encodes on park and re-quantizes
+                    // on restore (two lossy rewrites)
+                    let i = rng.below(live.len());
+                    let slot = live[i].0;
+                    let he = exact.swap_out(slot).unwrap();
+                    let hq = quant.swap_out(slot).unwrap();
+                    let se = match exact.swap_in(he) {
+                        SwapIn::Restored(s) => s,
+                        other => panic!("seed {seed}: exact {other:?}"),
+                    };
+                    let sq = match quant.swap_in(hq) {
+                        SwapIn::Restored(s) => s,
+                        other => panic!("seed {seed}: quant {other:?}"),
+                    };
+                    assert_eq!(se, sq, "seed {seed}: restored lane");
+                    let rw = live[i].1 + 2;
+                    live[i] = (se, rw);
+                }
+                4 if !live.is_empty() => {
+                    let (slot, _) = live.swap_remove(rng.below(live.len()));
+                    assert_eq!(
+                        exact.release(slot),
+                        quant.release(slot),
+                        "seed {seed}: release"
+                    );
+                }
+                _ => {}
+            }
+            for &(slot, rw) in &live {
+                assert_eq!(
+                    KvStore::layer_lens(&exact, slot),
+                    KvStore::layer_lens(&quant, slot),
+                    "seed {seed}: lens drift"
+                );
+                assert_rows_within_int8_bound(
+                    &lane_rows(&exact, slot, m.n_layers),
+                    &lane_rows(&quant, slot, m.n_layers),
+                    re,
+                    rw,
+                    &format!("seed {seed} step {step} slot {slot}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_precision_pool_gauges_reconcile() {
+    // Satellite regression for the hardcoded-`* 4` sweep: every byte
+    // gauge must come from `KvCodec::bytes_per_row`, so pools of every
+    // tier reconcile exactly — whole-slab vs per-shard, at every valid
+    // shard count — and tiered tenants group into the right lane gauges.
+    let m = shard_meta(); // 4 KV heads, head_dim 2 -> re = 8
+    let re = m.n_kv_heads * m.head_dim;
+    let bt = 2usize;
+    let blocks = 12usize;
+    let mk = |precision, shards| PagingConfig {
+        block_tokens: bt,
+        num_blocks: Some(blocks),
+        prefix_cache: false,
+        shards,
+        precision,
+        ..Default::default()
+    };
+    let mut slab_bytes_by_codec = Vec::new();
+    for codec in KvCodec::ALL {
+        for shards in [1usize, 2, 4] {
+            let pa = PagedArena::new(&m, 2, 8, mk(codec, shards));
+            let ps = pa.pool_stats();
+            assert_eq!(ps.codec, codec);
+            assert_eq!(
+                ps.slab_bytes,
+                2 * blocks * bt * codec.bytes_per_row(re),
+                "{} slab bytes",
+                codec.name()
+            );
+            let shard_bytes = pa.shard_slab_bytes();
+            assert_eq!(shard_bytes.len(), shards);
+            let per = 2 * blocks * bt * codec.bytes_per_row(re / shards);
+            assert!(
+                shard_bytes.iter().all(|&b| b == per),
+                "{} S={shards}: uniform shard bytes",
+                codec.name()
+            );
+            // Σ shard bytes equals the whole-slab gauge, except that the
+            // int8 per-row scale planes (4 bytes per row per plane) ride
+            // along once per shard.
+            let scale_planes = (shards - 1) * 2 * blocks * bt * 4;
+            let expect = match codec {
+                KvCodec::Int8PerRow => ps.slab_bytes + scale_planes,
+                _ => ps.slab_bytes,
+            };
+            assert_eq!(
+                shard_bytes.iter().sum::<usize>(),
+                expect,
+                "{} S={shards}: shard gauges vs slab gauge",
+                codec.name()
+            );
+        }
+        slab_bytes_by_codec
+            .push(PagedArena::new(&m, 2, 8, mk(codec, 1)).pool_stats().slab_bytes);
+    }
+    // strict resident-byte ordering at equal block count: int8 < f16 < f32
+    let (f32b, f16b, q8b) = (
+        slab_bytes_by_codec[0],
+        slab_bytes_by_codec[1],
+        slab_bytes_by_codec[2],
+    );
+    assert!(q8b < f16b && f16b < f32b, "tier ordering: {q8b} {f16b} {f32b}");
+
+    // per-tenant tiers: lanes group by *effective* codec and the tenant
+    // block gauges still reconcile on a mixed-precision pool
+    let pcfg = PagingConfig {
+        block_tokens: bt,
+        num_blocks: Some(32),
+        prefix_cache: false,
+        swap_bytes: 1 << 20,
+        tenant_quotas: vec![(
+            HEAVY,
+            TenantQuota::default().with_precision(KvCodec::Int8PerRow),
+        )],
+        ..Default::default() // pool default stays f32
+    };
+    let mut pa = PagedArena::new(&m, 3, 8, pcfg);
+    let _h = pa.admit_for(&tenant_cache(&m, 4, 10.0), HEAVY).unwrap();
+    let _l = pa.admit_for(&tenant_cache(&m, 4, 20.0), LIGHT).unwrap();
+    let tiers: HashMap<KvCodec, usize> = pa.lanes_by_tier().into_iter().collect();
+    assert_eq!(tiers[&KvCodec::F32], 1, "LIGHT rides the pool default");
+    assert_eq!(tiers[&KvCodec::Int8PerRow], 1, "HEAVY's configured tier");
+    assert_eq!(tiers[&KvCodec::F16], 0, "empty tiers still reported");
+    assert_eq!(tiers.values().sum::<usize>(), 2, "tier gauges cover lanes");
+    let metrics = Metrics::default();
+    assert_tenant_gauges_reconcile(&pa, &metrics);
+
+    // codec activity counters move only where the codec is lossy
+    let mut q = PagedArena::new(&m, 1, 8, mk(KvCodec::Int8PerRow, 1));
+    let slot = KvStore::admit(&mut q, &tenant_cache(&m, 4, 30.0)).unwrap();
+    let before = q.pool_stats();
+    assert!(before.quant_rows > 0, "admission quantizes rows");
+    let _ = lane_rows(&q, slot, m.n_layers);
+    assert!(
+        q.pool_stats().dequant_rows > before.dequant_rows,
+        "view reads dequantize"
+    );
+    let f = PagedArena::new(&m, 1, 8, mk(KvCodec::F32, 1));
+    assert_eq!(f.pool_stats().quant_rows, 0, "f32 pool never quantizes");
+}
+
+#[test]
+fn tenant_precision_tier_prices_swap_at_quantized_bytes() {
+    // `would_refuse` consults the *tenant's* tier, not the pool flag: an
+    // int8-tier lane is priced and parked at `rows * 2 * (re + 4)` bytes
+    // while a default-tier lane in the same f32 pool pays full f32
+    // freight — so a budget sized for the quantized lane admits one and
+    // refuses the other.
+    let m = shard_meta();
+    let re = m.n_kv_heads * m.head_dim;
+    let rc = rand_cache(&mut Rng::new(11), &m, 10, 7.0);
+    let rows: usize = rc.lens.iter().sum();
+    let q8_bytes = rows * 2 * KvCodec::Int8PerRow.bytes_per_row(re);
+    let f32_bytes = rows * 2 * KvCodec::F32.bytes_per_row(re);
+    assert!(q8_bytes * 2 < f32_bytes, "int8 lane well under half of f32");
+    let mk = || PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes: q8_bytes + 8, // fits the int8 lane, nowhere near f32
+        tenant_quotas: vec![(
+            HEAVY,
+            TenantQuota::default().with_precision(KvCodec::Int8PerRow),
+        )],
+        ..Default::default()
+    };
+    let mut pa = PagedArena::new(&m, 2, 12, mk());
+    let h = pa.admit_for(&rc, HEAVY).unwrap();
+    let before = lane_rows(&pa, h, m.n_layers);
+    let handle = pa.swap_out(h).expect("int8-tier lane fits the budget");
+    assert_eq!(pa.swap_stats().used_bytes, q8_bytes, "encoded size charged");
+    let heavy_row = pa
+        .tenant_stats()
+        .into_iter()
+        .find(|t| t.tenant == HEAVY)
+        .expect("HEAVY has a tenant row");
+    assert_eq!(heavy_row.swap_bytes_used, q8_bytes, "charged to HEAVY");
+    let restored = match pa.swap_in(handle) {
+        SwapIn::Restored(s) => s,
+        other => panic!("expected restore, got {other:?}"),
+    };
+    // one lossy rewrite: int8 encode on park, decoded back into the f32
+    // slab on restore
+    assert_rows_within_int8_bound(
+        &before,
+        &lane_rows(&pa, restored, m.n_layers),
+        re,
+        1,
+        "int8-tier restore",
+    );
+
+    // the same budget refuses the default-tier lane, leaving it intact
+    let mut pa2 = PagedArena::new(&m, 2, 12, mk());
+    let s2 = pa2.admit_for(&rc, LIGHT).unwrap();
+    assert!(pa2.swap_out(s2).is_none(), "f32-priced lane over budget");
+    assert_eq!(pa2.swap_stats().used_bytes, 0, "refusal charges nothing");
+    assert_eq!(
+        lane_rows(&pa2, s2, m.n_layers),
+        before,
+        "refused lane left fully intact"
+    );
+}
+
+#[test]
+fn quantized_stack_matches_f32_token_streams_with_bounded_kv() {
+    // The end-to-end oracle of the acceptance criteria: an
+    // int8-precision pool pushed through the full serve lifecycle —
+    // admit, decode, preempt, swap-resume, retire — emits the IDENTICAL
+    // token streams as the f32 stack, its swap resumes stay free of
+    // policy re-prefills, and every request's final KV lands inside the
+    // accumulated per-row quantization bound.
+    let m = sim_meta();
+    let re = m.n_kv_heads * m.head_dim;
+    let prompts: Vec<Vec<i32>> =
+        vec![vec![10, 11, 12], vec![20, 21, 22, 23], vec![30, 31]];
+    let max_new = 5;
+    let mk = |precision| PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes: 128 << 20,
+        precision,
+        ..Default::default()
+    };
+    let exact = run_stack_cfg(mk(KvCodec::F32), &prompts, max_new, 2);
+    let quant = run_stack_cfg(mk(KvCodec::Int8PerRow), &prompts, max_new, 2);
+    for id in 0..prompts.len() as u64 {
+        assert_eq!(
+            exact.streams[&id], quant.streams[&id],
+            "token stream diverged for request {id} under int8"
+        );
+        assert_eq!(quant.streams[&id].len(), max_new);
+        // admit quantizes once, the preemption swap re-encodes and
+        // restores (two more rewrites); decode appends stay under that
+        assert_rows_within_int8_bound(
+            &exact.final_rows[&id],
+            &quant.final_rows[&id],
+            re,
+            3,
+            &format!("request {id} final KV"),
+        );
+        assert_ne!(
+            exact.final_rows[&id], quant.final_rows[&id],
+            "rows large enough that int8 actually rounds (request {id})"
+        );
+    }
+    // the quantized stack still swap-resumes every preempted request —
+    // no recompute, no extra prefills
+    assert_eq!(exact.policy_calls, quant.policy_calls);
+    assert_eq!(quant.metrics.counter(names::PREFILL_RECOMPUTED), 0);
+    assert_eq!(quant.metrics.counter(names::SWAP_OUTS), prompts.len() as u64);
+    assert_eq!(quant.metrics.counter(names::SWAP_INS), prompts.len() as u64);
+}
+
+#[test]
+fn f16_slab_roundtrips_representable_values_and_default_stays_lossless() {
+    // Lossless pin: the default pool precision is f32 (the flat-vs-paged
+    // differentials above enforce bit-identity for it), and the codec
+    // taxonomy agrees.
+    assert_eq!(PagingConfig::default().precision, KvCodec::F32);
+    assert!(KvCodec::F32.is_lossless());
+    assert!(!KvCodec::F16.is_lossless());
+    assert!(!KvCodec::Int8PerRow.is_lossless());
+    // An f16 slab stores exactly-representable content bit-identically
+    // while halving resident bytes.
+    let m = shard_meta();
+    let re = m.n_kv_heads * m.head_dim;
+    let mk = |precision| PagingConfig {
+        block_tokens: 2,
+        num_blocks: Some(8),
+        prefix_cache: false,
+        precision,
+        ..Default::default()
+    };
+    let mut rc = RequestCache::new(&m);
+    for l in 0..m.n_layers {
+        // quarter-integers: exact in f16, so any slab rounding shows up
+        rc.k[l] = (0..4 * re).map(|i| (i as f32) * 0.25 - 3.0).collect();
+        rc.v[l] = rc.k[l].iter().map(|x| -x).collect();
+        rc.lens[l] = 4;
+    }
+    let mut half = PagedArena::new(&m, 1, 8, mk(KvCodec::F16));
+    let slot = KvStore::admit(&mut half, &rc).unwrap();
+    for (l, row) in lane_rows(&half, slot, m.n_layers).iter().enumerate() {
+        let mut expect = rc.k[l].clone();
+        expect.extend(rc.v[l].iter().copied());
+        assert_eq!(row, &expect, "layer {l}: f16 slab exact on representables");
+    }
+    assert_eq!(
+        half.pool_stats().slab_bytes * 2,
+        PagedArena::new(&m, 1, 8, mk(KvCodec::F32)).pool_stats().slab_bytes,
+        "f16 slab is half the f32 slab"
+    );
 }
