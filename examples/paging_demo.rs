@@ -101,7 +101,12 @@ struct PressureOutcome {
 /// Serve `requests` synthetic requests through a tight pool, optionally
 /// compacting under pressure before preempting. Mirrors the server loop's
 /// admission / compaction / preemption logic, minus the PJRT decode call.
-#[allow(clippy::too_many_arguments)]
+#[allow(
+    clippy::too_many_arguments,
+    reason = "demo entry point mirroring the server loop's admission / \
+              compaction / preemption knobs one-to-one; a config struct \
+              here would just rename the CLI flags"
+)]
 fn pressure_run(
     m: &ModelMeta,
     requests: usize,

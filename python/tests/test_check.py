@@ -1,0 +1,379 @@
+"""tools/check.py: every named check must fire on injected drift and
+stay silent on a clean fixture tree — plus the real repo passes clean.
+
+Runs under pytest or plain `python3 python/tests/test_check.py`
+(unittest), so the no-Rust CI lane needs nothing beyond the stdlib.
+"""
+
+import os
+import shutil
+import sys
+import tempfile
+import unittest
+
+REPO_ROOT = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+sys.path.insert(0, os.path.join(REPO_ROOT, "tools"))
+
+import check  # noqa: E402
+
+
+METRICS_RS = """\
+pub mod names {
+    /// Requests received by the serving thread.
+    pub const SUBMITTED: &str = "submitted";
+    /// Gauge name: blocks charged to the tenant.
+    pub fn tenant_blocks_held(id: TenantId) -> String {
+        format!("tenant_{id}_blocks_held")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    fn raw_names_allowed_here() {
+        m.inc("submitted");
+    }
+}
+"""
+
+SERVER_RS = """\
+fn publish(m: &Metrics) {
+    m.inc(names::SUBMITTED);
+    m.set_gauge(&names::tenant_blocks_held(t), held);
+}
+"""
+
+METRICS_MD = """\
+# Metrics
+
+| name | meaning |
+|---|---|
+| `submitted` | requests received |
+| `tenant_{id}_blocks_held` | blocks charged to the tenant |
+"""
+
+MANIFEST_RS = """\
+pub fn decode_paged_artifact_name(batch: usize, cap: usize) -> String {
+    format!("decode_paged_{batch}x{cap}")
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let kind = a.req("kind");
+        let blocks = a.get("pool_blocks");
+    }
+}
+"""
+
+AOT_PY = """\
+def build(em, buckets):
+    for b in buckets.decode_batches:
+        for c in buckets.decode_caps:
+            em.emit(f"decode_paged_{b}x{c}", fn, specs,
+                    {"kind": "decode_paged", "pool_blocks": 64})
+"""
+
+MAIN_RS = """\
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize("requests", 16);
+    let half = args.has("swap-half");
+}
+"""
+
+CLI_RS = """\
+impl Args {
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        default
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    fn flags_here_do_not_count() {
+        let a = parse("--port 8080");
+        a.get("port");
+    }
+}
+"""
+
+README_MD = """\
+# Fixture
+
+Serve with `--requests N`. Deprecated: `--swap-half` is a swap-only tier
+(swapped lanes encode f16; the resident slab is untouched).
+"""
+
+TRACE_RS = """\
+pub enum EventKind {
+    /// Request entered the queue.
+    Submit {
+        prompt_tokens: u32,
+    },
+    /// Request failed permanently.
+    Reject,
+}
+
+pub fn validate_lifecycle(events: &[Event]) -> Result<(), String> {
+    use EventKind as K;
+    match (state, ev.kind) {
+        (S::Start, K::Submit { .. }) => S::Queued,
+        (S::Queued, K::Reject) => S::Done,
+    }
+}
+"""
+
+EXPORT_RS = """\
+fn chrome_trace(events: &[Event]) -> String {
+    match ev.kind {
+        EventKind::Submit { .. } => emit("submit"),
+        EventKind::Reject => emit("reject"),
+    }
+}
+"""
+
+CARGO_TOML = """\
+[package]
+name = "fixture"
+
+[[test]]
+name = "integration"
+path = "rust/tests/integration.rs"
+
+[[bench]]
+name = "paging"
+path = "rust/benches/paging.rs"
+
+[dependencies]
+anyhow = { path = "rust/vendor/anyhow" }
+"""
+
+
+class FixtureTree:
+    """A throwaway mini-repo; write(rel, text) then run checks on it."""
+
+    def __init__(self):
+        self.root = tempfile.mkdtemp(prefix="fastkv-check-")
+
+    def write(self, rel, text):
+        path = os.path.join(self.root, rel)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(text)
+
+    def remove(self, rel):
+        os.remove(os.path.join(self.root, rel))
+
+    def destroy(self):
+        shutil.rmtree(self.root, ignore_errors=True)
+
+
+class CheckTestCase(unittest.TestCase):
+    def setUp(self):
+        self.tree = FixtureTree()
+        self.addCleanup(self.tree.destroy)
+
+    def run_check(self, name):
+        return check.run(self.tree.root, only={name})
+
+    def assert_fires(self, name, needle):
+        findings = self.run_check(name)
+        self.assertTrue(
+            any(needle in f for f in findings),
+            f"expected a `{name}` finding mentioning `{needle}`, "
+            f"got: {findings}",
+        )
+
+    def assert_clean(self, name):
+        self.assertEqual(self.run_check(name), [])
+
+
+class TestMetrics(CheckTestCase):
+    def setUp(self):
+        super().setUp()
+        self.tree.write("rust/src/metrics.rs", METRICS_RS)
+        self.tree.write("rust/src/coordinator/server.rs", SERVER_RS)
+        self.tree.write("docs/metrics.md", METRICS_MD)
+
+    def test_clean_fixture_passes(self):
+        self.assert_clean("metrics")
+
+    def test_undocumented_metric_fires(self):
+        self.tree.write(
+            "rust/src/metrics.rs",
+            METRICS_RS.replace(
+                'pub const SUBMITTED: &str = "submitted";',
+                'pub const SUBMITTED: &str = "submitted";\n'
+                '    /// Requests retired.\n'
+                '    pub const COMPLETED: &str = "completed";',
+            ),
+        )
+        self.assert_fires("metrics", "`completed` (COMPLETED) has no row")
+
+    def test_orphaned_doc_row_fires(self):
+        self.tree.write(
+            "docs/metrics.md", METRICS_MD + "| `ghost_metric` | gone |\n"
+        )
+        self.assert_fires("metrics", "`ghost_metric`")
+
+    def test_tenant_placeholder_regression(self):
+        # the exact tenant_{t} vs tenant_{id} drift this tooling was
+        # built to catch: same normalized name, different spelling
+        self.tree.write(
+            "rust/src/metrics.rs",
+            METRICS_RS.replace("id: TenantId", "t: TenantId").replace(
+                "tenant_{id}_blocks_held", "tenant_{t}_blocks_held"
+            ),
+        )
+        self.assert_fires("metrics", "placeholder `{t}` vs `{id}`")
+
+    def test_unpublished_metric_fires(self):
+        self.tree.write(
+            "rust/src/coordinator/server.rs",
+            SERVER_RS.replace("m.inc(names::SUBMITTED);", ""),
+        )
+        self.assert_fires("metrics", "no publish site")
+
+
+class TestArtifacts(CheckTestCase):
+    def setUp(self):
+        super().setUp()
+        self.tree.write("rust/src/manifest.rs", MANIFEST_RS)
+        self.tree.write("python/compile/aot.py", AOT_PY)
+
+    def test_clean_fixture_passes(self):
+        self.assert_clean("artifacts")
+
+    def test_renamed_artifact_bucket_fires(self):
+        # python renames the family; rust still resolves the old name
+        self.tree.write(
+            "python/compile/aot.py",
+            AOT_PY.replace("decode_paged_{b}x{c}", "decode_blktab_{b}x{c}"),
+        )
+        self.assert_fires("artifacts", "decode_paged_{batch}x{cap}")
+
+    def test_unemitted_manifest_key_fires(self):
+        self.tree.write(
+            "rust/src/manifest.rs",
+            MANIFEST_RS.replace(
+                'a.get("pool_blocks")', 'a.get("pool_pages")'
+            ),
+        )
+        self.assert_fires("artifacts", "`pool_pages`")
+
+
+class TestCli(CheckTestCase):
+    def setUp(self):
+        super().setUp()
+        self.tree.write("rust/src/main.rs", MAIN_RS)
+        self.tree.write("rust/src/util/cli.rs", CLI_RS)
+        self.tree.write("README.md", README_MD)
+
+    def test_clean_fixture_passes(self):
+        self.assert_clean("cli")
+
+    def test_undocumented_flag_fires(self):
+        self.tree.write(
+            "rust/src/main.rs",
+            MAIN_RS + 'fn extra(args: &Args) { args.has("turbo"); }\n',
+        )
+        self.assert_fires("cli", "`--turbo`")
+
+    def test_cfg_test_flags_ignored(self):
+        # cli.rs parses "port" only inside #[cfg(test)]: not a real flag
+        self.assert_clean("cli")
+
+    def test_pinned_deprecated_wording(self):
+        self.tree.write(
+            "README.md",
+            README_MD.replace("swap-only tier", "half-precision swap"),
+        )
+        self.assert_fires("cli", "pinned wording")
+
+
+class TestLifecycle(CheckTestCase):
+    def setUp(self):
+        super().setUp()
+        self.tree.write("rust/src/obs/trace.rs", TRACE_RS)
+        self.tree.write("rust/src/obs/export.rs", EXPORT_RS)
+
+    def test_clean_fixture_passes(self):
+        self.assert_clean("lifecycle")
+
+    def test_unhandled_variant_fires_in_both_consumers(self):
+        self.tree.write(
+            "rust/src/obs/trace.rs",
+            TRACE_RS.replace(
+                "    /// Request failed permanently.",
+                "    /// Compaction fired.\n"
+                "    Compact,\n"
+                "    /// Request failed permanently.",
+            ),
+        )
+        findings = self.run_check("lifecycle")
+        self.assertTrue(
+            any("Compact" in f and "validate_lifecycle" in f for f in findings),
+            findings,
+        )
+        self.assertTrue(
+            any("Compact" in f and "Chrome-trace" in f for f in findings),
+            findings,
+        )
+
+
+class TestCargo(CheckTestCase):
+    def setUp(self):
+        super().setUp()
+        self.tree.write("Cargo.toml", CARGO_TOML)
+        self.tree.write("rust/tests/integration.rs", "fn t() {}\n")
+        self.tree.write("rust/benches/paging.rs", "fn b() {}\n")
+
+    def test_clean_fixture_passes(self):
+        self.assert_clean("cargo")
+
+    def test_stale_test_entry_fires(self):
+        self.tree.remove("rust/tests/integration.rs")
+        self.assert_fires("cargo", "missing file rust/tests/integration.rs")
+
+    def test_unregistered_test_file_fires(self):
+        self.tree.write("rust/tests/orphan.rs", "fn t() {}\n")
+        self.assert_fires("cargo", "rust/tests/orphan.rs")
+
+    def test_path_included_helper_exempt(self):
+        # bench_util.rs-style helper modules are not cargo targets
+        self.tree.write("rust/benches/bench_util.rs", "pub fn h() {}\n")
+        self.tree.write(
+            "rust/benches/paging.rs",
+            '#[path = "bench_util.rs"]\nmod bench_util;\nfn b() {}\n',
+        )
+        self.assert_clean("cargo")
+
+    def test_registry_dependency_fires(self):
+        self.tree.write(
+            "Cargo.toml", CARGO_TOML + 'serde = "1.0"\n'
+        )
+        self.assert_fires("cargo", "`serde`")
+
+
+class TestLinks(CheckTestCase):
+    def test_broken_relative_link_fires(self):
+        self.tree.write("README.md", "see [missing](docs/nope.md)\n")
+        self.assert_fires("links", "docs/nope.md")
+
+    def test_resolving_links_pass(self):
+        self.tree.write("docs/real.md", "# here\n")
+        self.tree.write(
+            "README.md", "see [real](docs/real.md) and [web](https://x.y)\n"
+        )
+        self.assert_clean("links")
+
+
+class TestRealTree(unittest.TestCase):
+    def test_real_repo_is_clean(self):
+        findings = check.run(REPO_ROOT)
+        self.assertEqual(findings, [], findings)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)

@@ -44,5 +44,10 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Be
     r
 }
 
-#[allow(dead_code)]
+#[allow(
+    dead_code,
+    reason = "this file doubles as a #[path]-included module of every \
+              bench; the main() only exists to satisfy rustc when a \
+              tool compiles it standalone"
+)]
 fn main() {}

@@ -78,6 +78,12 @@
 //! `examples/paging_demo.rs` exercises prefix reuse and preemption without
 //! artifacts.
 
+// The entire first-party stack is safe Rust; the only unsafe in the tree
+// lives in the vendored PJRT stub (its own crate, exempt). Backed up by
+// the package-level `[lints]` table in Cargo.toml, which extends the ban
+// to bins/tests/benches/examples.
+#![forbid(unsafe_code)]
+
 pub mod analysis;
 pub mod coordinator;
 pub mod eval;

@@ -15,6 +15,8 @@
 //! metrics handle can record lifecycle trace events without a signature
 //! change; tracing is off (and free) by default.
 
+#![warn(missing_docs)]
+
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
@@ -197,35 +199,35 @@ pub mod names {
 
     /// Gauge name: blocks currently charged to the tenant (first-toucher
     /// rule; reconciles with `pool_blocks_in_use` summed over tenants).
-    pub fn tenant_blocks_held(t: TenantId) -> String {
-        format!("tenant_{t}_blocks_held")
+    pub fn tenant_blocks_held(id: TenantId) -> String {
+        format!("tenant_{id}_blocks_held")
     }
 
     /// Gauge name: the tenant's configured reserved block floor.
-    pub fn tenant_blocks_reserved(t: TenantId) -> String {
-        format!("tenant_{t}_blocks_reserved")
+    pub fn tenant_blocks_reserved(id: TenantId) -> String {
+        format!("tenant_{id}_blocks_reserved")
     }
 
     /// Gauge name: host swap bytes currently parked by the tenant's
     /// preempted lanes.
-    pub fn tenant_swap_bytes_used(t: TenantId) -> String {
-        format!("tenant_{t}_swap_bytes_used")
+    pub fn tenant_swap_bytes_used(id: TenantId) -> String {
+        format!("tenant_{id}_swap_bytes_used")
     }
 
     /// Counter name: lanes of this tenant preempted under pool pressure.
-    pub fn tenant_preempted(t: TenantId) -> String {
-        format!("tenant_{t}_preempted")
+    pub fn tenant_preempted(id: TenantId) -> String {
+        format!("tenant_{id}_preempted")
     }
 
     /// Counter name: this tenant's requests rejected (pool can never fit,
     /// prompt too long, or prefill failure).
-    pub fn tenant_rejected(t: TenantId) -> String {
-        format!("tenant_{t}_rejected")
+    pub fn tenant_rejected(id: TenantId) -> String {
+        format!("tenant_{id}_rejected")
     }
 
     /// Counter name: this tenant's requests completed successfully.
-    pub fn tenant_completed(t: TenantId) -> String {
-        format!("tenant_{t}_completed")
+    pub fn tenant_completed(id: TenantId) -> String {
+        format!("tenant_{id}_completed")
     }
 }
 

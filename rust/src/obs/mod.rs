@@ -20,6 +20,8 @@
 //! way (events are `Copy` records written into a pre-allocated ring).
 //! See `docs/observability.md` for the event schema and phase taxonomy.
 
+#![warn(missing_docs)]
+
 pub mod export;
 pub mod trace;
 

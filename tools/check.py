@@ -1,0 +1,529 @@
+#!/usr/bin/env python3
+"""Cross-layer consistency checks for the fastkv repo.
+
+The repo spans four planes that agree by convention alone: Rust metric
+consts (`metrics::names`) vs docs/metrics.md vs publish sites; the
+Python artifact emitter (aot.py) vs the Rust bucket resolvers
+(manifest.rs / decode.rs); CLI flags vs README/docs; lifecycle event
+variants vs their consumers. This tool pins every one of those couplings
+mechanically. Stdlib-only so it runs in toolchain-free containers and as
+a no-Rust CI lane.
+
+Usage:
+    python3 tools/check.py                 # all checks, repo root inferred
+    python3 tools/check.py --only metrics,cli
+    python3 tools/check.py --root /some/tree
+    python3 tools/check.py --list
+
+Exit status 0 iff no findings. Each finding prints as
+`<check>: <message>`. See docs/static-analysis.md for what each check
+parses and how to add one.
+"""
+
+import argparse
+import os
+import re
+import sys
+
+# --------------------------------------------------------------- helpers
+
+PLACEHOLDER = re.compile(r"\{[^{}]*\}")
+
+
+def read(root, rel):
+    """Return the text of root/rel, or None if it does not exist."""
+    path = os.path.join(root, rel)
+    if not os.path.exists(path):
+        return None
+    with open(path, encoding="utf-8") as f:
+        return f.read()
+
+
+def strip_tests(src):
+    """Drop the trailing `#[cfg(test)] mod tests` block.
+
+    Repo convention keeps unit tests as the final item of a file, so
+    truncating at the first `#[cfg(test)]` is exact here and avoids
+    brace-matching through string literals.
+    """
+    idx = src.find("#[cfg(test)]")
+    return src if idx < 0 else src[:idx]
+
+
+def brace_block(src, start):
+    """Return src[open..close] for the first balanced {...} at/after start."""
+    open_idx = src.index("{", start)
+    depth = 0
+    for i in range(open_idx, len(src)):
+        c = src[i]
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            depth -= 1
+            if depth == 0:
+                return src[open_idx : i + 1]
+    raise ValueError("unbalanced braces")
+
+
+def normalize(template):
+    """`tenant_{t}_blocks_held` -> `tenant_{}_blocks_held` for matching."""
+    return PLACEHOLDER.sub("{}", template)
+
+
+def placeholders(template):
+    return PLACEHOLDER.findall(template)
+
+
+def rust_sources(root):
+    """(relpath, text) for first-party Rust sources: src, tests, benches,
+    examples — vendor crates excluded."""
+    out = []
+    for sub in ("rust/src", "rust/tests", "rust/benches", "examples"):
+        base = os.path.join(root, sub)
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fn in sorted(filenames):
+                if fn.endswith(".rs"):
+                    rel = os.path.relpath(os.path.join(dirpath, fn), root)
+                    out.append((rel, read(root, rel)))
+    return out
+
+
+def docs_corpus(root):
+    """Markdown files that count as user-facing documentation."""
+    rels = []
+    for fn in sorted(os.listdir(root)):
+        if fn.endswith(".md"):
+            rels.append(fn)
+    docs_dir = os.path.join(root, "docs")
+    if os.path.isdir(docs_dir):
+        for fn in sorted(os.listdir(docs_dir)):
+            if fn.endswith(".md"):
+                rels.append(os.path.join("docs", fn))
+    for sub in ("rust", "python"):
+        base = os.path.join(root, sub)
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames if d != "vendor"]
+            if "README.md" in filenames:
+                rels.append(
+                    os.path.relpath(os.path.join(dirpath, "README.md"), root)
+                )
+    return rels
+
+
+# ------------------------------------------------------------ 1. metrics
+
+METRICS_RS = "rust/src/metrics.rs"
+METRICS_MD = "docs/metrics.md"
+
+CONST_RE = re.compile(
+    r'pub const ([A-Z][A-Z0-9_]*): &str =\s*"([^"]+)";', re.S
+)
+TEMPLATE_FN_RE = re.compile(
+    r'pub fn ([a-z][a-z0-9_]*)\s*\([^)]*\)\s*->\s*String\s*\{\s*'
+    r'format!\(\s*"([^"]+)"',
+    re.S,
+)
+
+
+def metric_code_names(src):
+    """All metric names defined in `metrics::names`, as
+    {normalized: (ident, raw_template, is_fn)}."""
+    names_mod = brace_block(src, src.index("pub mod names"))
+    out = {}
+    for ident, raw in CONST_RE.findall(names_mod):
+        out[normalize(raw)] = (ident, raw, False)
+    for ident, raw in TEMPLATE_FN_RE.findall(names_mod):
+        out[normalize(raw)] = (ident, raw, True)
+    return out
+
+
+def metric_doc_rows(md):
+    """First backticked token of every markdown table row, raw spelling."""
+    rows = []
+    for line in md.splitlines():
+        if not line.startswith("|"):
+            continue
+        cell = line.split("|")[1].strip()
+        m = re.match(r"`([^`]+)`", cell)
+        if m and not set(m.group(1)) <= set("-: "):
+            rows.append(m.group(1))
+    return rows
+
+
+def check_metrics(root, findings):
+    src = read(root, METRICS_RS)
+    md = read(root, METRICS_MD)
+    if src is None or md is None:
+        findings.append(f"missing {METRICS_RS if src is None else METRICS_MD}")
+        return
+    code = metric_code_names(strip_tests(src))
+    doc_raw = metric_doc_rows(md)
+    doc = {normalize(r): r for r in doc_raw}
+
+    # every code name has a doc row, with placeholder spellings agreeing
+    for key, (ident, raw, is_fn) in sorted(code.items()):
+        if key not in doc:
+            findings.append(
+                f"metric `{raw}` ({ident}) has no row in {METRICS_MD}"
+            )
+            continue
+        code_ph = placeholders(raw)
+        doc_ph = placeholders(doc[key])
+        for c, d in zip(code_ph, doc_ph):
+            if c == d:
+                continue
+            # a doc-side enumeration `{f32,f16,int8}` may document a
+            # positional `{}` in the code template; anything else is
+            # spelling drift (`{t}` vs `{id}`).
+            if c == "{}" and "," in d:
+                continue
+            findings.append(
+                f"metric template `{raw}` ({ident}) documented as "
+                f"`{doc[key]}` in {METRICS_MD}: placeholder `{c}` vs `{d}`"
+            )
+
+    # every doc row maps back to a const / template fn
+    for key, raw in sorted(doc.items()):
+        if key not in code:
+            findings.append(
+                f"{METRICS_MD} documents `{raw}` but metrics::names "
+                "defines no such const or template fn"
+            )
+
+    # every code name is published at least once outside metrics.rs
+    others = "\n".join(
+        text for rel, text in rust_sources(root) if rel != METRICS_RS
+    )
+    for key, (ident, raw, is_fn) in sorted(code.items()):
+        pat = f"names::{ident}" + ("(" if is_fn else "")
+        if pat not in others:
+            findings.append(
+                f"metric `{raw}` ({ident}) has no publish site outside "
+                f"{METRICS_RS} (searched for `{pat}`)"
+            )
+
+
+# ---------------------------------------------------------- 2. artifacts
+
+MANIFEST_RS = "rust/src/manifest.rs"
+AOT_PY = "python/compile/aot.py"
+CONFIGS_PY = "python/compile/configs.py"
+
+ARTIFACT_FN_RE = re.compile(
+    r'pub fn ([a-z0-9_]*artifact_name[a-z0-9_]*)\s*\([^)]*\)\s*->\s*String'
+    r'\s*\{\s*format!\(\s*"([^"]+)"',
+    re.S,
+)
+FSTRING_RE = re.compile(r'f"([a-z][a-z0-9_]*(?:\{[^{}]*\}[a-z0-9_x]*)+)"')
+MANIFEST_KEY_RE = re.compile(r'\.(?:req|get)\(\s*"([a-z_0-9]+)"\s*\)')
+
+
+def check_artifacts(root, findings):
+    man = read(root, MANIFEST_RS)
+    aot = read(root, AOT_PY)
+    cfgs = read(root, CONFIGS_PY) or ""
+    if man is None or aot is None:
+        findings.append(f"missing {MANIFEST_RS if man is None else AOT_PY}")
+        return
+    man = strip_tests(man)
+
+    emitted = {normalize(t) for t in FSTRING_RE.findall(aot)}
+    for fn_name, raw in ARTIFACT_FN_RE.findall(man):
+        if normalize(raw) not in emitted:
+            findings.append(
+                f"{MANIFEST_RS}::{fn_name} resolves `{raw}` but {AOT_PY} "
+                f"emits no artifact named `{normalize(raw)}` "
+                f"(emitted families: {sorted(emitted)})"
+            )
+
+    # every manifest key the rust loader reads must be produced by the
+    # python side: a literal key in aot.py, or a ModelConfig field in
+    # configs.py (aot.py serializes the model block via cfg.to_dict()).
+    for key in sorted(set(MANIFEST_KEY_RE.findall(man))):
+        in_aot = f'"{key}"' in aot
+        in_cfg = (
+            f'"{key}"' in cfgs
+            or re.search(rf"^\s+{key}\s*[:=]", cfgs, re.M) is not None
+        )
+        if not (in_aot or in_cfg):
+            findings.append(
+                f"{MANIFEST_RS} reads manifest key `{key}` but neither "
+                f"{AOT_PY} (literal) nor {CONFIGS_PY} (ModelConfig field) "
+                "produces it"
+            )
+
+
+# ---------------------------------------------------------------- 3. cli
+
+MAIN_RS = "rust/src/main.rs"
+CLI_RS = "rust/src/util/cli.rs"
+
+FLAG_RE = re.compile(
+    r'\.(?:get|has|usize|f64|str_or|usize_list|str_list)\(\s*"([a-z][a-z0-9-]*)"'
+)
+# (flag, phrase-that-must-appear-on-its-documentation-line)
+PINNED_WORDING = [("swap-half", "swap-only tier")]
+
+
+def check_cli(root, findings):
+    flags = set()
+    for rel in (MAIN_RS, CLI_RS):
+        src = read(root, rel)
+        if src is None:
+            findings.append(f"missing {rel}")
+            return
+        flags |= set(FLAG_RE.findall(strip_tests(src)))
+
+    corpus = {rel: read(root, rel) or "" for rel in docs_corpus(root)}
+    blob = "\n".join(corpus.values())
+    for flag in sorted(flags):
+        if not re.search(rf"--{re.escape(flag)}(?![a-z0-9-])", blob):
+            findings.append(
+                f"flag `--{flag}` (parsed in {MAIN_RS}/{CLI_RS}) is not "
+                "documented in README.md or docs/"
+            )
+
+    for flag, phrase in PINNED_WORDING:
+        if flag not in flags:
+            continue
+        doc_lines = [
+            line
+            for text in corpus.values()
+            for line in text.splitlines()
+            if f"--{flag}" in line
+        ]
+        if not any(phrase in line for line in doc_lines):
+            findings.append(
+                f"deprecated flag `--{flag}` must be documented with the "
+                f"pinned wording `{phrase}` on at least one doc line "
+                f"({len(doc_lines)} doc lines mention it, none match)"
+            )
+
+
+# -------------------------------------------------------- 4. lifecycle
+
+TRACE_RS = "rust/src/obs/trace.rs"
+EXPORT_RS = "rust/src/obs/export.rs"
+
+VARIANT_RE = re.compile(r"^\s{4}([A-Z][A-Za-z0-9]*)\s*(?:\{|,|$)", re.M)
+
+
+def event_variants(src):
+    enum = brace_block(src, src.index("pub enum EventKind"))
+    return VARIANT_RE.findall(enum)
+
+
+def check_lifecycle(root, findings):
+    trace = read(root, TRACE_RS)
+    export = read(root, EXPORT_RS)
+    if trace is None or export is None:
+        findings.append(f"missing {TRACE_RS if trace is None else EXPORT_RS}")
+        return
+    trace = strip_tests(trace)
+    variants = event_variants(trace)
+    if not variants:
+        findings.append(f"no EventKind variants parsed from {TRACE_RS}")
+        return
+
+    start = trace.find("fn validate_lifecycle")
+    if start < 0:
+        findings.append(f"{TRACE_RS}: fn validate_lifecycle not found")
+        return
+    body = brace_block(trace, start)
+    for v in variants:
+        if not re.search(rf"\b(?:K|EventKind)::{v}\b", body):
+            findings.append(
+                f"EventKind::{v} is not handled in validate_lifecycle "
+                f"({TRACE_RS})"
+            )
+
+    export = strip_tests(export)
+    for v in variants:
+        if not re.search(rf"\bEventKind::{v}\b", export):
+            findings.append(
+                f"EventKind::{v} is not handled by the Chrome-trace "
+                f"exporter ({EXPORT_RS})"
+            )
+
+
+# ------------------------------------------------------------- 5. cargo
+
+CARGO_TOML = "Cargo.toml"
+PATH_INCLUDE_RE = re.compile(r'#\[path\s*=\s*"([^"]+)"\]')
+
+
+def parse_cargo(text):
+    """Minimal single-file TOML walk: section headers, `key = value`
+    pairs, and inline `{ ... }` tables (this manifest uses nothing
+    fancier). Returns (targets, deps): targets is a list of
+    (section, {key: value}); deps is {section: {name: raw_value}}."""
+    targets = []
+    deps = {}
+    section = None
+    current = None
+    for line in text.splitlines():
+        line = line.split("#", 1)[0].strip() if not line.lstrip().startswith("#") else ""
+        if not line:
+            continue
+        m = re.match(r"^\[+([a-z0-9._-]+)\]+$", line)
+        if m:
+            section = m.group(1)
+            if line.startswith("[["):
+                current = {}
+                targets.append((section, current))
+            else:
+                current = None
+            continue
+        kv = re.match(r'^([A-Za-z0-9_-]+)\s*=\s*(.+)$', line)
+        if not kv:
+            continue
+        key, value = kv.group(1), kv.group(2).strip()
+        if current is not None:
+            current[key] = value.strip('"')
+        elif section and section.endswith("dependencies"):
+            deps.setdefault(section, {})[key] = value
+    return targets, deps
+
+
+def check_cargo(root, findings):
+    text = read(root, CARGO_TOML)
+    if text is None:
+        findings.append(f"missing {CARGO_TOML}")
+        return
+    targets, deps = parse_cargo(text)
+
+    declared = {"test": set(), "bench": set()}
+    for section, table in targets:
+        if section not in declared:
+            continue
+        path = table.get("path")
+        if not path:
+            findings.append(
+                f"[[{section}]] `{table.get('name', '?')}` has no path"
+            )
+            continue
+        declared[section].add(path)
+        if not os.path.exists(os.path.join(root, path)):
+            findings.append(
+                f"[[{section}]] `{table.get('name', '?')}` points at "
+                f"missing file {path}"
+            )
+
+    # reverse direction: every file on disk is registered (helper files
+    # pulled in via #[path = "..."] are modules, not targets)
+    for kind, dirname in (("test", "rust/tests"), ("bench", "rust/benches")):
+        base = os.path.join(root, dirname)
+        if not os.path.isdir(base):
+            continue
+        included = set()
+        for fn in os.listdir(base):
+            if fn.endswith(".rs"):
+                src = read(root, f"{dirname}/{fn}") or ""
+                included |= set(PATH_INCLUDE_RE.findall(src))
+        for fn in sorted(os.listdir(base)):
+            rel = f"{dirname}/{fn}"
+            if (
+                fn.endswith(".rs")
+                and rel not in declared[kind]
+                and fn not in included
+            ):
+                findings.append(
+                    f"{rel} exists but has no [[{kind}]] entry in "
+                    f"{CARGO_TOML} (autodiscovery is off)"
+                )
+
+    for section, table in deps.items():
+        for name, value in table.items():
+            if "git" in value and "git =" in value:
+                findings.append(
+                    f"{CARGO_TOML} [{section}] `{name}` is a git "
+                    f"dependency ({value}); only vendored path deps "
+                    "are allowed"
+                )
+            elif "path =" not in value:
+                findings.append(
+                    f"{CARGO_TOML} [{section}] `{name}` = {value} is not "
+                    "a vendored path dependency (no network registry in "
+                    "this build environment)"
+                )
+
+
+# ------------------------------------------------------------- 6. links
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)[^)]*\)")
+
+
+def check_links(root, findings):
+    rels = docs_corpus(root)
+    for rel in rels:
+        text = read(root, rel)
+        base = os.path.dirname(os.path.join(root, rel))
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if not os.path.exists(os.path.normpath(os.path.join(base, target))):
+                findings.append(f"{rel}: broken relative link -> {target}")
+
+
+# ----------------------------------------------------------------- main
+
+CHECKS = {
+    "metrics": check_metrics,
+    "artifacts": check_artifacts,
+    "cli": check_cli,
+    "lifecycle": check_lifecycle,
+    "cargo": check_cargo,
+    "links": check_links,
+}
+
+
+def run(root, only=None):
+    """Run the selected checks; returns the list of findings."""
+    findings = []
+    for name, fn in CHECKS.items():
+        if only and name not in only:
+            continue
+        per = []
+        fn(root, per)
+        findings.extend(f"{name}: {msg}" for msg in per)
+    return findings
+
+
+def main(argv=None):
+    default_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=default_root, help="repo root to check")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated subset of checks: " + ",".join(CHECKS),
+    )
+    ap.add_argument(
+        "--list", action="store_true", help="list check names and exit"
+    )
+    args = ap.parse_args(argv)
+
+    if args.list:
+        print("\n".join(CHECKS))
+        return 0
+
+    only = None
+    if args.only:
+        only = set(args.only.split(","))
+        unknown = only - set(CHECKS)
+        if unknown:
+            ap.error(f"unknown checks: {sorted(unknown)}")
+
+    findings = run(args.root, only)
+    for f in findings:
+        print(f)
+    n = len(only) if only else len(CHECKS)
+    if findings:
+        print(f"\n{len(findings)} finding(s) across {n} check(s)")
+        return 1
+    print(f"ok: {n} check(s) clean on {args.root}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
