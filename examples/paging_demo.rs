@@ -125,6 +125,9 @@ fn pressure_run(
         sinks: 4,
         filter_layer: m.tsp_layer.saturating_sub(1),
         use_pallas: false,
+        prefill_budget: 0,
+        decode_budget: 0,
+        decode_window: m.window,
     };
     let cfg = PagingConfig {
         block_tokens: bt,

@@ -422,6 +422,9 @@ mod sim {
                 sinks: 1,
                 filter_layer: 0,
                 use_pallas: false,
+                prefill_budget: 0,
+                decode_budget: 0,
+                decode_window: m.window,
             },
             decode_batch: lanes,
             max_new,

@@ -7,7 +7,10 @@
 //! (quotas off vs on) — PJRT-independent, with block-pool stats reported
 //! next to the timings. The swap and tenant comparisons additionally
 //! write `BENCH_paging_swap.json` / `BENCH_paging_tenants.json`
-//! summaries so CI captures the trajectories.
+//! summaries so CI captures the trajectories; the sharded-slab,
+//! quantization, and decode-budget long-generation scenarios likewise
+//! emit `BENCH_paging_shard.json` / `BENCH_paging_quant.json` /
+//! `BENCH_paging_decode.json`.
 //!
 //! Run: cargo bench --bench paging   (FASTKV_BENCH_QUICK=1 for a smoke pass)
 
@@ -16,7 +19,9 @@ mod bench_util;
 
 use bench_util::bench;
 use fastkv::coordinator::kvcache::{BatchArena, RequestCache};
-use fastkv::coordinator::paging::{KvStore, PagedArena, PagingConfig};
+use fastkv::coordinator::paging::{
+    AppendResult, DecodeBudget, KvStore, PagedArena, PagingConfig,
+};
 use fastkv::manifest::ModelMeta;
 use fastkv::tensor::HostTensor;
 use fastkv::util::rng::Rng;
@@ -145,6 +150,9 @@ fn main() {
         sinks: 4,
         filter_layer: m.tsp_layer - 1,
         use_pallas: false,
+        prefill_budget: 0,
+        decode_budget: 0,
+        decode_window: m.window,
     };
     bench("compact to 50% (policy keep-sets)", 1, 20, || {
         let mut pa = PagedArena::new(&m, 1, cap, cfg.clone());
@@ -724,4 +732,205 @@ fn main() {
     std::fs::write("BENCH_paging_quant.json", &json)
         .expect("write BENCH_paging_quant.json");
     println!("\nwrote BENCH_paging_quant.json:\n{json}");
+
+    // --------------------------------------------------------------------
+    // Decode-phase budgets: long-generation contention. Every lane keeps
+    // generating on top of a 256-token prompt. Unbudgeted, the decode
+    // region grows a block per `block_tokens` appends per layer, forever;
+    // budgeted (two-stage eviction + sliding window), the coarse stage
+    // releases cold generated blocks so residency stays O(budget) and the
+    // fine stage hands each step a pruned block table whose prep cost
+    // follows the budget rather than the tokens generated. A second pass
+    // replays both on a pool sized for the *budgeted* peak: the budgeted
+    // lanes run the full generation, the unbudgeted ones stall on
+    // PoolExhausted — the contention headline.
+    println!("\n=== decode budgets: long-generation contention ===");
+    let gen_steps = if bench_util::quick() { 128 } else { 512 };
+    let prompt_len = 256usize;
+    let cap_d = prompt_len + gen_steps + 8;
+    let dbudget = PolicyCfg {
+        kv_rate: 1.0,
+        tsp_rate: 1.0,
+        sinks: 4,
+        filter_layer: 0,
+        use_pallas: false,
+        prefill_budget: 0,
+        decode_budget: 32,
+        decode_window: m.window,
+    }
+    .decode_budget_spec()
+    .expect("decode budget configured");
+    // (steps completed, peak held blocks, decode-region gauge,
+    //  coarse releases, pruned blocks in the last view, prep ms/step)
+    let run = |budget: Option<&DecodeBudget>,
+               pool: Option<usize>|
+     -> (usize, usize, usize, usize, usize, f64) {
+        let cfg_d = PagingConfig {
+            num_blocks: pool,
+            prefix_cache: false,
+            swap_bytes: 0,
+            ..PagingConfig::default()
+        };
+        let mut pa = PagedArena::new(&m, b, cap_d, cfg_d);
+        let slots: Vec<usize> = (0..b as u64)
+            .map(|i| {
+                KvStore::admit(&mut pa, &cache(&m, 200 + i, prompt_len))
+                    .unwrap()
+            })
+            .collect();
+        let step = HostTensor::zeros(vec![
+            m.n_layers,
+            b,
+            m.n_kv_heads,
+            m.head_dim,
+        ]);
+        let mut tables = fastkv::tensor::HostTensorI32::empty();
+        let mut lens_t = fastkv::tensor::HostTensorI32::empty();
+        let mut peak_held = 0usize;
+        let mut released = 0usize;
+        let mut pruned_last = 0usize;
+        let mut steps_done = 0usize;
+        let mut prep_s = 0.0f64;
+        'steps: for _ in 0..gen_steps {
+            for &s in &slots {
+                if KvStore::append(&mut pa, s, &step, &step)
+                    != AppendResult::Ok
+                {
+                    break 'steps;
+                }
+            }
+            // peak residency is right here: after the appends, before the
+            // coarse stage runs (this sizes the tight pool below)
+            let held: usize =
+                slots.iter().map(|&s| KvStore::held_blocks(&pa, s)).sum();
+            peak_held = peak_held.max(held);
+            if let Some(bgt) = budget {
+                for &s in &slots {
+                    released +=
+                        KvStore::enforce_decode_budget(&mut pa, s, bgt);
+                }
+            }
+            let t0 = Instant::now();
+            let view = pa.view_budgeted(budget);
+            let mb = view.max_blocks;
+            view.tables_tensor_into(mb, &mut tables);
+            view.lens_tensor_into(&mut lens_t);
+            prep_s += t0.elapsed().as_secs_f64();
+            pruned_last = view.pruned_blocks;
+            std::hint::black_box((&tables.data[0], &lens_t.data[0]));
+            steps_done += 1;
+        }
+        let region = pa.pool_stats().decode_region_blocks;
+        (
+            steps_done,
+            peak_held,
+            region,
+            released,
+            pruned_last,
+            prep_s * 1e3 / steps_done.max(1) as f64,
+        )
+    };
+    let (steps_u, peak_u, region_u, rel_u, pruned_u, prep_u) =
+        run(None, None);
+    let (steps_b, peak_b, region_b, rel_b, pruned_b, prep_b) =
+        run(Some(&dbudget), None);
+    assert_eq!(steps_u, gen_steps, "roomy pool: unbudgeted run completes");
+    assert_eq!(steps_b, gen_steps, "roomy pool: budgeted run completes");
+    assert_eq!(rel_u, 0, "unbudgeted run must release nothing");
+    assert_eq!(pruned_u, 0, "unbudgeted view must be unpruned");
+    assert!(rel_b > 0, "tight budget must coarse-release cold blocks");
+    assert!(pruned_b > 0, "tight budget must prune the decode view");
+    assert!(peak_b < peak_u, "budget must bound the resident-block peak");
+    println!(
+        "{:44} peak {peak_u:5} blocks, region {region_u:5}, prep {prep_u:8.4} ms/step",
+        format!("unbudgeted ({gen_steps} steps x {b} lanes)")
+    );
+    println!(
+        "{:44} peak {peak_b:5} blocks, region {region_b:5}, prep {prep_b:8.4} ms/step",
+        format!(
+            "budgeted (fine {}, coarse {}, win {})",
+            dbudget.fine_rows, dbudget.coarse_rows, dbudget.window
+        )
+    );
+    // contention replay: pool sized for the budgeted peak (+ one growth
+    // block per lane-layer of slack)
+    let tight_pool = peak_b + m.n_layers * b;
+    let (tight_steps_u, ..) = run(None, Some(tight_pool));
+    let (tight_steps_b, ..) = run(Some(&dbudget), Some(tight_pool));
+    assert_eq!(
+        tight_steps_b, gen_steps,
+        "budgeted lanes must finish the generation on the tight pool"
+    );
+    assert!(
+        tight_steps_u < gen_steps,
+        "unbudgeted lanes must stall on the tight pool"
+    );
+    println!(
+        "{:44} budgeted {tight_steps_b}/{gen_steps} steps, unbudgeted \
+         stalls at {tight_steps_u}",
+        format!("tight pool ({tight_pool} blocks)")
+    );
+    // Scratch-vs-fresh prep with pruning enabled: the budgeted view must
+    // keep the allocation-free step path (`*_tensor_into` reuse).
+    let mut pa = PagedArena::new(&m, b, cap_d, PagingConfig::default());
+    let slots: Vec<usize> = (0..b as u64)
+        .map(|i| {
+            KvStore::admit(&mut pa, &cache(&m, 200 + i, prompt_len)).unwrap()
+        })
+        .collect();
+    let step =
+        HostTensor::zeros(vec![m.n_layers, b, m.n_kv_heads, m.head_dim]);
+    for _ in 0..4 * dbudget.fine_rows {
+        for &s in &slots {
+            assert_eq!(KvStore::append(&mut pa, s, &step, &step), AppendResult::Ok);
+        }
+    }
+    for &s in &slots {
+        KvStore::enforce_decode_budget(&mut pa, s, &dbudget);
+    }
+    let view = pa.view_budgeted(Some(&dbudget));
+    assert!(view.pruned_blocks > 0, "pruning engaged for the prep bench");
+    let mb = view.max_blocks;
+    let r_fresh = bench("pruned prep, fresh Vec per step", 2, 200, || {
+        let tables = view.tables_tensor(mb);
+        let lens = view.lens_tensor();
+        std::hint::black_box((&tables.data[0], &lens.data[0]));
+    });
+    let mut tables = fastkv::tensor::HostTensorI32::empty();
+    let mut lens_t = fastkv::tensor::HostTensorI32::empty();
+    let r_scratch = bench("pruned prep, reused scratch buffers", 2, 200, || {
+        view.tables_tensor_into(mb, &mut tables);
+        view.lens_tensor_into(&mut lens_t);
+        std::hint::black_box((&tables.data[0], &lens_t.data[0]));
+    });
+    let json = format!(
+        "{{\n  \"gen_steps\": {gen_steps},\n  \"lanes\": {b},\n  \
+         \"prompt_len\": {prompt_len},\n  \
+         \"budget\": {{\"fine_rows\": {}, \"coarse_rows\": {}, \
+         \"window\": {}, \"sinks\": {}}},\n  \
+         \"peak_blocks_unbudgeted\": {peak_u},\n  \
+         \"peak_blocks_budgeted\": {peak_b},\n  \
+         \"retained_ratio\": {:.3},\n  \
+         \"decode_region_unbudgeted\": {region_u},\n  \
+         \"decode_region_budgeted\": {region_b},\n  \
+         \"coarse_blocks_released\": {rel_b},\n  \
+         \"pruned_blocks_last_step\": {pruned_b},\n  \
+         \"prep_ms_unbudgeted\": {prep_u:.4},\n  \
+         \"prep_ms_budgeted\": {prep_b:.4},\n  \
+         \"tight_pool_blocks\": {tight_pool},\n  \
+         \"tight_steps_unbudgeted\": {tight_steps_u},\n  \
+         \"tight_steps_budgeted\": {tight_steps_b},\n  \
+         \"pruned_prep_fresh_ms\": {:.4},\n  \
+         \"pruned_prep_scratch_ms\": {:.4}\n}}\n",
+        dbudget.fine_rows,
+        dbudget.coarse_rows,
+        dbudget.window,
+        dbudget.sinks,
+        peak_b as f64 / peak_u as f64,
+        r_fresh.mean_ms,
+        r_scratch.mean_ms,
+    );
+    std::fs::write("BENCH_paging_decode.json", &json)
+        .expect("write BENCH_paging_decode.json");
+    println!("\nwrote BENCH_paging_decode.json:\n{json}");
 }

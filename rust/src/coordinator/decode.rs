@@ -47,7 +47,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::paging::{AppendResult, DecodeView, KvCodec, KvStore};
+use crate::coordinator::paging::{
+    AppendResult, DecodeBudget, DecodeView, KvCodec, KvStore,
+};
 use crate::coordinator::policies::{Exec, PolicyCfg};
 use crate::manifest::{
     decode_artifact_name, decode_paged_artifact_name,
@@ -152,6 +154,12 @@ pub struct DecodeBatch {
     /// Sharded artifact per shard count `S` (from the manifest's
     /// `shard_counts` bucket).
     sharded: BTreeMap<usize, ShardArtifact>,
+    /// Fine decode-budget stage ([`PolicyCfg::decode_budget_spec`]):
+    /// when set, every step consumes the store's *budget-pruned* view —
+    /// cold generated blocks dropped from the per-lane tables before the
+    /// gather artifact sees them. `None` (the default) is the unbudgeted
+    /// planner, bit-identical to the pre-budget behavior.
+    budget: Option<DecodeBudget>,
 }
 
 /// Outcome of artifact resolution for one step, best path first.
@@ -206,6 +214,7 @@ impl DecodeBatch {
             paged,
             paged_q8,
             sharded,
+            budget: None,
         }
     }
 
@@ -215,6 +224,19 @@ impl DecodeBatch {
 
     pub fn capacity(&self) -> usize {
         self.cap
+    }
+
+    /// Install (or clear) the fine decode-budget stage for every
+    /// subsequent step. Builder-style so the serving loops can write
+    /// `DecodeBatch::new(..).with_budget(cfg.decode_budget_spec())`.
+    pub fn with_budget(mut self, budget: Option<DecodeBudget>) -> DecodeBatch {
+        self.budget = budget;
+        self
+    }
+
+    /// The fine decode-budget stage steps run under (`None` = unbudgeted).
+    pub fn budget(&self) -> Option<&DecodeBudget> {
+        self.budget.as_ref()
     }
 
     fn resolve<'s>(&'s self, view: &Option<DecodeView<'_>>) -> Resolved<'s> {
@@ -248,7 +270,7 @@ impl DecodeBatch {
 
     /// The path [`DecodeBatch::step`] will take for this store.
     pub fn path_for(&self, store: &dyn KvStore) -> DecodePath {
-        match self.resolve(&store.decode_view()) {
+        match self.resolve(&store.decode_view_budgeted(self.budget.as_ref())) {
             Resolved::Shard(_) => DecodePath::Sharded,
             Resolved::Q8(_) => DecodePath::BlockTableQ8,
             Resolved::Paged(_) => DecodePath::BlockTable,
@@ -258,7 +280,7 @@ impl DecodeBatch {
 
     /// Artifact name the next step will execute (for logs / warmup).
     pub fn artifact_for(&self, store: &dyn KvStore) -> &str {
-        match self.resolve(&store.decode_view()) {
+        match self.resolve(&store.decode_view_budgeted(self.budget.as_ref())) {
             Resolved::Shard(a) => &a.name,
             Resolved::Q8(a) | Resolved::Paged(a) => &a.name,
             Resolved::Staged => &self.dense,
@@ -302,7 +324,11 @@ impl DecodeBatch {
         scratch.fill_lanes(b, lanes);
 
         // Build the view once; it decides the path and feeds the inputs.
-        let view = store.decode_view();
+        // The fine budget stage (if any) is applied inside the store's
+        // view build: pruned tables are just shorter tables, refilled
+        // into the same scratch tensors — the allocation-free contract
+        // holds with pruning enabled.
+        let view = store.decode_view_budgeted(self.budget.as_ref());
         let resolved = self.resolve(&view);
         if matches!(resolved, Resolved::Staged) {
             // Dense staged bridge (fallback/oracle path; deliberately not
@@ -338,6 +364,11 @@ impl DecodeBatch {
         }
 
         let view = view.expect("paged/sharded path checked above");
+        if let Some(m) = metrics {
+            if view.pruned_blocks > 0 {
+                m.inc(names::DECODE_BLOCKS_PRUNED, view.pruned_blocks as u64);
+            }
+        }
         if let Resolved::Q8(art) = resolved {
             return self.step_q8(ex, &view, art, metrics, scratch, t_start);
         }
@@ -863,7 +894,10 @@ impl DecodeScratch {
 
 /// Compaction reaction to pool pressure during [`advance_lane`]: the
 /// policy's per-layer keep-sets drive block-granular eviction before the
-/// append is retried.
+/// append is retried. Also the carrier of the decode-budget policy: when
+/// `policy_cfg.decode_budget_spec()` resolves, every successful append is
+/// followed by the coarse budget stage
+/// ([`KvStore::enforce_decode_budget`]).
 pub struct CompactSpec<'a> {
     pub policy_cfg: &'a PolicyCfg,
     /// Shrink factor per layer (`server::COMPACT_SHRINK`).
@@ -912,6 +946,24 @@ pub fn advance_lane(
     }
     match res {
         AppendResult::Ok => {
+            // Coarse decode-budget stage: with the row safely appended,
+            // permanently release the lane's coldest generated blocks
+            // down to the coarse cap (sinks, window, and prefill KV are
+            // never candidates). Unbudgeted policies resolve to None and
+            // skip this entirely — the pre-budget behavior.
+            if let Some(spec) = compact {
+                if let Some(budget) = spec.policy_cfg.decode_budget_spec() {
+                    let released = store.enforce_decode_budget(slot, &budget);
+                    if released > 0 {
+                        if let Some(m) = spec.metrics {
+                            m.inc(
+                                names::DECODE_BLOCKS_EVICTED,
+                                released as u64,
+                            );
+                        }
+                    }
+                }
+            }
             let logits = out.logits.row(slot);
             let token = logits
                 .iter()

@@ -9,7 +9,8 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::coordinator::decode::{
-    advance_lane, DecodeBatch, DecodeScratch, LaneAdvance, LaneInput,
+    advance_lane, CompactSpec, DecodeBatch, DecodeScratch, LaneAdvance,
+    LaneInput,
 };
 use crate::coordinator::paging::{PagedArena, PagingConfig, TenantId};
 use crate::coordinator::policies::{Exec, Policy, PolicyCfg};
@@ -114,7 +115,20 @@ pub fn generate(
     // `decode_paged_1x{cap}` artifact the slab + table indices, falling
     // back to the dense staged bridge only when the manifest predates the
     // paged artifacts (or the store cannot expose a view).
-    let batch = DecodeBatch::new(man, 1, cap);
+    let batch =
+        DecodeBatch::new(man, 1, cap).with_budget(cfg.decode_budget_spec());
+    // Decode-phase budgets need the post-append hook in `advance_lane`:
+    // hand it a `CompactSpec` only when a budget is configured, so the
+    // unbudgeted single-request path keeps its historical
+    // no-compaction behavior.
+    let spec = CompactSpec {
+        policy_cfg: cfg,
+        shrink: 0.5,
+        window: man.model.window,
+        metrics: None,
+    };
+    let spec_opt =
+        if cfg.decode_budget_spec().is_some() { Some(&spec) } else { None };
     // Reusable input-prep buffers: steady-state decode allocates nothing
     // for tables/lens/token tensors or pinned slab payloads (the store's
     // per-step view build is the one remaining allocation).
@@ -126,7 +140,7 @@ pub fn generate(
     while tokens.len() < max_new && cur != END as i32 {
         let lane = LaneInput { slot, token: cur, pos };
         let out = batch.step_scratch(ex, &store, &[lane], None, &mut scratch)?;
-        match advance_lane(&mut store, slot, &out, None) {
+        match advance_lane(&mut store, slot, &out, spec_opt) {
             LaneAdvance::Next { token, ended } => {
                 stats.decode_steps += 1;
                 pos += 1;

@@ -361,6 +361,8 @@ impl BlockAllocator {
             m.ref_count = 1;
             m.filled = 0;
             m.hash = None;
+            m.score = 0.0;
+            m.last_write = 0;
             self.charge(tenant, id);
             return Some(AllocOutcome { id, evicted_hash: None });
         }
@@ -375,6 +377,8 @@ impl BlockAllocator {
             let evicted_hash = m.hash.take();
             m.ref_count = 1;
             m.filled = 0;
+            m.score = 0.0;
+            m.last_write = 0;
             self.cached -= 1;
             self.evictions += 1;
             self.charge(tenant, id);
@@ -510,6 +514,16 @@ impl BlockAllocator {
     pub fn set_filled(&mut self, id: BlockId, rows: u32) {
         debug_assert!(rows as usize <= self.store.block_tokens());
         self.meta[id.index()].filled = rows;
+    }
+
+    /// Accumulate the decode-eviction salience heuristic for one row
+    /// written into `id`: `mass` (mean |K| of the row) adds to the
+    /// block's score, `stamp` (the arena's monotonic mutation counter)
+    /// becomes its write-recency mark. See [`BlockMeta::score`].
+    pub fn note_row_write(&mut self, id: BlockId, mass: f32, stamp: u64) {
+        let m = &mut self.meta[id.index()];
+        m.score += mass;
+        m.last_write = stamp;
     }
 
     /// Count one copy-on-write block copy (stat).

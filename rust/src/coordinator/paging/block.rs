@@ -62,6 +62,29 @@ pub struct BlockMeta {
     /// only while `ref_count > 0`; quota accounting in
     /// `BlockAllocator` charges and uncharges through it.
     pub owner: TenantId,
+    /// Accumulated attention-mass proxy for decode-written rows: the sum
+    /// of mean-|K| over every row appended into this block during its
+    /// current live period. A cheap per-block salience heuristic — the
+    /// decode-phase coarse eviction stage releases the lowest-scoring
+    /// cold blocks first (see `PagedArena::enforce_decode_budget`).
+    pub score: f32,
+    /// Write-recency stamp: the owning arena's mutation counter at the
+    /// last decode-row write into this block. 0 for blocks never written
+    /// by decode (admission-filled blocks are budget-protected anyway).
+    /// Ties in `score` break toward evicting the oldest stamp.
+    pub last_write: u64,
+}
+
+impl BlockMeta {
+    /// Mean `score` per valid row — the comparable salience number when
+    /// blocks hold different numbers of rows.
+    pub fn row_score(&self) -> f32 {
+        if self.filled == 0 {
+            0.0
+        } else {
+            self.score / self.filled as f32
+        }
+    }
 }
 
 /// The int8 planes of a quantized slab, borrowed raw for device upload:

@@ -170,6 +170,45 @@ pub struct Staged {
     pub lens: HostTensorI32,
 }
 
+/// Resolved decode-phase KV budget a [`KvStore`] enforces over a lane's
+/// *generated* rows (everything appended after admission). Prefill rows —
+/// the FastKV-selected KV the lane was admitted with — are never touched:
+/// the budget decouples decode-time eviction from prefill-time selection
+/// (SCOPE-style split budgets) the same way TSP decoupled prefill
+/// selection from per-layer compaction.
+///
+/// Two stages, RocketKV-style:
+///  * **coarse** ([`KvStore::enforce_decode_budget`]): when a lane's
+///    resident generated rows exceed `coarse_rows`, whole cold blocks are
+///    permanently released back to the allocator (scored by the per-block
+///    recency/attention-mass heuristic in [`block::BlockMeta`]);
+///  * **fine** ([`KvStore::decode_view_budgeted`]): each step's attention
+///    view keeps only the top-scoring generated blocks so at most
+///    `fine_rows` generated rows per (layer, lane) are attended — a pruned
+///    per-lane block table handed to the existing gather artifacts, no new
+///    HLO.
+///
+/// Both stages always retain the first `sinks` token rows (attention
+/// sinks) and the trailing `window` generated rows (the sliding decode
+/// window); blocks overlapping either — or any prefill row — are never
+/// candidates. Built from policy knobs by
+/// [`crate::coordinator::policies::PolicyCfg::decode_budget_spec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeBudget {
+    /// Fine-stage cap: generated rows per (layer, lane) a decode step's
+    /// attention view may cover. `>= window.max(1)`.
+    pub fine_rows: usize,
+    /// Coarse-stage cap: resident generated rows per (layer, lane) above
+    /// which the coldest full generated blocks are permanently released.
+    /// `>= fine_rows` (the slack between them is the survivor set the
+    /// fine stage re-ranks every step).
+    pub coarse_rows: usize,
+    /// Sliding decode window: trailing rows always resident and attended.
+    pub window: usize,
+    /// Leading token rows (attention sinks) always resident and attended.
+    pub sinks: usize,
+}
+
 /// Block-pool gauges for metrics/reporting.
 #[derive(Debug, Clone, Default)]
 pub struct PoolStats {
@@ -211,6 +250,10 @@ pub struct PoolStats {
     /// `quant_dequant_secs` counter; per-row codec work is counted in
     /// the row counters but deliberately not timed).
     pub codec_secs: f64,
+    /// Blocks holding at least one *generated* (decode-appended) row
+    /// across all used lanes — the resident set decode budgets bound
+    /// (the `decode_region_blocks` gauge). 0 for non-paged backends.
+    pub decode_region_blocks: usize,
 }
 
 impl PoolStats {
@@ -272,6 +315,29 @@ pub trait KvStore {
     /// `None` (the flat arena) forces the dense staged path.
     fn decode_view(&self) -> Option<DecodeView<'_>> {
         None
+    }
+    /// [`KvStore::decode_view`] with the fine budget stage applied: lanes
+    /// whose generated rows exceed `budget.fine_rows` get a *pruned* block
+    /// table (lowest-scoring generated blocks dropped; sinks, window, and
+    /// every prefill block always kept). `None` budget — and backends
+    /// without budget support — fall back to the unpruned view, so the
+    /// unbudgeted path is bit-identical to the pre-budget store.
+    fn decode_view_budgeted(
+        &self,
+        budget: Option<&DecodeBudget>,
+    ) -> Option<DecodeView<'_>> {
+        let _ = budget;
+        self.decode_view()
+    }
+    /// Coarse budget stage: permanently release a lane's coldest full
+    /// generated blocks until its resident generated rows are within
+    /// `budget.coarse_rows` per layer. Returns blocks released back to the
+    /// pool (0 for backends without budget support — the unbounded
+    /// pre-budget behavior). Sink rows, the sliding window, and prefill
+    /// rows are never released.
+    fn enforce_decode_budget(&mut self, slot: usize, budget: &DecodeBudget) -> usize {
+        let _ = (slot, budget);
+        0
     }
     /// Physical blocks currently held by a lane (0 for non-paged
     /// backends). Drives preemption victim selection.
@@ -456,6 +522,11 @@ pub struct PagedArena {
     tables: Vec<Vec<Vec<BlockId>>>,
     /// `lens[slot][layer]` → valid tokens.
     lens: Vec<Vec<usize>>,
+    /// `prefill_rows[slot][layer]` → rows the lane was admitted (or
+    /// swap-restored) with: the FastKV-selected prefill KV. Decode
+    /// budgets protect rows below this boundary unconditionally — only
+    /// rows at or above it are generated-region eviction candidates.
+    prefill_rows: Vec<Vec<usize>>,
     used: Vec<bool>,
     /// Tenant each lane is serving (meaningful while `used[slot]`; block
     /// takes for the lane are charged against this tenant's quota).
@@ -529,6 +600,7 @@ impl PagedArena {
             shard_slabs: ShardedSlabs::new(spec),
             tables: vec![vec![Vec::new(); l]; b],
             lens: vec![vec![0; l]; b],
+            prefill_rows: vec![vec![0; l]; b],
             used: vec![false; b],
             tenants: vec![TenantId::DEFAULT; b],
             stage_buf,
@@ -773,26 +845,199 @@ impl PagedArena {
         self.tables[slot].iter().map(|t| t.len()).sum()
     }
 
+    /// Per-layer prefill boundary for a lane: rows below it are the
+    /// admitted (FastKV-selected, or swap-restored) KV that decode
+    /// budgets never touch. Rows at or above it were appended by decode
+    /// and are fair game for the two budget stages.
+    pub fn prefill_boundary(&self, slot: usize) -> Vec<usize> {
+        self.prefill_rows[slot].clone()
+    }
+
+    /// Table indices in `slot`/`l` a decode budget may drop: full
+    /// non-tail blocks whose rows all sit in the generated region past
+    /// the sink prefix (`>= max(prefill boundary, sinks)`) and entirely
+    /// before the sliding window. Returned in table order.
+    fn budget_candidates(
+        &self,
+        slot: usize,
+        l: usize,
+        budget: &DecodeBudget,
+    ) -> Vec<usize> {
+        let bt = self.block_tokens;
+        let len = self.lens[slot][l];
+        let prot = self.prefill_rows[slot][l].max(budget.sinks);
+        let keep_from = len.saturating_sub(budget.window);
+        let table_len = self.tables[slot][l].len();
+        (0..table_len.saturating_sub(1))
+            .filter(|&k| k * bt >= prot && (k + 1) * bt <= keep_from)
+            .collect()
+    }
+
+    /// Order candidate table indices coldest-first: lowest per-row
+    /// attention-mass score ([`block::BlockMeta::row_score`]), ties
+    /// broken toward the oldest write stamp, then the lowest index
+    /// (deterministic for the differential oracles).
+    fn sort_coldest(&self, slot: usize, l: usize, cands: &mut [usize]) {
+        let table = &self.tables[slot][l];
+        cands.sort_by(|&a, &b| {
+            let ma = self.alloc.meta(table[a]);
+            let mb = self.alloc.meta(table[b]);
+            ma.row_score()
+                .partial_cmp(&mb.row_score())
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(ma.last_write.cmp(&mb.last_write))
+                .then(a.cmp(&b))
+        });
+    }
+
+    /// Coarse budget stage: permanently release the lane's coldest full
+    /// generated blocks until each layer's resident generated rows are
+    /// within `budget.coarse_rows` (or no candidate remains — sink,
+    /// window, and prefill protection win over the cap). Dropping a
+    /// block from mid-table is pure bookkeeping: positions were
+    /// RoPE-baked at write time, so the survivors simply close ranks in
+    /// logical order, exactly like [`PagedArena::compact`] — but with
+    /// zero data movement, since whole blocks survive in place. Returns
+    /// blocks released back to the pool.
+    pub fn enforce_decode_budget(
+        &mut self,
+        slot: usize,
+        budget: &DecodeBudget,
+    ) -> usize {
+        if slot >= self.b || !self.used[slot] {
+            return 0;
+        }
+        let bt = self.block_tokens;
+        let re = self.row_elems();
+        let mut released = 0usize;
+        for l in 0..self.l {
+            let old_len = self.lens[slot][l];
+            let gen = old_len.saturating_sub(self.prefill_rows[slot][l]);
+            if gen <= budget.coarse_rows {
+                continue;
+            }
+            let mut cands = self.budget_candidates(slot, l, budget);
+            self.sort_coldest(slot, l, &mut cands);
+            cands.truncate(ceil_div(gen - budget.coarse_rows, bt));
+            if cands.is_empty() {
+                continue;
+            }
+            // Remove in descending table order so indices stay valid.
+            // Candidates never overlap the window (judged against the
+            // pre-release `len`), and releases only shift rows *after*
+            // a removed block, so sinks, prefill rows, and the trailing
+            // window rows all keep their content.
+            cands.sort_unstable_by(|a, b| b.cmp(a));
+            for k in cands {
+                let bid = self.tables[slot][l].remove(k);
+                debug_assert_eq!(
+                    self.alloc.meta(bid).filled as usize,
+                    bt,
+                    "only full blocks are eviction candidates"
+                );
+                self.alloc.decref(bid);
+                self.lens[slot][l] -= bt;
+                released += 1;
+            }
+            // Dense-staging fallback: survivors shifted down — re-mirror
+            // the layer and zero the vacated tail (compact's discipline).
+            let new_len = self.lens[slot][l];
+            let base = self.stage_base(l, slot, 0);
+            if let Some(buf) = self.stage_buf.as_mut() {
+                let store = self.alloc.store();
+                let mut row = 0usize;
+                for &bid in &self.tables[slot][l] {
+                    let filled = self.alloc.meta(bid).filled as usize;
+                    let b0 = base + row * re;
+                    buf.k.data[b0..b0 + filled * re]
+                        .copy_from_slice(&store.k_rows(bid, filled));
+                    buf.v.data[b0..b0 + filled * re]
+                        .copy_from_slice(&store.v_rows(bid, filled));
+                    row += filled;
+                }
+                debug_assert_eq!(row, new_len, "surviving rows vs len");
+                let tail0 = base + new_len * re;
+                let tail1 = base + old_len * re;
+                buf.k.data[tail0..tail1].fill(0.0);
+                buf.v.data[tail0..tail1].fill(0.0);
+            }
+        }
+        if released > 0 {
+            self.touch();
+        }
+        released
+    }
+
     /// Build the block-table-native decode description for this step:
     /// tables + lens are copied (O(referenced blocks)), the slab is
     /// borrowed in place.
     pub fn view(&self) -> DecodeView<'_> {
-        let max_blocks = self
-            .tables
-            .iter()
-            .flat_map(|lane| lane.iter().map(|t| t.len()))
-            .max()
-            .unwrap_or(0)
-            .max(1);
+        self.view_budgeted(None)
+    }
+
+    /// [`PagedArena::view`] with the fine budget stage applied: lanes
+    /// whose resident generated rows exceed `budget.fine_rows` hand
+    /// decode a *pruned* table — the coldest candidate blocks dropped,
+    /// survivors in logical order — so the step attends to at most
+    /// `fine_rows` generated rows (plus all prefill, sink, and window
+    /// rows) per layer. The slab, version stamps, and artifact ABI are
+    /// untouched: a pruned table is just a shorter table. `None` is
+    /// bit-identical to the unbudgeted view.
+    pub fn view_budgeted(&self, budget: Option<&DecodeBudget>) -> DecodeView<'_> {
+        let bt = self.block_tokens;
+        // Fine stage: per (lane, layer), sorted table indices this view
+        // drops (empty = attend to everything resident).
+        let mut drops: Vec<Vec<usize>> = vec![Vec::new(); self.b * self.l];
+        let mut pruned_blocks = 0usize;
+        if let Some(bud) = budget {
+            for slot in 0..self.b {
+                if !self.used[slot] {
+                    continue;
+                }
+                for l in 0..self.l {
+                    let len = self.lens[slot][l];
+                    let gen = len.saturating_sub(self.prefill_rows[slot][l]);
+                    if gen <= bud.fine_rows {
+                        continue;
+                    }
+                    let mut cands = self.budget_candidates(slot, l, bud);
+                    self.sort_coldest(slot, l, &mut cands);
+                    cands.truncate(ceil_div(gen - bud.fine_rows, bt));
+                    cands.sort_unstable();
+                    pruned_blocks += cands.len();
+                    drops[slot * self.l + l] = cands;
+                }
+            }
+        }
+        let mut max_blocks = 1usize;
+        for slot in 0..self.b {
+            for l in 0..self.l {
+                let kept = self.tables[slot][l].len()
+                    - drops[slot * self.l + l].len();
+                max_blocks = max_blocks.max(kept);
+            }
+        }
         let mut tables = vec![-1i32; self.l * self.b * max_blocks];
         let mut lens = vec![0i32; self.l * self.b];
         for slot in 0..self.b {
             for l in 0..self.l {
+                let drop = &drops[slot * self.l + l];
                 let base = (l * self.b + slot) * max_blocks;
-                for (i, bid) in self.tables[slot][l].iter().enumerate() {
+                let mut i = 0usize;
+                let mut di = 0usize;
+                for (k, bid) in self.tables[slot][l].iter().enumerate() {
+                    if di < drop.len() && drop[di] == k {
+                        di += 1;
+                        continue;
+                    }
                     tables[base + i] = bid.0 as i32;
+                    i += 1;
                 }
-                lens[l * self.b + slot] = self.lens[slot][l] as i32;
+                // Dropped blocks are always full, so the pruned length
+                // is exact (and non-tail survivors stay full — `k_row`'s
+                // `table[row/bt]` arithmetic holds on pruned tables).
+                lens[l * self.b + slot] =
+                    (self.lens[slot][l] - drop.len() * bt) as i32;
             }
         }
         let spec = self.shard_slabs.spec();
@@ -817,6 +1062,7 @@ impl PagedArena {
             shards: spec.shards,
             shard_versions,
             codec: self.alloc.store().codec(),
+            pruned_blocks,
             store: self.alloc.store(),
         }
     }
@@ -1039,6 +1285,9 @@ impl PagedArena {
             debug_assert_eq!(row, cache.lens[l], "block rows vs cache len");
             // lane was zeroed on release; rows above `row` are already 0
             self.lens[slot][l] = cache.lens[l];
+            // Everything admitted is FastKV-selected prefill KV: decode
+            // budgets must never evict below this boundary.
+            self.prefill_rows[slot][l] = cache.lens[l];
         }
         self.tables[slot] = new_tables;
         self.touch();
@@ -1061,6 +1310,7 @@ impl PagedArena {
         }
         self.tables[dst] = tables;
         self.lens[dst] = self.lens[slot].clone();
+        self.prefill_rows[dst] = self.prefill_rows[slot].clone();
         self.used[dst] = true;
         // The clone serves the same tenant; its future appends (and COW
         // copies) are charged there.
@@ -1093,6 +1343,7 @@ impl PagedArena {
         }
         self.tables[slot] = vec![Vec::new(); self.l];
         self.lens[slot] = vec![0; self.l];
+        self.prefill_rows[slot] = vec![0; self.l];
         self.used[slot] = false;
         self.tenants[slot] = TenantId::DEFAULT;
         let re = self.row_elems();
@@ -1322,6 +1573,14 @@ impl PagedArena {
             }
             debug_assert_eq!(row, entry.lens[l], "restored rows vs entry len");
             self.lens[slot][l] = entry.lens[l];
+            // Conservative ratchet: everything restored counts as
+            // protected prefill KV (the swap entry does not distinguish
+            // prefill from generated rows). A lane that cycles through
+            // preemption therefore re-protects up to `coarse_rows` of
+            // previously-generated KV per trip — safe (never evicts what
+            // the policy selected), and bounded by the coarse cap between
+            // preemptions.
+            self.prefill_rows[slot][l] = entry.lens[l];
         }
         self.tables[slot] = new_tables;
         self.swap.note_swap_in();
@@ -1405,6 +1664,10 @@ impl PagedArena {
         }
 
         let re = self.row_elems();
+        // Recency stamp for this step's rows: the mutation counter the
+        // store will hold after the append's `touch()` (monotonic per
+        // store, which is all the eviction tie-break needs).
+        let stamp = self.mutations.wrapping_add(1) as u64;
         for l in 0..self.l {
             let len = self.lens[slot][l];
             let row_in_block = len % bt;
@@ -1448,6 +1711,13 @@ impl PagedArena {
             let v_row = &v_new.row2(l, slot)[..re];
             self.alloc.store_mut().write_row(bid, row_in_block, k_row, v_row);
             self.alloc.set_filled(bid, (row_in_block + 1) as u32);
+            // Decode-budget scoring: accumulate the row's mean |K| (a
+            // cheap attention-mass proxy — high-magnitude keys draw the
+            // most attention) plus a recency stamp on the block. Free for
+            // unbudgeted stacks beyond this add; consumed by
+            // `enforce_decode_budget` / the pruned view.
+            let mass = k_row.iter().map(|x| x.abs()).sum::<f32>() / re as f32;
+            self.alloc.note_row_write(bid, mass, stamp);
             let base = self.stage_base(l, slot, len);
             if let Some(buf) = self.stage_buf.as_mut() {
                 // Mirror what the store *kept* (quantized under a lossy
@@ -1547,6 +1817,12 @@ impl PagedArena {
             let new_len = keep[l].len();
             self.tables[slot][l] = self.fill_blocks(tenant, &tk, &tv, new_len);
             self.lens[slot][l] = new_len;
+            // The prefill boundary maps through the keep-set: kept rows
+            // below the old boundary land (keep is ascending) as a prefix
+            // of the rebuilt layer, so the new boundary is their count.
+            let boundary = self.prefill_rows[slot][l];
+            self.prefill_rows[slot][l] =
+                keep[l].iter().take_while(|&&i| i < boundary).count();
             // Staging fallback: survivors first, zero the trimmed tail.
             // Survivor rows are read back from the rebuilt blocks — under
             // a lossy codec the rebuild requantizes, and the oracle must
@@ -1608,6 +1884,22 @@ impl PagedArena {
     /// Block-pool gauges snapshot.
     pub fn pool_stats(&self) -> PoolStats {
         let store = self.alloc.store();
+        // Blocks with at least one generated row: table entries past the
+        // last all-prefill block (`boundary / bt` full prefill blocks).
+        let mut decode_region_blocks = 0usize;
+        for slot in 0..self.b {
+            if !self.used[slot] {
+                continue;
+            }
+            for l in 0..self.l {
+                let len = self.lens[slot][l];
+                let boundary = self.prefill_rows[slot][l].min(len);
+                if len > boundary {
+                    decode_region_blocks += self.tables[slot][l].len()
+                        - boundary / self.block_tokens;
+                }
+            }
+        }
         PoolStats {
             blocks_total: self.alloc.blocks_total(),
             blocks_in_use: self.alloc.blocks_in_use(),
@@ -1625,6 +1917,7 @@ impl PagedArena {
             quant_rows: store.quant_rows(),
             dequant_rows: store.dequant_rows(),
             codec_secs: store.codec_secs(),
+            decode_region_blocks,
         }
     }
 
@@ -1753,6 +2046,23 @@ impl KvStore for PagedArena {
         } else {
             Some(PagedArena::view(self))
         }
+    }
+
+    fn decode_view_budgeted(
+        &self,
+        budget: Option<&DecodeBudget>,
+    ) -> Option<DecodeView<'_>> {
+        if self.stage_buf.is_some() {
+            // Staged decode attends to everything resident; the coarse
+            // stage still bounds residency, only fine pruning is lost.
+            None
+        } else {
+            Some(PagedArena::view_budgeted(self, budget))
+        }
+    }
+
+    fn enforce_decode_budget(&mut self, slot: usize, budget: &DecodeBudget) -> usize {
+        PagedArena::enforce_decode_budget(self, slot, budget)
     }
 
     fn held_blocks(&self, slot: usize) -> usize {

@@ -84,6 +84,11 @@ pub struct DecodeView<'a> {
     /// ([`KvCodec::Int8PerRow`]) or the slab tensors need host
     /// dequantization before an f32 artifact.
     pub codec: KvCodec,
+    /// Blocks the fine decode-budget stage dropped from the tables this
+    /// step, summed over every (layer, lane)
+    /// (`PagedArena::view_budgeted`). 0 for unbudgeted views — the
+    /// `decode_blocks_pruned` counter's per-step increment.
+    pub pruned_blocks: usize,
     pub(super) store: &'a BlockStore,
 }
 

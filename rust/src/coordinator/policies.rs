@@ -22,6 +22,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::kvcache::RequestCache;
+use crate::coordinator::paging::DecodeBudget;
 use crate::coordinator::selection as sel;
 use crate::manifest::Manifest;
 use crate::runtime::outputs::{
@@ -160,7 +161,27 @@ pub struct PolicyCfg {
     pub filter_layer: usize,
     /// Use the Pallas-kernel prefill artifact where available.
     pub use_pallas: bool,
+    /// Hard cap (tokens) on the prefill-phase per-layer KV budget, layered
+    /// on top of `kv_rate` (SCOPE-style split budgets: prefill and decode
+    /// are bounded independently). 0 = rate-derived only.
+    pub prefill_budget: usize,
+    /// Decode-phase budget: generated-token KV rows attended per layer per
+    /// lane. 0 = unbudgeted (generated KV grows until pool pressure), the
+    /// pre-budget behavior. See [`PolicyCfg::decode_budget_spec`].
+    pub decode_budget: usize,
+    /// Sliding window of the most recent generated rows that decode
+    /// eviction always retains (`default_for`: the model's observation
+    /// window).
+    pub decode_window: usize,
 }
+
+/// Coarse-stage slack factor: resident generated rows may exceed the
+/// attended (fine) budget by this factor before cold blocks are
+/// permanently released. RocketKV-style two-stage headroom — the fine
+/// stage re-ranks within the survivors each step, so the coarse stage
+/// must retain strictly more than the fine stage attends for the
+/// re-ranking to have any freedom.
+pub const DECODE_COARSE_SLACK: usize = 2;
 
 impl PolicyCfg {
     pub fn default_for(man: &Manifest) -> PolicyCfg {
@@ -170,13 +191,42 @@ impl PolicyCfg {
             sinks: 4,
             filter_layer: man.model.tsp_layer.saturating_sub(1),
             use_pallas: false,
+            prefill_budget: 0,
+            decode_budget: 0,
+            decode_window: man.model.window,
         }
     }
 
     /// KV budget in tokens for a prompt of length `n` (≥ window so the
-    /// observation window always fits).
+    /// observation window always fits). With `prefill_budget` set, the
+    /// rate-derived budget is additionally capped at that many tokens
+    /// (still floored at the window).
     pub fn kv_budget(&self, n: usize, window: usize) -> usize {
-        ((self.kv_rate * n as f64).ceil() as usize).max(window).min(n)
+        let rate = ((self.kv_rate * n as f64).ceil() as usize).max(window).min(n);
+        if self.prefill_budget == 0 {
+            rate
+        } else {
+            rate.min(self.prefill_budget.max(window))
+        }
+    }
+
+    /// Resolved decode-phase budget spec, or `None` when decode budgets
+    /// are off (`decode_budget == 0`). The fine (attended-per-step) row
+    /// count is floored at the sliding window; the coarse (resident) cap
+    /// is [`DECODE_COARSE_SLACK`] times that, so the per-step top-k always
+    /// has cold candidates to re-rank before the coarse stage permanently
+    /// releases them.
+    pub fn decode_budget_spec(&self) -> Option<DecodeBudget> {
+        if self.decode_budget == 0 {
+            return None;
+        }
+        let fine = self.decode_budget.max(self.decode_window).max(1);
+        Some(DecodeBudget {
+            fine_rows: fine,
+            coarse_rows: fine.saturating_mul(DECODE_COARSE_SLACK),
+            window: self.decode_window,
+            sinks: self.sinks,
+        })
     }
 
     pub fn tsp_count(&self, n: usize, window: usize) -> usize {
@@ -686,15 +736,22 @@ impl Policy for FastKVPolicy {
 mod tests {
     use super::*;
 
-    #[test]
-    fn budget_floors_at_window_and_caps_at_n() {
-        let cfg = PolicyCfg {
+    fn cfg(sinks: usize) -> PolicyCfg {
+        PolicyCfg {
             kv_rate: 0.1,
             tsp_rate: 0.2,
-            sinks: 4,
+            sinks,
             filter_layer: 3,
             use_pallas: false,
-        };
+            prefill_budget: 0,
+            decode_budget: 0,
+            decode_window: 0,
+        }
+    }
+
+    #[test]
+    fn budget_floors_at_window_and_caps_at_n() {
+        let cfg = cfg(4);
         assert_eq!(cfg.kv_budget(1000, 8), 100);
         assert_eq!(cfg.kv_budget(10, 8), 8);
         assert_eq!(cfg.kv_budget(4, 8), 4);
@@ -702,14 +759,34 @@ mod tests {
     }
 
     #[test]
+    fn prefill_budget_caps_the_rate_derived_budget() {
+        let mut c = cfg(4);
+        c.prefill_budget = 64;
+        assert_eq!(c.kv_budget(1000, 8), 64, "cap beats the rate");
+        assert_eq!(c.kv_budget(100, 8), 10, "rate beats the cap");
+        c.prefill_budget = 4;
+        assert_eq!(c.kv_budget(1000, 8), 8, "window floor survives the cap");
+    }
+
+    #[test]
+    fn decode_budget_spec_resolves_two_stage_rows() {
+        let mut c = cfg(2);
+        assert!(c.decode_budget_spec().is_none(), "0 = unbudgeted");
+        c.decode_budget = 16;
+        c.decode_window = 4;
+        let b = c.decode_budget_spec().unwrap();
+        assert_eq!(b.fine_rows, 16);
+        assert_eq!(b.coarse_rows, 16 * DECODE_COARSE_SLACK);
+        assert_eq!(b.window, 4);
+        assert_eq!(b.sinks, 2);
+        // fine stage floors at the sliding window
+        c.decode_budget = 2;
+        assert_eq!(c.decode_budget_spec().unwrap().fine_rows, 4);
+    }
+
+    #[test]
     fn compaction_keep_shrinks_per_layer_and_keeps_anchors() {
-        let cfg = PolicyCfg {
-            kv_rate: 0.1,
-            tsp_rate: 0.2,
-            sinks: 2,
-            filter_layer: 3,
-            use_pallas: false,
-        };
+        let cfg = cfg(2);
         // FastKV-style decoupled lens: early layers long, late layers short
         let lens = [40usize, 40, 10, 10];
         let keep = cfg.compaction_keep(&lens, 0.5, 4);
@@ -728,13 +805,7 @@ mod tests {
 
     #[test]
     fn per_layer_budget_matches_policy_class() {
-        let cfg = PolicyCfg {
-            kv_rate: 0.1,
-            tsp_rate: 0.2,
-            sinks: 4,
-            filter_layer: 3,
-            use_pallas: false,
-        };
+        let cfg = cfg(4);
         assert_eq!(cfg.per_layer_budget("full", 1000, 8), 1000);
         assert_eq!(cfg.per_layer_budget("pyramid_infer", 1000, 8), 1000);
         // decoupled policies: max(kv budget, tsp count) = 200

@@ -595,6 +595,12 @@ fn publish_pool_gauges(store: &dyn KvStore, metrics: &Metrics) {
     metrics
         .set_gauge(names::POOL_ALLOC_FAILURES, ps.alloc_failures as f64);
     metrics.set_gauge(names::POOL_QUOTA_DENIALS, ps.quota_denials as f64);
+    // Blocks holding at least one generated row — the working set the
+    // decode-phase budgets act on (prefill-selected blocks excluded).
+    metrics.set_gauge(
+        names::DECODE_REGION_BLOCKS,
+        ps.decode_region_blocks as f64,
+    );
     // Per-tenant rows: block charges reconcile with the pool gauge
     // (Σ tenant_{id}_blocks_held == pool_blocks_in_use), swap bytes with
     // the arena's used_bytes.
@@ -685,7 +691,8 @@ fn serve_inner(
         "decode batch {b} not compiled (buckets: {:?})",
         man.buckets.decode_batches
     );
-    let batch = DecodeBatch::new(&man, b, cap);
+    let batch = DecodeBatch::new(&man, b, cap)
+        .with_budget(cfg.policy_cfg.decode_budget_spec());
     let mut store: Box<dyn KvStore> = match &cfg.paging {
         Some(pc) => {
             Box::new(PagedArena::new(&man.model, b, cap, pc.clone()))

@@ -171,6 +171,74 @@ pub fn run_niah(
     Ok((total, grid_scores))
 }
 
+/// One row of the decode-budget accuracy sweep: suite scores at a
+/// decode budget, with deltas against the unbudgeted baseline row
+/// (`decode_budget == 0`, always first).
+#[derive(Debug, Clone)]
+pub struct BudgetPoint {
+    /// `PolicyCfg::decode_budget` this row ran with (0 = baseline).
+    pub decode_budget: usize,
+    /// NIAH overall score (0-100).
+    pub niah: f64,
+    /// RULER average score across the swept lengths (0-100).
+    pub ruler: f64,
+    /// `niah - baseline.niah`.
+    pub niah_delta: f64,
+    /// `ruler - baseline.ruler`.
+    pub ruler_delta: f64,
+}
+
+/// Decode-budget accuracy differential (SCOPE-style split budgets):
+/// run NIAH + RULER with the same policy, samples, and seeds at each
+/// decode budget and report score deltas against the unbudgeted
+/// baseline, which is always run first and returned as row 0. Prefill
+/// selection is identical across rows — only decode-phase eviction
+/// differs — so a budget with slack reproduces the baseline streams
+/// bit for bit (delta exactly 0) and tight budgets degrade gradually;
+/// callers bound the deltas with their tolerance.
+pub fn run_budget_sweep(
+    ex: &dyn Exec,
+    man: &Manifest,
+    policy: &str,
+    ec: &EvalConfig,
+    budgets: &[usize],
+    lengths: &[usize],
+    depths: usize,
+) -> Result<Vec<BudgetPoint>> {
+    let mut points: Vec<BudgetPoint> = Vec::new();
+    for &budget in std::iter::once(&0).chain(budgets.iter()) {
+        if budget == 0 && !points.is_empty() {
+            continue; // explicit 0 in the list duplicates the baseline
+        }
+        let mut cfg = ec.policy_cfg.clone();
+        cfg.decode_budget = budget;
+        let sub = EvalConfig {
+            policy_cfg: cfg,
+            samples_per_task: ec.samples_per_task,
+            max_new: ec.max_new,
+            seed: ec.seed,
+        };
+        let (niah_total, _) =
+            run_niah(ex, man, policy, &sub, lengths, depths)?;
+        let ruler_cells = run_ruler(ex, man, policy, &sub, lengths)?;
+        let ruler = ruler_cells.values().map(|c| c.score()).sum::<f64>()
+            / ruler_cells.len().max(1) as f64;
+        let niah = niah_total.score();
+        let (nb, rb) = points
+            .first()
+            .map(|p| (p.niah, p.ruler))
+            .unwrap_or((niah, ruler));
+        points.push(BudgetPoint {
+            decode_budget: budget,
+            niah,
+            ruler,
+            niah_delta: niah - nb,
+            ruler_delta: ruler - rb,
+        });
+    }
+    Ok(points)
+}
+
 fn hash_name(s: &str) -> u64 {
     // FNV-1a
     let mut h = 0xcbf29ce484222325u64;

@@ -2,7 +2,8 @@
 //!
 //! Subcommands (each regenerates a paper exhibit; see DESIGN.md index):
 //!   run      — generate from a prompt with a chosen policy
-//!   eval     — longbench | ruler | niah accuracy suites (Tables 2/3/4)
+//!   eval     — longbench | ruler | niah accuracy suites (Tables 2/3/4),
+//!              plus `budgets`: the decode-budget accuracy differential
 //!   analyze  — fig1a | fig1b | fig3 mechanism analyses
 //!   ablate   — tsp-rate | tsp-layer | grid | layer-grid (Fig 5, Tab 9/10)
 //!   bench    — latency breakdown across context lengths (Fig 4/9)
@@ -61,6 +62,8 @@ fn print_help() {
          cmds:\n\
          \x20 run      --policy fastkv --len 256 [--kv-rate 0.1] [--tsp-rate 0.2]\n\
          \x20 eval     longbench|ruler|niah [--methods a,b] [--samples N] [--len N]\n\
+         \x20 eval     budgets [--budgets 16,32,64] [--tolerance 5.0]  (decode-budget accuracy\n\
+         \x20          differential: budgeted vs unbudgeted NIAH/RULER -> BENCH_eval_budgets.json)\n\
          \x20 analyze  fig1a|fig1b|fig3 [--len N] [--topk K]\n\
          \x20 ablate   tsp-rate|tsp-layer|grid|layer-grid [--samples N]\n\
          \x20 bench    [--lens 256,512,1024] [--methods ...] [--gen 64]\n\
@@ -84,7 +87,10 @@ fn print_help() {
          \x20 overhead [--lens 256,512,1024]\n\
          \x20 info\n\
          \n\
-         common flags: --artifacts DIR (default ./artifacts), --seed N"
+         common flags: --artifacts DIR (default ./artifacts), --seed N\n\
+         policy flags: [--prefill-budget N]  (cap on FastKV-selected prefill KV rows; 0 = rate-derived)\n\
+         \x20             [--decode-budget N]  (per-lane rows of generated KV kept live; 0 = unbudgeted)\n\
+         \x20             [--decode-window N]  (sliding tail of recent tokens always retained)"
     );
 }
 
@@ -103,6 +109,9 @@ fn policy_cfg(args: &Args, man: &Manifest) -> PolicyCfg {
     cfg.sinks = args.usize("sinks", cfg.sinks);
     cfg.filter_layer = args.usize("filter-layer", cfg.filter_layer);
     cfg.use_pallas = args.has("pallas");
+    cfg.prefill_budget = args.usize("prefill-budget", cfg.prefill_budget);
+    cfg.decode_budget = args.usize("decode-budget", cfg.decode_budget);
+    cfg.decode_window = args.usize("decode-window", cfg.decode_window);
     cfg
 }
 
@@ -275,6 +284,83 @@ fn cmd_eval(args: &Args) -> Result<()> {
             println!("\n# Needle-in-a-Haystack (kv_rate {})\n",
                      ec.policy_cfg.kv_rate);
             println!("{}", table(&["Method", "Score"], &rows));
+        }
+        "budgets" => {
+            // Decode-budget accuracy differential (SCOPE-style): one
+            // policy, NIAH + RULER, budgeted vs unbudgeted at a few
+            // decode budgets, deltas bounded by --tolerance. Writes the
+            // sweep as BENCH_eval_budgets.json next to the other bench
+            // artifacts.
+            let lens = args.usize_list("lens", &[128, 256]);
+            let depths = args.usize("depths", 3);
+            let budgets = args.usize_list("budgets", &[16, 32, 64]);
+            let tol = args.f64("tolerance", 5.0);
+            let method = args.str_list("methods", &["fastkv"]);
+            let policy = method.first().map(String::as_str).unwrap_or("fastkv");
+            let points = runner::run_budget_sweep(
+                &rt, &man, policy, &ec, &budgets, &lens, depths,
+            )?;
+            let rows: Vec<Vec<String>> = points
+                .iter()
+                .map(|p| {
+                    vec![
+                        if p.decode_budget == 0 {
+                            "unbudgeted".to_string()
+                        } else {
+                            p.decode_budget.to_string()
+                        },
+                        report::f1(p.niah),
+                        report::f1(p.ruler),
+                        format!("{:+.1}", p.niah_delta),
+                        format!("{:+.1}", p.ruler_delta),
+                    ]
+                })
+                .collect();
+            println!(
+                "\n# Decode-budget accuracy differential ({policy}, window {}, {} samples/task)\n",
+                ec.policy_cfg.decode_window, ec.samples_per_task
+            );
+            println!(
+                "{}",
+                table(
+                    &["decode budget", "NIAH", "RULER", "dNIAH", "dRULER"],
+                    &rows
+                )
+            );
+            let json = format!(
+                "{{\n  \"policy\": \"{policy}\",\n  \
+                 \"decode_window\": {},\n  \"tolerance\": {tol},\n  \
+                 \"points\": [\n{}\n  ]\n}}\n",
+                ec.policy_cfg.decode_window,
+                points
+                    .iter()
+                    .map(|p| format!(
+                        "    {{\"decode_budget\": {}, \"niah\": {:.2}, \
+                         \"ruler\": {:.2}, \"niah_delta\": {:.2}, \
+                         \"ruler_delta\": {:.2}}}",
+                        p.decode_budget,
+                        p.niah,
+                        p.ruler,
+                        p.niah_delta,
+                        p.ruler_delta
+                    ))
+                    .collect::<Vec<_>>()
+                    .join(",\n"),
+            );
+            std::fs::write("BENCH_eval_budgets.json", &json)
+                .context("write BENCH_eval_budgets.json")?;
+            println!("wrote BENCH_eval_budgets.json");
+            for p in points.iter().skip(1) {
+                if p.niah_delta.abs() > tol || p.ruler_delta.abs() > tol {
+                    bail!(
+                        "decode budget {} drifted beyond tolerance {tol}: \
+                         dNIAH {:+.1}, dRULER {:+.1}",
+                        p.decode_budget,
+                        p.niah_delta,
+                        p.ruler_delta
+                    );
+                }
+            }
         }
         other => bail!("unknown eval suite `{other}`"),
     }

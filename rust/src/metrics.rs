@@ -162,6 +162,22 @@ pub mod names {
     /// dequantized in-HLO).
     pub const DECODE_STEPS_Q8: &str = "decode_steps_q8";
 
+    // ------------------------------------------------- decode budgets
+    /// Counter: generated-token blocks permanently released by the
+    /// coarse decode-budget stage (`KvStore::enforce_decode_budget` —
+    /// resident generated rows held to `coarse_rows` per layer per
+    /// lane). 0 when `--decode-budget` is off.
+    pub const DECODE_BLOCKS_EVICTED: &str = "decode_blocks_evicted";
+    /// Counter: blocks the fine decode-budget stage dropped from decode
+    /// attention views (pruned per-lane tables; the blocks stay
+    /// resident — only this step's attention skips them). Summed over
+    /// (layer, lane) per step.
+    pub const DECODE_BLOCKS_PRUNED: &str = "decode_blocks_pruned";
+    /// Gauge: blocks holding at least one generated (decode-appended)
+    /// row across all lanes — the resident set decode budgets bound
+    /// (from `PoolStats::decode_region_blocks`).
+    pub const DECODE_REGION_BLOCKS: &str = "decode_region_blocks";
+
     // ------------------------------------------------- slab quantization
     /// Gauge: resident bytes of the slab's encoded K + V planes under the
     /// pool codec (equals `pool_blocks_total * block_tokens *

@@ -1,0 +1,574 @@
+//! Decode-phase KV budget suite — the differential oracle pinning the
+//! two-stage eviction machinery (`DecodeBudget` over `PagedArena`).
+//!
+//! The strongest checks are *differential*: a budgeted serve stack is
+//! driven in lockstep against the unbudgeted stack over the same
+//! prompts and must produce identical token streams — bit-identical
+//! final KV when the budget is slack, bounded divergence with every
+//! protected region (sink rows, FastKV prefill-selected rows, sliding
+//! decode window) intact when the budget is tight. Hard invariants ride
+//! along: the coarse release path never double-frees (pool accounting
+//! reconciles after every release), Σ per-tenant held blocks equals the
+//! pool's in-use gauge, and a budgeted lane's resident block count is
+//! O(budget) regardless of how many tokens it generates — the
+//! bounded-growth regression the unbudgeted baseline pins from the
+//! other side.
+
+use fastkv::coordinator::kvcache::RequestCache;
+use fastkv::coordinator::paging::{
+    AppendResult, DecodeBudget, DecodeView, KvStore, PagedArena,
+    PagingConfig,
+};
+use fastkv::manifest::ModelMeta;
+use fastkv::metrics::names;
+use fastkv::tensor::HostTensor;
+use fastkv::util::rng::Rng;
+
+#[path = "common/sim.rs"]
+mod sim;
+use sim::*;
+
+fn cases(n: usize) -> impl Iterator<Item = (u64, Rng)> {
+    (0..n as u64).map(|seed| (seed, Rng::new(seed)))
+}
+
+/// A prompt cache over [`sim_meta`] whose rows follow the sim model
+/// ([`sim_kv_row`]), so store-level tests agree with the stack harness.
+fn prompt_cache(m: &ModelMeta, tokens: &[i32]) -> RequestCache {
+    let re = m.n_kv_heads * m.head_dim;
+    let mut rc = RequestCache::new(m);
+    for l in 0..m.n_layers {
+        let mut k = Vec::with_capacity(tokens.len() * re);
+        for (pos, &t) in tokens.iter().enumerate() {
+            k.extend_from_slice(&sim_kv_row(l, pos, t, re));
+        }
+        rc.v[l] = k.iter().map(|x| -x).collect();
+        rc.k[l] = k;
+        rc.lens[l] = tokens.len();
+    }
+    rc
+}
+
+/// One decode-step append tensor pair for a single lane of a `b`-lane
+/// store, rows from the sim model at `pos` for `token`.
+fn step_for(
+    m: &ModelMeta,
+    b: usize,
+    slot: usize,
+    pos: usize,
+    token: i32,
+) -> (HostTensor, HostTensor) {
+    let re = m.n_kv_heads * m.head_dim;
+    let mut k = HostTensor::zeros(vec![m.n_layers, b, m.n_kv_heads, m.head_dim]);
+    let mut v = k.clone();
+    for l in 0..m.n_layers {
+        let row = sim_kv_row(l, pos, token, re);
+        let base = (l * b + slot) * re;
+        k.data[base..base + re].copy_from_slice(&row);
+        for (i, x) in row.iter().enumerate() {
+            v.data[base + i] = -x;
+        }
+    }
+    (k, v)
+}
+
+/// K rows of a lane/layer read through a [`DecodeView`], flattened.
+fn view_k_rows(v: &DecodeView<'_>, l: usize, slot: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    for row in 0..v.len(l, slot) {
+        out.extend_from_slice(&v.k_row(l, slot, row));
+    }
+    out
+}
+
+/// Physical block ids of `(l, slot)` in a view's flat table, in order.
+fn view_table(v: &DecodeView<'_>, l: usize, slot: usize, b: usize) -> Vec<i32> {
+    let base = (l * b + slot) * v.max_blocks;
+    v.tables[base..base + v.max_blocks]
+        .iter()
+        .copied()
+        .filter(|&id| id >= 0)
+        .collect()
+}
+
+fn assert_pool_reconciles(pa: &PagedArena, what: &str) {
+    let ps = pa.pool_stats();
+    assert_eq!(
+        ps.blocks_in_use + ps.blocks_cached + ps.blocks_free,
+        ps.blocks_total,
+        "pool accounting broken after {what}"
+    );
+    let held: usize = pa.tenant_stats().iter().map(|t| t.held_blocks).sum();
+    assert_eq!(
+        held, ps.blocks_in_use,
+        "Σ tenant held blocks vs pool in-use after {what}"
+    );
+}
+
+// ------------------------------------------------- lockstep differentials
+
+#[test]
+fn slack_budget_stack_is_bit_identical_to_unbudgeted() {
+    // A decode budget far above anything the stack generates must be a
+    // perfect no-op: same token streams, bit-identical final KV, zero
+    // blocks evicted or pruned. This is the safety half of the oracle —
+    // turning the feature on cannot perturb a workload it never binds.
+    let prompts: Vec<Vec<i32>> =
+        vec![vec![10, 11, 12], vec![20, 21, 22, 23], vec![30, 31]];
+    let max_new = 5;
+    let pcfg = || PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes: 0,
+        ..Default::default()
+    };
+    let base = run_stack_cfg(pcfg(), &prompts, max_new, 2);
+    let slack = run_stack_budgeted(pcfg(), &prompts, max_new, 2, 64, 2);
+    for id in 0..prompts.len() as u64 {
+        assert_eq!(
+            slack.streams[&id], base.streams[&id],
+            "token stream diverged for request {id} under a slack budget"
+        );
+        assert_eq!(slack.streams[&id].len(), max_new);
+        assert_eq!(
+            slack.final_rows[&id], base.final_rows[&id],
+            "final KV diverged for request {id} under a slack budget"
+        );
+    }
+    assert_eq!(
+        slack.metrics.counter(names::DECODE_BLOCKS_EVICTED),
+        0,
+        "slack budget must release nothing"
+    );
+    assert_eq!(base.metrics.counter(names::DECODE_BLOCKS_EVICTED), 0);
+}
+
+#[test]
+fn tight_budget_stack_bounds_kv_and_preserves_protected_rows() {
+    // The divergence-accounting half: with a budget the generation
+    // actually exceeds, the stack still produces the same token stream
+    // (the sim model is KV-independent, so any difference would mean
+    // the lifecycle machinery itself broke), the evicted counter is
+    // live through the `advance_lane` coarse stage, resident generated
+    // KV is bounded well below the unbudgeted footprint, and the
+    // protected regions — prefill-selected prefix and sliding window —
+    // survive verbatim.
+    let m = sim_meta();
+    let re = m.n_kv_heads * m.head_dim;
+    let prompts: Vec<Vec<i32>> =
+        vec![vec![10, 11, 12, 13], vec![20, 21, 22, 23]];
+    let max_new = 14;
+    let (budget, window) = (2usize, 2usize);
+    let pcfg = || PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes: 0,
+        ..Default::default()
+    };
+    // preempt_at past max_new: no preemption, so the prefill boundary
+    // stays at the original prompt rows for the whole run.
+    let base = run_stack_cfg(pcfg(), &prompts, max_new, 100);
+    let tight = run_stack_budgeted(pcfg(), &prompts, max_new, 100, budget, window);
+    assert!(
+        tight.metrics.counter(names::DECODE_BLOCKS_EVICTED) > 0,
+        "a binding budget must release generated blocks"
+    );
+    // fine = max(budget, window) = 2, coarse = 2 * fine = 4; post-append
+    // enforcement may overshoot by at most one block before the next
+    // step trims it again.
+    let coarse_rows = 4;
+    let slack_rows = coarse_rows + window + 2;
+    for id in 0..prompts.len() as u64 {
+        assert_eq!(
+            tight.streams[&id], base.streams[&id],
+            "token stream diverged for request {id}"
+        );
+        let boundary = prompts[id as usize].len();
+        for l in 0..m.n_layers {
+            let b_rows = &base.final_rows[&id][l];
+            let t_rows = &tight.final_rows[&id][l];
+            let len_b = b_rows.len() / (2 * re);
+            let len_t = t_rows.len() / (2 * re);
+            // the admit-time first token is not appended, so the lane
+            // holds max_new - 1 generated rows
+            assert_eq!(
+                len_b,
+                boundary + max_new - 1,
+                "unbudgeted keeps all rows"
+            );
+            assert!(
+                len_t < len_b,
+                "request {id} layer {l}: budget released nothing"
+            );
+            assert!(
+                len_t - boundary <= slack_rows,
+                "request {id} layer {l}: {} generated rows resident \
+                 under a coarse budget of {coarse_rows}",
+                len_t - boundary
+            );
+            // Prefill-selected prefix: never evicted, content intact.
+            assert_eq!(
+                t_rows[..boundary * re],
+                b_rows[..boundary * re],
+                "request {id} layer {l}: prefill K rows diverged"
+            );
+            // Sliding window: the trailing rows match the unbudgeted
+            // stack's trailing rows (K plane; V mirrors K in the sim).
+            let k_t = &t_rows[..len_t * re];
+            let k_b = &b_rows[..len_b * re];
+            assert_eq!(
+                k_t[(len_t - window) * re..],
+                k_b[(len_b - window) * re..],
+                "request {id} layer {l}: window rows diverged"
+            );
+        }
+    }
+}
+
+// --------------------------------------------------- randomized invariants
+
+#[test]
+fn prop_coarse_release_never_touches_protected_rows() {
+    // Randomized interleavings of admit / append / compact / release /
+    // swap-out / swap-in with the coarse stage enforced throughout:
+    // sink rows, prefill-selected rows, and the sliding window survive
+    // every release verbatim; pool accounting reconciles (Σ held ==
+    // blocks_in_use — a double-free through the release path would
+    // break the identity); teardown returns every block.
+    for (seed, mut rng) in cases(40) {
+        let m = sim_meta();
+        let re = m.n_kv_heads * m.head_dim;
+        let lanes = 3;
+        let pcfg = PagingConfig {
+            block_tokens: 2,
+            prefix_cache: rng.chance(0.3),
+            swap_bytes: if rng.chance(0.5) { 1 << 20 } else { 0 },
+            ..Default::default()
+        };
+        let swap_on = pcfg.swap_bytes > 0;
+        let mut pa = PagedArena::new(&m, lanes, 64, pcfg);
+        let budget = DecodeBudget {
+            fine_rows: rng.range(2, 6),
+            coarse_rows: rng.range(4, 10),
+            window: rng.range(1, 3),
+            sinks: rng.range(0, 2),
+        };
+        let mut live: Vec<usize> = Vec::new();
+        let mut next_tok = 100 + seed as i32;
+        for _ in 0..rng.range(1, lanes) {
+            let plen = rng.range(1, 6);
+            let toks: Vec<i32> = (0..plen as i32).map(|t| 4 + t).collect();
+            let slot = KvStore::admit(&mut pa, &prompt_cache(&m, &toks))
+                .expect("worst-case pool admits");
+            live.push(slot);
+        }
+        for op in 0..rng.range(10, 40) {
+            if live.is_empty() {
+                let toks = vec![4, 5, 6];
+                live.push(
+                    KvStore::admit(&mut pa, &prompt_cache(&m, &toks)).unwrap(),
+                );
+            }
+            let slot = live[rng.below(live.len())];
+            match rng.below(6) {
+                // append a generated row, then enforce — the serve
+                // loop's post-append coarse stage
+                0 | 1 | 2 => {
+                    let pos = KvStore::layer_lens(&pa, slot)[0];
+                    let (k, v) = step_for(&m, lanes, slot, pos, next_tok);
+                    next_tok += 1;
+                    if !matches!(
+                        KvStore::append(&mut pa, slot, &k, &v),
+                        AppendResult::Ok
+                    ) {
+                        continue;
+                    }
+                    let before = lane_rows(&pa, slot, m.n_layers);
+                    let bounds = pa.prefill_boundary(slot);
+                    let released =
+                        pa.enforce_decode_budget(slot, &budget);
+                    assert_pool_reconciles(&pa, "coarse release");
+                    let after = lane_rows(&pa, slot, m.n_layers);
+                    let lens = KvStore::layer_lens(&pa, slot);
+                    for l in 0..m.n_layers {
+                        let len_b = before[l].len() / (2 * re);
+                        let len_a = lens[l];
+                        assert!(len_a <= len_b, "release grew a lane");
+                        let prot = bounds[l].max(budget.sinks).min(len_a);
+                        // protected prefix: content at the same rows
+                        assert_eq!(
+                            after[l][..prot * re],
+                            before[l][..prot * re],
+                            "seed {seed} op {op} layer {l}: sink/prefill \
+                             K rows changed"
+                        );
+                        // sliding window: trailing rows intact
+                        let w = budget.window.min(len_a);
+                        assert_eq!(
+                            after[l][(len_a - w) * re..len_a * re],
+                            before[l][(len_b - w) * re..len_b * re],
+                            "seed {seed} op {op} layer {l}: window \
+                             K rows changed"
+                        );
+                        // never release into the protected regions
+                        assert!(
+                            len_a >= prot + w.min(len_a - prot),
+                            "seed {seed}: lane shrunk into protection"
+                        );
+                    }
+                    if released == 0 {
+                        assert_eq!(before, after, "no-op release mutated KV");
+                    }
+                }
+                // block-granular compaction (FastKV decoupled stage)
+                3 => {
+                    let lens = KvStore::layer_lens(&pa, slot);
+                    let keep: Vec<Vec<usize>> = lens
+                        .iter()
+                        .map(|&n| {
+                            let k = rng.range(1, n.max(1));
+                            rng.distinct_sorted(k.min(n), n)
+                        })
+                        .collect();
+                    KvStore::compact(&mut pa, slot, &keep);
+                    assert_pool_reconciles(&pa, "compact");
+                }
+                // release + re-admit
+                4 => {
+                    assert!(pa.release(slot));
+                    live.retain(|&s| s != slot);
+                    assert_pool_reconciles(&pa, "release");
+                }
+                // swap round-trip (when the arena has a swap budget)
+                _ => {
+                    if !swap_on {
+                        continue;
+                    }
+                    let Some(h) = pa.swap_out(slot) else { continue };
+                    live.retain(|&s| s != slot);
+                    assert_pool_reconciles(&pa, "swap-out");
+                    match pa.swap_in(h) {
+                        fastkv::coordinator::paging::SwapIn::Restored(s) => {
+                            live.push(s);
+                        }
+                        other => panic!("seed {seed}: swap-in {other:?}"),
+                    }
+                    assert_pool_reconciles(&pa, "swap-in");
+                }
+            }
+        }
+        for slot in live {
+            assert!(pa.release(slot));
+        }
+        let ps = pa.pool_stats();
+        assert_eq!(
+            ps.blocks_in_use, 0,
+            "seed {seed}: teardown leaked blocks"
+        );
+        assert_pool_reconciles(&pa, "teardown");
+    }
+}
+
+// ------------------------------------------------- bounded growth pinning
+
+#[test]
+fn budgeted_lane_holds_bounded_blocks_forever() {
+    // The headline capacity win: a lane generating far past its staging
+    // capacity keeps appending under a decode budget because the coarse
+    // stage releases cold blocks as fast as new ones fill — resident
+    // blocks stay O(budget). The unbudgeted baseline pins the old
+    // behavior from the other side: append stops dead at capacity.
+    let m = sim_meta();
+    let cap = 16;
+    let prompt = vec![10, 11, 12, 13];
+    let pcfg = || PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes: 0,
+        ..Default::default()
+    };
+    let budget = DecodeBudget {
+        fine_rows: 2,
+        coarse_rows: 4,
+        window: 2,
+        sinks: 1,
+    };
+
+    // Unbudgeted baseline: 4 prompt rows + 12 appends fill the lane;
+    // the 13th append reports CapacityExhausted (the seed's silent
+    // truncation point).
+    let mut pa = PagedArena::new(&m, 1, cap, pcfg());
+    let slot = KvStore::admit(&mut pa, &prompt_cache(&m, &prompt)).unwrap();
+    let mut stopped_at = None;
+    for i in 0..100 {
+        let pos = KvStore::layer_lens(&pa, slot)[0];
+        let (k, v) = step_for(&m, 1, slot, pos, 50 + i as i32);
+        match KvStore::append(&mut pa, slot, &k, &v) {
+            AppendResult::Ok => {}
+            AppendResult::CapacityExhausted => {
+                stopped_at = Some(i);
+                break;
+            }
+            AppendResult::PoolExhausted => panic!("pool sized for the lane"),
+        }
+    }
+    assert_eq!(
+        stopped_at,
+        Some(cap - prompt.len()),
+        "unbudgeted lane must stop exactly at staging capacity"
+    );
+
+    // Budgeted lane: 100 appends — ~6x the staging capacity — all Ok,
+    // with the resident block count flat at O(budget) throughout.
+    let mut pa = PagedArena::new(&m, 1, cap, pcfg());
+    let slot = KvStore::admit(&mut pa, &prompt_cache(&m, &prompt)).unwrap();
+    let bt = 2;
+    // per layer: prefill blocks + coarse survivors + window + one
+    // in-flight block of post-enforcement overshoot
+    let per_layer = prompt.len().div_ceil(bt)
+        + budget.coarse_rows.div_ceil(bt)
+        + budget.window.div_ceil(bt)
+        + 1;
+    let bound = m.n_layers * per_layer;
+    let mut peak = 0usize;
+    for i in 0..100 {
+        let pos = KvStore::layer_lens(&pa, slot)[0];
+        let (k, v) = step_for(&m, 1, slot, pos, 50 + i as i32);
+        assert!(
+            matches!(
+                KvStore::append(&mut pa, slot, &k, &v),
+                AppendResult::Ok
+            ),
+            "budgeted lane refused append {i}"
+        );
+        pa.enforce_decode_budget(slot, &budget);
+        peak = peak.max(KvStore::held_blocks(&pa, slot));
+        assert_pool_reconciles(&pa, "budgeted append");
+    }
+    assert!(
+        peak <= bound,
+        "budgeted lane peaked at {peak} blocks (bound {bound})"
+    );
+    assert!(
+        pa.pool_stats().decode_region_blocks <= bound,
+        "decode-region gauge exceeds the budget bound"
+    );
+    let lens = KvStore::layer_lens(&pa, slot);
+    for (l, &len) in lens.iter().enumerate() {
+        assert!(
+            len >= prompt.len() + budget.window,
+            "layer {l}: protected rows missing after long generation"
+        );
+        assert!(len < cap, "layer {l}: lane filled despite the budget");
+    }
+}
+
+// ----------------------------------------------------- fine-stage pruning
+
+#[test]
+fn fine_stage_prunes_view_without_touching_residency() {
+    // The per-step attention view drops the coldest generated blocks to
+    // the fine budget while the store itself keeps every row: pruning
+    // is pure table surgery (an ordered subsequence handed to the same
+    // gather artifacts), so the unbudgeted view taken before and after
+    // must be identical.
+    let m = sim_meta();
+    let re = m.n_kv_heads * m.head_dim;
+    let prompt = vec![10, 11, 12, 13];
+    let pcfg = PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes: 0,
+        ..Default::default()
+    };
+    let mut pa = PagedArena::new(&m, 1, 64, pcfg);
+    let slot = KvStore::admit(&mut pa, &prompt_cache(&m, &prompt)).unwrap();
+    for i in 0..10 {
+        let pos = KvStore::layer_lens(&pa, slot)[0];
+        let (k, v) = step_for(&m, 1, slot, pos, 60 + i as i32);
+        assert!(matches!(
+            KvStore::append(&mut pa, slot, &k, &v),
+            AppendResult::Ok
+        ));
+    }
+    // coarse_rows high enough that residency is untouched; fine binds
+    let budget = DecodeBudget {
+        fine_rows: 4,
+        coarse_rows: 100,
+        window: 2,
+        sinks: 1,
+    };
+    assert_eq!(pa.enforce_decode_budget(slot, &budget), 0);
+
+    let boundary = prompt.len();
+    let full_before = view_k_rows(&pa.view(), 0, slot);
+    let pruned = pa.view_budgeted(Some(&budget));
+    // gen = 14 - 4 = 10 > fine 4: drop ceil((10-4)/2) = 3 blocks/layer
+    assert_eq!(pruned.pruned_blocks, 3 * m.n_layers);
+    assert_eq!(pa.view().pruned_blocks, 0, "unbudgeted view never prunes");
+    assert!(pruned.max_blocks <= pa.view().max_blocks);
+    for l in 0..m.n_layers {
+        let full = pa.view();
+        assert_eq!(pruned.len(l, slot), full.len(l, slot) - 3 * 2);
+        // pruned table is an ordered subsequence of the full table
+        let ft = view_table(&full, l, slot, 1);
+        let pt = view_table(&pruned, l, slot, 1);
+        let mut fi = 0;
+        for id in &pt {
+            while fi < ft.len() && ft[fi] != *id {
+                fi += 1;
+            }
+            assert!(
+                fi < ft.len(),
+                "layer {l}: pruned table is not a subsequence"
+            );
+            fi += 1;
+        }
+        // prefill prefix attended verbatim
+        let pk = view_k_rows(&pruned, l, slot);
+        let fk = view_k_rows(&full, l, slot);
+        assert_eq!(pk[..boundary * re], fk[..boundary * re]);
+        // window tail attended verbatim
+        let (pl, fl) = (pruned.len(l, slot), full.len(l, slot));
+        assert_eq!(
+            pk[(pl - budget.window) * re..],
+            fk[(fl - budget.window) * re..],
+            "layer {l}: window rows missing from the pruned view"
+        );
+    }
+    // pruning left residency alone: the unbudgeted view still reads
+    // every original row
+    assert_eq!(view_k_rows(&pa.view(), 0, slot), full_before);
+    assert_eq!(KvStore::layer_lens(&pa, slot), vec![14; m.n_layers]);
+}
+
+// ----------------------------------------------- recompute-resume ratchet
+
+#[test]
+fn budgeted_stack_survives_preemption_and_resume() {
+    // Budgets composed with the preemption machinery: a budgeted stack
+    // that preempts and recompute-resumes every request still retires
+    // everything with the same token streams as the unbudgeted stack,
+    // and the resumed lanes' conservative prefill ratchet (restored KV
+    // counts as prefill) never trips the eviction invariants.
+    let prompts: Vec<Vec<i32>> =
+        vec![vec![10, 11, 12], vec![20, 21, 22, 23], vec![30, 31]];
+    let max_new = 10;
+    let mk = |swap: usize| PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes: swap,
+        ..Default::default()
+    };
+    for swap in [0usize, 1 << 20] {
+        let base = run_stack_cfg(mk(swap), &prompts, max_new, 3);
+        let tight = run_stack_budgeted(mk(swap), &prompts, max_new, 3, 2, 2);
+        for id in 0..prompts.len() as u64 {
+            assert_eq!(
+                tight.streams[&id], base.streams[&id],
+                "swap={swap}: stream diverged for request {id}"
+            );
+            assert_eq!(tight.streams[&id].len(), max_new);
+        }
+    }
+}

@@ -16,210 +16,24 @@
 
 use std::collections::HashMap;
 
-use fastkv::coordinator::decode::{advance_lane, LaneAdvance};
-use fastkv::coordinator::kvcache::RequestCache;
-use fastkv::coordinator::paging::KvStore;
-use fastkv::coordinator::policies::{
-    Exec, Policy, PolicyCfg, PrefillOutcome,
-};
 use fastkv::coordinator::scheduler::{AdmitOrder, Scheduler};
 use fastkv::coordinator::server::{
     admit, finish, preempt, reject, try_resume, Active, AdmitFail,
-    Request, Resume, ServerConfig,
+    Request, Resume,
 };
-use fastkv::manifest::{Buckets, Manifest, ModelMeta};
 use fastkv::metrics::{names, Metrics};
 use fastkv::obs::trace::{
     validate_lifecycle, EventKind, IncidentKind, ResumeMode, NO_LANE,
 };
-use fastkv::runtime::outputs::DecodeOut;
-use fastkv::tensor::HostTensor;
 use fastkv::util::json::Value;
 use fastkv::{PagedArena, PagingConfig, TenantId, TraceRecorder};
 
-// ---------------------------------------------------------- sim harness
-
-fn sim_meta() -> ModelMeta {
-    ModelMeta {
-        vocab_size: 256,
-        d_model: 8,
-        n_layers: 2,
-        n_heads: 2,
-        n_kv_heads: 2,
-        head_dim: 2,
-        tsp_layer: 1,
-        window: 2,
-        pool_kernel: 3,
-        max_train_len: 64,
-    }
-}
-
-fn sim_manifest(limit: usize) -> Manifest {
-    Manifest {
-        dir: std::path::PathBuf::from("/tmp"),
-        model: sim_meta(),
-        n_params: 1,
-        kernel: "jnp".into(),
-        buckets: Buckets {
-            prefill_ns: vec![limit],
-            stage1_ns: vec![limit],
-            stage2_ns: vec![limit],
-            pyramid_ns: vec![limit],
-            decode_batches: vec![1, 2, 4],
-            decode_caps: vec![64],
-            sweep_n: 64,
-            sweep_nt: 16,
-            pallas_n: limit,
-            max_gen: 16,
-            block_tokens: 2,
-            shard_counts: vec![],
-        },
-        artifacts: std::collections::BTreeMap::new(),
-    }
-}
-
-fn sim_server_cfg(max_prompt: usize, max_new: usize) -> ServerConfig {
-    ServerConfig {
-        artifact_dir: std::path::PathBuf::from("/tmp"),
-        policy: "sim".into(),
-        policy_cfg: PolicyCfg {
-            kv_rate: 1.0,
-            tsp_rate: 1.0,
-            sinks: 1,
-            filter_layer: 0,
-            use_pallas: false,
-        },
-        decode_batch: 4,
-        max_new,
-        max_prompt,
-        order: AdmitOrder::Fcfs,
-        paging: Some(PagingConfig::default()),
-        obs: Default::default(),
-    }
-}
-
-fn sim_kv_row(l: usize, pos: usize, token: i32, re: usize) -> Vec<f32> {
-    (0..re)
-        .map(|i| {
-            (l as f32) * 1000.0
-                + (pos as f32) * 10.0
-                + (token as f32) * 0.125
-                + (i as f32) * 0.0625
-        })
-        .collect()
-}
-
-fn sim_next_token(seq: &[i32]) -> i32 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &t in seq {
-        h ^= t as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    4 + (h % 200) as i32
-}
-
-struct SimPolicy;
-
-impl Policy for SimPolicy {
-    fn name(&self) -> &'static str {
-        "sim"
-    }
-
-    fn prefill(
-        &self,
-        _ex: &dyn Exec,
-        man: &Manifest,
-        tokens: &[i32],
-        _cfg: &PolicyCfg,
-    ) -> anyhow::Result<PrefillOutcome> {
-        let m = &man.model;
-        let re = m.n_kv_heads * m.head_dim;
-        let mut cache = RequestCache::new(m);
-        for l in 0..m.n_layers {
-            let mut k = Vec::with_capacity(tokens.len() * re);
-            for (pos, &t) in tokens.iter().enumerate() {
-                k.extend_from_slice(&sim_kv_row(l, pos, t, re));
-            }
-            cache.v[l] = k.iter().map(|x| -x).collect();
-            cache.k[l] = k;
-            cache.lens[l] = tokens.len();
-        }
-        Ok(PrefillOutcome {
-            first_token: sim_next_token(tokens),
-            cache,
-            next_pos: tokens.len(),
-            final_h: Vec::new(),
-            compute_tokens: tokens.len() * m.n_layers,
-        })
-    }
-}
-
-struct NoExec;
-
-impl Exec for NoExec {
-    fn run(
-        &self,
-        _name: &str,
-        _inputs: Vec<fastkv::runtime::In>,
-    ) -> anyhow::Result<Vec<HostTensor>> {
-        anyhow::bail!("obs tests never execute artifacts")
-    }
-}
-
-/// One synthetic decode round over the active lanes through the real
-/// `advance_lane` + `Active::apply`, recording a `DecodeStep` event per
-/// advanced lane (as the serving loop's sampled tracing does).
-fn sim_decode_round(
-    pa: &mut PagedArena,
-    active: &mut [Active],
-    prompts: &HashMap<u64, Vec<i32>>,
-    metrics: &Metrics,
-) {
-    let m = sim_meta();
-    let re = m.n_kv_heads * m.head_dim;
-    let b = KvStore::slots(pa);
-    for a in active.iter_mut() {
-        if a.is_done() {
-            continue;
-        }
-        let mut k_new = HostTensor::zeros(vec![
-            m.n_layers,
-            b,
-            m.n_kv_heads,
-            m.head_dim,
-        ]);
-        let mut v_new = k_new.clone();
-        for l in 0..m.n_layers {
-            let row = sim_kv_row(l, a.pos(), a.cur(), re);
-            let base = (l * b + a.slot()) * re;
-            k_new.data[base..base + re].copy_from_slice(&row);
-            for (i, x) in row.iter().enumerate() {
-                v_new.data[base + i] = -x;
-            }
-        }
-        let mut seq = prompts[&a.request_id()].clone();
-        seq.extend_from_slice(a.tokens());
-        let next = sim_next_token(&seq);
-        let mut logits = HostTensor::zeros(vec![b, m.vocab_size]);
-        logits.data[a.slot() * m.vocab_size + next as usize] = 1.0;
-        let out = DecodeOut { logits, k_new, v_new };
-        let adv = advance_lane(pa, a.slot(), &out, None);
-        assert!(
-            matches!(adv, LaneAdvance::Next { .. }),
-            "sim decode hit {adv:?}"
-        );
-        metrics.tracer().record(
-            a.request_id(),
-            a.tenant(),
-            a.slot() as i32,
-            EventKind::DecodeStep {
-                step: a.pos() as u32,
-                tokens_out: a.tokens().len() as u32,
-            },
-        );
-        a.apply(adv);
-    }
-}
+// Serve-lifecycle sim harness shared with `tests/paging.rs`
+// (deterministic stand-in model, `NoExec`, `SimPolicy`,
+// `sim_decode_round`).
+#[path = "common/sim.rs"]
+mod sim;
+use sim::*;
 
 /// Drive `n` requests through admit → decode → preempt (swap) → resume →
 /// finish on a lane-limited scheduler, tracing on. Returns the metrics
@@ -227,7 +41,7 @@ fn sim_decode_round(
 fn run_traced_stack(n: u64) -> (Metrics, Vec<u64>) {
     let m = sim_meta();
     let man = sim_manifest(64);
-    let policy = SimPolicy;
+    let policy = SimPolicy::new();
     let metrics = Metrics::default();
     metrics.tracer().enable(1024);
     let max_new = 6;
@@ -280,7 +94,7 @@ fn run_traced_stack(n: u64) -> (Metrics, Vec<u64>) {
                 },
             }
         }
-        sim_decode_round(&mut pa, &mut active, &prompts, &metrics);
+        sim_decode_round(&mut pa, &mut active, &prompts, &cfg, &metrics);
         let mut j = 0;
         while j < active.len() {
             if active[j].is_done() || active[j].tokens().len() >= max_new {
@@ -457,7 +271,7 @@ fn chrome_trace_parses_and_reconstructs_phase_spans() {
 fn reject_files_flight_incident_and_keeps_ttft_honest() {
     let m = sim_meta();
     let man = sim_manifest(64);
-    let policy = SimPolicy;
+    let policy = SimPolicy::new();
     let metrics = Metrics::default();
     metrics.tracer().enable(256);
     let cfg = sim_server_cfg(8, 4);

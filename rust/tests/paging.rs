@@ -749,38 +749,20 @@ fn prop_block_table_decode_matches_staged_decode() {
 
 // ------------------------------------------------------------ swap-to-host
 
-use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::HashMap;
 
-use fastkv::coordinator::decode::{advance_lane, LaneAdvance};
-use fastkv::coordinator::policies::{Exec, Policy, PolicyCfg, PrefillOutcome};
 use fastkv::coordinator::server::{
-    admit, can_resume_parts, preempt, resume_admit_state, try_resume, Active,
-    AdmitFail, Request, Resume, ServerConfig,
+    admit, can_resume_parts, preempt, resume_admit_state, try_resume,
+    AdmitFail, Request, Resume,
 };
-use fastkv::manifest::{Buckets, Manifest};
 use fastkv::metrics::{names, Metrics};
-use fastkv::runtime::outputs::DecodeOut;
 use fastkv::tokenizer::END;
 
-/// All KV rows of a lane read through the block-table view, one
-/// `K ++ V` vector per layer — slot-independent, so lanes can be
-/// compared across stores that placed them differently.
-fn lane_rows(pa: &PagedArena, slot: usize, layers: usize) -> Vec<Vec<f32>> {
-    let v = pa.view();
-    (0..layers)
-        .map(|l| {
-            let mut out = Vec::new();
-            for row in 0..v.len(l, slot) {
-                out.extend_from_slice(&v.k_row(l, slot, row));
-            }
-            for row in 0..v.len(l, slot) {
-                out.extend_from_slice(&v.v_row(l, slot, row));
-            }
-            out
-        })
-        .collect()
-}
+// Serve-lifecycle sim harness shared with `tests/obs.rs` (deterministic
+// stand-in model, `run_stack*` differential drivers, `lane_rows`).
+#[path = "common/sim.rs"]
+mod sim;
+use sim::*;
 
 #[test]
 fn prop_swap_roundtrip_preserves_selected_kv_across_churn() {
@@ -953,350 +935,6 @@ fn swap_budget_drop_oldest_forces_recompute_fallback() {
 
 // ------------------------------------------- server-level swap machinery
 
-fn sim_meta() -> ModelMeta {
-    ModelMeta {
-        vocab_size: 256,
-        d_model: 8,
-        n_layers: 2,
-        n_heads: 2,
-        n_kv_heads: 2,
-        head_dim: 2,
-        tsp_layer: 1,
-        window: 2,
-        pool_kernel: 3,
-        max_train_len: 64,
-    }
-}
-
-fn sim_manifest(prefill_limit: usize) -> Manifest {
-    Manifest {
-        dir: std::path::PathBuf::from("/tmp"),
-        model: sim_meta(),
-        n_params: 1,
-        kernel: "jnp".into(),
-        buckets: Buckets {
-            prefill_ns: vec![prefill_limit],
-            stage1_ns: vec![prefill_limit],
-            stage2_ns: vec![prefill_limit],
-            pyramid_ns: vec![prefill_limit],
-            decode_batches: vec![1, 2, 4],
-            decode_caps: vec![64],
-            sweep_n: 64,
-            sweep_nt: 16,
-            pallas_n: prefill_limit,
-            max_gen: 16,
-            block_tokens: 2,
-            shard_counts: vec![],
-        },
-        artifacts: BTreeMap::new(),
-    }
-}
-
-fn sim_server_cfg(max_prompt: usize, max_new: usize) -> ServerConfig {
-    ServerConfig {
-        artifact_dir: std::path::PathBuf::from("/tmp"),
-        policy: "full".into(),
-        policy_cfg: PolicyCfg {
-            kv_rate: 1.0,
-            tsp_rate: 1.0,
-            sinks: 1,
-            filter_layer: 0,
-            use_pallas: false,
-        },
-        decode_batch: 4,
-        max_new,
-        max_prompt,
-        order: AdmitOrder::Fcfs,
-        paging: Some(PagingConfig::default()),
-        obs: Default::default(),
-    }
-}
-
-/// Executor stub: the sim policy never runs artifacts.
-struct NoExec;
-
-impl Exec for NoExec {
-    fn run(
-        &self,
-        _name: &str,
-        _inputs: Vec<fastkv::runtime::In>,
-    ) -> anyhow::Result<Vec<HostTensor>> {
-        anyhow::bail!("tests never execute artifacts")
-    }
-}
-
-/// Deterministic KV row for (layer, position, token) — the "model" both
-/// the sim policy's prefill and the sim decode loop share, so
-/// recompute-resume rebuilds bit-identical KV and any swap bug surfaces
-/// as a diverging stream.
-fn sim_kv_row(l: usize, pos: usize, token: i32, re: usize) -> Vec<f32> {
-    (0..re)
-        .map(|i| {
-            (l as f32) * 1000.0
-                + (pos as f32) * 10.0
-                + (token as f32) * 0.125
-                + (i as f32) * 0.0625
-        })
-        .collect()
-}
-
-/// Deterministic next token from the full sequence (never END).
-fn sim_next_token(seq: &[i32]) -> i32 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &t in seq {
-        h ^= t as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    4 + (h % 200) as i32
-}
-
-/// Stand-in policy: prefill of a sequence produces exactly the KV rows
-/// the sim decode loop would have appended for it, counts every call,
-/// and can be told to emit END once the sequence reaches `end_after`.
-struct SimPolicy {
-    calls: AtomicUsize,
-    end_after: usize,
-}
-
-impl SimPolicy {
-    fn new() -> Self {
-        SimPolicy { calls: AtomicUsize::new(0), end_after: usize::MAX }
-    }
-
-    fn calls(&self) -> usize {
-        self.calls.load(Ordering::Relaxed)
-    }
-}
-
-impl Policy for SimPolicy {
-    fn name(&self) -> &'static str {
-        "sim"
-    }
-
-    fn prefill(
-        &self,
-        _ex: &dyn Exec,
-        man: &Manifest,
-        tokens: &[i32],
-        _cfg: &PolicyCfg,
-    ) -> anyhow::Result<PrefillOutcome> {
-        self.calls.fetch_add(1, Ordering::Relaxed);
-        let m = &man.model;
-        let re = m.n_kv_heads * m.head_dim;
-        let mut cache = RequestCache::new(m);
-        for l in 0..m.n_layers {
-            let mut k = Vec::with_capacity(tokens.len() * re);
-            for (pos, &t) in tokens.iter().enumerate() {
-                k.extend_from_slice(&sim_kv_row(l, pos, t, re));
-            }
-            cache.v[l] = k.iter().map(|x| -x).collect();
-            cache.k[l] = k;
-            cache.lens[l] = tokens.len();
-        }
-        let first_token = if tokens.len() >= self.end_after {
-            END as i32
-        } else {
-            sim_next_token(tokens)
-        };
-        Ok(PrefillOutcome {
-            first_token,
-            cache,
-            next_pos: tokens.len(),
-            final_h: Vec::new(),
-            compute_tokens: tokens.len() * m.n_layers,
-        })
-    }
-}
-
-/// One synthetic decode round over the active lanes, through the real
-/// `advance_lane` + `Active::apply` machinery.
-fn sim_decode_round(
-    pa: &mut PagedArena,
-    active: &mut [Active],
-    prompts: &HashMap<u64, Vec<i32>>,
-) {
-    let m = sim_meta();
-    let re = m.n_kv_heads * m.head_dim;
-    let b = KvStore::slots(pa);
-    for a in active.iter_mut() {
-        if a.is_done() {
-            continue;
-        }
-        let mut k_new = HostTensor::zeros(vec![
-            m.n_layers,
-            b,
-            m.n_kv_heads,
-            m.head_dim,
-        ]);
-        let mut v_new = k_new.clone();
-        for l in 0..m.n_layers {
-            let row = sim_kv_row(l, a.pos(), a.cur(), re);
-            let base = (l * b + a.slot()) * re;
-            k_new.data[base..base + re].copy_from_slice(&row);
-            for (i, x) in row.iter().enumerate() {
-                v_new.data[base + i] = -x;
-            }
-        }
-        let mut seq = prompts[&a.request_id()].clone();
-        seq.extend_from_slice(a.tokens());
-        let next = sim_next_token(&seq);
-        let mut logits = HostTensor::zeros(vec![b, m.vocab_size]);
-        logits.data[a.slot() * m.vocab_size + next as usize] = 1.0;
-        let out = DecodeOut { logits, k_new, v_new };
-        let adv = advance_lane(pa, a.slot(), &out, None);
-        assert!(
-            matches!(adv, LaneAdvance::Next { .. }),
-            "sim decode hit {adv:?}"
-        );
-        a.apply(adv);
-    }
-}
-
-struct StackResult {
-    streams: HashMap<u64, Vec<i32>>,
-    final_rows: HashMap<u64, Vec<Vec<f32>>>,
-    policy_calls: usize,
-    metrics: Metrics,
-}
-
-/// Drive a full serve-shaped lifecycle — admit, decode, preempt at a
-/// token-progress trigger, resume, retire — through the real server
-/// functions, with swap enabled (`swap_bytes > 0`) or recompute-only.
-fn run_stack(
-    swap_bytes: usize,
-    prompts: &[Vec<i32>],
-    max_new: usize,
-    preempt_at: usize,
-) -> StackResult {
-    run_stack_sharded(swap_bytes, prompts, max_new, preempt_at, 1)
-}
-
-/// [`run_stack`] over a KV-head-sharded slab (`PagingConfig::shards`).
-fn run_stack_sharded(
-    swap_bytes: usize,
-    prompts: &[Vec<i32>],
-    max_new: usize,
-    preempt_at: usize,
-    shards: usize,
-) -> StackResult {
-    run_stack_cfg(
-        PagingConfig {
-            block_tokens: 2,
-            prefix_cache: false,
-            swap_bytes,
-            shards,
-            ..Default::default()
-        },
-        prompts,
-        max_new,
-        preempt_at,
-    )
-}
-
-/// [`run_stack`] with full control of the pool config (precision tiers,
-/// shard counts, swap budgets).
-fn run_stack_cfg(
-    pcfg: PagingConfig,
-    prompts: &[Vec<i32>],
-    max_new: usize,
-    preempt_at: usize,
-) -> StackResult {
-    let m = sim_meta();
-    let man = sim_manifest(64);
-    let policy = SimPolicy::new();
-    let metrics = Metrics::default();
-    let cfg = sim_server_cfg(32, max_new);
-    let lanes = prompts.len();
-    let swap_enabled = pcfg.swap_bytes > 0;
-    let mut pa = PagedArena::new(&m, lanes, 64, pcfg);
-    let mut sched: Scheduler<Request> = Scheduler::new(lanes, AdmitOrder::Fcfs);
-    let mut prompt_map: HashMap<u64, Vec<i32>> = HashMap::new();
-    let mut rxs = Vec::new(); // kept alive; this driver retires lanes itself
-    for (i, p) in prompts.iter().enumerate() {
-        let (req, rx) = Request::synthetic(i as u64, p.clone(), max_new);
-        rxs.push(rx);
-        prompt_map.insert(i as u64, p.clone());
-        sched.enqueue(req);
-    }
-    let mut active: Vec<Active> = Vec::new();
-    let mut preempted_once = vec![false; prompts.len()];
-    let mut streams: HashMap<u64, Vec<i32>> = HashMap::new();
-    let mut final_rows: HashMap<u64, Vec<Vec<f32>>> = HashMap::new();
-    let mut guard = 0;
-    while streams.len() < prompts.len() {
-        guard += 1;
-        assert!(guard < 1_000, "sim serve loop livelocked");
-        // admission / resume phase
-        while sched.queue_len() > 0 {
-            let req = sched.pop_next(|r| r.prompt.len()).unwrap();
-            match try_resume(req, &mut pa, &metrics) {
-                Resume::Restored(a) => {
-                    assert!(
-                        swap_enabled,
-                        "swap-disabled stack must never restore"
-                    );
-                    active.push(a);
-                }
-                Resume::Busy(_) => {
-                    panic!("worst-case pool reported swap-in busy")
-                }
-                Resume::Recompute(req) => {
-                    match admit(&NoExec, &man, &policy, &cfg, req, &mut pa, &metrics)
-                    {
-                        Ok(a) => {
-                            if a.is_done() {
-                                final_rows.insert(
-                                    a.request_id(),
-                                    lane_rows(&pa, a.slot(), m.n_layers),
-                                );
-                                streams
-                                    .insert(a.request_id(), a.tokens().to_vec());
-                                pa.release(a.slot());
-                            } else {
-                                active.push(a);
-                            }
-                        }
-                        Err(_) => panic!("worst-case pool refused admission"),
-                    }
-                }
-            }
-        }
-        sim_decode_round(&mut pa, &mut active, &prompt_map);
-        // retire before the preemption triggers so a just-finished lane
-        // is never preempted (the real loop's retire pass does the same)
-        let mut j = 0;
-        while j < active.len() {
-            if active[j].is_done() || active[j].tokens().len() >= max_new {
-                let a = active.remove(j);
-                final_rows
-                    .insert(a.request_id(), lane_rows(&pa, a.slot(), m.n_layers));
-                streams.insert(a.request_id(), a.tokens().to_vec());
-                pa.release(a.slot());
-            } else {
-                j += 1;
-            }
-        }
-        // token-progress preemption trigger: fires at the same point in
-        // every stack, once per request
-        let mut j = 0;
-        while j < active.len() {
-            let id = active[j].request_id() as usize;
-            if !preempted_once[id] && active[j].tokens().len() >= preempt_at {
-                preempted_once[id] = true;
-                preempt(&mut active, j, &mut pa, &mut sched, &metrics);
-            } else {
-                j += 1;
-            }
-        }
-    }
-    StackResult {
-        streams,
-        final_rows,
-        policy_calls: policy.calls(),
-        metrics,
-    }
-}
-
 #[test]
 fn swapped_resume_matches_recompute_resume_end_to_end() {
     // The differential oracle of the acceptance criteria: the swap stack
@@ -1435,7 +1073,7 @@ fn preempting_fully_generated_lane_finishes_without_extra_token() {
     // decode until the token budget is spent but the lane has not been
     // retired yet (the window where the old code double-charged)
     while active[0].tokens().len() < max_new {
-        sim_decode_round(&mut pa, &mut active, &prompts);
+        sim_decode_round(&mut pa, &mut active, &prompts, &cfg, &metrics);
     }
     let mut sched: Scheduler<Request> = Scheduler::new(1, AdmitOrder::Fcfs);
     preempt(&mut active, 0, &mut pa, &mut sched, &metrics);
@@ -1462,7 +1100,7 @@ fn end_as_first_resumed_token_finishes_at_admission() {
     let m = sim_meta();
     let man = sim_manifest(64);
     // emit END once the re-prefilled sequence reaches 5 tokens
-    let policy = SimPolicy { calls: AtomicUsize::new(0), end_after: 5 };
+    let policy = SimPolicy::ending_after(5);
     let metrics = Metrics::default();
     let cfg = sim_server_cfg(32, 8);
     let pcfg = PagingConfig {
@@ -1480,7 +1118,7 @@ fn end_as_first_resumed_token_finishes_at_admission() {
         Err(_) => panic!("admit"),
     };
     let mut active = vec![a];
-    sim_decode_round(&mut pa, &mut active, &prompts); // 2 tokens now
+    sim_decode_round(&mut pa, &mut active, &prompts, &cfg, &metrics); // 2 tokens now
     let mut sched: Scheduler<Request> = Scheduler::new(1, AdmitOrder::Fcfs);
     preempt(&mut active, 0, &mut pa, &mut sched, &metrics);
     assert_eq!(metrics.counter(names::SWAP_REFUSED), 1, "swap disabled");
