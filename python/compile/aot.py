@@ -130,6 +130,27 @@ def build(cfg: ModelConfig = TINY, buckets: BucketConfig = BUCKETS,
             {"kind": "prefill_stage2", "n": nt, "layers": L_ - T},
         )
 
+    # --- prefill_stage1_chunk (chunked prefill / continuous batching) -------
+    # One chunk of `cc` tokens against a carried stage-1 KV buffer of
+    # capacity n (which may exceed the biggest monolithic stage1 bucket:
+    # prompts too long for any single bucket chunk instead of rejecting).
+    # Always emitted with the jnp reference kernel — chunked ≡ monolithic
+    # bit-identity is the whole point and is pinned per-bucket by pytest.
+    cc = buckets.chunk_c
+    chunk_max = 1024 if fast else max(buckets.chunk_ns)
+    for n in buckets.chunk_ns:
+        if n > chunk_max or n < cc:
+            continue
+        fn = functools.partial(M.prefill_stage1_chunk, cfg=cfg)
+        em.emit(
+            f"prefill_stage1_chunk_{cc}x{n}", fn,
+            (flat_s, _spec((cc,), I32),
+             _spec((T, n, KV, hd)), _spec((T, n, KV, hd)),
+             _spec((), I32), _spec((), I32), _spec((), I32)),
+            {"kind": "prefill_stage1_chunk", "n": n, "chunk": cc,
+             "layers": T},
+        )
+
     # --- prefill_pyramid (PyramidInfer baseline) ---------------------------
     for n in buckets.pyramid_ns:
         if n > max_n:
@@ -275,6 +296,12 @@ def build(cfg: ModelConfig = TINY, buckets: BucketConfig = BUCKETS,
             "prefill_ns": [x for x in buckets.prefill_ns if x <= max_n],
             "stage1_ns": [x for x in buckets.stage1_ns if x <= max_n],
             "stage2_ns": [x for x in buckets.stage2_ns if x <= max_n],
+            "chunk_c": buckets.chunk_c,
+            "chunk_ns": [
+                x for x in buckets.chunk_ns
+                if x <= (1024 if fast else max(buckets.chunk_ns))
+                and x >= buckets.chunk_c
+            ],
             "pyramid_ns": [x for x in buckets.pyramid_ns if x <= max_n],
             "decode_batches": list(buckets.decode_batches),
             "decode_caps": [

@@ -60,6 +60,13 @@ class BucketConfig:
     stage1_ns: tuple = (256, 512, 1024, 2048)
     # FastKV stage-2 buckets (TSP-selected token count).
     stage2_ns: tuple = (64, 128, 256, 512)
+    # Chunked stage-1 (continuous batching): each
+    # `prefill_stage1_chunk_{c}x{n}` artifact runs `chunk_c` tokens of the
+    # prompt against a carried stage-1 KV buffer of capacity n.  chunk_ns
+    # extends past the biggest stage1_ns bucket on purpose: prompts larger
+    # than any monolithic bucket still admit — they chunk.
+    chunk_c: int = 256
+    chunk_ns: tuple = (512, 1024, 2048, 4096)
     # PyramidInfer buckets (per-layer cosine token schedule baked in).
     pyramid_ns: tuple = (256, 512, 1024)
     # Decode artifacts: (batch, kv cache capacity) pairs. Each pair is

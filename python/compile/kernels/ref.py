@@ -64,6 +64,71 @@ def attention_ref(q, k, v, n_valid, *, window: int):
     return o, win, acc
 
 
+def chunk_attention_ref(q, k, v, pos0, c_valid, n_valid, *, window: int):
+    """Chunked causal GQA prefill attention against a carried KV buffer.
+
+    q        [H, c, hd]    queries of one chunk (global rows
+                           ``[pos0, pos0 + c)`` of the sequence)
+    k, v     [KV, N, hd]   the *full* stage-1 KV buffer: rows
+                           ``[0, pos0 + c_valid)`` hold carried + current
+                           chunk keys, later rows are ignored (masked)
+    pos0     scalar int32  global position of the chunk's first token
+    c_valid  scalar int32  valid (non-padding) tokens in this chunk
+    n_valid  scalar int32  valid tokens in the whole sequence
+    returns  (o [H, c, hd], win [H, N], acc [H, N])
+
+    Bit-identity with ``attention_ref`` is deliberate, not approximate:
+    the key axis keeps the full bucket length ``N`` so every softmax /
+    value reduction has the monolithic shape, and ``win``/``acc`` reduce
+    over a ``[H, N, N]`` probability tensor with the chunk rows placed at
+    their global offsets, so the query-axis reduction tree is the
+    monolithic one with exact zeros elsewhere. ``win`` therefore equals
+    the monolithic ``win`` bitwise on whichever chunk contains the whole
+    observation window (the last chunk, by the rust driver's span rule);
+    ``acc`` is the chunk-partial sum (its consumers only ever read it
+    from ``prefill_full``).
+    """
+    h, c, hd = q.shape
+    kv, n, _ = k.shape
+    groups = h // kv
+    assert h == kv * groups
+
+    k_full = jnp.repeat(k, groups, axis=0)
+    v_full = jnp.repeat(v, groups, axis=0)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, dtype=jnp.float32))
+    scores = jnp.einsum("hqd,hkd->hqk", q, k_full) * scale  # [H, c, N]
+
+    kidx = jnp.arange(n)
+    qpos = pos0 + jnp.arange(c)                            # global rows
+    causal = kidx[None, :] <= qpos[:, None]                # [q, k]
+    key_valid = kidx[None, :] < n_valid                    # [1, k]
+    mask = causal & key_valid
+    scores = jnp.where(mask[None], scores, -1e30)
+
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+
+    q_valid = (jnp.arange(c) < c_valid).astype(jnp.float32)
+    p = p * q_valid[None, :, None]
+
+    o = jnp.einsum("hqk,hkd->hqd", p, v_full)
+
+    # Place the chunk's probability rows at their global offsets so the
+    # win/acc reductions run over the exact monolithic [H, N, N] shape.
+    rows = jnp.arange(n)
+    gidx = jnp.clip(rows - pos0, 0, c - 1)
+    sel = (rows >= pos0) & (rows < pos0 + c_valid)
+    p_full = jnp.where(sel[None, :, None], p[:, gidx, :], 0.0)
+
+    acc = jnp.sum(p_full, axis=1)                          # [H, N]
+    in_window = ((rows >= n_valid - window) & (rows < n_valid)).astype(
+        jnp.float32
+    )
+    win = jnp.einsum("hqk,q->hk", p_full, in_window)       # [H, N]
+    return o, win, acc
+
+
 def maxpool1d_ref(x, kernel: int):
     """Max-pool along the last axis with 'same' padding (paper kernel 7).
 

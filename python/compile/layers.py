@@ -10,7 +10,11 @@ pure-jnp reference (default artifact path) or the L1 Pallas kernel
 import jax.numpy as jnp
 
 from .configs import ModelConfig
-from .kernels.ref import attention_ref, decode_attention_ref
+from .kernels.ref import (
+    attention_ref,
+    chunk_attention_ref,
+    decode_attention_ref,
+)
 from .kernels.attention import attention_pallas
 
 
@@ -70,6 +74,48 @@ def attention_block(x, lp, cfg: ModelConfig, positions, n_valid,
     k_tm = jnp.transpose(k, (1, 0, 2))                    # [N, KV, hd]
     v_tm = jnp.transpose(v, (1, 0, 2))
     return out, k_tm, v_tm, win, acc
+
+
+def chunk_decoder_layer(x, lp, cfg: ModelConfig, positions, k_buf, v_buf,
+                        pos0, c_valid, n_valid):
+    """One decoder layer over a prompt *chunk* against carried stage-1 KV.
+
+    x [c, D] — hidden states of the chunk (global rows
+    ``[pos0, pos0 + c)``); k_buf/v_buf [N, KV, hd] — token-major KV of
+    this layer carried from all earlier chunks (rows ``[0, pos0)``
+    valid).  The chunk's new keys/values are written into the buffer at
+    their global rows in-HLO (same ``jnp.where`` append idiom as
+    ``decode_layer_cached``, which also never writes padding rows), then
+    the chunk queries attend to the whole buffer under the global causal
+    mask — bit-identical to the monolithic ``decoder_layer`` rows.
+
+    Returns (x' [c, D], k_tm/v_tm [c, KV, hd] — the chunk's new KV rows
+    for the host-side buffer, win/acc [H, N]).
+    """
+    h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = qkv_project(h, lp, cfg, positions)
+    k_tm = jnp.transpose(k, (1, 0, 2))                    # [c, KV, hd]
+    v_tm = jnp.transpose(v, (1, 0, 2))
+    c = x.shape[0]
+    n = k_buf.shape[0]
+    rows = jnp.arange(n)
+    sel = ((rows >= pos0) & (rows < pos0 + c_valid))[:, None, None]
+    gidx = jnp.clip(rows - pos0, 0, c - 1)
+    k_buf = jnp.where(sel, k_tm[gidx], k_buf)
+    v_buf = jnp.where(sel, v_tm[gidx], v_buf)
+    o, win, acc = chunk_attention_ref(
+        q,
+        jnp.transpose(k_buf, (1, 0, 2)),                  # [KV, N, hd]
+        jnp.transpose(v_buf, (1, 0, 2)),
+        pos0,
+        c_valid,
+        n_valid,
+        window=cfg.window,
+    )
+    o = jnp.transpose(o, (1, 0, 2)).reshape(c, cfg.n_heads * cfg.head_dim)
+    x = x + o @ lp["wo"]
+    x = mlp_block(x, lp, cfg)
+    return x, k_tm, v_tm, win, acc
 
 
 def mlp_block(x, lp, cfg: ModelConfig):

@@ -7,6 +7,10 @@ shape buckets of ``configs.BucketConfig`` and passes ``n_valid`` masks.
 Entry points (see DESIGN.md artifact table):
   prefill_full    — full-context prefill, all layers.  Baselines + analyses.
   prefill_stage1  — FastKV stage 1: layers [0, T) full-context.
+  prefill_stage1_chunk — chunked stage 1: one chunk of tokens attending to
+                    the carried KV of all earlier chunks (bit-identical to
+                    the same rows of prefill_stage1; enables chunked
+                    prefill interleaved with decode in the serve loop).
   prefill_stage2  — FastKV stage 2: layers [T, L) over TSP-selected hiddens.
   prefill_pyramid — PyramidInfer: per-layer cosine token-count schedule.
   decode_step     — batched single-token decode over compressed caches.
@@ -100,6 +104,53 @@ def prefill_stage1(flat, tokens, n_valid, *, cfg: ModelConfig,
         params, cfg, x, positions, n_valid, 0, cfg.tsp_layer, kernel
     )
     return x, k, v, win, acc
+
+
+def prefill_stage1_chunk(flat, tokens, k_buf, v_buf, pos0, c_valid, n_valid,
+                         *, cfg: ModelConfig):
+    """FastKV stage 1 over one prompt *chunk* with a carried KV prefix.
+
+    tokens [c] i32 — token ids of global rows ``[pos0, pos0 + c)``;
+    k_buf/v_buf [T, N, KV, hd] — token-major stage-1 KV carried from all
+    earlier chunks (rows ``[0, pos0)`` valid, the rest ignored);
+    pos0 / c_valid / n_valid — scalar i32: chunk origin, valid tokens in
+    this chunk, valid tokens in the whole sequence ->
+    (hidden [c, D], k_c [T, c, KV, hd], v_c, win [T, H, N], acc [T, H, N])
+
+    Causality makes this *bit-identical* to the same rows of the
+    monolithic ``prefill_stage1`` (pinned by
+    ``python/tests/test_model.py::TestChunkedStage1``): each chunk row
+    only ever attends to rows at or before it, all of which are either in
+    the carried buffer or in the chunk itself, and every reduction keeps
+    the monolithic shape (key axis ``N``; see ``chunk_attention_ref``).
+    The rust chunked driver (``policies.rs``) copies ``k_c``/``v_c`` back
+    into its host-side buffer after each call and takes ``win`` from the
+    final chunk, whose span is arranged to contain the whole observation
+    window. Chunks use the jnp reference kernel only (the Pallas prefill
+    kernel has no carried-KV variant).
+    """
+    params = unflatten(flat, cfg)
+    c = tokens.shape[0]
+    positions = pos0 + jnp.arange(c, dtype=jnp.int32)
+    x = _embed(params, tokens)
+    ks, vs, wins, accs = [], [], [], []
+    for i in range(cfg.tsp_layer):
+        lp = L.layer_params(params, i)
+        x, k_tm, v_tm, win, acc = L.chunk_decoder_layer(
+            x, lp, cfg, positions, k_buf[i], v_buf[i], pos0, c_valid,
+            n_valid
+        )
+        ks.append(k_tm)
+        vs.append(v_tm)
+        wins.append(win)
+        accs.append(acc)
+    return (
+        x,
+        jnp.stack(ks),       # [T, c, KV, hd]
+        jnp.stack(vs),
+        jnp.stack(wins),     # [T, H, N]
+        jnp.stack(accs),
+    )
 
 
 def prefill_stage2(flat, hidden, positions, nt_valid, *, cfg: ModelConfig,

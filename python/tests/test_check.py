@@ -356,6 +356,61 @@ class TestCargo(CheckTestCase):
         self.assert_fires("cargo", "`serde`")
 
 
+CI_YML = """\
+jobs:
+  rust:
+    steps:
+      - name: Bench summary
+        run: cat BENCH_fixture.json
+      - name: Upload bench summary
+        uses: actions/upload-artifact@v4
+        with:
+          name: BENCH_fixture
+          path: BENCH_fixture.json
+"""
+
+BENCH_RS = """\
+//! Doc-comment mention of BENCH_ghost.json must not count as produced.
+fn main() {
+    std::fs::write("BENCH_fixture.json", &json)
+        .expect("write BENCH_fixture.json");
+}
+"""
+
+
+class TestBenchArtifacts(CheckTestCase):
+    def setUp(self):
+        super().setUp()
+        self.tree.write(".github/workflows/ci.yml", CI_YML)
+        self.tree.write("rust/benches/paging.rs", BENCH_RS)
+
+    def test_clean_fixture_passes(self):
+        self.assert_clean("bench_artifacts")
+
+    def test_ci_consuming_unwritten_artifact_fires(self):
+        # the bench renames its output; CI still cats the old name
+        self.tree.write(
+            "rust/benches/paging.rs",
+            BENCH_RS.replace("BENCH_fixture.json", "BENCH_renamed.json"),
+        )
+        self.assert_fires("bench_artifacts", "`BENCH_fixture.json`")
+
+    def test_unsurfaced_bench_artifact_fires(self):
+        self.tree.write(
+            "rust/benches/paging.rs",
+            BENCH_RS + 'fn extra() { std::fs::write("BENCH_new.json", x); }\n',
+        )
+        self.assert_fires("bench_artifacts", "`BENCH_new.json`")
+
+    def test_ondemand_src_emitter_exempt(self):
+        # rust/src emitters (eval subcommand) are on-demand, not CI lanes
+        self.tree.write(
+            "rust/src/main.rs",
+            'fn main() { std::fs::write("BENCH_eval.json", x); }\n',
+        )
+        self.assert_clean("bench_artifacts")
+
+
 class TestLinks(CheckTestCase):
     def test_broken_relative_link_fires(self):
         self.tree.write("README.md", "see [missing](docs/nope.md)\n")

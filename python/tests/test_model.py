@@ -90,6 +90,73 @@ class TestStageEquivalence:
         np.testing.assert_allclose(win[:t], w1, rtol=1e-4, atol=1e-4)
         np.testing.assert_allclose(acc[t:], a2, rtol=1e-4, atol=1e-4)
 
+    def test_chunked_stage1_bit_identical(self, flat):
+        """Chunked stage 1 ≡ monolithic stage 1, *bitwise* (the chunked
+        prefill tentpole pin).
+
+        Drives ``prefill_stage1_chunk`` exactly the way the rust chunked
+        driver does — spans from the same rule as ``policies::chunk_spans``
+        (every non-final chunk completely full, final chunk covering the
+        whole observation window), chunk K/V copied back into a host-side
+        buffer, win taken from the final chunk — and demands exact
+        equality on hidden states, stage-1 KV, and window scores.
+        """
+
+        def spans(n, chunk, window):
+            out, pos = [], 0
+            while pos < n:
+                remaining = n - pos
+                if remaining <= chunk:
+                    ln = remaining
+                elif remaining - chunk < window:
+                    ln = remaining - window
+                else:
+                    ln = chunk
+                out.append((pos, ln))
+                pos += ln
+            return out
+
+        rng = np.random.default_rng(21)
+        n_bucket = 64
+        t = CFG.tsp_layer
+        kv, hd, w = CFG.n_kv_heads, CFG.head_dim, CFG.window
+        for n_valid, chunk in [(64, 16), (64, 24), (50, 16), (33, 64)]:
+            toks = np.zeros(n_bucket, np.int32)
+            toks[:n_valid] = np.asarray(_toks(rng, n_valid))
+            toks_j = jnp.asarray(toks)
+            hid, k1, v1, w1, _ = M.prefill_stage1(
+                flat, toks_j, jnp.int32(n_valid), cfg=CFG
+            )
+            kbuf = np.zeros((t, n_bucket, kv, hd), np.float32)
+            vbuf = np.zeros_like(kbuf)
+            hbuf = np.zeros((n_bucket, CFG.d_model), np.float32)
+            win_last = None
+            for start, ln in spans(n_valid, chunk, w):
+                ctoks = np.zeros(chunk, np.int32)
+                ctoks[:ln] = toks[start:start + ln]
+                ch, kc, vc, cw, _ = M.prefill_stage1_chunk(
+                    flat, jnp.asarray(ctoks), jnp.asarray(kbuf),
+                    jnp.asarray(vbuf), jnp.int32(start), jnp.int32(ln),
+                    jnp.int32(n_valid), cfg=CFG
+                )
+                hbuf[start:start + ln] = np.asarray(ch)[:ln]
+                kbuf[:, start:start + ln] = np.asarray(kc)[:, :ln]
+                vbuf[:, start:start + ln] = np.asarray(vc)[:, :ln]
+                win_last = np.asarray(cw)
+            msg = f"n_valid={n_valid} chunk={chunk}"
+            np.testing.assert_array_equal(
+                np.asarray(hid)[:n_valid], hbuf[:n_valid], err_msg=msg
+            )
+            np.testing.assert_array_equal(
+                np.asarray(k1)[:, :n_valid], kbuf[:, :n_valid], err_msg=msg
+            )
+            np.testing.assert_array_equal(
+                np.asarray(v1)[:, :n_valid], vbuf[:, :n_valid], err_msg=msg
+            )
+            np.testing.assert_array_equal(
+                np.asarray(w1), win_last, err_msg=msg
+            )
+
     def test_padding_invariance(self, flat):
         """A prompt padded into a larger bucket produces the same logits."""
         rng = np.random.default_rng(3)

@@ -10,12 +10,16 @@
 //! summaries so CI captures the trajectories; the sharded-slab,
 //! quantization, and decode-budget long-generation scenarios likewise
 //! emit `BENCH_paging_shard.json` / `BENCH_paging_quant.json` /
-//! `BENCH_paging_decode.json`.
+//! `BENCH_paging_decode.json`, and the chunked-prefill interleaving
+//! scenario (one long admission over active decode lanes, blocking vs
+//! chunked) emits `BENCH_serve_chunked.json`.
 //!
 //! Run: cargo bench --bench paging   (FASTKV_BENCH_QUICK=1 for a smoke pass)
 
 #[path = "bench_util.rs"]
 mod bench_util;
+#[path = "../tests/common/sim.rs"]
+mod sim;
 
 use bench_util::bench;
 use fastkv::coordinator::kvcache::{BatchArena, RequestCache};
@@ -153,6 +157,8 @@ fn main() {
         prefill_budget: 0,
         decode_budget: 0,
         decode_window: m.window,
+        prefill_chunk: 0,
+        prefill_decode_ratio: 1,
     };
     bench("compact to 50% (policy keep-sets)", 1, 20, || {
         let mut pa = PagedArena::new(&m, 1, cap, cfg.clone());
@@ -757,6 +763,8 @@ fn main() {
         prefill_budget: 0,
         decode_budget: 32,
         decode_window: m.window,
+        prefill_chunk: 0,
+        prefill_decode_ratio: 1,
     }
     .decode_budget_spec()
     .expect("decode budget configured");
@@ -933,4 +941,147 @@ fn main() {
     std::fs::write("BENCH_paging_decode.json", &json)
         .expect("write BENCH_paging_decode.json");
     println!("\nwrote BENCH_paging_decode.json:\n{json}");
+
+    // --------------------------------------------------------------------
+    // Chunked prefill vs monolithic stall: 4 lanes decode while one long
+    // admission prefills. Monolithic, the blocking policy prefill freezes
+    // every decode lane for the whole prompt; chunked, one chunk runs per
+    // loop slot with a decode round interleaved after each, so the worst
+    // inter-token gap any lane sees is ~one chunk. The sim policy charges
+    // a fixed per-token sleep, standing in for device prefill compute at
+    // sim scale (the shape mirrors a 64k admission over 4 decode lanes,
+    // scaled to the harness's 2-layer model).
+    println!("\n=== chunked prefill: decode-lane interleaving ===");
+    let long_len = 48usize;
+    let chunk_tokens = 4usize;
+    let cost_ns: u64 =
+        if bench_util::quick() { 100_000 } else { 400_000 };
+    let (mono_gap_ms, _) = serve_gap_run(0, cost_ns, long_len);
+    let (chunked_gap_ms, chunks) =
+        serve_gap_run(chunk_tokens, cost_ns, long_len);
+    println!(
+        "{:44} {mono_gap_ms:10.3} ms max inter-token gap",
+        format!("monolithic admission ({long_len} tok prefill)")
+    );
+    println!(
+        "{:44} {chunked_gap_ms:10.3} ms max inter-token gap ({chunks} chunks)",
+        format!("chunked admission ({chunk_tokens}-tok chunks)")
+    );
+    assert!(
+        chunked_gap_ms < mono_gap_ms,
+        "chunked interleaving must bound the decode stall \
+         ({chunked_gap_ms:.3} ms vs {mono_gap_ms:.3} ms)"
+    );
+    let json = format!(
+        "{{\n  \"long_prompt_tokens\": {long_len},\n  \
+         \"decode_lanes\": 4,\n  \"chunk_tokens\": {chunk_tokens},\n  \
+         \"chunks\": {chunks},\n  \"cost_ns_per_token\": {cost_ns},\n  \
+         \"max_gap_ms_monolithic\": {mono_gap_ms:.4},\n  \
+         \"max_gap_ms_chunked\": {chunked_gap_ms:.4},\n  \
+         \"gap_reduction\": {:.3}\n}}\n",
+        mono_gap_ms / chunked_gap_ms.max(1e-9),
+    );
+    std::fs::write("BENCH_serve_chunked.json", &json)
+        .expect("write BENCH_serve_chunked.json");
+    println!("\nwrote BENCH_serve_chunked.json:\n{json}");
+}
+
+/// One serve-shaped interleaving run for `BENCH_serve_chunked.json`:
+/// 4 lanes decode while one `long_len`-token admission prefills —
+/// blocking when `chunk == 0`, chunked otherwise. Every decode round is
+/// timestamped; the max gap between consecutive rounds is the stall the
+/// admission imposed on the active lanes. Returns (max gap ms, chunks).
+fn serve_gap_run(
+    chunk: usize,
+    cost_ns: u64,
+    long_len: usize,
+) -> (f64, usize) {
+    use fastkv::coordinator::policies::Policy;
+    use fastkv::coordinator::server::{admit, Request};
+    use std::collections::HashMap;
+    use std::time::Instant;
+
+    let m = sim::sim_meta();
+    let man = sim::sim_manifest(64);
+    let mut cfg = sim::sim_server_cfg(64, 1_000);
+    cfg.policy_cfg.prefill_chunk = chunk;
+    cfg.policy_cfg.prefill_decode_ratio = 1;
+    let policy = sim::SimPolicy::with_cost(cost_ns);
+    let metrics = fastkv::metrics::Metrics::default();
+    let pcfg = PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes: 0,
+        ..PagingConfig::default()
+    };
+    let lanes = 4usize;
+    let mut pa = PagedArena::new(&m, lanes + 1, 128, pcfg);
+    let mut prompts: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut rxs = Vec::new(); // kept alive; the bench never replies
+    let mut active = Vec::new();
+    for i in 0..lanes as u64 {
+        let p: Vec<i32> = (0..6).map(|j| 10 + i as i32 + j).collect();
+        let (req, rx) = Request::synthetic(i, p.clone(), 1_000);
+        rxs.push(rx);
+        prompts.insert(i, p);
+        match admit(&sim::NoExec, &man, &policy, &cfg, req, &mut pa, &metrics)
+        {
+            Ok(a) => active.push(a),
+            Err(_) => unreachable!("roomy pool refused a decode lane"),
+        }
+    }
+    let long: Vec<i32> =
+        (0..long_len as i32).map(|t| 4 + (t % 200)).collect();
+    let (mut req, rx) = Request::synthetic(99, long.clone(), 1_000);
+    rxs.push(rx);
+    prompts.insert(99, long.clone());
+    let mut ticks: Vec<Instant> = Vec::new();
+    let mut chunks_run = 0usize;
+    sim::sim_decode_round(&mut pa, &mut active, &prompts, &cfg, &metrics);
+    ticks.push(Instant::now());
+    if chunk == 0 {
+        // Blocking monolithic admission: every decode lane stalls for
+        // the whole prefill.
+        match admit(&sim::NoExec, &man, &policy, &cfg, req, &mut pa, &metrics)
+        {
+            Ok(a) => active.push(a),
+            Err(_) => unreachable!("roomy pool refused the long admission"),
+        }
+    } else {
+        let mut ch = policy
+            .begin_chunked(&man, &long, &cfg.policy_cfg)
+            .expect("chunk knob on")
+            .expect("sim begin_chunked never refuses");
+        let mut secs = 0.0f64;
+        while ch.chunks_done() < ch.total_chunks() {
+            let t0 = Instant::now();
+            ch.step(&sim::NoExec, &man).unwrap();
+            secs += t0.elapsed().as_secs_f64();
+            chunks_run += 1;
+            sim::sim_decode_round(
+                &mut pa,
+                &mut active,
+                &prompts,
+                &cfg,
+                &metrics,
+            );
+            ticks.push(Instant::now());
+        }
+        let outcome = ch.finish(&sim::NoExec, &man).unwrap();
+        req.carry_prefill(outcome, secs);
+        match admit(&sim::NoExec, &man, &policy, &cfg, req, &mut pa, &metrics)
+        {
+            Ok(a) => active.push(a),
+            Err(_) => unreachable!("roomy pool refused the carried prefill"),
+        }
+    }
+    for _ in 0..2 {
+        sim::sim_decode_round(&mut pa, &mut active, &prompts, &cfg, &metrics);
+        ticks.push(Instant::now());
+    }
+    let max_gap_ms = ticks
+        .windows(2)
+        .map(|w| w[1].duration_since(w[0]).as_secs_f64() * 1e3)
+        .fold(0.0, f64::max);
+    (max_gap_ms, chunks_run)
 }

@@ -20,6 +20,8 @@ use std::collections::VecDeque;
 pub enum Action {
     /// Run the prefill for the queued request at this queue index.
     Prefill,
+    /// Run the next chunk of the in-flight chunked prefill.
+    PrefillChunk,
     /// Run one batched decode step over the active set.
     DecodeStep,
     /// Nothing to do; block for new work.
@@ -127,6 +129,43 @@ impl<T> Scheduler<T> {
             Action::DecodeStep
         } else {
             Action::Idle
+        }
+    }
+
+    /// Post-pop, chunk-aware action decision for the serving loop's
+    /// admission sweep.
+    ///
+    /// The sweep *pops* the winning request before deciding the action,
+    /// so `queue_len` has already shrunk by the time any decision runs —
+    /// [`Scheduler::next_action_mem`] re-reading it would see the stale
+    /// post-pop count and could return `Idle`/`DecodeStep` with the
+    /// popped request still in hand (dropping it on the floor when the
+    /// pop emptied the queue). This variant takes the sweep's own
+    /// verdict instead: `popped` — whether a request was actually popped
+    /// this iteration — is the post-pop truth, and `Prefill` is returned
+    /// exactly when there is a popped request to act on.
+    ///
+    /// `chunk_credit` is `Some(decode_credit)` while a chunked prefill
+    /// is in flight: the loop owes its active lanes `decode_credit`
+    /// decode rounds before the next chunk (continuous batching
+    /// interleave); credit exhausted (or no active lanes to serve) runs
+    /// the chunk. A popped request still takes priority — swap-resumes
+    /// and deferred admissions stay cheap and must not starve behind a
+    /// long chunked admission.
+    pub fn next_action_chunked(
+        &self,
+        active: usize,
+        popped: bool,
+        chunk_credit: Option<usize>,
+    ) -> Action {
+        if popped {
+            return Action::Prefill;
+        }
+        match chunk_credit {
+            Some(credit) if credit > 0 && active > 0 => Action::DecodeStep,
+            Some(_) => Action::PrefillChunk,
+            None if active > 0 => Action::DecodeStep,
+            None => Action::Idle,
         }
     }
 
@@ -365,6 +404,54 @@ mod tests {
         }
         let s: Scheduler<usize> = Scheduler::new(4, AdmitOrder::Fcfs);
         assert!(s.peek_next(|&x| x).is_none());
+    }
+
+    #[test]
+    fn post_pop_action_never_drops_the_popped_request() {
+        // Regression: the admission sweep pops the winning request
+        // BEFORE the action decision runs. With the last queued request
+        // popped, queue_len() reads 0 — next_action_mem on that stale
+        // count would return Idle and the popped request would be
+        // dropped on the floor. next_action_chunked takes the sweep's
+        // post-pop verdict instead.
+        let mut s: Scheduler<usize> = Scheduler::new(2, AdmitOrder::Fcfs);
+        s.enqueue(7);
+        let popped = s.pop_admissible(|&x| x, |_| true);
+        assert!(popped.is_some());
+        assert_eq!(s.queue_len(), 0);
+        // the stale-read hazard next_action_mem exposes:
+        assert_eq!(s.next_action_mem(0, true), Action::Idle);
+        // the post-pop decision acts on the popped request:
+        assert_eq!(s.next_action_chunked(0, true, None), Action::Prefill);
+        // ... and with nothing popped, falls back to decode/idle
+        assert_eq!(s.next_action_chunked(1, false, None), Action::DecodeStep);
+        assert_eq!(s.next_action_chunked(0, false, None), Action::Idle);
+    }
+
+    #[test]
+    fn chunked_action_alternates_decode_and_chunks() {
+        let s: Scheduler<usize> = Scheduler::new(2, AdmitOrder::Fcfs);
+        // credit owed and lanes active: decode round first
+        assert_eq!(
+            s.next_action_chunked(3, false, Some(2)),
+            Action::DecodeStep
+        );
+        // credit spent: run the next chunk
+        assert_eq!(
+            s.next_action_chunked(3, false, Some(0)),
+            Action::PrefillChunk
+        );
+        // no active lanes: credit is moot, chunk immediately
+        assert_eq!(
+            s.next_action_chunked(0, false, Some(5)),
+            Action::PrefillChunk
+        );
+        // a popped request (swap-resume / deferred admission) still
+        // outranks the in-flight chunked prefill
+        assert_eq!(
+            s.next_action_chunked(3, true, Some(0)),
+            Action::Prefill
+        );
     }
 
     #[test]

@@ -31,6 +31,15 @@
 //!    `prompt ++ generated-so-far` (recompute-resume, which re-pays the
 //!    prefill FastKV eliminated and may re-select different KV). The
 //!    full pressure ladder is: compact → swap → recompute → reject.
+//!  * **chunked prefill + continuous batching** — with
+//!    `--prefill-chunk N`, chunk-capable policies (fastkv, gemfilter)
+//!    run stage-1 prefill in TSP-boundary-aware chunks
+//!    (`Policy::begin_chunked`), one chunk per loop iteration with
+//!    `--prefill-decode-ratio` decode rounds interleaved between chunks,
+//!    so a long admission never stalls active decode lanes. The chunking
+//!    lane parks between chunks under preemption and resumes from the
+//!    completed-chunk boundary with zero recomputed chunks; the TSP +
+//!    stage-2 tail runs exactly once, after the final chunk.
 //!
 //! Decode steps go through the shared [`DecodeBatch`] planner:
 //! KV-head-sharded block tables (`decode_paged_shard_{B}x{C}s{S}`,
@@ -70,7 +79,7 @@ use crate::coordinator::paging::{
     KvStore, PagedArena, PagingConfig, SwapHandle, SwapIn, TenantId,
 };
 use crate::coordinator::policies::{
-    make_policy, Exec, Policy, PolicyCfg, PrefillOutcome,
+    make_policy, ChunkedPrefill, Exec, Policy, PolicyCfg, PrefillOutcome,
 };
 use crate::coordinator::scheduler::{
     pick_preemption_victim, Action, AdmitOrder, Scheduler,
@@ -135,6 +144,18 @@ pub struct Request {
     /// Set once a policy prefill has run for this request; any further
     /// prefill is paid-for work re-done (`names::PREFILL_RECOMPUTED`).
     prefilled: bool,
+    /// Chunked-prefill state parked with a preempted request: the driver
+    /// resumes from the completed-chunk boundary, so zero chunks (and
+    /// zero policy prefills) are re-run.
+    chunking: Option<ChunkCarry>,
+}
+
+/// A parked chunked prefill riding the resume queue with its request.
+#[derive(Debug)]
+struct ChunkCarry {
+    ch: Box<dyn ChunkedPrefill>,
+    /// Chunk wall time accumulated before the park.
+    prefill_secs: f64,
 }
 
 /// Decode cursor riding with a swapped-out request on the resume queue.
@@ -187,6 +208,7 @@ impl Request {
                 swap: None,
                 pending: None,
                 prefilled: false,
+                chunking: None,
             },
             rx,
         )
@@ -200,6 +222,51 @@ impl Request {
     /// The swap ticket riding with this request, if it was swapped out.
     pub fn swap_resume(&self) -> Option<&SwapResume> {
         self.swap.as_ref()
+    }
+
+    /// Attach a completed prefill outcome so the next [`admit`] is
+    /// store-only — the policy prefill will not re-run. Used by the
+    /// chunked-prefill finish path and the sim harness; the deferral
+    /// carry uses the same slot internally.
+    pub fn carry_prefill(
+        &mut self,
+        outcome: PrefillOutcome,
+        prefill_secs: f64,
+    ) {
+        self.prefilled = true;
+        self.pending = Some(PendingPrefill { outcome, prefill_secs });
+    }
+
+    /// Park chunked-prefill state with this request (preempt between
+    /// chunks). [`Request::resume_chunking`] takes it back; the driver
+    /// continues from the completed-chunk boundary with zero chunks
+    /// re-run.
+    pub fn park_chunking(
+        &mut self,
+        ch: Box<dyn ChunkedPrefill>,
+        prefill_secs: f64,
+    ) {
+        self.prefilled = true;
+        self.chunking = Some(ChunkCarry { ch, prefill_secs });
+    }
+
+    /// Take back a parked chunked prefill: `(driver, accumulated chunk
+    /// wall time)`.
+    pub fn resume_chunking(
+        &mut self,
+    ) -> Option<(Box<dyn ChunkedPrefill>, f64)> {
+        self.chunking.take().map(|c| (c.ch, c.prefill_secs))
+    }
+
+    /// Whether chunked-prefill state is parked with this request.
+    pub fn is_chunking(&self) -> bool {
+        self.chunking.is_some()
+    }
+
+    /// Whether a completed prefill outcome rides with this request
+    /// (deferred admission or a finished chunked prefill).
+    pub fn has_carried_prefill(&self) -> bool {
+        self.pending.is_some()
     }
 }
 
@@ -300,6 +367,7 @@ impl ServerHandle {
                 swap: None,
                 pending: None,
                 prefilled: false,
+                chunking: None,
             }))
             .map_err(|_| anyhow::anyhow!("server thread gone"))?;
         Ok(rx)
@@ -476,16 +544,28 @@ pub fn reject(
 /// recompute re-prefills `prompt ++ generated`, so a request may only be
 /// preempted while that combined length still fits — otherwise it could
 /// never be re-admitted.
-fn prefill_len_limit(man: &Manifest, policy: &str, use_pallas: bool) -> usize {
+fn prefill_len_limit(man: &Manifest, policy: &str, cfg: &PolicyCfg) -> usize {
     let max = |v: &[usize]| v.iter().copied().max().unwrap_or(0);
     match policy {
-        "fastkv" | "gemfilter" => max(&man.buckets.stage1_ns),
+        "fastkv" | "gemfilter" => {
+            let mono = max(&man.buckets.stage1_ns);
+            // Chunk-capable policies with chunking on admit up to the
+            // largest carried-KV chunk bucket — deliberately past the
+            // biggest monolithic stage-1 bucket, so prompts too long for
+            // any single bucket chunk instead of rejecting (and their
+            // recompute-resume chunks again).
+            if cfg.prefill_chunk > 0 && man.buckets.chunk_c > 0 {
+                mono.max(max(&man.buckets.chunk_ns))
+            } else {
+                mono
+            }
+        }
         "pyramid_infer" => max(&man.buckets.pyramid_ns),
         _ => {
             // run_prefill_full can also take the Pallas artifact, whose
             // bucket may exceed the jnp prefill buckets.
             let lim = max(&man.buckets.prefill_ns);
-            if use_pallas {
+            if cfg.use_pallas {
                 lim.max(man.buckets.pallas_n)
             } else {
                 lim
@@ -666,6 +746,22 @@ fn export_obs(obs: &ObsConfig, metrics: &Metrics, is_final: bool) {
     }
 }
 
+/// The serve loop's single in-flight chunked prefill. The request is
+/// held out of both the queue and the active set while its stage-1
+/// chunks run one per loop iteration, interleaved with decode rounds.
+/// `decode_credit` is the number of decode rounds still owed to the
+/// active lanes before the next chunk may run (refilled to
+/// `PolicyCfg::prefill_decode_ratio` after every chunk — see
+/// `Scheduler::next_action_chunked`).
+struct PrefillInProgress {
+    req: Request,
+    ch: Box<dyn ChunkedPrefill>,
+    /// Chunk wall time accumulated so far; becomes the request's
+    /// `prefill_secs` once the tail finishes.
+    prefill_secs: f64,
+    decode_credit: usize,
+}
+
 fn serve_inner(
     cfg: &ServerConfig,
     rt: &Runtime,
@@ -738,11 +834,23 @@ fn serve_inner(
     let mut admission_paused = false;
     // Serve-loop iteration counter, for the periodic metrics export.
     let mut iter: usize = 0;
+    // At most one chunked prefill is in flight at a time; its request
+    // lives here, outside both the queue and the active set.
+    let mut chunking: Option<PrefillInProgress> = None;
 
-    while !(shutdown && sched.queue_len() == 0 && active.is_empty()) {
-        // Drain incoming messages (non-blocking if we have work).
+    while !(shutdown
+        && sched.queue_len() == 0
+        && active.is_empty()
+        && chunking.is_none())
+    {
+        // Drain incoming messages (non-blocking if we have work — an
+        // in-flight chunked prefill counts as work and must never park
+        // the loop on a blocking recv).
         loop {
-            let msg = if active.is_empty() && sched.queue_len() == 0 {
+            let msg = if active.is_empty()
+                && sched.queue_len() == 0
+                && chunking.is_none()
+            {
                 if shutdown {
                     break;
                 }
@@ -775,7 +883,11 @@ fn serve_inner(
                 Msg::Shutdown => shutdown = true,
             }
         }
-        if shutdown && sched.queue_len() == 0 && active.is_empty() {
+        if shutdown
+            && sched.queue_len() == 0
+            && active.is_empty()
+            && chunking.is_none()
+        {
             break;
         }
 
@@ -797,9 +909,28 @@ fn serve_inner(
         } else if active.len() >= sched.max_active {
             false
         } else {
+            let chunk_busy = chunking.is_some();
             admissible = sched.pop_admissible(
                 |r| r.prompt.len(),
                 |r| {
+                    // A parked chunked prefill resumes into the (single)
+                    // chunking lane: it needs that lane free and claims
+                    // no pool blocks until its tail finishes, so the
+                    // memory gate below does not apply.
+                    if r.is_chunking() {
+                        return !chunk_busy;
+                    }
+                    // While a chunked prefill is in flight, only
+                    // non-prefill admissions may pop (swap restores and
+                    // carried/deferred prefills); a fresh blocking
+                    // prefill would stall the very decode lanes the
+                    // chunking exists to keep fed.
+                    if chunk_busy
+                        && r.swap_resume().is_none()
+                        && !r.has_carried_prefill()
+                    {
+                        return false;
+                    }
                     let ok = admit_gate(cfg, &man, store.as_ref(), r);
                     // Trace quota-blocked deferrals only (a gate miss on
                     // raw pool pressure is the common case under load and
@@ -824,16 +955,24 @@ fn serve_inner(
             admissible.is_some()
         };
 
-        // A popped request means exactly next_action_mem's Prefill
-        // conditions held (slot free, queue non-empty, gate passed);
-        // force Prefill so it is never dropped on the floor — the pop
-        // already shrank `queue_len`, which next_action_mem would
-        // otherwise re-read.
-        let action = if admissible.is_some() {
-            Action::Prefill
-        } else {
-            sched.next_action_mem(active.len(), admit_ok)
-        };
+        // The sweep pops the winning request *before* the action is
+        // chosen, so `queue_len` has already shrunk — the action must be
+        // decided from the sweep's own verdict, never from a re-read of
+        // the post-pop queue state (pinned by scheduler.rs's
+        // `post_pop_action_never_drops_the_popped_request`). A popped
+        // request always outranks an in-flight chunk: swap restores and
+        // deferred admissions must not starve behind a long admission.
+        let action = sched.next_action_chunked(
+            active.len(),
+            admissible.is_some(),
+            chunking.as_ref().map(|p| p.decode_credit),
+        );
+        // A decode round granted on chunk credit spends one credit.
+        if action == Action::DecodeStep {
+            if let Some(pip) = chunking.as_mut() {
+                pip.decode_credit = pip.decode_credit.saturating_sub(1);
+            }
+        }
         match action {
             Action::Prefill => {
                 let req = admissible
@@ -874,7 +1013,102 @@ fn serve_inner(
                     }
                     Resume::Recompute(req) => Some(req),
                 };
+                // Chunk-capable requests divert into the chunking lane
+                // instead of the blocking admit below; everything else
+                // falls through unchanged.
+                let req = match req {
+                    Some(mut req) => {
+                        if let Some((ch, secs)) = req.resume_chunking() {
+                            // Parked mid-chunking: resume from the
+                            // completed-chunk boundary. Zero chunks are
+                            // re-run, so this recompute-mode resume
+                            // deliberately does NOT count
+                            // PREFILL_RECOMPUTED (pinned by the
+                            // chunked-serve suite).
+                            let tracer = metrics.tracer();
+                            tracer.record(
+                                req.id,
+                                req.tenant,
+                                NO_LANE,
+                                EventKind::Resume {
+                                    mode: ResumeMode::Recompute,
+                                },
+                            );
+                            tracer.record(
+                                req.id,
+                                req.tenant,
+                                NO_LANE,
+                                EventKind::PrefillStart {
+                                    tokens: (req.prompt.len()
+                                        + req.resumed.len())
+                                        as u32,
+                                },
+                            );
+                            chunking = Some(PrefillInProgress {
+                                req,
+                                ch,
+                                prefill_secs: secs,
+                                decode_credit: 0,
+                            });
+                            None
+                        } else if chunking.is_none()
+                            && !req.has_carried_prefill()
+                        {
+                            // Fresh (or recompute-resume) prefill: let a
+                            // chunk-capable policy take it incrementally.
+                            let full_prompt: Vec<i32> =
+                                if req.resumed.is_empty() {
+                                    req.prompt.clone()
+                                } else {
+                                    let mut p = req.prompt.clone();
+                                    p.extend_from_slice(&req.resumed);
+                                    p
+                                };
+                            match policy.begin_chunked(
+                                &man,
+                                &full_prompt,
+                                &cfg.policy_cfg,
+                            ) {
+                                Some(Ok(ch)) => {
+                                    note_prefill_start(
+                                        &mut req,
+                                        metrics,
+                                        full_prompt.len(),
+                                    );
+                                    chunking = Some(PrefillInProgress {
+                                        req,
+                                        ch,
+                                        prefill_secs: 0.0,
+                                        decode_credit: 0,
+                                    });
+                                    None
+                                }
+                                Some(Err(e)) => {
+                                    reject(
+                                        req,
+                                        store.as_mut(),
+                                        metrics,
+                                        format!("{e:#}"),
+                                    );
+                                    None
+                                }
+                                None => Some(req),
+                            }
+                        } else {
+                            Some(req)
+                        }
+                    }
+                    None => None,
+                };
                 if let Some(req) = req {
+                    // A blocking monolithic prefill while lanes are
+                    // decoding is exactly the stall chunked prefill
+                    // exists to eliminate (deferred admissions carry
+                    // their finished prefill and cost only the
+                    // store.admit retry, so they don't count).
+                    if !req.has_carried_prefill() && !active.is_empty() {
+                        metrics.inc(names::DECODE_STALL_STEPS, 1);
+                    }
                     match admit(
                         rt,
                         &man,
@@ -934,6 +1168,79 @@ fn serve_inner(
                             );
                         }
                     }
+                }
+            }
+            Action::PrefillChunk => {
+                let mut pip = chunking
+                    .take()
+                    .expect("PrefillChunk chosen only with a chunking lane");
+                let idx = pip.ch.chunks_done() as u32;
+                let t0 = Instant::now();
+                match pip.ch.step(rt, &man) {
+                    Ok(tokens) => {
+                        let secs = t0.elapsed().as_secs_f64();
+                        pip.prefill_secs += secs;
+                        metrics.observe(names::PREFILL_CHUNK_SECS, secs);
+                        metrics.inc(names::PREFILL_CHUNKS_TOTAL, 1);
+                        metrics.tracer().record(
+                            pip.req.id,
+                            pip.req.tenant,
+                            NO_LANE,
+                            EventKind::PrefillChunk {
+                                index: idx,
+                                tokens: tokens as u32,
+                            },
+                        );
+                        if pip.ch.chunks_done() == pip.ch.total_chunks() {
+                            // Last chunk done: run the tail (TSP
+                            // selection, stage 2, compression — exactly
+                            // once) and hand the outcome back to the
+                            // queue as a carried prefill, so the very
+                            // next sweep admits it through the deferred-
+                            // admission path (store.admit only).
+                            let t1 = Instant::now();
+                            match pip.ch.finish(rt, &man) {
+                                Ok(outcome) => {
+                                    let total = pip.prefill_secs
+                                        + t1.elapsed().as_secs_f64();
+                                    metrics
+                                        .observe(names::PREFILL_SECS, total);
+                                    metrics.tracer().record(
+                                        pip.req.id,
+                                        pip.req.tenant,
+                                        NO_LANE,
+                                        EventKind::PrefillEnd {
+                                            kept_rows: outcome
+                                                .cache
+                                                .max_len()
+                                                as u32,
+                                        },
+                                    );
+                                    let mut req = pip.req;
+                                    req.carry_prefill(outcome, total);
+                                    sched.requeue_front(req);
+                                }
+                                Err(e) => reject(
+                                    pip.req,
+                                    store.as_mut(),
+                                    metrics,
+                                    format!("{e:#}"),
+                                ),
+                            }
+                        } else {
+                            // More chunks to go: owe the active lanes
+                            // their decode rounds before the next one.
+                            pip.decode_credit =
+                                cfg.policy_cfg.prefill_decode_ratio;
+                            chunking = Some(pip);
+                        }
+                    }
+                    Err(e) => reject(
+                        pip.req,
+                        store.as_mut(),
+                        metrics,
+                        format!("{e:#}"),
+                    ),
                 }
             }
             Action::DecodeStep => {
@@ -1066,6 +1373,46 @@ pub fn resume_admit_state(
     (tokens, done)
 }
 
+/// Pre-prefill bookkeeping shared by the blocking [`admit`] path and the
+/// chunked begin in the serve loop: recompute-resume accounting when
+/// this prefill re-does paid-for work (or the first queue-wait
+/// observation when it doesn't), then the PrefillStart event. Marks the
+/// request prefilled so a later preemption knows its prefill is sunk
+/// cost. A chunk-boundary resume does NOT come through here — it re-runs
+/// zero chunks, so it is not a recompute.
+fn note_prefill_start(req: &mut Request, metrics: &Metrics, tokens: usize) {
+    let tracer = metrics.tracer();
+    if req.prefilled {
+        // Recompute-resume (or a deferral that lost its carried
+        // prefill — which the carry exists to prevent): this prefill is
+        // paid-for work being re-done. Every recompute path funnels
+        // through here (dropped handle, refused swap, busy fallback),
+        // so the resume event and its incident are recorded here.
+        metrics.inc(names::PREFILL_RECOMPUTED, 1);
+        tracer.record(
+            req.id,
+            req.tenant,
+            NO_LANE,
+            EventKind::Resume { mode: ResumeMode::Recompute },
+        );
+        tracer.incident(IncidentKind::RecomputeResume, req.id, req.tenant);
+    } else {
+        // First prefill for this request: everything since submission
+        // was queue wait.
+        metrics.observe(
+            names::QUEUE_WAIT_SECS,
+            req.submitted.elapsed().as_secs_f64(),
+        );
+    }
+    tracer.record(
+        req.id,
+        req.tenant,
+        NO_LANE,
+        EventKind::PrefillStart { tokens: tokens as u32 },
+    );
+    req.prefilled = true;
+}
+
 /// Prefill (or reuse a carried prefill) and load the request's cache
 /// into the store. Public so tests can drive the real admission path
 /// with a stub policy and no PJRT runtime.
@@ -1090,33 +1437,6 @@ pub fn admit(
         // `store.admit` below is retried.
         Some(p) => (p.outcome, p.prefill_secs),
         None => {
-            if req.prefilled {
-                // Recompute-resume (or a deferral that lost its carried
-                // prefill — which the carry exists to prevent): this
-                // prefill is paid-for work being re-done. This is the one
-                // place every recompute path funnels through (dropped
-                // handle, refused swap, busy fallback), so the resume
-                // event and its incident are recorded here.
-                metrics.inc(names::PREFILL_RECOMPUTED, 1);
-                tracer.record(
-                    req.id,
-                    req.tenant,
-                    NO_LANE,
-                    EventKind::Resume { mode: ResumeMode::Recompute },
-                );
-                tracer.incident(
-                    IncidentKind::RecomputeResume,
-                    req.id,
-                    req.tenant,
-                );
-            } else {
-                // First prefill for this request: everything since
-                // submission was queue wait.
-                metrics.observe(
-                    names::QUEUE_WAIT_SECS,
-                    req.submitted.elapsed().as_secs_f64(),
-                );
-            }
             // Recompute-resume re-prefills the original prompt plus
             // everything generated before the preemption.
             let full_prompt: Vec<i32> = if req.resumed.is_empty() {
@@ -1126,21 +1446,13 @@ pub fn admit(
                 p.extend_from_slice(&req.resumed);
                 p
             };
-            tracer.record(
-                req.id,
-                req.tenant,
-                NO_LANE,
-                EventKind::PrefillStart {
-                    tokens: full_prompt.len() as u32,
-                },
-            );
+            note_prefill_start(&mut req, metrics, full_prompt.len());
             let t0 = Instant::now();
             let pre =
                 match policy.prefill(ex, man, &full_prompt, &cfg.policy_cfg) {
                     Ok(p) => p,
                     Err(e) => return Err(AdmitFail::Reject(req, e)),
                 };
-            req.prefilled = true;
             let secs = t0.elapsed().as_secs_f64();
             metrics.observe(names::PREFILL_SECS, secs);
             tracer.record(
@@ -1240,7 +1552,7 @@ fn can_resume(
         man.model.window,
     );
     let len_limit =
-        prefill_len_limit(man, &cfg.policy, cfg.policy_cfg.use_pallas);
+        prefill_len_limit(man, &cfg.policy, &cfg.policy_cfg);
     can_resume_parts(full_len, len_limit, budget, a.req.tenant, store)
 }
 

@@ -90,7 +90,10 @@ fn print_help() {
          common flags: --artifacts DIR (default ./artifacts), --seed N\n\
          policy flags: [--prefill-budget N]  (cap on FastKV-selected prefill KV rows; 0 = rate-derived)\n\
          \x20             [--decode-budget N]  (per-lane rows of generated KV kept live; 0 = unbudgeted)\n\
-         \x20             [--decode-window N]  (sliding tail of recent tokens always retained)"
+         \x20             [--decode-window N]  (sliding tail of recent tokens always retained)\n\
+         \x20             [--prefill-chunk N]  (chunked prefill: stage-1 chunk size in tokens;\n\
+         \x20              0 = monolithic; clamped to the manifest's chunk bucket capacity)\n\
+         \x20             [--prefill-decode-ratio R]  (decode rounds interleaved between chunks; default 1)"
     );
 }
 
@@ -112,6 +115,9 @@ fn policy_cfg(args: &Args, man: &Manifest) -> PolicyCfg {
     cfg.prefill_budget = args.usize("prefill-budget", cfg.prefill_budget);
     cfg.decode_budget = args.usize("decode-budget", cfg.decode_budget);
     cfg.decode_window = args.usize("decode-window", cfg.decode_window);
+    cfg.prefill_chunk = args.usize("prefill-chunk", cfg.prefill_chunk);
+    cfg.prefill_decode_ratio =
+        args.usize("prefill-decode-ratio", cfg.prefill_decode_ratio);
     cfg
 }
 

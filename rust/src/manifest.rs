@@ -29,6 +29,15 @@ pub struct Buckets {
     pub prefill_ns: Vec<usize>,
     pub stage1_ns: Vec<usize>,
     pub stage2_ns: Vec<usize>,
+    /// Chunk capacity (tokens per chunk) of the
+    /// `prefill_stage1_chunk_{c}x{n}` family (0 on manifests that predate
+    /// chunked prefill).
+    pub chunk_c: usize,
+    /// Carried-KV buffer capacities of the chunked stage-1 family. May
+    /// extend past the biggest `stage1_ns` bucket: prompts too long for
+    /// any monolithic bucket chunk instead of rejecting (empty on
+    /// manifests that predate chunked prefill).
+    pub chunk_ns: Vec<usize>,
     pub pyramid_ns: Vec<usize>,
     pub decode_batches: Vec<usize>,
     pub decode_caps: Vec<usize>,
@@ -52,6 +61,12 @@ pub fn decode_artifact_name(batch: usize, cap: usize) -> String {
 /// Canonical name of the block-table decode artifact for a bucket.
 pub fn decode_paged_artifact_name(batch: usize, cap: usize) -> String {
     format!("decode_paged_{batch}x{cap}")
+}
+
+/// Canonical name of the chunked stage-1 prefill artifact: `chunk` tokens
+/// run against a carried stage-1 KV buffer of capacity `n`.
+pub fn prefill_stage1_chunk_artifact_name(chunk: usize, n: usize) -> String {
+    format!("prefill_stage1_chunk_{chunk}x{n}")
 }
 
 /// Canonical name of the KV-head-sharded block-table decode artifact for
@@ -167,6 +182,12 @@ impl Manifest {
             sweep_nt: b.req("sweep_nt").as_usize().unwrap(),
             pallas_n: b.req("pallas_n").as_usize().unwrap(),
             max_gen: b.req("max_gen").as_usize().unwrap(),
+            // absent on manifests that predate chunked prefill
+            chunk_c: b.get("chunk_c").and_then(|x| x.as_usize()).unwrap_or(0),
+            chunk_ns: b
+                .get("chunk_ns")
+                .map(|x| x.usize_arr())
+                .unwrap_or_default(),
             // absent on manifests that predate block-table decode
             block_tokens: b
                 .get("block_tokens")
@@ -316,12 +337,21 @@ mod tests {
             m.buckets.shard_counts.is_empty(),
             "pre-shard manifests parse with no shard counts"
         );
+        assert_eq!(
+            (m.buckets.chunk_c, m.buckets.chunk_ns.len()),
+            (0, 0),
+            "pre-chunking manifests parse with no chunk buckets"
+        );
         assert!(m.artifact("nope").is_err());
     }
 
     #[test]
     fn decode_artifact_names() {
         assert_eq!(decode_artifact_name(4, 320), "decode_4x320");
+        assert_eq!(
+            prefill_stage1_chunk_artifact_name(256, 4096),
+            "prefill_stage1_chunk_256x4096"
+        );
         assert_eq!(decode_paged_artifact_name(1, 128), "decode_paged_1x128");
         assert_eq!(
             decode_paged_q8_artifact_name(1, 128),

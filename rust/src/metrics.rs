@@ -60,6 +60,10 @@ pub mod names {
     pub const QUEUE_WAIT_SECS: &str = "queue_wait_secs";
     /// Policy prefill wall time, per prefill actually run.
     pub const PREFILL_SECS: &str = "prefill_secs";
+    /// One chunked-prefill chunk, end to end (artifact run + carried
+    /// buffer copies). The sum over a request's chunks ≈ its
+    /// `prefill_secs`.
+    pub const PREFILL_CHUNK_SECS: &str = "prefill_chunk_secs";
     /// One batched decode step, end to end.
     pub const DECODE_STEP_SECS: &str = "decode_step_secs";
     /// Decode-step phase: input prep (lane tensors, tables, pins).
@@ -101,6 +105,14 @@ pub mod names {
     /// carried-prefill paths exist precisely to keep this at zero; tests
     /// pin it there.
     pub const PREFILL_RECOMPUTED: &str = "prefill_recomputed";
+    /// Chunked-prefill chunks executed (across all requests). Stays 0
+    /// when chunking is off (`--prefill-chunk 0`).
+    pub const PREFILL_CHUNKS_TOTAL: &str = "prefill_chunks_total";
+    /// Serve-loop iterations where a *monolithic* (blocking) prefill ran
+    /// while decode lanes were active — every such iteration is a decode
+    /// stall the chunked path exists to eliminate; the interleaving bench
+    /// pins the chunked path at zero.
+    pub const DECODE_STALL_STEPS: &str = "decode_stall_steps";
     /// Preempted lanes serialized to the host swap arena.
     pub const SWAP_OUTS: &str = "swap_outs";
     /// Lanes restored from the swap arena (zero-prefill resume).

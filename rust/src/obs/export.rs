@@ -309,6 +309,16 @@ pub fn chrome_trace(rec: &TraceRecorder) -> String {
                         e,
                     ));
                 }
+                EventKind::PrefillChunk { .. } => {
+                    out.push(chrome_event(
+                        "prefill_chunk",
+                        "i",
+                        us(e.ts),
+                        None,
+                        TID_QUEUE,
+                        e,
+                    ));
+                }
                 EventKind::Compact => {
                     out.push(chrome_event(
                         "compact", "i", us(e.ts), None, lane_tid, e,

@@ -77,6 +77,15 @@ pub enum EventKind {
         /// Largest per-layer KV length retained after selection.
         kept_rows: u32,
     },
+    /// One chunk of a chunked (resumable) prefill completed; the request
+    /// stays in the prefilling state and decode rounds may interleave
+    /// before the next chunk.
+    PrefillChunk {
+        /// Zero-based index of the completed chunk.
+        index: u32,
+        /// Valid tokens the chunk processed.
+        tokens: u32,
+    },
     /// The store accepted the request's cache into a lane.
     Admit {
         /// Pool blocks the lane holds right after admission.
@@ -369,6 +378,11 @@ pub fn validate_lifecycle(events: &[Event]) -> Result<(), String> {
             (S::Queued, K::QuotaDefer | K::AdmitDeferred) => S::Queued,
             (S::Parked, K::QuotaDefer | K::AdmitDeferred) => S::Parked,
             (S::Queued, K::PrefillStart { .. }) => S::Prefilling,
+            (S::Prefilling, K::PrefillChunk { .. }) => S::Prefilling,
+            // A chunking lane can be parked between chunks (it resumes
+            // from the completed-chunk boundary — recompute-mode resume,
+            // but with zero chunks re-run).
+            (S::Prefilling, K::Preempt { .. }) => S::Parked,
             (S::Prefilling, K::PrefillEnd { .. }) => S::Queued,
             (S::Queued, K::Admit { .. }) => S::Active,
             (S::Active, K::DecodeStep { .. } | K::Compact) => S::Active,
@@ -458,6 +472,32 @@ mod tests {
             ev(0.9, 1, K::Finish { tokens_out: 3 }),
         ];
         validate_lifecycle(&evs).unwrap();
+    }
+
+    #[test]
+    fn lifecycle_accepts_chunked_prefill_with_midway_park() {
+        use EventKind as K;
+        let evs = vec![
+            ev(0.0, 1, K::Submit { prompt_tokens: 20 }),
+            ev(0.1, 1, K::PrefillStart { tokens: 20 }),
+            ev(0.2, 1, K::PrefillChunk { index: 0, tokens: 8 }),
+            // parked between chunks to yield to a resuming lane
+            ev(0.3, 1, K::Preempt { mode: ResumeMode::Recompute, generated: 0 }),
+            ev(0.4, 1, K::Resume { mode: ResumeMode::Recompute }),
+            ev(0.5, 1, K::PrefillStart { tokens: 20 }),
+            ev(0.6, 1, K::PrefillChunk { index: 1, tokens: 8 }),
+            ev(0.7, 1, K::PrefillChunk { index: 2, tokens: 4 }),
+            ev(0.8, 1, K::PrefillEnd { kept_rows: 8 }),
+            ev(0.9, 1, K::Admit { blocks_held: 4 }),
+            ev(1.0, 1, K::Finish { tokens_out: 2 }),
+        ];
+        validate_lifecycle(&evs).unwrap();
+        // a chunk may not arrive before PrefillStart
+        let evs = vec![
+            ev(0.0, 1, K::Submit { prompt_tokens: 20 }),
+            ev(0.1, 1, K::PrefillChunk { index: 0, tokens: 8 }),
+        ];
+        assert!(validate_lifecycle(&evs).is_err());
     }
 
     #[test]

@@ -54,6 +54,35 @@ impl Stage1Out {
     }
 }
 
+/// `prefill_stage1_chunk_{c}x{N}`:
+/// (hidden [c,D], k_c [T,c,KV,hd], v_c, win [T,H,N], acc [T,H,N])
+///
+/// `k_c`/`v_c` are only the chunk's *new* KV rows — the chunked driver
+/// (`policies::ChunkedStage1`) copies them back into its host-side
+/// carried buffer after each chunk. `win` spans the whole buffer and is
+/// complete (bit-identical to the monolithic stage-1 `win`) on the final
+/// chunk, whose span always contains the whole observation window.
+#[derive(Debug)]
+pub struct Stage1ChunkOut {
+    pub hidden: HostTensor,
+    pub k_c: HostTensor,
+    pub v_c: HostTensor,
+    pub win: HostTensor,
+    pub acc: HostTensor,
+}
+
+impl Stage1ChunkOut {
+    pub fn from_vec(mut v: Vec<HostTensor>) -> Self {
+        assert_eq!(v.len(), 5, "stage1_chunk outputs");
+        let acc = v.pop().unwrap();
+        let win = v.pop().unwrap();
+        let v_c = v.pop().unwrap();
+        let k_c = v.pop().unwrap();
+        let hidden = v.pop().unwrap();
+        Stage1ChunkOut { hidden, k_c, v_c, win, acc }
+    }
+}
+
 /// `prefill_stage2_{Nt}`:
 /// (logits [V], k [L-T,Nt,KV,hd], v, win, acc, final_h [D])
 #[derive(Debug)]
@@ -159,6 +188,20 @@ mod tests {
         assert_eq!(out.k.shape, vec![8, 64, 2, 24]);
         assert_eq!(out.win.shape, vec![8, 4, 64]);
         assert_eq!(out.final_h.shape, vec![96]);
+    }
+
+    #[test]
+    fn stage1_chunk_unpack_order() {
+        let out = Stage1ChunkOut::from_vec(vec![
+            t(vec![256, 96]),
+            t(vec![4, 256, 2, 24]),
+            t(vec![4, 256, 2, 24]),
+            t(vec![4, 4, 1024]),
+            t(vec![4, 4, 1024]),
+        ]);
+        assert_eq!(out.hidden.shape, vec![256, 96]);
+        assert_eq!(out.k_c.shape, vec![4, 256, 2, 24]);
+        assert_eq!(out.win.shape, vec![4, 4, 1024]);
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! Serve-level differential oracle for chunked prefill.
+//!
+//! Chunked prefill (`Policy::begin_chunked` → `ChunkedPrefill::step`* →
+//! `finish` → `Request::carry_prefill` → `admit`) must be externally
+//! indistinguishable from the blocking monolithic path: identical token
+//! streams and identical final KV rows per request, for every chunk
+//! size, every decode-interleave ratio, and every park/resume schedule.
+//! The sim harness's stand-in model makes that exact: both paths build
+//! their outcome from the same pure function of the token sequence, so
+//! any divergence here is the serve machinery's (carry, park/resume,
+//! deferred admission) — not the model's. The Python side pins the real
+//! numerics: `test_model.py::test_chunked_stage1_bit_identical` asserts
+//! the chunked stage-1 artifact is bit-identical to the monolithic one.
+//!
+//! Also pinned here, per the roadmap's continuous-batching contract:
+//!
+//!  * the chunked path never calls the blocking `Policy::prefill`
+//!    (`policy_calls == 0` — admission reuses the carried outcome);
+//!  * a park/resume mid-chunking re-runs **zero** chunks and counts
+//!    **zero** `prefill_recomputed` (resume is from the completed-chunk
+//!    boundary, not recompute);
+//!  * total chunk steps equal the `chunk_spans` plan exactly — no chunk
+//!    runs twice, none is skipped.
+
+#[path = "common/sim.rs"]
+mod sim;
+
+use fastkv::coordinator::paging::PagingConfig;
+use fastkv::coordinator::policies::chunk_spans;
+use fastkv::metrics::names;
+use sim::{
+    run_stack_chunked, run_stack_server, sim_meta, sim_server_cfg,
+    ChunkPark, StackResult,
+};
+
+/// Deterministic xorshift token/length source — no rand dependency.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo + 1)
+    }
+}
+
+fn random_prompts(seed: u64, count: usize) -> Vec<Vec<i32>> {
+    let mut rng = Lcg(seed | 1);
+    (0..count)
+        .map(|_| {
+            let len = rng.range(3, 24);
+            (0..len).map(|_| rng.range(4, 200) as i32).collect()
+        })
+        .collect()
+}
+
+fn pool() -> PagingConfig {
+    PagingConfig {
+        block_tokens: 2,
+        prefix_cache: false,
+        swap_bytes: 0,
+        ..Default::default()
+    }
+}
+
+fn assert_same_outcome(chunked: &StackResult, mono: &StackResult) {
+    assert_eq!(
+        chunked.streams, mono.streams,
+        "chunked token streams diverged from monolithic"
+    );
+    assert_eq!(
+        chunked.final_rows, mono.final_rows,
+        "chunked final KV rows diverged from monolithic"
+    );
+}
+
+fn planned_chunks(prompts: &[Vec<i32>], chunk: usize) -> usize {
+    let w = sim_meta().window;
+    prompts.iter().map(|p| chunk_spans(p.len(), chunk, w).len()).sum()
+}
+
+/// The core oracle: randomized prompt sets, every chunk size from
+/// degenerate (1 token) past the longest prompt (one chunk), both
+/// interleave ratios. `preempt_at == usize::MAX` keeps the monolithic
+/// baseline preemption-free so the two stacks see identical schedules.
+#[test]
+fn chunked_serve_matches_monolithic_across_chunk_sizes() {
+    for seed in [3, 17, 99] {
+        let prompts = random_prompts(seed, 4);
+        let mono =
+            run_stack_server(pool(), &prompts, usize::MAX, sim_server_cfg(32, 6));
+        assert_eq!(mono.policy_calls, prompts.len());
+        for chunk in [1, 2, 5, 8, 64] {
+            for ratio in [1, 3] {
+                let mut cfg = sim_server_cfg(32, 6);
+                cfg.policy_cfg.prefill_chunk = chunk;
+                cfg.policy_cfg.prefill_decode_ratio = ratio;
+                let chunked =
+                    run_stack_chunked(pool(), &prompts, None, cfg);
+                assert_same_outcome(&chunked, &mono);
+                // Admission reuses the carried outcome: the blocking
+                // prefill never runs on the chunked path.
+                assert_eq!(chunked.policy_calls, 0);
+                assert_eq!(
+                    chunked.chunk_steps,
+                    planned_chunks(&prompts, chunk),
+                    "chunk plan must run exactly once (chunk={chunk})"
+                );
+                assert_eq!(
+                    chunked.metrics.counter(names::PREFILL_RECOMPUTED),
+                    0
+                );
+            }
+        }
+    }
+}
+
+/// Park/resume at *every* chunk boundary of a multi-chunk admission:
+/// the resumed driver continues from the parked boundary (asserted
+/// inside the harness), re-runs zero chunks, counts zero recomputes,
+/// and the outcome still matches the monolithic baseline even though
+/// other lanes kept decoding while the chunking lane was parked.
+#[test]
+fn park_resume_mid_chunking_recomputes_zero_chunks() {
+    let mut prompts = random_prompts(41, 3);
+    prompts[0] = (0..20).map(|i| 4 + i as i32).collect(); // 5+ chunks at 4
+    let mono =
+        run_stack_server(pool(), &prompts, usize::MAX, sim_server_cfg(32, 6));
+    let chunk = 4;
+    let boundaries = chunk_spans(prompts[0].len(), chunk, sim_meta().window)
+        .len();
+    assert!(boundaries >= 3, "prompt 0 must span several chunks");
+    for park_at in 0..boundaries {
+        for decode_rounds in [1, 4] {
+            let mut cfg = sim_server_cfg(32, 6);
+            cfg.policy_cfg.prefill_chunk = chunk;
+            let park = ChunkPark { after_chunks: park_at, decode_rounds };
+            let chunked =
+                run_stack_chunked(pool(), &prompts, Some(park), cfg);
+            assert_same_outcome(&chunked, &mono);
+            // Zero chunks re-run: the total step count is still exactly
+            // the plan, and nothing was accounted as a recompute.
+            assert_eq!(
+                chunked.chunk_steps,
+                planned_chunks(&prompts, chunk),
+                "park at boundary {park_at} re-ran a chunk"
+            );
+            assert_eq!(
+                chunked.metrics.counter(names::PREFILL_RECOMPUTED),
+                0,
+                "chunk-boundary resume must not count as recompute"
+            );
+            assert_eq!(chunked.policy_calls, 0);
+        }
+    }
+}
+
+/// Degenerate shapes stay exact: single-token prompts, prompt shorter
+/// than the observation window, chunk size larger than every prompt
+/// (one-chunk plan), and a ratio of 0 (chunks run back-to-back).
+#[test]
+fn chunked_serve_edge_shapes() {
+    let prompts: Vec<Vec<i32>> =
+        vec![vec![7], vec![9, 8], (0..24).map(|i| 30 + i).collect()];
+    let mono =
+        run_stack_server(pool(), &prompts, usize::MAX, sim_server_cfg(32, 5));
+    for (chunk, ratio) in [(1, 0), (64, 1), (3, 0)] {
+        let mut cfg = sim_server_cfg(32, 5);
+        cfg.policy_cfg.prefill_chunk = chunk;
+        cfg.policy_cfg.prefill_decode_ratio = ratio;
+        let chunked = run_stack_chunked(pool(), &prompts, None, cfg);
+        assert_same_outcome(&chunked, &mono);
+        assert_eq!(chunked.chunk_steps, planned_chunks(&prompts, chunk));
+    }
+}
+
+/// The chunked admission claims pool blocks only at final admission
+/// (the carried-prefill path), so a pool sized for the steady state
+/// admits a chunking request whose monolithic admission would have had
+/// to wait: streams still match, and the chunked run never recomputes.
+#[test]
+fn chunked_admission_defers_pool_claims_to_finish() {
+    let prompts: Vec<Vec<i32>> =
+        vec![(0..20).map(|i| 5 + i).collect(), vec![11, 12, 13]];
+    let mono =
+        run_stack_server(pool(), &prompts, usize::MAX, sim_server_cfg(32, 4));
+    let mut cfg = sim_server_cfg(32, 4);
+    cfg.policy_cfg.prefill_chunk = 2;
+    cfg.policy_cfg.prefill_decode_ratio = 1;
+    let chunked = run_stack_chunked(pool(), &prompts, None, cfg);
+    assert_same_outcome(&chunked, &mono);
+    assert_eq!(chunked.metrics.counter(names::PREFILL_RECOMPUTED), 0);
+}

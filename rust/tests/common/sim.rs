@@ -18,11 +18,14 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use fastkv::coordinator::decode::{advance_lane, CompactSpec, LaneAdvance};
 use fastkv::coordinator::kvcache::RequestCache;
 use fastkv::coordinator::paging::{KvStore, PagedArena, PagingConfig};
-use fastkv::coordinator::policies::{Exec, Policy, PolicyCfg, PrefillOutcome};
+use fastkv::coordinator::policies::{
+    chunk_spans, ChunkedPrefill, Exec, Policy, PolicyCfg, PrefillOutcome,
+};
 use fastkv::coordinator::scheduler::{AdmitOrder, Scheduler};
 use fastkv::coordinator::server::{
     admit, preempt, try_resume, Active, Request, Resume, ServerConfig,
@@ -59,6 +62,8 @@ pub fn sim_manifest(prefill_limit: usize) -> Manifest {
             prefill_ns: vec![prefill_limit],
             stage1_ns: vec![prefill_limit],
             stage2_ns: vec![prefill_limit],
+            chunk_c: 0,
+            chunk_ns: vec![],
             pyramid_ns: vec![prefill_limit],
             decode_batches: vec![1, 2, 4],
             decode_caps: vec![64],
@@ -89,6 +94,8 @@ pub fn sim_server_cfg(max_prompt: usize, max_new: usize) -> ServerConfig {
             prefill_budget: 0,
             decode_budget: 0,
             decode_window: 2,
+            prefill_chunk: 0,
+            prefill_decode_ratio: 1,
         },
         decode_batch: 4,
         max_new,
@@ -137,26 +144,91 @@ pub fn sim_next_token(seq: &[i32]) -> i32 {
     4 + (h % 200) as i32
 }
 
+/// The sim "prefill": exactly the KV rows the sim decode loop would
+/// have appended for `tokens`, plus the deterministic next token.
+/// Shared by the blocking [`SimPolicy::prefill`] and the chunked
+/// [`SimChunked::finish`], so the two paths are identical by
+/// construction — any divergence in a chunked-vs-monolithic oracle is
+/// the serve machinery's.
+pub fn sim_prefill_outcome(
+    man: &Manifest,
+    tokens: &[i32],
+    end_after: usize,
+) -> PrefillOutcome {
+    let m = &man.model;
+    let re = m.n_kv_heads * m.head_dim;
+    let mut cache = RequestCache::new(m);
+    for l in 0..m.n_layers {
+        let mut k = Vec::with_capacity(tokens.len() * re);
+        for (pos, &t) in tokens.iter().enumerate() {
+            k.extend_from_slice(&sim_kv_row(l, pos, t, re));
+        }
+        cache.v[l] = k.iter().map(|x| -x).collect();
+        cache.k[l] = k;
+        cache.lens[l] = tokens.len();
+    }
+    let first_token = if tokens.len() >= end_after {
+        END as i32
+    } else {
+        sim_next_token(tokens)
+    };
+    PrefillOutcome {
+        first_token,
+        cache,
+        next_pos: tokens.len(),
+        final_h: Vec::new(),
+        compute_tokens: tokens.len() * m.n_layers,
+    }
+}
+
 /// Stand-in policy: prefill of a sequence produces exactly the KV rows
 /// the sim decode loop would have appended for it, counts every call,
 /// and can be told to emit END once the sequence reaches `end_after`.
+/// With `cost_ns_per_token > 0` every (chunk) prefill call sleeps that
+/// long per token, so serve-level benches can measure real wall-clock
+/// stalls; with `prefill_chunk > 0` on the policy config it hands out
+/// [`SimChunked`] drivers (and counts their chunk steps separately).
 pub struct SimPolicy {
     pub calls: AtomicUsize,
+    pub chunk_steps: Arc<AtomicUsize>,
     pub end_after: usize,
+    pub cost_ns_per_token: u64,
 }
 
 impl SimPolicy {
     pub fn new() -> Self {
-        SimPolicy { calls: AtomicUsize::new(0), end_after: usize::MAX }
+        SimPolicy {
+            calls: AtomicUsize::new(0),
+            chunk_steps: Arc::new(AtomicUsize::new(0)),
+            end_after: usize::MAX,
+            cost_ns_per_token: 0,
+        }
     }
 
     /// Emit END once the (prompt + generated) sequence reaches `n`.
     pub fn ending_after(n: usize) -> Self {
-        SimPolicy { calls: AtomicUsize::new(0), end_after: n }
+        SimPolicy { end_after: n, ..SimPolicy::new() }
+    }
+
+    /// Charge every prefill (and every chunk) this much sleep per token.
+    pub fn with_cost(ns_per_token: u64) -> Self {
+        SimPolicy { cost_ns_per_token: ns_per_token, ..SimPolicy::new() }
     }
 
     pub fn calls(&self) -> usize {
         self.calls.load(Ordering::Relaxed)
+    }
+
+    pub fn chunk_steps(&self) -> usize {
+        self.chunk_steps.load(Ordering::Relaxed)
+    }
+}
+
+fn sim_burn(ns_per_token: u64, tokens: usize) {
+    if ns_per_token > 0 {
+        std::thread::sleep(std::time::Duration::from_nanos(
+            ns_per_token * tokens as u64,
+        ));
     }
 }
 
@@ -173,30 +245,85 @@ impl Policy for SimPolicy {
         _cfg: &PolicyCfg,
     ) -> anyhow::Result<PrefillOutcome> {
         self.calls.fetch_add(1, Ordering::Relaxed);
-        let m = &man.model;
-        let re = m.n_kv_heads * m.head_dim;
-        let mut cache = RequestCache::new(m);
-        for l in 0..m.n_layers {
-            let mut k = Vec::with_capacity(tokens.len() * re);
-            for (pos, &t) in tokens.iter().enumerate() {
-                k.extend_from_slice(&sim_kv_row(l, pos, t, re));
-            }
-            cache.v[l] = k.iter().map(|x| -x).collect();
-            cache.k[l] = k;
-            cache.lens[l] = tokens.len();
+        sim_burn(self.cost_ns_per_token, tokens.len());
+        Ok(sim_prefill_outcome(man, tokens, self.end_after))
+    }
+
+    fn begin_chunked(
+        &self,
+        man: &Manifest,
+        tokens: &[i32],
+        cfg: &PolicyCfg,
+    ) -> Option<anyhow::Result<Box<dyn ChunkedPrefill>>> {
+        if cfg.prefill_chunk == 0 {
+            return None;
         }
-        let first_token = if tokens.len() >= self.end_after {
-            END as i32
-        } else {
-            sim_next_token(tokens)
-        };
-        Ok(PrefillOutcome {
-            first_token,
-            cache,
-            next_pos: tokens.len(),
-            final_h: Vec::new(),
-            compute_tokens: tokens.len() * m.n_layers,
-        })
+        let spans =
+            chunk_spans(tokens.len(), cfg.prefill_chunk, man.model.window);
+        Some(Ok(Box::new(SimChunked {
+            tokens: tokens.to_vec(),
+            spans,
+            next: 0,
+            end_after: self.end_after,
+            cost_ns_per_token: self.cost_ns_per_token,
+            steps: Arc::clone(&self.chunk_steps),
+        })))
+    }
+}
+
+/// The sim policy's chunked-prefill driver: pure bookkeeping over the
+/// same [`sim_prefill_outcome`] the blocking path uses, so the final
+/// outcome is bit-identical regardless of chunk size or park/resume
+/// schedule. Each step burns the configured per-token cost and bumps
+/// the shared chunk counter.
+#[derive(Debug)]
+pub struct SimChunked {
+    tokens: Vec<i32>,
+    spans: Vec<(usize, usize)>,
+    next: usize,
+    end_after: usize,
+    cost_ns_per_token: u64,
+    steps: Arc<AtomicUsize>,
+}
+
+impl ChunkedPrefill for SimChunked {
+    fn total_chunks(&self) -> usize {
+        self.spans.len()
+    }
+
+    fn chunks_done(&self) -> usize {
+        self.next
+    }
+
+    fn next_chunk_tokens(&self) -> usize {
+        self.spans.get(self.next).map(|&(_, len)| len).unwrap_or(0)
+    }
+
+    fn step(
+        &mut self,
+        _ex: &dyn Exec,
+        _man: &Manifest,
+    ) -> anyhow::Result<usize> {
+        let (_, len) = *self
+            .spans
+            .get(self.next)
+            .ok_or_else(|| anyhow::anyhow!("all chunks already run"))?;
+        sim_burn(self.cost_ns_per_token, len);
+        self.steps.fetch_add(1, Ordering::Relaxed);
+        self.next += 1;
+        Ok(len)
+    }
+
+    fn finish(
+        &mut self,
+        _ex: &dyn Exec,
+        man: &Manifest,
+    ) -> anyhow::Result<PrefillOutcome> {
+        anyhow::ensure!(
+            self.next == self.spans.len(),
+            "finish before all chunks ran"
+        );
+        Ok(sim_prefill_outcome(man, &self.tokens, self.end_after))
     }
 }
 
@@ -292,6 +419,8 @@ pub struct StackResult {
     pub streams: HashMap<u64, Vec<i32>>,
     pub final_rows: HashMap<u64, Vec<Vec<f32>>>,
     pub policy_calls: usize,
+    /// Chunk steps run by [`SimChunked`] drivers (0 on monolithic runs).
+    pub chunk_steps: usize,
     pub metrics: Metrics,
 }
 
@@ -456,6 +585,179 @@ pub fn run_stack_server(
         streams,
         final_rows,
         policy_calls: policy.calls(),
+        chunk_steps: policy.chunk_steps(),
+        metrics,
+    }
+}
+
+/// One parked chunking lane in [`run_stack_chunked`]'s schedule: after
+/// `after_chunks` completed chunks, park the request (completed-chunk
+/// boundary) and run `decode_rounds` decode rounds before resuming.
+#[derive(Clone, Copy)]
+pub struct ChunkPark {
+    pub after_chunks: usize,
+    pub decode_rounds: usize,
+}
+
+/// Serve-shaped lifecycle with *chunked* admission: every prompt is
+/// prefilled through the real `Policy::begin_chunked` → `step`* →
+/// `finish` machinery, with `prefill_decode_ratio` decode rounds
+/// interleaved after every chunk and an optional park/resume (via the
+/// real `Request::park_chunking` / `resume_chunking` carry) at a chunk
+/// boundary. The finished tail rides `Request::carry_prefill` into the
+/// real `admit`, exercising the deferred-admission (pending) path — the
+/// chunked run claims pool blocks only at final admission.
+///
+/// Against the same prompts, [`run_stack_server`] with `preempt_at >=
+/// max_new` (no mid-decode preemption) must produce identical streams
+/// and identical final KV rows — the chunked-vs-monolithic differential
+/// oracle in `rust/tests/chunked_serve.rs`.
+pub fn run_stack_chunked(
+    pcfg: PagingConfig,
+    prompts: &[Vec<i32>],
+    park: Option<ChunkPark>,
+    cfg: ServerConfig,
+) -> StackResult {
+    let m = sim_meta();
+    let man = sim_manifest(64);
+    let policy = SimPolicy::new();
+    let metrics = Metrics::default();
+    let max_new = cfg.max_new;
+    let lanes = prompts.len();
+    let mut pa = PagedArena::new(&m, lanes, 64, pcfg);
+    let mut sched: Scheduler<Request> =
+        Scheduler::new(lanes, AdmitOrder::Fcfs);
+    let mut prompt_map: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut rxs = Vec::new(); // kept alive; this driver retires lanes itself
+    for (i, p) in prompts.iter().enumerate() {
+        let (req, rx) = Request::synthetic(i as u64, p.clone(), max_new);
+        rxs.push(rx);
+        prompt_map.insert(i as u64, p.clone());
+        sched.enqueue(req);
+    }
+    let mut active: Vec<Active> = Vec::new();
+    let mut streams: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut final_rows: HashMap<u64, Vec<Vec<f32>>> = HashMap::new();
+    let retire = |active: &mut Vec<Active>,
+                      pa: &mut PagedArena,
+                      streams: &mut HashMap<u64, Vec<i32>>,
+                      final_rows: &mut HashMap<u64, Vec<Vec<f32>>>| {
+        let mut j = 0;
+        while j < active.len() {
+            if active[j].is_done() || active[j].tokens().len() >= max_new {
+                let a = active.remove(j);
+                final_rows.insert(
+                    a.request_id(),
+                    lane_rows(pa, a.slot(), m.n_layers),
+                );
+                streams.insert(a.request_id(), a.tokens().to_vec());
+                pa.release(a.slot());
+            } else {
+                j += 1;
+            }
+        }
+    };
+    // Admit every prompt through the chunked path, decoding the already-
+    // active lanes between chunks exactly as the serve loop interleaves.
+    while sched.queue_len() > 0 {
+        let mut req = sched.pop_next(|r| r.prompt.len()).unwrap();
+        let (mut ch, mut secs) = match req.resume_chunking() {
+            Some(x) => x,
+            None => match policy.begin_chunked(
+                &man,
+                &req.prompt,
+                &cfg.policy_cfg,
+            ) {
+                Some(Ok(ch)) => (ch, 0.0),
+                Some(Err(e)) => panic!("sim begin_chunked refused: {e:#}"),
+                None => panic!(
+                    "run_stack_chunked needs prefill_chunk > 0 on the config"
+                ),
+            },
+        };
+        let mut parked_once = false;
+        while ch.chunks_done() < ch.total_chunks() {
+            if let Some(p) = park {
+                if !parked_once && ch.chunks_done() == p.after_chunks {
+                    // Park at the completed-chunk boundary and decode
+                    // while parked; resume must re-run zero chunks.
+                    parked_once = true;
+                    let done = ch.chunks_done();
+                    req.park_chunking(ch, secs);
+                    sched.requeue_front(req);
+                    for _ in 0..p.decode_rounds {
+                        sim_decode_round(
+                            &mut pa,
+                            &mut active,
+                            &prompt_map,
+                            &cfg,
+                            &metrics,
+                        );
+                        retire(
+                            &mut active,
+                            &mut pa,
+                            &mut streams,
+                            &mut final_rows,
+                        );
+                    }
+                    req = sched.pop_next(|r| r.prompt.len()).unwrap();
+                    let (c2, s2) = req
+                        .resume_chunking()
+                        .expect("parked chunking lane must carry its driver");
+                    ch = c2;
+                    secs = s2;
+                    assert_eq!(
+                        ch.chunks_done(),
+                        done,
+                        "resume must start at the parked chunk boundary"
+                    );
+                }
+            }
+            let t0 = std::time::Instant::now();
+            ch.step(&NoExec, &man).unwrap();
+            secs += t0.elapsed().as_secs_f64();
+            for _ in 0..cfg.policy_cfg.prefill_decode_ratio {
+                sim_decode_round(
+                    &mut pa,
+                    &mut active,
+                    &prompt_map,
+                    &cfg,
+                    &metrics,
+                );
+                retire(&mut active, &mut pa, &mut streams, &mut final_rows);
+            }
+        }
+        let outcome = ch.finish(&NoExec, &man).unwrap();
+        req.carry_prefill(outcome, secs);
+        match admit(&NoExec, &man, &policy, &cfg, req, &mut pa, &metrics) {
+            Ok(a) => {
+                if a.is_done() {
+                    final_rows.insert(
+                        a.request_id(),
+                        lane_rows(&pa, a.slot(), m.n_layers),
+                    );
+                    streams.insert(a.request_id(), a.tokens().to_vec());
+                    pa.release(a.slot());
+                } else {
+                    active.push(a);
+                }
+            }
+            Err(_) => panic!("worst-case pool refused chunked admission"),
+        }
+    }
+    // Drain the remaining decode work.
+    let mut guard = 0;
+    while streams.len() < prompts.len() {
+        guard += 1;
+        assert!(guard < 1_000, "chunked sim serve loop livelocked");
+        sim_decode_round(&mut pa, &mut active, &prompt_map, &cfg, &metrics);
+        retire(&mut active, &mut pa, &mut streams, &mut final_rows);
+    }
+    StackResult {
+        streams,
+        final_rows,
+        policy_calls: policy.calls(),
+        chunk_steps: policy.chunk_steps(),
         metrics,
     }
 }

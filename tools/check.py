@@ -5,7 +5,8 @@ The repo spans four planes that agree by convention alone: Rust metric
 consts (`metrics::names`) vs docs/metrics.md vs publish sites; the
 Python artifact emitter (aot.py) vs the Rust bucket resolvers
 (manifest.rs / decode.rs); CLI flags vs README/docs; lifecycle event
-variants vs their consumers. This tool pins every one of those couplings
+variants vs their consumers; bench artifact names vs the CI steps that
+cat / assert on / upload them. This tool pins every one of those couplings
 mechanically. Stdlib-only so it runs in toolchain-free containers and as
 a no-Rust CI lane.
 
@@ -465,6 +466,57 @@ def check_links(root, findings):
                 findings.append(f"{rel}: broken relative link -> {target}")
 
 
+# ----------------------------------------------------- 7. bench artifacts
+
+CI_YML = ".github/workflows/ci.yml"
+# Anchored on `.json`: env toggles (FASTKV_BENCH_QUICK) and derived
+# outputs (BENCH_serve_trace.prom) must not match.
+BENCH_NAME_RE = re.compile(r"\bBENCH_[A-Za-z0-9_]+\.json\b")
+# A name only counts as *produced* when it appears inside a string
+# literal (fs::write / str_or default) — doc-comment mentions don't.
+BENCH_LITERAL_RE = re.compile(r'"[^"\n]*?(BENCH_[A-Za-z0-9_]+\.json)[^"\n]*"')
+
+
+def check_bench_artifacts(root, findings):
+    """CI's bench-summary steps (cat / assert / upload) and the Rust
+    emitters drift independently: a renamed `fs::write` target leaves CI
+    cat-ing a file nothing produces, and a new bench artifact nobody
+    wires into CI silently vanishes from every run. Pin both directions.
+    """
+    ci = read(root, CI_YML)
+    if ci is None:
+        findings.append(f"missing {CI_YML}")
+        return
+    sources = rust_sources(root)
+    produced_anywhere = {
+        name
+        for _rel, text in sources
+        for name in BENCH_LITERAL_RE.findall(text)
+    }
+
+    # every artifact CI consumes is produced by some first-party source
+    for name in sorted(set(BENCH_NAME_RE.findall(ci))):
+        if name not in produced_anywhere:
+            findings.append(
+                f"{CI_YML} references `{name}` but no first-party Rust "
+                "source writes it (searched string literals in rust/src, "
+                "rust/tests, rust/benches, examples)"
+            )
+
+    # every artifact a CI-lane target produces is surfaced in CI
+    # (benches + examples run in the rust lane; rust/src emitters such as
+    # the eval subcommand are on-demand and exempt)
+    for rel, text in sources:
+        if not rel.startswith(("rust/benches/", "examples/")):
+            continue
+        for name in sorted(set(BENCH_LITERAL_RE.findall(text))):
+            if name not in ci:
+                findings.append(
+                    f"{rel} writes `{name}` but {CI_YML} never cats, "
+                    "asserts on, or uploads it"
+                )
+
+
 # ----------------------------------------------------------------- main
 
 CHECKS = {
@@ -474,6 +526,7 @@ CHECKS = {
     "lifecycle": check_lifecycle,
     "cargo": check_cargo,
     "links": check_links,
+    "bench_artifacts": check_bench_artifacts,
 }
 
 
